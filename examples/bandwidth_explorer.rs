@@ -1,0 +1,57 @@
+//! Ablation: sweep off-chip bandwidth and the reorganization DMA cost —
+//! the paper's motivation that zero traffic hurts most on "processors
+//! with mismatched bandwidth and computing power".
+//!
+//! ```sh
+//! cargo run --release --example bandwidth_explorer
+//! ```
+
+use bp_im2col::accel::{metrics::speedup, simulate_pass, AccelConfig};
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::workloads;
+
+fn main() {
+    let layers = workloads::table2_layers();
+
+    println!("== BP-im2col speedup vs off-chip bandwidth (grad calc) ==\n");
+    print!("{:>22}", "layer \\ elems/cycle");
+    let bws = [1.0, 2.0, 4.0, 8.0, 16.0];
+    for bw in bws {
+        print!("{bw:>8.0}");
+    }
+    println!();
+    for p in layers {
+        print!("{:>22}", p.id());
+        for bw in bws {
+            let cfg = AccelConfig::bandwidth_limited(bw);
+            let trad = simulate_pass(Pass::Grad, Mode::Traditional, &p, &cfg);
+            let bp = simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &cfg);
+            print!("{:>7.2}x", speedup(&trad, &bp));
+        }
+        println!();
+    }
+
+    println!("\n== BP-im2col speedup vs reorganization DMA cost (loss calc) ==\n");
+    print!("{:>22}", "layer \\ cycles/elem");
+    let costs = [1.0, 2.0, 4.0, 6.0, 8.0];
+    for c in costs {
+        print!("{c:>8.0}");
+    }
+    println!();
+    for p in layers {
+        print!("{:>22}", p.id());
+        for c in costs {
+            let cfg = AccelConfig { reorg_cycles_per_elem: c, ..AccelConfig::default() };
+            let trad = simulate_pass(Pass::Loss, Mode::Traditional, &p, &cfg);
+            let bp = simulate_pass(Pass::Loss, Mode::BpIm2col, &p, &cfg);
+            print!("{:>7.2}x", speedup(&trad, &bp));
+        }
+        println!();
+    }
+
+    println!(
+        "\nReading: the baseline's gap widens as bandwidth shrinks or the \
+         reorganization engine slows; BP-im2col is insensitive to both \
+         (it never materializes zero-spaces)."
+    );
+}

@@ -1,0 +1,52 @@
+//! Quickstart: simulate one stride-2 convolutional layer's backward pass
+//! under both im2col modes and print what BP-im2col buys you.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use bp_im2col::accel::{metrics::speedup, simulate_pass, AccelConfig};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::im2col::sparsity;
+
+fn main() {
+    // Table II's first layer: 224x224, 3->64 channels, 3x3, stride 2.
+    let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+    let cfg = AccelConfig::default();
+
+    println!("layer {} (batch {}), 16x16 input-stationary systolic array\n", p.id(), p.b);
+    println!(
+        "lowered-matrix sparsity: loss B {:.1}%, grad A {:.1}%\n",
+        sparsity::loss_matrix_b(&p).sparsity() * 100.0,
+        sparsity::grad_matrix_a(&p).sparsity() * 100.0
+    );
+
+    for pass in Pass::ALL {
+        let trad = simulate_pass(pass, Mode::Traditional, &p, &cfg);
+        let bp = simulate_pass(pass, Mode::BpIm2col, &p, &cfg);
+        println!("{} calculation:", pass.name());
+        println!(
+            "  traditional im2col : {:>12.0} cycles ({:.0} compute + {:.0} reorganization)",
+            trad.total_cycles(),
+            trad.compute_cycles + trad.prologue_cycles + trad.stall_cycles,
+            trad.reorg_cycles
+        );
+        println!("  BP-im2col          : {:>12.0} cycles (no reorganization)", bp.total_cycles());
+        println!("  speedup            : {:>12.2}x", speedup(&trad, &bp));
+        println!(
+            "  off-chip traffic   : {:>9.1} MB -> {:.1} MB ({:.1}% less)",
+            trad.traffic.total() as f64 / 1e6,
+            bp.traffic.total() as f64 / 1e6,
+            (1.0 - bp.traffic.total() as f64 / trad.traffic.total() as f64) * 100.0
+        );
+        println!(
+            "  buffer reads       : {:>9.1} M  -> {:.1} M  ({:.1}% less)\n",
+            (trad.buffer_a_reads + trad.buffer_b_reads) as f64 / 1e6,
+            (bp.buffer_a_reads + bp.buffer_b_reads) as f64 / 1e6,
+            (1.0 - (bp.buffer_a_reads + bp.buffer_b_reads) as f64
+                / (trad.buffer_a_reads + trad.buffer_b_reads) as f64)
+                * 100.0
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Full Figs. 6-8 sweep over the six CNN workloads, CSV to stdout.
+//!
+//! ```sh
+//! cargo run --release --example sweep_networks > sweep.csv
+//! ```
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    println!("figure,pass,network,traditional,bp_im2col,reduction_pct,sparsity_pct");
+    for pass in Pass::ALL {
+        for (fig, bars) in [
+            ("fig6", report::fig6(&cfg, pass)),
+            ("fig7", report::fig7(&cfg, pass)),
+            ("fig8", report::fig8(&cfg, pass)),
+        ] {
+            for b in bars {
+                println!(
+                    "{},{},{},{:.0},{:.0},{:.3},{:.3}",
+                    fig, pass.name(), b.network, b.traditional, b.bp, b.reduction_pct, b.sparsity_pct
+                );
+            }
+        }
+    }
+    for b in report::storage(&cfg) {
+        println!(
+            "storage,both,{},{:.0},{:.0},{:.3},",
+            b.network, b.traditional, b.bp, b.reduction_pct
+        );
+    }
+}

@@ -1,0 +1,106 @@
+"""AOT compile path: lower the Layer-2 model (with the Layer-1 Pallas
+kernels inside) to HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text — NOT ``serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """Every artifact: name -> (callable, example argument specs)."""
+    p = model.init_params(0)
+    m, pt = model, model.P_TEST
+    x_spec = spec((model.BATCH, 1, 16, 16))
+    y_spec = spec((model.BATCH,), jnp.int32)
+    param_specs = [spec(p.w1.shape), spec(p.w2.shape), spec(p.wd.shape), spec(p.bd.shape)]
+    return {
+        "train_step": (m.train_step, param_specs + [x_spec, y_spec]),
+        "predict": (m.predict, param_specs + [x_spec]),
+        "bp_dx": (
+            m.bp_dx_test,
+            [spec((pt.b, pt.n, pt.ho, pt.wo)), spec((pt.n, pt.c, pt.kh, pt.kw))],
+        ),
+        "bp_dw": (
+            m.bp_dw_test,
+            [spec((pt.b, pt.c, pt.hi, pt.wi)), spec((pt.b, pt.n, pt.ho, pt.wo))],
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file mode (writes train_step)")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, specs) in artifact_specs().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "path": os.path.basename(path),
+            "args": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Shapes the Rust side needs to drive train_step / the kernel tests.
+    pt = model.P_TEST
+    manifest["meta"] = {
+        "batch": model.BATCH,
+        "num_classes": model.NUM_CLASSES,
+        "p_test": {
+            "b": pt.b, "c": pt.c, "hi": pt.hi, "wi": pt.wi, "n": pt.n,
+            "kh": pt.kh, "kw": pt.kw, "s": pt.s, "ph": pt.ph, "pw": pt.pw,
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+    # Compatibility with the legacy Makefile target name.
+    legacy = os.path.join(out_dir, "model.hlo.txt")
+    with open(os.path.join(out_dir, "train_step.hlo.txt")) as src, open(legacy, "w") as dst:
+        dst.write(src.read())
+    print(f"wrote {legacy}")
+
+
+if __name__ == "__main__":
+    main()

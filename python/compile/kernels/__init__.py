@@ -1,0 +1,6 @@
+"""Layer-1 kernels: BP-im2col as Pallas, plus the pure-jnp oracle."""
+
+from .bp_im2col import bp_im2col_dx, bp_im2col_dw, im2col_fwd, vmem_estimate_bytes
+from .ref import ConvParams
+
+__all__ = ["bp_im2col_dx", "bp_im2col_dw", "im2col_fwd", "vmem_estimate_bytes", "ConvParams"]

@@ -1,0 +1,270 @@
+"""Layer-1 Pallas kernels: implicit BP-im2col on the MXU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's address
+generation modules become vectorized integer index arithmetic inside the
+kernel; the on-chip buffers become the operands resident in VMEM; the
+compressed-mask + crossbar becomes a masked gather feeding the MXU `dot`.
+The zero-spaced tensors never exist in HBM — the kernel reads only the
+compact ``dy`` / ``x`` and re-inflates *virtually* at compute time, which
+is exactly the paper's claim transplanted to a TPU-shaped machine.
+
+``interpret=True`` everywhere: the image's CPU PJRT plugin cannot run
+Mosaic custom-calls; interpret mode lowers to plain HLO so the same
+computation executes under the Rust PJRT runtime. Real-TPU tiling notes
+(VMEM footprint / MXU utilization estimates) live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ConvParams
+
+# Lowered-matrix tile widths. 128 matches the MXU lane dimension; the
+# J/K loops become the Pallas grid so one tile of the virtual matrix is
+# live in VMEM at a time.
+TILE_J = 128
+TILE_K = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Transposed mode (Algorithm 1): dX = A(rot180 Wᵀ) @ B(virtual im2col dYei)
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(dy_ref, w_ref, o_ref, *, p: ConvParams, tile_j: int):
+    """One TILE_J-wide column block of the lowered loss GEMM.
+
+    Index arithmetic below is Algorithm 1 verbatim: decompose the virtual
+    matrix-B address into (b, n, h, w) of the zero-spaced map, NZ-detect
+    via Eqs. (2)-(3) (+ the right/bottom bounds), map survivors to the
+    compact ``dy`` and gather.
+    """
+    j0 = pl.program_id(0) * tile_j
+    cols = j0 + jnp.arange(tile_j)  # virtual matrix-B columns
+    jtotal = p.b * p.hi * p.wi
+    col_ok = cols < jtotal
+    colc = jnp.where(col_ok, cols, 0)
+
+    # Column decomposition (Algorithm 1 lines 2-4, column part).
+    b = colc // (p.hi * p.wi)
+    rem = colc % (p.hi * p.wi)
+    h0 = rem // p.wi
+    w0 = rem % p.wi
+
+    # Row decomposition (lines 2-3, row part) for all N*Kh*Kw rows.
+    rows = jnp.arange(p.n * p.kh * p.kw)
+    n = rows // (p.kh * p.kw)
+    hk = (rows % (p.kh * p.kw)) // p.kw
+    wk = rows % p.kw
+
+    # Virtual pixel in the zero-spaced map (line 4).
+    h = h0[None, :] + hk[:, None]
+    w = w0[None, :] + wk[:, None]
+
+    # NZ detection: Eq. (2) area 0, Eq. (3) area 1, + bounds.
+    eh, ew = p.kh - 1 - p.ph, p.kw - 1 - p.pw
+    dh, dw_ = h - eh, w - ew
+    valid = (
+        (dh >= 0)
+        & (dw_ >= 0)
+        & (dh % p.s == 0)
+        & (dw_ % p.s == 0)
+        & (dh // p.s < p.ho)
+        & (dw_ // p.s < p.wo)
+        & col_ok[None, :]
+    )
+    h1 = jnp.clip(dh // p.s, 0, p.ho - 1)
+    w1 = jnp.clip(dw_ // p.s, 0, p.wo - 1)
+
+    # Compact fetch + crossbar re-inflation (masked gather).
+    dy = dy_ref[...]
+    vals = jnp.where(valid, dy[b[None, :], n[:, None], h1, w1], 0.0)
+
+    # Dynamic matrix A: Tr(rot180 W), dense.
+    wv = w_ref[...]
+    a = jnp.flip(wv, axis=(2, 3)).transpose(1, 0, 2, 3).reshape(p.c, p.n * p.kh * p.kw)
+
+    o_ref[...] = jax.lax.dot(a, vals, precision=jax.lax.Precision.HIGHEST)
+
+
+def bp_im2col_dx(dy: jax.Array, w: jax.Array, p: ConvParams) -> jax.Array:
+    """Loss calculation `dX[B,C,Hi,Wi]` via the implicit transposed-mode
+    kernel. Zero-spaced tensors are never materialized."""
+    jtotal = p.b * p.hi * p.wi
+    jpad = _cdiv(jtotal, TILE_J) * TILE_J
+    out = pl.pallas_call(
+        functools.partial(_dx_kernel, p=p, tile_j=TILE_J),
+        grid=(jpad // TILE_J,),
+        in_specs=[
+            pl.BlockSpec(dy.shape, lambda j: (0, 0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((p.c, TILE_J), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((p.c, jpad), jnp.float32),
+        interpret=True,
+    )(dy, w)
+    return out[:, :jtotal].reshape(p.c, p.b, p.hi, p.wi).transpose(1, 0, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Dilated mode (Algorithm 2): dW = A(virtual dilated dY) @ B(im2col Xe)
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(x_ref, dy_ref, o_ref, *, p: ConvParams, tile_k: int):
+    """One TILE_K-deep reduction block of the lowered gradient GEMM,
+    accumulated into the output across the grid (interpret mode runs the
+    grid sequentially, matching the accumulator SRAM of the array)."""
+    k0 = pl.program_id(0) * tile_k
+    kk = k0 + jnp.arange(tile_k)  # virtual matrix-A columns
+    ktotal = p.b * p.ho2 * p.wo2
+    k_ok = kk < ktotal
+    kc = jnp.where(k_ok, kk, 0)
+
+    # Algorithm 2 lines 1-3.
+    w = kc % p.wo2
+    temp = kc // p.wo2
+    b = temp // p.ho2
+    h = temp % p.ho2
+
+    # Eq. (4) NZ detection.
+    valid_a = (h % p.s == 0) & (w % p.s == 0) & k_ok
+    h1 = jnp.clip(h // p.s, 0, p.ho - 1)
+    w1 = jnp.clip(w // p.s, 0, p.wo - 1)
+
+    # Dynamic matrix A tile [N, TILE_K]: compact gather of dY.
+    dy = dy_ref[...]
+    nn = jnp.arange(p.n)
+    a_tile = jnp.where(
+        valid_a[None, :], dy[b[None, :], nn[:, None], h1[None, :], w1[None, :]], 0.0
+    )
+
+    # Stationary matrix B tile [TILE_K, C*Kh*Kw]: im2col of the padded
+    # input (padding zeros detected arithmetically — never stored).
+    cols = jnp.arange(p.c * p.kh * p.kw)
+    c = cols // (p.kh * p.kw)
+    kh = (cols % (p.kh * p.kw)) // p.kw
+    kw_ = cols % p.kw
+    hx = h[:, None] + kh[None, :] - p.ph
+    wx = w[:, None] + kw_[None, :] - p.pw
+    valid_b = (hx >= 0) & (hx < p.hi) & (wx >= 0) & (wx < p.wi) & k_ok[:, None]
+    xv = x_ref[...]
+    b_tile = jnp.where(
+        valid_b,
+        xv[b[:, None], c[None, :], jnp.clip(hx, 0, p.hi - 1), jnp.clip(wx, 0, p.wi - 1)],
+        0.0,
+    )
+
+    partial = jax.lax.dot(a_tile, b_tile, precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def bp_im2col_dw(x: jax.Array, dy: jax.Array, p: ConvParams) -> jax.Array:
+    """Gradient calculation `dW[N,C,Kh,Kw]` via the implicit dilated-mode
+    kernel."""
+    ktotal = p.b * p.ho2 * p.wo2
+    kpad = _cdiv(ktotal, TILE_K) * TILE_K
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, p=p, tile_k=TILE_K),
+        grid=(kpad // TILE_K,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda k: (0, 0, 0, 0)),
+            pl.BlockSpec(dy.shape, lambda k: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((p.n, p.c * p.kh * p.kw), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p.n, p.c * p.kh * p.kw), jnp.float32),
+        interpret=True,
+    )(x, dy)
+    return out.reshape(p.n, p.c, p.kh, p.kw)
+
+
+# ---------------------------------------------------------------------------
+# Inference mode: implicit im2col of the forward pass (the 51-cycle
+# stationary pipeline both designs share; padding zeros only).
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w_ref, o_ref, *, p: ConvParams, tile_j: int):
+    """One TILE_J-wide column block of the inference GEMM
+    ``Y[N x B*Ho*Wo] = W[N x C*Kh*Kw] @ im2col(Xe)``."""
+    j0 = pl.program_id(0) * tile_j
+    cols = j0 + jnp.arange(tile_j)
+    jtotal = p.b * p.ho * p.wo
+    col_ok = cols < jtotal
+    colc = jnp.where(col_ok, cols, 0)
+
+    b = colc // (p.ho * p.wo)
+    rem = colc % (p.ho * p.wo)
+    oh = rem // p.wo
+    ow = rem % p.wo
+
+    rows = jnp.arange(p.c * p.kh * p.kw)
+    c = rows // (p.kh * p.kw)
+    kh = (rows % (p.kh * p.kw)) // p.kw
+    kw_ = rows % p.kw
+
+    # Input pixel + padding NZ detection (bounds comparators only).
+    h = oh[None, :] * p.s + kh[:, None] - p.ph
+    w = ow[None, :] * p.s + kw_[:, None] - p.pw
+    valid = (h >= 0) & (h < p.hi) & (w >= 0) & (w < p.wi) & col_ok[None, :]
+
+    xv = x_ref[...]
+    vals = jnp.where(
+        valid,
+        xv[b[None, :], c[:, None], jnp.clip(h, 0, p.hi - 1), jnp.clip(w, 0, p.wi - 1)],
+        0.0,
+    )
+    a = w_ref[...].reshape(p.n, p.c * p.kh * p.kw)
+    o_ref[...] = jax.lax.dot(a, vals, precision=jax.lax.Precision.HIGHEST)
+
+
+def im2col_fwd(x: jax.Array, w: jax.Array, p: ConvParams) -> jax.Array:
+    """Forward convolution `Y[B,N,Ho,Wo]` via the implicit inference
+    im2col kernel (mirrors ``rust/src/im2col/inference.rs``)."""
+    jtotal = p.b * p.ho * p.wo
+    jpad = _cdiv(jtotal, TILE_J) * TILE_J
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, p=p, tile_j=TILE_J),
+        grid=(jpad // TILE_J,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda j: (0, 0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((p.n, TILE_J), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((p.n, jpad), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out[:, :jtotal].reshape(p.n, p.b, p.ho, p.wo).transpose(1, 0, 2, 3)
+
+
+def vmem_estimate_bytes(p: ConvParams) -> dict:
+    """Static VMEM footprint estimate per kernel instance (DESIGN.md
+    §Perf): operands resident + one lowered tile. Real-TPU tiling would
+    block ``dy``/``x`` too; at artifact sizes everything fits well under
+    16 MiB."""
+    f32 = 4
+    dx = {
+        "dy": p.b * p.n * p.ho * p.wo * f32,
+        "w": p.n * p.c * p.kh * p.kw * f32,
+        "tile": p.n * p.kh * p.kw * TILE_J * f32 + p.c * TILE_J * f32,
+    }
+    dw = {
+        "x": p.b * p.c * p.hi * p.wi * f32,
+        "dy": p.b * p.n * p.ho * p.wo * f32,
+        "tile": (p.n + p.c * p.kh * p.kw) * TILE_K * f32,
+    }
+    return {"dx": dx, "dx_total": sum(dx.values()), "dw": dw, "dw_total": sum(dw.values())}

@@ -1,0 +1,169 @@
+"""Pure-jnp correctness oracle for the BP-im2col kernels.
+
+Implements the *explicit* zero-space path exactly as the paper's baseline
+does it (Figs. 1-4): materialize the zero-inserted + zero-padded loss map,
+lower with traditional im2col, multiply. Also exposes the direct
+``jax.vjp`` adjoints of a ``jax.lax`` forward as an independent second
+oracle.
+
+Everything here mirrors ``rust/src/im2col/{reorg,traditional}.rs`` — the
+Rust unit tests pin those against a naive loop nest, pytest pins the
+Pallas kernels against this file, and the runtime integration test pins
+the executed HLO against the Rust implementation, closing the loop across
+all three layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvParams:
+    """Mirror of the Rust ``ConvParams`` (paper Table I symbols)."""
+
+    b: int
+    c: int
+    hi: int
+    wi: int
+    n: int
+    kh: int
+    kw: int
+    s: int
+    ph: int
+    pw: int
+
+    @property
+    def ho(self) -> int:
+        return (self.hi + 2 * self.ph - self.kh) // self.s + 1
+
+    @property
+    def wo(self) -> int:
+        return (self.wi + 2 * self.pw - self.kw) // self.s + 1
+
+    @property
+    def ho2(self) -> int:
+        return self.ho + (self.ho - 1) * (self.s - 1)
+
+    @property
+    def wo2(self) -> int:
+        return self.wo + (self.wo - 1) * (self.s - 1)
+
+    @property
+    def ho3(self) -> int:
+        return self.ho2 + 2 * (self.kh - 1 - self.ph)
+
+    @property
+    def wo3(self) -> int:
+        return self.wo2 + 2 * (self.kw - 1 - self.pw)
+
+
+def dilate_pad_loss(dy: jax.Array, p: ConvParams) -> jax.Array:
+    """Zero-insert by S and zero-pad by K-1-P: the ``ei`` reorganization."""
+    z = jnp.zeros((p.b, p.n, p.ho3, p.wo3), dy.dtype)
+    eh, ew = p.kh - 1 - p.ph, p.kw - 1 - p.pw
+    return z.at[
+        :, :, eh : eh + (p.ho - 1) * p.s + 1 : p.s, ew : ew + (p.wo - 1) * p.s + 1 : p.s
+    ].set(dy)
+
+
+def dilate_loss(dy: jax.Array, p: ConvParams) -> jax.Array:
+    """Zero-insert only: the ``i`` reorganization used by gradient calc."""
+    z = jnp.zeros((p.b, p.n, p.ho2, p.wo2), dy.dtype)
+    return z.at[:, :, :: p.s, :: p.s].set(dy)
+
+
+def rot180_transpose(w: jax.Array) -> jax.Array:
+    """``Tr(rot180 ∘ W)``: [N,C,Kh,Kw] -> [C,N,Kh,Kw] with flipped taps."""
+    return jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)
+
+
+def im2col_nchw(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Stride-1 im2col of an NCHW map: -> [C*Kh*Kw, B*Hout*Wout]."""
+    b, c, h, w = x.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, :, i : i + ho, j : j + wo])
+    # [Kh*Kw, B, C, Ho, Wo] -> [C, Kh*Kw, B, Ho, Wo] -> [C*Kh*Kw, B*Ho*Wo]
+    stack = jnp.stack(cols, axis=0).transpose(2, 0, 1, 3, 4)
+    return stack.reshape(c * kh * kw, b * ho * wo)
+
+
+def conv_bwd_input_explicit(dy: jax.Array, w: jax.Array, p: ConvParams) -> jax.Array:
+    """Loss calculation via the baseline's explicit path (paper Figs. 1-2).
+
+    When the forward floor-division is inexact the virtual map is shorter
+    than the input; we extend it with zeros (the uncovered rows/columns
+    receive zero loss) so the window count equals ``Hi x Wi``.
+    """
+    dyz = dilate_pad_loss(dy, p)
+    pad_h = max(p.hi + p.kh - 1 - p.ho3, 0)
+    pad_w = max(p.wi + p.kw - 1 - p.wo3, 0)
+    dyz = jnp.pad(dyz, ((0, 0), (0, 0), (0, pad_h), (0, pad_w)))
+    dyz = dyz[:, :, : p.hi + p.kh - 1, : p.wi + p.kw - 1]
+    a = rot180_transpose(w).reshape(p.c, p.n * p.kh * p.kw)
+    bmat = im2col_nchw(dyz, p.kh, p.kw)  # [N*Kh*Kw, B*Hi*Wi]
+    out = a @ bmat  # [C, B*Hi*Wi]
+    return out.reshape(p.c, p.b, p.hi, p.wi).transpose(1, 0, 2, 3)
+
+
+def conv_bwd_weight_explicit(x: jax.Array, dy: jax.Array, p: ConvParams) -> jax.Array:
+    """Gradient calculation via the baseline's explicit path (Figs. 3-4)."""
+    dyd = dilate_loss(dy, p)  # [B, N, Ho'', Wo'']
+    xpad = jnp.pad(x, ((0, 0), (0, 0), (p.ph, p.ph), (p.pw, p.pw)))
+    # Extend/crop so stride-1 windows of size Ho''xWo'' number Kh x Kw.
+    need_h, need_w = p.ho2 + p.kh - 1, p.wo2 + p.kw - 1
+    eh = max(need_h - xpad.shape[2], 0)
+    ew = max(need_w - xpad.shape[3], 0)
+    xpad = jnp.pad(xpad, ((0, 0), (0, 0), (0, eh), (0, ew)))[:, :, :need_h, :need_w]
+    a = dyd.transpose(1, 0, 2, 3).reshape(p.n, p.b * p.ho2 * p.wo2)
+    cols = []
+    for i in range(p.kh):
+        for j in range(p.kw):
+            cols.append(xpad[:, :, i : i + p.ho2, j : j + p.wo2])
+    stack = jnp.stack(cols, axis=0)  # [KhKw, B, C, Ho'', Wo'']
+    bmat = stack.transpose(1, 3, 4, 2, 0).reshape(p.b * p.ho2 * p.wo2, p.c * p.kh * p.kw)
+    return (a @ bmat).reshape(p.n, p.c, p.kh, p.kw)
+
+
+def conv_fwd_lax(x: jax.Array, w: jax.Array, p: ConvParams) -> jax.Array:
+    """Forward convolution via jax.lax (independent oracle)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(p.s, p.s),
+        padding=[(p.ph, p.ph), (p.pw, p.pw)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def make_lax_adjoints(p: ConvParams):
+    """Return (bwd_input, bwd_weight) derived by jax.vjp — the second,
+    fully independent oracle."""
+
+    def bwd_input(dy, w):
+        x0 = jnp.zeros((p.b, p.c, p.hi, p.wi), dy.dtype)
+        _, vjp = jax.vjp(lambda x: conv_fwd_lax(x, w, p), x0)
+        return vjp(dy)[0]
+
+    def bwd_weight(x, dy):
+        w0 = jnp.zeros((p.n, p.c, p.kh, p.kw), dy.dtype)
+        _, vjp = jax.vjp(lambda w: conv_fwd_lax(x, w, p), w0)
+        return vjp(dy)[0]
+
+    return bwd_input, bwd_weight
+
+
+def random_tensors(p: ConvParams, seed: int = 0):
+    """Deterministic (x, w, dy) test tensors."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, (p.b, p.c, p.hi, p.wi)), jnp.float32)
+    w = jnp.asarray(rng.uniform(-1, 1, (p.n, p.c, p.kh, p.kw)), jnp.float32)
+    dy = jnp.asarray(rng.uniform(-1, 1, (p.b, p.n, p.ho, p.wo)), jnp.float32)
+    return x, w, dy

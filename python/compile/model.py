@@ -1,0 +1,144 @@
+"""Layer-2 JAX model: a small strided CNN whose backward pass runs
+through the BP-im2col Pallas kernels.
+
+The convolution's VJP is overridden (``jax.custom_vjp``) so that
+``jax.grad`` of the training loss lowers the *paper's* implicit-im2col
+backward — Algorithm 1 for dX, Algorithm 2 for dW — into the same HLO
+module as the forward. ``aot.py`` exports the whole ``train_step`` as HLO
+text; the Rust coordinator then trains the network end-to-end with Python
+long gone (``examples/train_e2e.rs``).
+
+Architecture (synthetic 16x16 single-channel classification):
+    conv1 1->8, 3x3, stride 2, pad 1   (16x16 -> 8x8)   relu
+    conv2 8->16, 3x3, stride 2, pad 1  (8x8 -> 4x4)     relu
+    dense 256 -> 10, softmax cross-entropy
+Both convolutions are stride-2 — precisely the regime (stride >= 2) where
+the paper's zero-space problem appears.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bp_im2col_dx, bp_im2col_dw, ConvParams
+from .kernels.ref import conv_fwd_lax
+
+BATCH = 8
+NUM_CLASSES = 10
+
+# The two conv layers (batch folded in).
+P1 = ConvParams(b=BATCH, c=1, hi=16, wi=16, n=8, kh=3, kw=3, s=2, ph=1, pw=1)
+P2 = ConvParams(b=BATCH, c=8, hi=8, wi=8, n=16, kh=3, kw=3, s=2, ph=1, pw=1)
+DENSE_IN = P2.n * P2.ho * P2.wo  # 16 * 4 * 4 = 256
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def conv2d(x, w, p: ConvParams):
+    """Strided convolution whose backward is BP-im2col."""
+    return conv_fwd_lax(x, w, p)
+
+
+def _conv2d_fwd(x, w, p: ConvParams):
+    return conv_fwd_lax(x, w, p), (x, w)
+
+
+def _conv2d_bwd(p: ConvParams, res, dy):
+    x, w = res
+    dx = bp_im2col_dx(dy, w, p)  # Algorithm 1 (transposed mode)
+    dw = bp_im2col_dw(x, dy, p)  # Algorithm 2 (dilated mode)
+    return dx, dw
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+class Params(NamedTuple):
+    """Model parameters (a flat NamedTuple keeps the HLO signature flat)."""
+
+    w1: jax.Array  # [8, 1, 3, 3]
+    w2: jax.Array  # [16, 8, 3, 3]
+    wd: jax.Array  # [256, 10]
+    bd: jax.Array  # [10]
+
+
+def init_params(seed: int = 0) -> Params:
+    """He-style initialization, deterministic per seed."""
+    rng = np.random.default_rng(seed)
+
+    def he(shape, fan_in):
+        return jnp.asarray(rng.normal(0.0, np.sqrt(2.0 / fan_in), shape), jnp.float32)
+
+    return Params(
+        w1=he((P1.n, P1.c, P1.kh, P1.kw), P1.c * P1.kh * P1.kw),
+        w2=he((P2.n, P2.c, P2.kh, P2.kw), P2.c * P2.kh * P2.kw),
+        wd=he((DENSE_IN, NUM_CLASSES), DENSE_IN),
+        bd=jnp.zeros((NUM_CLASSES,), jnp.float32),
+    )
+
+
+def logits_fn(params: Params, x: jax.Array) -> jax.Array:
+    """Forward pass: x [B,1,16,16] -> logits [B,10]."""
+    h = jax.nn.relu(conv2d(x, params.w1, P1))
+    h = jax.nn.relu(conv2d(h, params.w2, P2))
+    h = h.reshape(x.shape[0], -1)
+    return h @ params.wd + params.bd
+
+
+def loss_fn(params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; y is int32 class labels [B]."""
+    logits = logits_fn(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train_step(w1, w2, wd, bd, x, y, lr=jnp.float32(0.05)):
+    """One SGD step with BP-im2col backward. Flat signature for AOT.
+
+    Returns (loss, w1', w2', wd', bd').
+    """
+    params = Params(w1, w2, wd, bd)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return (loss, new.w1, new.w2, new.wd, new.bd)
+
+
+def predict(w1, w2, wd, bd, x):
+    """Inference entry point (flat signature for AOT)."""
+    return (logits_fn(Params(w1, w2, wd, bd), x),)
+
+
+def synthetic_batch(step: int):
+    """Deterministic synthetic classification data: each class k is a
+    distinct oriented-bar pattern + noise. Learnable in a few hundred
+    steps; the Rust driver regenerates the identical stream."""
+    rng = np.random.default_rng(1234 + step)
+    y = rng.integers(0, NUM_CLASSES, size=BATCH)
+    xs = np.zeros((BATCH, 1, 16, 16), np.float32)
+    for i, k in enumerate(y):
+        # Class-specific pattern: bar at row/col determined by k.
+        if k % 2 == 0:
+            xs[i, 0, (k // 2) + 2, :] = 1.0
+        else:
+            xs[i, 0, :, (k // 2) + 2] = 1.0
+    xs += rng.normal(0.0, 0.1, xs.shape).astype(np.float32)
+    return jnp.asarray(xs), jnp.asarray(y, jnp.int32)
+
+
+# Small fixed layer used by the kernel-level HLO artifacts the Rust
+# runtime integration tests execute against the Rust implementation.
+P_TEST = ConvParams(b=2, c=2, hi=9, wi=9, n=3, kh=3, kw=3, s=2, ph=1, pw=1)
+
+
+def bp_dx_test(dy, w):
+    """Kernel-level artifact: Algorithm 1 at P_TEST shapes."""
+    return (bp_im2col_dx(dy, w, P_TEST),)
+
+
+def bp_dw_test(x, dy):
+    """Kernel-level artifact: Algorithm 2 at P_TEST shapes."""
+    return (bp_im2col_dw(x, dy, P_TEST),)

@@ -1,0 +1,153 @@
+"""Kernel-vs-oracle: the core L1 correctness signal.
+
+Pins the Pallas BP-im2col kernels (Algorithms 1 and 2 as in-kernel index
+arithmetic) against two independent oracles:
+
+* the explicit zero-space path (``ref.conv_bwd_*_explicit`` — the
+  baseline's reorganize-then-im2col pipeline), and
+* the ``jax.vjp`` adjoints of a ``jax.lax`` forward.
+
+Hypothesis sweeps shapes/strides/paddings; fixed cases cover the paper's
+corner cases (1x1 kernels, inexact floor division, stride > 2).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bp_im2col_dx, bp_im2col_dw, im2col_fwd
+from compile.kernels import ref
+from compile.kernels.ref import ConvParams
+
+ATOL = 2e-4
+
+
+def make_params(b, c, n, hi, wi, k, s, pad):
+    kh = kw = k
+    ph = pw = min(pad, k - 1)  # paper constraint: P <= K-1
+    return ConvParams(b, c, hi, wi, n, kh, kw, s, ph, pw)
+
+
+FIXED_CASES = [
+    make_params(2, 2, 3, 9, 9, 3, 2, 1),     # canonical stride-2
+    make_params(1, 3, 4, 8, 8, 1, 2, 0),     # 1x1 projection (Table II rows 3/5)
+    make_params(1, 2, 2, 10, 10, 3, 2, 0),   # inexact floor division
+    make_params(1, 1, 2, 12, 12, 4, 4, 0),   # stride 4 (AlexNet-like)
+    make_params(2, 2, 2, 11, 7, 3, 3, 2),    # stride 3, asymmetric image
+    make_params(1, 2, 2, 6, 6, 3, 1, 1),     # degenerate stride 1
+]
+
+
+@pytest.mark.parametrize("p", FIXED_CASES, ids=lambda p: f"{p.hi}x{p.wi}k{p.kh}s{p.s}p{p.ph}")
+def test_dx_matches_explicit_oracle(p):
+    _, w, dy = ref.random_tensors(p, seed=7)
+    got = bp_im2col_dx(dy, w, p)
+    want = ref.conv_bwd_input_explicit(dy, w, p)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+@pytest.mark.parametrize("p", FIXED_CASES, ids=lambda p: f"{p.hi}x{p.wi}k{p.kh}s{p.s}p{p.ph}")
+def test_dx_matches_lax_adjoint(p):
+    _, w, dy = ref.random_tensors(p, seed=8)
+    bwd_in, _ = ref.make_lax_adjoints(p)
+    np.testing.assert_allclose(bp_im2col_dx(dy, w, p), bwd_in(dy, w), atol=ATOL)
+
+
+@pytest.mark.parametrize("p", FIXED_CASES, ids=lambda p: f"{p.hi}x{p.wi}k{p.kh}s{p.s}p{p.ph}")
+def test_dw_matches_explicit_oracle(p):
+    x, _, dy = ref.random_tensors(p, seed=9)
+    got = bp_im2col_dw(x, dy, p)
+    want = ref.conv_bwd_weight_explicit(x, dy, p)
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+@pytest.mark.parametrize("p", FIXED_CASES, ids=lambda p: f"{p.hi}x{p.wi}k{p.kh}s{p.s}p{p.ph}")
+def test_dw_matches_lax_adjoint(p):
+    x, _, dy = ref.random_tensors(p, seed=10)
+    _, bwd_w = ref.make_lax_adjoints(p)
+    np.testing.assert_allclose(bp_im2col_dw(x, dy, p), bwd_w(x, dy), atol=ATOL)
+
+
+@pytest.mark.parametrize("p", FIXED_CASES, ids=lambda p: f"{p.hi}x{p.wi}k{p.kh}s{p.s}p{p.ph}")
+def test_fwd_kernel_matches_lax(p):
+    x, w, _ = ref.random_tensors(p, seed=14)
+    np.testing.assert_allclose(im2col_fwd(x, w, p), ref.conv_fwd_lax(x, w, p), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: random layer geometry, stride >= 1, both passes.
+# ---------------------------------------------------------------------------
+
+conv_geometry = st.tuples(
+    st.integers(1, 2),    # b
+    st.integers(1, 3),    # c
+    st.integers(1, 3),    # n
+    st.integers(4, 14),   # hi
+    st.integers(4, 14),   # wi
+    st.integers(1, 4),    # k
+    st.integers(1, 4),    # s
+    st.integers(0, 2),    # pad (clamped to k-1)
+).filter(lambda t: t[3] + 2 * min(t[7], t[5] - 1) >= t[5] and t[4] + 2 * min(t[7], t[5] - 1) >= t[5])
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_geometry, st.integers(0, 2**31 - 1))
+def test_dx_hypothesis_sweep(geom, seed):
+    b, c, n, hi, wi, k, s, pad = geom
+    p = make_params(b, c, n, hi, wi, k, s, pad)
+    _, w, dy = ref.random_tensors(p, seed=seed)
+    bwd_in, _ = ref.make_lax_adjoints(p)
+    np.testing.assert_allclose(bp_im2col_dx(dy, w, p), bwd_in(dy, w), atol=ATOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_geometry, st.integers(0, 2**31 - 1))
+def test_dw_hypothesis_sweep(geom, seed):
+    b, c, n, hi, wi, k, s, pad = geom
+    p = make_params(b, c, n, hi, wi, k, s, pad)
+    x, _, dy = ref.random_tensors(p, seed=seed)
+    _, bwd_w = ref.make_lax_adjoints(p)
+    np.testing.assert_allclose(bp_im2col_dw(x, dy, p), bwd_w(x, dy), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Structural properties of the implicit path.
+# ---------------------------------------------------------------------------
+
+
+def test_dx_linear_in_dy():
+    p = FIXED_CASES[0]
+    _, w, dy = ref.random_tensors(p, seed=11)
+    two = bp_im2col_dx(2.0 * dy, w, p)
+    one = bp_im2col_dx(dy, w, p)
+    np.testing.assert_allclose(two, 2.0 * one, atol=ATOL)
+
+
+def test_dw_additive_in_batch():
+    # dW over the batch equals the sum of per-sample dW.
+    p = make_params(2, 2, 2, 8, 8, 3, 2, 1)
+    x, _, dy = ref.random_tensors(p, seed=12)
+    full = bp_im2col_dw(x, dy, p)
+    p1 = ConvParams(1, p.c, p.hi, p.wi, p.n, p.kh, p.kw, p.s, p.ph, p.pw)
+    parts = sum(bp_im2col_dw(x[i : i + 1], dy[i : i + 1], p1) for i in range(2))
+    np.testing.assert_allclose(full, parts, atol=ATOL)
+
+
+def test_zero_dy_gives_zero_grads():
+    p = FIXED_CASES[0]
+    x, w, dy = ref.random_tensors(p, seed=13)
+    zeros = jnp.zeros_like(dy)
+    assert float(jnp.abs(bp_im2col_dx(zeros, w, p)).max()) == 0.0
+    assert float(jnp.abs(bp_im2col_dw(x, zeros, p)).max()) == 0.0
+
+
+def test_vmem_estimate_under_budget():
+    # DESIGN.md §Perf: artifact-size kernels fit comfortably in 16 MiB VMEM.
+    from compile.kernels import vmem_estimate_bytes
+    from compile.model import P1, P2, P_TEST
+
+    for p in (P1, P2, P_TEST):
+        est = vmem_estimate_bytes(p)
+        assert est["dx_total"] < 16 * 2**20
+        assert est["dw_total"] < 16 * 2**20

@@ -1,0 +1,80 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Sparse skipping** (the paper's future work): elide dilated-mode
+//!    blocks whose dynamic window is entirely zero-insertions.
+//! 2. **Reorganization DMA cost**: how the baseline's speedup picture
+//!    shifts with the cycles/element constant (the one free parameter of
+//!    the substitution).
+//! 3. **Array dimension**: 8/16/32 lanes (the paper fixes 16).
+
+#[path = "harness.rs"]
+mod harness;
+
+use bp_im2col::accel::{metrics::speedup, simulate_pass, AccelConfig};
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::report::fmt_table;
+use bp_im2col::workloads;
+
+fn main() {
+    let base = AccelConfig::default();
+
+    // --- 1. sparse skipping -------------------------------------------------
+    let skip = AccelConfig { sparse_skip: true, ..base };
+    let rows: Vec<Vec<String>> = workloads::table2_layers()
+        .iter()
+        .map(|p| {
+            let off = simulate_pass(Pass::Grad, Mode::BpIm2col, p, &base);
+            let on = simulate_pass(Pass::Grad, Mode::BpIm2col, p, &skip);
+            vec![
+                p.id(),
+                format!("{:.0}", off.total_cycles()),
+                format!("{:.0}", on.total_cycles()),
+                format!("{:.2}x", off.total_cycles() / on.total_cycles()),
+            ]
+        })
+        .collect();
+    harness::bench("ablation/sparse_skip_5_layers", 1, 20, || {
+        workloads::table2_layers()
+            .iter()
+            .map(|p| simulate_pass(Pass::Grad, Mode::BpIm2col, p, &skip).total_cycles())
+            .sum::<f64>()
+    });
+    harness::report(
+        "Ablation 1: future-work sparse skipping (grad calc, BP-im2col)",
+        &fmt_table(&["layer", "skip off", "skip on", "gain"], &rows),
+    );
+
+    // --- 2. reorganization DMA cost ------------------------------------------
+    let mut rows = Vec::new();
+    for p in workloads::table2_layers() {
+        let mut row = vec![p.id()];
+        for c in [1.0, 2.0, 4.0, 8.0] {
+            let cfg = AccelConfig { reorg_cycles_per_elem: c, ..base };
+            let trad = simulate_pass(Pass::Loss, Mode::Traditional, &p, &cfg);
+            let bp = simulate_pass(Pass::Loss, Mode::BpIm2col, &p, &cfg);
+            row.push(format!("{:.2}x", speedup(&trad, &bp)));
+        }
+        rows.push(row);
+    }
+    harness::report(
+        "Ablation 2: loss-calc speedup vs reorg DMA cycles/elem (1/2/4/8)",
+        &fmt_table(&["layer", "c=1", "c=2", "c=4", "c=8"], &rows),
+    );
+
+    // --- 3. array dimension ---------------------------------------------------
+    let mut rows = Vec::new();
+    for p in workloads::table2_layers() {
+        let mut row = vec![p.id()];
+        for t in [8usize, 16, 32] {
+            let cfg = AccelConfig { array_dim: t, ..base };
+            let trad = simulate_pass(Pass::Grad, Mode::Traditional, &p, &cfg);
+            let bp = simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &cfg);
+            row.push(format!("{:.2}x", speedup(&trad, &bp)));
+        }
+        rows.push(row);
+    }
+    harness::report(
+        "Ablation 3: grad-calc speedup vs array dimension (8/16/32)",
+        &fmt_table(&["layer", "T=8", "T=16", "T=32"], &rows),
+    );
+}

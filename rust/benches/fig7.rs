@@ -1,0 +1,25 @@
+//! Bench + regeneration of **Fig. 7**: off-chip memory bandwidth
+//! occupation per network (buffer-B path during loss calc = 7a,
+//! buffer-A path during grad calc = 7b).
+
+#[path = "harness.rs"]
+mod harness;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    for (panel, pass) in [("7a", Pass::Loss), ("7b", Pass::Grad)] {
+        let bars = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
+            report::fig7(&cfg, pass)
+        });
+        harness::report(
+            &format!("Fig {panel}: off-chip traffic reduction ({} calc)", pass.name()),
+            &report::render_bars("", &bars, false),
+        );
+        let min = bars.iter().map(|b| b.reduction_pct).fold(f64::INFINITY, f64::min);
+        println!("minimum reduction: {min:.1}% (paper floor: 22.7%)");
+    }
+}

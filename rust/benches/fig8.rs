@@ -1,0 +1,26 @@
+//! Bench + regeneration of **Fig. 8**: on-chip buffer bandwidth
+//! occupation + lowered-matrix sparsity per network (buffer B during
+//! loss calc = 8a, buffer A during grad calc = 8b).
+
+#[path = "harness.rs"]
+mod harness;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    for (panel, pass) in [("8a", Pass::Loss), ("8b", Pass::Grad)] {
+        let bars = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
+            report::fig8(&cfg, pass)
+        });
+        harness::report(
+            &format!(
+                "Fig {panel}: buffer bandwidth reduction vs sparsity ({} calc)",
+                pass.name()
+            ),
+            &report::render_bars("", &bars, true),
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Minimal bench harness (the offline image has no criterion).
+//!
+//! Provides criterion-style timing — warmup, N timed iterations, mean ±
+//! stddev — plus a `report` hook so each bench also *prints the
+//! regenerated table/figure*, making `cargo bench | tee bench_output.txt`
+//! a one-shot reproduction artifact.
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> T {
+    let mut last = None;
+    for _ in 0..warmup {
+        last = Some(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        last = Some(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
+    let (unit, scale) = if mean < 1e-3 {
+        ("us", 1e6)
+    } else if mean < 1.0 {
+        ("ms", 1e3)
+    } else {
+        ("s", 1.0)
+    };
+    println!(
+        "bench {name:<40} {:>10.3} {unit} ± {:.3} {unit}  ({iters} iters)",
+        mean * scale,
+        var.sqrt() * scale
+    );
+    last.expect("at least one iteration")
+}
+
+/// Print a titled block (the regenerated artifact).
+#[allow(dead_code)] // not every bench regenerates a table
+pub fn report(title: &str, body: &str) {
+    println!("\n=== {title} ===\n{body}");
+}

@@ -1,0 +1,81 @@
+//! Performance benches of the simulator / coordinator hot paths
+//! (EXPERIMENTS.md §Perf): address mapping throughput, window
+//! compression, cycle-stepped array, analytic pass simulation, and the
+//! multi-threaded network scheduler.
+
+#[path = "harness.rs"]
+mod harness;
+
+use bp_im2col::accel::functional::tiled_gemm;
+use bp_im2col::accel::{simulate_pass, AccelConfig};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::coordinator::Scheduler;
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::im2col::{dilated, transposed};
+use bp_im2col::sim::compress::compress_window;
+use bp_im2col::tensor::{Matrix, Rng};
+use bp_im2col::workloads;
+
+fn main() {
+    let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+
+    // Address-mapping throughput (the software analogue of the 16-lane
+    // address generators; target: >= 100M addrs/s per core).
+    // `map_addr` divides per address (the paper's Algorithm 1/2 as
+    // written); `AddrGen` carries counters like the hardware's
+    // incrementers — the §Perf before/after pair.
+    let n_addr = 1_000_000usize;
+    harness::bench("addrgen/alg1_1M_addrs_div", 1, 10, || {
+        let mut acc = 0usize;
+        for a in 0..n_addr {
+            if transposed::map_addr(a, &p).is_some() {
+                acc += 1;
+            }
+        }
+        acc
+    });
+    harness::bench("addrgen/alg1_1M_addrs_stream", 1, 10, || {
+        transposed::AddrGen::new(&p).take(n_addr).flatten().count()
+    });
+    harness::bench("addrgen/alg2_1M_addrs_div", 1, 10, || {
+        let mut acc = 0usize;
+        for a in 0..n_addr {
+            if dilated::map_addr(a, &p).is_some() {
+                acc += 1;
+            }
+        }
+        acc
+    });
+    harness::bench("addrgen/alg2_1M_addrs_stream", 1, 10, || {
+        dilated::AddrGen::new(&p).take(n_addr).flatten().count()
+    });
+
+    // Window compression.
+    let addrs: Vec<Option<usize>> = (0..16).map(|i| if i % 2 == 0 { Some(i * 3) } else { None }).collect();
+    harness::bench("compress/100k_windows", 1, 20, || {
+        let mut runs = 0;
+        for _ in 0..100_000 {
+            runs += compress_window(&addrs).runs;
+        }
+        runs
+    });
+
+    // Cycle-stepped array (functional fidelity path).
+    let mut rng = Rng::new(9);
+    let a = Matrix::from_fn(64, 64, |_, _| rng.range_f32(-1.0, 1.0));
+    let b = Matrix::from_fn(64, 64, |_, _| rng.range_f32(-1.0, 1.0));
+    harness::bench("systolic/tiled_gemm_64x64x64_t16", 1, 10, || tiled_gemm(&a, &b, 16));
+
+    // Analytic pass simulation (design-space-sweep speed).
+    let cfg = AccelConfig::default();
+    harness::bench("timing/simulate_pass_grad_bp", 5, 200, || {
+        simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &cfg)
+    });
+
+    // Whole-network scheduling across worker threads.
+    let sched = Scheduler::new(cfg);
+    let net = workloads::resnet();
+    harness::bench("coordinator/resnet_both_modes", 1, 10, || {
+        (sched.run_network(&net, Mode::Traditional), sched.run_network(&net, Mode::BpIm2col))
+    });
+}

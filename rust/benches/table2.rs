@@ -1,0 +1,28 @@
+//! Bench + regeneration of **Table II**: loss/gradient runtime of the
+//! five convolutional layers under both im2col modes.
+
+#[path = "harness.rs"]
+mod harness;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::report;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let rows = harness::bench("table2/simulate_10_passes", 2, 20, || report::table2(&cfg));
+    harness::report("Table II (cycles; paper speedups alongside)", &report::render_table2(&rows));
+
+    // Per-layer single-pass timing (the simulator itself is a benchmark
+    // subject: it must stay fast enough for design-space sweeps).
+    for p in bp_im2col::workloads::table2_layers() {
+        let id = p.id();
+        harness::bench(&format!("table2/layer_{id}/grad_bp"), 2, 50, || {
+            bp_im2col::accel::simulate_pass(
+                bp_im2col::im2col::pipeline::Pass::Grad,
+                bp_im2col::im2col::pipeline::Mode::BpIm2col,
+                &p,
+                &cfg,
+            )
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench + regeneration of **Table III** (prologue latencies) and
+//! **Table IV** (address-generator area).
+
+#[path = "harness.rs"]
+mod harness;
+
+use bp_im2col::report;
+
+fn main() {
+    harness::bench("table3/prologue_all_cells", 10, 1000, report::table3);
+    harness::report("Table III: prologue latency (cycles)", &report::render_table3());
+    harness::bench("table4/area_model", 10, 1000, bp_im2col::area::table4);
+    harness::report("Table IV: address-generation module area (ASAP7 model)", &report::render_table4());
+}

@@ -1,0 +1,79 @@
+//! Accelerator configuration (the paper's TPU-like platform).
+
+use crate::sim::dram::DramModel;
+
+/// Hardware parameters of the simulated accelerator. Defaults match the
+/// paper's evaluation platform where stated (16x16 array, FP32,
+/// double-buffered A/B buffers, "sufficient network bandwidth" for the
+/// prologue experiment) and are documented substitutions elsewhere
+/// (DESIGN.md §Substitutions).
+#[derive(Clone, Copy, Debug)]
+pub struct AccelConfig {
+    /// Systolic array dimension `T` (the paper: 16).
+    pub array_dim: usize,
+    /// Off-chip memory model. Default is a high-bandwidth setting
+    /// (16 elems/cycle = 64 B/cycle) matching the paper's "sufficient
+    /// network bandwidth"; `examples/bandwidth_explorer.rs` sweeps it.
+    pub dram: DramModel,
+    /// Half-capacity of double-buffered buffer A, in elements.
+    pub buf_a_half: usize,
+    /// Half-capacity of double-buffered buffer B, in elements.
+    pub buf_b_half: usize,
+    /// DMA cost of the *baseline's* zero-space reorganization, in cycles
+    /// per destination element (address computation + write issue,
+    /// serialized in the DMA walker). See `sim::reorg_engine`.
+    pub reorg_cycles_per_elem: f64,
+    /// The paper's future work ("we will further optimize sparse
+    /// computation"): when enabled, BP-im2col's dilated mode *skips*
+    /// dynamic-matrix windows whose 16 lanes are all structural zeros
+    /// (entire zero-inserted rows) instead of streaming crossbar-
+    /// re-inflated zeros through the array. Off by default (matches the
+    /// paper's evaluated design, which "does not support sparse
+    /// computation at this stage").
+    pub sparse_skip: bool,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        Self {
+            array_dim: 16,
+            dram: DramModel { elems_per_cycle: 16.0, burst_overhead: 8.0, burst_len: 64 },
+            // 128 KiB halves (32 Ki FP32 elements) — TPU-class on-chip
+            // SRAM scaled to a 16x16 array.
+            buf_a_half: 32 * 1024,
+            buf_b_half: 32 * 1024,
+            reorg_cycles_per_elem: 4.0,
+            sparse_skip: false,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// A bandwidth-constrained variant (the paper's motivation about
+    /// "processors with mismatched bandwidth and computing power").
+    pub fn bandwidth_limited(elems_per_cycle: f64) -> Self {
+        Self {
+            dram: DramModel { elems_per_cycle, burst_overhead: 8.0, burst_len: 64 },
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_platform() {
+        let c = AccelConfig::default();
+        assert_eq!(c.array_dim, 16);
+        assert!(c.buf_a_half >= 16 * 1024);
+    }
+
+    #[test]
+    fn bandwidth_limited_only_changes_dram() {
+        let c = AccelConfig::bandwidth_limited(2.0);
+        assert_eq!(c.dram.elems_per_cycle, 2.0);
+        assert_eq!(c.array_dim, AccelConfig::default().array_dim);
+    }
+}

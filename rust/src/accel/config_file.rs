@@ -1,0 +1,134 @@
+//! Config-file loading for the accelerator (`key = value` format).
+//!
+//! The offline image has no serde/toml, so the parser is hand-rolled:
+//! one `key = value` per line, `#` comments, unknown keys rejected (a
+//! typo must not silently fall back to a default). See `configs/*.cfg`
+//! for the shipped platform presets.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::config::AccelConfig;
+
+/// Parse an accelerator config from `key = value` text, starting from
+/// the defaults.
+pub fn parse(text: &str) -> Result<AccelConfig> {
+    let mut cfg = AccelConfig::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+        };
+        let (key, value) = (key.trim(), value.trim());
+        let ctx = || format!("line {}: bad value for {key}: {value:?}", lineno + 1);
+        match key {
+            "array_dim" => cfg.array_dim = value.parse().with_context(ctx)?,
+            "dram_elems_per_cycle" => cfg.dram.elems_per_cycle = value.parse().with_context(ctx)?,
+            "dram_burst_overhead" => cfg.dram.burst_overhead = value.parse().with_context(ctx)?,
+            "dram_burst_len" => cfg.dram.burst_len = value.parse().with_context(ctx)?,
+            "buf_a_half" => cfg.buf_a_half = value.parse().with_context(ctx)?,
+            "buf_b_half" => cfg.buf_b_half = value.parse().with_context(ctx)?,
+            "reorg_cycles_per_elem" => cfg.reorg_cycles_per_elem = value.parse().with_context(ctx)?,
+            "sparse_skip" => cfg.sparse_skip = value.parse().with_context(ctx)?,
+            other => bail!("line {}: unknown key {other:?}", lineno + 1),
+        }
+    }
+    validate(&cfg)?;
+    Ok(cfg)
+}
+
+/// Load a config file.
+pub fn load(path: impl AsRef<Path>) -> Result<AccelConfig> {
+    let path = path.as_ref();
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Sanity constraints on a parsed config.
+pub fn validate(cfg: &AccelConfig) -> Result<()> {
+    if cfg.array_dim == 0 || cfg.array_dim > 16 {
+        // compress/crossbar masks are u16 (one bit per lane).
+        bail!("array_dim must be in 1..=16, got {}", cfg.array_dim);
+    }
+    if cfg.dram.elems_per_cycle <= 0.0 {
+        bail!("dram_elems_per_cycle must be positive");
+    }
+    if cfg.buf_a_half == 0 || cfg.buf_b_half == 0 {
+        bail!("buffer halves must be non-empty");
+    }
+    if cfg.reorg_cycles_per_elem < 0.0 {
+        bail!("reorg_cycles_per_elem must be non-negative");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_text_gives_defaults() {
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.array_dim, AccelConfig::default().array_dim);
+    }
+
+    #[test]
+    fn full_config_round_trip() {
+        let cfg = parse(
+            "# edge device\n\
+             array_dim = 8\n\
+             dram_elems_per_cycle = 2.0\n\
+             dram_burst_overhead = 12\n\
+             dram_burst_len = 32\n\
+             buf_a_half = 16384\n\
+             buf_b_half = 16384\n\
+             reorg_cycles_per_elem = 6\n\
+             sparse_skip = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.array_dim, 8);
+        assert_eq!(cfg.dram.elems_per_cycle, 2.0);
+        assert_eq!(cfg.dram.burst_len, 32);
+        assert_eq!(cfg.buf_a_half, 16384);
+        assert!(cfg.sparse_skip);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let cfg = parse("\n# comment\narray_dim = 4 # trailing\n\n").unwrap();
+        assert_eq!(cfg.array_dim, 4);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = parse("arraydim = 16").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key"));
+    }
+
+    #[test]
+    fn bad_value_rejected_with_line_number() {
+        let err = parse("array_dim = banana").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"));
+    }
+
+    #[test]
+    fn constraints_enforced() {
+        assert!(parse("array_dim = 0").is_err());
+        assert!(parse("array_dim = 32").is_err()); // mask is u16
+        assert!(parse("dram_elems_per_cycle = -1").is_err());
+        assert!(parse("buf_a_half = 0").is_err());
+    }
+
+    #[test]
+    fn shipped_presets_parse() {
+        for preset in ["configs/default.cfg", "configs/edge.cfg", "configs/hpc.cfg"] {
+            let path = concat!(env!("CARGO_MANIFEST_DIR"), "/").to_string() + preset;
+            load(&path).unwrap_or_else(|e| panic!("{preset}: {e:#}"));
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Datapath-faithful functional execution.
+//!
+//! The numbers that come out of the accelerator must be *the same
+//! numbers* the math produces. This module executes a backpropagation
+//! pass through the actual component chain — address generation
+//! (Algorithms 1/2) → NZ detection → window compression → compact fetch →
+//! crossbar recovery → cycle-stepped systolic array — and is tested
+//! bit-for-bit against the functional oracle. Intended for small layers
+//! (it is register-accurate); the analytic [`crate::accel::timing`]
+//! engine covers full-size layers and must agree with the cycle counts
+//! measured here.
+
+use crate::accel::tiling::{GemmShape, Tiling};
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::{Mode, Pass};
+use crate::im2col::{dilated, reorg, traditional, transposed};
+use crate::sim::compress::compress_window;
+use crate::sim::crossbar::expand;
+use crate::sim::systolic::SystolicArray;
+use crate::tensor::{Matrix, Tensor4};
+
+/// Gather one lowered-matrix operand through the BP-im2col hardware path:
+/// per 16-lane window — map addresses, compress to base+mask, fetch the
+/// compact elements, re-inflate through the crossbar.
+fn gather_via_datapath(
+    compact: &[f32],
+    rows: usize,
+    cols: usize,
+    t: usize,
+    map: impl Fn(usize) -> Option<usize>,
+) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for r in 0..rows {
+        let mut c0 = 0;
+        while c0 < cols {
+            let width = t.min(cols - c0);
+            let addrs: Vec<Option<usize>> =
+                (0..width).map(|i| map(r * cols + c0 + i)).collect();
+            let win = compress_window(&addrs);
+            // Buffer returns exactly the non-zero elements (the hardware
+            // fetches `win.runs` contiguous runs starting at `win.base`).
+            let fetched: Vec<f32> =
+                addrs.iter().flatten().map(|a| compact[*a]).collect();
+            debug_assert_eq!(fetched.len(), win.count());
+            // Crossbar re-inflates the dense lane layout per the mask.
+            let lanes = expand(&fetched, win.mask, width);
+            for (i, v) in lanes.iter().enumerate() {
+                m[(r, c0 + i)] = *v;
+            }
+            c0 += width;
+        }
+    }
+    m
+}
+
+/// Tiled GEMM on the cycle-stepped array: pads to `T` multiples,
+/// accumulates partial sums across the `kb` blocks of each stripe.
+/// Returns the product and the array cycles consumed.
+pub fn tiled_gemm(a: &Matrix, b: &Matrix, t: usize) -> (Matrix, u64) {
+    assert_eq!(a.cols, b.rows);
+    let til = Tiling::new(GemmShape { m: a.rows, k: a.cols, j: b.cols }, t);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    let mut arr = SystolicArray::new(t);
+    let mut cycles = 0u64;
+    for jb in 0..til.n_j {
+        for kb in 0..til.n_k {
+            let b_block = Matrix::from_fn(t, t, |r, c| {
+                let (bk, bj) = (kb * t + r, jb * t + c);
+                if bk < b.rows && bj < b.cols {
+                    b[(bk, bj)]
+                } else {
+                    0.0
+                }
+            });
+            for mb in 0..til.n_m {
+                let m_rows = if mb + 1 == til.n_m { til.m_last } else { t };
+                let a_block = Matrix::from_fn(m_rows, t, |r, c| {
+                    let (am, ak) = (mb * t + r, kb * t + c);
+                    if ak < a.cols {
+                        a[(am, ak)]
+                    } else {
+                        0.0
+                    }
+                });
+                let (res, cyc) = arr.block_matmul(&a_block, &b_block);
+                cycles += cyc;
+                for r in 0..m_rows {
+                    for c in 0..t {
+                        let oj = jb * t + c;
+                        if oj < b.cols {
+                            out[(mb * t + r, oj)] += res[(r, c)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, cycles)
+}
+
+/// Loss calculation executed on the simulated accelerator.
+pub fn loss_calc_on_array(
+    dy: &Tensor4,
+    w: &Tensor4,
+    p: &ConvParams,
+    mode: Mode,
+    t: usize,
+) -> (Tensor4, u64) {
+    let a = traditional::lower_loss_a(w, p);
+    let shape = GemmShape::from_pass(Pass::Loss, p);
+    let b = match mode {
+        Mode::Traditional => traditional::lower_loss_b(&reorg::dilate_pad_loss(dy, p), p),
+        Mode::BpIm2col => gather_via_datapath(&dy.data, shape.k, shape.j, t, |addr| {
+            transposed::map_addr(addr, p)
+        }),
+    };
+    let (out, cycles) = tiled_gemm(&a, &b, t);
+    (traditional::loss_from_gemm(&out, p), cycles)
+}
+
+/// Gradient calculation executed on the simulated accelerator.
+pub fn grad_calc_on_array(
+    x: &Tensor4,
+    dy: &Tensor4,
+    p: &ConvParams,
+    mode: Mode,
+    t: usize,
+) -> (Tensor4, u64) {
+    let shape = GemmShape::from_pass(Pass::Grad, p);
+    let a = match mode {
+        Mode::Traditional => traditional::lower_grad_a(&reorg::dilate_loss(dy, p), p),
+        Mode::BpIm2col => gather_via_datapath(&dy.data, shape.m, shape.k, t, |addr| {
+            dilated::map_addr(addr, p)
+        }),
+    };
+    let b = traditional::lower_grad_b(&reorg::pad_input(x, p), p);
+    let (out, cycles) = tiled_gemm(&a, &b, t);
+    (traditional::grad_from_gemm(&out, p), cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::timing::simulate_pass;
+    use crate::accel::AccelConfig;
+    use crate::conv::{conv2d_bwd_input, conv2d_bwd_weight};
+    use crate::tensor::Rng;
+
+    fn tensors(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        (x, w, dy)
+    }
+
+    #[test]
+    fn tiled_gemm_matches_reference() {
+        let mut rng = Rng::new(60);
+        let a = Matrix::from_fn(19, 37, |_, _| rng.range_f32(-1.0, 1.0));
+        let b = Matrix::from_fn(37, 23, |_, _| rng.range_f32(-1.0, 1.0));
+        let (out, _) = tiled_gemm(&a, &b, 8);
+        assert!(out.max_abs_diff(&a.matmul(&b)) < 1e-4);
+    }
+
+    #[test]
+    fn array_loss_matches_oracle_both_modes() {
+        let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let (_, w, dy) = tensors(&p, 61);
+        let oracle = conv2d_bwd_input(&dy, &w, &p);
+        for mode in Mode::ALL {
+            let (dx, _) = loss_calc_on_array(&dy, &w, &p, mode, 8);
+            assert!(dx.max_abs_diff(&oracle) < 1e-4, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn array_grad_matches_oracle_both_modes() {
+        let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let (x, _, dy) = tensors(&p, 62);
+        let oracle = conv2d_bwd_weight(&x, &dy, &p);
+        for mode in Mode::ALL {
+            let (dw, _) = grad_calc_on_array(&x, &dy, &p, mode, 8);
+            assert!(dw.max_abs_diff(&oracle) < 1e-3, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn array_modes_agree_bitwise() {
+        let p = ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        let (x, w, dy) = tensors(&p, 63);
+        let (dx_t, _) = loss_calc_on_array(&dy, &w, &p, Mode::Traditional, 8);
+        let (dx_b, _) = loss_calc_on_array(&dy, &w, &p, Mode::BpIm2col, 8);
+        assert_eq!(dx_t, dx_b);
+        let (dw_t, _) = grad_calc_on_array(&x, &dy, &p, Mode::Traditional, 8);
+        let (dw_b, _) = grad_calc_on_array(&x, &dy, &p, Mode::BpIm2col, 8);
+        assert_eq!(dw_t, dw_b);
+    }
+
+    #[test]
+    fn cycle_stepped_agrees_with_analytic_compute() {
+        // The register-accurate array must pay exactly the cycles the
+        // analytic timing model charges as compute.
+        let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let (x, w, dy) = tensors(&p, 64);
+        let cfg = AccelConfig { array_dim: 8, ..AccelConfig::default() };
+        for mode in Mode::ALL {
+            let (_, c_loss) = loss_calc_on_array(&dy, &w, &p, mode, 8);
+            let m_loss = simulate_pass(Pass::Loss, mode, &p, &cfg);
+            assert_eq!(c_loss as f64, m_loss.compute_cycles, "{mode:?} loss");
+            let (_, c_grad) = grad_calc_on_array(&x, &dy, &p, mode, 8);
+            let m_grad = simulate_pass(Pass::Grad, mode, &p, &cfg);
+            assert_eq!(c_grad as f64, m_grad.compute_cycles, "{mode:?} grad");
+        }
+    }
+
+    #[test]
+    fn datapath_gather_equals_direct_gather() {
+        // compress -> fetch -> crossbar must reproduce the plain gather.
+        let p = ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let (_, _, dy) = tensors(&p, 65);
+        let shape = GemmShape::from_pass(Pass::Loss, &p);
+        let via_hw = gather_via_datapath(&dy.data, shape.k, shape.j, 16, |a| {
+            transposed::map_addr(a, &p)
+        });
+        assert_eq!(via_hw, transposed::gather_matrix(&dy, &p));
+    }
+}

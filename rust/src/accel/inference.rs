@@ -1,0 +1,109 @@
+//! Inference-pass timing and whole-training-step costing.
+//!
+//! The paper evaluates only the two backward passes; a training
+//! framework schedules fwd + loss + grad per layer. This module adds the
+//! inference GEMM's cycle model (same array, same block-pass cost, the
+//! 51-cycle stationary prologue, no reorganization in either mode — the
+//! forward operand has padding zeros only) so the coordinator can report
+//! full-step costs and the end-to-end example can attribute time.
+
+use crate::accel::config::AccelConfig;
+use crate::accel::tiling::{GemmShape, Tiling};
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::Mode;
+use crate::sim::addrgen::DIV_LATENCY;
+
+/// Cycle/traffic summary of one inference pass (mode-independent: both
+/// designs run inference identically).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FwdMetrics {
+    pub compute_cycles: f64,
+    pub prologue_cycles: f64,
+    /// Off-chip bytes: input + kernel + output, compact.
+    pub dram_bytes: u64,
+    pub macs: u64,
+}
+
+impl FwdMetrics {
+    pub fn total_cycles(&self) -> f64 {
+        self.compute_cycles + self.prologue_cycles
+    }
+}
+
+/// Inference GEMM `A[N x C*Kh*Kw] . B[C*Kh*Kw x B*Ho*Wo]`.
+pub fn simulate_fwd(p: &ConvParams, cfg: &AccelConfig) -> FwdMetrics {
+    let shape = GemmShape { m: p.n, k: p.c * p.kh * p.kw, j: p.b * p.ho() * p.wo() };
+    let til = Tiling::new(shape, cfg.array_dim);
+    FwdMetrics {
+        compute_cycles: til.compute_cycles(),
+        // Inference-style stationary addr-gen: 3 divider stages (Table
+        // III's 51 cycles), once per stripe.
+        prologue_cycles: (til.n_j * 3 * DIV_LATENCY) as f64,
+        dram_bytes: ((p.input_elems() + p.kernel_elems() + p.output_elems()) * 4) as u64,
+        macs: shape.macs(),
+    }
+}
+
+/// Full training-step cost of one layer: fwd + loss + grad.
+#[derive(Clone, Copy, Debug)]
+pub struct StepCost {
+    pub fwd: f64,
+    pub loss: f64,
+    pub grad: f64,
+}
+
+impl StepCost {
+    pub fn total(&self) -> f64 {
+        self.fwd + self.loss + self.grad
+    }
+
+    /// Fraction of the step spent in backpropagation.
+    pub fn backward_fraction(&self) -> f64 {
+        (self.loss + self.grad) / self.total()
+    }
+}
+
+/// Whole-step cycles of one layer under `mode`.
+pub fn training_step_cost(p: &ConvParams, mode: Mode, cfg: &AccelConfig) -> StepCost {
+    let fwd = simulate_fwd(p, cfg).total_cycles();
+    let l = crate::accel::timing::simulate_pass(crate::im2col::pipeline::Pass::Loss, mode, p, cfg);
+    let g = crate::accel::timing::simulate_pass(crate::im2col::pipeline::Pass::Grad, mode, p, cfg);
+    StepCost { fwd, loss: l.total_cycles(), grad: g.total_cycles() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::pipeline::Mode;
+
+    #[test]
+    fn fwd_cost_paper_layer1() {
+        // (M,K,J) = (64, 27, 2*111*111): nK=2, nJ=1541, nM=4.
+        let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+        let m = simulate_fwd(&p, &AccelConfig::default());
+        assert!(m.compute_cycles > 0.0 && m.compute_cycles.is_finite());
+        assert_eq!(m.macs, (64 * 27 * 2 * 111 * 111) as u64);
+    }
+
+    #[test]
+    fn backward_dominates_training_step() {
+        // Backprop is ~2/3 of a training step's conv work (dX + dW vs Y)
+        // — the reason the paper's target matters.
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        let cost = training_step_cost(&p, Mode::BpIm2col, &AccelConfig::default());
+        assert!(cost.backward_fraction() > 0.5, "{cost:?}");
+    }
+
+    #[test]
+    fn step_speedup_between_pass_speedups() {
+        // Whole-step speedup is diluted by the (mode-independent) fwd.
+        let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+        let cfg = AccelConfig::default();
+        let trad = training_step_cost(&p, Mode::Traditional, &cfg);
+        let bp = training_step_cost(&p, Mode::BpIm2col, &cfg);
+        let step_speedup = trad.total() / bp.total();
+        assert!(step_speedup > 1.0);
+        assert!(step_speedup < trad.grad / bp.grad * 1.01);
+        assert_eq!(trad.fwd, bp.fwd);
+    }
+}

@@ -1,0 +1,128 @@
+//! Metrics collected by the accelerator models — the raw material of
+//! every table and figure in the paper's evaluation.
+
+use crate::im2col::pipeline::{Mode, Pass};
+use crate::sim::dram::DramTraffic;
+
+/// All counters of one backpropagation pass on one layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PassMetrics {
+    pub pass: Pass,
+    pub mode: Mode,
+    /// Pure array cycles (block passes, fills, drains).
+    pub compute_cycles: f64,
+    /// Baseline-only zero-space reorganization (Table II's column).
+    pub reorg_cycles: f64,
+    /// Address-pipeline prologues (Table III), summed over stripes.
+    pub prologue_cycles: f64,
+    /// DRAM fill cycles not hidden by double buffering.
+    pub stall_cycles: f64,
+    /// Extra fetch cycles from compressed-run splits (dilated mode).
+    pub extra_fetch_cycles: f64,
+    /// Off-chip traffic of the pass.
+    pub traffic: DramTraffic,
+    /// Elements read from buffer A toward the array (Fig. 8b).
+    pub buffer_a_reads: u64,
+    /// Elements read from buffer B toward the array (Fig. 8a).
+    pub buffer_b_reads: u64,
+    /// Extra DRAM storage the mode requires beyond the compact tensors
+    /// (baseline: the zero-spaced copy; BP: masks + base addresses).
+    pub storage_overhead_bytes: u64,
+    /// Structural sparsity of the zero-spaced operand of this pass.
+    pub sparsity: f64,
+    /// Dense MACs of the virtual GEMM (same in both modes).
+    pub macs: u64,
+}
+
+impl PassMetrics {
+    /// End-to-end runtime of the pass in cycles.
+    pub fn total_cycles(&self) -> f64 {
+        self.compute_cycles
+            + self.reorg_cycles
+            + self.prologue_cycles
+            + self.stall_cycles
+            + self.extra_fetch_cycles
+    }
+
+    /// Array utilization: useful MACs / (PEs * total cycles).
+    pub fn utilization(&self, array_dim: usize) -> f64 {
+        self.macs as f64 / ((array_dim * array_dim) as f64 * self.total_cycles())
+    }
+}
+
+/// Loss + gradient metrics of one layer under one mode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerMetrics {
+    pub loss: PassMetrics,
+    pub grad: PassMetrics,
+}
+
+impl LayerMetrics {
+    pub fn total_cycles(&self) -> f64 {
+        self.loss.total_cycles() + self.grad.total_cycles()
+    }
+
+    pub fn get(&self, pass: Pass) -> &PassMetrics {
+        match pass {
+            Pass::Loss => &self.loss,
+            Pass::Grad => &self.grad,
+        }
+    }
+}
+
+/// Speedup of `ours` over `baseline` (the paper's Table II column).
+pub fn speedup(baseline: &PassMetrics, ours: &PassMetrics) -> f64 {
+    baseline.total_cycles() / ours.total_cycles()
+}
+
+/// Percentage reduction of a quantity: `(base - ours) / base * 100`.
+pub fn reduction_pct(base: f64, ours: f64) -> f64 {
+    if base == 0.0 {
+        return 0.0;
+    }
+    (base - ours) / base * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(pass: Pass, mode: Mode, compute: f64, reorg: f64) -> PassMetrics {
+        PassMetrics {
+            pass,
+            mode,
+            compute_cycles: compute,
+            reorg_cycles: reorg,
+            prologue_cycles: 0.0,
+            stall_cycles: 0.0,
+            extra_fetch_cycles: 0.0,
+            traffic: DramTraffic::default(),
+            buffer_a_reads: 0,
+            buffer_b_reads: 0,
+            storage_overhead_bytes: 0,
+            sparsity: 0.0,
+            macs: 0,
+        }
+    }
+
+    #[test]
+    fn total_is_component_sum() {
+        let m = dummy(Pass::Loss, Mode::Traditional, 100.0, 50.0);
+        assert_eq!(m.total_cycles(), 150.0);
+    }
+
+    #[test]
+    fn speedup_matches_paper_definition() {
+        // Table II: speedup = (trad computation + reorganization) / BP.
+        let trad = dummy(Pass::Loss, Mode::Traditional, 8_929_989.0, 37_083_360.0);
+        let bp = dummy(Pass::Loss, Mode::BpIm2col, 8_962_102.0, 0.0);
+        let s = speedup(&trad, &bp);
+        assert!((s - 5.13).abs() < 0.01, "{s}");
+    }
+
+    #[test]
+    fn reduction_pct_basics() {
+        assert_eq!(reduction_pct(200.0, 100.0), 50.0);
+        assert_eq!(reduction_pct(0.0, 5.0), 0.0);
+    }
+}

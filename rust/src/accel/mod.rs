@@ -1,0 +1,24 @@
+//! The TPU-like accelerator: composition of the [`crate::sim`] components
+//! into the machine of the paper's Fig. 5, with two interchangeable
+//! address-generation configurations (traditional im2col vs BP-im2col).
+//!
+//! Two execution levels:
+//!
+//! * [`timing`] — the analytic cycle/traffic engine used on full-size
+//!   layers (Tables II–III, Figs. 6–8).
+//! * [`functional`] — a datapath-faithful execution (address generation →
+//!   NZ detection → compression → buffer fetch → crossbar → cycle-stepped
+//!   systolic array) that produces *numerical* results, cross-checked
+//!   against the functional oracle on small layers.
+
+pub mod config;
+pub mod config_file;
+pub mod functional;
+pub mod inference;
+pub mod metrics;
+pub mod tiling;
+pub mod timing;
+
+pub use config::AccelConfig;
+pub use metrics::{LayerMetrics, PassMetrics};
+pub use timing::{simulate_layer, simulate_pass};

@@ -1,0 +1,150 @@
+//! GEMM tiling onto the `T x T` array.
+//!
+//! The stationary matrix B (`K x J`) is cut into `T x T` blocks; the
+//! dynamic matrix A (`M x K`) streams through in groups of up to `T`
+//! rows. One *stripe* is a column of stationary blocks sharing the same
+//! `J` window (`jb`); partial sums accumulate across the `kb` blocks of
+//! a stripe.
+
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::Pass;
+use crate::sim::systolic::block_cycles;
+use crate::tensor::ceil_div;
+
+/// Dimensions of a lowered GEMM `A[M x K] . B[K x J]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub j: usize,
+}
+
+impl GemmShape {
+    /// The lowered GEMM of a backpropagation pass (paper Eq. 1).
+    pub fn from_pass(pass: Pass, p: &ConvParams) -> Self {
+        let (m, k, j) = match pass {
+            Pass::Loss => p.loss_gemm_dims(),
+            Pass::Grad => p.grad_gemm_dims(),
+        };
+        Self { m, k, j }
+    }
+
+    /// Useful MACs of the virtual (dense) GEMM.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.j) as u64
+    }
+}
+
+/// Tiling of a [`GemmShape`] onto a `T x T` array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    pub t: usize,
+    pub shape: GemmShape,
+    /// Stationary blocks along K.
+    pub n_k: usize,
+    /// Stationary stripes along J.
+    pub n_j: usize,
+    /// Dynamic row groups along M.
+    pub n_m: usize,
+    /// Rows in the last (possibly partial) M group.
+    pub m_last: usize,
+}
+
+impl Tiling {
+    pub fn new(shape: GemmShape, t: usize) -> Self {
+        let n_m = ceil_div(shape.m, t);
+        let m_last = if shape.m % t == 0 { t.min(shape.m) } else { shape.m % t };
+        Self { t, shape, n_k: ceil_div(shape.k, t), n_j: ceil_div(shape.j, t), n_m, m_last }
+    }
+
+    /// Stationary blocks per pass.
+    pub fn stationary_blocks(&self) -> usize {
+        self.n_k * self.n_j
+    }
+
+    /// Total block passes (one per `(kb, jb, mb)`).
+    pub fn block_passes(&self) -> usize {
+        self.stationary_blocks() * self.n_m
+    }
+
+    /// Array cycles of one full stripe (all `kb`, all `mb` groups),
+    /// stationary loads hidden by double buffering.
+    pub fn stripe_compute_cycles(&self) -> f64 {
+        let full = block_cycles(self.t, self.t) as f64;
+        let last = block_cycles(self.m_last, self.t) as f64;
+        self.n_k as f64 * ((self.n_m as f64 - 1.0) * full + last)
+    }
+
+    /// Array cycles of the whole pass.
+    pub fn compute_cycles(&self) -> f64 {
+        self.n_j as f64 * self.stripe_compute_cycles()
+    }
+
+    /// Dense elements streamed from buffer A toward the array
+    /// (per-block row groups x T lanes).
+    pub fn buffer_a_dense_reads(&self) -> u64 {
+        (self.n_k * self.n_j * self.shape.m * self.t) as u64
+    }
+
+    /// Dense elements read from buffer B toward the array (stationary
+    /// block loads).
+    pub fn buffer_b_dense_reads(&self) -> u64 {
+        (self.n_k * self.n_j * self.t * self.t) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_layer1_loss_tiling() {
+        // 224/3/64/3/2/0 loss: (M,K,J) = (3, 576, 100352).
+        let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+        let t = Tiling::new(GemmShape::from_pass(Pass::Loss, &p), 16);
+        assert_eq!((t.n_k, t.n_j, t.n_m, t.m_last), (36, 6272, 1, 3));
+        assert_eq!(t.stationary_blocks(), 225_792);
+        // DESIGN.md §5: ~33 cycles per block pass, ~7.45M total — within
+        // ~20 % of the paper's 8,929,989.
+        let c = t.compute_cycles();
+        assert!((7.0e6..8.0e6).contains(&c), "{c}");
+    }
+
+    #[test]
+    fn table2_layer2_loss_close_to_paper() {
+        // 112/64/64/3/2/1 loss: paper computation 10,329,856 cycles.
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        let t = Tiling::new(GemmShape::from_pass(Pass::Loss, &p), 16);
+        let c = t.compute_cycles();
+        assert!((c - 10_329_856.0).abs() / 10_329_856.0 < 0.05, "{c}");
+    }
+
+    #[test]
+    fn table2_layer1_grad_close_to_paper() {
+        // 224/3/64/3/2/0 grad: paper computation 2,274,645 cycles.
+        let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+        let t = Tiling::new(GemmShape::from_pass(Pass::Grad, &p), 16);
+        let c = t.compute_cycles();
+        assert!((c - 2_274_645.0).abs() / 2_274_645.0 < 0.05, "{c}");
+    }
+
+    #[test]
+    fn partial_tiles_counted() {
+        let t = Tiling::new(GemmShape { m: 17, k: 17, j: 17 }, 16);
+        assert_eq!((t.n_k, t.n_j, t.n_m, t.m_last), (2, 2, 2, 1));
+        assert_eq!(t.block_passes(), 8);
+    }
+
+    #[test]
+    fn exact_tiles_have_full_last_group() {
+        let t = Tiling::new(GemmShape { m: 32, k: 16, j: 16 }, 16);
+        assert_eq!((t.n_m, t.m_last), (2, 16));
+    }
+
+    #[test]
+    fn dense_read_counts() {
+        let t = Tiling::new(GemmShape { m: 8, k: 32, j: 48 }, 16);
+        assert_eq!(t.buffer_b_dense_reads(), (2 * 3 * 256) as u64);
+        assert_eq!(t.buffer_a_dense_reads(), (2 * 3 * 8 * 16) as u64);
+    }
+}

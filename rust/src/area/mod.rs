@@ -1,0 +1,188 @@
+//! Structural area model (Table IV).
+//!
+//! The paper synthesizes its address-generation modules with the ASAP7
+//! 7 nm predictive PDK. We have no synthesis flow (DESIGN.md
+//! §Substitutions); instead we inventory the datapath primitives each
+//! module instantiates and multiply by ASAP7-class unit areas. The unit
+//! constants are calibrated so the *traditional* modules land near the
+//! paper's absolute numbers; the BP modules then follow structurally,
+//! preserving Table IV's message — BP-im2col's address generation is a
+//! few percent of the accelerator, an order of magnitude cheaper than
+//! the reorganization hardware + traffic it removes.
+
+use crate::im2col::pipeline::{Mode, Pass};
+use crate::sim::addrgen::{AddrGenPipeline, Module};
+use crate::sim::crossbar::pruned_crossbar_mux2_count;
+
+/// ASAP7-class unit areas, in µm².
+pub mod unit {
+    /// One flip-flop bit.
+    pub const FF_BIT: f64 = 1.6;
+    /// One bit of a 2-input mux.
+    pub const MUX2_BIT: f64 = 0.55;
+    /// 32-bit ripple/carry-select adder.
+    pub const ADD32: f64 = 85.0;
+    /// 32-bit magnitude comparator.
+    pub const CMP32: f64 = 55.0;
+    /// Pipelined 32-bit fixed-point divider (17-cycle, one per lane).
+    pub const DIV32: f64 = 880.0;
+    /// One FP32 MAC (PE) including pipeline registers.
+    pub const MAC_FP32: f64 = 4800.0;
+    /// One bit of on-chip SRAM (including periphery, amortized).
+    pub const SRAM_BIT: f64 = 0.045;
+}
+
+/// Address lanes generated in parallel (one per array row/column).
+pub const LANES: usize = 16;
+
+/// Area breakdown of one address-generation module.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModuleArea {
+    pub dividers_um2: f64,
+    pub adders_um2: f64,
+    pub comparators_um2: f64,
+    pub pipeline_regs_um2: f64,
+    pub crossbar_um2: f64,
+    pub control_um2: f64,
+}
+
+impl ModuleArea {
+    pub fn total(&self) -> f64 {
+        self.dividers_um2
+            + self.adders_um2
+            + self.comparators_um2
+            + self.pipeline_regs_um2
+            + self.crossbar_um2
+            + self.control_um2
+    }
+}
+
+/// Structural area of the (mode, module) address generator. The paper's
+/// Table IV reports one dynamic and one stationary module per mode; each
+/// must support both backpropagation passes, so we take the union of the
+/// per-pass pipelines (the deeper one dominates).
+pub fn addrgen_area(mode: Mode, module: Module) -> ModuleArea {
+    // Deepest pipeline this module needs across the two passes.
+    let divs = Pass::ALL
+        .iter()
+        .map(|pass| AddrGenPipeline::build(mode, *pass, module).divider_count())
+        .max()
+        .unwrap_or(0);
+
+    // Every lane carries its own divider chain + address adders.
+    let dividers_um2 = (divs * LANES) as f64 * unit::DIV32;
+    // Base-address composition (3 adders/lane) + window incrementers.
+    let adders_um2 = (3 * LANES) as f64 * unit::ADD32;
+    // NZ detection (Eqs. 2–4): 4 comparators per lane in BP mode,
+    // 2 per lane (padding bounds only) in traditional mode.
+    let cmps = match mode {
+        Mode::Traditional => 2 * LANES,
+        Mode::BpIm2col => 4 * LANES,
+    };
+    let comparators_um2 = cmps as f64 * unit::CMP32;
+    // Pipeline registers: 64 bits of (address + tag) per stage per lane.
+    let stages = divs.max(1);
+    let pipeline_regs_um2 = (stages * LANES * 64) as f64 * unit::FF_BIT;
+    // BP modules own the compression logic + recovery crossbar and the
+    // compacted-data staging registers (16 lanes x 32 bits x 2 ranks).
+    let crossbar_um2 = match mode {
+        Mode::Traditional => 0.0,
+        Mode::BpIm2col => {
+            pruned_crossbar_mux2_count(LANES, 32) as f64 * unit::MUX2_BIT
+                + (LANES * 32 * 2) as f64 * unit::FF_BIT
+                + (LANES * LANES) as f64 * unit::MUX2_BIT * 16.0 // priority encode / mask distribute
+        }
+    };
+    // FSM + request queues.
+    let control_um2 = match module {
+        Module::Dynamic => 1024.0 * unit::FF_BIT,
+        Module::Stationary => 2048.0 * unit::FF_BIT,
+    };
+    ModuleArea { dividers_um2, adders_um2, comparators_um2, pipeline_regs_um2, crossbar_um2, control_um2 }
+}
+
+/// Total accelerator area (µm²): 16x16 FP32 MACs + A/B/accumulator SRAM
+/// + both traditional address generators (always present for inference).
+pub fn accelerator_total_um2() -> f64 {
+    let pes = (LANES * LANES) as f64 * unit::MAC_FP32;
+    // 2 x double-buffered 256 KiB (A, B) + 64 KiB accumulators.
+    let sram_bits = ((2 * 2 * 256 + 64) * 1024 * 8) as f64;
+    let sram = sram_bits * unit::SRAM_BIT;
+    let addrgen = addrgen_area(Mode::Traditional, Module::Dynamic).total()
+        + addrgen_area(Mode::Traditional, Module::Stationary).total();
+    pes + sram + addrgen
+}
+
+/// One row of Table IV: module area and its share of the accelerator.
+#[derive(Clone, Copy, Debug)]
+pub struct Table4Row {
+    pub mode: Mode,
+    pub module: Module,
+    pub area_um2: f64,
+    pub ratio_pct: f64,
+}
+
+/// Regenerate Table IV.
+pub fn table4() -> Vec<Table4Row> {
+    let total = accelerator_total_um2();
+    let mut rows = Vec::new();
+    for mode in Mode::ALL {
+        for module in [Module::Dynamic, Module::Stationary] {
+            let a = addrgen_area(mode, module).total();
+            rows.push(Table4Row { mode, module, area_um2: a, ratio_pct: a / total * 100.0 });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traditional_dynamic_is_tiny() {
+        // Paper: 5103 µm² (0.23 %) — a bare incrementer block.
+        let a = addrgen_area(Mode::Traditional, Module::Dynamic).total();
+        assert!((2_000.0..12_000.0).contains(&a), "{a}");
+    }
+
+    #[test]
+    fn traditional_stationary_near_paper() {
+        // Paper: 53268 µm² — dominated by 3 divider stages x 16 lanes.
+        let a = addrgen_area(Mode::Traditional, Module::Stationary).total();
+        assert!((a - 53_268.0).abs() / 53_268.0 < 0.25, "{a}");
+    }
+
+    #[test]
+    fn bp_stationary_larger_than_traditional() {
+        // Paper ratio: 121009 / 53268 ≈ 2.27.
+        let trad = addrgen_area(Mode::Traditional, Module::Stationary).total();
+        let bp = addrgen_area(Mode::BpIm2col, Module::Stationary).total();
+        let ratio = bp / trad;
+        assert!((1.3..3.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn bp_dynamic_near_paper_magnitude() {
+        // Paper: 56628 µm² — the Algorithm-2 divider chain + crossbar.
+        let a = addrgen_area(Mode::BpIm2col, Module::Dynamic).total();
+        assert!((40_000.0..90_000.0).contains(&a), "{a}");
+    }
+
+    #[test]
+    fn addrgen_share_is_single_digit_percent() {
+        // Table IV's message: BP address generation costs a few percent
+        // of the accelerator.
+        for row in table4() {
+            assert!(row.ratio_pct < 10.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn total_area_in_expected_band() {
+        // Implied by Table IV: trad stationary 53268 µm² = 2.42 % ->
+        // total ~2.2 mm².
+        let t = accelerator_total_um2();
+        assert!((1.4e6..3.2e6).contains(&t), "{t}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Convolution semantics: parameters, derived shapes and the naive
+//! (loop-nest) forward/backward oracle every other path is tested against.
+
+mod params;
+mod reference;
+
+pub use params::ConvParams;
+pub use reference::{conv2d_fwd, conv2d_bwd_input, conv2d_bwd_weight};

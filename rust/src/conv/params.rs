@@ -1,0 +1,214 @@
+//! Convolution layer parameters and the paper's derived shape symbols.
+
+/// Parameters of one convolutional layer, following the paper's Table I.
+///
+/// Forward: `I^{l+1} [B,N,Ho,Wo] = I^l [B,C,Hi,Wi] * W^l [N,C,Kh,Kw]`
+/// with stride `S` and zero-padding `(Ph, Pw)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvParams {
+    /// Batch size `B` (the paper evaluates with 2).
+    pub b: usize,
+    /// Input channels `C`.
+    pub c: usize,
+    /// Input height `Hi`.
+    pub hi: usize,
+    /// Input width `Wi`.
+    pub wi: usize,
+    /// Output channels `N`.
+    pub n: usize,
+    /// Kernel height `Kh`.
+    pub kh: usize,
+    /// Kernel width `Kw`.
+    pub kw: usize,
+    /// Stride `S` (same in both directions, as in the paper).
+    pub s: usize,
+    /// Padding in the height direction `Ph`.
+    pub ph: usize,
+    /// Padding in the width direction `Pw`.
+    pub pw: usize,
+}
+
+impl ConvParams {
+    /// Square-image, square-kernel constructor matching the paper's
+    /// `Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw)` layer notation.
+    pub const fn square(hi: usize, c: usize, n: usize, k: usize, s: usize, p: usize) -> Self {
+        Self { b: 2, c, hi, wi: hi, n, kh: k, kw: k, s, ph: p, pw: p }
+    }
+
+    /// With a different batch size.
+    pub const fn with_batch(mut self, b: usize) -> Self {
+        self.b = b;
+        self
+    }
+
+    /// Output height `Ho = floor((Hi + 2Ph - Kh)/S) + 1`.
+    pub const fn ho(&self) -> usize {
+        (self.hi + 2 * self.ph - self.kh) / self.s + 1
+    }
+
+    /// Output width `Wo`.
+    pub const fn wo(&self) -> usize {
+        (self.wi + 2 * self.pw - self.kw) / self.s + 1
+    }
+
+    /// `Ho'' = Ho + (Ho-1)(S-1)` — height of the zero-inserted loss map.
+    pub const fn ho2(&self) -> usize {
+        let ho = self.ho();
+        ho + (ho - 1) * (self.s - 1)
+    }
+
+    /// `Wo'' = Wo + (Wo-1)(S-1)`.
+    pub const fn wo2(&self) -> usize {
+        let wo = self.wo();
+        wo + (wo - 1) * (self.s - 1)
+    }
+
+    /// `Ho''' = Ho + 2(Kh-1-Ph) + (Ho-1)(S-1)` — height of the
+    /// zero-inserted *and* zero-padded loss map used by loss calculation.
+    pub const fn ho3(&self) -> usize {
+        self.ho2() + 2 * (self.kh - 1 - self.ph)
+    }
+
+    /// `Wo''' = Wo + 2(Kw-1-Pw) + (Wo-1)(S-1)`.
+    pub const fn wo3(&self) -> usize {
+        self.wo2() + 2 * (self.kw - 1 - self.pw)
+    }
+
+    /// Rows of the input that actually received gradient:
+    /// `(Ho-1)S + Kh - 2Ph`. Equals `Hi` when the forward floor-division
+    /// is exact; otherwise the last `Hi - hi_eff` rows have zero loss.
+    pub const fn hi_eff(&self) -> usize {
+        (self.ho() - 1) * self.s + self.kh - 2 * self.ph
+    }
+
+    /// Column counterpart of [`Self::hi_eff`].
+    pub const fn wi_eff(&self) -> usize {
+        (self.wo() - 1) * self.s + self.kw - 2 * self.pw
+    }
+
+    /// Number of elements of the input `I^l`.
+    pub const fn input_elems(&self) -> usize {
+        self.b * self.c * self.hi * self.wi
+    }
+
+    /// Number of elements of the kernel `W^l`.
+    pub const fn kernel_elems(&self) -> usize {
+        self.n * self.c * self.kh * self.kw
+    }
+
+    /// Number of elements of the output / loss map `dY`.
+    pub const fn output_elems(&self) -> usize {
+        self.b * self.n * self.ho() * self.wo()
+    }
+
+    /// MACs of the forward convolution.
+    pub const fn fwd_macs(&self) -> usize {
+        self.output_elems() * self.c * self.kh * self.kw
+    }
+
+    /// GEMM dimensions `(M, K, Ncols)` of the **loss calculation**
+    /// (`Tr(dX) [C x B*Hi*Wi] = A [C x N*Kh*Kw] . B [N*Kh*Kw x B*Hi*Wi]`).
+    pub const fn loss_gemm_dims(&self) -> (usize, usize, usize) {
+        (self.c, self.n * self.kh * self.kw, self.b * self.hi * self.wi)
+    }
+
+    /// GEMM dimensions `(M, K, Ncols)` of the **gradient calculation**
+    /// (`dW [N x C*Kh*Kw] = A [N x B*Ho''*Wo''] . B [B*Ho''*Wo'' x C*Kh*Kw]`).
+    pub const fn grad_gemm_dims(&self) -> (usize, usize, usize) {
+        (self.n, self.b * self.ho2() * self.wo2(), self.c * self.kh * self.kw)
+    }
+
+    /// Paper-style layer id string `Hi/C/N/Kh/S/Ph`.
+    pub fn id(&self) -> String {
+        format!("{}/{}/{}/{}/{}/{}", self.hi, self.c, self.n, self.kh, self.s, self.ph)
+    }
+
+    /// Validity checks used by tests and the workload tables.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.kh == 0 || self.kw == 0 || self.s == 0 || self.b == 0 || self.c == 0 || self.n == 0 {
+            return Err(format!("degenerate parameter in {self:?}"));
+        }
+        if self.hi + 2 * self.ph < self.kh || self.wi + 2 * self.pw < self.kw {
+            return Err(format!("kernel larger than padded input in {self:?}"));
+        }
+        if self.ph >= self.kh || self.pw >= self.kw {
+            // The paper's area-0 condition (Eq. 2) assumes Kh-1-Ph >= 0.
+            return Err(format!("padding >= kernel unsupported by BP-im2col in {self:?}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The five layers of Table II.
+    pub const T2_LAYERS: [ConvParams; 5] = [
+        ConvParams::square(224, 3, 64, 3, 2, 0),
+        ConvParams::square(112, 64, 64, 3, 2, 1),
+        ConvParams::square(56, 256, 512, 1, 2, 0),
+        ConvParams::square(28, 244, 244, 3, 2, 1),
+        ConvParams::square(14, 1024, 2048, 1, 2, 0),
+    ];
+
+    #[test]
+    fn derived_shapes_layer1() {
+        // 224/3/64/3/2/0: Ho = floor((224-3)/2)+1 = 111.
+        let p = T2_LAYERS[0];
+        assert_eq!(p.ho(), 111);
+        assert_eq!(p.ho2(), 221);
+        assert_eq!(p.ho3(), 225); // 221 + 2*(3-1-0)
+        assert_eq!(p.hi_eff(), 223); // floor div inexact: last input row has zero loss
+    }
+
+    #[test]
+    fn derived_shapes_layer2() {
+        // 112/64/64/3/2/1: Ho = (112+2-3)/2+1 = 56.
+        let p = T2_LAYERS[1];
+        assert_eq!(p.ho(), 56);
+        assert_eq!(p.ho2(), 111);
+        assert_eq!(p.ho3(), 113);
+        assert_eq!(p.hi_eff(), 111); // inexact again
+    }
+
+    #[test]
+    fn derived_shapes_1x1() {
+        // 56/256/512/1/2/0: Ho = (56-1)/2+1 = 28, K-1-P = 0 so Ho''' = Ho''.
+        let p = T2_LAYERS[2];
+        assert_eq!(p.ho(), 28);
+        assert_eq!(p.ho2(), 55);
+        assert_eq!(p.ho3(), 55);
+    }
+
+    #[test]
+    fn exact_division_recovers_hi() {
+        // 4/1/1/2/2/0: Ho = (4-2)/2+1 = 2, exact: hi_eff == hi.
+        let p = ConvParams::square(4, 1, 1, 2, 2, 0);
+        assert_eq!(p.ho(), 2);
+        assert_eq!(p.hi_eff(), 4);
+    }
+
+    #[test]
+    fn gemm_dims_layer1() {
+        let p = T2_LAYERS[0];
+        assert_eq!(p.loss_gemm_dims(), (3, 576, 2 * 224 * 224));
+        assert_eq!(p.grad_gemm_dims(), (64, 2 * 221 * 221, 27));
+    }
+
+    #[test]
+    fn validate_rejects_bad_padding() {
+        let mut p = ConvParams::square(8, 1, 1, 1, 2, 0);
+        assert!(p.validate().is_ok());
+        p.ph = 1; // Ph >= Kh
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn stride1_is_degenerate_but_consistent() {
+        let p = ConvParams::square(8, 2, 2, 3, 1, 1);
+        assert_eq!(p.ho(), 8);
+        assert_eq!(p.ho2(), 8); // no insertion at S=1
+        assert_eq!(p.ho3(), 10); // 8 + 2*(3-1-1)
+    }
+}

@@ -1,0 +1,198 @@
+//! Naive loop-nest convolution oracle.
+//!
+//! These are the *mathematical* definitions — O(B·N·C·Ho·Wo·Kh·Kw) direct
+//! loops with no lowering. Every im2col path (explicit, implicit, Pallas)
+//! is checked against them.
+
+use crate::conv::ConvParams;
+use crate::tensor::Tensor4;
+
+/// Forward convolution: `Y[b,n,ho,wo] = sum_{c,kh,kw} X[b,c,ho*S+kh-Ph, wo*S+kw-Pw] * W[n,c,kh,kw]`.
+pub fn conv2d_fwd(x: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
+    assert_eq!(x.dims, [p.b, p.c, p.hi, p.wi], "input shape mismatch");
+    assert_eq!(w.dims, [p.n, p.c, p.kh, p.kw], "kernel shape mismatch");
+    let (ho, wo) = (p.ho(), p.wo());
+    let mut y = Tensor4::zeros([p.b, p.n, ho, wo]);
+    for b in 0..p.b {
+        for n in 0..p.n {
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let mut acc = 0.0;
+                    for c in 0..p.c {
+                        for kh in 0..p.kh {
+                            for kw in 0..p.kw {
+                                let ih = (oh * p.s + kh) as isize - p.ph as isize;
+                                let iw = (ow * p.s + kw) as isize - p.pw as isize;
+                                acc += x.get_padded(b, c, ih, iw) * w[(n, c, kh, kw)];
+                            }
+                        }
+                    }
+                    y[(b, n, oh, ow)] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Loss of the input: `dX[b,c,ih,iw] = sum_{n,kh,kw : valid} dY[b,n,ho,wo] * W[n,c,kh,kw]`
+/// where `ho*S + kh - Ph == ih` and `wo*S + kw - Pw == iw`.
+///
+/// This is the direct adjoint of [`conv2d_fwd`] — no transposed-convolution
+/// lowering, so it is immune to the zero-space bookkeeping the paper is
+/// about, making it a trustworthy oracle.
+pub fn conv2d_bwd_input(dy: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
+    let (ho, wo) = (p.ho(), p.wo());
+    assert_eq!(dy.dims, [p.b, p.n, ho, wo], "loss shape mismatch");
+    assert_eq!(w.dims, [p.n, p.c, p.kh, p.kw], "kernel shape mismatch");
+    let mut dx = Tensor4::zeros([p.b, p.c, p.hi, p.wi]);
+    for b in 0..p.b {
+        for n in 0..p.n {
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let g = dy[(b, n, oh, ow)];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for c in 0..p.c {
+                        for kh in 0..p.kh {
+                            for kw in 0..p.kw {
+                                let ih = (oh * p.s + kh) as isize - p.ph as isize;
+                                let iw = (ow * p.s + kw) as isize - p.pw as isize;
+                                if ih >= 0 && iw >= 0 && (ih as usize) < p.hi && (iw as usize) < p.wi {
+                                    dx[(b, c, ih as usize, iw as usize)] += g * w[(n, c, kh, kw)];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Gradient of the kernel:
+/// `dW[n,c,kh,kw] = sum_{b,ho,wo} dY[b,n,ho,wo] * X[b,c,ho*S+kh-Ph, wo*S+kw-Pw]`.
+pub fn conv2d_bwd_weight(x: &Tensor4, dy: &Tensor4, p: &ConvParams) -> Tensor4 {
+    let (ho, wo) = (p.ho(), p.wo());
+    assert_eq!(x.dims, [p.b, p.c, p.hi, p.wi], "input shape mismatch");
+    assert_eq!(dy.dims, [p.b, p.n, ho, wo], "loss shape mismatch");
+    let mut dw = Tensor4::zeros([p.n, p.c, p.kh, p.kw]);
+    for b in 0..p.b {
+        for n in 0..p.n {
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let g = dy[(b, n, oh, ow)];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for c in 0..p.c {
+                        for kh in 0..p.kh {
+                            for kw in 0..p.kw {
+                                let ih = (oh * p.s + kh) as isize - p.ph as isize;
+                                let iw = (ow * p.s + kw) as isize - p.pw as isize;
+                                dw[(n, c, kh, kw)] += g * x.get_padded(b, c, ih, iw);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn setup(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        (x, w, dy)
+    }
+
+    #[test]
+    fn fwd_identity_kernel() {
+        // 1x1 kernel of ones with stride 1 is the identity per channel.
+        let p = ConvParams { b: 1, c: 1, hi: 4, wi: 4, n: 1, kh: 1, kw: 1, s: 1, ph: 0, pw: 0 };
+        let x = Tensor4::from_fn([1, 1, 4, 4], |_, _, h, w| (h * 4 + w) as f32);
+        let w = Tensor4::from_fn([1, 1, 1, 1], |_, _, _, _| 1.0);
+        assert_eq!(conv2d_fwd(&x, &w, &p), x);
+    }
+
+    #[test]
+    fn fwd_known_values_stride2() {
+        // 4x4 input, 2x2 ones kernel, stride 2 -> non-overlapping 2x2 sums.
+        let p = ConvParams { b: 1, c: 1, hi: 4, wi: 4, n: 1, kh: 2, kw: 2, s: 2, ph: 0, pw: 0 };
+        let x = Tensor4::from_fn([1, 1, 4, 4], |_, _, h, w| (h * 4 + w) as f32);
+        let w = Tensor4::from_fn([1, 1, 2, 2], |_, _, _, _| 1.0);
+        let y = conv2d_fwd(&x, &w, &p);
+        assert_eq!(y.dims, [1, 1, 2, 2]);
+        assert_eq!(y.data, vec![0. + 1. + 4. + 5., 2. + 3. + 6. + 7., 8. + 9. + 12. + 13., 10. + 11. + 14. + 15.]);
+    }
+
+    /// <dY, conv(X)> == <dX, X> — the adjoint test that pins bwd_input to fwd.
+    fn adjoint_identity_input(p: ConvParams, seed: u64) {
+        let (x, w, dy) = setup(&p, seed);
+        let y = conv2d_fwd(&x, &w, &p);
+        let dx = conv2d_bwd_input(&dy, &w, &p);
+        let lhs: f64 = y.data.iter().zip(&dy.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = x.data.iter().zip(&dx.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{p:?}: {lhs} vs {rhs}");
+    }
+
+    /// <dY, conv(W)> == <dW, W> — pins bwd_weight to fwd.
+    fn adjoint_identity_weight(p: ConvParams, seed: u64) {
+        let (x, w, dy) = setup(&p, seed);
+        let y = conv2d_fwd(&x, &w, &p);
+        let dw = conv2d_bwd_weight(&x, &dy, &p);
+        let lhs: f64 = y.data.iter().zip(&dy.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = w.data.iter().zip(&dw.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{p:?}: {lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn adjoint_small_stride2() {
+        let p = ConvParams { b: 2, c: 3, hi: 9, wi: 9, n: 4, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        adjoint_identity_input(p, 1);
+        adjoint_identity_weight(p, 2);
+    }
+
+    #[test]
+    fn adjoint_1x1_stride2() {
+        let p = ConvParams { b: 1, c: 4, hi: 8, wi: 8, n: 5, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 };
+        adjoint_identity_input(p, 3);
+        adjoint_identity_weight(p, 4);
+    }
+
+    #[test]
+    fn adjoint_stride3_asymmetric() {
+        let p = ConvParams { b: 1, c: 2, hi: 11, wi: 7, n: 3, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 };
+        adjoint_identity_input(p, 5);
+        adjoint_identity_weight(p, 6);
+    }
+
+    #[test]
+    fn adjoint_inexact_floor_division() {
+        // (10 - 3) / 2 + 1 = 4, (4-1)*2+3 = 9 < 10: last row/col uncovered.
+        let p = ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        assert!(p.hi_eff() < p.hi);
+        adjoint_identity_input(p, 7);
+        adjoint_identity_weight(p, 8);
+    }
+
+    #[test]
+    fn bwd_input_uncovered_rows_are_zero() {
+        let p = ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 1, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        let (_, w, dy) = setup(&p, 9);
+        let dx = conv2d_bwd_input(&dy, &w, &p);
+        for wi in 0..p.wi {
+            assert_eq!(dx[(0, 0, 9, wi)], 0.0, "uncovered input row must get zero loss");
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Backpropagation jobs: the unit of work the coordinator schedules.
+
+use crate::accel::PassMetrics;
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::{Mode, Pass};
+
+/// One backpropagation pass of one layer instance, to be executed on a
+/// simulated accelerator in a given im2col mode.
+#[derive(Clone, Copy, Debug)]
+pub struct BackpropJob {
+    /// Monotone id assigned by the scheduler.
+    pub id: usize,
+    /// Network the job belongs to (for aggregation).
+    pub network: &'static str,
+    /// Layer label.
+    pub layer: &'static str,
+    /// Convolution parameters.
+    pub params: ConvParams,
+    /// Which pass.
+    pub pass: Pass,
+    /// Which im2col algorithm.
+    pub mode: Mode,
+    /// Multiplicity (depthwise convs run `count` identical instances).
+    pub count: usize,
+}
+
+/// A finished job with its metrics (already scaled by `count`).
+#[derive(Clone, Copy, Debug)]
+pub struct JobResult {
+    pub job: BackpropJob,
+    pub metrics: PassMetrics,
+    /// Total cycles including multiplicity.
+    pub scaled_cycles: f64,
+    /// Total off-chip bytes including multiplicity.
+    pub scaled_traffic: u64,
+    /// Buffer reads toward the array including multiplicity
+    /// (A for grad, B for loss — the Fig. 8 axis).
+    pub scaled_buffer_reads: u64,
+}
+
+impl JobResult {
+    /// Scale the raw metrics of one instance by the job multiplicity.
+    pub fn from_metrics(job: BackpropJob, metrics: PassMetrics) -> Self {
+        let n = job.count as f64;
+        let reads = match job.pass {
+            Pass::Loss => metrics.buffer_b_reads,
+            Pass::Grad => metrics.buffer_a_reads,
+        };
+        Self {
+            job,
+            metrics,
+            scaled_cycles: metrics.total_cycles() * n,
+            scaled_traffic: metrics.traffic.total() * job.count as u64,
+            scaled_buffer_reads: reads * job.count as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{simulate_pass, AccelConfig};
+
+    #[test]
+    fn multiplicity_scales_linearly() {
+        let p = ConvParams::square(28, 1, 1, 3, 2, 1);
+        let m = simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &AccelConfig::default());
+        let job1 = BackpropJob {
+            id: 0, network: "t", layer: "dw", params: p,
+            pass: Pass::Grad, mode: Mode::BpIm2col, count: 1,
+        };
+        let job64 = BackpropJob { count: 64, ..job1 };
+        let r1 = JobResult::from_metrics(job1, m);
+        let r64 = JobResult::from_metrics(job64, m);
+        assert!((r64.scaled_cycles - 64.0 * r1.scaled_cycles).abs() < 1e-6);
+        assert_eq!(r64.scaled_traffic, 64 * r1.scaled_traffic);
+    }
+
+    #[test]
+    fn buffer_axis_follows_pass() {
+        let p = ConvParams::square(28, 4, 4, 3, 2, 1);
+        let cfg = AccelConfig::default();
+        let mk = |pass| BackpropJob {
+            id: 0, network: "t", layer: "l", params: p, pass, mode: Mode::Traditional, count: 1,
+        };
+        let loss = JobResult::from_metrics(mk(Pass::Loss), simulate_pass(Pass::Loss, Mode::Traditional, &p, &cfg));
+        let grad = JobResult::from_metrics(mk(Pass::Grad), simulate_pass(Pass::Grad, Mode::Traditional, &p, &cfg));
+        assert_eq!(loss.scaled_buffer_reads, loss.metrics.buffer_b_reads);
+        assert_eq!(grad.scaled_buffer_reads, grad.metrics.buffer_a_reads);
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer-3 coordinator: the training-side control plane.
+//!
+//! The paper's contribution is an accelerator-side mechanism, so L3 here
+//! is the machinery a training framework needs around it:
+//!
+//! * [`job`] — per-layer backpropagation jobs (loss / gradient passes)
+//!   and their results.
+//! * [`queue`] — a blocking work queue feeding worker threads (one per
+//!   simulated accelerator instance).
+//! * [`scheduler`] — fans a network's backward pass out over workers and
+//!   aggregates `PassMetrics` into per-network reports (Figs. 6–8).
+//! * [`trainer`] — the end-to-end driver: executes the AOT `train_step`
+//!   HLO (Pallas BP-im2col backward inside) on the PJRT runtime, owns
+//!   the parameter state, generates the synthetic data stream, and logs
+//!   the loss curve alongside simulated accelerator cycles per step.
+
+pub mod job;
+pub mod queue;
+pub mod scheduler;
+pub mod trainer;
+
+pub use job::{BackpropJob, JobResult};
+pub use scheduler::{NetworkReport, Scheduler};
+pub use trainer::{TrainConfig, TrainStats, Trainer};

@@ -1,0 +1,126 @@
+//! Blocking MPMC work queue (std-only; the offline image has no tokio).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A simple bounded-unblocking multi-producer/multi-consumer queue:
+/// producers push, workers pop, `close()` wakes everyone for shutdown.
+pub struct WorkQueue<T> {
+    inner: Arc<(Mutex<QueueState<T>>, Condvar)>,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for WorkQueue<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new((Mutex::new(QueueState { items: VecDeque::new(), closed: false }), Condvar::new())),
+        }
+    }
+
+    /// Push one item; panics if the queue is already closed (programming
+    /// error in the scheduler).
+    pub fn push(&self, item: T) {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().expect("queue poisoned");
+        assert!(!st.closed, "push after close");
+        st.items.push_back(item);
+        cv.notify_one();
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = cv.wait(st).expect("queue poisoned");
+        }
+    }
+
+    /// Close the queue: workers drain what is left, then see `None`.
+    pub fn close(&self) {
+        let (lock, cv) = &*self.inner;
+        lock.lock().expect("queue poisoned").closed = true;
+        cv.notify_all();
+    }
+
+    /// Items currently queued (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().expect("queue poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = WorkQueue::new();
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn workers_drain_everything_exactly_once() {
+        let q = WorkQueue::new();
+        for i in 0..1000 {
+            q.push(i);
+        }
+        q.close();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            handles.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<i32> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = WorkQueue::new();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(std::time::Duration::from_millis(20));
+        q.push(42);
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+}

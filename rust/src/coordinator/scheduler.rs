@@ -1,0 +1,197 @@
+//! Fan a network's backward pass out over simulated accelerators.
+
+use std::thread;
+
+use crate::accel::{simulate_pass, AccelConfig};
+use crate::coordinator::job::{BackpropJob, JobResult};
+use crate::coordinator::queue::WorkQueue;
+use crate::im2col::pipeline::{Mode, Pass};
+use crate::workloads::Network;
+
+/// Aggregated metrics of one network under one mode.
+#[derive(Clone, Debug, Default)]
+pub struct NetworkReport {
+    pub network: String,
+    /// Total cycles of all loss-calculation jobs.
+    pub loss_cycles: f64,
+    /// Total cycles of all gradient-calculation jobs.
+    pub grad_cycles: f64,
+    /// Total off-chip bytes, per pass.
+    pub loss_traffic: u64,
+    pub grad_traffic: u64,
+    /// Buffer-B reads during loss calc / buffer-A reads during grad calc
+    /// (the Fig. 8 axes).
+    pub loss_buffer_reads: u64,
+    pub grad_buffer_reads: u64,
+    /// Additional storage (zero-spaced copies / mask staging).
+    pub storage_bytes: u64,
+    /// Work-weighted average sparsity per pass (Fig. 8's second series).
+    pub loss_sparsity: f64,
+    pub grad_sparsity: f64,
+    /// Job results, in completion order.
+    pub results: Vec<JobResult>,
+}
+
+impl NetworkReport {
+    pub fn pass_cycles(&self, pass: Pass) -> f64 {
+        match pass {
+            Pass::Loss => self.loss_cycles,
+            Pass::Grad => self.grad_cycles,
+        }
+    }
+
+    pub fn pass_traffic(&self, pass: Pass) -> u64 {
+        match pass {
+            Pass::Loss => self.loss_traffic,
+            Pass::Grad => self.grad_traffic,
+        }
+    }
+
+    pub fn pass_buffer_reads(&self, pass: Pass) -> u64 {
+        match pass {
+            Pass::Loss => self.loss_buffer_reads,
+            Pass::Grad => self.grad_buffer_reads,
+        }
+    }
+
+    pub fn pass_sparsity(&self, pass: Pass) -> f64 {
+        match pass {
+            Pass::Loss => self.loss_sparsity,
+            Pass::Grad => self.grad_sparsity,
+        }
+    }
+}
+
+/// Multi-worker scheduler over simulated accelerator instances.
+pub struct Scheduler {
+    pub cfg: AccelConfig,
+    pub workers: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: AccelConfig) -> Self {
+        let workers = thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4);
+        Self { cfg, workers }
+    }
+
+    /// Enumerate the backward-pass jobs of a network under `mode`.
+    pub fn jobs_for(&self, net: &Network, mode: Mode) -> Vec<BackpropJob> {
+        let mut jobs = Vec::new();
+        for l in &net.layers {
+            for pass in Pass::ALL {
+                jobs.push(BackpropJob {
+                    id: jobs.len(),
+                    network: net.name,
+                    layer: l.name,
+                    params: l.params,
+                    pass,
+                    mode,
+                    count: l.count,
+                });
+            }
+        }
+        jobs
+    }
+
+    /// Run every job of `net` under `mode` across the worker pool and
+    /// aggregate.
+    pub fn run_network(&self, net: &Network, mode: Mode) -> NetworkReport {
+        let queue: WorkQueue<BackpropJob> = WorkQueue::new();
+        for job in self.jobs_for(net, mode) {
+            queue.push(job);
+        }
+        queue.close();
+
+        let cfg = self.cfg;
+        let handles: Vec<_> = (0..self.workers)
+            .map(|_| {
+                let q = queue.clone();
+                thread::spawn(move || {
+                    let mut results = Vec::new();
+                    while let Some(job) = q.pop() {
+                        let m = simulate_pass(job.pass, job.mode, &job.params, &cfg);
+                        results.push(JobResult::from_metrics(job, m));
+                    }
+                    results
+                })
+            })
+            .collect();
+
+        let mut report = NetworkReport { network: net.name.to_string(), ..Default::default() };
+        let mut loss_weight = 0.0;
+        let mut grad_weight = 0.0;
+        for h in handles {
+            for r in h.join().expect("worker panicked") {
+                match r.job.pass {
+                    Pass::Loss => {
+                        report.loss_cycles += r.scaled_cycles;
+                        report.loss_traffic += r.scaled_traffic;
+                        report.loss_buffer_reads += r.scaled_buffer_reads;
+                        let w = r.metrics.macs as f64 * r.job.count as f64;
+                        report.loss_sparsity += r.metrics.sparsity * w;
+                        loss_weight += w;
+                    }
+                    Pass::Grad => {
+                        report.grad_cycles += r.scaled_cycles;
+                        report.grad_traffic += r.scaled_traffic;
+                        report.grad_buffer_reads += r.scaled_buffer_reads;
+                        let w = r.metrics.macs as f64 * r.job.count as f64;
+                        report.grad_sparsity += r.metrics.sparsity * w;
+                        grad_weight += w;
+                    }
+                }
+                report.storage_bytes += r.metrics.storage_overhead_bytes * r.job.count as u64;
+                report.results.push(r);
+            }
+        }
+        if loss_weight > 0.0 {
+            report.loss_sparsity /= loss_weight;
+        }
+        if grad_weight > 0.0 {
+            report.grad_sparsity /= grad_weight;
+        }
+        report.results.sort_by_key(|r| r.job.id);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let net = workloads::resnet();
+        let mut s = Scheduler::new(AccelConfig::default());
+        let par = s.run_network(&net, Mode::BpIm2col);
+        s.workers = 1;
+        let seq = s.run_network(&net, Mode::BpIm2col);
+        assert_eq!(par.loss_cycles, seq.loss_cycles);
+        assert_eq!(par.grad_traffic, seq.grad_traffic);
+        assert_eq!(par.results.len(), seq.results.len());
+    }
+
+    #[test]
+    fn job_enumeration_covers_both_passes() {
+        let net = workloads::mobilenet();
+        let s = Scheduler::new(AccelConfig::default());
+        let jobs = s.jobs_for(&net, Mode::Traditional);
+        assert_eq!(jobs.len(), net.layers.len() * 2);
+    }
+
+    #[test]
+    fn bp_beats_traditional_on_every_network() {
+        // Fig. 6's headline, at network granularity.
+        let s = Scheduler::new(AccelConfig::default());
+        for net in workloads::all_networks() {
+            let trad = s.run_network(&net, Mode::Traditional);
+            let bp = s.run_network(&net, Mode::BpIm2col);
+            assert!(
+                bp.loss_cycles < trad.loss_cycles && bp.grad_cycles < trad.grad_cycles,
+                "{}",
+                net.name
+            );
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! End-to-end trainer: drive the AOT `train_step` HLO from Rust.
+//!
+//! This is the request path of the three-layer stack: the JAX/Pallas
+//! artifact (forward + BP-im2col backward + SGD) executes under the PJRT
+//! CPU client; Rust owns parameters, data generation, the training loop,
+//! and — in parallel — asks the accelerator model what each step costs
+//! on the simulated hardware in both im2col modes.
+
+use anyhow::{Context, Result};
+
+use crate::accel::{simulate_layer, AccelConfig};
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::Mode;
+use crate::runtime::{literal_f32, literal_i32, LoadedModel, Runtime};
+use crate::tensor::Rng;
+
+/// The model geometry baked into `python/compile/model.py`.
+pub const BATCH: usize = 8;
+pub const NUM_CLASSES: usize = 10;
+/// conv1: 1->8, 16x16 -> 8x8, stride 2.
+pub const P1: ConvParams =
+    ConvParams { b: BATCH, c: 1, hi: 16, wi: 16, n: 8, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+/// conv2: 8->16, 8x8 -> 4x4, stride 2.
+pub const P2: ConvParams =
+    ConvParams { b: BATCH, c: 8, hi: 8, wi: 8, n: 16, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+pub const DENSE_IN: usize = 256;
+
+/// Training-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub seed: u64,
+    /// Log the loss every `log_every` steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 300, seed: 0, log_every: 25 }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainStats {
+    /// Loss after every step.
+    pub losses: Vec<f32>,
+    /// Mean loss over the first and last 10 % of steps.
+    pub initial_loss: f32,
+    pub final_loss: f32,
+    /// Simulated accelerator cycles per training step (backprop of both
+    /// conv layers) under each mode.
+    pub sim_cycles_traditional: f64,
+    pub sim_cycles_bp: f64,
+    /// Wall-clock seconds of the whole loop (PJRT execution).
+    pub wall_seconds: f64,
+}
+
+/// Parameter state (flat f32 buffers matching the artifact signature).
+pub struct ParamState {
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub wd: Vec<f32>,
+    pub bd: Vec<f32>,
+}
+
+impl ParamState {
+    /// He-style init (Box–Muller over the in-crate PRNG).
+    pub fn init(seed: u64) -> Self {
+        let mut rng = Rng::new(seed.wrapping_add(0xC0FFEE));
+        let mut normal = move |rng: &mut Rng| {
+            let u1 = rng.next_f32().max(1e-7);
+            let u2 = rng.next_f32();
+            (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+        };
+        let he = |rng: &mut Rng, n: usize, fan_in: usize, normal: &mut dyn FnMut(&mut Rng) -> f32| {
+            let s = (2.0 / fan_in as f32).sqrt();
+            (0..n).map(|_| normal(rng) * s).collect::<Vec<f32>>()
+        };
+        let w1 = he(&mut rng, P1.n * P1.c * 9, P1.c * 9, &mut normal);
+        let w2 = he(&mut rng, P2.n * P2.c * 9, P2.c * 9, &mut normal);
+        let wd = he(&mut rng, DENSE_IN * NUM_CLASSES, DENSE_IN, &mut normal);
+        Self { w1, w2, wd, bd: vec![0.0; NUM_CLASSES] }
+    }
+}
+
+/// One synthetic classification batch: class k is an oriented bar
+/// (even k: horizontal at row k/2+2; odd k: vertical at column k/2+2)
+/// plus uniform noise — the same distribution `model.synthetic_batch`
+/// uses on the Python side.
+pub fn synthetic_batch(step: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37).wrapping_add(step as u64 + 1));
+    let mut x = vec![0.0f32; BATCH * 16 * 16];
+    let mut y = vec![0i32; BATCH];
+    for i in 0..BATCH {
+        let k = rng.below(NUM_CLASSES);
+        y[i] = k as i32;
+        let base = i * 256;
+        if k % 2 == 0 {
+            let row = k / 2 + 2;
+            for c in 0..16 {
+                x[base + row * 16 + c] = 1.0;
+            }
+        } else {
+            let col = k / 2 + 2;
+            for r in 0..16 {
+                x[base + r * 16 + col] = 1.0;
+            }
+        }
+        for v in &mut x[base..base + 256] {
+            *v += rng.range_f32(-0.17, 0.17); // ~N(0, 0.1) noise budget
+        }
+    }
+    (x, y)
+}
+
+/// The end-to-end trainer.
+pub struct Trainer {
+    model: LoadedModel,
+    cfg: TrainConfig,
+    accel_cfg: AccelConfig,
+}
+
+impl Trainer {
+    /// Load the `train_step` artifact.
+    pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Self> {
+        let model = rt.load("train_step").context("loading train_step artifact")?;
+        Ok(Self { model, cfg, accel_cfg: AccelConfig::default() })
+    }
+
+    /// Run the training loop, Python-free.
+    pub fn train(&self) -> Result<TrainStats> {
+        let mut params = ParamState::init(self.cfg.seed);
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let start = std::time::Instant::now();
+        for step in 0..self.cfg.steps {
+            let (x, y) = synthetic_batch(step, self.cfg.seed);
+            let inputs = [
+                literal_f32(&params.w1, &[P1.n as i64, P1.c as i64, 3, 3])?,
+                literal_f32(&params.w2, &[P2.n as i64, P2.c as i64, 3, 3])?,
+                literal_f32(&params.wd, &[DENSE_IN as i64, NUM_CLASSES as i64])?,
+                literal_f32(&params.bd, &[NUM_CLASSES as i64])?,
+                literal_f32(&x, &[BATCH as i64, 1, 16, 16])?,
+                literal_i32(&y, &[BATCH as i64])?,
+            ];
+            let out = self.model.run(&inputs)?;
+            anyhow::ensure!(out.len() == 5, "train_step must return 5 outputs, got {}", out.len());
+            let loss = out[0].get_first_element::<f32>()?;
+            params.w1 = out[1].to_vec::<f32>()?;
+            params.w2 = out[2].to_vec::<f32>()?;
+            params.wd = out[3].to_vec::<f32>()?;
+            params.bd = out[4].to_vec::<f32>()?;
+            losses.push(loss);
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                println!("step {step:4}  loss {loss:.4}");
+            }
+        }
+        let wall = start.elapsed().as_secs_f64();
+
+        // What would each step's conv backward cost on the accelerator?
+        let sim = |mode| {
+            [P1, P2]
+                .iter()
+                .map(|p| simulate_layer(mode, p, &self.accel_cfg).total_cycles())
+                .sum::<f64>()
+        };
+        let tail = (losses.len() / 10).max(1);
+        Ok(TrainStats {
+            initial_loss: losses.iter().take(tail).sum::<f32>() / tail as f32,
+            final_loss: losses.iter().rev().take(tail).sum::<f32>() / tail as f32,
+            losses,
+            sim_cycles_traditional: sim(Mode::Traditional),
+            sim_cycles_bp: sim(Mode::BpIm2col),
+            wall_seconds: wall,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_batch_deterministic() {
+        let (x1, y1) = synthetic_batch(3, 0);
+        let (x2, y2) = synthetic_batch(3, 0);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let (x3, _) = synthetic_batch(4, 0);
+        assert_ne!(x1, x3);
+    }
+
+    #[test]
+    fn labels_in_range_and_patterns_present() {
+        let (x, y) = synthetic_batch(0, 7);
+        for (i, k) in y.iter().enumerate() {
+            assert!((0..NUM_CLASSES as i32).contains(k));
+            // The bar dominates the noise.
+            let mx = x[i * 256..(i + 1) * 256].iter().cloned().fold(f32::MIN, f32::max);
+            assert!(mx > 0.7, "sample {i} max {mx}");
+        }
+    }
+
+    #[test]
+    fn param_init_sane() {
+        let p = ParamState::init(0);
+        assert_eq!(p.w1.len(), 8 * 9);
+        assert_eq!(p.w2.len(), 16 * 8 * 9);
+        assert_eq!(p.wd.len(), 2560);
+        assert!(p.bd.iter().all(|v| *v == 0.0));
+        let mean: f32 = p.wd.iter().sum::<f32>() / p.wd.len() as f32;
+        assert!(mean.abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn model_geometry_matches_python() {
+        assert_eq!(P1.ho(), 8);
+        assert_eq!(P2.ho(), 4);
+        assert_eq!(P2.n * P2.ho() * P2.wo(), DENSE_IN);
+    }
+}

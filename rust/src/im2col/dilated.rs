@@ -1,0 +1,211 @@
+//! **Algorithm 2** — BP-im2col of dilated mode.
+//!
+//! During gradient calculation the dynamic matrix *A* is the
+//! zero-inserted loss map (`[B,N,Ho'',Wo'']`) acting as the convolving
+//! kernel. It needs no im2col (each row is just one output channel's
+//! flattened map) and has only zero-insertions, detected by Eq. (4).
+
+use crate::conv::ConvParams;
+use crate::im2col::Zone;
+use crate::tensor::{Matrix, Tensor4};
+
+/// A decoded pixel of the virtual dynamic matrix A.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VirtualPixelA {
+    /// Output-channel index (the matrix row).
+    pub n: usize,
+    /// Batch index.
+    pub b: usize,
+    /// Position inside the virtual zero-inserted `Ho'' x Wo''` channel.
+    pub h: usize,
+    pub w: usize,
+}
+
+/// Lines 1–3 of Algorithm 2: decompose a flat virtual-matrix address.
+#[inline]
+pub fn decompose(addr_in: usize, p: &ConvParams) -> VirtualPixelA {
+    let (h2, w2) = (p.ho2(), p.wo2());
+    let cols = p.b * h2 * w2;
+    let (n, col) = (addr_in / cols, addr_in % cols);
+    let (temp, w) = (col / w2, col % w2);
+    let (b, h) = (temp / h2, temp % h2);
+    VirtualPixelA { n, b, h, w }
+}
+
+/// NZ detection of dilated mode, Eq. (4): a pixel is a structural zero
+/// iff the stride does not divide its position. No bounds check is
+/// needed: `h < Ho'' = (Ho-1)S+1` implies `h/S <= Ho-1`.
+#[inline]
+pub fn nz_detect(h: usize, w: usize, p: &ConvParams) -> Zone {
+    if h % p.s > 0 || w % p.s > 0 {
+        Zone::Area1
+    } else {
+        Zone::NonZero
+    }
+}
+
+/// Full Algorithm 2: map an address of the virtual matrix A to the
+/// address in the compact loss map, or `None` for zero-insertions.
+#[inline]
+pub fn map_addr(addr_in: usize, p: &ConvParams) -> Option<usize> {
+    let px = decompose(addr_in, p);
+    if nz_detect(px.h, px.w, p).is_zero() {
+        return None; // addr_out = NULL — zero-insertions
+    }
+    let (ho, wo) = (p.ho(), p.wo());
+    Some(px.b * p.n * ho * wo + px.n * ho * wo + (px.h / p.s) * wo + px.w / p.s)
+}
+
+/// Number of addresses in the virtual matrix A (`N x (B*Ho''*Wo'')`).
+pub const fn virtual_len(p: &ConvParams) -> usize {
+    p.n * p.b * p.ho2() * p.wo2()
+}
+
+/// Streaming address generator for the dilated mode: carries `(n, b, h,
+/// w)` as counters (hardware incrementers) instead of dividing per
+/// address. Equivalent to [`map_addr`] over `0..virtual_len` (tested).
+pub struct AddrGen<'a> {
+    p: &'a ConvParams,
+    n: usize,
+    b: usize,
+    h: usize,
+    w: usize,
+}
+
+impl<'a> AddrGen<'a> {
+    pub fn new(p: &'a ConvParams) -> Self {
+        Self { p, n: 0, b: 0, h: 0, w: 0 }
+    }
+}
+
+impl Iterator for AddrGen<'_> {
+    /// `Some(None)` = zero-insertion; `Some(Some(a))` = compact address.
+    type Item = Option<usize>;
+
+    #[inline]
+    fn next(&mut self) -> Option<Option<usize>> {
+        let p = self.p;
+        if self.n == p.n {
+            return None;
+        }
+        let out = if self.h % p.s == 0 && self.w % p.s == 0 {
+            let (ho, wo) = (p.ho(), p.wo());
+            Some(self.b * p.n * ho * wo + self.n * ho * wo + self.h / p.s * wo + self.w / p.s)
+        } else {
+            None
+        };
+        self.w += 1;
+        if self.w == p.wo2() {
+            self.w = 0;
+            self.h += 1;
+            if self.h == p.ho2() {
+                self.h = 0;
+                self.b += 1;
+                if self.b == p.b {
+                    self.b = 0;
+                    self.n += 1;
+                }
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Materialize the lowered matrix A through the implicit mapping (what
+/// the hardware's dynamic address-generation module + crossbar produce).
+/// Must equal [`crate::im2col::traditional::lower_grad_a`] over the
+/// explicitly dilated map.
+pub fn gather_matrix(dy: &Tensor4, p: &ConvParams) -> Matrix {
+    assert_eq!(dy.dims, [p.b, p.n, p.ho(), p.wo()]);
+    let mut m = Matrix::zeros(p.n, p.b * p.ho2() * p.wo2());
+    for (out, mapped) in m.data.iter_mut().zip(AddrGen::new(p)) {
+        if let Some(addr_out) = mapped {
+            *out = dy.data[addr_out];
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2col::{reorg, traditional};
+    use crate::tensor::Rng;
+
+    fn check_gather_equals_explicit(p: ConvParams, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let implicit = gather_matrix(&dy, &p);
+        let explicit = traditional::lower_grad_a(&reorg::dilate_loss(&dy, &p), &p);
+        assert_eq!(implicit, explicit, "Algorithm 2 mismatch for {p:?}");
+    }
+
+    #[test]
+    fn alg2_equals_explicit_stride2() {
+        check_gather_equals_explicit(
+            ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
+            30,
+        );
+    }
+
+    #[test]
+    fn alg2_equals_explicit_stride3() {
+        check_gather_equals_explicit(
+            ConvParams { b: 1, c: 1, hi: 13, wi: 10, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
+            31,
+        );
+    }
+
+    #[test]
+    fn alg2_equals_explicit_stride1_dense() {
+        check_gather_equals_explicit(
+            ConvParams { b: 1, c: 1, hi: 6, wi: 6, n: 2, kh: 3, kw: 3, s: 1, ph: 1, pw: 1 },
+            32,
+        );
+    }
+
+    #[test]
+    fn nz_detection_eq4() {
+        let p = ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 1, kh: 2, kw: 2, s: 2, ph: 0, pw: 0 };
+        assert_eq!(nz_detect(0, 0, &p), Zone::NonZero);
+        assert_eq!(nz_detect(1, 0, &p), Zone::Area1);
+        assert_eq!(nz_detect(0, 3, &p), Zone::Area1);
+        assert_eq!(nz_detect(2, 4, &p), Zone::NonZero);
+    }
+
+    #[test]
+    fn addrgen_stream_equals_map_addr() {
+        for p in [
+            ConvParams { b: 2, c: 1, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
+            ConvParams { b: 1, c: 1, hi: 10, wi: 7, n: 3, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
+        ] {
+            let stream: Vec<Option<usize>> = AddrGen::new(&p).collect();
+            assert_eq!(stream.len(), virtual_len(&p));
+            for (addr, got) in stream.into_iter().enumerate() {
+                assert_eq!(got, map_addr(addr, &p), "{p:?} addr {addr}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_is_exactly_one_minus_ho_wo_ratio() {
+        // Eq. (4) zeros: 1 - (Ho*Wo)/(Ho''*Wo'').
+        let p = ConvParams { b: 1, c: 1, hi: 17, wi: 17, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let nz = (0..virtual_len(&p)).filter(|a| map_addr(*a, &p).is_some()).count();
+        assert_eq!(nz, p.b * p.n * p.ho() * p.wo());
+    }
+
+    #[test]
+    fn every_compact_address_hit_exactly_once_per_row() {
+        let p = ConvParams { b: 1, c: 1, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let mut counts = vec![0usize; p.output_elems()];
+        for a in 0..virtual_len(&p) {
+            if let Some(o) = map_addr(a, &p) {
+                counts[o] += 1;
+            }
+        }
+        // Matrix A is a permutation-with-zeros of the compact map: each
+        // compact element appears exactly once.
+        assert!(counts.iter().all(|c| *c == 1), "counts {counts:?}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Implicit im2col of the *inference* pass — the mode the traditional
+//! accelerator was designed around ("state-of-the-art systolic
+//! array-based accelerators adopt the traditional im2col algorithm to
+//! accelerate the inference of convolutional layers").
+//!
+//! Inference lowers `Y = X * W` to `A[N x C*Kh*Kw] . B[C*Kh*Kw x B*Ho*Wo]`
+//! where B is the im2col of the *padded* input. The only structural
+//! zeros are the padding halo, detected with two comparators per axis —
+//! this is the 51-cycle stationary pipeline of Table III, shared by both
+//! modes. Implemented here so the repo covers the full training step
+//! (fwd + loss + grad) and the coordinator can report whole-step costs.
+
+use crate::conv::ConvParams;
+use crate::tensor::{Matrix, Tensor4};
+
+/// Virtual matrix B dimensions for inference: `(C*Kh*Kw) x (B*Ho*Wo)`.
+pub const fn virtual_len(p: &ConvParams) -> usize {
+    p.c * p.kh * p.kw * p.b * p.ho() * p.wo()
+}
+
+/// Map an address of the virtual inference matrix B to the compact input
+/// address, or `None` inside the padding halo.
+#[inline]
+pub fn map_addr(addr_in: usize, p: &ConvParams) -> Option<usize> {
+    let (ho, wo) = (p.ho(), p.wo());
+    let cols = p.b * ho * wo;
+    let (row, col) = (addr_in / cols, addr_in % cols);
+    let (c, rem) = (row / (p.kh * p.kw), row % (p.kh * p.kw));
+    let (kh, kw) = (rem / p.kw, rem % p.kw);
+    let (b, rem) = (col / (ho * wo), col % (ho * wo));
+    let (oh, ow) = (rem / wo, rem % wo);
+    // Input pixel = (oh*S + kh - Ph, ow*S + kw - Pw); NZ detection is the
+    // padding bounds check only.
+    let h = (oh * p.s + kh) as isize - p.ph as isize;
+    let w = (ow * p.s + kw) as isize - p.pw as isize;
+    if h < 0 || w < 0 || h as usize >= p.hi || w as usize >= p.wi {
+        return None;
+    }
+    Some(((b * p.c + c) * p.hi + h as usize) * p.wi + w as usize)
+}
+
+/// Materialize the lowered inference matrix B through the implicit
+/// mapping.
+pub fn gather_matrix(x: &Tensor4, p: &ConvParams) -> Matrix {
+    assert_eq!(x.dims, [p.b, p.c, p.hi, p.wi]);
+    let rows = p.c * p.kh * p.kw;
+    let cols = p.b * p.ho() * p.wo();
+    let mut m = Matrix::zeros(rows, cols);
+    for (addr_in, out) in m.data.iter_mut().enumerate() {
+        if let Some(a) = map_addr(addr_in, p) {
+            *out = x.data[a];
+        }
+    }
+    m
+}
+
+/// Lowered dynamic matrix A of inference: the kernel, flattened
+/// `[N x C*Kh*Kw]` (dense).
+pub fn lower_fwd_a(w: &Tensor4, p: &ConvParams) -> Matrix {
+    assert_eq!(w.dims, [p.n, p.c, p.kh, p.kw]);
+    Matrix { rows: p.n, cols: p.c * p.kh * p.kw, data: w.data.clone() }
+}
+
+/// Forward convolution via the implicit-im2col GEMM.
+pub fn fwd_calc(x: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
+    let a = lower_fwd_a(w, p);
+    let b = gather_matrix(x, p);
+    let y = a.matmul(&b); // [N x B*Ho*Wo]
+    let (ho, wo) = (p.ho(), p.wo());
+    Tensor4::from_fn([p.b, p.n, ho, wo], |bi, n, h, ww| y[(n, (bi * ho + h) * wo + ww)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv2d_fwd;
+    use crate::tensor::Rng;
+
+    fn check(p: ConvParams, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let got = fwd_calc(&x, &w, &p);
+        let want = conv2d_fwd(&x, &w, &p);
+        assert!(got.max_abs_diff(&want) < 1e-4, "{p:?}");
+    }
+
+    #[test]
+    fn fwd_gemm_matches_oracle_stride2() {
+        check(ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 70);
+    }
+
+    #[test]
+    fn fwd_gemm_matches_oracle_stride1_pad2() {
+        check(ConvParams { b: 1, c: 2, hi: 7, wi: 7, n: 2, kh: 3, kw: 3, s: 1, ph: 2, pw: 2 }, 71);
+    }
+
+    #[test]
+    fn fwd_gemm_matches_oracle_stride4_11x11() {
+        // AlexNet-like stem.
+        check(ConvParams { b: 1, c: 1, hi: 19, wi: 19, n: 2, kh: 5, kw: 5, s: 4, ph: 2, pw: 2 }, 72);
+    }
+
+    #[test]
+    fn padding_zeros_only() {
+        // With Ph = Pw = 0 the inference matrix has no structural zeros.
+        let p = ConvParams { b: 1, c: 2, hi: 8, wi: 8, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        let nz = (0..virtual_len(&p)).filter(|a| map_addr(*a, &p).is_some()).count();
+        assert_eq!(nz, virtual_len(&p));
+    }
+
+    #[test]
+    fn halo_fraction_small() {
+        // Padding sparsity is far below the backprop regime's 75 %+.
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        let nz = (0..virtual_len(&p).min(4_000_000))
+            .filter(|a| map_addr(*a, &p).is_some())
+            .count();
+        let frac = 1.0 - nz as f64 / virtual_len(&p).min(4_000_000) as f64;
+        assert!(frac < 0.10, "{frac}");
+    }
+}

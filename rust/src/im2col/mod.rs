@@ -1,0 +1,49 @@
+//! The paper's contribution, as software: lowering convolution
+//! backpropagation to GEMM with and without zero-space materialization.
+//!
+//! * [`reorg`] — the *baseline's* explicit data reorganization:
+//!   zero-insertion (dilation by the forward stride) and zero-padding of
+//!   the loss map, padding of the input, `rot180 ∘ Tr` of the kernel.
+//! * [`traditional`] — traditional explicit im2col over the reorganized
+//!   (zero-spaced) tensors.
+//! * [`transposed`] — **Algorithm 1**: BP-im2col address mapping of the
+//!   stationary matrix *B* during loss calculation (transposed-convolution
+//!   mode), with NZ detection per Eqs. (2)–(3).
+//! * [`dilated`] — **Algorithm 2**: BP-im2col address mapping of the
+//!   dynamic matrix *A* during gradient calculation (dilated-convolution
+//!   mode), with NZ detection per Eq. (4).
+//! * [`pipeline`] — end-to-end functional loss/gradient calculation via
+//!   either path, plus un-lowering of GEMM outputs back to tensors.
+//! * [`sparsity`] — analytic zero counting of the lowered matrices
+//!   (the paper's 75–93.91 % claims, Fig. 8's sparsity series).
+
+pub mod dilated;
+pub mod inference;
+pub mod pipeline;
+pub mod reorg;
+pub mod sparsity;
+pub mod traditional;
+pub mod transposed;
+
+/// Result of NZ detection for one virtual-matrix pixel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Zone {
+    /// Upper/left zero-padding (Eq. 2) — "area 0" in the paper.
+    Area0,
+    /// Zero-insertion rows/columns (Eq. 3 / Eq. 4) — "area 1".
+    Area1,
+    /// Right/bottom padding that Eq. 3 alone does not flag: the stride
+    /// divides the offset but the mapped index falls beyond `Ho`/`Wo`.
+    /// (Needed for functional correctness; see DESIGN.md §1.)
+    OutOfBounds,
+    /// A stored, potentially non-zero pixel.
+    NonZero,
+}
+
+impl Zone {
+    /// True when the pixel is a structural zero (not stored on chip).
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        !matches!(self, Zone::NonZero)
+    }
+}

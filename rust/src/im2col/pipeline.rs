@@ -1,0 +1,126 @@
+//! End-to-end functional loss / gradient calculation through either
+//! lowering path. These are the *functional* pipelines; the cycle-level
+//! behaviour of the same dataflow lives in [`crate::accel`].
+
+use crate::conv::ConvParams;
+use crate::im2col::{dilated, reorg, traditional, transposed};
+use crate::tensor::Tensor4;
+
+/// Which im2col algorithm the accelerator runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Traditional im2col: reorganize (materialize zero-spaces), then
+    /// dense explicit lowering.
+    Traditional,
+    /// BP-im2col: implicit lowering straight from the compact tensors.
+    BpIm2col,
+}
+
+impl Mode {
+    /// All modes, in baseline-first order (matches the paper's legends).
+    pub const ALL: [Mode; 2] = [Mode::Traditional, Mode::BpIm2col];
+
+    /// The paper's legend name.
+    pub fn legend(&self) -> &'static str {
+        match self {
+            Mode::Traditional => "Original",
+            Mode::BpIm2col => "Ours",
+        }
+    }
+}
+
+/// Which backpropagation pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pass {
+    /// Loss calculation (`dX`, transposed-convolution mode).
+    Loss,
+    /// Gradient calculation (`dW`, dilated-convolution mode).
+    Grad,
+}
+
+impl Pass {
+    pub const ALL: [Pass; 2] = [Pass::Loss, Pass::Grad];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pass::Loss => "loss",
+            Pass::Grad => "grad",
+        }
+    }
+}
+
+/// Loss calculation `dX = dYei * Tr(rot180 W)` via the chosen path.
+pub fn loss_calc(dy: &Tensor4, w: &Tensor4, p: &ConvParams, mode: Mode) -> Tensor4 {
+    let a = traditional::lower_loss_a(w, p);
+    let b = match mode {
+        Mode::Traditional => traditional::lower_loss_b(&reorg::dilate_pad_loss(dy, p), p),
+        Mode::BpIm2col => transposed::gather_matrix(dy, p),
+    };
+    traditional::loss_from_gemm(&a.matmul(&b), p)
+}
+
+/// Gradient calculation `Tr(dW) = Tr(Xe) * Tr(dYi)` via the chosen path.
+pub fn grad_calc(x: &Tensor4, dy: &Tensor4, p: &ConvParams, mode: Mode) -> Tensor4 {
+    let a = match mode {
+        Mode::Traditional => traditional::lower_grad_a(&reorg::dilate_loss(dy, p), p),
+        Mode::BpIm2col => dilated::gather_matrix(dy, p),
+    };
+    let b = traditional::lower_grad_b(&reorg::pad_input(x, p), p);
+    traditional::grad_from_gemm(&a.matmul(&b), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{conv2d_bwd_input, conv2d_bwd_weight};
+    use crate::tensor::Rng;
+
+    fn tensors(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        (x, w, dy)
+    }
+
+    fn check_both_modes(p: ConvParams, seed: u64) {
+        let (x, w, dy) = tensors(&p, seed);
+        let dx_oracle = conv2d_bwd_input(&dy, &w, &p);
+        let dw_oracle = conv2d_bwd_weight(&x, &dy, &p);
+        for mode in Mode::ALL {
+            let dx = loss_calc(&dy, &w, &p, mode);
+            let dw = grad_calc(&x, &dy, &p, mode);
+            assert!(dx.max_abs_diff(&dx_oracle) < 1e-4, "{mode:?} dX mismatch for {p:?}");
+            assert!(dw.max_abs_diff(&dw_oracle) < 1e-3, "{mode:?} dW mismatch for {p:?}");
+        }
+        // And the two modes agree bit-for-bit (same GEMM, same operands).
+        assert_eq!(
+            loss_calc(&dy, &w, &p, Mode::Traditional),
+            loss_calc(&dy, &w, &p, Mode::BpIm2col)
+        );
+        assert_eq!(
+            grad_calc(&x, &dy, &p, Mode::Traditional),
+            grad_calc(&x, &dy, &p, Mode::BpIm2col)
+        );
+    }
+
+    #[test]
+    fn modes_agree_stride2_pad1() {
+        check_both_modes(ConvParams { b: 2, c: 3, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 40);
+    }
+
+    #[test]
+    fn modes_agree_1x1_stride2() {
+        check_both_modes(ConvParams { b: 1, c: 4, hi: 8, wi: 8, n: 3, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 }, 41);
+    }
+
+    #[test]
+    fn modes_agree_stride3() {
+        check_both_modes(ConvParams { b: 1, c: 2, hi: 10, wi: 13, n: 2, kh: 2, kw: 3, s: 3, ph: 0, pw: 1 }, 42);
+    }
+
+    #[test]
+    fn modes_agree_inexact_division() {
+        check_both_modes(ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 1, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 }, 43);
+    }
+}

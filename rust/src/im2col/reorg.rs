@@ -1,0 +1,152 @@
+//! Explicit zero-space data reorganization — what the *baseline*
+//! accelerator must do before it can run traditional im2col on
+//! backpropagation, and exactly the work BP-im2col eliminates.
+
+use crate::conv::ConvParams;
+use crate::tensor::Tensor4;
+
+/// Zero-insert (dilate by `S`) and zero-pad (by `K-1-P`) the loss of the
+/// output, producing the `[B, N, Ho''', Wo''']` map used by **loss
+/// calculation** (`ei` subscript in the paper's Eq. 1).
+pub fn dilate_pad_loss(dy: &Tensor4, p: &ConvParams) -> Tensor4 {
+    assert_eq!(dy.dims, [p.b, p.n, p.ho(), p.wo()]);
+    let (eh, ew) = (p.kh - 1 - p.ph, p.kw - 1 - p.pw);
+    let mut out = Tensor4::zeros([p.b, p.n, p.ho3(), p.wo3()]);
+    for b in 0..p.b {
+        for n in 0..p.n {
+            for h in 0..p.ho() {
+                for w in 0..p.wo() {
+                    out[(b, n, eh + h * p.s, ew + w * p.s)] = dy[(b, n, h, w)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Zero-insert only (no padding), producing the `[B, N, Ho'', Wo'']` map
+/// used by **gradient calculation** (`i` subscript in Eq. 1).
+pub fn dilate_loss(dy: &Tensor4, p: &ConvParams) -> Tensor4 {
+    assert_eq!(dy.dims, [p.b, p.n, p.ho(), p.wo()]);
+    let mut out = Tensor4::zeros([p.b, p.n, p.ho2(), p.wo2()]);
+    for b in 0..p.b {
+        for n in 0..p.n {
+            for h in 0..p.ho() {
+                for w in 0..p.wo() {
+                    out[(b, n, h * p.s, w * p.s)] = dy[(b, n, h, w)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Zero-pad the input by `(Ph, Pw)` (`e` subscript in Eq. 1), used by the
+/// gradient calculation's stationary matrix.
+pub fn pad_input(x: &Tensor4, p: &ConvParams) -> Tensor4 {
+    assert_eq!(x.dims, [p.b, p.c, p.hi, p.wi]);
+    let mut out = Tensor4::zeros([p.b, p.c, p.hi + 2 * p.ph, p.wi + 2 * p.pw]);
+    for b in 0..p.b {
+        for c in 0..p.c {
+            for h in 0..p.hi {
+                for w in 0..p.wi {
+                    out[(b, c, h + p.ph, w + p.pw)] = x[(b, c, h, w)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `Tr(rot180 ∘ W)`: rotate each `Kh x Kw` plane by 180° and swap the
+/// channel dimensions, yielding the `[C, N, Kh, Kw]` kernel of the
+/// transposed convolution. Dense — no zero spaces — so both the baseline
+/// and BP-im2col use it as-is for the dynamic matrix of loss calculation.
+pub fn rot180_transpose(w: &Tensor4) -> Tensor4 {
+    let [n, c, kh, kw] = w.dims;
+    Tensor4::from_fn([c, n, kh, kw], |ci, ni, h, x| w[(ni, ci, kh - 1 - h, kw - 1 - x)])
+}
+
+/// Elements written by the loss-calculation reorganization pass
+/// (size of the zero-spaced map the baseline materializes off-chip).
+pub const fn loss_reorg_elems(p: &ConvParams) -> usize {
+    p.b * p.n * p.ho3() * p.wo3()
+}
+
+/// Elements written by the gradient-calculation reorganization pass.
+pub const fn grad_reorg_elems(p: &ConvParams) -> usize {
+    p.b * p.n * p.ho2() * p.wo2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn params() -> ConvParams {
+        ConvParams { b: 1, c: 2, hi: 7, wi: 7, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }
+    }
+
+    #[test]
+    fn dilate_pad_shapes_and_placement() {
+        let p = params();
+        let mut rng = Rng::new(0);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let z = dilate_pad_loss(&dy, &p);
+        assert_eq!(z.dims, [p.b, p.n, p.ho3(), p.wo3()]);
+        // Every original element lands at (K-1-P + h*S).
+        for h in 0..p.ho() {
+            for w in 0..p.wo() {
+                assert_eq!(z[(0, 1, 1 + 2 * h, 1 + 2 * w)], dy[(0, 1, h, w)]);
+            }
+        }
+        // Zero count: all but the originals.
+        let nz = dy.len() - dy.count_zeros();
+        assert_eq!(z.len() - z.count_zeros(), nz);
+    }
+
+    #[test]
+    fn dilate_only_shape() {
+        let p = params();
+        let mut rng = Rng::new(1);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let z = dilate_loss(&dy, &p);
+        assert_eq!(z.dims, [p.b, p.n, p.ho2(), p.wo2()]);
+        assert_eq!(z[(0, 2, 2, 4)], dy[(0, 2, 1, 2)]);
+        // Inserted rows are entirely zero.
+        for w in 0..p.wo2() {
+            assert_eq!(z[(0, 0, 1, w)], 0.0);
+        }
+    }
+
+    #[test]
+    fn pad_input_border_zero() {
+        let p = params();
+        let mut rng = Rng::new(2);
+        let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+        let xp = pad_input(&x, &p);
+        assert_eq!(xp.dims, [1, 2, 9, 9]);
+        assert_eq!(xp[(0, 0, 0, 0)], 0.0);
+        assert_eq!(xp[(0, 1, 1, 1)], x[(0, 1, 0, 0)]);
+        assert_eq!(xp[(0, 1, 8, 8)], 0.0);
+    }
+
+    #[test]
+    fn rot180_transpose_involution_on_values() {
+        let mut rng = Rng::new(3);
+        let w = Tensor4::random([3, 2, 3, 3], &mut rng);
+        let r = rot180_transpose(&w);
+        assert_eq!(r.dims, [2, 3, 3, 3]);
+        assert_eq!(r[(1, 2, 0, 0)], w[(2, 1, 2, 2)]);
+        // Applying it twice returns the original.
+        assert_eq!(rot180_transpose(&r), w);
+    }
+
+    #[test]
+    fn reorg_elem_counts_match_table1_symbols() {
+        // Layer 224/3/64/3/2/0 of Table II: Ho''' = 225.
+        let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+        assert_eq!(loss_reorg_elems(&p), 2 * 64 * 225 * 225);
+        assert_eq!(grad_reorg_elems(&p), 2 * 64 * 221 * 221);
+    }
+}

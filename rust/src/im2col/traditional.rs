@@ -1,0 +1,162 @@
+//! Traditional *explicit* im2col over the reorganized (zero-spaced)
+//! tensors — the baseline the paper compares against, and the functional
+//! specification the implicit mappings must reproduce bit-exactly.
+
+use crate::conv::ConvParams;
+use crate::im2col::reorg;
+use crate::tensor::{Matrix, Tensor4};
+
+/// Lowered stationary matrix **B** of the loss calculation:
+/// `B[(n,kh,kw), (b,h0,w0)] = dYz[b, n, h0+kh, w0+kw]` where `dYz` is the
+/// zero-inserted + zero-padded loss map (`[B,N,Ho''',Wo''']`).
+///
+/// Reads outside `dYz` (possible when the forward floor-division is
+/// inexact, so `h0+kh > Ho'''-1` for the last rows) are zero — those
+/// virtual pixels correspond to input rows that never contributed to the
+/// forward output.
+pub fn lower_loss_b(dyz: &Tensor4, p: &ConvParams) -> Matrix {
+    assert_eq!(dyz.dims, [p.b, p.n, p.ho3(), p.wo3()]);
+    let rows = p.n * p.kh * p.kw;
+    let cols = p.b * p.hi * p.wi;
+    Matrix::from_fn(rows, cols, |row, col| {
+        let (n, rem) = (row / (p.kh * p.kw), row % (p.kh * p.kw));
+        let (kh, kw) = (rem / p.kw, rem % p.kw);
+        let (b, rem) = (col / (p.hi * p.wi), col % (p.hi * p.wi));
+        let (h0, w0) = (rem / p.wi, rem % p.wi);
+        dyz.get_padded(b, n, (h0 + kh) as isize, (w0 + kw) as isize)
+    })
+}
+
+/// Lowered dynamic matrix **A** of the loss calculation:
+/// `A[c, (n,kh,kw)] = rot180(W)ᵀ[c, n, kh, kw]` — dense, no zero spaces.
+pub fn lower_loss_a(w: &Tensor4, p: &ConvParams) -> Matrix {
+    let wt = reorg::rot180_transpose(w);
+    assert_eq!(wt.dims, [p.c, p.n, p.kh, p.kw]);
+    Matrix { rows: p.c, cols: p.n * p.kh * p.kw, data: wt.data }
+}
+
+/// Lowered dynamic matrix **A** of the gradient calculation:
+/// `A[n, (b,h,w)] = dYd[b, n, h, w]` over the zero-inserted
+/// `[B,N,Ho'',Wo'']` loss map (no im2col — the loss acts as the kernel).
+pub fn lower_grad_a(dyd: &Tensor4, p: &ConvParams) -> Matrix {
+    let (h2, w2) = (p.ho2(), p.wo2());
+    assert_eq!(dyd.dims, [p.b, p.n, h2, w2]);
+    Matrix::from_fn(p.n, p.b * h2 * w2, |n, col| {
+        let (b, rem) = (col / (h2 * w2), col % (h2 * w2));
+        let (h, w) = (rem / w2, rem % w2);
+        dyd[(b, n, h, w)]
+    })
+}
+
+/// Lowered stationary matrix **B** of the gradient calculation:
+/// `B[(b,h,w), (c,kh,kw)] = Xpad[b, c, kh+h, kw+w]` — the im2col of the
+/// padded input with an `Ho'' x Wo''`-step window, stride 1.
+pub fn lower_grad_b(xpad: &Tensor4, p: &ConvParams) -> Matrix {
+    let (h2, w2) = (p.ho2(), p.wo2());
+    assert_eq!(xpad.dims, [p.b, p.c, p.hi + 2 * p.ph, p.wi + 2 * p.pw]);
+    Matrix::from_fn(p.b * h2 * w2, p.c * p.kh * p.kw, |row, col| {
+        let (b, rem) = (row / (h2 * w2), row % (h2 * w2));
+        let (h, w) = (rem / w2, rem % w2);
+        let (c, rem) = (col / (p.kh * p.kw), col % (p.kh * p.kw));
+        let (kh, kw) = (rem / p.kw, rem % p.kw);
+        xpad.get_padded(b, c, (kh + h) as isize, (kw + w) as isize)
+    })
+}
+
+/// Un-lower the loss-calculation GEMM output `[C x B*Hi*Wi]` to
+/// `dX [B,C,Hi,Wi]`.
+pub fn loss_from_gemm(y: &Matrix, p: &ConvParams) -> Tensor4 {
+    assert_eq!((y.rows, y.cols), (p.c, p.b * p.hi * p.wi));
+    Tensor4::from_fn([p.b, p.c, p.hi, p.wi], |b, c, h, w| y[(c, b * p.hi * p.wi + h * p.wi + w)])
+}
+
+/// Un-lower the gradient-calculation GEMM output `[N x C*Kh*Kw]` to
+/// `dW [N,C,Kh,Kw]`.
+pub fn grad_from_gemm(y: &Matrix, p: &ConvParams) -> Tensor4 {
+    assert_eq!((y.rows, y.cols), (p.n, p.c * p.kh * p.kw));
+    Tensor4 { dims: [p.n, p.c, p.kh, p.kw], data: y.data.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{conv2d_bwd_input, conv2d_bwd_weight};
+    use crate::tensor::Rng;
+
+    fn check_loss(p: ConvParams, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let dyz = reorg::dilate_pad_loss(&dy, &p);
+        let a = lower_loss_a(&w, &p);
+        let bm = lower_loss_b(&dyz, &p);
+        let dx = loss_from_gemm(&a.matmul(&bm), &p);
+        let oracle = conv2d_bwd_input(&dy, &w, &p);
+        assert!(dx.max_abs_diff(&oracle) < 1e-4, "loss GEMM != oracle for {p:?}");
+    }
+
+    fn check_grad(p: ConvParams, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let dyd = reorg::dilate_loss(&dy, &p);
+        let xp = reorg::pad_input(&x, &p);
+        let a = lower_grad_a(&dyd, &p);
+        let bm = lower_grad_b(&xp, &p);
+        let dw = grad_from_gemm(&a.matmul(&bm), &p);
+        let oracle = conv2d_bwd_weight(&x, &dy, &p);
+        assert!(dw.max_abs_diff(&oracle) < 1e-3, "grad GEMM != oracle for {p:?}");
+    }
+
+    #[test]
+    fn loss_gemm_matches_oracle_stride2_pad1() {
+        check_loss(ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 10);
+    }
+
+    #[test]
+    fn loss_gemm_matches_oracle_1x1() {
+        check_loss(ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 }, 11);
+    }
+
+    #[test]
+    fn loss_gemm_matches_oracle_inexact_division() {
+        check_loss(ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 }, 12);
+    }
+
+    #[test]
+    fn loss_gemm_matches_oracle_stride3() {
+        check_loss(ConvParams { b: 1, c: 2, hi: 11, wi: 8, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 }, 13);
+    }
+
+    #[test]
+    fn grad_gemm_matches_oracle_stride2_pad1() {
+        check_grad(ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 14);
+    }
+
+    #[test]
+    fn grad_gemm_matches_oracle_1x1() {
+        check_grad(ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 }, 15);
+    }
+
+    #[test]
+    fn grad_gemm_matches_oracle_inexact_division() {
+        check_grad(ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 }, 16);
+    }
+
+    #[test]
+    fn grad_gemm_matches_oracle_stride4() {
+        check_grad(ConvParams { b: 1, c: 1, hi: 12, wi: 12, n: 2, kh: 4, kw: 4, s: 4, ph: 0, pw: 0 }, 17);
+    }
+
+    #[test]
+    fn loss_b_sparsity_is_high_for_stride2() {
+        // §I claim: >= ~75 % zeros for stride >= 2.
+        let p = ConvParams { b: 1, c: 2, hi: 16, wi: 16, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let mut rng = Rng::new(18);
+        // Use all-nonzero dY so every zero in the matrix is structural.
+        let dy = Tensor4::from_fn([p.b, p.n, p.ho(), p.wo()], |_, _, _, _| rng.range_f32(0.5, 1.0));
+        let bm = lower_loss_b(&reorg::dilate_pad_loss(&dy, &p), &p);
+        assert!(bm.sparsity() > 0.70, "sparsity {}", bm.sparsity());
+    }
+
+}

@@ -1,0 +1,52 @@
+//! # bp-im2col
+//!
+//! Reproduction of **"BP-Im2col: Implicit Im2col Supporting AI
+//! Backpropagation on Systolic Arrays"** (Yang et al., 2022).
+//!
+//! Backpropagation of a convolutional layer lowers to two extra GEMMs —
+//! a *transposed* convolution for the loss of the input (`dX`) and a
+//! *dilated* convolution for the gradient of the kernel (`dW`). Both
+//! require zero-insertions (dilation by the forward stride) and
+//! zero-paddings of the loss map; for `stride >= 2` the lowered matrices
+//! are 75–94 % zeros. Traditional accelerators materialize those
+//! zero-spaced tensors ("reorganization") in off-chip memory and stream
+//! the zeros through the datapath. BP-im2col instead generates addresses
+//! into the *compact* tensors on the fly (Algorithms 1 and 2 of the
+//! paper), detects zero positions arithmetically, and moves only
+//! non-zero data.
+//!
+//! The crate is organised in layers:
+//!
+//! * [`tensor`], [`conv`] — dense NCHW tensor substrate and a naive
+//!   convolution fwd/bwd oracle (functional ground truth).
+//! * [`im2col`] — the paper's contribution as *software*: explicit
+//!   traditional lowering (with reorganization) and the implicit
+//!   BP-im2col address mappings (Algorithm 1: transposed mode,
+//!   Algorithm 2: dilated mode) plus NZ detection (Eqs. 2–4).
+//! * [`sim`], [`accel`] — a cycle-level model of the paper's TPU-like
+//!   accelerator: 16x16 input-stationary systolic array, double-buffered
+//!   on-chip buffers, skew FIFOs, address-generation pipelines,
+//!   compression + crossbar, DRAM, and the baseline's reorganization
+//!   engine.
+//! * [`workloads`] — the stride>=2 convolutional layers of the six CNNs
+//!   the paper evaluates.
+//! * [`coordinator`] — the training-job coordinator: queues per-layer
+//!   backprop jobs, tiles them onto the accelerator, gathers metrics.
+//! * [`runtime`] — PJRT (xla crate) wrapper that loads the AOT-lowered
+//!   JAX/Pallas HLO artifacts and runs them on the request path.
+//! * [`area`] — ASAP7-calibrated structural area model (Table IV).
+//! * [`report`] — regenerates every table and figure of the paper.
+
+pub mod accel;
+pub mod area;
+pub mod conv;
+pub mod coordinator;
+pub mod im2col;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod workloads;
+
+pub use conv::ConvParams;
+pub use tensor::Tensor4;

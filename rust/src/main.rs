@@ -1,0 +1,283 @@
+//! `repro` — CLI of the BP-im2col reproduction.
+//!
+//! Subcommands regenerate each experiment of the paper (see DESIGN.md §4)
+//! on the simulated TPU-like accelerator, run end-to-end training through
+//! the AOT HLO artifacts, or simulate individual layers.
+//!
+//! The offline image has no clap; argument parsing is hand-rolled.
+
+use std::process::ExitCode;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::accel::{metrics::speedup, simulate_pass};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::coordinator::{TrainConfig, Trainer};
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::report;
+use bp_im2col::runtime::Runtime;
+use bp_im2col::workloads;
+
+const USAGE: &str = "\
+repro — BP-Im2col reproduction (Yang et al., 2022)
+
+USAGE: repro <COMMAND> [OPTIONS]
+
+COMMANDS:
+  table2                Runtime of Table II's five layers, both passes
+  table3                Prologue latency of the address-gen modules
+  table4                Area of the address-gen modules (ASAP7 model)
+  fig6                  Backprop runtime per network (loss+grad)
+  fig7                  Off-chip bandwidth per network
+  fig8                  On-chip buffer bandwidth + sparsity per network
+  sparsity              Lowered-matrix sparsity of every workload layer
+  storage               Additional-storage overhead per network
+  sim --layer H/C/N/K/S/P   Simulate one layer in both modes
+  traincost             Full training-step cost (fwd+loss+grad) per network
+  train [--steps N]     End-to-end training via the AOT HLO artifacts
+  all                   Every table and figure, in order
+
+OPTIONS:
+  --config <file.cfg>         Platform preset (see configs/)
+  --bandwidth <elems/cycle>   Off-chip bandwidth override (default 16)
+  --csv                       Emit CSV instead of rendered tables (figs)
+  --pass loss|grad            Restrict fig6/7/8 to one pass
+  --steps N                   Training steps (train; default 300)
+  --seed N                    Training seed (train; default 0)
+";
+
+/// Minimal option scanner: `--key value` pairs + flags.
+struct Opts {
+    args: Vec<String>,
+}
+
+impl Opts {
+    fn value(&self, key: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.args.iter().any(|a| a == key)
+    }
+}
+
+fn parse_layer(spec: &str) -> Result<ConvParams, String> {
+    let parts: Vec<usize> = spec
+        .split('/')
+        .map(|s| s.parse().map_err(|_| format!("bad layer component {s:?}")))
+        .collect::<Result<_, _>>()?;
+    if parts.len() != 6 {
+        return Err(format!("layer spec must be H/C/N/K/S/P, got {spec:?}"));
+    }
+    let p = ConvParams::square(parts[0], parts[1], parts[2], parts[3], parts[4], parts[5]);
+    p.validate()?;
+    Ok(p)
+}
+
+fn accel_config(opts: &Opts) -> Result<AccelConfig, String> {
+    let mut cfg = match opts.value("--config") {
+        None => AccelConfig::default(),
+        Some(path) => {
+            bp_im2col::accel::config_file::load(path).map_err(|e| format!("{e:#}"))?
+        }
+    };
+    if let Some(v) = opts.value("--bandwidth") {
+        let bw: f64 = v.parse().map_err(|_| format!("bad --bandwidth {v:?}"))?;
+        cfg.dram.elems_per_cycle = bw;
+    }
+    Ok(cfg)
+}
+
+fn passes(opts: &Opts) -> Result<Vec<Pass>, String> {
+    match opts.value("--pass") {
+        None => Ok(vec![Pass::Loss, Pass::Grad]),
+        Some("loss") => Ok(vec![Pass::Loss]),
+        Some("grad") => Ok(vec![Pass::Grad]),
+        Some(o) => Err(format!("bad --pass {o:?} (loss|grad)")),
+    }
+}
+
+fn cmd_fig(which: u8, cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
+    for pass in passes(opts)? {
+        let panel = if pass == Pass::Loss { "a" } else { "b" };
+        let (bars, title, with_sparsity) = match which {
+            6 => (
+                report::fig6(cfg, pass),
+                format!("Fig 6{panel}: {}-calculation runtime reduction", pass.name()),
+                false,
+            ),
+            7 => (
+                report::fig7(cfg, pass),
+                format!("Fig 7{panel}: off-chip traffic reduction ({} calc)", pass.name()),
+                false,
+            ),
+            8 => (
+                report::fig8(cfg, pass),
+                format!("Fig 8{panel}: on-chip buffer bandwidth reduction ({} calc)", pass.name()),
+                true,
+            ),
+            _ => unreachable!(),
+        };
+        if opts.flag("--csv") {
+            print!("{}", report::bars_to_csv(&bars));
+        } else {
+            println!("{}", report::render_bars(&title, &bars, with_sparsity));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
+    let spec = opts.value("--layer").ok_or("sim requires --layer H/C/N/K/S/P")?;
+    let p = parse_layer(spec)?;
+    println!("layer {} (batch {}):", p.id(), p.b);
+    for pass in Pass::ALL {
+        let trad = simulate_pass(pass, Mode::Traditional, &p, cfg);
+        let bp = simulate_pass(pass, Mode::BpIm2col, &p, cfg);
+        println!(
+            "  {:<4}  BP {:>12.0} cyc | trad {:>12.0} comp + {:>12.0} reorg | speedup {:>5.2}x | sparsity {:>5.2}%",
+            pass.name(),
+            bp.total_cycles(),
+            trad.total_cycles() - trad.reorg_cycles,
+            trad.reorg_cycles,
+            speedup(&trad, &bp),
+            bp.sparsity * 100.0,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(opts: &Opts) -> Result<(), String> {
+    let steps =
+        opts.value("--steps").map(|v| v.parse().map_err(|_| "bad --steps")).transpose()?.unwrap_or(300);
+    let seed =
+        opts.value("--seed").map(|v| v.parse().map_err(|_| "bad --seed")).transpose()?.unwrap_or(0);
+    let rt = Runtime::cpu().map_err(|e| format!("{e:#}"))?;
+    if !rt.has_artifact("train_step") {
+        return Err("artifacts/train_step.hlo.txt missing — run `make artifacts` first".into());
+    }
+    println!("platform: {}", rt.platform());
+    let trainer =
+        Trainer::new(&rt, TrainConfig { steps, seed, log_every: 25 }).map_err(|e| format!("{e:#}"))?;
+    let stats = trainer.train().map_err(|e| format!("{e:#}"))?;
+    println!(
+        "\ntrained {steps} steps in {:.1}s: loss {:.4} -> {:.4}",
+        stats.wall_seconds, stats.initial_loss, stats.final_loss
+    );
+    println!(
+        "simulated accelerator cycles per step: traditional {:.0}, BP-im2col {:.0} ({:.2}x)",
+        stats.sim_cycles_traditional,
+        stats.sim_cycles_bp,
+        stats.sim_cycles_traditional / stats.sim_cycles_bp
+    );
+    Ok(())
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let opts = Opts { args: argv[1..].to_vec() };
+    let cfg = accel_config(&opts)?;
+    match cmd.as_str() {
+        "table2" => print!("{}", report::render_table2(&report::table2(&cfg))),
+        "table3" => print!("{}", report::render_table3()),
+        "table4" => print!("{}", report::render_table4()),
+        "fig6" => cmd_fig(6, &cfg, &opts)?,
+        "fig7" => cmd_fig(7, &cfg, &opts)?,
+        "fig8" => cmd_fig(8, &cfg, &opts)?,
+        "sparsity" => {
+            let layers: Vec<ConvParams> = workloads::all_networks()
+                .iter()
+                .flat_map(|n| n.layers.iter().map(|l| l.params))
+                .collect();
+            print!("{}", report::render_sparsity(&layers));
+            let ((lmin, lmax), (gmin, gmax)) = report::sparsity_ranges();
+            println!(
+                "\nloss matrix B sparsity range: {:.2}%..{:.2}% (paper: 75..93.91%)",
+                lmin * 100.0,
+                lmax * 100.0
+            );
+            println!(
+                "grad matrix A sparsity range: {:.2}%..{:.2}% (paper: 74.8..93.6%)",
+                gmin * 100.0,
+                gmax * 100.0
+            );
+        }
+        "storage" => {
+            let bars = report::storage(&cfg);
+            if opts.flag("--csv") {
+                print!("{}", report::bars_to_csv(&bars));
+            } else {
+                println!(
+                    "{}",
+                    report::render_bars("Additional storage overhead reduction", &bars, false)
+                );
+            }
+        }
+        "sim" => cmd_sim(&cfg, &opts)?,
+        "traincost" => {
+            use bp_im2col::accel::inference::training_step_cost;
+            let mut rows = Vec::new();
+            for net in workloads::all_networks() {
+                let mut sum = [0.0f64; 2]; // per mode
+                let mut fwd = 0.0f64;
+                for l in &net.layers {
+                    for (mi, mode) in Mode::ALL.iter().enumerate() {
+                        let c = training_step_cost(&l.params, *mode, &cfg);
+                        sum[mi] += (c.loss + c.grad) * l.count as f64;
+                        if mi == 0 {
+                            fwd += c.fwd * l.count as f64;
+                        }
+                    }
+                }
+                rows.push(vec![
+                    net.name.to_string(),
+                    format!("{:.0}", fwd + sum[0]),
+                    format!("{:.0}", fwd + sum[1]),
+                    format!("{:.2}x", (fwd + sum[0]) / (fwd + sum[1])),
+                    format!("{:.1}%", sum[1] / (fwd + sum[1]) * 100.0),
+                ]);
+            }
+            print!(
+                "{}",
+                report::fmt_table(
+                    &["network", "step cycles (trad)", "step cycles (BP)", "speedup", "bwd share (BP)"],
+                    &rows
+                )
+            );
+        }
+        "train" => cmd_train(&opts)?,
+        "all" => {
+            println!("== Table II ==\n{}", report::render_table2(&report::table2(&cfg)));
+            println!("== Table III ==\n{}", report::render_table3());
+            println!("== Table IV ==\n{}", report::render_table4());
+            for w in [6u8, 7, 8] {
+                cmd_fig(w, &cfg, &opts)?;
+            }
+            let bars = report::storage(&cfg);
+            println!(
+                "{}",
+                report::render_bars("Additional storage overhead reduction", &bars, false)
+            );
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => return Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT runtime: load the AOT-lowered HLO artifacts and execute them on
+//! the request path, Python-free.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text*
+//! is the interchange format (jax >= 0.5 emits 64-bit instruction ids in
+//! serialized protos, which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). See `python/compile/aot.py` and /opt/xla-example.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor4;
+
+/// Directory the Makefile's `artifacts` target populates.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// A PJRT client plus the artifact directory it loads from.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+/// One compiled HLO module, ready to execute.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (for error messages / metrics).
+    pub name: String,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the default artifacts directory.
+    pub fn cpu() -> Result<Self> {
+        Self::with_artifacts_dir(DEFAULT_ARTIFACTS_DIR)
+    }
+
+    /// CPU PJRT client over a specific artifacts directory.
+    pub fn with_artifacts_dir(dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, artifacts_dir: dir.into() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<artifacts_dir>/<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<LoadedModel> {
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        self.load_path(name, &path)
+    }
+
+    /// Load and compile an explicit HLO text file.
+    pub fn load_path(&self, name: &str, path: &Path) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(LoadedModel { exe, name: name.to_string() })
+    }
+
+    /// Whether the artifact exists (lets callers skip runtime-dependent
+    /// paths when `make artifacts` has not run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}
+
+impl LoadedModel {
+    /// Execute with the given inputs; the jax lowering uses
+    /// `return_tuple=True`, so the single output is decomposed into its
+    /// tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Convert an NCHW tensor to an f32 literal of the same shape.
+pub fn literal_from_tensor4(t: &Tensor4) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// Convert an f32 literal back to an NCHW tensor with the given dims.
+pub fn literal_to_tensor4(lit: &xla::Literal, dims: [usize; 4]) -> Result<Tensor4> {
+    let data = lit.to_vec::<f32>()?;
+    anyhow::ensure!(
+        data.len() == dims.iter().product::<usize>(),
+        "literal has {} elements, dims {:?} need {}",
+        data.len(),
+        dims,
+        dims.iter().product::<usize>()
+    );
+    Ok(Tensor4 { dims, data })
+}
+
+/// Build an f32 literal from a flat slice and shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal from a flat slice and shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}

@@ -1,0 +1,87 @@
+//! Double-buffered on-chip SRAMs (buffer A and buffer B of Fig. 5).
+//!
+//! "Both buffer A and buffer B are double-buffered": while one half
+//! feeds the array, the other is filled from DRAM, so fills overlap
+//! compute as long as the fill finishes within the compute window.
+//! The read counters drive Fig. 8 (on-chip bandwidth occupation).
+
+/// One double-buffered on-chip buffer with access accounting.
+#[derive(Clone, Debug)]
+pub struct OnChipBuffer {
+    /// Human-readable name ("buffer A" / "buffer B").
+    pub name: &'static str,
+    /// Capacity of *one* half in elements.
+    pub half_capacity: usize,
+    /// Read port width in elements/cycle (toward the array).
+    pub read_width: usize,
+    /// Total elements read toward the array.
+    pub reads: u64,
+    /// Total elements written from DRAM.
+    pub writes: u64,
+    /// Fill cycles that could not be hidden behind compute.
+    pub stall_cycles: f64,
+}
+
+impl OnChipBuffer {
+    pub fn new(name: &'static str, half_capacity: usize, read_width: usize) -> Self {
+        Self { name, half_capacity, read_width, reads: 0, writes: 0, stall_cycles: 0.0 }
+    }
+
+    /// Record `elems` read toward the array; returns the cycles the read
+    /// port needs (ceil(elems / width)).
+    pub fn read(&mut self, elems: usize) -> f64 {
+        self.reads += elems as u64;
+        (elems as f64 / self.read_width as f64).ceil()
+    }
+
+    /// Record a fill of `elems` from DRAM that takes `fill_cycles`; with
+    /// double buffering the fill hides behind `compute_cycles` of array
+    /// work, any excess is a stall.
+    pub fn fill_overlapped(&mut self, elems: usize, fill_cycles: f64, compute_cycles: f64) {
+        self.writes += elems as u64;
+        if fill_cycles > compute_cycles {
+            self.stall_cycles += fill_cycles - compute_cycles;
+        }
+    }
+
+    /// Whether one half can hold a working set of `elems`.
+    pub fn fits(&self, elems: usize) -> bool {
+        elems <= self.half_capacity
+    }
+
+    /// Bytes read toward the array (FP32).
+    pub fn read_bytes(&self) -> u64 {
+        self.reads * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_counts_and_port_cycles() {
+        let mut b = OnChipBuffer::new("buffer B", 1 << 16, 16);
+        assert_eq!(b.read(256), 16.0);
+        assert_eq!(b.read(17), 2.0);
+        assert_eq!(b.reads, 273);
+        assert_eq!(b.read_bytes(), 273 * 4);
+    }
+
+    #[test]
+    fn overlapped_fill_hides_behind_compute() {
+        let mut b = OnChipBuffer::new("buffer A", 1 << 16, 16);
+        b.fill_overlapped(1024, 100.0, 200.0);
+        assert_eq!(b.stall_cycles, 0.0);
+        b.fill_overlapped(1024, 300.0, 200.0);
+        assert_eq!(b.stall_cycles, 100.0);
+        assert_eq!(b.writes, 2048);
+    }
+
+    #[test]
+    fn capacity_check() {
+        let b = OnChipBuffer::new("buffer B", 4096, 16);
+        assert!(b.fits(4096));
+        assert!(!b.fits(4097));
+    }
+}

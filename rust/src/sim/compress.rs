@@ -1,0 +1,127 @@
+//! Compression of a 16-lane address window into base address + mask.
+//!
+//! After NZ detection, a window of 16 consecutive virtual addresses maps
+//! to k <= 16 non-zero compact addresses. The hardware transmits only the
+//! first non-zero compact address plus a 16-bit mask; the data that comes
+//! back is the contiguous run starting there (dilated mode), or the
+//! individually mapped elements (transposed mode, one bank per channel).
+//! The mask is what the crossbar uses to re-inflate the dense layout.
+
+/// A compressed window of `T` (16) virtual addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressedWindow {
+    /// Compact address of the first non-zero lane, if any.
+    pub base: Option<usize>,
+    /// Bit `i` set iff lane `i` is non-zero.
+    pub mask: u16,
+    /// Number of contiguous compact runs the non-zero lanes map to
+    /// (1 for a fully contiguous fetch; each extra run costs an extra
+    /// buffer/DRAM request).
+    pub runs: usize,
+}
+
+impl CompressedWindow {
+    /// Number of non-zero lanes.
+    pub fn count(&self) -> usize {
+        self.mask.count_ones() as usize
+    }
+
+    /// Side-band metadata bytes transmitted instead of the zeros:
+    /// 4-byte base address (when any lane is live) + 2-byte mask.
+    pub fn meta_bytes(&self) -> u64 {
+        2 + if self.base.is_some() { 4 } else { 0 }
+    }
+}
+
+/// Compress one window of mapped addresses (`None` = structural zero).
+pub fn compress_window(addrs: &[Option<usize>]) -> CompressedWindow {
+    assert!(addrs.len() <= 16, "window wider than the array");
+    let mut mask = 0u16;
+    let mut base = None;
+    let mut runs = 0usize;
+    let mut prev: Option<usize> = None;
+    for (i, a) in addrs.iter().enumerate() {
+        if let Some(addr) = a {
+            mask |= 1 << i;
+            if base.is_none() {
+                base = Some(*addr);
+            }
+            match prev {
+                Some(p) if *addr == p + 1 => {}
+                _ => runs += 1,
+            }
+            prev = Some(*addr);
+        } else {
+            // A gap in lanes does not by itself break the compact run —
+            // the skipped lanes are zeros that are *not stored*; only a
+            // non-consecutive compact address starts a new run.
+        }
+    }
+    CompressedWindow { base, mask, runs }
+}
+
+/// Compress a whole block row (e.g. 16 windows for a 256-wide fetch).
+pub fn compress_rows(addr_rows: &[Vec<Option<usize>>]) -> Vec<CompressedWindow> {
+    addr_rows.iter().map(|r| compress_window(r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_zero_window() {
+        let w = compress_window(&[None; 16]);
+        assert_eq!(w.base, None);
+        assert_eq!(w.mask, 0);
+        assert_eq!(w.runs, 0);
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.meta_bytes(), 2);
+    }
+
+    #[test]
+    fn dense_window_single_run() {
+        let addrs: Vec<Option<usize>> = (100..116).map(Some).collect();
+        let w = compress_window(&addrs);
+        assert_eq!(w.base, Some(100));
+        assert_eq!(w.mask, u16::MAX);
+        assert_eq!(w.runs, 1);
+        assert_eq!(w.count(), 16);
+    }
+
+    #[test]
+    fn dilated_window_stays_one_run() {
+        // Stride-2 dilation: lanes 0,2,4,... map to consecutive compact
+        // addresses 50,51,52,... — one contiguous fetch.
+        let mut addrs = vec![None; 16];
+        for i in 0..8 {
+            addrs[2 * i] = Some(50 + i);
+        }
+        let w = compress_window(&addrs);
+        assert_eq!(w.base, Some(50));
+        assert_eq!(w.runs, 1);
+        assert_eq!(w.count(), 8);
+        assert_eq!(w.mask, 0b0101_0101_0101_0101);
+    }
+
+    #[test]
+    fn row_boundary_splits_runs() {
+        // Window crossing a feature-map row: compact addresses jump.
+        let mut addrs = vec![None; 16];
+        addrs[0] = Some(97);
+        addrs[2] = Some(98);
+        addrs[4] = Some(120); // new row in the compact map
+        addrs[6] = Some(121);
+        let w = compress_window(&addrs);
+        assert_eq!(w.runs, 2);
+        assert_eq!(w.base, Some(97));
+    }
+
+    #[test]
+    fn meta_bytes_budget() {
+        // 6 bytes per live window — the Fig. 7 "BP transmits addresses
+        // and masks instead of zeros" overhead.
+        let addrs: Vec<Option<usize>> = (0..16).map(Some).collect();
+        assert_eq!(compress_window(&addrs).meta_bytes(), 6);
+    }
+}

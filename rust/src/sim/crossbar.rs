@@ -1,0 +1,91 @@
+//! Data-recovery crossbar.
+//!
+//! "Then we recover the data arrangement through a crossbar according to
+//! the original mask": buffer A returns only the non-zero elements
+//! (a contiguous run per compressed request); the crossbar routes element
+//! `j` of the compacted run to the lane of the `j`-th set mask bit, and
+//! drives zero onto the masked-out lanes — re-inflating the virtual
+//! (zero-spaced) layout right at the PE boundary, where zeros cost
+//! nothing extra.
+
+/// Expand `compact` data to `t` lanes according to `mask` (bit `i` set ->
+/// lane `i` carries the next compact element; clear -> lane is zero).
+pub fn expand(compact: &[f32], mask: u16, t: usize) -> Vec<f32> {
+    assert!(t <= 16);
+    assert_eq!(
+        compact.len(),
+        mask.count_ones() as usize,
+        "compact run length must equal mask population"
+    );
+    let mut out = vec![0.0; t];
+    let mut j = 0;
+    for (i, o) in out.iter_mut().enumerate() {
+        if mask & (1 << i) != 0 {
+            *o = compact[j];
+            j += 1;
+        }
+    }
+    out
+}
+
+/// The inverse routing (used by tests and by the compression side):
+/// gather the lanes selected by `mask`.
+pub fn contract(lanes: &[f32], mask: u16) -> Vec<f32> {
+    lanes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| mask & (1 << i) != 0)
+        .map(|(_, v)| *v)
+        .collect()
+}
+
+/// Structural size of a `t x t` crossbar in 2-input mux equivalents —
+/// feeds the area model. A full crossbar needs `t * (t-1)` mux2s per
+/// lane-bit; the paper notes theirs is pruned ("the crossbar still
+/// occupies a very large on-chip area after being pruned") — we model the
+/// pruned variant as only needing to shift right by 0..t-1 (a barrel
+/// shifter): `t * log2(t)` mux2s per bit.
+pub fn pruned_crossbar_mux2_count(t: usize, bits: usize) -> usize {
+    let log2t = usize::BITS as usize - 1 - t.leading_zeros() as usize;
+    t * log2t * bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expand_dense_mask_is_identity() {
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        assert_eq!(expand(&data, u16::MAX, 16), data);
+    }
+
+    #[test]
+    fn expand_sparse_mask_places_zeros() {
+        let out = expand(&[1.0, 2.0], 0b0000_0000_0001_0100, 16);
+        assert_eq!(out[2], 1.0);
+        assert_eq!(out[4], 2.0);
+        assert_eq!(out.iter().filter(|v| **v == 0.0).count(), 14);
+    }
+
+    #[test]
+    fn contract_is_left_inverse_of_expand() {
+        let mask = 0b1010_1100_0101_0011u16;
+        let compact: Vec<f32> = (1..=mask.count_ones()).map(|i| i as f32).collect();
+        let lanes = expand(&compact, mask, 16);
+        assert_eq!(contract(&lanes, mask), compact);
+    }
+
+    #[test]
+    #[should_panic(expected = "compact run length")]
+    fn expand_rejects_wrong_length() {
+        expand(&[1.0], 0b11, 16);
+    }
+
+    #[test]
+    fn pruned_crossbar_smaller_than_full() {
+        let full = 16 * 15 * 32;
+        assert!(pruned_crossbar_mux2_count(16, 32) < full);
+        assert_eq!(pruned_crossbar_mux2_count(16, 32), 16 * 4 * 32);
+    }
+}

@@ -1,0 +1,121 @@
+//! Off-chip memory model.
+//!
+//! The paper reports off-chip *bandwidth occupation* (Fig. 7) — total
+//! bytes moved per pass — and its runtime model charges DRAM cycles for
+//! the baseline's reorganization pass. We model a single-channel DRAM
+//! with a sustained element rate and a per-burst (row) setup cost;
+//! constants documented here are the knobs EXPERIMENTS.md reports
+//! sensitivity on (`examples/bandwidth_explorer.rs`).
+
+/// DRAM timing + traffic model. Element = one FP32 word (4 bytes).
+#[derive(Clone, Copy, Debug)]
+pub struct DramModel {
+    /// Sustained transfer rate in elements/cycle (default 4 = 16 B/cycle,
+    /// a deliberately modest LPDDR-class budget matched to a 16x16 array;
+    /// the paper stresses "processors with mismatched bandwidth and
+    /// computing power").
+    pub elems_per_cycle: f64,
+    /// Per-burst setup cost in cycles (row activation / command overhead).
+    pub burst_overhead: f64,
+    /// Elements per burst (contiguous run length assumed per request).
+    pub burst_len: usize,
+}
+
+impl Default for DramModel {
+    fn default() -> Self {
+        Self { elems_per_cycle: 4.0, burst_overhead: 8.0, burst_len: 64 }
+    }
+}
+
+impl DramModel {
+    /// Cycles to move `elems` contiguous elements.
+    pub fn transfer_cycles(&self, elems: usize) -> f64 {
+        if elems == 0 {
+            return 0.0;
+        }
+        let bursts = elems.div_ceil(self.burst_len) as f64;
+        elems as f64 / self.elems_per_cycle + bursts * self.burst_overhead
+    }
+
+    /// Cycles to move `elems` split over `runs` contiguous runs (scattered
+    /// traffic pays the burst setup per run).
+    pub fn scattered_transfer_cycles(&self, elems: usize, runs: usize) -> f64 {
+        if elems == 0 {
+            return 0.0;
+        }
+        let runs = runs.max(1) as f64;
+        elems as f64 / self.elems_per_cycle + runs * self.burst_overhead
+    }
+}
+
+/// Byte-level traffic accumulator for one pass (drives Fig. 7).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DramTraffic {
+    /// Data fetched for the dynamic matrix A (into buffer A).
+    pub a_bytes: u64,
+    /// Data fetched for the stationary matrix B (into buffer B).
+    pub b_bytes: u64,
+    /// Output (result matrix) written back.
+    pub out_bytes: u64,
+    /// Reorganization traffic: source reads + zero-spaced writes
+    /// (baseline only; zero for BP-im2col).
+    pub reorg_bytes: u64,
+    /// Side-band metadata BP-im2col transmits instead of zeros:
+    /// compressed base addresses + masks.
+    pub meta_bytes: u64,
+}
+
+impl DramTraffic {
+    /// Total off-chip bytes of the pass.
+    pub fn total(&self) -> u64 {
+        self.a_bytes + self.b_bytes + self.out_bytes + self.reorg_bytes + self.meta_bytes
+    }
+
+    /// Component-wise sum.
+    pub fn add(&self, o: &DramTraffic) -> DramTraffic {
+        DramTraffic {
+            a_bytes: self.a_bytes + o.a_bytes,
+            b_bytes: self.b_bytes + o.b_bytes,
+            out_bytes: self.out_bytes + o.out_bytes,
+            reorg_bytes: self.reorg_bytes + o.reorg_bytes,
+            meta_bytes: self.meta_bytes + o.meta_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_transfer_is_free() {
+        let d = DramModel::default();
+        assert_eq!(d.transfer_cycles(0), 0.0);
+    }
+
+    #[test]
+    fn contiguous_transfer_rate() {
+        let d = DramModel { elems_per_cycle: 4.0, burst_overhead: 0.0, burst_len: 64 };
+        assert_eq!(d.transfer_cycles(1024), 256.0);
+    }
+
+    #[test]
+    fn burst_overhead_charged_per_burst() {
+        let d = DramModel { elems_per_cycle: 4.0, burst_overhead: 8.0, burst_len: 64 };
+        // 128 elems = 2 bursts: 32 + 16.
+        assert_eq!(d.transfer_cycles(128), 48.0);
+    }
+
+    #[test]
+    fn scattered_costs_more_than_contiguous() {
+        let d = DramModel::default();
+        assert!(d.scattered_transfer_cycles(1024, 256) > d.transfer_cycles(1024));
+    }
+
+    #[test]
+    fn traffic_total_sums_components() {
+        let t = DramTraffic { a_bytes: 1, b_bytes: 2, out_bytes: 3, reorg_bytes: 4, meta_bytes: 5 };
+        assert_eq!(t.total(), 15);
+        assert_eq!(t.add(&t).total(), 30);
+    }
+}

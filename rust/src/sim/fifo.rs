@@ -1,0 +1,119 @@
+//! The 16 skew FIFOs between buffer A and the systolic array.
+//!
+//! "We design 16 FIFOs with different depths between buffer A and the
+//! systolic array to skew the data layout" — row `i` of a dynamic-matrix
+//! block must enter the array `i` cycles after row 0 so that partial sums
+//! meet the right operands. FIFO `i` therefore has depth `i` (row 0
+//! bypasses).
+
+/// One skew FIFO of fixed depth, modelled as a shift register.
+#[derive(Clone, Debug)]
+pub struct SkewFifo {
+    depth: usize,
+    slots: Vec<Option<f32>>,
+}
+
+impl SkewFifo {
+    /// FIFO of the given depth. Depth 0 is a wire.
+    pub fn new(depth: usize) -> Self {
+        Self { depth, slots: vec![None; depth] }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Advance one cycle: push `input`, return the element that falls out.
+    pub fn tick(&mut self, input: Option<f32>) -> Option<f32> {
+        if self.depth == 0 {
+            return input;
+        }
+        let out = self.slots.pop().expect("non-empty by construction");
+        self.slots.insert(0, input);
+        out
+    }
+
+    /// Drain state (for end-of-block flush).
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+}
+
+/// The bank of `t` skew FIFOs (depth `i` for lane `i`).
+#[derive(Clone, Debug)]
+pub struct SkewBank {
+    fifos: Vec<SkewFifo>,
+}
+
+impl SkewBank {
+    pub fn new(t: usize) -> Self {
+        Self { fifos: (0..t).map(SkewFifo::new).collect() }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.fifos.len()
+    }
+
+    /// Advance one cycle with one input per lane; returns skewed outputs.
+    pub fn tick(&mut self, inputs: &[Option<f32>]) -> Vec<Option<f32>> {
+        assert_eq!(inputs.len(), self.fifos.len());
+        self.fifos.iter_mut().zip(inputs).map(|(f, i)| f.tick(*i)).collect()
+    }
+
+    /// Cycles needed after the last input until all lanes have drained —
+    /// the array's skew-fill/drain component: `t - 1`.
+    pub fn drain_latency(&self) -> usize {
+        self.fifos.len().saturating_sub(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifos.iter().all(SkewFifo::is_empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth0_is_a_wire() {
+        let mut f = SkewFifo::new(0);
+        assert_eq!(f.tick(Some(1.0)), Some(1.0));
+        assert_eq!(f.tick(None), None);
+    }
+
+    #[test]
+    fn depth2_delays_by_two() {
+        let mut f = SkewFifo::new(2);
+        assert_eq!(f.tick(Some(1.0)), None);
+        assert_eq!(f.tick(Some(2.0)), None);
+        assert_eq!(f.tick(Some(3.0)), Some(1.0));
+        assert_eq!(f.tick(None), Some(2.0));
+        assert_eq!(f.tick(None), Some(3.0));
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn bank_produces_diagonal_wavefront() {
+        // Feed the same value into all 4 lanes at cycle 0; lane i sees it
+        // at cycle i.
+        let mut bank = SkewBank::new(4);
+        let mut outs = Vec::new();
+        outs.push(bank.tick(&[Some(7.0), Some(7.0), Some(7.0), Some(7.0)]));
+        for _ in 0..4 {
+            outs.push(bank.tick(&[None, None, None, None]));
+        }
+        for (lane, _) in (0..4).enumerate() {
+            for (cycle, row) in outs.iter().enumerate() {
+                let expect = if cycle == lane { Some(7.0) } else { None };
+                assert_eq!(row[lane], expect, "lane {lane} cycle {cycle}");
+            }
+        }
+    }
+
+    #[test]
+    fn drain_latency_is_t_minus_1() {
+        assert_eq!(SkewBank::new(16).drain_latency(), 15);
+        assert_eq!(SkewBank::new(1).drain_latency(), 0);
+    }
+}

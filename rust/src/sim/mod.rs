@@ -1,0 +1,30 @@
+//! Cycle-level component models of the paper's TPU-like accelerator.
+//!
+//! The paper evaluates an RTL implementation; per the substitution rule
+//! (DESIGN.md §Substitutions) we rebuild it as a component-level cycle
+//! model. Every module here corresponds to a block of the paper's Fig. 5:
+//!
+//! * [`systolic`] — the 16x16 input-stationary PE array (both a
+//!   cycle-stepped functional model and the analytic timing used on
+//!   full-size layers).
+//! * [`fifo`] — the 16 skew FIFOs between buffer A and the array.
+//! * [`buffer`] — double-buffered on-chip SRAMs A and B with read/write
+//!   counters (Fig. 8's bandwidth numbers).
+//! * [`dram`] — the off-chip memory model (Fig. 7's bandwidth numbers).
+//! * [`addrgen`] — the address-generation pipelines, including the
+//!   fixed-point dividers whose latency produces Table III's prologue.
+//! * [`compress`] — NZ detection windows: compressed base address + mask.
+//! * [`crossbar`] — recovery of the dense data layout from compressed
+//!   data, per the original mask.
+//! * [`reorg_engine`] — the *baseline's* zero-space data reorganization
+//!   pass (what BP-im2col eliminates).
+
+pub mod addrgen;
+pub mod buffer;
+pub mod compress;
+pub mod crossbar;
+pub mod dram;
+pub mod fifo;
+pub mod machine;
+pub mod reorg_engine;
+pub mod systolic;

@@ -1,0 +1,104 @@
+//! The baseline's zero-space data reorganization pass.
+//!
+//! "The core idea of solving zero-space ... is to pre-process them to be
+//! zero-inserted and zero-padded in advance. However, the data
+//! reorganization requires large amounts of memory access and interferes
+//! with the continuity of training."
+//!
+//! We model the reorganization as a DMA engine that walks the
+//! *destination* zero-spaced tensor: for every destination element it
+//! computes the source mapping (the same div/mod chain BP-im2col does in
+//! parallel hardware, here serialized in the DMA descriptor walker) and
+//! issues the write. The per-element constant is
+//! [`crate::accel::AccelConfig::reorg_cycles_per_elem`] (default 4);
+//! DESIGN.md §5 documents how this calibrates against Table II's
+//! "Reorganization" column (our per-layer cycles land within ~0.5–2x of
+//! the paper's; `examples/bandwidth_explorer.rs` sweeps the constant).
+
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::Pass;
+use crate::im2col::reorg;
+
+/// Cost of one reorganization pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReorgCost {
+    /// Cycles the pass occupies before compute can start.
+    pub cycles: f64,
+    /// Source elements read from DRAM.
+    pub src_elems: usize,
+    /// Destination elements written to DRAM (zero-spaced tensor).
+    pub dst_elems: usize,
+}
+
+impl ReorgCost {
+    /// Off-chip bytes moved by the pass (FP32 reads + writes).
+    pub fn dram_bytes(&self) -> u64 {
+        ((self.src_elems + self.dst_elems) * 4) as u64
+    }
+
+    /// Extra DRAM *storage* the zero-spaced copy occupies (the abstract's
+    /// ">= 74.78 % additional storage overhead" comparison).
+    pub fn storage_bytes(&self) -> u64 {
+        (self.dst_elems * 4) as u64
+    }
+}
+
+/// Reorganization required before `pass` can run with traditional
+/// im2col: zero-insert + zero-pad `dY` for loss calculation
+/// (`[B,N,Ho''',Wo''']`), zero-insert only for gradient calculation
+/// (`[B,N,Ho'',Wo'']`).
+pub fn reorg_cost(pass: Pass, p: &ConvParams, cycles_per_elem: f64) -> ReorgCost {
+    let dst_elems = match pass {
+        Pass::Loss => reorg::loss_reorg_elems(p),
+        Pass::Grad => reorg::grad_reorg_elems(p),
+    };
+    let src_elems = p.output_elems();
+    ReorgCost { cycles: dst_elems as f64 * cycles_per_elem, src_elems, dst_elems }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_reorg_layer1_shape() {
+        // Table II layer 224/3/64/3/2/0: destination 2*64*225*225.
+        let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+        let c = reorg_cost(Pass::Loss, &p, 4.0);
+        assert_eq!(c.dst_elems, 2 * 64 * 225 * 225);
+        assert_eq!(c.src_elems, 2 * 64 * 111 * 111);
+        assert_eq!(c.cycles, (2 * 64 * 225 * 225) as f64 * 4.0);
+    }
+
+    #[test]
+    fn grad_reorg_smaller_than_loss() {
+        // No padding for the dilated mode, so grad dst <= loss dst.
+        for p in [
+            ConvParams::square(224, 3, 64, 3, 2, 0),
+            ConvParams::square(112, 64, 64, 3, 2, 1),
+            ConvParams::square(28, 244, 244, 3, 2, 1),
+        ] {
+            let l = reorg_cost(Pass::Loss, &p, 4.0);
+            let g = reorg_cost(Pass::Grad, &p, 4.0);
+            assert!(g.dst_elems <= l.dst_elems, "{}", p.id());
+        }
+    }
+
+    #[test]
+    fn k1_p0_loss_equals_grad() {
+        // For 1x1 kernels without padding Ho''' == Ho'' — the paper lists
+        // identical reorganization cycles for both passes.
+        let p = ConvParams::square(56, 256, 512, 1, 2, 0);
+        assert_eq!(
+            reorg_cost(Pass::Loss, &p, 4.0).dst_elems,
+            reorg_cost(Pass::Grad, &p, 4.0).dst_elems
+        );
+    }
+
+    #[test]
+    fn storage_is_destination_copy() {
+        let p = ConvParams::square(14, 1024, 2048, 1, 2, 0);
+        let c = reorg_cost(Pass::Grad, &p, 4.0);
+        assert_eq!(c.storage_bytes(), (2 * 2048 * 13 * 13 * 4) as u64);
+    }
+}

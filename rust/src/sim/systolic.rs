@@ -1,0 +1,246 @@
+//! The 16x16 input-stationary systolic array.
+//!
+//! Two models of the same hardware:
+//!
+//! * [`SystolicArray`] — a register-accurate, cycle-stepped simulation
+//!   used by the functional accelerator path and the tests. The
+//!   stationary operand (a `T x T` block of matrix B) is preloaded into
+//!   the PEs; dynamic rows of matrix A enter skewed from the west and
+//!   flow east; partial sums flow south and emerge at the bottom edge.
+//! * [`block_cycles`] — the analytic per-block timing the full-size
+//!   layer simulations use. Calibrated against Table II (DESIGN.md §5);
+//!   consistency between the two models is asserted by tests.
+
+use crate::tensor::Matrix;
+
+/// One processing element: holds the stationary operand and the two
+/// pipeline registers (east-flowing `a`, south-flowing partial sum).
+#[derive(Clone, Copy, Debug, Default)]
+struct Pe {
+    /// Stationary operand (element of matrix B).
+    b: f32,
+    /// Register holding the dynamic operand moving east.
+    a_reg: f32,
+    /// Valid bit for `a_reg`.
+    a_valid: bool,
+    /// Register holding the partial sum moving south.
+    psum_reg: f32,
+    psum_valid: bool,
+}
+
+/// Cycle-stepped `T x T` input-stationary systolic array.
+#[derive(Clone, Debug)]
+pub struct SystolicArray {
+    t: usize,
+    pes: Vec<Pe>,
+    /// Total cycles ticked since construction.
+    pub cycles: u64,
+    /// Total MAC operations performed (utilization accounting).
+    pub macs: u64,
+}
+
+impl SystolicArray {
+    /// Array of dimension `t x t` (the paper's accelerator uses 16).
+    pub fn new(t: usize) -> Self {
+        Self { t, pes: vec![Pe::default(); t * t], cycles: 0, macs: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.t
+    }
+
+    #[inline]
+    fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.t + c
+    }
+
+    /// Preload a `t x t` stationary block (rows = K dimension, cols = J
+    /// dimension). In hardware this takes `t` cycles through the column
+    /// wiring, overlapped with the previous block's drain by double
+    /// buffering; the cycle cost is accounted by the analytic model.
+    pub fn load_stationary(&mut self, block: &Matrix) {
+        assert_eq!((block.rows, block.cols), (self.t, self.t));
+        for r in 0..self.t {
+            for c in 0..self.t {
+                let i = self.idx(r, c);
+                self.pes[i].b = block[(r, c)];
+                self.pes[i].a_reg = 0.0;
+                self.pes[i].a_valid = false;
+                self.pes[i].psum_reg = 0.0;
+                self.pes[i].psum_valid = false;
+            }
+        }
+    }
+
+    /// Advance one cycle. `west[i]` is the (already skewed) dynamic input
+    /// entering row `i`. Returns the partial sums leaving the south edge
+    /// this cycle (one per column, `None` when nothing valid exits).
+    pub fn tick(&mut self, west: &[Option<f32>]) -> Vec<Option<f32>> {
+        assert_eq!(west.len(), self.t);
+        self.cycles += 1;
+        let t = self.t;
+        let prev = self.pes.clone();
+        let mut south_out = vec![None; t];
+        for r in 0..t {
+            for c in 0..t {
+                let i = self.idx(r, c);
+                // Dynamic operand arriving from the west neighbour (or
+                // the array input for column 0).
+                let (a_in, a_ok) = if c == 0 {
+                    (west[r].unwrap_or(0.0), west[r].is_some())
+                } else {
+                    let w = prev[self.idx(r, c - 1)];
+                    (w.a_reg, w.a_valid)
+                };
+                // Partial sum arriving from the north neighbour (0 for
+                // the top row).
+                let (p_in, p_ok) = if r == 0 {
+                    (0.0, a_ok)
+                } else {
+                    let n = prev[self.idx(r - 1, c)];
+                    (n.psum_reg, n.psum_valid)
+                };
+                let pe = &mut self.pes[i];
+                pe.a_reg = a_in;
+                pe.a_valid = a_ok;
+                if a_ok {
+                    pe.psum_reg = p_in + a_in * pe.b;
+                    pe.psum_valid = p_ok || a_ok;
+                    self.macs += 1;
+                } else {
+                    pe.psum_reg = p_in;
+                    pe.psum_valid = false;
+                }
+                if r == t - 1 && pe.psum_valid {
+                    south_out[c] = Some(pe.psum_reg);
+                }
+            }
+        }
+        south_out
+    }
+
+    /// Run a full `m x t (A-block) . t x t (B-block)` block-matmul through
+    /// the array, applying the skew at the input. Returns the `m x t`
+    /// result and the cycles consumed: `m + 2t - 2`.
+    pub fn block_matmul(&mut self, a: &Matrix, b: &Matrix) -> (Matrix, u64) {
+        let t = self.t;
+        assert_eq!(a.cols, t, "A block must be m x t");
+        self.load_stationary(b);
+        let m = a.rows;
+        let total_cycles = m + 2 * t - 2;
+        let mut out = Matrix::zeros(m, t);
+        let start = self.cycles;
+        for cyc in 0..total_cycles {
+            // Row i receives A[cyc - i][i] (skew of i cycles).
+            let west: Vec<Option<f32>> = (0..t)
+                .map(|i| {
+                    let row = cyc as isize - i as isize;
+                    if row >= 0 && (row as usize) < m {
+                        Some(a[(row as usize, i)])
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let south = self.tick(&west);
+            // Column j emits out[cyc - (t-1) - j][j].
+            for (j, s) in south.iter().enumerate() {
+                if let Some(v) = s {
+                    let row = cyc as isize - (t as isize - 1) - j as isize;
+                    if row >= 0 && (row as usize) < m {
+                        out[(row as usize, j)] = *v;
+                    }
+                }
+            }
+        }
+        (out, self.cycles - start)
+    }
+}
+
+/// Analytic cycle cost of one `m x t x t` block pass (the cost the
+/// cycle-stepped model pays): skew fill + stream + drain = `m + 2t - 2`.
+/// Stationary block loads are hidden by double buffering.
+pub const fn block_cycles(m: usize, t: usize) -> usize {
+    m + 2 * t - 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn random_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| rng.range_f32(-1.0, 1.0))
+    }
+
+    #[test]
+    fn block_matmul_matches_reference_4x4() {
+        let mut rng = Rng::new(50);
+        let mut arr = SystolicArray::new(4);
+        let a = random_matrix(4, 4, &mut rng);
+        let b = random_matrix(4, 4, &mut rng);
+        let (out, cycles) = arr.block_matmul(&a, &b);
+        assert!(out.max_abs_diff(&a.matmul(&b)) < 1e-5);
+        assert_eq!(cycles, (4 + 2 * 4 - 2) as u64);
+    }
+
+    #[test]
+    fn block_matmul_matches_reference_16x16() {
+        let mut rng = Rng::new(51);
+        let mut arr = SystolicArray::new(16);
+        let a = random_matrix(16, 16, &mut rng);
+        let b = random_matrix(16, 16, &mut rng);
+        let (out, cycles) = arr.block_matmul(&a, &b);
+        assert!(out.max_abs_diff(&a.matmul(&b)) < 1e-4);
+        assert_eq!(cycles, 46);
+        assert_eq!(cycles as usize, block_cycles(16, 16));
+    }
+
+    #[test]
+    fn block_matmul_short_a() {
+        // m < t (e.g. the C=3 rows of Table II's first layer).
+        let mut rng = Rng::new(52);
+        let mut arr = SystolicArray::new(8);
+        let a = random_matrix(3, 8, &mut rng);
+        let b = random_matrix(8, 8, &mut rng);
+        let (out, cycles) = arr.block_matmul(&a, &b);
+        assert!(out.max_abs_diff(&a.matmul(&b)) < 1e-5);
+        assert_eq!(cycles as usize, block_cycles(3, 8));
+    }
+
+    #[test]
+    fn block_matmul_tall_a() {
+        let mut rng = Rng::new(53);
+        let mut arr = SystolicArray::new(4);
+        let a = random_matrix(37, 4, &mut rng);
+        let b = random_matrix(4, 4, &mut rng);
+        let (out, _) = arr.block_matmul(&a, &b);
+        assert!(out.max_abs_diff(&a.matmul(&b)) < 1e-4);
+    }
+
+    #[test]
+    fn mac_count_equals_dense_work() {
+        // Every (row, pe) pair fires exactly once: m * t * t MACs.
+        let mut rng = Rng::new(54);
+        let mut arr = SystolicArray::new(4);
+        let a = random_matrix(5, 4, &mut rng);
+        let b = random_matrix(4, 4, &mut rng);
+        arr.block_matmul(&a, &b);
+        assert_eq!(arr.macs, (5 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn zeros_from_crossbar_contribute_nothing() {
+        // Masked-out lanes (structural zeros re-inflated by the crossbar)
+        // change no output: A with zeros == A without those columns.
+        let mut rng = Rng::new(55);
+        let mut arr = SystolicArray::new(4);
+        let mut a = random_matrix(6, 4, &mut rng);
+        let b = random_matrix(4, 4, &mut rng);
+        for r in 0..6 {
+            a[(r, 2)] = 0.0;
+        }
+        let (out, _) = arr.block_matmul(&a, &b);
+        assert!(out.max_abs_diff(&a.matmul(&b)) < 1e-5);
+    }
+}

@@ -1,0 +1,47 @@
+//! Dense tensor substrate.
+//!
+//! The accelerator model and the functional oracle both operate on plain
+//! row-major buffers: a 4-d NCHW [`Tensor4`] and a 2-d [`Matrix`]. These
+//! are deliberately minimal — the point of the reproduction is the
+//! *address arithmetic* between the two, not a general ndarray library.
+
+mod matrix;
+mod rng;
+mod tensor4;
+
+pub use matrix::Matrix;
+pub use rng::Rng;
+pub use tensor4::Tensor4;
+
+/// Ceiling division for tile counts.
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Round `a` up to a multiple of `b`.
+#[inline]
+pub const fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 16), 0);
+        assert_eq!(ceil_div(1, 16), 1);
+        assert_eq!(ceil_div(16, 16), 1);
+        assert_eq!(ceil_div(17, 16), 2);
+        assert_eq!(ceil_div(576, 16), 36);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 16), 0);
+        assert_eq!(round_up(3, 16), 16);
+        assert_eq!(round_up(100352, 16), 100352);
+    }
+}

@@ -1,0 +1,155 @@
+//! 4-d NCHW tensor.
+
+use crate::tensor::Rng;
+
+/// A dense 4-d tensor in NCHW layout (`[n][c][h][w]`, row-major).
+///
+/// All feature maps, kernels and loss maps in the reproduction use this
+/// layout; the paper's compact-address formulae
+/// (`b*N*Ho*Wo + n*Ho*Wo + h*Wo + w`) index exactly this buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor4 {
+    /// Dimension sizes `[d0, d1, d2, d3]` (e.g. `[B, C, H, W]`).
+    pub dims: [usize; 4],
+    /// Row-major storage, length `d0*d1*d2*d3`.
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    /// All-zero tensor.
+    pub fn zeros(dims: [usize; 4]) -> Self {
+        Self { dims, data: vec![0.0; dims.iter().product()] }
+    }
+
+    /// Tensor filled from a closure over `(d0, d1, d2, d3)` indices.
+    pub fn from_fn(dims: [usize; 4], mut f: impl FnMut(usize, usize, usize, usize) -> f32) -> Self {
+        let mut t = Self::zeros(dims);
+        for i0 in 0..dims[0] {
+            for i1 in 0..dims[1] {
+                for i2 in 0..dims[2] {
+                    for i3 in 0..dims[3] {
+                        let v = f(i0, i1, i2, i3);
+                        t[(i0, i1, i2, i3)] = v;
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Tensor with i.i.d. uniform values in `[-1, 1)` from `rng`.
+    pub fn random(dims: [usize; 4], rng: &mut Rng) -> Self {
+        let data = (0..dims.iter().product::<usize>()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        Self { dims, data }
+    }
+
+    /// Total number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat row-major offset of `(i0, i1, i2, i3)`.
+    #[inline]
+    pub fn offset(&self, i0: usize, i1: usize, i2: usize, i3: usize) -> usize {
+        debug_assert!(i0 < self.dims[0] && i1 < self.dims[1] && i2 < self.dims[2] && i3 < self.dims[3]);
+        ((i0 * self.dims[1] + i1) * self.dims[2] + i2) * self.dims[3] + i3
+    }
+
+    /// Element read with implicit zero outside the bounds of dims 2 and 3
+    /// (used by padded convolution loops; `h`/`w` may be negative).
+    #[inline]
+    pub fn get_padded(&self, i0: usize, i1: usize, h: isize, w: isize) -> f32 {
+        if h < 0 || w < 0 || h as usize >= self.dims[2] || w as usize >= self.dims[3] {
+            0.0
+        } else {
+            self[(i0, i1, h as usize, w as usize)]
+        }
+    }
+
+    /// Number of exactly-zero elements.
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|v| **v == 0.0).count()
+    }
+
+    /// Maximum absolute elementwise difference against `other`.
+    pub fn max_abs_diff(&self, other: &Tensor4) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize, usize, usize)> for Tensor4 {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i0, i1, i2, i3): (usize, usize, usize, usize)) -> &f32 {
+        &self.data[self.offset(i0, i1, i2, i3)]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize, usize, usize)> for Tensor4 {
+    #[inline]
+    fn index_mut(&mut self, (i0, i1, i2, i3): (usize, usize, usize, usize)) -> &mut f32 {
+        let o = self.offset(i0, i1, i2, i3);
+        &mut self.data[o]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_are_row_major() {
+        let t = Tensor4::zeros([2, 3, 4, 5]);
+        assert_eq!(t.offset(0, 0, 0, 0), 0);
+        assert_eq!(t.offset(0, 0, 0, 1), 1);
+        assert_eq!(t.offset(0, 0, 1, 0), 5);
+        assert_eq!(t.offset(0, 1, 0, 0), 20);
+        assert_eq!(t.offset(1, 0, 0, 0), 60);
+        assert_eq!(t.offset(1, 2, 3, 4), 119);
+    }
+
+    #[test]
+    fn from_fn_and_index_agree() {
+        let t = Tensor4::from_fn([2, 2, 3, 3], |a, b, c, d| (a * 1000 + b * 100 + c * 10 + d) as f32);
+        assert_eq!(t[(1, 1, 2, 2)], 1122.0);
+        assert_eq!(t[(0, 1, 0, 2)], 102.0);
+    }
+
+    #[test]
+    fn get_padded_is_zero_outside() {
+        let t = Tensor4::from_fn([1, 1, 2, 2], |_, _, h, w| (h * 2 + w + 1) as f32);
+        assert_eq!(t.get_padded(0, 0, -1, 0), 0.0);
+        assert_eq!(t.get_padded(0, 0, 0, -1), 0.0);
+        assert_eq!(t.get_padded(0, 0, 2, 0), 0.0);
+        assert_eq!(t.get_padded(0, 0, 1, 1), 4.0);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = Tensor4::random([1, 2, 3, 4], &mut r1);
+        let b = Tensor4::random([1, 2, 3, 4], &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn count_zeros_counts() {
+        let mut t = Tensor4::zeros([1, 1, 2, 2]);
+        assert_eq!(t.count_zeros(), 4);
+        t[(0, 0, 0, 0)] = 1.0;
+        assert_eq!(t.count_zeros(), 3);
+    }
+}

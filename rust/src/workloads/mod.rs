@@ -1,0 +1,169 @@
+//! Workload tables: every `stride >= 2` convolutional layer of the six
+//! CNNs the paper evaluates (Figs. 6–8), plus the five layers of
+//! Table II.
+//!
+//! Batch size 2 and FP32, as in the paper's setup. Depthwise layers
+//! (MobileNet, ShuffleNet) are grouped convolutions the GEMM lowering
+//! does per-channel; we model them as `count` independent single-channel
+//! convolutions — identical lowered work, documented substitution.
+
+use crate::conv::ConvParams;
+
+/// One convolutional layer of a network workload.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadLayer {
+    /// Layer label within the network.
+    pub name: &'static str,
+    /// Convolution parameters (batch already set to the paper's 2).
+    pub params: ConvParams,
+    /// Multiplicity: number of identical instances per backward pass
+    /// (1 for normal convs; the channel count for depthwise convs).
+    pub count: usize,
+}
+
+/// A CNN's stride>=2 convolutional layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<WorkloadLayer>,
+}
+
+fn layer(name: &'static str, p: ConvParams, count: usize) -> WorkloadLayer {
+    WorkloadLayer { name, params: p, count }
+}
+
+/// AlexNet: conv1 is the only strided conv (11x11, stride 4) — the
+/// paper's biggest reductions (highest dilation sparsity) come from here.
+pub fn alexnet() -> Network {
+    Network {
+        name: "AlexNet",
+        layers: vec![layer("conv1", ConvParams::square(224, 3, 96, 11, 4, 2), 1)],
+    }
+}
+
+/// DenseNet-121: strided 7x7 stem (other downsampling is pooling).
+pub fn densenet() -> Network {
+    Network {
+        name: "DenseNet",
+        layers: vec![layer("conv0", ConvParams::square(224, 3, 64, 7, 2, 3), 1)],
+    }
+}
+
+/// MobileNetV1: strided 3x3 stem plus the four strided depthwise stages.
+pub fn mobilenet() -> Network {
+    Network {
+        name: "MobileNet",
+        layers: vec![
+            layer("conv1", ConvParams::square(224, 3, 32, 3, 2, 1), 1),
+            layer("dw2", ConvParams::square(112, 1, 1, 3, 2, 1), 64),
+            layer("dw4", ConvParams::square(56, 1, 1, 3, 2, 1), 128),
+            layer("dw6", ConvParams::square(28, 1, 1, 3, 2, 1), 256),
+            layer("dw12", ConvParams::square(14, 1, 1, 3, 2, 1), 512),
+        ],
+    }
+}
+
+/// ResNet-50: strided 7x7 stem plus each stage's strided 3x3 and 1x1
+/// projection (two of which appear verbatim in Table II).
+pub fn resnet() -> Network {
+    Network {
+        name: "ResNet",
+        layers: vec![
+            layer("conv1", ConvParams::square(224, 3, 64, 7, 2, 3), 1),
+            layer("conv3_x.3x3", ConvParams::square(56, 128, 128, 3, 2, 1), 1),
+            layer("conv3_x.proj", ConvParams::square(56, 256, 512, 1, 2, 0), 1),
+            layer("conv4_x.3x3", ConvParams::square(28, 256, 256, 3, 2, 1), 1),
+            layer("conv4_x.proj", ConvParams::square(28, 512, 1024, 1, 2, 0), 1),
+            layer("conv5_x.3x3", ConvParams::square(14, 512, 512, 3, 2, 1), 1),
+            layer("conv5_x.proj", ConvParams::square(14, 1024, 2048, 1, 2, 0), 1),
+        ],
+    }
+}
+
+/// ShuffleNetV1 (g=3): strided 3x3 stem plus the strided depthwise convs
+/// of each downsampling unit (representative channel counts).
+pub fn shufflenet() -> Network {
+    Network {
+        name: "ShuffleNet",
+        layers: vec![
+            layer("conv1", ConvParams::square(224, 3, 24, 3, 2, 1), 1),
+            layer("stage2.dw", ConvParams::square(56, 1, 1, 3, 2, 1), 60),
+            layer("stage3.dw", ConvParams::square(28, 1, 1, 3, 2, 1), 240),
+            layer("stage4.dw", ConvParams::square(14, 1, 1, 3, 2, 1), 480),
+        ],
+    }
+}
+
+/// SqueezeNet 1.0: strided 7x7 stem.
+pub fn squeezenet() -> Network {
+    Network {
+        name: "SqueezeNet",
+        layers: vec![layer("conv1", ConvParams::square(224, 3, 96, 7, 2, 0), 1)],
+    }
+}
+
+/// The six networks of Figs. 6–8, in the paper's legend order.
+pub fn all_networks() -> Vec<Network> {
+    vec![alexnet(), densenet(), mobilenet(), resnet(), shufflenet(), squeezenet()]
+}
+
+/// The five layers of Table II, in row order
+/// (`Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw)` notation).
+pub fn table2_layers() -> [ConvParams; 5] {
+    [
+        ConvParams::square(224, 3, 64, 3, 2, 0),
+        ConvParams::square(112, 64, 64, 3, 2, 1),
+        ConvParams::square(56, 256, 512, 1, 2, 0),
+        ConvParams::square(28, 244, 244, 3, 2, 1),
+        ConvParams::square(14, 1024, 2048, 1, 2, 0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_layers_valid_and_strided() {
+        for net in all_networks() {
+            assert!(!net.layers.is_empty());
+            for l in &net.layers {
+                l.params.validate().unwrap_or_else(|e| panic!("{}/{}: {e}", net.name, l.name));
+                assert!(l.params.s >= 2, "{}/{} not strided", net.name, l.name);
+                assert_eq!(l.params.b, 2, "paper batch size");
+                assert!(l.count >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn table2_layers_match_paper_notation() {
+        let ls = table2_layers();
+        assert_eq!(ls[0].id(), "224/3/64/3/2/0");
+        assert_eq!(ls[2].id(), "56/256/512/1/2/0");
+        assert_eq!(ls[4].id(), "14/1024/2048/1/2/0");
+        for l in ls {
+            l.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn alexnet_has_highest_dilation_sparsity() {
+        // Stride 4 -> ~15/16 inserted zeros: AlexNet tops Figs. 7–8.
+        use crate::im2col::sparsity::grad_matrix_a;
+        let nets = all_networks();
+        let s_of = |n: &Network| {
+            n.layers.iter().map(|l| grad_matrix_a(&l.params).sparsity()).fold(0.0, f64::max)
+        };
+        let alex = s_of(&nets[0]);
+        for other in &nets[1..] {
+            assert!(alex > s_of(other), "AlexNet {} vs {} {}", alex, other.name, s_of(other));
+        }
+    }
+
+    #[test]
+    fn six_networks_in_legend_order() {
+        let names: Vec<_> = all_networks().iter().map(|n| n.name).collect();
+        assert_eq!(names, ["AlexNet", "DenseNet", "MobileNet", "ResNet", "ShuffleNet", "SqueezeNet"]);
+    }
+}

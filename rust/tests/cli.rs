@@ -1,0 +1,136 @@
+//! End-to-end CLI tests: run the actual `repro` binary and check its
+//! output, including failure injection (bad arguments, missing
+//! artifacts).
+
+use std::process::Command;
+
+fn repro(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (stdout, _, ok) = repro(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("table2"));
+}
+
+#[test]
+fn table2_contains_all_five_layers() {
+    let (stdout, _, ok) = repro(&["table2"]);
+    assert!(ok);
+    for layer in ["224/3/64/3/2/0", "112/64/64/3/2/1", "56/256/512/1/2/0", "28/244/244/3/2/1", "14/1024/2048/1/2/0"] {
+        assert!(stdout.contains(layer), "missing {layer}:\n{stdout}");
+    }
+    assert!(stdout.contains("paper"));
+}
+
+#[test]
+fn table3_shows_paper_prologues() {
+    let (stdout, _, ok) = repro(&["table3"]);
+    assert!(ok);
+    assert!(stdout.contains("51"));
+    assert!(stdout.contains("68"));
+}
+
+#[test]
+fn fig8_csv_mode_is_machine_readable() {
+    let (stdout, _, ok) = repro(&["fig8", "--csv", "--pass", "loss"]);
+    assert!(ok);
+    let mut lines = stdout.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "network,traditional,bp_im2col,reduction_pct,sparsity_pct"
+    );
+    assert_eq!(lines.count(), 6, "six networks");
+}
+
+#[test]
+fn sim_single_layer() {
+    let (stdout, _, ok) = repro(&["sim", "--layer", "56/256/512/1/2/0"]);
+    assert!(ok);
+    assert!(stdout.contains("speedup"));
+    assert!(stdout.contains("loss") && stdout.contains("grad"));
+}
+
+#[test]
+fn traincost_reports_all_networks() {
+    let (stdout, _, ok) = repro(&["traincost"]);
+    assert!(ok, "{stdout}");
+    for net in ["AlexNet", "DenseNet", "MobileNet", "ResNet", "ShuffleNet", "SqueezeNet"] {
+        assert!(stdout.contains(net));
+    }
+}
+
+#[test]
+fn config_preset_changes_results() {
+    let (default_out, _, ok1) = repro(&["sim", "--layer", "224/3/64/3/2/0"]);
+    let (edge_out, _, ok2) = repro(&["sim", "--layer", "224/3/64/3/2/0", "--config", "configs/edge.cfg"]);
+    assert!(ok1 && ok2);
+    assert_ne!(default_out, edge_out, "edge preset must change the numbers");
+    // hpc preset enables sparse skipping -> grad BP cycles drop.
+    let (hpc_out, _, ok3) = repro(&["sim", "--layer", "224/3/64/3/2/0", "--config", "configs/hpc.cfg"]);
+    assert!(ok3);
+    assert_ne!(default_out, hpc_out);
+}
+
+// ---- failure injection ----------------------------------------------------
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (_, stderr, ok) = repro(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn malformed_layer_spec_rejected() {
+    for bad in ["1/2/3", "a/b/c/d/e/f", "224/3/64/3/0/0", "8/1/1/1/2/3"] {
+        let (_, stderr, ok) = repro(&["sim", "--layer", bad]);
+        assert!(!ok, "{bad} should be rejected");
+        assert!(!stderr.is_empty());
+    }
+}
+
+#[test]
+fn bad_bandwidth_rejected() {
+    let (_, stderr, ok) = repro(&["table2", "--bandwidth", "fast"]);
+    assert!(!ok);
+    assert!(stderr.contains("bandwidth"));
+}
+
+#[test]
+fn bad_pass_rejected() {
+    let (_, stderr, ok) = repro(&["fig6", "--pass", "sideways"]);
+    assert!(!ok);
+    assert!(stderr.contains("--pass"));
+}
+
+#[test]
+fn missing_config_file_rejected() {
+    let (_, stderr, ok) = repro(&["table2", "--config", "/no/such/file.cfg"]);
+    assert!(!ok);
+    assert!(stderr.contains("file.cfg"), "{stderr}");
+}
+
+#[test]
+fn malformed_config_rejected_with_line() {
+    let dir = std::env::temp_dir().join("bp_im2col_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.cfg");
+    std::fs::write(&path, "array_dim = 16\nwhat_is_this = 3\n").unwrap();
+    let (_, stderr, ok) = repro(&["table2", "--config", path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown key"), "{stderr}");
+    assert!(stderr.contains("line 2"), "{stderr}");
+}

@@ -1,0 +1,156 @@
+//! Cross-module integration tests: functional accelerator vs the math
+//! oracle, coordinator aggregation vs direct summation, and report
+//! self-consistency.
+
+use bp_im2col::accel::functional::{grad_calc_on_array, loss_calc_on_array, tiled_gemm};
+use bp_im2col::accel::{simulate_pass, AccelConfig, metrics::speedup};
+use bp_im2col::conv::{conv2d_bwd_input, conv2d_bwd_weight, conv2d_fwd, ConvParams};
+use bp_im2col::coordinator::Scheduler;
+use bp_im2col::im2col::pipeline::{self, Mode, Pass};
+use bp_im2col::report;
+use bp_im2col::tensor::{Matrix, Rng, Tensor4};
+use bp_im2col::workloads;
+
+fn tensors(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+    let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+    let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+    (x, w, dy)
+}
+
+/// Layers exercising every corner: stride 2/3/4, 1x1 and rectangular
+/// kernels, padding 0..2, inexact floor division.
+fn corner_layers() -> Vec<ConvParams> {
+    vec![
+        ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
+        ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 },
+        ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 },
+        ConvParams { b: 1, c: 1, hi: 12, wi: 12, n: 2, kh: 4, kw: 4, s: 4, ph: 0, pw: 0 },
+        ConvParams { b: 1, c: 2, hi: 11, wi: 8, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
+        ConvParams { b: 2, c: 1, hi: 7, wi: 13, n: 1, kh: 3, kw: 3, s: 2, ph: 2, pw: 2 },
+    ]
+}
+
+#[test]
+fn accelerator_functional_path_matches_math_everywhere() {
+    for (i, p) in corner_layers().into_iter().enumerate() {
+        let (x, w, dy) = tensors(&p, 200 + i as u64);
+        let dx_oracle = conv2d_bwd_input(&dy, &w, &p);
+        let dw_oracle = conv2d_bwd_weight(&x, &dy, &p);
+        for mode in Mode::ALL {
+            let (dx, _) = loss_calc_on_array(&dy, &w, &p, mode, 8);
+            assert!(dx.max_abs_diff(&dx_oracle) < 2e-4, "{mode:?} dX {}", p.id());
+            let (dw, _) = grad_calc_on_array(&x, &dy, &p, mode, 8);
+            assert!(dw.max_abs_diff(&dw_oracle) < 2e-3, "{mode:?} dW {}", p.id());
+        }
+    }
+}
+
+#[test]
+fn fwd_bwd_roundtrip_through_all_paths() {
+    // Forward with the oracle, backward through the simulated
+    // accelerator; gradient-descent step must reduce a quadratic loss
+    // 0.5*||conv(x, w) - t||^2 — an end-to-end "does the gradient point
+    // downhill" check on the whole machinery.
+    let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+    let (x, mut w, _) = tensors(&p, 300);
+    let t = {
+        let (_, wt, _) = tensors(&p, 301);
+        conv2d_fwd(&x, &wt, &p)
+    };
+    let loss = |w: &Tensor4| -> f64 {
+        let y = conv2d_fwd(&x, w, &p);
+        y.data.iter().zip(&t.data).map(|(a, b)| 0.5 * ((a - b) as f64).powi(2)).sum()
+    };
+    let l0 = loss(&w);
+    for _ in 0..10 {
+        let y = conv2d_fwd(&x, &w, &p);
+        let dy = Tensor4 {
+            dims: y.dims,
+            data: y.data.iter().zip(&t.data).map(|(a, b)| a - b).collect(),
+        };
+        let (dw, _) = grad_calc_on_array(&x, &dy, &p, Mode::BpIm2col, 8);
+        for (wi, gi) in w.data.iter_mut().zip(&dw.data) {
+            *wi -= 0.01 * gi;
+        }
+    }
+    let l1 = loss(&w);
+    assert!(l1 < 0.5 * l0, "loss {l0} -> {l1}");
+}
+
+#[test]
+fn scheduler_aggregates_match_direct_sums() {
+    let cfg = AccelConfig::default();
+    let sched = Scheduler::new(cfg);
+    let net = workloads::resnet();
+    let rep = sched.run_network(&net, Mode::Traditional);
+    let direct: f64 = net
+        .layers
+        .iter()
+        .map(|l| {
+            simulate_pass(Pass::Loss, Mode::Traditional, &l.params, &cfg).total_cycles()
+                * l.count as f64
+        })
+        .sum();
+    assert!((rep.loss_cycles - direct).abs() < 1e-6 * direct.max(1.0));
+}
+
+#[test]
+fn tiled_gemm_associativity_over_k() {
+    // Accumulating partial sums across kb stripes must equal one flat
+    // GEMM regardless of tile size.
+    let mut rng = Rng::new(400);
+    let a = Matrix::from_fn(13, 41, |_, _| rng.range_f32(-1.0, 1.0));
+    let b = Matrix::from_fn(41, 29, |_, _| rng.range_f32(-1.0, 1.0));
+    let want = a.matmul(&b);
+    for t in [4, 8, 16] {
+        let (got, _) = tiled_gemm(&a, &b, t);
+        assert!(got.max_abs_diff(&want) < 1e-4, "t={t}");
+    }
+}
+
+#[test]
+fn report_speedups_consistent_with_raw_metrics() {
+    let cfg = AccelConfig::default();
+    for row in report::table2(&cfg) {
+        let p: Vec<usize> = row.layer.split('/').map(|v| v.parse().unwrap()).collect();
+        let params = ConvParams::square(p[0], p[1], p[2], p[3], p[4], p[5]);
+        let trad = simulate_pass(row.pass, Mode::Traditional, &params, &cfg);
+        let bp = simulate_pass(row.pass, Mode::BpIm2col, &params, &cfg);
+        assert!((row.speedup - speedup(&trad, &bp)).abs() < 1e-9);
+        assert!((row.bp_cycles - bp.total_cycles()).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn functional_pipeline_equals_accelerator_on_random_layer() {
+    // The plain-software pipeline and the full datapath must agree even
+    // on a randomly drawn geometry.
+    let mut rng = Rng::new(500);
+    for trial in 0..5 {
+        let s = rng.range(2, 4);
+        let k = rng.range(1, 4);
+        let ph = rng.below(k);
+        let p = ConvParams {
+            b: rng.range(1, 3),
+            c: rng.range(1, 3),
+            hi: rng.range(k.max(4), 11),
+            wi: rng.range(k.max(4), 11),
+            n: rng.range(1, 3),
+            kh: k,
+            kw: k,
+            s,
+            ph,
+            pw: ph,
+        };
+        p.validate().unwrap();
+        let (x, w, dy) = tensors(&p, 600 + trial);
+        let dx_sw = pipeline::loss_calc(&dy, &w, &p, Mode::BpIm2col);
+        let (dx_hw, _) = loss_calc_on_array(&dy, &w, &p, Mode::BpIm2col, 8);
+        assert!(dx_sw.max_abs_diff(&dx_hw) < 2e-4, "{}", p.id());
+        let dw_sw = pipeline::grad_calc(&x, &dy, &p, Mode::BpIm2col);
+        let (dw_hw, _) = grad_calc_on_array(&x, &dy, &p, Mode::BpIm2col, 8);
+        assert!(dw_sw.max_abs_diff(&dw_hw) < 2e-3, "{}", p.id());
+    }
+}

@@ -1,0 +1,185 @@
+//! Property-based tests over random layer geometries.
+//!
+//! The offline image has no `proptest`; this is a deterministic-seed
+//! randomized sweep with explicit shrink-friendly reporting (the failing
+//! geometry is printed verbatim) — same invariants, same coverage style.
+
+use bp_im2col::accel::{simulate_pass, AccelConfig};
+use bp_im2col::conv::{conv2d_bwd_input, conv2d_bwd_weight, ConvParams};
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::im2col::{dilated, reorg, sparsity, traditional, transposed};
+use bp_im2col::sim::compress::compress_window;
+use bp_im2col::sim::crossbar::{contract, expand};
+use bp_im2col::tensor::{Rng, Tensor4};
+
+/// Draw a random valid conv geometry (stride 1..=4, padding <= K-1).
+fn arb_params(rng: &mut Rng) -> ConvParams {
+    loop {
+        let kh = rng.range(1, 5);
+        let kw = rng.range(1, 5);
+        let p = ConvParams {
+            b: rng.range(1, 3),
+            c: rng.range(1, 4),
+            hi: rng.range(4, 13),
+            wi: rng.range(4, 13),
+            n: rng.range(1, 4),
+            kh,
+            kw,
+            s: rng.range(1, 5),
+            ph: rng.below(kh),
+            pw: rng.below(kw),
+        };
+        if p.validate().is_ok() && p.hi + 2 * p.ph >= p.kh && p.wi + 2 * p.pw >= p.kw {
+            return p;
+        }
+    }
+}
+
+const TRIALS: usize = 60;
+
+#[test]
+fn prop_algorithm1_equals_explicit_lowering() {
+    let mut rng = Rng::new(0xA1);
+    for trial in 0..TRIALS {
+        let p = arb_params(&mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let implicit = transposed::gather_matrix(&dy, &p);
+        let explicit = traditional::lower_loss_b(&reorg::dilate_pad_loss(&dy, &p), &p);
+        assert_eq!(implicit, explicit, "trial {trial}: {p:?}");
+    }
+}
+
+#[test]
+fn prop_algorithm2_equals_explicit_lowering() {
+    let mut rng = Rng::new(0xA2);
+    for trial in 0..TRIALS {
+        let p = arb_params(&mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let implicit = dilated::gather_matrix(&dy, &p);
+        let explicit = traditional::lower_grad_a(&reorg::dilate_loss(&dy, &p), &p);
+        assert_eq!(implicit, explicit, "trial {trial}: {p:?}");
+    }
+}
+
+#[test]
+fn prop_gemm_paths_match_naive_oracle() {
+    let mut rng = Rng::new(0xA3);
+    for trial in 0..TRIALS / 2 {
+        let p = arb_params(&mut rng);
+        let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let dx = bp_im2col::im2col::pipeline::loss_calc(&dy, &w, &p, Mode::BpIm2col);
+        let dx_oracle = conv2d_bwd_input(&dy, &w, &p);
+        assert!(dx.max_abs_diff(&dx_oracle) < 1e-3, "trial {trial}: {p:?}");
+        let dw = bp_im2col::im2col::pipeline::grad_calc(&x, &dy, &p, Mode::BpIm2col);
+        let dw_oracle = conv2d_bwd_weight(&x, &dy, &p);
+        assert!(dw.max_abs_diff(&dw_oracle) < 1e-2, "trial {trial}: {p:?}");
+    }
+}
+
+#[test]
+fn prop_analytic_sparsity_equals_brute_force() {
+    let mut rng = Rng::new(0xA4);
+    for trial in 0..TRIALS {
+        let p = arb_params(&mut rng);
+        assert_eq!(
+            sparsity::loss_matrix_b(&p),
+            sparsity::loss_matrix_b_brute(&p),
+            "trial {trial}: {p:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_grad_a_nonzeros_exactly_compact_size() {
+    // Every compact dY element appears exactly once in matrix A.
+    let mut rng = Rng::new(0xA5);
+    for trial in 0..TRIALS {
+        let p = arb_params(&mut rng);
+        let s = sparsity::grad_matrix_a(&p);
+        assert_eq!(s.nonzero, p.output_elems(), "trial {trial}: {p:?}");
+        let nz = (0..dilated::virtual_len(&p)).filter(|a| dilated::map_addr(*a, &p).is_some()).count();
+        assert_eq!(nz, s.nonzero, "trial {trial}: {p:?}");
+    }
+}
+
+#[test]
+fn prop_compress_expand_roundtrip() {
+    let mut rng = Rng::new(0xA6);
+    for _ in 0..500 {
+        let width = rng.range(1, 17);
+        let addrs: Vec<Option<usize>> = (0..width)
+            .map(|_| if rng.next_f32() < 0.6 { Some(rng.below(1000)) } else { None })
+            .collect();
+        let win = compress_window(&addrs);
+        assert_eq!(win.count(), addrs.iter().flatten().count());
+        let data: Vec<f32> = (0..win.count()).map(|i| i as f32 + 1.0).collect();
+        let lanes = expand(&data, win.mask, width);
+        assert_eq!(contract(&lanes, win.mask), data);
+        // Masked-out lanes are exactly the zero lanes.
+        for (i, a) in addrs.iter().enumerate() {
+            assert_eq!(a.is_some(), win.mask & (1 << i) != 0);
+            if a.is_none() {
+                assert_eq!(lanes[i], 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mapped_addresses_always_in_compact_range() {
+    let mut rng = Rng::new(0xA7);
+    for trial in 0..TRIALS {
+        let p = arb_params(&mut rng);
+        let compact = p.output_elems();
+        for addr in 0..transposed::virtual_len(&p).min(20_000) {
+            if let Some(o) = transposed::map_addr(addr, &p) {
+                assert!(o < compact, "trial {trial}: {p:?} addr {addr} -> {o}");
+            }
+        }
+        for addr in 0..dilated::virtual_len(&p).min(20_000) {
+            if let Some(o) = dilated::map_addr(addr, &p) {
+                assert!(o < compact, "trial {trial}: {p:?} addr {addr} -> {o}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_timing_invariants() {
+    // For every geometry and pass: BP never pays reorganization, MACs
+    // match across modes, totals are positive and finite, buffer reads
+    // never increase under BP.
+    let mut rng = Rng::new(0xA8);
+    let cfg = AccelConfig::default();
+    for trial in 0..TRIALS {
+        let p = arb_params(&mut rng);
+        for pass in Pass::ALL {
+            let trad = simulate_pass(pass, Mode::Traditional, &p, &cfg);
+            let bp = simulate_pass(pass, Mode::BpIm2col, &p, &cfg);
+            assert_eq!(bp.reorg_cycles, 0.0, "trial {trial}: {p:?}");
+            assert!(trad.reorg_cycles > 0.0);
+            assert_eq!(trad.macs, bp.macs);
+            assert!(bp.total_cycles().is_finite() && bp.total_cycles() > 0.0);
+            assert!(bp.buffer_a_reads <= trad.buffer_a_reads, "trial {trial}: {p:?}");
+            assert!(bp.buffer_b_reads <= trad.buffer_b_reads, "trial {trial}: {p:?}");
+            assert!(bp.traffic.total() <= trad.traffic.total(), "trial {trial}: {p:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_stride1_has_no_insertion_zeros() {
+    // Degenerate S=1: matrix A of gradient calc is fully dense.
+    let mut rng = Rng::new(0xA9);
+    for _ in 0..20 {
+        let mut p = arb_params(&mut rng);
+        p.s = 1;
+        if p.validate().is_err() {
+            continue;
+        }
+        let s = sparsity::grad_matrix_a(&p);
+        assert_eq!(s.sparsity(), 0.0, "{p:?}");
+    }
+}

@@ -1,0 +1,148 @@
+//! Cross-layer integration: execute the AOT HLO artifacts (JAX + Pallas
+//! BP-im2col kernels, lowered by `python/compile/aot.py`) on the Rust
+//! PJRT runtime and compare against the *Rust* implementation of the
+//! same algorithms. This closes the loop: L1 kernel == L2 model == L3
+//! functional simulator, number for number.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are absent
+//! so `cargo test` stays green on a fresh checkout.
+
+use bp_im2col::accel::functional;
+use bp_im2col::conv::ConvParams;
+use bp_im2col::coordinator::trainer::{synthetic_batch, ParamState, BATCH, DENSE_IN, NUM_CLASSES, P1, P2};
+use bp_im2col::coordinator::{TrainConfig, Trainer};
+use bp_im2col::im2col::pipeline::{self, Mode};
+use bp_im2col::runtime::{literal_f32, literal_i32, literal_from_tensor4, literal_to_tensor4, Runtime};
+use bp_im2col::tensor::{Rng, Tensor4};
+
+/// The fixed layer baked into the `bp_dx` / `bp_dw` artifacts
+/// (`model.P_TEST` on the Python side).
+const P_TEST: ConvParams =
+    ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let rt = Runtime::cpu().expect("PJRT CPU client must construct");
+    if !rt.has_artifact("bp_dx") {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn pallas_dx_artifact_matches_rust_implementation() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.load("bp_dx").expect("load bp_dx");
+    let mut rng = Rng::new(101);
+    let p = P_TEST;
+    let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+    let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+
+    let out = model
+        .run(&[literal_from_tensor4(&dy).unwrap(), literal_from_tensor4(&w).unwrap()])
+        .expect("execute bp_dx");
+    assert_eq!(out.len(), 1);
+    let dx_hlo = literal_to_tensor4(&out[0], [p.b, p.c, p.hi, p.wi]).unwrap();
+
+    // Rust functional pipeline (Algorithm 1).
+    let dx_rust = pipeline::loss_calc(&dy, &w, &p, Mode::BpIm2col);
+    assert!(
+        dx_hlo.max_abs_diff(&dx_rust) < 1e-4,
+        "HLO-executed Pallas kernel disagrees with Rust Algorithm 1: {}",
+        dx_hlo.max_abs_diff(&dx_rust)
+    );
+
+    // And the cycle-stepped simulated accelerator agrees too.
+    let (dx_accel, _) = functional::loss_calc_on_array(&dy, &w, &p, Mode::BpIm2col, 8);
+    assert!(dx_hlo.max_abs_diff(&dx_accel) < 1e-4);
+}
+
+#[test]
+fn pallas_dw_artifact_matches_rust_implementation() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.load("bp_dw").expect("load bp_dw");
+    let mut rng = Rng::new(102);
+    let p = P_TEST;
+    let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
+    let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+
+    let out = model
+        .run(&[literal_from_tensor4(&x).unwrap(), literal_from_tensor4(&dy).unwrap()])
+        .expect("execute bp_dw");
+    let dw_hlo = literal_to_tensor4(&out[0], [p.n, p.c, p.kh, p.kw]).unwrap();
+
+    let dw_rust = pipeline::grad_calc(&x, &dy, &p, Mode::BpIm2col);
+    assert!(
+        dw_hlo.max_abs_diff(&dw_rust) < 1e-3,
+        "HLO-executed Pallas kernel disagrees with Rust Algorithm 2: {}",
+        dw_hlo.max_abs_diff(&dw_rust)
+    );
+
+    let (dw_accel, _) = functional::grad_calc_on_array(&x, &dy, &p, Mode::BpIm2col, 8);
+    assert!(dw_hlo.max_abs_diff(&dw_accel) < 1e-3);
+}
+
+#[test]
+fn predict_artifact_runs_and_is_finite() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.load("predict").expect("load predict");
+    let params = ParamState::init(0);
+    let (x, _) = synthetic_batch(0, 0);
+    let out = model
+        .run(&[
+            literal_f32(&params.w1, &[P1.n as i64, 1, 3, 3]).unwrap(),
+            literal_f32(&params.w2, &[P2.n as i64, P2.c as i64, 3, 3]).unwrap(),
+            literal_f32(&params.wd, &[DENSE_IN as i64, NUM_CLASSES as i64]).unwrap(),
+            literal_f32(&params.bd, &[NUM_CLASSES as i64]).unwrap(),
+            literal_f32(&x, &[BATCH as i64, 1, 16, 16]).unwrap(),
+        ])
+        .expect("execute predict");
+    let logits = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), BATCH * NUM_CLASSES);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_artifact_reduces_loss() {
+    // Short end-to-end smoke: 40 steps must visibly reduce the loss.
+    let Some(rt) = runtime_or_skip() else { return };
+    let trainer = Trainer::new(&rt, TrainConfig { steps: 40, seed: 1, log_every: 0 }).unwrap();
+    let stats = trainer.train().expect("training loop");
+    assert_eq!(stats.losses.len(), 40);
+    assert!(
+        stats.final_loss < stats.initial_loss * 0.85,
+        "loss did not drop: {} -> {}",
+        stats.initial_loss,
+        stats.final_loss
+    );
+    // The simulated accelerator must favour BP-im2col on these stride-2 layers.
+    assert!(stats.sim_cycles_bp < stats.sim_cycles_traditional);
+}
+
+#[test]
+fn train_step_labels_affect_loss() {
+    // Sanity against a silently-constant graph: shuffling labels changes
+    // the loss value.
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.load("train_step").expect("load train_step");
+    let params = ParamState::init(3);
+    let (x, y) = synthetic_batch(0, 3);
+    let run = |labels: &[i32]| -> f32 {
+        let out = model
+            .run(&[
+                literal_f32(&params.w1, &[8, 1, 3, 3]).unwrap(),
+                literal_f32(&params.w2, &[16, 8, 3, 3]).unwrap(),
+                literal_f32(&params.wd, &[256, 10]).unwrap(),
+                literal_f32(&params.bd, &[10]).unwrap(),
+                literal_f32(&x, &[8, 1, 16, 16]).unwrap(),
+                literal_i32(labels, &[8]).unwrap(),
+            ])
+            .unwrap();
+        out[0].get_first_element::<f32>().unwrap()
+    };
+    let l1 = run(&y);
+    let mut y2 = y.clone();
+    y2.rotate_left(1);
+    let l2 = run(&y2);
+    assert_ne!(l1, l2);
+}
