@@ -1,0 +1,46 @@
+//! Bench + regeneration of the Fig. 6–8-style comparisons over the
+//! **extended** workload set: the paper's six CNNs plus the dilated
+//! DeepLab-style backbone and the grouped ResNeXt-style network that
+//! exercise the generalized geometry (asymmetric stride / dilation /
+//! groups).
+
+#[path = "harness.rs"]
+mod harness;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report;
+use bp_im2col::workloads;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let nets = workloads::extended_networks();
+    for pass in Pass::ALL {
+        let runtime = harness::bench(&format!("extended/fig6_{}_8_networks", pass.name()), 1, 5, || {
+            report::fig6_for(&nets, &cfg, pass)
+        });
+        harness::report(
+            &format!("Extended Fig 6 ({} calc): runtime reduction, 8 networks", pass.name()),
+            &report::render_bars("", &runtime, false),
+        );
+        let traffic = report::fig7_for(&nets, &cfg, pass);
+        harness::report(
+            &format!("Extended Fig 7 ({} calc): off-chip traffic reduction", pass.name()),
+            &report::render_bars("", &traffic, false),
+        );
+        let buffers = report::fig8_for(&nets, &cfg, pass);
+        harness::report(
+            &format!("Extended Fig 8 ({} calc): buffer bandwidth reduction + sparsity", pass.name()),
+            &report::render_bars("", &buffers, true),
+        );
+        // The acceptance bar: BP strictly cheaper everywhere, including
+        // the dilated and grouped networks.
+        for b in runtime.iter().chain(&traffic) {
+            assert!(b.bp < b.traditional, "{pass:?} {b:?}");
+        }
+    }
+    harness::report(
+        "Extended storage-overhead reduction (8 networks)",
+        &report::render_bars("", &report::storage_for(&nets, &cfg), false),
+    );
+}

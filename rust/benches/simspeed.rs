@@ -28,26 +28,26 @@ fn main() {
     harness::bench("addrgen/alg1_1M_addrs_div", 1, 10, || {
         let mut acc = 0usize;
         for a in 0..n_addr {
-            if transposed::map_addr(a, &p).is_some() {
+            if transposed::map_addr(a, &p, 0).is_some() {
                 acc += 1;
             }
         }
         acc
     });
     harness::bench("addrgen/alg1_1M_addrs_stream", 1, 10, || {
-        transposed::AddrGen::new(&p).take(n_addr).flatten().count()
+        transposed::AddrGen::new(&p, 0).take(n_addr).flatten().count()
     });
     harness::bench("addrgen/alg2_1M_addrs_div", 1, 10, || {
         let mut acc = 0usize;
         for a in 0..n_addr {
-            if dilated::map_addr(a, &p).is_some() {
+            if dilated::map_addr(a, &p, 0).is_some() {
                 acc += 1;
             }
         }
         acc
     });
     harness::bench("addrgen/alg2_1M_addrs_stream", 1, 10, || {
-        dilated::AddrGen::new(&p).take(n_addr).flatten().count()
+        dilated::AddrGen::new(&p, 0).take(n_addr).flatten().count()
     });
 
     // Window compression.

@@ -1,19 +1,43 @@
 //! Config-file loading for the accelerator (`key = value` format).
 //!
-//! The offline image has no serde/toml, so the parser is hand-rolled:
-//! one `key = value` per line, `#` comments, unknown keys rejected (a
-//! typo must not silently fall back to a default). See `configs/*.cfg`
-//! for the shipped platform presets.
+//! The offline image has no serde/toml (and the default build carries no
+//! external dependencies at all), so the parser and its error type are
+//! hand-rolled: one `key = value` per line, `#` comments, unknown keys
+//! rejected (a typo must not silently fall back to a default). See
+//! `configs/*.cfg` for the shipped platform presets.
 
+use std::fmt;
 use std::path::Path;
-
-use anyhow::{bail, Context, Result};
 
 use crate::accel::config::AccelConfig;
 
+/// Config-parsing error: a human-readable message chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigError(String);
+
+impl ConfigError {
+    fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+
+    /// Prepend a context line (mirrors `anyhow::Context` formatting with
+    /// `{:#}`: `context: cause`).
+    fn context(self, ctx: impl fmt::Display) -> Self {
+        Self(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Parse an accelerator config from `key = value` text, starting from
 /// the defaults.
-pub fn parse(text: &str) -> Result<AccelConfig> {
+pub fn parse(text: &str) -> Result<AccelConfig, ConfigError> {
     let mut cfg = AccelConfig::default();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
@@ -21,20 +45,25 @@ pub fn parse(text: &str) -> Result<AccelConfig> {
             continue;
         }
         let Some((key, value)) = line.split_once('=') else {
-            bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            return Err(ConfigError::new(format!(
+                "line {}: expected `key = value`, got {raw:?}",
+                lineno + 1
+            )));
         };
         let (key, value) = (key.trim(), value.trim());
-        let ctx = || format!("line {}: bad value for {key}: {value:?}", lineno + 1);
+        let bad = || ConfigError::new(format!("line {}: bad value for {key}: {value:?}", lineno + 1));
         match key {
-            "array_dim" => cfg.array_dim = value.parse().with_context(ctx)?,
-            "dram_elems_per_cycle" => cfg.dram.elems_per_cycle = value.parse().with_context(ctx)?,
-            "dram_burst_overhead" => cfg.dram.burst_overhead = value.parse().with_context(ctx)?,
-            "dram_burst_len" => cfg.dram.burst_len = value.parse().with_context(ctx)?,
-            "buf_a_half" => cfg.buf_a_half = value.parse().with_context(ctx)?,
-            "buf_b_half" => cfg.buf_b_half = value.parse().with_context(ctx)?,
-            "reorg_cycles_per_elem" => cfg.reorg_cycles_per_elem = value.parse().with_context(ctx)?,
-            "sparse_skip" => cfg.sparse_skip = value.parse().with_context(ctx)?,
-            other => bail!("line {}: unknown key {other:?}", lineno + 1),
+            "array_dim" => cfg.array_dim = value.parse().map_err(|_| bad())?,
+            "dram_elems_per_cycle" => cfg.dram.elems_per_cycle = value.parse().map_err(|_| bad())?,
+            "dram_burst_overhead" => cfg.dram.burst_overhead = value.parse().map_err(|_| bad())?,
+            "dram_burst_len" => cfg.dram.burst_len = value.parse().map_err(|_| bad())?,
+            "buf_a_half" => cfg.buf_a_half = value.parse().map_err(|_| bad())?,
+            "buf_b_half" => cfg.buf_b_half = value.parse().map_err(|_| bad())?,
+            "reorg_cycles_per_elem" => cfg.reorg_cycles_per_elem = value.parse().map_err(|_| bad())?,
+            "sparse_skip" => cfg.sparse_skip = value.parse().map_err(|_| bad())?,
+            other => {
+                return Err(ConfigError::new(format!("line {}: unknown key {other:?}", lineno + 1)))
+            }
         }
     }
     validate(&cfg)?;
@@ -42,27 +71,27 @@ pub fn parse(text: &str) -> Result<AccelConfig> {
 }
 
 /// Load a config file.
-pub fn load(path: impl AsRef<Path>) -> Result<AccelConfig> {
+pub fn load(path: impl AsRef<Path>) -> Result<AccelConfig, ConfigError> {
     let path = path.as_ref();
-    let text =
-        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
-    parse(&text).with_context(|| format!("parsing {}", path.display()))
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ConfigError::new(format!("reading {}: {e}", path.display())))?;
+    parse(&text).map_err(|e| e.context(format!("parsing {}", path.display())))
 }
 
 /// Sanity constraints on a parsed config.
-pub fn validate(cfg: &AccelConfig) -> Result<()> {
+pub fn validate(cfg: &AccelConfig) -> Result<(), ConfigError> {
     if cfg.array_dim == 0 || cfg.array_dim > 16 {
         // compress/crossbar masks are u16 (one bit per lane).
-        bail!("array_dim must be in 1..=16, got {}", cfg.array_dim);
+        return Err(ConfigError::new(format!("array_dim must be in 1..=16, got {}", cfg.array_dim)));
     }
     if cfg.dram.elems_per_cycle <= 0.0 {
-        bail!("dram_elems_per_cycle must be positive");
+        return Err(ConfigError::new("dram_elems_per_cycle must be positive"));
     }
     if cfg.buf_a_half == 0 || cfg.buf_b_half == 0 {
-        bail!("buffer halves must be non-empty");
+        return Err(ConfigError::new("buffer halves must be non-empty"));
     }
     if cfg.reorg_cycles_per_elem < 0.0 {
-        bail!("reorg_cycles_per_elem must be non-negative");
+        return Err(ConfigError::new("reorg_cycles_per_elem must be non-negative"));
     }
     Ok(())
 }
@@ -122,6 +151,12 @@ mod tests {
         assert!(parse("array_dim = 32").is_err()); // mask is u16
         assert!(parse("dram_elems_per_cycle = -1").is_err());
         assert!(parse("buf_a_half = 0").is_err());
+    }
+
+    #[test]
+    fn load_missing_file_names_the_path() {
+        let err = load("/no/such/file.cfg").unwrap_err();
+        assert!(format!("{err:#}").contains("file.cfg"));
     }
 
     #[test]

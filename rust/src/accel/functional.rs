@@ -5,10 +5,11 @@
 //! pass through the actual component chain — address generation
 //! (Algorithms 1/2) → NZ detection → window compression → compact fetch →
 //! crossbar recovery → cycle-stepped systolic array — and is tested
-//! bit-for-bit against the functional oracle. Intended for small layers
-//! (it is register-accurate); the analytic [`crate::accel::timing`]
-//! engine covers full-size layers and must agree with the cycle counts
-//! measured here.
+//! bit-for-bit against the functional oracle. Grouped layers run their
+//! `G` per-group GEMMs back to back on the same array. Intended for
+//! small layers (it is register-accurate); the analytic
+//! [`crate::accel::timing`] engine covers full-size layers and must
+//! agree with the cycle counts measured here.
 
 use crate::accel::tiling::{GemmShape, Tiling};
 use crate::conv::ConvParams;
@@ -106,16 +107,26 @@ pub fn loss_calc_on_array(
     mode: Mode,
     t: usize,
 ) -> (Tensor4, u64) {
-    let a = traditional::lower_loss_a(w, p);
     let shape = GemmShape::from_pass(Pass::Loss, p);
-    let b = match mode {
-        Mode::Traditional => traditional::lower_loss_b(&reorg::dilate_pad_loss(dy, p), p),
-        Mode::BpIm2col => gather_via_datapath(&dy.data, shape.k, shape.j, t, |addr| {
-            transposed::map_addr(addr, p)
-        }),
+    let dyz = match mode {
+        Mode::Traditional => Some(reorg::dilate_pad_loss(dy, p)),
+        Mode::BpIm2col => None,
     };
-    let (out, cycles) = tiled_gemm(&a, &b, t);
-    (traditional::loss_from_gemm(&out, p), cycles)
+    let mut dx = Tensor4::zeros([p.b, p.c, p.hi, p.wi]);
+    let mut cycles = 0u64;
+    for g in 0..p.groups {
+        let a = traditional::lower_loss_a(w, p, g);
+        let b = match &dyz {
+            Some(z) => traditional::lower_loss_b(z, p, g),
+            None => gather_via_datapath(&dy.data, shape.k, shape.j, t, |addr| {
+                transposed::map_addr(addr, p, g)
+            }),
+        };
+        let (out, cyc) = tiled_gemm(&a, &b, t);
+        cycles += cyc;
+        traditional::loss_from_gemm_group(&out, p, g, &mut dx);
+    }
+    (dx, cycles)
 }
 
 /// Gradient calculation executed on the simulated accelerator.
@@ -127,15 +138,26 @@ pub fn grad_calc_on_array(
     t: usize,
 ) -> (Tensor4, u64) {
     let shape = GemmShape::from_pass(Pass::Grad, p);
-    let a = match mode {
-        Mode::Traditional => traditional::lower_grad_a(&reorg::dilate_loss(dy, p), p),
-        Mode::BpIm2col => gather_via_datapath(&dy.data, shape.m, shape.k, t, |addr| {
-            dilated::map_addr(addr, p)
-        }),
+    let dyd = match mode {
+        Mode::Traditional => Some(reorg::dilate_loss(dy, p)),
+        Mode::BpIm2col => None,
     };
-    let b = traditional::lower_grad_b(&reorg::pad_input(x, p), p);
-    let (out, cycles) = tiled_gemm(&a, &b, t);
-    (traditional::grad_from_gemm(&out, p), cycles)
+    let xpad = reorg::pad_input(x, p);
+    let mut dw = Tensor4::zeros([p.n, p.cg(), p.kh, p.kw]);
+    let mut cycles = 0u64;
+    for g in 0..p.groups {
+        let a = match &dyd {
+            Some(z) => traditional::lower_grad_a(z, p, g),
+            None => gather_via_datapath(&dy.data, shape.m, shape.k, t, |addr| {
+                dilated::map_addr(addr, p, g)
+            }),
+        };
+        let b = traditional::lower_grad_b(&xpad, p, g);
+        let (out, cyc) = tiled_gemm(&a, &b, t);
+        cycles += cyc;
+        traditional::grad_from_gemm_group(&out, p, g, &mut dw);
+    }
+    (dw, cycles)
 }
 
 #[cfg(test)]
@@ -149,7 +171,7 @@ mod tests {
     fn tensors(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
         let mut rng = Rng::new(seed);
         let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
-        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
         (x, w, dy)
     }
@@ -165,7 +187,7 @@ mod tests {
 
     #[test]
     fn array_loss_matches_oracle_both_modes() {
-        let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(1, 2, 9, 9, 2, 3, 3, 2, 1, 1);
         let (_, w, dy) = tensors(&p, 61);
         let oracle = conv2d_bwd_input(&dy, &w, &p);
         for mode in Mode::ALL {
@@ -176,7 +198,7 @@ mod tests {
 
     #[test]
     fn array_grad_matches_oracle_both_modes() {
-        let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(1, 2, 9, 9, 2, 3, 3, 2, 1, 1);
         let (x, _, dy) = tensors(&p, 62);
         let oracle = conv2d_bwd_weight(&x, &dy, &p);
         for mode in Mode::ALL {
@@ -186,8 +208,31 @@ mod tests {
     }
 
     #[test]
+    fn array_matches_oracle_generalized_geometries() {
+        for (i, p) in [
+            ConvParams::basic(1, 2, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3),
+            ConvParams::basic(1, 2, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2),
+            ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(2),
+            ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let (x, w, dy) = tensors(&p, 90 + i as u64);
+            let dx_oracle = conv2d_bwd_input(&dy, &w, &p);
+            let dw_oracle = conv2d_bwd_weight(&x, &dy, &p);
+            for mode in Mode::ALL {
+                let (dx, _) = loss_calc_on_array(&dy, &w, &p, mode, 8);
+                assert!(dx.max_abs_diff(&dx_oracle) < 2e-4, "{mode:?} dX {}", p.id());
+                let (dw, _) = grad_calc_on_array(&x, &dy, &p, mode, 8);
+                assert!(dw.max_abs_diff(&dw_oracle) < 2e-3, "{mode:?} dW {}", p.id());
+            }
+        }
+    }
+
+    #[test]
     fn array_modes_agree_bitwise() {
-        let p = ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 1, 10, 10, 2, 3, 3, 2, 0, 0);
         let (x, w, dy) = tensors(&p, 63);
         let (dx_t, _) = loss_calc_on_array(&dy, &w, &p, Mode::Traditional, 8);
         let (dx_b, _) = loss_calc_on_array(&dy, &w, &p, Mode::BpIm2col, 8);
@@ -201,8 +246,24 @@ mod tests {
     fn cycle_stepped_agrees_with_analytic_compute() {
         // The register-accurate array must pay exactly the cycles the
         // analytic timing model charges as compute.
-        let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(1, 2, 9, 9, 2, 3, 3, 2, 1, 1);
         let (x, w, dy) = tensors(&p, 64);
+        let cfg = AccelConfig { array_dim: 8, ..AccelConfig::default() };
+        for mode in Mode::ALL {
+            let (_, c_loss) = loss_calc_on_array(&dy, &w, &p, mode, 8);
+            let m_loss = simulate_pass(Pass::Loss, mode, &p, &cfg);
+            assert_eq!(c_loss as f64, m_loss.compute_cycles, "{mode:?} loss");
+            let (_, c_grad) = grad_calc_on_array(&x, &dy, &p, mode, 8);
+            let m_grad = simulate_pass(Pass::Grad, mode, &p, &cfg);
+            assert_eq!(c_grad as f64, m_grad.compute_cycles, "{mode:?} grad");
+        }
+    }
+
+    #[test]
+    fn cycle_stepped_agrees_with_analytic_compute_grouped() {
+        // Same consistency on a grouped layer: G per-group GEMMs.
+        let p = ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(2);
+        let (x, w, dy) = tensors(&p, 65);
         let cfg = AccelConfig { array_dim: 8, ..AccelConfig::default() };
         for mode in Mode::ALL {
             let (_, c_loss) = loss_calc_on_array(&dy, &w, &p, mode, 8);
@@ -217,12 +278,12 @@ mod tests {
     #[test]
     fn datapath_gather_equals_direct_gather() {
         // compress -> fetch -> crossbar must reproduce the plain gather.
-        let p = ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
-        let (_, _, dy) = tensors(&p, 65);
+        let p = ConvParams::basic(1, 1, 8, 8, 2, 3, 3, 2, 1, 1);
+        let (_, _, dy) = tensors(&p, 66);
         let shape = GemmShape::from_pass(Pass::Loss, &p);
         let via_hw = gather_via_datapath(&dy.data, shape.k, shape.j, 16, |a| {
-            transposed::map_addr(a, &p)
+            transposed::map_addr(a, &p, 0)
         });
-        assert_eq!(via_hw, transposed::gather_matrix(&dy, &p));
+        assert_eq!(via_hw, transposed::gather_matrix(&dy, &p, 0));
     }
 }

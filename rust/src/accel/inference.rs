@@ -30,17 +30,19 @@ impl FwdMetrics {
     }
 }
 
-/// Inference GEMM `A[N x C*Kh*Kw] . B[C*Kh*Kw x B*Ho*Wo]`.
+/// Inference GEMMs: `G` per-group `A_g[N/G x (C/G)*Kh*Kw] .
+/// B_g[(C/G)*Kh*Kw x B*Ho*Wo]` (one GEMM for ungrouped layers).
 pub fn simulate_fwd(p: &ConvParams, cfg: &AccelConfig) -> FwdMetrics {
-    let shape = GemmShape { m: p.n, k: p.c * p.kh * p.kw, j: p.b * p.ho() * p.wo() };
+    let shape = GemmShape { m: p.ng(), k: p.cg() * p.kh * p.kw, j: p.b * p.ho() * p.wo() };
     let til = Tiling::new(shape, cfg.array_dim);
+    let groups = p.groups as f64;
     FwdMetrics {
-        compute_cycles: til.compute_cycles(),
+        compute_cycles: til.compute_cycles() * groups,
         // Inference-style stationary addr-gen: 3 divider stages (Table
-        // III's 51 cycles), once per stripe.
-        prologue_cycles: (til.n_j * 3 * DIV_LATENCY) as f64,
+        // III's 51 cycles), once per stripe of every group's GEMM.
+        prologue_cycles: (til.n_j * 3 * DIV_LATENCY) as f64 * groups,
         dram_bytes: ((p.input_elems() + p.kernel_elems() + p.output_elems()) * 4) as u64,
-        macs: shape.macs(),
+        macs: shape.macs() * p.groups as u64,
     }
 }
 

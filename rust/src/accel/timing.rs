@@ -17,6 +17,10 @@
 //!   lanes map to more than one contiguous compact run pay one extra
 //!   fetch cycle per additional run.
 //! * DRAM fills overlap compute per stripe; any excess is a stall.
+//! * Grouped layers run `G` per-group GEMMs back to back: compute,
+//!   prologue, buffer reads and output traffic scale by `G` over the
+//!   per-group tiling, while the reorganization pass (whole `dY`) is
+//!   paid once per layer.
 
 use crate::accel::config::AccelConfig;
 use crate::accel::metrics::{LayerMetrics, PassMetrics};
@@ -24,7 +28,7 @@ use crate::accel::tiling::{GemmShape, Tiling};
 use crate::conv::ConvParams;
 use crate::im2col::pipeline::{Mode, Pass};
 use crate::im2col::sparsity;
-use crate::sim::addrgen::{prologue_cycles, Module};
+use crate::sim::addrgen::{prologue_cycles_for, Module};
 use crate::sim::dram::DramTraffic;
 use crate::sim::reorg_engine::reorg_cost;
 
@@ -36,7 +40,8 @@ const META_BYTES_PER_WINDOW: u64 = 6;
 /// are ALL structural zeros (the window lies entirely inside
 /// zero-inserted rows) — the blocks the `sparse_skip` future-work option
 /// elides. A lane at flat position `q` (within `B*Ho''*Wo''`) is
-/// non-zero iff `h % S == 0 && w % S == 0` for its `(h, w)`.
+/// non-zero iff `h % Sh == 0 && w % Sw == 0` for its `(h, w)`. The
+/// window pattern is identical for every matrix row and every group.
 pub fn grad_zero_windows(p: &ConvParams, t: usize) -> usize {
     let (h2, w2) = (p.ho2(), p.wo2());
     let k = p.b * h2 * w2;
@@ -51,12 +56,12 @@ pub fn grad_zero_windows(p: &ConvParams, t: usize) -> usize {
         while q < end {
             let w = q % w2;
             let h = (q / w2) % h2;
-            if h % p.s == 0 {
-                // Row contains non-zeros every S lanes; the window
+            if h % p.sh == 0 {
+                // Row contains non-zeros every Sw lanes; the window
                 // segment [w, min(w2, w + remaining)) contains one iff a
-                // multiple of S falls inside.
+                // multiple of Sw falls inside.
                 let seg_end = (w + (end - q)).min(w2);
-                let first_mult = w.div_ceil(p.s) * p.s;
+                let first_mult = w.div_ceil(p.sw) * p.sw;
                 if first_mult < seg_end {
                     any_nz = true;
                     break;
@@ -97,12 +102,16 @@ fn grad_window_crossings(p: &ConvParams, t: usize) -> usize {
 /// Simulate one backpropagation pass of one layer.
 pub fn simulate_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> PassMetrics {
     let t = cfg.array_dim;
+    let groups = p.groups;
+    // Per-group GEMM; the layer runs `groups` of them.
     let shape = GemmShape::from_pass(pass, p);
     let til = Tiling::new(shape, t);
-    let mut compute_cycles = til.compute_cycles();
+    let mut compute_cycles = til.compute_cycles() * groups as f64;
 
     // Future-work sparse computation: skip the dilated-mode blocks whose
     // dynamic window is entirely zero-insertions (see `grad_zero_windows`).
+    // The window pattern is group-independent, so the skipped fraction
+    // applies to every group's GEMM alike.
     if cfg.sparse_skip && mode == Mode::BpIm2col && pass == Pass::Grad {
         let skipped = grad_zero_windows(p, t);
         compute_cycles *= 1.0 - skipped as f64 / til.n_k as f64;
@@ -118,12 +127,13 @@ pub fn simulate_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) 
         Pass::Grad => dyn_stats.expect("grad has dynamic stats").sparsity(),
     };
 
-    // ---- prologue: each addr-gen pipeline restarts per stationary stripe ----
-    let prologue_per_stripe = (prologue_cycles(mode, pass, Module::Stationary)
-        + prologue_cycles(mode, pass, Module::Dynamic)) as f64;
-    let prologue = til.n_j as f64 * prologue_per_stripe;
+    // ---- prologue: each addr-gen pipeline restarts per stationary stripe
+    //      of every group's GEMM ----
+    let prologue_per_stripe = (prologue_cycles_for(mode, pass, Module::Stationary, p)
+        + prologue_cycles_for(mode, pass, Module::Dynamic, p)) as f64;
+    let prologue = (til.n_j * groups) as f64 * prologue_per_stripe;
 
-    // ---- reorganization (baseline only) ----
+    // ---- reorganization (baseline only; whole dY, once per layer) ----
     let (reorg_cycles, reorg_bytes, storage_overhead) = match mode {
         Mode::Traditional => {
             let r = reorg_cost(pass, p, cfg.reorg_cycles_per_elem);
@@ -133,8 +143,8 @@ pub fn simulate_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) 
     };
 
     // ---- on-chip buffer reads toward the array (Fig. 8) ----
-    let b_dense = til.buffer_b_dense_reads();
-    let a_dense = til.buffer_a_dense_reads();
+    let b_dense = til.buffer_b_dense_reads() * groups as u64;
+    let a_dense = til.buffer_a_dense_reads() * groups as u64;
     let (buffer_a_reads, buffer_b_reads) = match (mode, pass) {
         // Baseline streams the zero-spaced operands densely.
         (Mode::Traditional, _) => (a_dense, b_dense),
@@ -154,59 +164,52 @@ pub fn simulate_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) 
     };
 
     // ---- off-chip traffic (Fig. 7) ----
-    // Unique underlying operand data, fetched once per pass into the
-    // double-buffered on-chip buffers (working-set rule, DESIGN.md §5),
-    // except the dynamic matrix which is re-streamed per stripe when it
-    // does not fit in one buffer-A half.
+    // Unique underlying operand data over all groups, fetched once per
+    // pass into the double-buffered on-chip buffers (working-set rule,
+    // DESIGN.md §5), except the dynamic matrix which is re-streamed per
+    // stripe when it does not fit in one buffer-A half.
     // With the kb-outer block schedule only an `M x T` panel of A must be
     // resident in a buffer-A half at a time (it is re-read toward the
     // array once per stripe from on-chip, counted in `buffer_a_reads`),
     // so each mode fetches its dynamic matrix from DRAM exactly once.
-    let (a_unique_trad, a_unique_bp, _a_windows) = match pass {
-        // Loss: dynamic matrix is the dense rotated kernel.
+    let (a_unique_trad, a_unique_bp) = match pass {
+        // Loss: dynamic matrix is the dense rotated kernel (all groups).
         Pass::Loss => {
             let e = p.kernel_elems();
-            (e, e, 0)
+            (e, e)
         }
-        // Grad: dynamic matrix is the zero-inserted dY (virtual) vs the
-        // compact dY (BP); windows = one per (row, kb).
-        Pass::Grad => (shape.m * shape.k, p.output_elems(), shape.m * til.n_k),
+        // Grad: dynamic matrix is the zero-inserted dY (virtual, all
+        // groups = N rows) vs the compact dY (BP).
+        Pass::Grad => (groups * shape.m * shape.k, p.output_elems()),
     };
     debug_assert!(
         shape.m * t <= cfg.buf_a_half,
         "dynamic panel must fit one buffer-A half"
     );
-    let (a_mult_trad, a_mult_bp) = (1usize, 1usize);
 
-    let (b_unique_trad, b_unique_bp, _b_windows) = match pass {
+    let (b_unique_trad, b_unique_bp) = match pass {
         // Loss: stationary source is the zero-spaced dYz vs compact dY.
-        Pass::Loss => (
-            p.b * p.n * p.ho3() * p.wo3(),
-            p.output_elems(),
-            // one window per stationary block row
-            til.n_k * til.n_j * t,
-        ),
+        Pass::Loss => (p.b * p.n * p.ho3() * p.wo3(), p.output_elems()),
         // Grad: stationary source is the padded input vs compact input
         // (padding zeros are never stored off-chip in either mode, but
         // the baseline materializes Xpad during its explicit pipeline).
         Pass::Grad => (
             p.b * p.c * (p.hi + 2 * p.ph) * (p.wi + 2 * p.pw),
             p.input_elems(),
-            til.n_k * til.n_j * t,
         ),
     };
 
-    let out_bytes = (shape.m * shape.j * 4) as u64;
+    let out_bytes = (groups * shape.m * shape.j * 4) as u64;
     let traffic = match mode {
         Mode::Traditional => DramTraffic {
-            a_bytes: (a_unique_trad * a_mult_trad * 4) as u64,
+            a_bytes: (a_unique_trad * 4) as u64,
             b_bytes: (b_unique_trad * 4) as u64,
             out_bytes,
             reorg_bytes,
             meta_bytes: 0,
         },
         Mode::BpIm2col => DramTraffic {
-            a_bytes: (a_unique_bp * a_mult_bp * 4) as u64,
+            a_bytes: (a_unique_bp * 4) as u64,
             b_bytes: (b_unique_bp * 4) as u64,
             out_bytes,
             reorg_bytes: 0,
@@ -231,17 +234,18 @@ pub fn simulate_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) 
     // ---- extra fetch cycles from split compressed runs (dilated mode) ----
     let extra_fetch_cycles = match (mode, pass) {
         (Mode::BpIm2col, Pass::Grad) => {
-            (grad_window_crossings(p, t) * til.n_j) as f64 * shape.m as f64 / t as f64
+            (grad_window_crossings(p, t) * til.n_j * groups) as f64 * shape.m as f64 / t as f64
         }
         _ => 0.0,
     };
 
     // ---- DRAM fill stalls per stripe ----
+    let stripes = (til.n_j * groups) as f64;
     let fill_elems_per_stripe =
-        (traffic.a_bytes + traffic.b_bytes + traffic.meta_bytes) as f64 / 4.0 / til.n_j as f64;
+        (traffic.a_bytes + traffic.b_bytes + traffic.meta_bytes) as f64 / 4.0 / stripes;
     let fill_cycles = cfg.dram.transfer_cycles(fill_elems_per_stripe.ceil() as usize);
     let stripe_compute = til.stripe_compute_cycles();
-    let stall_cycles = til.n_j as f64 * (fill_cycles - stripe_compute).max(0.0);
+    let stall_cycles = stripes * (fill_cycles - stripe_compute).max(0.0);
 
     PassMetrics {
         pass,
@@ -256,7 +260,7 @@ pub fn simulate_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) 
         buffer_b_reads,
         storage_overhead_bytes,
         sparsity: pass_sparsity,
-        macs: shape.macs(),
+        macs: shape.macs() * groups as u64,
     }
 }
 
@@ -302,6 +306,54 @@ mod tests {
                     bp.total_cycles()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn bp_wins_on_generalized_layers_too() {
+        // Dilated (DeepLab-style), grouped (ResNeXt-style) and depthwise
+        // layers: BP-im2col must stay strictly cheaper in cycles and
+        // traffic.
+        for p in [
+            ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2),
+            ConvParams::square(28, 512, 512, 3, 1, 4).with_dilation(4, 4),
+            ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32),
+            ConvParams::square(112, 64, 64, 3, 2, 1).with_groups(64),
+            ConvParams::square(56, 64, 64, 3, 1, 1).with_stride(2, 1),
+        ] {
+            p.validate().unwrap();
+            for pass in Pass::ALL {
+                let trad = simulate_pass(pass, Mode::Traditional, &p, &cfg());
+                let bp = simulate_pass(pass, Mode::BpIm2col, &p, &cfg());
+                assert!(
+                    bp.total_cycles() < trad.total_cycles(),
+                    "{} {pass:?}: cycles {} vs {}",
+                    p.id(),
+                    bp.total_cycles(),
+                    trad.total_cycles()
+                );
+                assert!(
+                    bp.traffic.total() < trad.traffic.total(),
+                    "{} {pass:?}: traffic {} vs {}",
+                    p.id(),
+                    bp.traffic.total(),
+                    trad.traffic.total()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_layer_totals_scale_from_per_group_gemm() {
+        // A grouped layer's compute is G x the per-group tiling, and its
+        // MACs are 1/G of the dense layer's (fewer cross-channel terms).
+        let dense = ConvParams::square(56, 128, 128, 3, 2, 1);
+        let grouped = dense.with_groups(32);
+        for pass in Pass::ALL {
+            let d = simulate_pass(pass, Mode::BpIm2col, &dense, &cfg());
+            let g = simulate_pass(pass, Mode::BpIm2col, &grouped, &cfg());
+            assert_eq!(d.macs, 32 * g.macs, "{pass:?}");
+            assert!(g.compute_cycles < d.compute_cycles, "{pass:?}");
         }
     }
 
@@ -404,7 +456,7 @@ mod tests {
         // Wo'' = 9: windows of 16 virtual lanes almost always cross.
         assert!(grad_window_crossings(&p, 16) > 0);
         // A Wo'' that is a multiple of 16 never crosses.
-        let p2 = ConvParams { b: 1, c: 1, hi: 33, wi: 33, n: 1, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p2 = ConvParams::basic(1, 1, 33, 33, 1, 3, 3, 2, 1, 1);
         assert_eq!(p2.wo2(), 33);
         assert!(grad_window_crossings(&p2, 16) > 0); // 33 % 16 != 0
     }
@@ -435,11 +487,13 @@ mod tests {
     #[test]
     fn zero_window_count_brute_force_check() {
         // Cross-check the arithmetic window classifier against a direct
-        // per-lane enumeration.
+        // per-lane enumeration, including asymmetric strides.
         for p in [
             ConvParams::square(9, 1, 1, 3, 2, 1),
             ConvParams::square(14, 4, 4, 3, 2, 1),
-            ConvParams { b: 2, c: 1, hi: 11, wi: 7, n: 1, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
+            ConvParams::basic(2, 1, 11, 7, 1, 3, 2, 3, 1, 0),
+            ConvParams::basic(1, 1, 12, 9, 1, 3, 3, 1, 1, 1).with_stride(2, 3),
+            ConvParams::basic(1, 1, 9, 12, 1, 3, 3, 1, 1, 1).with_stride(3, 2),
         ] {
             let t = 16;
             let (h2, w2) = (p.ho2(), p.wo2());
@@ -451,7 +505,7 @@ mod tests {
                 let any = (start..end).any(|q| {
                     let w = q % w2;
                     let h = (q / w2) % h2;
-                    h % p.s == 0 && w % p.s == 0
+                    h % p.sh == 0 && w % p.sw == 0
                 });
                 if !any {
                     brute += 1;

@@ -1,9 +1,14 @@
-//! Convolution layer parameters and the paper's derived shape symbols.
+//! Convolution layer parameters and the paper's derived shape symbols,
+//! generalized to asymmetric strides, kernel dilation and grouped
+//! convolution (DESIGN.md §2).
 
-/// Parameters of one convolutional layer, following the paper's Table I.
+/// Parameters of one convolutional layer, following the paper's Table I
+/// generalized beyond square/symmetric geometry.
 ///
-/// Forward: `I^{l+1} [B,N,Ho,Wo] = I^l [B,C,Hi,Wi] * W^l [N,C,Kh,Kw]`
-/// with stride `S` and zero-padding `(Ph, Pw)`.
+/// Forward: `I^{l+1} [B,N,Ho,Wo] = I^l [B,C,Hi,Wi] * W^l [N,C/G,Kh,Kw]`
+/// with strides `(Sh, Sw)`, zero-padding `(Ph, Pw)`, kernel dilation
+/// `(Dh, Dw)` and `G` channel groups. The paper's geometry is the
+/// special case `Sh == Sw`, `Dh == Dw == 1`, `G == 1`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ConvParams {
     /// Batch size `B` (the paper evaluates with 2).
@@ -20,19 +25,46 @@ pub struct ConvParams {
     pub kh: usize,
     /// Kernel width `Kw`.
     pub kw: usize,
-    /// Stride `S` (same in both directions, as in the paper).
-    pub s: usize,
+    /// Stride in the height direction `Sh`.
+    pub sh: usize,
+    /// Stride in the width direction `Sw`.
+    pub sw: usize,
     /// Padding in the height direction `Ph`.
     pub ph: usize,
     /// Padding in the width direction `Pw`.
     pub pw: usize,
+    /// Kernel dilation in the height direction `Dh` (1 = dense).
+    pub dh: usize,
+    /// Kernel dilation in the width direction `Dw` (1 = dense).
+    pub dw: usize,
+    /// Channel groups `G` (`C` and `N` must both divide; `G == C == N`
+    /// is a depthwise convolution).
+    pub groups: usize,
 }
 
 impl ConvParams {
     /// Square-image, square-kernel constructor matching the paper's
-    /// `Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw)` layer notation.
+    /// `Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw)` layer notation (dense, ungrouped).
     pub const fn square(hi: usize, c: usize, n: usize, k: usize, s: usize, p: usize) -> Self {
-        Self { b: 2, c, hi, wi: hi, n, kh: k, kw: k, s, ph: p, pw: p }
+        Self::basic(2, c, hi, hi, n, k, k, s, p, p)
+    }
+
+    /// Dense ungrouped layer with symmetric stride `s` — the seed
+    /// geometry every pre-existing call site used.
+    #[allow(clippy::too_many_arguments)]
+    pub const fn basic(
+        b: usize,
+        c: usize,
+        hi: usize,
+        wi: usize,
+        n: usize,
+        kh: usize,
+        kw: usize,
+        s: usize,
+        ph: usize,
+        pw: usize,
+    ) -> Self {
+        Self { b, c, hi, wi, n, kh, kw, sh: s, sw: s, ph, pw, dh: 1, dw: 1, groups: 1 }
     }
 
     /// With a different batch size.
@@ -41,49 +73,99 @@ impl ConvParams {
         self
     }
 
-    /// Output height `Ho = floor((Hi + 2Ph - Kh)/S) + 1`.
+    /// With asymmetric strides `(Sh, Sw)`.
+    pub const fn with_stride(mut self, sh: usize, sw: usize) -> Self {
+        self.sh = sh;
+        self.sw = sw;
+        self
+    }
+
+    /// With kernel dilation `(Dh, Dw)`.
+    pub const fn with_dilation(mut self, dh: usize, dw: usize) -> Self {
+        self.dh = dh;
+        self.dw = dw;
+        self
+    }
+
+    /// With `g` channel groups.
+    pub const fn with_groups(mut self, g: usize) -> Self {
+        self.groups = g;
+        self
+    }
+
+    /// Effective (dilated) kernel height `Kh' = Dh(Kh-1) + 1`.
+    pub const fn kh_eff(&self) -> usize {
+        self.dh * (self.kh - 1) + 1
+    }
+
+    /// Effective (dilated) kernel width `Kw' = Dw(Kw-1) + 1`.
+    pub const fn kw_eff(&self) -> usize {
+        self.dw * (self.kw - 1) + 1
+    }
+
+    /// Input channels per group `C/G`.
+    pub const fn cg(&self) -> usize {
+        self.c / self.groups
+    }
+
+    /// Output channels per group `N/G`.
+    pub const fn ng(&self) -> usize {
+        self.n / self.groups
+    }
+
+    /// Output height `Ho = floor((Hi + 2Ph - Dh(Kh-1) - 1)/Sh) + 1`.
     pub const fn ho(&self) -> usize {
-        (self.hi + 2 * self.ph - self.kh) / self.s + 1
+        (self.hi + 2 * self.ph - self.kh_eff()) / self.sh + 1
     }
 
     /// Output width `Wo`.
     pub const fn wo(&self) -> usize {
-        (self.wi + 2 * self.pw - self.kw) / self.s + 1
+        (self.wi + 2 * self.pw - self.kw_eff()) / self.sw + 1
     }
 
-    /// `Ho'' = Ho + (Ho-1)(S-1)` — height of the zero-inserted loss map.
+    /// `Ho'' = Ho + (Ho-1)(Sh-1)` — height of the zero-inserted loss map.
     pub const fn ho2(&self) -> usize {
-        let ho = self.ho();
-        ho + (ho - 1) * (self.s - 1)
+        (self.ho() - 1) * self.sh + 1
     }
 
-    /// `Wo'' = Wo + (Wo-1)(S-1)`.
+    /// `Wo'' = Wo + (Wo-1)(Sw-1)`.
     pub const fn wo2(&self) -> usize {
-        let wo = self.wo();
-        wo + (wo - 1) * (self.s - 1)
+        (self.wo() - 1) * self.sw + 1
     }
 
-    /// `Ho''' = Ho + 2(Kh-1-Ph) + (Ho-1)(S-1)` — height of the
-    /// zero-inserted *and* zero-padded loss map used by loss calculation.
+    /// Height extension of the loss-calculation padding:
+    /// `Eh = Dh(Kh-1) - Ph` (the generalized `Kh-1-Ph` of Eq. 2).
+    pub const fn ext_h(&self) -> usize {
+        self.dh * (self.kh - 1) - self.ph
+    }
+
+    /// Width counterpart of [`Self::ext_h`].
+    pub const fn ext_w(&self) -> usize {
+        self.dw * (self.kw - 1) - self.pw
+    }
+
+    /// `Ho''' = Ho'' + 2(Dh(Kh-1) - Ph)` — height of the zero-inserted
+    /// *and* zero-padded loss map used by loss calculation.
     pub const fn ho3(&self) -> usize {
-        self.ho2() + 2 * (self.kh - 1 - self.ph)
+        self.ho2() + 2 * self.ext_h()
     }
 
-    /// `Wo''' = Wo + 2(Kw-1-Pw) + (Wo-1)(S-1)`.
+    /// `Wo''' = Wo'' + 2(Dw(Kw-1) - Pw)`.
     pub const fn wo3(&self) -> usize {
-        self.wo2() + 2 * (self.kw - 1 - self.pw)
+        self.wo2() + 2 * self.ext_w()
     }
 
     /// Rows of the input that actually received gradient:
-    /// `(Ho-1)S + Kh - 2Ph`. Equals `Hi` when the forward floor-division
-    /// is exact; otherwise the last `Hi - hi_eff` rows have zero loss.
+    /// `(Ho-1)Sh + Dh(Kh-1) + 1 - 2Ph`. Equals `Hi` when the forward
+    /// floor-division is exact; otherwise the last `Hi - hi_eff` rows
+    /// have zero loss.
     pub const fn hi_eff(&self) -> usize {
-        (self.ho() - 1) * self.s + self.kh - 2 * self.ph
+        (self.ho() - 1) * self.sh + self.kh_eff() - 2 * self.ph
     }
 
     /// Column counterpart of [`Self::hi_eff`].
     pub const fn wi_eff(&self) -> usize {
-        (self.wo() - 1) * self.s + self.kw - 2 * self.pw
+        (self.wo() - 1) * self.sw + self.kw_eff() - 2 * self.pw
     }
 
     /// Number of elements of the input `I^l`.
@@ -91,9 +173,9 @@ impl ConvParams {
         self.b * self.c * self.hi * self.wi
     }
 
-    /// Number of elements of the kernel `W^l`.
+    /// Number of elements of the kernel `W^l` (`N x C/G x Kh x Kw`).
     pub const fn kernel_elems(&self) -> usize {
-        self.n * self.c * self.kh * self.kw
+        self.n * self.cg() * self.kh * self.kw
     }
 
     /// Number of elements of the output / loss map `dY`.
@@ -103,37 +185,72 @@ impl ConvParams {
 
     /// MACs of the forward convolution.
     pub const fn fwd_macs(&self) -> usize {
-        self.output_elems() * self.c * self.kh * self.kw
+        self.output_elems() * self.cg() * self.kh * self.kw
     }
 
-    /// GEMM dimensions `(M, K, Ncols)` of the **loss calculation**
-    /// (`Tr(dX) [C x B*Hi*Wi] = A [C x N*Kh*Kw] . B [N*Kh*Kw x B*Hi*Wi]`).
+    /// Per-group GEMM dimensions `(M, K, Ncols)` of the **loss
+    /// calculation** (`Tr(dX_g) [C/G x B*Hi*Wi] = A_g [C/G x (N/G)*Kh*Kw]
+    /// . B_g [(N/G)*Kh*Kw x B*Hi*Wi]`); the layer runs `G` such GEMMs.
     pub const fn loss_gemm_dims(&self) -> (usize, usize, usize) {
-        (self.c, self.n * self.kh * self.kw, self.b * self.hi * self.wi)
+        (self.cg(), self.ng() * self.kh * self.kw, self.b * self.hi * self.wi)
     }
 
-    /// GEMM dimensions `(M, K, Ncols)` of the **gradient calculation**
-    /// (`dW [N x C*Kh*Kw] = A [N x B*Ho''*Wo''] . B [B*Ho''*Wo'' x C*Kh*Kw]`).
+    /// Per-group GEMM dimensions `(M, K, Ncols)` of the **gradient
+    /// calculation** (`dW_g [N/G x (C/G)*Kh*Kw] = A_g [N/G x B*Ho''*Wo'']
+    /// . B_g [B*Ho''*Wo'' x (C/G)*Kh*Kw]`); the layer runs `G` such GEMMs.
     pub const fn grad_gemm_dims(&self) -> (usize, usize, usize) {
-        (self.n, self.b * self.ho2() * self.wo2(), self.c * self.kh * self.kw)
+        (self.ng(), self.b * self.ho2() * self.wo2(), self.cg() * self.kh * self.kw)
     }
 
-    /// Paper-style layer id string `Hi/C/N/Kh/S/Ph`.
+    /// Paper-style layer id string `Hi/C/N/Kh/S/Ph`, with `ShxSw` in the
+    /// stride slot when asymmetric and `/dD` / `/gG` suffixes for
+    /// dilated / grouped layers (identical to the seed format for the
+    /// paper's dense symmetric geometry).
     pub fn id(&self) -> String {
-        format!("{}/{}/{}/{}/{}/{}", self.hi, self.c, self.n, self.kh, self.s, self.ph)
+        let stride = if self.sh == self.sw {
+            self.sh.to_string()
+        } else {
+            format!("{}x{}", self.sh, self.sw)
+        };
+        let mut id = format!("{}/{}/{}/{}/{}/{}", self.hi, self.c, self.n, self.kh, stride, self.ph);
+        if self.dh != 1 || self.dw != 1 {
+            if self.dh == self.dw {
+                id.push_str(&format!("/d{}", self.dh));
+            } else {
+                id.push_str(&format!("/d{}x{}", self.dh, self.dw));
+            }
+        }
+        if self.groups != 1 {
+            id.push_str(&format!("/g{}", self.groups));
+        }
+        id
     }
 
     /// Validity checks used by tests and the workload tables.
     pub fn validate(&self) -> Result<(), String> {
-        if self.kh == 0 || self.kw == 0 || self.s == 0 || self.b == 0 || self.c == 0 || self.n == 0 {
+        if self.kh == 0
+            || self.kw == 0
+            || self.sh == 0
+            || self.sw == 0
+            || self.dh == 0
+            || self.dw == 0
+            || self.b == 0
+            || self.c == 0
+            || self.n == 0
+            || self.groups == 0
+        {
             return Err(format!("degenerate parameter in {self:?}"));
         }
-        if self.hi + 2 * self.ph < self.kh || self.wi + 2 * self.pw < self.kw {
+        if self.c % self.groups != 0 || self.n % self.groups != 0 {
+            return Err(format!("groups must divide C and N in {self:?}"));
+        }
+        if self.hi + 2 * self.ph < self.kh_eff() || self.wi + 2 * self.pw < self.kw_eff() {
             return Err(format!("kernel larger than padded input in {self:?}"));
         }
-        if self.ph >= self.kh || self.pw >= self.kw {
-            // The paper's area-0 condition (Eq. 2) assumes Kh-1-Ph >= 0.
-            return Err(format!("padding >= kernel unsupported by BP-im2col in {self:?}"));
+        if self.ph > self.dh * (self.kh - 1) || self.pw > self.dw * (self.kw - 1) {
+            // The generalized area-0 condition (Eq. 2) assumes
+            // Dh(Kh-1) - Ph >= 0 (DESIGN.md §2).
+            return Err(format!("padding > dilated kernel extent unsupported by BP-im2col in {self:?}"));
         }
         Ok(())
     }
@@ -200,7 +317,7 @@ mod tests {
     fn validate_rejects_bad_padding() {
         let mut p = ConvParams::square(8, 1, 1, 1, 2, 0);
         assert!(p.validate().is_ok());
-        p.ph = 1; // Ph >= Kh
+        p.ph = 1; // Ph > Dh(Kh-1)
         assert!(p.validate().is_err());
     }
 
@@ -210,5 +327,69 @@ mod tests {
         assert_eq!(p.ho(), 8);
         assert_eq!(p.ho2(), 8); // no insertion at S=1
         assert_eq!(p.ho3(), 10); // 8 + 2*(3-1-1)
+    }
+
+    #[test]
+    fn asymmetric_stride_shapes() {
+        // 9x12 input, 3x3 kernel, stride (2, 3), pad 1.
+        let p =
+            ConvParams::basic(1, 1, 9, 12, 1, 3, 3, 1, 1, 1).with_stride(2, 3);
+        assert_eq!(p.ho(), 5); // (9+2-3)/2+1
+        assert_eq!(p.wo(), 4); // (12+2-3)/3+1
+        assert_eq!(p.ho2(), 9);
+        assert_eq!(p.wo2(), 10);
+        assert_eq!(p.id(), "9/1/1/3/2x3/1");
+    }
+
+    #[test]
+    fn dilated_shapes() {
+        // DeepLab-style: 3x3 kernel, dilation 2, "same" padding 2, stride 1.
+        let p = ConvParams::square(28, 4, 4, 3, 1, 2).with_dilation(2, 2);
+        assert_eq!(p.kh_eff(), 5);
+        assert_eq!(p.ho(), 28); // (28+4-5)/1+1
+        assert_eq!(p.ext_h(), 2); // Dh(Kh-1)-Ph = 4-2
+        assert_eq!(p.ho3(), 32);
+        assert_eq!(p.id(), "28/4/4/3/1/2/d2");
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn grouped_dims() {
+        let p = ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32);
+        assert_eq!((p.cg(), p.ng()), (4, 4));
+        assert_eq!(p.kernel_elems(), 128 * 4 * 9);
+        assert_eq!(p.loss_gemm_dims(), (4, 36, 2 * 56 * 56));
+        assert_eq!(p.grad_gemm_dims(), (4, 2 * p.ho2() * p.wo2(), 36));
+        assert_eq!(p.id(), "56/128/128/3/2/1/g32");
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn depthwise_is_groups_eq_channels() {
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1).with_groups(64);
+        assert_eq!((p.cg(), p.ng()), (1, 1));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_nondividing_groups() {
+        let p = ConvParams::square(56, 6, 8, 3, 2, 1).with_groups(4);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_overwide_dilated_padding() {
+        // Ph = 3 > Dh(Kh-1) = 2 breaks the generalized Eq. 2.
+        let mut p = ConvParams::square(28, 4, 4, 3, 1, 2).with_dilation(1, 1);
+        p.ph = 3;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn seed_geometry_helpers_agree() {
+        let a = ConvParams::square(28, 4, 8, 3, 2, 1);
+        let b = ConvParams::basic(2, 4, 28, 28, 8, 3, 3, 2, 1, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.id(), "28/4/8/3/2/1");
     }
 }

@@ -1,29 +1,34 @@
 //! Naive loop-nest convolution oracle.
 //!
-//! These are the *mathematical* definitions — O(B·N·C·Ho·Wo·Kh·Kw) direct
-//! loops with no lowering. Every im2col path (explicit, implicit, Pallas)
-//! is checked against them.
+//! These are the *mathematical* definitions — O(B·N·(C/G)·Ho·Wo·Kh·Kw)
+//! direct loops with no lowering, covering asymmetric strides, kernel
+//! dilation and grouped convolution. Every im2col path (explicit,
+//! implicit, Pallas) is checked against them.
 
 use crate::conv::ConvParams;
 use crate::tensor::Tensor4;
 
-/// Forward convolution: `Y[b,n,ho,wo] = sum_{c,kh,kw} X[b,c,ho*S+kh-Ph, wo*S+kw-Pw] * W[n,c,kh,kw]`.
+/// Forward convolution:
+/// `Y[b,n,ho,wo] = sum_{c',kh,kw} X[b, g*C/G+c', ho*Sh+kh*Dh-Ph, wo*Sw+kw*Dw-Pw] * W[n,c',kh,kw]`
+/// where `g = n / (N/G)` is the channel group of output channel `n`.
 pub fn conv2d_fwd(x: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
     assert_eq!(x.dims, [p.b, p.c, p.hi, p.wi], "input shape mismatch");
-    assert_eq!(w.dims, [p.n, p.c, p.kh, p.kw], "kernel shape mismatch");
+    assert_eq!(w.dims, [p.n, p.cg(), p.kh, p.kw], "kernel shape mismatch");
     let (ho, wo) = (p.ho(), p.wo());
+    let (cg, ng) = (p.cg(), p.ng());
     let mut y = Tensor4::zeros([p.b, p.n, ho, wo]);
     for b in 0..p.b {
         for n in 0..p.n {
+            let c_base = (n / ng) * cg;
             for oh in 0..ho {
                 for ow in 0..wo {
                     let mut acc = 0.0;
-                    for c in 0..p.c {
+                    for c in 0..cg {
                         for kh in 0..p.kh {
                             for kw in 0..p.kw {
-                                let ih = (oh * p.s + kh) as isize - p.ph as isize;
-                                let iw = (ow * p.s + kw) as isize - p.pw as isize;
-                                acc += x.get_padded(b, c, ih, iw) * w[(n, c, kh, kw)];
+                                let ih = (oh * p.sh + kh * p.dh) as isize - p.ph as isize;
+                                let iw = (ow * p.sw + kw * p.dw) as isize - p.pw as isize;
+                                acc += x.get_padded(b, c_base + c, ih, iw) * w[(n, c, kh, kw)];
                             }
                         }
                     }
@@ -35,8 +40,9 @@ pub fn conv2d_fwd(x: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
     y
 }
 
-/// Loss of the input: `dX[b,c,ih,iw] = sum_{n,kh,kw : valid} dY[b,n,ho,wo] * W[n,c,kh,kw]`
-/// where `ho*S + kh - Ph == ih` and `wo*S + kw - Pw == iw`.
+/// Loss of the input: `dX[b,c,ih,iw] = sum_{n,kh,kw : valid} dY[b,n,ho,wo] * W[n,c',kh,kw]`
+/// where `ho*Sh + kh*Dh - Ph == ih`, `wo*Sw + kw*Dw - Pw == iw`, and `n`
+/// ranges over the channel group of `c`.
 ///
 /// This is the direct adjoint of [`conv2d_fwd`] — no transposed-convolution
 /// lowering, so it is immune to the zero-space bookkeeping the paper is
@@ -44,23 +50,26 @@ pub fn conv2d_fwd(x: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
 pub fn conv2d_bwd_input(dy: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
     let (ho, wo) = (p.ho(), p.wo());
     assert_eq!(dy.dims, [p.b, p.n, ho, wo], "loss shape mismatch");
-    assert_eq!(w.dims, [p.n, p.c, p.kh, p.kw], "kernel shape mismatch");
+    assert_eq!(w.dims, [p.n, p.cg(), p.kh, p.kw], "kernel shape mismatch");
+    let (cg, ng) = (p.cg(), p.ng());
     let mut dx = Tensor4::zeros([p.b, p.c, p.hi, p.wi]);
     for b in 0..p.b {
         for n in 0..p.n {
+            let c_base = (n / ng) * cg;
             for oh in 0..ho {
                 for ow in 0..wo {
                     let g = dy[(b, n, oh, ow)];
                     if g == 0.0 {
                         continue;
                     }
-                    for c in 0..p.c {
+                    for c in 0..cg {
                         for kh in 0..p.kh {
                             for kw in 0..p.kw {
-                                let ih = (oh * p.s + kh) as isize - p.ph as isize;
-                                let iw = (ow * p.s + kw) as isize - p.pw as isize;
+                                let ih = (oh * p.sh + kh * p.dh) as isize - p.ph as isize;
+                                let iw = (ow * p.sw + kw * p.dw) as isize - p.pw as isize;
                                 if ih >= 0 && iw >= 0 && (ih as usize) < p.hi && (iw as usize) < p.wi {
-                                    dx[(b, c, ih as usize, iw as usize)] += g * w[(n, c, kh, kw)];
+                                    dx[(b, c_base + c, ih as usize, iw as usize)] +=
+                                        g * w[(n, c, kh, kw)];
                                 }
                             }
                         }
@@ -73,26 +82,28 @@ pub fn conv2d_bwd_input(dy: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
 }
 
 /// Gradient of the kernel:
-/// `dW[n,c,kh,kw] = sum_{b,ho,wo} dY[b,n,ho,wo] * X[b,c,ho*S+kh-Ph, wo*S+kw-Pw]`.
+/// `dW[n,c',kh,kw] = sum_{b,ho,wo} dY[b,n,ho,wo] * X[b, g*C/G+c', ho*Sh+kh*Dh-Ph, wo*Sw+kw*Dw-Pw]`.
 pub fn conv2d_bwd_weight(x: &Tensor4, dy: &Tensor4, p: &ConvParams) -> Tensor4 {
     let (ho, wo) = (p.ho(), p.wo());
     assert_eq!(x.dims, [p.b, p.c, p.hi, p.wi], "input shape mismatch");
     assert_eq!(dy.dims, [p.b, p.n, ho, wo], "loss shape mismatch");
-    let mut dw = Tensor4::zeros([p.n, p.c, p.kh, p.kw]);
+    let (cg, ng) = (p.cg(), p.ng());
+    let mut dw = Tensor4::zeros([p.n, cg, p.kh, p.kw]);
     for b in 0..p.b {
         for n in 0..p.n {
+            let c_base = (n / ng) * cg;
             for oh in 0..ho {
                 for ow in 0..wo {
                     let g = dy[(b, n, oh, ow)];
                     if g == 0.0 {
                         continue;
                     }
-                    for c in 0..p.c {
+                    for c in 0..cg {
                         for kh in 0..p.kh {
                             for kw in 0..p.kw {
-                                let ih = (oh * p.s + kh) as isize - p.ph as isize;
-                                let iw = (ow * p.s + kw) as isize - p.pw as isize;
-                                dw[(n, c, kh, kw)] += g * x.get_padded(b, c, ih, iw);
+                                let ih = (oh * p.sh + kh * p.dh) as isize - p.ph as isize;
+                                let iw = (ow * p.sw + kw * p.dw) as isize - p.pw as isize;
+                                dw[(n, c, kh, kw)] += g * x.get_padded(b, c_base + c, ih, iw);
                             }
                         }
                     }
@@ -111,7 +122,7 @@ mod tests {
     fn setup(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
         let mut rng = Rng::new(seed);
         let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
-        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
         (x, w, dy)
     }
@@ -119,7 +130,7 @@ mod tests {
     #[test]
     fn fwd_identity_kernel() {
         // 1x1 kernel of ones with stride 1 is the identity per channel.
-        let p = ConvParams { b: 1, c: 1, hi: 4, wi: 4, n: 1, kh: 1, kw: 1, s: 1, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 1, 4, 4, 1, 1, 1, 1, 0, 0);
         let x = Tensor4::from_fn([1, 1, 4, 4], |_, _, h, w| (h * 4 + w) as f32);
         let w = Tensor4::from_fn([1, 1, 1, 1], |_, _, _, _| 1.0);
         assert_eq!(conv2d_fwd(&x, &w, &p), x);
@@ -128,12 +139,50 @@ mod tests {
     #[test]
     fn fwd_known_values_stride2() {
         // 4x4 input, 2x2 ones kernel, stride 2 -> non-overlapping 2x2 sums.
-        let p = ConvParams { b: 1, c: 1, hi: 4, wi: 4, n: 1, kh: 2, kw: 2, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 1, 4, 4, 1, 2, 2, 2, 0, 0);
         let x = Tensor4::from_fn([1, 1, 4, 4], |_, _, h, w| (h * 4 + w) as f32);
         let w = Tensor4::from_fn([1, 1, 2, 2], |_, _, _, _| 1.0);
         let y = conv2d_fwd(&x, &w, &p);
         assert_eq!(y.dims, [1, 1, 2, 2]);
         assert_eq!(y.data, vec![0. + 1. + 4. + 5., 2. + 3. + 6. + 7., 8. + 9. + 12. + 13., 10. + 11. + 14. + 15.]);
+    }
+
+    #[test]
+    fn fwd_dilated_equals_inflated_kernel() {
+        // A dilated conv equals a dense conv with the zero-inflated kernel.
+        let p = ConvParams::basic(1, 1, 9, 9, 1, 3, 3, 1, 2, 2).with_dilation(2, 2);
+        let mut rng = Rng::new(77);
+        let x = Tensor4::random([1, 1, 9, 9], &mut rng);
+        let w = Tensor4::random([1, 1, 3, 3], &mut rng);
+        let y = conv2d_fwd(&x, &w, &p);
+        // Inflate the kernel to 5x5 with zeros at the odd taps.
+        let w5 = Tensor4::from_fn([1, 1, 5, 5], |_, _, h, ww| {
+            if h % 2 == 0 && ww % 2 == 0 { w[(0, 0, h / 2, ww / 2)] } else { 0.0 }
+        });
+        let pd = ConvParams::basic(1, 1, 9, 9, 1, 5, 5, 1, 2, 2);
+        let yd = conv2d_fwd(&x, &w5, &pd);
+        assert!(y.max_abs_diff(&yd) < 1e-5);
+    }
+
+    #[test]
+    fn fwd_grouped_equals_per_group_dense() {
+        // groups=2: each output-channel half sees only its input half.
+        let p = ConvParams::basic(1, 4, 6, 6, 4, 3, 3, 1, 1, 1).with_groups(2);
+        let (x, w, _) = setup(&p, 78);
+        let y = conv2d_fwd(&x, &w, &p);
+        for g in 0..2 {
+            let pg = ConvParams::basic(1, 2, 6, 6, 2, 3, 3, 1, 1, 1);
+            let xg = Tensor4::from_fn([1, 2, 6, 6], |b, c, h, ww| x[(b, 2 * g + c, h, ww)]);
+            let wg = Tensor4::from_fn([2, 2, 3, 3], |n, c, h, ww| w[(2 * g + n, c, h, ww)]);
+            let yg = conv2d_fwd(&xg, &wg, &pg);
+            for n in 0..2 {
+                for h in 0..p.ho() {
+                    for ww in 0..p.wo() {
+                        assert_eq!(y[(0, 2 * g + n, h, ww)], yg[(0, n, h, ww)]);
+                    }
+                }
+            }
+        }
     }
 
     /// <dY, conv(X)> == <dX, X> — the adjoint test that pins bwd_input to fwd.
@@ -158,21 +207,21 @@ mod tests {
 
     #[test]
     fn adjoint_small_stride2() {
-        let p = ConvParams { b: 2, c: 3, hi: 9, wi: 9, n: 4, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(2, 3, 9, 9, 4, 3, 3, 2, 1, 1);
         adjoint_identity_input(p, 1);
         adjoint_identity_weight(p, 2);
     }
 
     #[test]
     fn adjoint_1x1_stride2() {
-        let p = ConvParams { b: 1, c: 4, hi: 8, wi: 8, n: 5, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 4, 8, 8, 5, 1, 1, 2, 0, 0);
         adjoint_identity_input(p, 3);
         adjoint_identity_weight(p, 4);
     }
 
     #[test]
     fn adjoint_stride3_asymmetric() {
-        let p = ConvParams { b: 1, c: 2, hi: 11, wi: 7, n: 3, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 };
+        let p = ConvParams::basic(1, 2, 11, 7, 3, 3, 2, 3, 1, 0);
         adjoint_identity_input(p, 5);
         adjoint_identity_weight(p, 6);
     }
@@ -180,15 +229,39 @@ mod tests {
     #[test]
     fn adjoint_inexact_floor_division() {
         // (10 - 3) / 2 + 1 = 4, (4-1)*2+3 = 9 < 10: last row/col uncovered.
-        let p = ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 2, 10, 10, 2, 3, 3, 2, 0, 0);
         assert!(p.hi_eff() < p.hi);
         adjoint_identity_input(p, 7);
         adjoint_identity_weight(p, 8);
     }
 
     #[test]
+    fn adjoint_asymmetric_stride() {
+        let p = ConvParams::basic(1, 2, 9, 12, 3, 3, 3, 1, 1, 1).with_stride(2, 3);
+        adjoint_identity_input(p, 9);
+        adjoint_identity_weight(p, 10);
+    }
+
+    #[test]
+    fn adjoint_dilated() {
+        let p = ConvParams::basic(1, 2, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2);
+        adjoint_identity_input(p, 11);
+        adjoint_identity_weight(p, 12);
+    }
+
+    #[test]
+    fn adjoint_grouped_and_depthwise() {
+        let g = ConvParams::basic(2, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2);
+        adjoint_identity_input(g, 13);
+        adjoint_identity_weight(g, 14);
+        let dw = ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4);
+        adjoint_identity_input(dw, 15);
+        adjoint_identity_weight(dw, 16);
+    }
+
+    #[test]
     fn bwd_input_uncovered_rows_are_zero() {
-        let p = ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 1, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 1, 10, 10, 1, 3, 3, 2, 0, 0);
         let (_, w, dy) = setup(&p, 9);
         let dx = conv2d_bwd_input(&dy, &w, &p);
         for wi in 0..p.wi {

@@ -10,6 +10,10 @@ use crate::im2col::pipeline::{Mode, Pass};
 pub struct BackpropJob {
     /// Monotone id assigned by the scheduler.
     pub id: usize,
+    /// Index of the layer within the network (shared by this layer's
+    /// loss and grad jobs; used to aggregate per-layer quantities such
+    /// as the shared reorg staging storage).
+    pub layer_idx: usize,
     /// Network the job belongs to (for aggregation).
     pub network: &'static str,
     /// Layer label.
@@ -66,7 +70,7 @@ mod tests {
         let p = ConvParams::square(28, 1, 1, 3, 2, 1);
         let m = simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &AccelConfig::default());
         let job1 = BackpropJob {
-            id: 0, network: "t", layer: "dw", params: p,
+            id: 0, layer_idx: 0, network: "t", layer: "dw", params: p,
             pass: Pass::Grad, mode: Mode::BpIm2col, count: 1,
         };
         let job64 = BackpropJob { count: 64, ..job1 };
@@ -81,7 +85,8 @@ mod tests {
         let p = ConvParams::square(28, 4, 4, 3, 2, 1);
         let cfg = AccelConfig::default();
         let mk = |pass| BackpropJob {
-            id: 0, network: "t", layer: "l", params: p, pass, mode: Mode::Traditional, count: 1,
+            id: 0, layer_idx: 0, network: "t", layer: "l", params: p,
+            pass, mode: Mode::Traditional, count: 1,
         };
         let loss = JobResult::from_metrics(mk(Pass::Loss), simulate_pass(Pass::Loss, Mode::Traditional, &p, &cfg));
         let grad = JobResult::from_metrics(mk(Pass::Grad), simulate_pass(Pass::Grad, Mode::Traditional, &p, &cfg));

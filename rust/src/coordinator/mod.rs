@@ -21,4 +21,6 @@ pub mod trainer;
 
 pub use job::{BackpropJob, JobResult};
 pub use scheduler::{NetworkReport, Scheduler};
-pub use trainer::{TrainConfig, TrainStats, Trainer};
+#[cfg(feature = "pjrt")]
+pub use trainer::Trainer;
+pub use trainer::{TrainConfig, TrainStats};

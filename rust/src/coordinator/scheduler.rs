@@ -23,12 +23,17 @@ pub struct NetworkReport {
     /// (the Fig. 8 axes).
     pub loss_buffer_reads: u64,
     pub grad_buffer_reads: u64,
-    /// Additional storage (zero-spaced copies / mask staging).
+    /// Additional storage (zero-spaced copies / mask staging), counted
+    /// **once per layer**: the loss and gradient passes stage their
+    /// zero-spaced copies in the same reorg buffer sequentially, so the
+    /// layer's overhead is the larger of the two passes — not their sum
+    /// (the paper's Table-III-style storage comparison is per layer).
     pub storage_bytes: u64,
     /// Work-weighted average sparsity per pass (Fig. 8's second series).
     pub loss_sparsity: f64,
     pub grad_sparsity: f64,
-    /// Job results, in completion order.
+    /// Job results, sorted by job id (deterministic regardless of
+    /// worker scheduling).
     pub results: Vec<JobResult>,
 }
 
@@ -77,10 +82,11 @@ impl Scheduler {
     /// Enumerate the backward-pass jobs of a network under `mode`.
     pub fn jobs_for(&self, net: &Network, mode: Mode) -> Vec<BackpropJob> {
         let mut jobs = Vec::new();
-        for l in &net.layers {
+        for (layer_idx, l) in net.layers.iter().enumerate() {
             for pass in Pass::ALL {
                 jobs.push(BackpropJob {
                     id: jobs.len(),
+                    layer_idx,
                     network: net.name,
                     layer: l.name,
                     params: l.params,
@@ -117,40 +123,55 @@ impl Scheduler {
             })
             .collect();
 
+        // Collect every worker's results first, then sort by job id
+        // BEFORE summing: f64 accumulation order would otherwise depend
+        // on thread-completion order and make parallel runs differ from
+        // sequential ones in the last bits.
+        let mut results: Vec<JobResult> = Vec::new();
+        for h in handles {
+            results.extend(h.join().expect("worker panicked"));
+        }
+        results.sort_by_key(|r| r.job.id);
+
         let mut report = NetworkReport { network: net.name.to_string(), ..Default::default() };
         let mut loss_weight = 0.0;
         let mut grad_weight = 0.0;
-        for h in handles {
-            for r in h.join().expect("worker panicked") {
-                match r.job.pass {
-                    Pass::Loss => {
-                        report.loss_cycles += r.scaled_cycles;
-                        report.loss_traffic += r.scaled_traffic;
-                        report.loss_buffer_reads += r.scaled_buffer_reads;
-                        let w = r.metrics.macs as f64 * r.job.count as f64;
-                        report.loss_sparsity += r.metrics.sparsity * w;
-                        loss_weight += w;
-                    }
-                    Pass::Grad => {
-                        report.grad_cycles += r.scaled_cycles;
-                        report.grad_traffic += r.scaled_traffic;
-                        report.grad_buffer_reads += r.scaled_buffer_reads;
-                        let w = r.metrics.macs as f64 * r.job.count as f64;
-                        report.grad_sparsity += r.metrics.sparsity * w;
-                        grad_weight += w;
-                    }
+        // Per-layer storage maximum, keyed by the job's layer index.
+        let mut layer_storage: Vec<u64> = Vec::new();
+        for r in results {
+            match r.job.pass {
+                Pass::Loss => {
+                    report.loss_cycles += r.scaled_cycles;
+                    report.loss_traffic += r.scaled_traffic;
+                    report.loss_buffer_reads += r.scaled_buffer_reads;
+                    let w = r.metrics.macs as f64 * r.job.count as f64;
+                    report.loss_sparsity += r.metrics.sparsity * w;
+                    loss_weight += w;
                 }
-                report.storage_bytes += r.metrics.storage_overhead_bytes * r.job.count as u64;
-                report.results.push(r);
+                Pass::Grad => {
+                    report.grad_cycles += r.scaled_cycles;
+                    report.grad_traffic += r.scaled_traffic;
+                    report.grad_buffer_reads += r.scaled_buffer_reads;
+                    let w = r.metrics.macs as f64 * r.job.count as f64;
+                    report.grad_sparsity += r.metrics.sparsity * w;
+                    grad_weight += w;
+                }
             }
+            let layer_idx = r.job.layer_idx;
+            if layer_storage.len() <= layer_idx {
+                layer_storage.resize(layer_idx + 1, 0);
+            }
+            layer_storage[layer_idx] = layer_storage[layer_idx]
+                .max(r.metrics.storage_overhead_bytes * r.job.count as u64);
+            report.results.push(r);
         }
+        report.storage_bytes = layer_storage.iter().sum();
         if loss_weight > 0.0 {
             report.loss_sparsity /= loss_weight;
         }
         if grad_weight > 0.0 {
             report.grad_sparsity /= grad_weight;
         }
-        report.results.sort_by_key(|r| r.job.id);
         report
     }
 }
@@ -162,14 +183,51 @@ mod tests {
 
     #[test]
     fn parallel_equals_sequential() {
+        // Exact equality (no epsilon): aggregation sorts results by job
+        // id before summing, so thread scheduling cannot perturb the f64
+        // accumulation order.
         let net = workloads::resnet();
         let mut s = Scheduler::new(AccelConfig::default());
         let par = s.run_network(&net, Mode::BpIm2col);
         s.workers = 1;
         let seq = s.run_network(&net, Mode::BpIm2col);
         assert_eq!(par.loss_cycles, seq.loss_cycles);
+        assert_eq!(par.grad_cycles, seq.grad_cycles);
+        assert_eq!(par.loss_sparsity, seq.loss_sparsity);
+        assert_eq!(par.grad_sparsity, seq.grad_sparsity);
         assert_eq!(par.grad_traffic, seq.grad_traffic);
+        assert_eq!(par.storage_bytes, seq.storage_bytes);
         assert_eq!(par.results.len(), seq.results.len());
+        // And the stored results come back in job order.
+        for (i, r) in par.results.iter().enumerate() {
+            assert_eq!(r.job.id, i);
+        }
+    }
+
+    #[test]
+    fn storage_counted_once_per_layer() {
+        // Loss and grad share the reorg staging buffer: the layer
+        // contributes max(loss, grad) bytes, not their sum.
+        let net = workloads::resnet();
+        let s = Scheduler::new(AccelConfig::default());
+        let rep = s.run_network(&net, Mode::Traditional);
+        let expect: u64 = net
+            .layers
+            .iter()
+            .map(|l| {
+                let lo = simulate_pass(Pass::Loss, Mode::Traditional, &l.params, &s.cfg);
+                let gr = simulate_pass(Pass::Grad, Mode::Traditional, &l.params, &s.cfg);
+                lo.storage_overhead_bytes.max(gr.storage_overhead_bytes) * l.count as u64
+            })
+            .sum();
+        assert_eq!(rep.storage_bytes, expect);
+        // Strictly less than the double-counting sum would have been.
+        let double: u64 = rep
+            .results
+            .iter()
+            .map(|r| r.metrics.storage_overhead_bytes * r.job.count as u64)
+            .sum();
+        assert!(rep.storage_bytes < double);
     }
 
     #[test]

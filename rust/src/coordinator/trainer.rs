@@ -5,12 +5,20 @@
 //! CPU client; Rust owns parameters, data generation, the training loop,
 //! and — in parallel — asks the accelerator model what each step costs
 //! on the simulated hardware in both im2col modes.
+//!
+//! The PJRT-executing [`Trainer`] requires the `pjrt` feature (the `xla`
+//! crate); the model geometry, parameter state and synthetic data stream
+//! are dependency-free and always available.
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::accel::{simulate_layer, AccelConfig};
 use crate::conv::ConvParams;
+#[cfg(feature = "pjrt")]
 use crate::im2col::pipeline::Mode;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, literal_i32, LoadedModel, Runtime};
 use crate::tensor::Rng;
 
@@ -19,10 +27,10 @@ pub const BATCH: usize = 8;
 pub const NUM_CLASSES: usize = 10;
 /// conv1: 1->8, 16x16 -> 8x8, stride 2.
 pub const P1: ConvParams =
-    ConvParams { b: BATCH, c: 1, hi: 16, wi: 16, n: 8, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+    ConvParams::basic(BATCH, 1, 16, 16, 8, 3, 3, 2, 1, 1);
 /// conv2: 8->16, 8x8 -> 4x4, stride 2.
 pub const P2: ConvParams =
-    ConvParams { b: BATCH, c: 8, hi: 8, wi: 8, n: 16, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+    ConvParams::basic(BATCH, 8, 8, 8, 16, 3, 3, 2, 1, 1);
 pub const DENSE_IN: usize = 256;
 
 /// Training-run configuration.
@@ -115,12 +123,14 @@ pub fn synthetic_batch(step: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
 }
 
 /// The end-to-end trainer.
+#[cfg(feature = "pjrt")]
 pub struct Trainer {
     model: LoadedModel,
     cfg: TrainConfig,
     accel_cfg: AccelConfig,
 }
 
+#[cfg(feature = "pjrt")]
 impl Trainer {
     /// Load the `train_step` artifact.
     pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Self> {

@@ -3,7 +3,12 @@
 //! During gradient calculation the dynamic matrix *A* is the
 //! zero-inserted loss map (`[B,N,Ho'',Wo'']`) acting as the convolving
 //! kernel. It needs no im2col (each row is just one output channel's
-//! flattened map) and has only zero-insertions, detected by Eq. (4).
+//! flattened map) and has only zero-insertions, detected by the
+//! generalized Eq. (4) with per-axis strides `(Sh, Sw)`. Kernel dilation
+//! does not appear here — it only shifts the *stationary* matrix's taps.
+//!
+//! Grouped layers run one virtual matrix per channel group `g`
+//! (`N/G` rows); `G == 1, g == 0` is the paper's geometry.
 
 use crate::conv::ConvParams;
 use crate::im2col::Zone;
@@ -12,7 +17,7 @@ use crate::tensor::{Matrix, Tensor4};
 /// A decoded pixel of the virtual dynamic matrix A.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct VirtualPixelA {
-    /// Output-channel index (the matrix row).
+    /// Output-channel index *within the group* (the matrix row).
     pub n: usize,
     /// Batch index.
     pub b: usize,
@@ -32,33 +37,36 @@ pub fn decompose(addr_in: usize, p: &ConvParams) -> VirtualPixelA {
     VirtualPixelA { n, b, h, w }
 }
 
-/// NZ detection of dilated mode, Eq. (4): a pixel is a structural zero
-/// iff the stride does not divide its position. No bounds check is
-/// needed: `h < Ho'' = (Ho-1)S+1` implies `h/S <= Ho-1`.
+/// NZ detection of dilated mode, generalized Eq. (4): a pixel is a
+/// structural zero iff its axis stride does not divide its position. No
+/// bounds check is needed: `h < Ho'' = (Ho-1)Sh+1` implies
+/// `h/Sh <= Ho-1`.
 #[inline]
 pub fn nz_detect(h: usize, w: usize, p: &ConvParams) -> Zone {
-    if h % p.s > 0 || w % p.s > 0 {
+    if h % p.sh > 0 || w % p.sw > 0 {
         Zone::Area1
     } else {
         Zone::NonZero
     }
 }
 
-/// Full Algorithm 2: map an address of the virtual matrix A to the
-/// address in the compact loss map, or `None` for zero-insertions.
+/// Full Algorithm 2: map an address of group `g`'s virtual matrix A to
+/// the address in the compact loss map, or `None` for zero-insertions.
 #[inline]
-pub fn map_addr(addr_in: usize, p: &ConvParams) -> Option<usize> {
+pub fn map_addr(addr_in: usize, p: &ConvParams, g: usize) -> Option<usize> {
     let px = decompose(addr_in, p);
     if nz_detect(px.h, px.w, p).is_zero() {
         return None; // addr_out = NULL — zero-insertions
     }
     let (ho, wo) = (p.ho(), p.wo());
-    Some(px.b * p.n * ho * wo + px.n * ho * wo + (px.h / p.s) * wo + px.w / p.s)
+    let n_abs = g * p.ng() + px.n;
+    Some(px.b * p.n * ho * wo + n_abs * ho * wo + (px.h / p.sh) * wo + px.w / p.sw)
 }
 
-/// Number of addresses in the virtual matrix A (`N x (B*Ho''*Wo'')`).
+/// Number of addresses in one group's virtual matrix A
+/// (`(N/G) x (B*Ho''*Wo'')`).
 pub const fn virtual_len(p: &ConvParams) -> usize {
-    p.n * p.b * p.ho2() * p.wo2()
+    p.ng() * p.b * p.ho2() * p.wo2()
 }
 
 /// Streaming address generator for the dilated mode: carries `(n, b, h,
@@ -66,15 +74,19 @@ pub const fn virtual_len(p: &ConvParams) -> usize {
 /// address. Equivalent to [`map_addr`] over `0..virtual_len` (tested).
 pub struct AddrGen<'a> {
     p: &'a ConvParams,
-    n: usize,
+    /// Absolute output-channel index (`g*N/G + n`).
+    n_abs: usize,
+    /// Rows emitted so far (terminates after `N/G`).
+    row: usize,
     b: usize,
     h: usize,
     w: usize,
 }
 
 impl<'a> AddrGen<'a> {
-    pub fn new(p: &'a ConvParams) -> Self {
-        Self { p, n: 0, b: 0, h: 0, w: 0 }
+    pub fn new(p: &'a ConvParams, g: usize) -> Self {
+        assert!(g < p.groups);
+        Self { p, n_abs: g * p.ng(), row: 0, b: 0, h: 0, w: 0 }
     }
 }
 
@@ -85,12 +97,17 @@ impl Iterator for AddrGen<'_> {
     #[inline]
     fn next(&mut self) -> Option<Option<usize>> {
         let p = self.p;
-        if self.n == p.n {
+        if self.row == p.ng() {
             return None;
         }
-        let out = if self.h % p.s == 0 && self.w % p.s == 0 {
+        let out = if self.h % p.sh == 0 && self.w % p.sw == 0 {
             let (ho, wo) = (p.ho(), p.wo());
-            Some(self.b * p.n * ho * wo + self.n * ho * wo + self.h / p.s * wo + self.w / p.s)
+            Some(
+                self.b * p.n * ho * wo
+                    + self.n_abs * ho * wo
+                    + self.h / p.sh * wo
+                    + self.w / p.sw,
+            )
         } else {
             None
         };
@@ -103,7 +120,8 @@ impl Iterator for AddrGen<'_> {
                 self.b += 1;
                 if self.b == p.b {
                     self.b = 0;
-                    self.n += 1;
+                    self.row += 1;
+                    self.n_abs += 1;
                 }
             }
         }
@@ -111,14 +129,14 @@ impl Iterator for AddrGen<'_> {
     }
 }
 
-/// Materialize the lowered matrix A through the implicit mapping (what
-/// the hardware's dynamic address-generation module + crossbar produce).
-/// Must equal [`crate::im2col::traditional::lower_grad_a`] over the
-/// explicitly dilated map.
-pub fn gather_matrix(dy: &Tensor4, p: &ConvParams) -> Matrix {
+/// Materialize group `g`'s lowered matrix A through the implicit mapping
+/// (what the hardware's dynamic address-generation module + crossbar
+/// produce). Must equal [`crate::im2col::traditional::lower_grad_a`]
+/// over the explicitly dilated map.
+pub fn gather_matrix(dy: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
     assert_eq!(dy.dims, [p.b, p.n, p.ho(), p.wo()]);
-    let mut m = Matrix::zeros(p.n, p.b * p.ho2() * p.wo2());
-    for (out, mapped) in m.data.iter_mut().zip(AddrGen::new(p)) {
+    let mut m = Matrix::zeros(p.ng(), p.b * p.ho2() * p.wo2());
+    for (out, mapped) in m.data.iter_mut().zip(AddrGen::new(p, g)) {
         if let Some(addr_out) = mapped {
             *out = dy.data[addr_out];
         }
@@ -135,38 +153,65 @@ mod tests {
     fn check_gather_equals_explicit(p: ConvParams, seed: u64) {
         let mut rng = Rng::new(seed);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
-        let implicit = gather_matrix(&dy, &p);
-        let explicit = traditional::lower_grad_a(&reorg::dilate_loss(&dy, &p), &p);
-        assert_eq!(implicit, explicit, "Algorithm 2 mismatch for {p:?}");
+        let dyd = reorg::dilate_loss(&dy, &p);
+        for g in 0..p.groups {
+            let implicit = gather_matrix(&dy, &p, g);
+            let explicit = traditional::lower_grad_a(&dyd, &p, g);
+            assert_eq!(implicit, explicit, "Algorithm 2 mismatch for {p:?} group {g}");
+        }
     }
 
     #[test]
     fn alg2_equals_explicit_stride2() {
-        check_gather_equals_explicit(
-            ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
-            30,
-        );
+        check_gather_equals_explicit(ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1), 30);
     }
 
     #[test]
     fn alg2_equals_explicit_stride3() {
-        check_gather_equals_explicit(
-            ConvParams { b: 1, c: 1, hi: 13, wi: 10, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
-            31,
-        );
+        check_gather_equals_explicit(ConvParams::basic(1, 1, 13, 10, 2, 3, 2, 3, 1, 0), 31);
     }
 
     #[test]
     fn alg2_equals_explicit_stride1_dense() {
+        check_gather_equals_explicit(ConvParams::basic(1, 1, 6, 6, 2, 3, 3, 1, 1, 1), 32);
+    }
+
+    #[test]
+    fn alg2_equals_explicit_asymmetric_stride() {
         check_gather_equals_explicit(
-            ConvParams { b: 1, c: 1, hi: 6, wi: 6, n: 2, kh: 3, kw: 3, s: 1, ph: 1, pw: 1 },
-            32,
+            ConvParams::basic(1, 1, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3),
+            33,
+        );
+        check_gather_equals_explicit(
+            ConvParams::basic(2, 1, 12, 9, 2, 3, 3, 1, 1, 1).with_stride(3, 2),
+            34,
         );
     }
 
     #[test]
+    fn alg2_equals_explicit_grouped() {
+        check_gather_equals_explicit(ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2), 35);
+        check_gather_equals_explicit(ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4), 36);
+    }
+
+    #[test]
+    fn alg2_equals_explicit_dilated_kernel_is_transparent() {
+        // Kernel dilation must not change matrix A (only the stationary
+        // operand samples dilated taps).
+        let base = ConvParams::basic(1, 1, 11, 11, 2, 3, 3, 2, 2, 2);
+        let dil = base.with_dilation(2, 2);
+        let mut rng = Rng::new(37);
+        // Same Ho/Wo? Not necessarily; build dY per geometry.
+        let dy_b = Tensor4::random([base.b, base.n, base.ho(), base.wo()], &mut rng);
+        let dy_d = Tensor4::random([dil.b, dil.n, dil.ho(), dil.wo()], &mut rng);
+        check_gather_equals_explicit(dil, 38);
+        assert_eq!(gather_matrix(&dy_b, &base, 0).rows, base.ng());
+        assert_eq!(gather_matrix(&dy_d, &dil, 0).cols, dil.b * dil.ho2() * dil.wo2());
+    }
+
+    #[test]
     fn nz_detection_eq4() {
-        let p = ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 1, kh: 2, kw: 2, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 1, 8, 8, 1, 2, 2, 2, 0, 0);
         assert_eq!(nz_detect(0, 0, &p), Zone::NonZero);
         assert_eq!(nz_detect(1, 0, &p), Zone::Area1);
         assert_eq!(nz_detect(0, 3, &p), Zone::Area1);
@@ -174,15 +219,36 @@ mod tests {
     }
 
     #[test]
+    fn nz_detection_eq4_asymmetric() {
+        let p = ConvParams::basic(1, 1, 12, 12, 1, 3, 3, 1, 1, 1).with_stride(2, 3);
+        assert_eq!(nz_detect(2, 3, &p), Zone::NonZero);
+        assert_eq!(nz_detect(2, 2, &p), Zone::Area1); // 2 % Sw=3
+        assert_eq!(nz_detect(1, 3, &p), Zone::Area1); // 1 % Sh=2
+    }
+
+    #[test]
     fn addrgen_stream_equals_map_addr() {
         for p in [
-            ConvParams { b: 2, c: 1, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
-            ConvParams { b: 1, c: 1, hi: 10, wi: 7, n: 3, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
+            ConvParams::basic(2, 1, 9, 9, 2, 3, 3, 2, 1, 1),
+            ConvParams::basic(1, 1, 10, 7, 3, 3, 2, 3, 1, 0),
+            ConvParams::basic(1, 1, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3),
         ] {
-            let stream: Vec<Option<usize>> = AddrGen::new(&p).collect();
+            let stream: Vec<Option<usize>> = AddrGen::new(&p, 0).collect();
             assert_eq!(stream.len(), virtual_len(&p));
             for (addr, got) in stream.into_iter().enumerate() {
-                assert_eq!(got, map_addr(addr, &p), "{p:?} addr {addr}");
+                assert_eq!(got, map_addr(addr, &p, 0), "{p:?} addr {addr}");
+            }
+        }
+    }
+
+    #[test]
+    fn addrgen_stream_equals_map_addr_grouped() {
+        let p = ConvParams::basic(1, 6, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(3);
+        for g in 0..p.groups {
+            let stream: Vec<Option<usize>> = AddrGen::new(&p, g).collect();
+            assert_eq!(stream.len(), virtual_len(&p));
+            for (addr, got) in stream.into_iter().enumerate() {
+                assert_eq!(got, map_addr(addr, &p, g), "group {g} addr {addr}");
             }
         }
     }
@@ -190,22 +256,37 @@ mod tests {
     #[test]
     fn sparsity_is_exactly_one_minus_ho_wo_ratio() {
         // Eq. (4) zeros: 1 - (Ho*Wo)/(Ho''*Wo'').
-        let p = ConvParams { b: 1, c: 1, hi: 17, wi: 17, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
-        let nz = (0..virtual_len(&p)).filter(|a| map_addr(*a, &p).is_some()).count();
+        let p = ConvParams::basic(1, 1, 17, 17, 2, 3, 3, 2, 1, 1);
+        let nz = (0..virtual_len(&p)).filter(|a| map_addr(*a, &p, 0).is_some()).count();
         assert_eq!(nz, p.b * p.n * p.ho() * p.wo());
     }
 
     #[test]
     fn every_compact_address_hit_exactly_once_per_row() {
-        let p = ConvParams { b: 1, c: 1, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(1, 1, 9, 9, 2, 3, 3, 2, 1, 1);
         let mut counts = vec![0usize; p.output_elems()];
         for a in 0..virtual_len(&p) {
-            if let Some(o) = map_addr(a, &p) {
+            if let Some(o) = map_addr(a, &p, 0) {
                 counts[o] += 1;
             }
         }
         // Matrix A is a permutation-with-zeros of the compact map: each
         // compact element appears exactly once.
+        assert!(counts.iter().all(|c| *c == 1), "counts {counts:?}");
+    }
+
+    #[test]
+    fn grouped_matrices_tile_the_compact_map() {
+        // Across all groups, every compact element appears exactly once.
+        let p = ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(2);
+        let mut counts = vec![0usize; p.output_elems()];
+        for g in 0..p.groups {
+            for a in 0..virtual_len(&p) {
+                if let Some(o) = map_addr(a, &p, g) {
+                    counts[o] += 1;
+                }
+            }
+        }
         assert!(counts.iter().all(|c| *c == 1), "counts {counts:?}");
     }
 }

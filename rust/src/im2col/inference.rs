@@ -3,25 +3,28 @@
 //! array-based accelerators adopt the traditional im2col algorithm to
 //! accelerate the inference of convolutional layers").
 //!
-//! Inference lowers `Y = X * W` to `A[N x C*Kh*Kw] . B[C*Kh*Kw x B*Ho*Wo]`
-//! where B is the im2col of the *padded* input. The only structural
-//! zeros are the padding halo, detected with two comparators per axis —
-//! this is the 51-cycle stationary pipeline of Table III, shared by both
-//! modes. Implemented here so the repo covers the full training step
-//! (fwd + loss + grad) and the coordinator can report whole-step costs.
+//! Inference lowers `Y = X * W` to `G` per-group GEMMs
+//! `A_g[N/G x (C/G)*Kh*Kw] . B_g[(C/G)*Kh*Kw x B*Ho*Wo]` where `B_g` is
+//! the im2col of the *padded* input's group channels. The only
+//! structural zeros are the padding halo, detected with two comparators
+//! per axis — this is the 51-cycle stationary pipeline of Table III,
+//! shared by both modes. Implemented here so the repo covers the full
+//! training step (fwd + loss + grad) and the coordinator can report
+//! whole-step costs.
 
 use crate::conv::ConvParams;
 use crate::tensor::{Matrix, Tensor4};
 
-/// Virtual matrix B dimensions for inference: `(C*Kh*Kw) x (B*Ho*Wo)`.
+/// Virtual matrix B dimensions for one inference group:
+/// `((C/G)*Kh*Kw) x (B*Ho*Wo)`.
 pub const fn virtual_len(p: &ConvParams) -> usize {
-    p.c * p.kh * p.kw * p.b * p.ho() * p.wo()
+    p.cg() * p.kh * p.kw * p.b * p.ho() * p.wo()
 }
 
-/// Map an address of the virtual inference matrix B to the compact input
-/// address, or `None` inside the padding halo.
+/// Map an address of group `g`'s virtual inference matrix B to the
+/// compact input address, or `None` inside the padding halo.
 #[inline]
-pub fn map_addr(addr_in: usize, p: &ConvParams) -> Option<usize> {
+pub fn map_addr(addr_in: usize, p: &ConvParams, g: usize) -> Option<usize> {
     let (ho, wo) = (p.ho(), p.wo());
     let cols = p.b * ho * wo;
     let (row, col) = (addr_in / cols, addr_in % cols);
@@ -29,45 +32,65 @@ pub fn map_addr(addr_in: usize, p: &ConvParams) -> Option<usize> {
     let (kh, kw) = (rem / p.kw, rem % p.kw);
     let (b, rem) = (col / (ho * wo), col % (ho * wo));
     let (oh, ow) = (rem / wo, rem % wo);
-    // Input pixel = (oh*S + kh - Ph, ow*S + kw - Pw); NZ detection is the
-    // padding bounds check only.
-    let h = (oh * p.s + kh) as isize - p.ph as isize;
-    let w = (ow * p.s + kw) as isize - p.pw as isize;
+    // Input pixel = (oh*Sh + kh*Dh - Ph, ow*Sw + kw*Dw - Pw); NZ
+    // detection is the padding bounds check only.
+    let h = (oh * p.sh + kh * p.dh) as isize - p.ph as isize;
+    let w = (ow * p.sw + kw * p.dw) as isize - p.pw as isize;
     if h < 0 || w < 0 || h as usize >= p.hi || w as usize >= p.wi {
         return None;
     }
-    Some(((b * p.c + c) * p.hi + h as usize) * p.wi + w as usize)
+    let c_abs = g * p.cg() + c;
+    Some(((b * p.c + c_abs) * p.hi + h as usize) * p.wi + w as usize)
 }
 
-/// Materialize the lowered inference matrix B through the implicit
-/// mapping.
-pub fn gather_matrix(x: &Tensor4, p: &ConvParams) -> Matrix {
+/// Materialize group `g`'s lowered inference matrix B through the
+/// implicit mapping.
+pub fn gather_matrix(x: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
     assert_eq!(x.dims, [p.b, p.c, p.hi, p.wi]);
-    let rows = p.c * p.kh * p.kw;
+    let rows = p.cg() * p.kh * p.kw;
     let cols = p.b * p.ho() * p.wo();
     let mut m = Matrix::zeros(rows, cols);
     for (addr_in, out) in m.data.iter_mut().enumerate() {
-        if let Some(a) = map_addr(addr_in, p) {
+        if let Some(a) = map_addr(addr_in, p, g) {
             *out = x.data[a];
         }
     }
     m
 }
 
-/// Lowered dynamic matrix A of inference: the kernel, flattened
-/// `[N x C*Kh*Kw]` (dense).
-pub fn lower_fwd_a(w: &Tensor4, p: &ConvParams) -> Matrix {
-    assert_eq!(w.dims, [p.n, p.c, p.kh, p.kw]);
-    Matrix { rows: p.n, cols: p.c * p.kh * p.kw, data: w.data.clone() }
+/// Lowered dynamic matrix A of group `g`: the group's kernel rows,
+/// flattened `[N/G x (C/G)*Kh*Kw]` (dense).
+pub fn lower_fwd_a(w: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
+    assert_eq!(w.dims, [p.n, p.cg(), p.kh, p.kw]);
+    assert!(g < p.groups);
+    let (ng, row_len) = (p.ng(), p.cg() * p.kh * p.kw);
+    Matrix {
+        rows: ng,
+        cols: row_len,
+        data: w.data[g * ng * row_len..(g + 1) * ng * row_len].to_vec(),
+    }
 }
 
-/// Forward convolution via the implicit-im2col GEMM.
+/// Forward convolution via the implicit-im2col GEMMs.
 pub fn fwd_calc(x: &Tensor4, w: &Tensor4, p: &ConvParams) -> Tensor4 {
-    let a = lower_fwd_a(w, p);
-    let b = gather_matrix(x, p);
-    let y = a.matmul(&b); // [N x B*Ho*Wo]
     let (ho, wo) = (p.ho(), p.wo());
-    Tensor4::from_fn([p.b, p.n, ho, wo], |bi, n, h, ww| y[(n, (bi * ho + h) * wo + ww)])
+    let ng = p.ng();
+    let mut y = Tensor4::zeros([p.b, p.n, ho, wo]);
+    for g in 0..p.groups {
+        let a = lower_fwd_a(w, p, g);
+        let b = gather_matrix(x, p, g);
+        let yg = a.matmul(&b); // [N/G x B*Ho*Wo]
+        for n in 0..ng {
+            for bi in 0..p.b {
+                for h in 0..ho {
+                    for ww in 0..wo {
+                        y[(bi, g * ng + n, h, ww)] = yg[(n, (bi * ho + h) * wo + ww)];
+                    }
+                }
+            }
+        }
+    }
+    y
 }
 
 #[cfg(test)]
@@ -79,7 +102,7 @@ mod tests {
     fn check(p: ConvParams, seed: u64) {
         let mut rng = Rng::new(seed);
         let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
-        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
         let got = fwd_calc(&x, &w, &p);
         let want = conv2d_fwd(&x, &w, &p);
         assert!(got.max_abs_diff(&want) < 1e-4, "{p:?}");
@@ -87,25 +110,41 @@ mod tests {
 
     #[test]
     fn fwd_gemm_matches_oracle_stride2() {
-        check(ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 70);
+        check(ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1), 70);
     }
 
     #[test]
     fn fwd_gemm_matches_oracle_stride1_pad2() {
-        check(ConvParams { b: 1, c: 2, hi: 7, wi: 7, n: 2, kh: 3, kw: 3, s: 1, ph: 2, pw: 2 }, 71);
+        check(ConvParams::basic(1, 2, 7, 7, 2, 3, 3, 1, 2, 2), 71);
     }
 
     #[test]
     fn fwd_gemm_matches_oracle_stride4_11x11() {
         // AlexNet-like stem.
-        check(ConvParams { b: 1, c: 1, hi: 19, wi: 19, n: 2, kh: 5, kw: 5, s: 4, ph: 2, pw: 2 }, 72);
+        check(ConvParams::basic(1, 1, 19, 19, 2, 5, 5, 4, 2, 2), 72);
+    }
+
+    #[test]
+    fn fwd_gemm_matches_oracle_asymmetric_stride() {
+        check(ConvParams::basic(1, 2, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3), 73);
+    }
+
+    #[test]
+    fn fwd_gemm_matches_oracle_dilated() {
+        check(ConvParams::basic(1, 2, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2), 74);
+    }
+
+    #[test]
+    fn fwd_gemm_matches_oracle_grouped() {
+        check(ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2), 75);
+        check(ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4), 76);
     }
 
     #[test]
     fn padding_zeros_only() {
         // With Ph = Pw = 0 the inference matrix has no structural zeros.
-        let p = ConvParams { b: 1, c: 2, hi: 8, wi: 8, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
-        let nz = (0..virtual_len(&p)).filter(|a| map_addr(*a, &p).is_some()).count();
+        let p = ConvParams::basic(1, 2, 8, 8, 2, 3, 3, 2, 0, 0);
+        let nz = (0..virtual_len(&p)).filter(|a| map_addr(*a, &p, 0).is_some()).count();
         assert_eq!(nz, virtual_len(&p));
     }
 
@@ -114,7 +153,7 @@ mod tests {
         // Padding sparsity is far below the backprop regime's 75 %+.
         let p = ConvParams::square(112, 64, 64, 3, 2, 1);
         let nz = (0..virtual_len(&p).min(4_000_000))
-            .filter(|a| map_addr(*a, &p).is_some())
+            .filter(|a| map_addr(*a, &p, 0).is_some())
             .count();
         let frac = 1.0 - nz as f64 / virtual_len(&p).min(4_000_000) as f64;
         assert!(frac < 0.10, "{frac}");

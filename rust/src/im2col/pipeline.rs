@@ -1,6 +1,9 @@
 //! End-to-end functional loss / gradient calculation through either
 //! lowering path. These are the *functional* pipelines; the cycle-level
 //! behaviour of the same dataflow lives in [`crate::accel`].
+//!
+//! Grouped layers run `G` per-group GEMMs and scatter each result into
+//! its channel slice; `G == 1` is exactly the paper's single GEMM.
 
 use crate::conv::ConvParams;
 use crate::im2col::{dilated, reorg, traditional, transposed};
@@ -51,22 +54,41 @@ impl Pass {
 
 /// Loss calculation `dX = dYei * Tr(rot180 W)` via the chosen path.
 pub fn loss_calc(dy: &Tensor4, w: &Tensor4, p: &ConvParams, mode: Mode) -> Tensor4 {
-    let a = traditional::lower_loss_a(w, p);
-    let b = match mode {
-        Mode::Traditional => traditional::lower_loss_b(&reorg::dilate_pad_loss(dy, p), p),
-        Mode::BpIm2col => transposed::gather_matrix(dy, p),
+    // The baseline materializes the zero-spaced map once per layer; every
+    // group's stationary matrix is lowered from the same copy.
+    let dyz = match mode {
+        Mode::Traditional => Some(reorg::dilate_pad_loss(dy, p)),
+        Mode::BpIm2col => None,
     };
-    traditional::loss_from_gemm(&a.matmul(&b), p)
+    let mut dx = Tensor4::zeros([p.b, p.c, p.hi, p.wi]);
+    for g in 0..p.groups {
+        let a = traditional::lower_loss_a(w, p, g);
+        let b = match &dyz {
+            Some(z) => traditional::lower_loss_b(z, p, g),
+            None => transposed::gather_matrix(dy, p, g),
+        };
+        traditional::loss_from_gemm_group(&a.matmul(&b), p, g, &mut dx);
+    }
+    dx
 }
 
 /// Gradient calculation `Tr(dW) = Tr(Xe) * Tr(dYi)` via the chosen path.
 pub fn grad_calc(x: &Tensor4, dy: &Tensor4, p: &ConvParams, mode: Mode) -> Tensor4 {
-    let a = match mode {
-        Mode::Traditional => traditional::lower_grad_a(&reorg::dilate_loss(dy, p), p),
-        Mode::BpIm2col => dilated::gather_matrix(dy, p),
+    let dyd = match mode {
+        Mode::Traditional => Some(reorg::dilate_loss(dy, p)),
+        Mode::BpIm2col => None,
     };
-    let b = traditional::lower_grad_b(&reorg::pad_input(x, p), p);
-    traditional::grad_from_gemm(&a.matmul(&b), p)
+    let xpad = reorg::pad_input(x, p);
+    let mut dw = Tensor4::zeros([p.n, p.cg(), p.kh, p.kw]);
+    for g in 0..p.groups {
+        let a = match &dyd {
+            Some(z) => traditional::lower_grad_a(z, p, g),
+            None => dilated::gather_matrix(dy, p, g),
+        };
+        let b = traditional::lower_grad_b(&xpad, p, g);
+        traditional::grad_from_gemm_group(&a.matmul(&b), p, g, &mut dw);
+    }
+    dw
 }
 
 #[cfg(test)]
@@ -78,7 +100,7 @@ mod tests {
     fn tensors(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
         let mut rng = Rng::new(seed);
         let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
-        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
         (x, w, dy)
     }
@@ -106,21 +128,51 @@ mod tests {
 
     #[test]
     fn modes_agree_stride2_pad1() {
-        check_both_modes(ConvParams { b: 2, c: 3, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 40);
+        check_both_modes(ConvParams::basic(2, 3, 9, 9, 2, 3, 3, 2, 1, 1), 40);
     }
 
     #[test]
     fn modes_agree_1x1_stride2() {
-        check_both_modes(ConvParams { b: 1, c: 4, hi: 8, wi: 8, n: 3, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 }, 41);
+        check_both_modes(ConvParams::basic(1, 4, 8, 8, 3, 1, 1, 2, 0, 0), 41);
     }
 
     #[test]
     fn modes_agree_stride3() {
-        check_both_modes(ConvParams { b: 1, c: 2, hi: 10, wi: 13, n: 2, kh: 2, kw: 3, s: 3, ph: 0, pw: 1 }, 42);
+        check_both_modes(ConvParams::basic(1, 2, 10, 13, 2, 2, 3, 3, 0, 1), 42);
     }
 
     #[test]
     fn modes_agree_inexact_division() {
-        check_both_modes(ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 1, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 }, 43);
+        check_both_modes(ConvParams::basic(1, 1, 10, 10, 1, 3, 3, 2, 0, 0), 43);
+    }
+
+    #[test]
+    fn modes_agree_asymmetric_stride() {
+        check_both_modes(ConvParams::basic(1, 2, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3), 44);
+    }
+
+    #[test]
+    fn modes_agree_dilated() {
+        check_both_modes(ConvParams::basic(1, 2, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2), 45);
+        check_both_modes(ConvParams::basic(1, 1, 13, 13, 1, 3, 3, 2, 2, 2).with_dilation(2, 2), 46);
+    }
+
+    #[test]
+    fn modes_agree_grouped() {
+        check_both_modes(ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2), 47);
+        // Depthwise: G == C == N.
+        check_both_modes(ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4), 48);
+    }
+
+    #[test]
+    fn modes_agree_grouped_dilated_asymmetric() {
+        // Everything at once: groups + dilation + asymmetric stride.
+        check_both_modes(
+            ConvParams::basic(1, 4, 11, 9, 4, 3, 2, 1, 2, 1)
+                .with_stride(2, 1)
+                .with_dilation(2, 2)
+                .with_groups(2),
+            49,
+        );
     }
 }

@@ -1,22 +1,27 @@
 //! Explicit zero-space data reorganization — what the *baseline*
 //! accelerator must do before it can run traditional im2col on
 //! backpropagation, and exactly the work BP-im2col eliminates.
+//!
+//! Generalized geometry (DESIGN.md §2): zero-insertion uses the per-axis
+//! strides `(Sh, Sw)` and the loss-map padding extent is the dilated
+//! kernel reach `Dh(Kh-1) - Ph` / `Dw(Kw-1) - Pw`.
 
 use crate::conv::ConvParams;
 use crate::tensor::Tensor4;
 
-/// Zero-insert (dilate by `S`) and zero-pad (by `K-1-P`) the loss of the
-/// output, producing the `[B, N, Ho''', Wo''']` map used by **loss
-/// calculation** (`ei` subscript in the paper's Eq. 1).
+/// Zero-insert (dilate by `(Sh, Sw)`) and zero-pad (by
+/// `(Dh(Kh-1)-Ph, Dw(Kw-1)-Pw)`) the loss of the output, producing the
+/// `[B, N, Ho''', Wo''']` map used by **loss calculation** (`ei`
+/// subscript in the paper's Eq. 1).
 pub fn dilate_pad_loss(dy: &Tensor4, p: &ConvParams) -> Tensor4 {
     assert_eq!(dy.dims, [p.b, p.n, p.ho(), p.wo()]);
-    let (eh, ew) = (p.kh - 1 - p.ph, p.kw - 1 - p.pw);
+    let (eh, ew) = (p.ext_h(), p.ext_w());
     let mut out = Tensor4::zeros([p.b, p.n, p.ho3(), p.wo3()]);
     for b in 0..p.b {
         for n in 0..p.n {
             for h in 0..p.ho() {
                 for w in 0..p.wo() {
-                    out[(b, n, eh + h * p.s, ew + w * p.s)] = dy[(b, n, h, w)];
+                    out[(b, n, eh + h * p.sh, ew + w * p.sw)] = dy[(b, n, h, w)];
                 }
             }
         }
@@ -33,7 +38,7 @@ pub fn dilate_loss(dy: &Tensor4, p: &ConvParams) -> Tensor4 {
         for n in 0..p.n {
             for h in 0..p.ho() {
                 for w in 0..p.wo() {
-                    out[(b, n, h * p.s, w * p.s)] = dy[(b, n, h, w)];
+                    out[(b, n, h * p.sh, w * p.sw)] = dy[(b, n, h, w)];
                 }
             }
         }
@@ -60,11 +65,24 @@ pub fn pad_input(x: &Tensor4, p: &ConvParams) -> Tensor4 {
 
 /// `Tr(rot180 ∘ W)`: rotate each `Kh x Kw` plane by 180° and swap the
 /// channel dimensions, yielding the `[C, N, Kh, Kw]` kernel of the
-/// transposed convolution. Dense — no zero spaces — so both the baseline
-/// and BP-im2col use it as-is for the dynamic matrix of loss calculation.
+/// transposed convolution (ungrouped layers). Dense — no zero spaces —
+/// so both the baseline and BP-im2col use it as-is for the dynamic
+/// matrix of loss calculation.
 pub fn rot180_transpose(w: &Tensor4) -> Tensor4 {
     let [n, c, kh, kw] = w.dims;
     Tensor4::from_fn([c, n, kh, kw], |ci, ni, h, x| w[(ni, ci, kh - 1 - h, kw - 1 - x)])
+}
+
+/// Per-group `Tr(rot180 ∘ W)`: from the grouped kernel `[N, C/G, Kh, Kw]`
+/// extract group `g`'s `[C/G, N/G, Kh, Kw]` transposed-rotated kernel.
+/// For `G == 1` this equals [`rot180_transpose`].
+pub fn rot180_transpose_group(w: &Tensor4, p: &ConvParams, g: usize) -> Tensor4 {
+    assert_eq!(w.dims, [p.n, p.cg(), p.kh, p.kw]);
+    assert!(g < p.groups);
+    let (kh, kw, ng) = (p.kh, p.kw, p.ng());
+    Tensor4::from_fn([p.cg(), ng, kh, kw], |ci, ni, h, x| {
+        w[(g * ng + ni, ci, kh - 1 - h, kw - 1 - x)]
+    })
 }
 
 /// Elements written by the loss-calculation reorganization pass
@@ -84,7 +102,7 @@ mod tests {
     use crate::tensor::Rng;
 
     fn params() -> ConvParams {
-        ConvParams { b: 1, c: 2, hi: 7, wi: 7, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }
+        ConvParams::basic(1, 2, 7, 7, 3, 3, 3, 2, 1, 1)
     }
 
     #[test]
@@ -120,6 +138,29 @@ mod tests {
     }
 
     #[test]
+    fn dilate_asymmetric_stride_placement() {
+        let p = ConvParams::basic(1, 1, 9, 12, 1, 3, 3, 1, 1, 1).with_stride(2, 3);
+        let mut rng = Rng::new(5);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let z = dilate_loss(&dy, &p);
+        assert_eq!(z.dims, [1, 1, p.ho2(), p.wo2()]);
+        assert_eq!(z[(0, 0, 2, 3)], dy[(0, 0, 1, 1)]);
+        assert_eq!(z[(0, 0, 2, 1)], 0.0); // 1 % Sw != 0
+    }
+
+    #[test]
+    fn dilate_pad_dilated_kernel_extent() {
+        // Dh = 2, Ph = 1: padding extent Dh(Kh-1)-Ph = 3.
+        let p = ConvParams::basic(1, 1, 9, 9, 1, 3, 3, 1, 1, 1).with_dilation(2, 2);
+        let mut rng = Rng::new(6);
+        let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
+        let z = dilate_pad_loss(&dy, &p);
+        assert_eq!(p.ext_h(), 3);
+        assert_eq!(z.dims, [1, 1, p.ho() + 6, p.wo() + 6]);
+        assert_eq!(z[(0, 0, 3, 3)], dy[(0, 0, 0, 0)]);
+    }
+
+    #[test]
     fn pad_input_border_zero() {
         let p = params();
         let mut rng = Rng::new(2);
@@ -140,6 +181,26 @@ mod tests {
         assert_eq!(r[(1, 2, 0, 0)], w[(2, 1, 2, 2)]);
         // Applying it twice returns the original.
         assert_eq!(rot180_transpose(&r), w);
+    }
+
+    #[test]
+    fn rot180_group_matches_ungrouped_when_g1() {
+        let p = ConvParams::basic(1, 2, 7, 7, 3, 3, 3, 2, 1, 1);
+        let mut rng = Rng::new(4);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
+        assert_eq!(rot180_transpose_group(&w, &p, 0), rot180_transpose(&w));
+    }
+
+    #[test]
+    fn rot180_group_selects_group_channels() {
+        let p = ConvParams::basic(1, 4, 7, 7, 6, 3, 3, 2, 1, 1).with_groups(2);
+        let mut rng = Rng::new(7);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
+        let r1 = rot180_transpose_group(&w, &p, 1);
+        assert_eq!(r1.dims, [2, 3, 3, 3]);
+        // Group 1's output channels are 3..6.
+        assert_eq!(r1[(0, 0, 0, 0)], w[(3, 0, 2, 2)]);
+        assert_eq!(r1[(1, 2, 1, 2)], w[(5, 1, 1, 0)]);
     }
 
     #[test]

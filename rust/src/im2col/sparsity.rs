@@ -5,15 +5,18 @@
 //! matrix A of gradient calculation 74.8–93.6 %. Fig. 8 plots the same
 //! numbers as the on-chip-bandwidth reduction. Counting by enumerating
 //! the virtual matrices is O(10^8) per layer, so we count in
-//! O(Hi*Kh + Wi*Kw) using separability of the NZ conditions.
+//! O(Hi*Kh + Wi*Kw) using separability of the NZ conditions. The counts
+//! cover the generalized geometry: per-axis strides, kernel dilation and
+//! channel groups (the zero *fraction* is group-independent — every
+//! group's matrix has the same structural pattern).
 
 use crate::conv::ConvParams;
 use crate::im2col::{transposed, Zone};
 
-/// Zero statistics of a lowered matrix.
+/// Zero statistics of a lowered matrix (whole layer: all `G` groups).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SparsityStats {
-    /// Total elements of the virtual matrix.
+    /// Total elements of the virtual matrix (summed over groups).
     pub total: usize,
     /// Structural non-zeros (stored pixels referenced).
     pub nonzero: usize,
@@ -31,13 +34,13 @@ impl SparsityStats {
 
 /// Count of valid `h` (or `w`) positions per kernel offset for the
 /// transposed mode: for fixed `hk`, how many `h0 in [0, Hi)` make
-/// `h0 + hk` a stored pixel.
-fn valid_count_1d(len_in: usize, k: usize, pad: usize, s: usize, out: usize) -> usize {
-    let e = k - 1 - pad;
+/// `h0 + hk*D` a stored pixel.
+fn valid_count_1d(len_in: usize, k: usize, pad: usize, s: usize, d: usize, out: usize) -> usize {
+    let e = d * (k - 1) - pad;
     let mut count = 0;
     for kk in 0..k {
         for i0 in 0..len_in {
-            let h = i0 + kk;
+            let h = i0 + kk * d;
             if h < e {
                 continue;
             }
@@ -51,19 +54,20 @@ fn valid_count_1d(len_in: usize, k: usize, pad: usize, s: usize, out: usize) -> 
 }
 
 /// Sparsity of the loss-calculation stationary matrix B
-/// (`(N*Kh*Kw) x (B*Hi*Wi)`), counting structural zeros only.
+/// (`G` group matrices of `((N/G)*Kh*Kw) x (B*Hi*Wi)`), counting
+/// structural zeros only.
 pub fn loss_matrix_b(p: &ConvParams) -> SparsityStats {
-    let total = transposed::virtual_len(p);
+    let total = p.groups * transposed::virtual_len(p);
     // The NZ condition is separable in (h0, hk) and (w0, wk); rows
-    // factor as N * (Kh x Kw), columns as B * (Hi x Wi).
-    let vh = valid_count_1d(p.hi, p.kh, p.ph, p.s, p.ho());
-    let vw = valid_count_1d(p.wi, p.kw, p.pw, p.s, p.wo());
+    // factor as N * (Kh x Kw) over all groups, columns as B * (Hi x Wi).
+    let vh = valid_count_1d(p.hi, p.kh, p.ph, p.sh, p.dh, p.ho());
+    let vw = valid_count_1d(p.wi, p.kw, p.pw, p.sw, p.dw, p.wo());
     SparsityStats { total, nonzero: p.b * p.n * vh * vw }
 }
 
 /// Sparsity of the gradient-calculation dynamic matrix A
-/// (`N x (B*Ho''*Wo'')`): every compact pixel appears exactly once, so
-/// `nnz = B*N*Ho*Wo` exactly.
+/// (`G` group matrices of `(N/G) x (B*Ho''*Wo'')`): every compact pixel
+/// appears exactly once, so `nnz = B*N*Ho*Wo` exactly.
 pub fn grad_matrix_a(p: &ConvParams) -> SparsityStats {
     SparsityStats {
         total: p.n * p.b * p.ho2() * p.wo2(),
@@ -72,17 +76,18 @@ pub fn grad_matrix_a(p: &ConvParams) -> SparsityStats {
 }
 
 /// Zero fraction contributed by zero-padding in the gradient-calculation
-/// stationary matrix B (`(B*Ho''*Wo'') x (C*Kh*Kw)`) — the inference-like
-/// padding zeros, much smaller than the insertion zeros of matrix A.
+/// stationary matrix B (`G` group matrices of
+/// `(B*Ho''*Wo'') x ((C/G)*Kh*Kw)`) — the inference-like padding zeros,
+/// much smaller than the insertion zeros of matrix A.
 pub fn grad_matrix_b(p: &ConvParams) -> SparsityStats {
     let (h2, w2) = (p.ho2(), p.wo2());
     let total = p.b * h2 * w2 * p.c * p.kh * p.kw;
-    // Element (b,h,w),(c,kh,kw) reads Xpad[b, c, kh+h, kw+w]; it is a
-    // structural (padding) zero unless Ph <= kh+h < Hi+Ph.
+    // Element (b,h,w),(c,kh,kw) reads Xpad[b, c, kh*Dh+h, kw*Dw+w]; it is
+    // a structural (padding) zero unless Ph <= kh*Dh+h < Hi+Ph.
     let mut vh = 0usize;
     for kh in 0..p.kh {
         for h in 0..h2 {
-            let r = kh + h;
+            let r = kh * p.dh + h;
             if r >= p.ph && r < p.hi + p.ph {
                 vh += 1;
             }
@@ -91,7 +96,7 @@ pub fn grad_matrix_b(p: &ConvParams) -> SparsityStats {
     let mut vw = 0usize;
     for kw in 0..p.kw {
         for w in 0..w2 {
-            let r = kw + w;
+            let r = kw * p.dw + w;
             if r >= p.pw && r < p.wi + p.pw {
                 vw += 1;
             }
@@ -101,15 +106,18 @@ pub fn grad_matrix_b(p: &ConvParams) -> SparsityStats {
 }
 
 /// Brute-force recount of [`loss_matrix_b`] by enumerating the mapping —
-/// O(virtual size); used by tests and small layers only.
+/// O(virtual size); used by tests and small layers only. Every group has
+/// the identical structural pattern, so group 0 is enumerated and scaled.
 pub fn loss_matrix_b_brute(p: &ConvParams) -> SparsityStats {
-    let total = transposed::virtual_len(p);
-    let nonzero = (0..total).filter(|a| transposed::map_addr(*a, p).is_some()).count();
-    SparsityStats { total, nonzero }
+    let per_group = transposed::virtual_len(p);
+    let nonzero_g0 =
+        (0..per_group).filter(|a| transposed::map_addr(*a, p, 0).is_some()).count();
+    SparsityStats { total: p.groups * per_group, nonzero: p.groups * nonzero_g0 }
 }
 
 /// Zone histogram of the loss-mode virtual matrix: how many pixels fall
-/// in area 0 / area 1 / out-of-bounds / non-zero. Used by reports.
+/// in area 0 / area 1 / out-of-bounds / non-zero, over all groups. Used
+/// by reports.
 pub fn loss_zone_histogram(p: &ConvParams) -> [usize; 4] {
     let mut hist = [0usize; 4];
     for a in 0..transposed::virtual_len(p) {
@@ -121,7 +129,7 @@ pub fn loss_zone_histogram(p: &ConvParams) -> [usize; 4] {
             Zone::OutOfBounds => 2,
             Zone::NonZero => 3,
         };
-        hist[idx] += 1;
+        hist[idx] += p.groups;
     }
     hist
 }
@@ -133,10 +141,14 @@ mod tests {
     #[test]
     fn analytic_matches_brute_force() {
         for p in [
-            ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
-            ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 },
-            ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 },
-            ConvParams { b: 1, c: 1, hi: 11, wi: 8, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
+            ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1),
+            ConvParams::basic(1, 3, 8, 8, 4, 1, 1, 2, 0, 0),
+            ConvParams::basic(1, 1, 10, 10, 2, 3, 3, 2, 0, 0),
+            ConvParams::basic(1, 1, 11, 8, 2, 3, 2, 3, 1, 0),
+            ConvParams::basic(1, 1, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3),
+            ConvParams::basic(1, 1, 11, 11, 2, 3, 3, 2, 2, 2).with_dilation(2, 2),
+            ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2),
+            ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4),
         ] {
             assert_eq!(loss_matrix_b(&p), loss_matrix_b_brute(&p), "analytic != brute for {p:?}");
         }
@@ -169,6 +181,24 @@ mod tests {
     }
 
     #[test]
+    fn grad_a_sparsity_asymmetric_stride() {
+        // 1 - (Ho*Wo)/(Ho''*Wo'') with independent per-axis insertion.
+        let p = ConvParams::basic(1, 1, 9, 12, 1, 3, 3, 1, 1, 1).with_stride(2, 3);
+        let s = grad_matrix_a(&p);
+        let expect = 1.0
+            - (p.ho() * p.wo()) as f64 / (p.ho2() * p.wo2()) as f64;
+        assert!((s.sparsity() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsity_fraction_is_group_independent() {
+        let dense = ConvParams::square(56, 128, 128, 3, 2, 1);
+        let grouped = dense.with_groups(32);
+        assert!((loss_matrix_b(&dense).sparsity() - loss_matrix_b(&grouped).sparsity()).abs() < 1e-12);
+        assert!((grad_matrix_a(&dense).sparsity() - grad_matrix_a(&grouped).sparsity()).abs() < 1e-12);
+    }
+
+    #[test]
     fn grad_b_padding_sparsity_small() {
         // Padding zeros are a small fraction (inference-like).
         let p = ConvParams::square(112, 64, 64, 3, 2, 1);
@@ -178,9 +208,9 @@ mod tests {
 
     #[test]
     fn zone_histogram_sums_to_total() {
-        let p = ConvParams { b: 1, c: 1, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(1, 1, 9, 9, 2, 3, 3, 2, 1, 1);
         let hist = loss_zone_histogram(&p);
-        assert_eq!(hist.iter().sum::<usize>(), transposed::virtual_len(&p));
+        assert_eq!(hist.iter().sum::<usize>(), p.groups * transposed::virtual_len(&p));
         assert_eq!(hist[3], loss_matrix_b(&p).nonzero);
     }
 

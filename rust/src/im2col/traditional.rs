@@ -1,80 +1,111 @@
 //! Traditional *explicit* im2col over the reorganized (zero-spaced)
 //! tensors — the baseline the paper compares against, and the functional
 //! specification the implicit mappings must reproduce bit-exactly.
+//!
+//! Grouped convolutions lower to `G` independent GEMMs (one per channel
+//! group); every function here takes the group index `g` and produces
+//! group `g`'s operand. `G == 1, g == 0` recovers the paper's whole-layer
+//! matrices.
 
 use crate::conv::ConvParams;
 use crate::im2col::reorg;
 use crate::tensor::{Matrix, Tensor4};
 
-/// Lowered stationary matrix **B** of the loss calculation:
-/// `B[(n,kh,kw), (b,h0,w0)] = dYz[b, n, h0+kh, w0+kw]` where `dYz` is the
-/// zero-inserted + zero-padded loss map (`[B,N,Ho''',Wo''']`).
+/// Lowered stationary matrix **B** of the loss calculation, group `g`:
+/// `B[(n',kh,kw), (b,h0,w0)] = dYz[b, g*N/G+n', h0+kh*Dh, w0+kw*Dw]`
+/// where `dYz` is the zero-inserted + zero-padded loss map
+/// (`[B,N,Ho''',Wo''']`).
 ///
 /// Reads outside `dYz` (possible when the forward floor-division is
-/// inexact, so `h0+kh > Ho'''-1` for the last rows) are zero — those
+/// inexact, so `h0+kh*Dh > Ho'''-1` for the last rows) are zero — those
 /// virtual pixels correspond to input rows that never contributed to the
 /// forward output.
-pub fn lower_loss_b(dyz: &Tensor4, p: &ConvParams) -> Matrix {
+pub fn lower_loss_b(dyz: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
     assert_eq!(dyz.dims, [p.b, p.n, p.ho3(), p.wo3()]);
-    let rows = p.n * p.kh * p.kw;
+    assert!(g < p.groups);
+    let ng = p.ng();
+    let rows = ng * p.kh * p.kw;
     let cols = p.b * p.hi * p.wi;
     Matrix::from_fn(rows, cols, |row, col| {
         let (n, rem) = (row / (p.kh * p.kw), row % (p.kh * p.kw));
         let (kh, kw) = (rem / p.kw, rem % p.kw);
         let (b, rem) = (col / (p.hi * p.wi), col % (p.hi * p.wi));
         let (h0, w0) = (rem / p.wi, rem % p.wi);
-        dyz.get_padded(b, n, (h0 + kh) as isize, (w0 + kw) as isize)
+        dyz.get_padded(b, g * ng + n, (h0 + kh * p.dh) as isize, (w0 + kw * p.dw) as isize)
     })
 }
 
-/// Lowered dynamic matrix **A** of the loss calculation:
-/// `A[c, (n,kh,kw)] = rot180(W)ᵀ[c, n, kh, kw]` — dense, no zero spaces.
-pub fn lower_loss_a(w: &Tensor4, p: &ConvParams) -> Matrix {
-    let wt = reorg::rot180_transpose(w);
-    assert_eq!(wt.dims, [p.c, p.n, p.kh, p.kw]);
-    Matrix { rows: p.c, cols: p.n * p.kh * p.kw, data: wt.data }
+/// Lowered dynamic matrix **A** of the loss calculation, group `g`:
+/// `A[c', (n',kh,kw)] = rot180(W_g)ᵀ[c', n', kh, kw]` — dense, no zero
+/// spaces.
+pub fn lower_loss_a(w: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
+    let wt = reorg::rot180_transpose_group(w, p, g);
+    assert_eq!(wt.dims, [p.cg(), p.ng(), p.kh, p.kw]);
+    Matrix { rows: p.cg(), cols: p.ng() * p.kh * p.kw, data: wt.data }
 }
 
-/// Lowered dynamic matrix **A** of the gradient calculation:
-/// `A[n, (b,h,w)] = dYd[b, n, h, w]` over the zero-inserted
+/// Lowered dynamic matrix **A** of the gradient calculation, group `g`:
+/// `A[n', (b,h,w)] = dYd[b, g*N/G+n', h, w]` over the zero-inserted
 /// `[B,N,Ho'',Wo'']` loss map (no im2col — the loss acts as the kernel).
-pub fn lower_grad_a(dyd: &Tensor4, p: &ConvParams) -> Matrix {
+pub fn lower_grad_a(dyd: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
     let (h2, w2) = (p.ho2(), p.wo2());
     assert_eq!(dyd.dims, [p.b, p.n, h2, w2]);
-    Matrix::from_fn(p.n, p.b * h2 * w2, |n, col| {
+    assert!(g < p.groups);
+    let ng = p.ng();
+    Matrix::from_fn(ng, p.b * h2 * w2, |n, col| {
         let (b, rem) = (col / (h2 * w2), col % (h2 * w2));
         let (h, w) = (rem / w2, rem % w2);
-        dyd[(b, n, h, w)]
+        dyd[(b, g * ng + n, h, w)]
     })
 }
 
-/// Lowered stationary matrix **B** of the gradient calculation:
-/// `B[(b,h,w), (c,kh,kw)] = Xpad[b, c, kh+h, kw+w]` — the im2col of the
-/// padded input with an `Ho'' x Wo''`-step window, stride 1.
-pub fn lower_grad_b(xpad: &Tensor4, p: &ConvParams) -> Matrix {
+/// Lowered stationary matrix **B** of the gradient calculation, group
+/// `g`: `B[(b,h,w), (c',kh,kw)] = Xpad[b, g*C/G+c', kh*Dh+h, kw*Dw+w]` —
+/// the im2col of the padded input with an `Ho'' x Wo''`-step window,
+/// stride 1, kernel taps dilated by `(Dh, Dw)`.
+pub fn lower_grad_b(xpad: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
     let (h2, w2) = (p.ho2(), p.wo2());
     assert_eq!(xpad.dims, [p.b, p.c, p.hi + 2 * p.ph, p.wi + 2 * p.pw]);
-    Matrix::from_fn(p.b * h2 * w2, p.c * p.kh * p.kw, |row, col| {
+    assert!(g < p.groups);
+    let cg = p.cg();
+    Matrix::from_fn(p.b * h2 * w2, cg * p.kh * p.kw, |row, col| {
         let (b, rem) = (row / (h2 * w2), row % (h2 * w2));
         let (h, w) = (rem / w2, rem % w2);
         let (c, rem) = (col / (p.kh * p.kw), col % (p.kh * p.kw));
         let (kh, kw) = (rem / p.kw, rem % p.kw);
-        xpad.get_padded(b, c, (kh + h) as isize, (kw + w) as isize)
+        xpad.get_padded(b, g * cg + c, (kh * p.dh + h) as isize, (kw * p.dw + w) as isize)
     })
 }
 
-/// Un-lower the loss-calculation GEMM output `[C x B*Hi*Wi]` to
-/// `dX [B,C,Hi,Wi]`.
-pub fn loss_from_gemm(y: &Matrix, p: &ConvParams) -> Tensor4 {
-    assert_eq!((y.rows, y.cols), (p.c, p.b * p.hi * p.wi));
-    Tensor4::from_fn([p.b, p.c, p.hi, p.wi], |b, c, h, w| y[(c, b * p.hi * p.wi + h * p.wi + w)])
+/// Scatter group `g`'s loss-calculation GEMM output `[C/G x B*Hi*Wi]`
+/// into the channels `g*C/G ..` of `dX [B,C,Hi,Wi]`.
+pub fn loss_from_gemm_group(y: &Matrix, p: &ConvParams, g: usize, dx: &mut Tensor4) {
+    assert_eq!((y.rows, y.cols), (p.cg(), p.b * p.hi * p.wi));
+    assert_eq!(dx.dims, [p.b, p.c, p.hi, p.wi]);
+    let cg = p.cg();
+    for r in 0..cg {
+        for b in 0..p.b {
+            for h in 0..p.hi {
+                for w in 0..p.wi {
+                    dx[(b, g * cg + r, h, w)] = y[(r, b * p.hi * p.wi + h * p.wi + w)];
+                }
+            }
+        }
+    }
 }
 
-/// Un-lower the gradient-calculation GEMM output `[N x C*Kh*Kw]` to
-/// `dW [N,C,Kh,Kw]`.
-pub fn grad_from_gemm(y: &Matrix, p: &ConvParams) -> Tensor4 {
-    assert_eq!((y.rows, y.cols), (p.n, p.c * p.kh * p.kw));
-    Tensor4 { dims: [p.n, p.c, p.kh, p.kw], data: y.data.clone() }
+/// Scatter group `g`'s gradient-calculation GEMM output
+/// `[N/G x (C/G)*Kh*Kw]` into the rows `g*N/G ..` of
+/// `dW [N, C/G, Kh, Kw]`.
+pub fn grad_from_gemm_group(y: &Matrix, p: &ConvParams, g: usize, dw: &mut Tensor4) {
+    let (cg, ng) = (p.cg(), p.ng());
+    assert_eq!((y.rows, y.cols), (ng, cg * p.kh * p.kw));
+    assert_eq!(dw.dims, [p.n, cg, p.kh, p.kw]);
+    let row_len = cg * p.kh * p.kw;
+    for n in 0..ng {
+        let dst = (g * ng + n) * row_len;
+        dw.data[dst..dst + row_len].copy_from_slice(&y.data[n * row_len..(n + 1) * row_len]);
+    }
 }
 
 #[cfg(test)]
@@ -85,12 +116,15 @@ mod tests {
 
     fn check_loss(p: ConvParams, seed: u64) {
         let mut rng = Rng::new(seed);
-        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
         let dyz = reorg::dilate_pad_loss(&dy, &p);
-        let a = lower_loss_a(&w, &p);
-        let bm = lower_loss_b(&dyz, &p);
-        let dx = loss_from_gemm(&a.matmul(&bm), &p);
+        let mut dx = Tensor4::zeros([p.b, p.c, p.hi, p.wi]);
+        for g in 0..p.groups {
+            let a = lower_loss_a(&w, &p, g);
+            let bm = lower_loss_b(&dyz, &p, g);
+            loss_from_gemm_group(&a.matmul(&bm), &p, g, &mut dx);
+        }
         let oracle = conv2d_bwd_input(&dy, &w, &p);
         assert!(dx.max_abs_diff(&oracle) < 1e-4, "loss GEMM != oracle for {p:?}");
     }
@@ -101,62 +135,96 @@ mod tests {
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
         let dyd = reorg::dilate_loss(&dy, &p);
         let xp = reorg::pad_input(&x, &p);
-        let a = lower_grad_a(&dyd, &p);
-        let bm = lower_grad_b(&xp, &p);
-        let dw = grad_from_gemm(&a.matmul(&bm), &p);
+        let mut dw = Tensor4::zeros([p.n, p.cg(), p.kh, p.kw]);
+        for g in 0..p.groups {
+            let a = lower_grad_a(&dyd, &p, g);
+            let bm = lower_grad_b(&xp, &p, g);
+            grad_from_gemm_group(&a.matmul(&bm), &p, g, &mut dw);
+        }
         let oracle = conv2d_bwd_weight(&x, &dy, &p);
         assert!(dw.max_abs_diff(&oracle) < 1e-3, "grad GEMM != oracle for {p:?}");
     }
 
     #[test]
     fn loss_gemm_matches_oracle_stride2_pad1() {
-        check_loss(ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 10);
+        check_loss(ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1), 10);
     }
 
     #[test]
     fn loss_gemm_matches_oracle_1x1() {
-        check_loss(ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 }, 11);
+        check_loss(ConvParams::basic(1, 3, 8, 8, 4, 1, 1, 2, 0, 0), 11);
     }
 
     #[test]
     fn loss_gemm_matches_oracle_inexact_division() {
-        check_loss(ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 }, 12);
+        check_loss(ConvParams::basic(1, 2, 10, 10, 2, 3, 3, 2, 0, 0), 12);
     }
 
     #[test]
     fn loss_gemm_matches_oracle_stride3() {
-        check_loss(ConvParams { b: 1, c: 2, hi: 11, wi: 8, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 }, 13);
+        check_loss(ConvParams::basic(1, 2, 11, 8, 2, 3, 2, 3, 1, 0), 13);
+    }
+
+    #[test]
+    fn loss_gemm_matches_oracle_asymmetric_stride() {
+        check_loss(ConvParams::basic(1, 2, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3), 18);
+    }
+
+    #[test]
+    fn loss_gemm_matches_oracle_dilated() {
+        check_loss(ConvParams::basic(1, 2, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2), 19);
+    }
+
+    #[test]
+    fn loss_gemm_matches_oracle_grouped() {
+        check_loss(ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2), 20);
+        check_loss(ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4), 21);
     }
 
     #[test]
     fn grad_gemm_matches_oracle_stride2_pad1() {
-        check_grad(ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 }, 14);
+        check_grad(ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1), 14);
     }
 
     #[test]
     fn grad_gemm_matches_oracle_1x1() {
-        check_grad(ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 }, 15);
+        check_grad(ConvParams::basic(1, 3, 8, 8, 4, 1, 1, 2, 0, 0), 15);
     }
 
     #[test]
     fn grad_gemm_matches_oracle_inexact_division() {
-        check_grad(ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 }, 16);
+        check_grad(ConvParams::basic(1, 2, 10, 10, 2, 3, 3, 2, 0, 0), 16);
     }
 
     #[test]
     fn grad_gemm_matches_oracle_stride4() {
-        check_grad(ConvParams { b: 1, c: 1, hi: 12, wi: 12, n: 2, kh: 4, kw: 4, s: 4, ph: 0, pw: 0 }, 17);
+        check_grad(ConvParams::basic(1, 1, 12, 12, 2, 4, 4, 4, 0, 0), 17);
+    }
+
+    #[test]
+    fn grad_gemm_matches_oracle_asymmetric_stride() {
+        check_grad(ConvParams::basic(1, 2, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(3, 2), 22);
+    }
+
+    #[test]
+    fn grad_gemm_matches_oracle_dilated() {
+        check_grad(ConvParams::basic(1, 2, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2), 23);
+    }
+
+    #[test]
+    fn grad_gemm_matches_oracle_grouped() {
+        check_grad(ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2), 24);
+        check_grad(ConvParams::basic(1, 6, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(6), 25);
     }
 
     #[test]
     fn loss_b_sparsity_is_high_for_stride2() {
         // §I claim: >= ~75 % zeros for stride >= 2.
-        let p = ConvParams { b: 1, c: 2, hi: 16, wi: 16, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(1, 2, 16, 16, 2, 3, 3, 2, 1, 1);
         let mut rng = Rng::new(18);
         // Use all-nonzero dY so every zero in the matrix is structural.
         let dy = Tensor4::from_fn([p.b, p.n, p.ho(), p.wo()], |_, _, _, _| rng.range_f32(0.5, 1.0));
-        let bm = lower_loss_b(&reorg::dilate_pad_loss(&dy, &p), &p);
+        let bm = lower_loss_b(&reorg::dilate_pad_loss(&dy, &p), &p, 0);
         assert!(bm.sparsity() > 0.70, "sparsity {}", bm.sparsity());
     }
-
 }

@@ -4,8 +4,12 @@
 //! zero-inserted + zero-padded loss map. BP-im2col never materializes
 //! that map: given an address in the *virtual* matrix B, it recovers the
 //! virtual pixel `(b, n, h, w)` of the zero-spaced map, classifies it
-//! (NZ detection, Eqs. 2–3), and for non-zero pixels produces the address
-//! in the *compact* `[B,N,Ho,Wo]` loss map actually stored on chip.
+//! (NZ detection, generalized Eqs. 2–3, DESIGN.md §3), and for non-zero
+//! pixels produces the address in the *compact* `[B,N,Ho,Wo]` loss map
+//! actually stored on chip.
+//!
+//! Grouped layers run one virtual matrix per channel group `g`
+//! (`(N/G)*Kh*Kw` rows); `G == 1, g == 0` is the paper's geometry.
 
 use crate::conv::ConvParams;
 use crate::im2col::Zone;
@@ -16,7 +20,7 @@ use crate::tensor::{Matrix, Tensor4};
 pub struct VirtualPixelB {
     /// Batch index (from the column).
     pub b: usize,
-    /// Output-channel index (from the row).
+    /// Output-channel index *within the group* (from the row).
     pub n: usize,
     /// Row/column inside the virtual `Ho''' x Wo'''` zero-spaced channel.
     /// May exceed `Ho'''-1` when the forward floor-division is inexact;
@@ -26,7 +30,8 @@ pub struct VirtualPixelB {
 }
 
 /// Lines 1–4 of Algorithm 1: decompose a flat virtual-matrix address into
-/// the virtual zero-spaced-map pixel it reads.
+/// the virtual zero-spaced-map pixel it reads. Kernel taps are dilated:
+/// `h = h0 + hk*Dh`, `w = w0 + wk*Dw`.
 #[inline]
 pub fn decompose(addr_in: usize, p: &ConvParams) -> VirtualPixelB {
     let cols = p.b * p.hi * p.wi;
@@ -35,48 +40,52 @@ pub fn decompose(addr_in: usize, p: &ConvParams) -> VirtualPixelB {
     let (temp1, wk) = (row / p.kw, row % p.kw);
     let (n, hk) = (temp1 / p.kh, temp1 % p.kh);
     let temp2 = col % (p.hi * p.wi);
-    let (h, w) = (temp2 / p.wi + hk, temp2 % p.wi + wk);
+    let (h, w) = (temp2 / p.wi + hk * p.dh, temp2 % p.wi + wk * p.dw);
     VirtualPixelB { b, n, h, w }
 }
 
 /// NZ detection of transposed mode for a virtual pixel `(h, w)`:
-/// Eq. (2) (area 0 — upper/left padding), Eq. (3) (area 1 — insertions),
-/// plus the bounds check for right/bottom padding (DESIGN.md §1).
+/// generalized Eq. (2) (area 0 — upper/left padding, extent
+/// `Dh(Kh-1)-Ph`), generalized Eq. (3) (area 1 — insertions, per-axis
+/// strides), plus the bounds check for right/bottom padding
+/// (DESIGN.md §3).
 #[inline]
 pub fn nz_detect(h: usize, w: usize, p: &ConvParams) -> Zone {
-    let (eh, ew) = (p.kh - 1 - p.ph, p.kw - 1 - p.pw);
+    let (eh, ew) = (p.ext_h(), p.ext_w());
     if h < eh || w < ew {
         return Zone::Area0; // Eq. (2)
     }
-    if (h - eh) % p.s > 0 || (w - ew) % p.s > 0 {
+    if (h - eh) % p.sh > 0 || (w - ew) % p.sw > 0 {
         return Zone::Area1; // Eq. (3)
     }
-    if (h - eh) / p.s >= p.ho() || (w - ew) / p.s >= p.wo() {
+    if (h - eh) / p.sh >= p.ho() || (w - ew) / p.sw >= p.wo() {
         return Zone::OutOfBounds; // right/bottom padding
     }
     Zone::NonZero
 }
 
-/// Full Algorithm 1: map an address of the virtual matrix B to the
-/// address in the compact loss map, or `None` for structural zeros.
+/// Full Algorithm 1: map an address of group `g`'s virtual matrix B to
+/// the address in the compact loss map, or `None` for structural zeros.
 #[inline]
-pub fn map_addr(addr_in: usize, p: &ConvParams) -> Option<usize> {
+pub fn map_addr(addr_in: usize, p: &ConvParams, g: usize) -> Option<usize> {
     let px = decompose(addr_in, p);
     if nz_detect(px.h, px.w, p).is_zero() {
         return None; // addr_out = NULL — zero-spaces
     }
-    let (eh, ew) = (p.kh - 1 - p.ph, p.kw - 1 - p.pw);
-    let (h1, w1) = ((px.h - eh) / p.s, (px.w - ew) / p.s);
+    let (eh, ew) = (p.ext_h(), p.ext_w());
+    let (h1, w1) = ((px.h - eh) / p.sh, (px.w - ew) / p.sw);
     let (ho, wo) = (p.ho(), p.wo());
-    Some(px.b * p.n * ho * wo + px.n * ho * wo + h1 * wo + w1)
+    let n_abs = g * p.ng() + px.n;
+    Some(px.b * p.n * ho * wo + n_abs * ho * wo + h1 * wo + w1)
 }
 
-/// Number of addresses in the virtual matrix B (`(N*Kh*Kw) x (B*Hi*Wi)`).
+/// Number of addresses in one group's virtual matrix B
+/// (`((N/G)*Kh*Kw) x (B*Hi*Wi)`).
 pub const fn virtual_len(p: &ConvParams) -> usize {
-    p.n * p.kh * p.kw * p.b * p.hi * p.wi
+    p.ng() * p.kh * p.kw * p.b * p.hi * p.wi
 }
 
-/// Streaming address generator: yields `map_addr(addr)` for
+/// Streaming address generator: yields `map_addr(addr, p, g)` for
 /// `addr = 0, 1, 2, ...` without any division — the indices `(row, col,
 /// b, h0, w0)` are carried as counters exactly like the hardware's
 /// incrementers, and the per-row quantities (`n, hk, wk`, padding
@@ -84,10 +93,11 @@ pub const fn virtual_len(p: &ConvParams) -> usize {
 /// [`map_addr`] per address (EXPERIMENTS.md §Perf).
 pub struct AddrGen<'a> {
     p: &'a ConvParams,
-    /// Hoisted row components.
-    n: usize,
-    hk: usize,
-    wk: usize,
+    /// Absolute output-channel index of the current row (`g*N/G + n`).
+    n_abs: usize,
+    /// Hoisted dilated kernel offsets (`hk*Dh`, `wk*Dw`).
+    hk_off: usize,
+    wk_off: usize,
     /// Column counters.
     b: usize,
     h0: usize,
@@ -97,8 +107,19 @@ pub struct AddrGen<'a> {
 }
 
 impl<'a> AddrGen<'a> {
-    pub fn new(p: &'a ConvParams) -> Self {
-        Self { p, n: 0, hk: 0, wk: 0, b: 0, h0: 0, w0: 0, row: 0, rows: p.n * p.kh * p.kw }
+    pub fn new(p: &'a ConvParams, g: usize) -> Self {
+        assert!(g < p.groups);
+        Self {
+            p,
+            n_abs: g * p.ng(),
+            hk_off: 0,
+            wk_off: 0,
+            b: 0,
+            h0: 0,
+            w0: 0,
+            row: 0,
+            rows: p.ng() * p.kh * p.kw,
+        }
     }
 }
 
@@ -112,15 +133,15 @@ impl Iterator for AddrGen<'_> {
         if self.row == self.rows {
             return None;
         }
-        let (h, w) = (self.h0 + self.hk, self.w0 + self.wk);
+        let (h, w) = (self.h0 + self.hk_off, self.w0 + self.wk_off);
         let out = if nz_detect(h, w, p) == Zone::NonZero {
-            let (eh, ew) = (p.kh - 1 - p.ph, p.kw - 1 - p.pw);
+            let (eh, ew) = (p.ext_h(), p.ext_w());
             let (ho, wo) = (p.ho(), p.wo());
             Some(
                 self.b * p.n * ho * wo
-                    + self.n * ho * wo
-                    + (h - eh) / p.s * wo
-                    + (w - ew) / p.s,
+                    + self.n_abs * ho * wo
+                    + (h - eh) / p.sh * wo
+                    + (w - ew) / p.sw,
             )
         } else {
             None
@@ -136,13 +157,13 @@ impl Iterator for AddrGen<'_> {
                 if self.b == p.b {
                     self.b = 0;
                     self.row += 1;
-                    self.wk += 1;
-                    if self.wk == p.kw {
-                        self.wk = 0;
-                        self.hk += 1;
-                        if self.hk == p.kh {
-                            self.hk = 0;
-                            self.n += 1;
+                    self.wk_off += p.dw;
+                    if self.wk_off == p.kw * p.dw {
+                        self.wk_off = 0;
+                        self.hk_off += p.dh;
+                        if self.hk_off == p.kh * p.dh {
+                            self.hk_off = 0;
+                            self.n_abs += 1;
                         }
                     }
                 }
@@ -152,18 +173,19 @@ impl Iterator for AddrGen<'_> {
     }
 }
 
-/// Materialize the lowered matrix *functionally* through the implicit
-/// mapping: every element is fetched from the compact `dY` (flat NCHW
-/// buffer) via the streaming [`AddrGen`] (equivalent to [`map_addr`] per
-/// address; see tests). This is what the accelerator does in hardware;
-/// it must equal [`crate::im2col::traditional::lower_loss_b`] over the
-/// reorganized map, bit for bit.
-pub fn gather_matrix(dy: &Tensor4, p: &ConvParams) -> Matrix {
+/// Materialize group `g`'s lowered matrix *functionally* through the
+/// implicit mapping: every element is fetched from the compact `dY`
+/// (flat NCHW buffer) via the streaming [`AddrGen`] (equivalent to
+/// [`map_addr`] per address; see tests). This is what the accelerator
+/// does in hardware; it must equal
+/// [`crate::im2col::traditional::lower_loss_b`] over the reorganized map,
+/// bit for bit.
+pub fn gather_matrix(dy: &Tensor4, p: &ConvParams, g: usize) -> Matrix {
     assert_eq!(dy.dims, [p.b, p.n, p.ho(), p.wo()]);
-    let rows = p.n * p.kh * p.kw;
+    let rows = p.ng() * p.kh * p.kw;
     let cols = p.b * p.hi * p.wi;
     let mut m = Matrix::zeros(rows, cols);
-    for (out, mapped) in m.data.iter_mut().zip(AddrGen::new(p)) {
+    for (out, mapped) in m.data.iter_mut().zip(AddrGen::new(p, g)) {
         if let Some(addr_out) = mapped {
             *out = dy.data[addr_out];
         }
@@ -180,56 +202,70 @@ mod tests {
     fn check_gather_equals_explicit(p: ConvParams, seed: u64) {
         let mut rng = Rng::new(seed);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
-        let implicit = gather_matrix(&dy, &p);
-        let explicit = traditional::lower_loss_b(&reorg::dilate_pad_loss(&dy, &p), &p);
-        assert_eq!(implicit, explicit, "Algorithm 1 mismatch for {p:?}");
+        let dyz = reorg::dilate_pad_loss(&dy, &p);
+        for g in 0..p.groups {
+            let implicit = gather_matrix(&dy, &p, g);
+            let explicit = traditional::lower_loss_b(&dyz, &p, g);
+            assert_eq!(implicit, explicit, "Algorithm 1 mismatch for {p:?} group {g}");
+        }
     }
 
     #[test]
     fn alg1_equals_explicit_stride2_pad1() {
-        check_gather_equals_explicit(
-            ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
-            20,
-        );
+        check_gather_equals_explicit(ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1), 20);
     }
 
     #[test]
     fn alg1_equals_explicit_1x1_stride2() {
-        check_gather_equals_explicit(
-            ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 },
-            21,
-        );
+        check_gather_equals_explicit(ConvParams::basic(1, 3, 8, 8, 4, 1, 1, 2, 0, 0), 21);
     }
 
     #[test]
     fn alg1_equals_explicit_inexact_division() {
-        check_gather_equals_explicit(
-            ConvParams { b: 1, c: 1, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 },
-            22,
-        );
+        check_gather_equals_explicit(ConvParams::basic(1, 1, 10, 10, 2, 3, 3, 2, 0, 0), 22);
     }
 
     #[test]
     fn alg1_equals_explicit_stride3_asymmetric() {
-        check_gather_equals_explicit(
-            ConvParams { b: 1, c: 1, hi: 11, wi: 8, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
-            23,
-        );
+        check_gather_equals_explicit(ConvParams::basic(1, 1, 11, 8, 2, 3, 2, 3, 1, 0), 23);
     }
 
     #[test]
     fn alg1_equals_explicit_stride1() {
         // Degenerate S=1: no insertions, area 1 empty.
+        check_gather_equals_explicit(ConvParams::basic(1, 1, 6, 6, 2, 3, 3, 1, 1, 1), 24);
+    }
+
+    #[test]
+    fn alg1_equals_explicit_asymmetric_stride() {
         check_gather_equals_explicit(
-            ConvParams { b: 1, c: 1, hi: 6, wi: 6, n: 2, kh: 3, kw: 3, s: 1, ph: 1, pw: 1 },
-            24,
+            ConvParams::basic(1, 1, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3),
+            25,
         );
+    }
+
+    #[test]
+    fn alg1_equals_explicit_dilated() {
+        check_gather_equals_explicit(
+            ConvParams::basic(1, 1, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2),
+            26,
+        );
+        check_gather_equals_explicit(
+            ConvParams::basic(1, 1, 12, 10, 2, 3, 2, 2, 1, 1).with_dilation(2, 3),
+            27,
+        );
+    }
+
+    #[test]
+    fn alg1_equals_explicit_grouped() {
+        check_gather_equals_explicit(ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2), 28);
+        check_gather_equals_explicit(ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4), 29);
     }
 
     #[test]
     fn decompose_matches_paper_notation() {
         // Hand-checked small case: Hi=Wi=4, Kh=Kw=2, B=1.
-        let p = ConvParams { b: 1, c: 1, hi: 4, wi: 4, n: 2, kh: 2, kw: 2, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 1, 4, 4, 2, 2, 2, 2, 0, 0);
         // addr 0 -> row 0 (n=0,hk=0,wk=0), col 0 (b=0,h0=0,w0=0) -> (h,w)=(0,0)
         assert_eq!(decompose(0, &p), VirtualPixelB { b: 0, n: 0, h: 0, w: 0 });
         // row 3 = n0,hk1,wk1; col 5 = h0=1,w0=1 -> h=2,w=2
@@ -239,9 +275,16 @@ mod tests {
     }
 
     #[test]
+    fn decompose_applies_dilation_to_kernel_taps() {
+        let p = ConvParams::basic(1, 1, 5, 5, 1, 2, 2, 1, 1, 1).with_dilation(2, 2);
+        // row 3 = hk=1, wk=1 -> offsets (2, 2).
+        assert_eq!(decompose(3 * 25, &p), VirtualPixelB { b: 0, n: 0, h: 2, w: 2 });
+    }
+
+    #[test]
     fn nz_zones() {
         // Kh=Kw=3, P=0 -> padding extent 2; S=2.
-        let p = ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 1, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 };
+        let p = ConvParams::basic(1, 1, 8, 8, 1, 3, 3, 2, 0, 0);
         assert_eq!(nz_detect(0, 5, &p), Zone::Area0); // h < 2
         assert_eq!(nz_detect(5, 1, &p), Zone::Area0); // w < 2
         assert_eq!(nz_detect(3, 2, &p), Zone::Area1); // (3-2)%2 = 1
@@ -251,27 +294,55 @@ mod tests {
     }
 
     #[test]
+    fn nz_zones_asymmetric_and_dilated() {
+        // Sh=2, Sw=3; Dh=2 -> Eh = 2*2-1 = 3, Ew = 2-1 = 1.
+        let p = ConvParams::basic(1, 1, 12, 12, 1, 3, 3, 1, 1, 1)
+            .with_stride(2, 3)
+            .with_dilation(2, 1);
+        assert_eq!(p.ext_h(), 3);
+        assert_eq!(p.ext_w(), 1);
+        assert_eq!(nz_detect(2, 4, &p), Zone::Area0); // h < 3
+        assert_eq!(nz_detect(4, 4, &p), Zone::Area1); // (4-3)%2 = 1
+        assert_eq!(nz_detect(5, 2, &p), Zone::Area1); // (2-1)%3 = 1
+        assert_eq!(nz_detect(5, 4, &p), Zone::NonZero); // ((5-3)/2, (4-1)/3) = (1,1)
+    }
+
+    #[test]
     fn addrgen_stream_equals_map_addr() {
         for p in [
-            ConvParams { b: 2, c: 1, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
-            ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 3, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 },
-            ConvParams { b: 1, c: 1, hi: 10, wi: 7, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
+            ConvParams::basic(2, 1, 9, 9, 2, 3, 3, 2, 1, 1),
+            ConvParams::basic(1, 1, 8, 8, 3, 1, 1, 2, 0, 0),
+            ConvParams::basic(1, 1, 10, 7, 2, 3, 2, 3, 1, 0),
+            ConvParams::basic(1, 1, 9, 11, 2, 3, 3, 1, 1, 1).with_stride(2, 3),
+            ConvParams::basic(1, 1, 11, 11, 2, 3, 3, 2, 2, 2).with_dilation(2, 2),
         ] {
-            let stream: Vec<Option<usize>> = AddrGen::new(&p).collect();
+            let stream: Vec<Option<usize>> = AddrGen::new(&p, 0).collect();
             assert_eq!(stream.len(), virtual_len(&p));
             for (addr, got) in stream.into_iter().enumerate() {
-                assert_eq!(got, map_addr(addr, &p), "{p:?} addr {addr}");
+                assert_eq!(got, map_addr(addr, &p, 0), "{p:?} addr {addr}");
+            }
+        }
+    }
+
+    #[test]
+    fn addrgen_stream_equals_map_addr_grouped() {
+        let p = ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2);
+        for g in 0..p.groups {
+            let stream: Vec<Option<usize>> = AddrGen::new(&p, g).collect();
+            assert_eq!(stream.len(), virtual_len(&p));
+            for (addr, got) in stream.into_iter().enumerate() {
+                assert_eq!(got, map_addr(addr, &p, g), "group {g} addr {addr}");
             }
         }
     }
 
     #[test]
     fn map_addr_compact_addresses_in_range() {
-        let p = ConvParams { b: 2, c: 1, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+        let p = ConvParams::basic(2, 1, 9, 9, 2, 3, 3, 2, 1, 1);
         let compact = p.output_elems();
         let mut seen = vec![false; compact];
         for a in 0..virtual_len(&p) {
-            if let Some(o) = map_addr(a, &p) {
+            if let Some(o) = map_addr(a, &p, 0) {
                 assert!(o < compact, "address {o} out of compact range {compact}");
                 seen[o] = true;
             }
@@ -279,5 +350,19 @@ mod tests {
         // Every compact element is referenced at least once (each dY pixel
         // contributes to at least one dX pixel).
         assert!(seen.iter().all(|s| *s), "some compact addresses never referenced");
+    }
+
+    #[test]
+    fn grouped_mapping_covers_only_group_channels() {
+        let p = ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(2);
+        let chan = p.ho() * p.wo();
+        for g in 0..2 {
+            for a in 0..virtual_len(&p) {
+                if let Some(o) = map_addr(a, &p, g) {
+                    let n = (o / chan) % p.n;
+                    assert!(n / p.ng() == g, "group {g} mapped to channel {n}");
+                }
+            }
+        }
     }
 }

@@ -29,11 +29,16 @@
 //!   compression + crossbar, DRAM, and the baseline's reorganization
 //!   engine.
 //! * [`workloads`] — the stride>=2 convolutional layers of the six CNNs
-//!   the paper evaluates.
+//!   the paper evaluates, plus dilated (DeepLab-style) and grouped
+//!   (ResNeXt-style) networks exercising the generalized geometry
+//!   (asymmetric strides, kernel dilation, channel groups — DESIGN.md
+//!   §2–§3).
 //! * [`coordinator`] — the training-job coordinator: queues per-layer
 //!   backprop jobs, tiles them onto the accelerator, gathers metrics.
-//! * [`runtime`] — PJRT (xla crate) wrapper that loads the AOT-lowered
-//!   JAX/Pallas HLO artifacts and runs them on the request path.
+//! * `runtime` — PJRT (xla crate) wrapper that loads the AOT-lowered
+//!   JAX/Pallas HLO artifacts and runs them on the request path
+//!   (behind the `pjrt` feature; the default build has no external
+//!   dependencies).
 //! * [`area`] — ASAP7-calibrated structural area model (Table IV).
 //! * [`report`] — regenerates every table and figure of the paper.
 
@@ -43,6 +48,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod im2col;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

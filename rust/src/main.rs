@@ -11,9 +11,11 @@ use std::process::ExitCode;
 use bp_im2col::accel::AccelConfig;
 use bp_im2col::accel::{metrics::speedup, simulate_pass};
 use bp_im2col::conv::ConvParams;
+#[cfg(feature = "pjrt")]
 use bp_im2col::coordinator::{TrainConfig, Trainer};
 use bp_im2col::im2col::pipeline::{Mode, Pass};
 use bp_im2col::report;
+#[cfg(feature = "pjrt")]
 use bp_im2col::runtime::Runtime;
 use bp_im2col::workloads;
 
@@ -31,9 +33,11 @@ COMMANDS:
   fig8                  On-chip buffer bandwidth + sparsity per network
   sparsity              Lowered-matrix sparsity of every workload layer
   storage               Additional-storage overhead per network
-  sim --layer H/C/N/K/S/P   Simulate one layer in both modes
+  sim --layer H/C/N/K/S/P[/G[/D]]   Simulate one layer in both modes
+                        (optional channel groups G and kernel dilation D)
   traincost             Full training-step cost (fwd+loss+grad) per network
   train [--steps N]     End-to-end training via the AOT HLO artifacts
+                        (requires the `pjrt` build feature)
   all                   Every table and figure, in order
 
 OPTIONS:
@@ -41,6 +45,7 @@ OPTIONS:
   --bandwidth <elems/cycle>   Off-chip bandwidth override (default 16)
   --csv                       Emit CSV instead of rendered tables (figs)
   --pass loss|grad            Restrict fig6/7/8 to one pass
+  --extended                  Include the dilated/grouped workload networks
   --steps N                   Training steps (train; default 300)
   --seed N                    Training seed (train; default 0)
 ";
@@ -64,15 +69,52 @@ impl Opts {
     }
 }
 
-fn parse_layer(spec: &str) -> Result<ConvParams, String> {
-    let parts: Vec<usize> = spec
-        .split('/')
-        .map(|s| s.parse().map_err(|_| format!("bad layer component {s:?}")))
-        .collect::<Result<_, _>>()?;
-    if parts.len() != 6 {
-        return Err(format!("layer spec must be H/C/N/K/S/P, got {spec:?}"));
+/// Parse one `A` or `AxB` pair (strides, dilation).
+fn parse_pair(s: &str) -> Result<(usize, usize), String> {
+    let bad = || format!("bad layer component {s:?}");
+    match s.split_once('x') {
+        None => {
+            let v: usize = s.parse().map_err(|_| bad())?;
+            Ok((v, v))
+        }
+        Some((a, b)) => {
+            Ok((a.parse().map_err(|_| bad())?, b.parse().map_err(|_| bad())?))
+        }
     }
-    let p = ConvParams::square(parts[0], parts[1], parts[2], parts[3], parts[4], parts[5]);
+}
+
+/// Parse a layer spec. Accepts both the input form
+/// `H/C/N/K/S/P[/G[/D]]` (bare numerics, groups then dilation) and the
+/// exact strings [`ConvParams::id`] prints (`S` may be `ShxSw`;
+/// suffixes `dD`/`dDhxDw` and `gG` in any order) — so every layer id in
+/// the tool's own output round-trips through `sim --layer`.
+fn parse_layer(spec: &str) -> Result<ConvParams, String> {
+    let parts: Vec<&str> = spec.split('/').collect();
+    if !(6..=8).contains(&parts.len()) {
+        return Err(format!("layer spec must be H/C/N/K/S/P[/G[/D]], got {spec:?}"));
+    }
+    let num = |s: &str| -> Result<usize, String> {
+        s.parse().map_err(|_| format!("bad layer component {s:?}"))
+    };
+    let (hi, c, n) = (num(parts[0])?, num(parts[1])?, num(parts[2])?);
+    let (k, ph) = (num(parts[3])?, num(parts[5])?);
+    let (sh, sw) = parse_pair(parts[4])?;
+    let mut p = ConvParams::square(hi, c, n, k, 1, ph).with_stride(sh, sw);
+    let mut positional = 0usize;
+    for extra in &parts[6..] {
+        if let Some(rest) = extra.strip_prefix('d') {
+            let (dh, dw) = parse_pair(rest)?;
+            p = p.with_dilation(dh, dw);
+        } else if let Some(rest) = extra.strip_prefix('g') {
+            p = p.with_groups(num(rest)?);
+        } else if positional == 0 {
+            p = p.with_groups(num(extra)?);
+            positional += 1;
+        } else {
+            let d = num(extra)?;
+            p = p.with_dilation(d, d);
+        }
+    }
     p.validate()?;
     Ok(p)
 }
@@ -100,22 +142,33 @@ fn passes(opts: &Opts) -> Result<Vec<Pass>, String> {
     }
 }
 
+/// Workload set selected by `--extended` (the paper's six networks plus
+/// the dilated/grouped ones).
+fn networks(opts: &Opts) -> Vec<workloads::Network> {
+    if opts.flag("--extended") {
+        workloads::extended_networks()
+    } else {
+        workloads::all_networks()
+    }
+}
+
 fn cmd_fig(which: u8, cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
+    let nets = networks(opts);
     for pass in passes(opts)? {
         let panel = if pass == Pass::Loss { "a" } else { "b" };
         let (bars, title, with_sparsity) = match which {
             6 => (
-                report::fig6(cfg, pass),
+                report::fig6_for(&nets, cfg, pass),
                 format!("Fig 6{panel}: {}-calculation runtime reduction", pass.name()),
                 false,
             ),
             7 => (
-                report::fig7(cfg, pass),
+                report::fig7_for(&nets, cfg, pass),
                 format!("Fig 7{panel}: off-chip traffic reduction ({} calc)", pass.name()),
                 false,
             ),
             8 => (
-                report::fig8(cfg, pass),
+                report::fig8_for(&nets, cfg, pass),
                 format!("Fig 8{panel}: on-chip buffer bandwidth reduction ({} calc)", pass.name()),
                 true,
             ),
@@ -150,6 +203,14 @@ fn cmd_sim(cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_opts: &Opts) -> Result<(), String> {
+    Err("the `train` command needs the PJRT runtime — uncomment the xla/anyhow \
+         [dependencies] in rust/Cargo.toml, then rebuild with `--features pjrt`"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(opts: &Opts) -> Result<(), String> {
     let steps =
         opts.value("--steps").map(|v| v.parse().map_err(|_| "bad --steps")).transpose()?.unwrap_or(300);
@@ -192,10 +253,9 @@ fn run() -> Result<(), String> {
         "fig7" => cmd_fig(7, &cfg, &opts)?,
         "fig8" => cmd_fig(8, &cfg, &opts)?,
         "sparsity" => {
-            let layers: Vec<ConvParams> = workloads::all_networks()
-                .iter()
-                .flat_map(|n| n.layers.iter().map(|l| l.params))
-                .collect();
+            let nets = networks(&opts);
+            let layers: Vec<ConvParams> =
+                nets.iter().flat_map(|n| n.layers.iter().map(|l| l.params)).collect();
             print!("{}", report::render_sparsity(&layers));
             let ((lmin, lmax), (gmin, gmax)) = report::sparsity_ranges();
             println!(
@@ -210,7 +270,7 @@ fn run() -> Result<(), String> {
             );
         }
         "storage" => {
-            let bars = report::storage(&cfg);
+            let bars = report::storage_for(&networks(&opts), &cfg);
             if opts.flag("--csv") {
                 print!("{}", report::bars_to_csv(&bars));
             } else {

@@ -69,10 +69,14 @@ pub struct NetworkBar {
     pub sparsity_pct: f64,
 }
 
-fn network_bars(cfg: &AccelConfig, pass: Pass, metric: impl Fn(&crate::coordinator::NetworkReport) -> f64) -> Vec<NetworkBar> {
+fn network_bars(
+    nets: &[workloads::Network],
+    cfg: &AccelConfig,
+    pass: Pass,
+    metric: impl Fn(&crate::coordinator::NetworkReport) -> f64,
+) -> Vec<NetworkBar> {
     let sched = Scheduler::new(*cfg);
-    workloads::all_networks()
-        .iter()
+    nets.iter()
         .map(|net| {
             let trad = sched.run_network(net, Mode::Traditional);
             let bp = sched.run_network(net, Mode::BpIm2col);
@@ -88,20 +92,37 @@ fn network_bars(cfg: &AccelConfig, pass: Pass, metric: impl Fn(&crate::coordinat
         .collect()
 }
 
-/// Fig. 6: backpropagation runtime per network (cycles), Original vs Ours.
+/// Fig. 6 over an arbitrary network list: backpropagation runtime
+/// (cycles), Original vs Ours.
+pub fn fig6_for(nets: &[workloads::Network], cfg: &AccelConfig, pass: Pass) -> Vec<NetworkBar> {
+    network_bars(nets, cfg, pass, |r| r.pass_cycles(pass))
+}
+
+/// Fig. 6: backpropagation runtime per network (cycles), Original vs
+/// Ours, over the paper's six networks.
 pub fn fig6(cfg: &AccelConfig, pass: Pass) -> Vec<NetworkBar> {
-    network_bars(cfg, pass, |r| r.pass_cycles(pass))
+    fig6_for(&workloads::all_networks(), cfg, pass)
+}
+
+/// Fig. 7 over an arbitrary network list: off-chip traffic (bytes).
+pub fn fig7_for(nets: &[workloads::Network], cfg: &AccelConfig, pass: Pass) -> Vec<NetworkBar> {
+    network_bars(nets, cfg, pass, |r| r.pass_traffic(pass) as f64)
 }
 
 /// Fig. 7: off-chip traffic per network (bytes) during the pass.
 pub fn fig7(cfg: &AccelConfig, pass: Pass) -> Vec<NetworkBar> {
-    network_bars(cfg, pass, |r| r.pass_traffic(pass) as f64)
+    fig7_for(&workloads::all_networks(), cfg, pass)
+}
+
+/// Fig. 8 over an arbitrary network list: on-chip buffer reads.
+pub fn fig8_for(nets: &[workloads::Network], cfg: &AccelConfig, pass: Pass) -> Vec<NetworkBar> {
+    network_bars(nets, cfg, pass, |r| r.pass_buffer_reads(pass) as f64)
 }
 
 /// Fig. 8: on-chip buffer reads toward the array (elements) during the
 /// pass (buffer B for loss calc, buffer A for grad calc), plus sparsity.
 pub fn fig8(cfg: &AccelConfig, pass: Pass) -> Vec<NetworkBar> {
-    network_bars(cfg, pass, |r| r.pass_buffer_reads(pass) as f64)
+    fig8_for(&workloads::all_networks(), cfg, pass)
 }
 
 /// Table III rows: (mode, pass, module, prologue cycles).
@@ -133,11 +154,10 @@ pub fn sparsity_ranges() -> ((f64, f64), (f64, f64)) {
     (loss, grad)
 }
 
-/// Storage-overhead comparison per network (abstract's >= 74.78 % claim).
-pub fn storage(cfg: &AccelConfig) -> Vec<NetworkBar> {
+/// Storage-overhead comparison over an arbitrary network list.
+pub fn storage_for(nets: &[workloads::Network], cfg: &AccelConfig) -> Vec<NetworkBar> {
     let sched = Scheduler::new(*cfg);
-    workloads::all_networks()
-        .iter()
+    nets.iter()
         .map(|net| {
             let trad = sched.run_network(net, Mode::Traditional);
             let bp = sched.run_network(net, Mode::BpIm2col);
@@ -150,6 +170,12 @@ pub fn storage(cfg: &AccelConfig) -> Vec<NetworkBar> {
             }
         })
         .collect()
+}
+
+/// Storage-overhead comparison per network (abstract's >= 74.78 % claim)
+/// over the paper's six networks.
+pub fn storage(cfg: &AccelConfig) -> Vec<NetworkBar> {
+    storage_for(&workloads::all_networks(), cfg)
 }
 
 // ---------------------------------------------------------------------------
@@ -301,6 +327,23 @@ mod tests {
         for pass in Pass::ALL {
             for b in fig6(&AccelConfig::default(), pass) {
                 assert!(b.reduction_pct > 0.0, "{pass:?} {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn extended_networks_bp_strictly_cheaper() {
+        // Acceptance: the dilated (DeepLab) and grouped (ResNeXt)
+        // networks run end-to-end through the scheduler in both modes
+        // with BP-im2col strictly cheaper in cycles AND traffic.
+        let nets = crate::workloads::extended_networks();
+        let cfg = AccelConfig::default();
+        for pass in Pass::ALL {
+            for b in fig6_for(&nets, &cfg, pass) {
+                assert!(b.bp < b.traditional, "{pass:?} cycles {b:?}");
+            }
+            for b in fig7_for(&nets, &cfg, pass) {
+                assert!(b.bp < b.traditional, "{pass:?} traffic {b:?}");
             }
         }
     }

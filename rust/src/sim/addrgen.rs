@@ -16,6 +16,7 @@
 //! divide-by-stride stage (4 x 17 = 68). Dynamic modules with purely
 //! continuous addresses (incrementers) have no divider: 0.
 
+use crate::conv::ConvParams;
 use crate::im2col::pipeline::{Mode, Pass};
 
 /// Latency of one fixed-point divider stage, in cycles.
@@ -101,6 +102,32 @@ impl AddrGenPipeline {
         Self { module, stages }
     }
 
+    /// The pipeline for a (mode, pass, module) combination on a
+    /// *specific layer geometry*. The paper's dense symmetric layers get
+    /// exactly [`Self::build`]'s pipelines (Table III); generalized
+    /// layers append single-cycle logic stages:
+    ///
+    /// * kernel dilation (`Dh`/`Dw > 1`): the stationary modules compose
+    ///   tap offsets as `k*D` — one multiply-add stage;
+    /// * channel groups (`G > 1`): modules that emit absolute channel
+    ///   indices add the group base (`g*N/G` or `g*C/G`) — one adder
+    ///   stage. The loss-mode dynamic module streams the group's kernel
+    ///   panel with a continuous incrementer and stays at zero.
+    pub fn build_for(mode: Mode, pass: Pass, module: Module, p: &ConvParams) -> Self {
+        let mut pl = Self::build(mode, pass, module);
+        if (p.dh > 1 || p.dw > 1) && module == Module::Stationary {
+            pl.stages.push(Stage::logic("tap offset = k*D"));
+        }
+        if p.groups > 1 {
+            let emits_channel_base = module == Module::Stationary
+                || (mode, pass) == (Mode::BpIm2col, Pass::Grad);
+            if emits_channel_base {
+                pl.stages.push(Stage::logic("chan base = g*(N/G)"));
+            }
+        }
+        pl
+    }
+
     /// Prologue latency: pipeline fill from first address in to first
     /// mapped address out (Table III).
     pub fn prologue(&self) -> usize {
@@ -119,9 +146,16 @@ impl AddrGenPipeline {
     }
 }
 
-/// Table III as a function: prologue latency for a (mode, pass, module).
+/// Table III as a function: prologue latency for a (mode, pass, module)
+/// on the paper's dense symmetric geometry.
 pub fn prologue_cycles(mode: Mode, pass: Pass, module: Module) -> usize {
     AddrGenPipeline::build(mode, pass, module).prologue()
+}
+
+/// Prologue latency for a (mode, pass, module) on a specific layer
+/// geometry (equals [`prologue_cycles`] for dense symmetric layers).
+pub fn prologue_cycles_for(mode: Mode, pass: Pass, module: Module, p: &ConvParams) -> usize {
+    AddrGenPipeline::build_for(mode, pass, module, p).prologue()
 }
 
 /// Token-level simulation of an address pipeline: feed one address per
@@ -247,5 +281,47 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dense_geometry_prologue_matches_table3() {
+        // build_for on the paper's geometry must not add any stage.
+        let p = crate::conv::ConvParams::square(112, 64, 64, 3, 2, 1);
+        for mode in Mode::ALL {
+            for pass in Pass::ALL {
+                for module in [Module::Dynamic, Module::Stationary] {
+                    assert_eq!(
+                        prologue_cycles_for(mode, pass, module, &p),
+                        prologue_cycles(mode, pass, module),
+                        "{mode:?} {pass:?} {module:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generalized_geometry_adds_logic_stages_only() {
+        use crate::conv::ConvParams;
+        let dilated = ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2);
+        let grouped = ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32);
+        for (mode, pass) in
+            [(Mode::Traditional, Pass::Loss), (Mode::BpIm2col, Pass::Loss), (Mode::BpIm2col, Pass::Grad)]
+        {
+            // Dilation: +1 cycle on the stationary module, dividers unchanged.
+            let base = prologue_cycles(mode, pass, Module::Stationary);
+            assert_eq!(prologue_cycles_for(mode, pass, Module::Stationary, &dilated), base + 1);
+            assert_eq!(
+                AddrGenPipeline::build_for(mode, pass, Module::Stationary, &dilated).divider_count(),
+                AddrGenPipeline::build(mode, pass, Module::Stationary).divider_count()
+            );
+            // Groups: +1 cycle on channel-index-emitting modules.
+            assert_eq!(prologue_cycles_for(mode, pass, Module::Stationary, &grouped), base + 1);
+        }
+        // BP grad dynamic emits absolute channels: 68 -> 69 under groups.
+        assert_eq!(prologue_cycles_for(Mode::BpIm2col, Pass::Grad, Module::Dynamic, &grouped), 69);
+        // Loss dynamic stays a pure incrementer in every geometry.
+        assert_eq!(prologue_cycles_for(Mode::BpIm2col, Pass::Loss, Module::Dynamic, &grouped), 0);
+        assert_eq!(prologue_cycles_for(Mode::Traditional, Pass::Grad, Module::Dynamic, &dilated), 0);
     }
 }

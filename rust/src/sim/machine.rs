@@ -19,7 +19,7 @@ use crate::accel::config::AccelConfig;
 use crate::accel::tiling::{GemmShape, Tiling};
 use crate::conv::ConvParams;
 use crate::im2col::pipeline::{Mode, Pass};
-use crate::sim::addrgen::{prologue_cycles, Module};
+use crate::sim::addrgen::{prologue_cycles_for, Module};
 
 /// Outcome of the event-driven run.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -36,10 +36,12 @@ pub struct MachineResult {
 /// Run one pass at stripe granularity.
 pub fn run_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> MachineResult {
     let til = Tiling::new(GemmShape::from_pass(pass, p), cfg.array_dim);
-    let n = til.n_j;
+    // One stripe sequence per channel group (per-group GEMMs run back to
+    // back on the same array, exactly like `accel::timing`).
+    let n = til.n_j * p.groups;
     let stripe_compute = til.stripe_compute_cycles();
-    let prologue = (prologue_cycles(mode, pass, Module::Stationary)
-        + prologue_cycles(mode, pass, Module::Dynamic)) as f64;
+    let prologue = (prologue_cycles_for(mode, pass, Module::Stationary, p)
+        + prologue_cycles_for(mode, pass, Module::Dynamic, p)) as f64;
 
     // Per-stripe fill: the same working-set rule as the analytic engine
     // (total fetch split evenly over stripes).

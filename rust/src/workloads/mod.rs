@@ -1,11 +1,15 @@
 //! Workload tables: every `stride >= 2` convolutional layer of the six
-//! CNNs the paper evaluates (Figs. 6–8), plus the five layers of
-//! Table II.
+//! CNNs the paper evaluates (Figs. 6–8), the five layers of Table II,
+//! plus two generalized-geometry networks (a DeepLab-style dilated
+//! backbone and a ResNeXt-style grouped network) that exercise the
+//! geometry the paper's square/dense formulas could not express.
 //!
 //! Batch size 2 and FP32, as in the paper's setup. Depthwise layers
-//! (MobileNet, ShuffleNet) are grouped convolutions the GEMM lowering
-//! does per-channel; we model them as `count` independent single-channel
-//! convolutions — identical lowered work, documented substitution.
+//! (MobileNet, ShuffleNet) are **true grouped convolutions** now
+//! (`groups == C == N`); the old `count`-multiplicity substitution —
+//! `count` identical single-channel convolutions — is gone. The lowered
+//! per-group GEMMs are identical, so Figs. 6–8 aggregates are unchanged,
+//! but the layer now validates, schedules and reports as what it is.
 
 use crate::conv::ConvParams;
 
@@ -16,12 +20,13 @@ pub struct WorkloadLayer {
     pub name: &'static str,
     /// Convolution parameters (batch already set to the paper's 2).
     pub params: ConvParams,
-    /// Multiplicity: number of identical instances per backward pass
-    /// (1 for normal convs; the channel count for depthwise convs).
+    /// Multiplicity: number of identical instances per backward pass.
+    /// 1 for every layer since depthwise convs became real grouped
+    /// convolutions; kept for repeated identical blocks.
     pub count: usize,
 }
 
-/// A CNN's stride>=2 convolutional layers.
+/// A CNN's stride>=2 (or dilated / grouped) convolutional layers.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub name: &'static str,
@@ -49,16 +54,17 @@ pub fn densenet() -> Network {
     }
 }
 
-/// MobileNetV1: strided 3x3 stem plus the four strided depthwise stages.
+/// MobileNetV1: strided 3x3 stem plus the four strided depthwise stages
+/// as true grouped convolutions (`groups == channels`).
 pub fn mobilenet() -> Network {
     Network {
         name: "MobileNet",
         layers: vec![
             layer("conv1", ConvParams::square(224, 3, 32, 3, 2, 1), 1),
-            layer("dw2", ConvParams::square(112, 1, 1, 3, 2, 1), 64),
-            layer("dw4", ConvParams::square(56, 1, 1, 3, 2, 1), 128),
-            layer("dw6", ConvParams::square(28, 1, 1, 3, 2, 1), 256),
-            layer("dw12", ConvParams::square(14, 1, 1, 3, 2, 1), 512),
+            layer("dw2", ConvParams::square(112, 64, 64, 3, 2, 1).with_groups(64), 1),
+            layer("dw4", ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(128), 1),
+            layer("dw6", ConvParams::square(28, 256, 256, 3, 2, 1).with_groups(256), 1),
+            layer("dw12", ConvParams::square(14, 512, 512, 3, 2, 1).with_groups(512), 1),
         ],
     }
 }
@@ -81,15 +87,16 @@ pub fn resnet() -> Network {
 }
 
 /// ShuffleNetV1 (g=3): strided 3x3 stem plus the strided depthwise convs
-/// of each downsampling unit (representative channel counts).
+/// of each downsampling unit (representative channel counts), as true
+/// grouped convolutions.
 pub fn shufflenet() -> Network {
     Network {
         name: "ShuffleNet",
         layers: vec![
             layer("conv1", ConvParams::square(224, 3, 24, 3, 2, 1), 1),
-            layer("stage2.dw", ConvParams::square(56, 1, 1, 3, 2, 1), 60),
-            layer("stage3.dw", ConvParams::square(28, 1, 1, 3, 2, 1), 240),
-            layer("stage4.dw", ConvParams::square(14, 1, 1, 3, 2, 1), 480),
+            layer("stage2.dw", ConvParams::square(56, 60, 60, 3, 2, 1).with_groups(60), 1),
+            layer("stage3.dw", ConvParams::square(28, 240, 240, 3, 2, 1).with_groups(240), 1),
+            layer("stage4.dw", ConvParams::square(14, 480, 480, 3, 2, 1).with_groups(480), 1),
         ],
     }
 }
@@ -102,9 +109,52 @@ pub fn squeezenet() -> Network {
     }
 }
 
+/// DeepLab-style segmentation backbone: strided ResNet stem + strided
+/// stage, then the output-stride-8 trick — stage 4/5 keep spatial size
+/// with atrous (dilated) 3x3 convolutions at rates 2 and 4, plus an
+/// ASPP-style rate-6 head. The dilated layers are what the generalized
+/// Eqs. 2–4 exist for: their loss maps pad by `Dh(Kh-1)-Ph`, not
+/// `Kh-1-Ph`.
+pub fn deeplab() -> Network {
+    Network {
+        name: "DeepLab",
+        layers: vec![
+            layer("conv1", ConvParams::square(224, 3, 64, 7, 2, 3), 1),
+            layer("conv3.3x3", ConvParams::square(56, 128, 128, 3, 2, 1), 1),
+            layer("conv4.atrous2", ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2), 1),
+            layer("conv5.atrous4", ConvParams::square(28, 512, 512, 3, 1, 4).with_dilation(4, 4), 1),
+            layer("aspp.atrous6", ConvParams::square(28, 256, 256, 3, 1, 6).with_dilation(6, 6), 1),
+        ],
+    }
+}
+
+/// ResNeXt-50 (32x4d)-style network: the strided 3x3 of every stage is a
+/// 32-group convolution; stem and projections stay dense.
+pub fn resnext() -> Network {
+    Network {
+        name: "ResNeXt",
+        layers: vec![
+            layer("conv1", ConvParams::square(224, 3, 64, 7, 2, 3), 1),
+            layer("conv3_x.g32", ConvParams::square(56, 256, 256, 3, 2, 1).with_groups(32), 1),
+            layer("conv3_x.proj", ConvParams::square(56, 256, 512, 1, 2, 0), 1),
+            layer("conv4_x.g32", ConvParams::square(28, 512, 512, 3, 2, 1).with_groups(32), 1),
+            layer("conv5_x.g32", ConvParams::square(14, 1024, 1024, 3, 2, 1).with_groups(32), 1),
+        ],
+    }
+}
+
 /// The six networks of Figs. 6–8, in the paper's legend order.
 pub fn all_networks() -> Vec<Network> {
     vec![alexnet(), densenet(), mobilenet(), resnet(), shufflenet(), squeezenet()]
+}
+
+/// The paper's six networks plus the two generalized-geometry networks
+/// (dilated DeepLab-style, grouped ResNeXt-style).
+pub fn extended_networks() -> Vec<Network> {
+    let mut nets = all_networks();
+    nets.push(deeplab());
+    nets.push(resnext());
+    nets
 }
 
 /// The five layers of Table II, in row order
@@ -124,14 +174,61 @@ mod tests {
     use super::*;
 
     #[test]
-    fn all_layers_valid_and_strided() {
-        for net in all_networks() {
+    fn all_layers_valid_and_nontrivial() {
+        for net in extended_networks() {
             assert!(!net.layers.is_empty());
             for l in &net.layers {
                 l.params.validate().unwrap_or_else(|e| panic!("{}/{}: {e}", net.name, l.name));
-                assert!(l.params.s >= 2, "{}/{} not strided", net.name, l.name);
-                assert_eq!(l.params.b, 2, "paper batch size");
+                // Every workload layer has zero-spaces to skip: strided,
+                // or dilated/grouped with a padded loss map.
+                let p = l.params;
+                assert!(
+                    p.sh >= 2 || p.sw >= 2 || p.dh >= 2 || p.dw >= 2 || p.groups >= 2,
+                    "{}/{} is a plain dense stride-1 conv",
+                    net.name,
+                    l.name
+                );
+                assert_eq!(p.b, 2, "paper batch size");
                 assert!(l.count >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_layers_are_true_grouped_convs() {
+        // The old count-multiplicity hack is gone: every layer has
+        // count == 1 and depthwise stages carry groups == C == N.
+        for net in [mobilenet(), shufflenet()] {
+            for l in &net.layers {
+                assert_eq!(l.count, 1, "{}/{}", net.name, l.name);
+                if l.name.contains("dw") {
+                    assert_eq!(l.params.groups, l.params.c, "{}/{}", net.name, l.name);
+                    assert_eq!(l.params.c, l.params.n, "{}/{}", net.name, l.name);
+                    assert_eq!((l.params.cg(), l.params.ng()), (1, 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deeplab_dilated_layers_keep_spatial_size() {
+        // Atrous layers use "same" padding: Ho == Hi at stride 1.
+        let net = deeplab();
+        for l in &net.layers {
+            if l.params.dh > 1 {
+                assert_eq!(l.params.ho(), l.params.hi, "{}", l.name);
+                assert_eq!(l.params.ph, l.params.dh, "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn resnext_grouped_layers_divide_channels() {
+        for l in &resnext().layers {
+            if l.params.groups > 1 {
+                assert_eq!(l.params.groups, 32);
+                assert_eq!(l.params.c % 32, 0);
+                assert_eq!(l.params.n % 32, 0);
             }
         }
     }
@@ -165,5 +262,13 @@ mod tests {
     fn six_networks_in_legend_order() {
         let names: Vec<_> = all_networks().iter().map(|n| n.name).collect();
         assert_eq!(names, ["AlexNet", "DenseNet", "MobileNet", "ResNet", "ShuffleNet", "SqueezeNet"]);
+    }
+
+    #[test]
+    fn extended_adds_the_two_new_networks() {
+        let names: Vec<_> = extended_networks().iter().map(|n| n.name).collect();
+        assert_eq!(names.len(), 8);
+        assert!(names.contains(&"DeepLab"));
+        assert!(names.contains(&"ResNeXt"));
     }
 }

@@ -64,6 +64,45 @@ fn sim_single_layer() {
 }
 
 #[test]
+fn sim_grouped_and_dilated_layer_specs() {
+    // H/C/N/K/S/P/G: ResNeXt-style 32-group conv.
+    let (stdout, _, ok) = repro(&["sim", "--layer", "56/128/128/3/2/1/32"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("g32"));
+    // H/C/N/K/S/P/G/D: dilated depthwise.
+    let (stdout, _, ok) = repro(&["sim", "--layer", "28/64/64/3/1/2/64/2"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("d2") && stdout.contains("g64"));
+    // Groups that do not divide the channels are rejected.
+    let (_, stderr, ok) = repro(&["sim", "--layer", "56/100/100/3/2/1/32"]);
+    assert!(!ok);
+    assert!(stderr.contains("groups"), "{stderr}");
+}
+
+#[test]
+fn layer_ids_round_trip_through_sim() {
+    // The exact strings ConvParams::id() prints (dN/gN suffixes,
+    // ShxSw strides) are accepted back by --layer.
+    for id in ["28/256/256/3/1/2/d2", "56/128/128/3/2/1/g32", "9/1/1/3/2x3/1", "28/64/64/3/1/2/d2/g64"] {
+        let (stdout, stderr, ok) = repro(&["sim", "--layer", id]);
+        assert!(ok, "{id}: {stderr}");
+        assert!(stdout.contains(id), "{id} not echoed:\n{stdout}");
+    }
+}
+
+#[test]
+fn extended_networks_in_figs() {
+    let (stdout, _, ok) = repro(&["fig6", "--csv", "--pass", "loss", "--extended"]);
+    assert!(ok);
+    let mut lines = stdout.lines();
+    lines.next(); // header
+    let body: Vec<&str> = lines.collect();
+    assert_eq!(body.len(), 8, "eight networks:\n{stdout}");
+    assert!(body.iter().any(|l| l.starts_with("DeepLab,")));
+    assert!(body.iter().any(|l| l.starts_with("ResNeXt,")));
+}
+
+#[test]
 fn traincost_reports_all_networks() {
     let (stdout, _, ok) = repro(&["traincost"]);
     assert!(ok, "{stdout}");

@@ -1,53 +1,59 @@
 //! Failure injection on the runtime and component layers: wrong shapes,
 //! malformed artifacts, missing files — errors must surface as errors,
-//! not wrong numbers.
+//! not wrong numbers. The PJRT-runtime cases compile only with the
+//! `pjrt` feature; the geometry/oracle cases always run.
 
 use bp_im2col::conv::ConvParams;
-use bp_im2col::runtime::{literal_f32, literal_to_tensor4, Runtime};
 use bp_im2col::tensor::{Rng, Tensor4};
 
-#[test]
-fn missing_artifact_is_an_error_not_a_panic() {
-    let rt = Runtime::with_artifacts_dir("/nonexistent-dir").expect("client constructs");
-    assert!(!rt.has_artifact("train_step"));
-    let err = rt.load("train_step");
-    assert!(err.is_err());
-    let msg = format!("{:#}", err.err().unwrap());
-    assert!(msg.contains("train_step"), "{msg}");
-}
+#[cfg(feature = "pjrt")]
+mod runtime_failures {
+    use bp_im2col::runtime::{literal_f32, literal_to_tensor4, Runtime};
+    use bp_im2col::tensor::{Rng, Tensor4};
 
-#[test]
-fn malformed_hlo_text_is_rejected() {
-    let dir = std::env::temp_dir().join("bp_im2col_bad_artifacts");
-    std::fs::create_dir_all(&dir).unwrap();
-    std::fs::write(dir.join("garbage.hlo.txt"), "this is not HLO").unwrap();
-    let rt = Runtime::with_artifacts_dir(&dir).unwrap();
-    assert!(rt.load("garbage").is_err());
-}
-
-#[test]
-fn wrong_input_arity_is_an_error() {
-    let rt = Runtime::cpu().unwrap();
-    if !rt.has_artifact("bp_dx") {
-        eprintln!("skipping: artifacts not built");
-        return;
+    #[test]
+    fn missing_artifact_is_an_error_not_a_panic() {
+        let rt = Runtime::with_artifacts_dir("/nonexistent-dir").expect("client constructs");
+        assert!(!rt.has_artifact("train_step"));
+        let err = rt.load("train_step");
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("train_step"), "{msg}");
     }
-    let model = rt.load("bp_dx").unwrap();
-    // bp_dx expects (dy, w); give it one input.
-    let one = literal_f32(&[0.0; 4], &[2, 2]).unwrap();
-    assert!(model.run(&[one]).is_err());
-}
 
-#[test]
-fn literal_roundtrip_shape_mismatch_detected() {
-    let mut rng = Rng::new(1);
-    let t = Tensor4::random([1, 2, 3, 4], &mut rng);
-    let lit = bp_im2col::runtime::literal_from_tensor4(&t).unwrap();
-    // Wrong target dims must error (element count mismatch).
-    assert!(literal_to_tensor4(&lit, [1, 2, 3, 5]).is_err());
-    // Right dims round-trip exactly.
-    let back = literal_to_tensor4(&lit, t.dims).unwrap();
-    assert_eq!(back, t);
+    #[test]
+    fn malformed_hlo_text_is_rejected() {
+        let dir = std::env::temp_dir().join("bp_im2col_bad_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("garbage.hlo.txt"), "this is not HLO").unwrap();
+        let rt = Runtime::with_artifacts_dir(&dir).unwrap();
+        assert!(rt.load("garbage").is_err());
+    }
+
+    #[test]
+    fn wrong_input_arity_is_an_error() {
+        let rt = Runtime::cpu().unwrap();
+        if !rt.has_artifact("bp_dx") {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let model = rt.load("bp_dx").unwrap();
+        // bp_dx expects (dy, w); give it one input.
+        let one = literal_f32(&[0.0; 4], &[2, 2]).unwrap();
+        assert!(model.run(&[one]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_shape_mismatch_detected() {
+        let mut rng = Rng::new(1);
+        let t = Tensor4::random([1, 2, 3, 4], &mut rng);
+        let lit = bp_im2col::runtime::literal_from_tensor4(&t).unwrap();
+        // Wrong target dims must error (element count mismatch).
+        assert!(literal_to_tensor4(&lit, [1, 2, 3, 5]).is_err());
+        // Right dims round-trip exactly.
+        let back = literal_to_tensor4(&lit, t.dims).unwrap();
+        assert_eq!(back, t);
+    }
 }
 
 #[test]
@@ -61,17 +67,30 @@ fn oracle_rejects_wrong_input_shape() {
 }
 
 #[test]
+#[should_panic(expected = "kernel shape mismatch")]
+fn oracle_rejects_ungrouped_kernel_for_grouped_layer() {
+    // A grouped layer's kernel is [N, C/G, Kh, Kw]; passing the dense
+    // [N, C, Kh, Kw] shape must fail loudly.
+    let p = ConvParams::square(8, 4, 4, 3, 2, 1).with_groups(2);
+    let mut rng = Rng::new(3);
+    let x = Tensor4::random([2, 4, 8, 8], &mut rng);
+    let w_bad = Tensor4::random([4, 4, 3, 3], &mut rng);
+    bp_im2col::conv::conv2d_fwd(&x, &w_bad, &p);
+}
+
+#[test]
 fn validate_catches_degenerate_geometries() {
     // kernel larger than padded input
-    assert!(ConvParams { b: 1, c: 1, hi: 2, wi: 2, n: 1, kh: 5, kw: 5, s: 1, ph: 0, pw: 0 }
-        .validate()
-        .is_err());
+    assert!(ConvParams::basic(1, 1, 2, 2, 1, 5, 5, 1, 0, 0).validate().is_err());
     // zero stride
-    assert!(ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 1, kh: 3, kw: 3, s: 0, ph: 0, pw: 0 }
-        .validate()
-        .is_err());
-    // padding >= kernel (breaks Eq. 2's area-0 assumption)
-    assert!(ConvParams { b: 1, c: 1, hi: 8, wi: 8, n: 1, kh: 2, kw: 2, s: 2, ph: 2, pw: 0 }
-        .validate()
-        .is_err());
+    assert!(ConvParams::basic(1, 1, 8, 8, 1, 3, 3, 0, 0, 0).validate().is_err());
+    // padding > kernel extent (breaks Eq. 2's area-0 assumption)
+    assert!(ConvParams::basic(1, 1, 8, 8, 1, 2, 2, 2, 2, 0).validate().is_err());
+    // zero dilation
+    assert!(ConvParams::basic(1, 1, 8, 8, 1, 3, 3, 2, 1, 1).with_dilation(0, 1).validate().is_err());
+    // groups must divide both C and N
+    assert!(ConvParams::basic(1, 3, 8, 8, 4, 3, 3, 2, 1, 1).with_groups(2).validate().is_err());
+    assert!(ConvParams::basic(1, 4, 8, 8, 3, 3, 3, 2, 1, 1).with_groups(2).validate().is_err());
+    // dilated kernel larger than padded input
+    assert!(ConvParams::basic(1, 1, 6, 6, 1, 3, 3, 1, 1, 1).with_dilation(4, 4).validate().is_err());
 }

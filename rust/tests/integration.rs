@@ -14,21 +14,26 @@ use bp_im2col::workloads;
 fn tensors(p: &ConvParams, seed: u64) -> (Tensor4, Tensor4, Tensor4) {
     let mut rng = Rng::new(seed);
     let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
-    let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+    let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
     let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
     (x, w, dy)
 }
 
 /// Layers exercising every corner: stride 2/3/4, 1x1 and rectangular
-/// kernels, padding 0..2, inexact floor division.
+/// kernels, padding 0..2, inexact floor division — plus the generalized
+/// geometry (asymmetric stride, kernel dilation, grouped and depthwise).
 fn corner_layers() -> Vec<ConvParams> {
     vec![
-        ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 },
-        ConvParams { b: 1, c: 3, hi: 8, wi: 8, n: 4, kh: 1, kw: 1, s: 2, ph: 0, pw: 0 },
-        ConvParams { b: 1, c: 2, hi: 10, wi: 10, n: 2, kh: 3, kw: 3, s: 2, ph: 0, pw: 0 },
-        ConvParams { b: 1, c: 1, hi: 12, wi: 12, n: 2, kh: 4, kw: 4, s: 4, ph: 0, pw: 0 },
-        ConvParams { b: 1, c: 2, hi: 11, wi: 8, n: 2, kh: 3, kw: 2, s: 3, ph: 1, pw: 0 },
-        ConvParams { b: 2, c: 1, hi: 7, wi: 13, n: 1, kh: 3, kw: 3, s: 2, ph: 2, pw: 2 },
+        ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1),
+        ConvParams::basic(1, 3, 8, 8, 4, 1, 1, 2, 0, 0),
+        ConvParams::basic(1, 2, 10, 10, 2, 3, 3, 2, 0, 0),
+        ConvParams::basic(1, 1, 12, 12, 2, 4, 4, 4, 0, 0),
+        ConvParams::basic(1, 2, 11, 8, 2, 3, 2, 3, 1, 0),
+        ConvParams::basic(2, 1, 7, 13, 1, 3, 3, 2, 2, 2),
+        ConvParams::basic(1, 2, 9, 12, 2, 3, 3, 1, 1, 1).with_stride(2, 3),
+        ConvParams::basic(1, 1, 11, 11, 2, 3, 3, 1, 2, 2).with_dilation(2, 2),
+        ConvParams::basic(1, 4, 9, 9, 6, 3, 3, 2, 1, 1).with_groups(2),
+        ConvParams::basic(1, 4, 9, 9, 4, 3, 3, 2, 1, 1).with_groups(4),
     ]
 }
 
@@ -53,7 +58,7 @@ fn fwd_bwd_roundtrip_through_all_paths() {
     // accelerator; gradient-descent step must reduce a quadratic loss
     // 0.5*||conv(x, w) - t||^2 — an end-to-end "does the gradient point
     // downhill" check on the whole machinery.
-    let p = ConvParams { b: 1, c: 2, hi: 9, wi: 9, n: 2, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+    let p = ConvParams::basic(1, 2, 9, 9, 2, 3, 3, 2, 1, 1);
     let (x, mut w, _) = tensors(&p, 300);
     let t = {
         let (_, wt, _) = tensors(&p, 301);
@@ -132,18 +137,18 @@ fn functional_pipeline_equals_accelerator_on_random_layer() {
         let s = rng.range(2, 4);
         let k = rng.range(1, 4);
         let ph = rng.below(k);
-        let p = ConvParams {
-            b: rng.range(1, 3),
-            c: rng.range(1, 3),
-            hi: rng.range(k.max(4), 11),
-            wi: rng.range(k.max(4), 11),
-            n: rng.range(1, 3),
-            kh: k,
-            kw: k,
+        let p = ConvParams::basic(
+            rng.range(1, 3),
+            rng.range(1, 3),
+            rng.range(k.max(4), 11),
+            rng.range(k.max(4), 11),
+            rng.range(1, 3),
+            k,
+            k,
             s,
             ph,
-            pw: ph,
-        };
+            ph,
+        );
         p.validate().unwrap();
         let (x, w, dy) = tensors(&p, 600 + trial);
         let dx_sw = pipeline::loss_calc(&dy, &w, &p, Mode::BpIm2col);

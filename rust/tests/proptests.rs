@@ -3,6 +3,9 @@
 //! The offline image has no `proptest`; this is a deterministic-seed
 //! randomized sweep with explicit shrink-friendly reporting (the failing
 //! geometry is printed verbatim) — same invariants, same coverage style.
+//! Geometries here are dense and ungrouped but allow asymmetric strides;
+//! the full generalized sweep (dilation, groups) lives in
+//! `tests/geometry_sweep.rs`.
 
 use bp_im2col::accel::{simulate_pass, AccelConfig};
 use bp_im2col::conv::{conv2d_bwd_input, conv2d_bwd_weight, ConvParams};
@@ -12,23 +15,25 @@ use bp_im2col::sim::compress::compress_window;
 use bp_im2col::sim::crossbar::{contract, expand};
 use bp_im2col::tensor::{Rng, Tensor4};
 
-/// Draw a random valid conv geometry (stride 1..=4, padding <= K-1).
+/// Draw a random valid conv geometry (strides 1..=4 per axis, padding
+/// <= K-1, dense, ungrouped).
 fn arb_params(rng: &mut Rng) -> ConvParams {
     loop {
         let kh = rng.range(1, 5);
         let kw = rng.range(1, 5);
-        let p = ConvParams {
-            b: rng.range(1, 3),
-            c: rng.range(1, 4),
-            hi: rng.range(4, 13),
-            wi: rng.range(4, 13),
-            n: rng.range(1, 4),
+        let p = ConvParams::basic(
+            rng.range(1, 3),
+            rng.range(1, 4),
+            rng.range(4, 13),
+            rng.range(4, 13),
+            rng.range(1, 4),
             kh,
             kw,
-            s: rng.range(1, 5),
-            ph: rng.below(kh),
-            pw: rng.below(kw),
-        };
+            1,
+            rng.below(kh),
+            rng.below(kw),
+        )
+        .with_stride(rng.range(1, 5), rng.range(1, 5));
         if p.validate().is_ok() && p.hi + 2 * p.ph >= p.kh && p.wi + 2 * p.pw >= p.kw {
             return p;
         }
@@ -43,8 +48,8 @@ fn prop_algorithm1_equals_explicit_lowering() {
     for trial in 0..TRIALS {
         let p = arb_params(&mut rng);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
-        let implicit = transposed::gather_matrix(&dy, &p);
-        let explicit = traditional::lower_loss_b(&reorg::dilate_pad_loss(&dy, &p), &p);
+        let implicit = transposed::gather_matrix(&dy, &p, 0);
+        let explicit = traditional::lower_loss_b(&reorg::dilate_pad_loss(&dy, &p), &p, 0);
         assert_eq!(implicit, explicit, "trial {trial}: {p:?}");
     }
 }
@@ -55,8 +60,8 @@ fn prop_algorithm2_equals_explicit_lowering() {
     for trial in 0..TRIALS {
         let p = arb_params(&mut rng);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
-        let implicit = dilated::gather_matrix(&dy, &p);
-        let explicit = traditional::lower_grad_a(&reorg::dilate_loss(&dy, &p), &p);
+        let implicit = dilated::gather_matrix(&dy, &p, 0);
+        let explicit = traditional::lower_grad_a(&reorg::dilate_loss(&dy, &p), &p, 0);
         assert_eq!(implicit, explicit, "trial {trial}: {p:?}");
     }
 }
@@ -67,7 +72,7 @@ fn prop_gemm_paths_match_naive_oracle() {
     for trial in 0..TRIALS / 2 {
         let p = arb_params(&mut rng);
         let x = Tensor4::random([p.b, p.c, p.hi, p.wi], &mut rng);
-        let w = Tensor4::random([p.n, p.c, p.kh, p.kw], &mut rng);
+        let w = Tensor4::random([p.n, p.cg(), p.kh, p.kw], &mut rng);
         let dy = Tensor4::random([p.b, p.n, p.ho(), p.wo()], &mut rng);
         let dx = bp_im2col::im2col::pipeline::loss_calc(&dy, &w, &p, Mode::BpIm2col);
         let dx_oracle = conv2d_bwd_input(&dy, &w, &p);
@@ -99,7 +104,8 @@ fn prop_grad_a_nonzeros_exactly_compact_size() {
         let p = arb_params(&mut rng);
         let s = sparsity::grad_matrix_a(&p);
         assert_eq!(s.nonzero, p.output_elems(), "trial {trial}: {p:?}");
-        let nz = (0..dilated::virtual_len(&p)).filter(|a| dilated::map_addr(*a, &p).is_some()).count();
+        let nz =
+            (0..dilated::virtual_len(&p)).filter(|a| dilated::map_addr(*a, &p, 0).is_some()).count();
         assert_eq!(nz, s.nonzero, "trial {trial}: {p:?}");
     }
 }
@@ -134,12 +140,12 @@ fn prop_mapped_addresses_always_in_compact_range() {
         let p = arb_params(&mut rng);
         let compact = p.output_elems();
         for addr in 0..transposed::virtual_len(&p).min(20_000) {
-            if let Some(o) = transposed::map_addr(addr, &p) {
+            if let Some(o) = transposed::map_addr(addr, &p, 0) {
                 assert!(o < compact, "trial {trial}: {p:?} addr {addr} -> {o}");
             }
         }
         for addr in 0..dilated::virtual_len(&p).min(20_000) {
-            if let Some(o) = dilated::map_addr(addr, &p) {
+            if let Some(o) = dilated::map_addr(addr, &p, 0) {
                 assert!(o < compact, "trial {trial}: {p:?} addr {addr} -> {o}");
             }
         }
@@ -175,7 +181,8 @@ fn prop_stride1_has_no_insertion_zeros() {
     let mut rng = Rng::new(0xA9);
     for _ in 0..20 {
         let mut p = arb_params(&mut rng);
-        p.s = 1;
+        p.sh = 1;
+        p.sw = 1;
         if p.validate().is_err() {
             continue;
         }

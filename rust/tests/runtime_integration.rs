@@ -4,8 +4,10 @@
 //! same algorithms. This closes the loop: L1 kernel == L2 model == L3
 //! functional simulator, number for number.
 //!
-//! Requires `make artifacts`; tests self-skip when artifacts are absent
+//! Requires the `pjrt` build feature (the whole file is a no-op without
+//! it) and `make artifacts`; tests self-skip when artifacts are absent
 //! so `cargo test` stays green on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use bp_im2col::accel::functional;
 use bp_im2col::conv::ConvParams;
@@ -18,7 +20,7 @@ use bp_im2col::tensor::{Rng, Tensor4};
 /// The fixed layer baked into the `bp_dx` / `bp_dw` artifacts
 /// (`model.P_TEST` on the Python side).
 const P_TEST: ConvParams =
-    ConvParams { b: 2, c: 2, hi: 9, wi: 9, n: 3, kh: 3, kw: 3, s: 2, ph: 1, pw: 1 };
+    ConvParams::basic(2, 2, 9, 9, 3, 3, 3, 2, 1, 1);
 
 fn runtime_or_skip() -> Option<Runtime> {
     let rt = Runtime::cpu().expect("PJRT CPU client must construct");
