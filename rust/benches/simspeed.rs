@@ -6,10 +6,13 @@
 #[path = "harness.rs"]
 mod harness;
 
+use std::sync::Arc;
+
 use bp_im2col::accel::functional::tiled_gemm;
+use bp_im2col::accel::plan::PlanCache;
 use bp_im2col::accel::{simulate_pass, AccelConfig};
 use bp_im2col::conv::ConvParams;
-use bp_im2col::coordinator::Scheduler;
+use bp_im2col::coordinator::{Fleet, Scheduler};
 use bp_im2col::im2col::pipeline::{Mode, Pass};
 use bp_im2col::im2col::{dilated, transposed};
 use bp_im2col::sim::compress::compress_window;
@@ -77,5 +80,52 @@ fn main() {
     let net = workloads::resnet();
     harness::bench("coordinator/resnet_both_modes", 1, 10, || {
         (sched.run_network(&net, Mode::Traditional), sched.run_network(&net, Mode::BpIm2col))
+    });
+
+    // Planning amortization (§Perf): a training run replays the same
+    // layer geometries every step. Cold replans every step; the memoized
+    // cache plans each distinct (layer, pass) once and then only reads.
+    // Repeated-geometry networks are exactly where the win lands.
+    const STEPS: usize = 20;
+    let nets = workloads::extended_networks();
+    harness::bench("plan/20_steps_extended_cold", 1, 10, || {
+        let mut acc = 0.0f64;
+        for _ in 0..STEPS {
+            for net in &nets {
+                for l in &net.layers {
+                    for pass in Pass::ALL {
+                        acc += simulate_pass(pass, Mode::BpIm2col, &l.params, &cfg).total_cycles();
+                    }
+                }
+            }
+        }
+        acc
+    });
+    harness::bench("plan/20_steps_extended_cached", 1, 10, || {
+        let cache = PlanCache::new();
+        let mut acc = 0.0f64;
+        for _ in 0..STEPS {
+            for net in &nets {
+                for l in &net.layers {
+                    for pass in Pass::ALL {
+                        acc += cache.metrics(pass, Mode::BpIm2col, &l.params, &cfg).total_cycles();
+                    }
+                }
+            }
+        }
+        acc
+    });
+
+    // Fleet scheduling: 8 simulated devices over one shared plan cache,
+    // whole extended workload set.
+    let cache = Arc::new(PlanCache::new());
+    harness::bench("fleet/extended_8_devices", 1, 10, || {
+        nets.iter()
+            .map(|net| {
+                Fleet::with_cache(cfg, 8, Arc::clone(&cache))
+                    .run_network(net, Mode::BpIm2col)
+                    .makespan_cycles
+            })
+            .sum::<f64>()
     });
 }

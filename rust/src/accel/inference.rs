@@ -17,14 +17,18 @@ use crate::sim::addrgen::DIV_LATENCY;
 /// designs run inference identically).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FwdMetrics {
+    /// Pure array cycles of the inference GEMMs.
     pub compute_cycles: f64,
+    /// Address-generation prologues, summed over stripes.
     pub prologue_cycles: f64,
     /// Off-chip bytes: input + kernel + output, compact.
     pub dram_bytes: u64,
+    /// Useful MACs of the forward convolution.
     pub macs: u64,
 }
 
 impl FwdMetrics {
+    /// End-to-end runtime of the inference pass in cycles.
     pub fn total_cycles(&self) -> f64 {
         self.compute_cycles + self.prologue_cycles
     }
@@ -49,12 +53,16 @@ pub fn simulate_fwd(p: &ConvParams, cfg: &AccelConfig) -> FwdMetrics {
 /// Full training-step cost of one layer: fwd + loss + grad.
 #[derive(Clone, Copy, Debug)]
 pub struct StepCost {
+    /// Inference (forward) cycles — identical in both im2col modes.
     pub fwd: f64,
+    /// Loss-calculation (`dX`) cycles.
     pub loss: f64,
+    /// Gradient-calculation (`dW`) cycles.
     pub grad: f64,
 }
 
 impl StepCost {
+    /// Whole-step cycles: forward + both backward passes.
     pub fn total(&self) -> f64 {
         self.fwd + self.loss + self.grad
     }

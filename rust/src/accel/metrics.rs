@@ -7,7 +7,9 @@ use crate::sim::dram::DramTraffic;
 /// All counters of one backpropagation pass on one layer.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PassMetrics {
+    /// Which backpropagation pass these metrics describe.
     pub pass: Pass,
+    /// Which im2col algorithm produced them.
     pub mode: Mode,
     /// Pure array cycles (block passes, fills, drains).
     pub compute_cycles: f64,
@@ -53,15 +55,19 @@ impl PassMetrics {
 /// Loss + gradient metrics of one layer under one mode.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LayerMetrics {
+    /// Loss-calculation (`dX`) metrics.
     pub loss: PassMetrics,
+    /// Gradient-calculation (`dW`) metrics.
     pub grad: PassMetrics,
 }
 
 impl LayerMetrics {
+    /// Backward runtime of the layer: loss + gradient cycles.
     pub fn total_cycles(&self) -> f64 {
         self.loss.total_cycles() + self.grad.total_cycles()
     }
 
+    /// Metrics of the given pass.
     pub fn get(&self, pass: Pass) -> &PassMetrics {
         match pass {
             Pass::Loss => &self.loss,

@@ -6,6 +6,10 @@
 //!
 //! * [`timing`] — the analytic cycle/traffic engine used on full-size
 //!   layers (Tables II–III, Figs. 6–8).
+//! * [`plan`] — memoized layer plans: the full derivation of one
+//!   `(layer, pass, mode, config)` lowering behind a hash-keyed cache,
+//!   shared by the analytic model, the event machine and the
+//!   coordinator (plan once, simulate many).
 //! * [`functional`] — a datapath-faithful execution (address generation →
 //!   NZ detection → compression → buffer fetch → crossbar → cycle-stepped
 //!   systolic array) that produces *numerical* results, cross-checked
@@ -16,9 +20,11 @@ pub mod config_file;
 pub mod functional;
 pub mod inference;
 pub mod metrics;
+pub mod plan;
 pub mod tiling;
 pub mod timing;
 
 pub use config::AccelConfig;
 pub use metrics::{LayerMetrics, PassMetrics};
+pub use plan::{LayerPlan, PlanCache, PlanCacheStats};
 pub use timing::{simulate_layer, simulate_pass};

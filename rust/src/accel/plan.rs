@@ -1,0 +1,537 @@
+//! Memoized layer plans — plan a layer once, simulate it many times.
+//!
+//! Everything the analytic engine derives from `(ConvParams, Pass, Mode,
+//! AccelConfig)` — the lowered [`GemmShape`], its [`Tiling`] onto the
+//! array, the address-generation prologue latencies (Table III), the
+//! sparsity closed forms, the dilated-mode window classification and the
+//! resulting [`PassMetrics`] — is a pure function of those four inputs.
+//! The seed coordinator recomputed all of it from scratch for every
+//! `BackpropJob`, even though a training run replays the *same* layer
+//! geometries step after step and most CNNs repeat geometries across
+//! stages (every ResNet/VGG block).
+//!
+//! [`LayerPlan`] captures the full derivation; [`PlanCache`] memoizes
+//! plans behind a hash key so repeated layers are planned exactly once.
+//! The cache is shared by the analytic model
+//! ([`crate::accel::timing::simulate_pass`] is "build an uncached plan,
+//! return its metrics"), the event machine
+//! ([`crate::sim::machine::run_pass_planned`]) and the coordinator's
+//! [`crate::coordinator::Scheduler`] / [`crate::coordinator::Fleet`],
+//! which thread one `Arc<PlanCache>` through all their workers.
+//!
+//! Cached and cold paths are **bit-exact** by construction: the plan
+//! stores the metrics the cold path would have produced, so a cache hit
+//! returns the identical `PassMetrics` value (asserted over a seeded
+//! geometry sweep in `tests/plan_fleet.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::accel::config::AccelConfig;
+use crate::accel::metrics::PassMetrics;
+use crate::accel::tiling::{GemmShape, Tiling};
+use crate::accel::timing::{grad_window_crossings, grad_zero_windows, META_BYTES_PER_WINDOW};
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::{Mode, Pass};
+use crate::im2col::sparsity::{self, SparsityStats};
+use crate::sim::addrgen::{prologue_cycles_for, Module};
+use crate::sim::dram::DramTraffic;
+use crate::sim::reorg_engine::reorg_cost;
+
+/// The complete lowering of one `(layer, pass, mode)` onto one
+/// accelerator configuration.
+///
+/// A plan owns every quantity the simulators need: shapes, tiling,
+/// prologues, sparsity statistics, the dilated-mode window
+/// classification, and the finished analytic [`PassMetrics`]. Building
+/// one is the expensive step the [`PlanCache`] amortizes; consuming one
+/// is a field read.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// Which backpropagation pass the plan lowers.
+    pub pass: Pass,
+    /// Which im2col algorithm the plan assumes.
+    pub mode: Mode,
+    /// The layer geometry the plan was built for.
+    pub params: ConvParams,
+    /// Per-group lowered GEMM dimensions (paper Eq. 1).
+    pub shape: GemmShape,
+    /// Tiling of the per-group GEMM onto the `T x T` array.
+    pub tiling: Tiling,
+    /// Stationary address-generation prologue per stripe (Table III),
+    /// for this specific geometry.
+    pub stationary_prologue: usize,
+    /// Dynamic address-generation prologue per stripe (Table III).
+    pub dynamic_prologue: usize,
+    /// Sparsity of the stationary operand's virtual matrix.
+    pub stat_sparsity: SparsityStats,
+    /// Sparsity of the dynamic operand's virtual matrix (grad pass only;
+    /// the loss pass streams the dense rotated kernel).
+    pub dyn_sparsity: Option<SparsityStats>,
+    /// Dilated-mode dynamic windows that are entirely structural zeros
+    /// (the `sparse_skip` option elides them). 0 outside BP grad.
+    pub zero_windows: usize,
+    /// Dilated-mode windows whose lanes span a compact-row boundary and
+    /// split the compressed fetch in two. 0 outside BP grad.
+    pub window_crossings: usize,
+    /// The finished analytic metrics of the pass — identical to what
+    /// [`crate::accel::timing::simulate_pass`] returns for the same
+    /// inputs.
+    pub metrics: PassMetrics,
+    /// Identity of the config the plan was built under (private: used to
+    /// reject consuming a plan under a different configuration).
+    cfg_key: CfgKey,
+}
+
+impl LayerPlan {
+    /// Derive the full plan of one pass — the body of the analytic
+    /// engine, recording its intermediates. This is the *only* place the
+    /// pass model lives; `timing::simulate_pass` is a thin wrapper that
+    /// builds an uncached plan and returns [`LayerPlan::metrics`].
+    pub fn build(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> Self {
+        let t = cfg.array_dim;
+        let groups = p.groups;
+        // Per-group GEMM; the layer runs `groups` of them.
+        let shape = GemmShape::from_pass(pass, p);
+        let til = Tiling::new(shape, t);
+        let mut compute_cycles = til.compute_cycles() * groups as f64;
+
+        // Dilated-mode window classification (BP grad only; both counts
+        // are geometry-pure and group-independent).
+        let (zero_windows, window_crossings) = match (mode, pass) {
+            (Mode::BpIm2col, Pass::Grad) => {
+                (grad_zero_windows(p, t), grad_window_crossings(p, t))
+            }
+            _ => (0, 0),
+        };
+
+        // Future-work sparse computation: skip the blocks whose dynamic
+        // window is entirely zero-insertions.
+        if cfg.sparse_skip && mode == Mode::BpIm2col && pass == Pass::Grad {
+            compute_cycles *= 1.0 - zero_windows as f64 / til.n_k as f64;
+        }
+
+        // ---- sparsity of the zero-spaced operand of this pass ----
+        let (stat_stats, dyn_stats) = match pass {
+            Pass::Loss => (sparsity::loss_matrix_b(p), None),
+            Pass::Grad => (sparsity::grad_matrix_b(p), Some(sparsity::grad_matrix_a(p))),
+        };
+        let pass_sparsity = match pass {
+            Pass::Loss => stat_stats.sparsity(),
+            Pass::Grad => dyn_stats.expect("grad has dynamic stats").sparsity(),
+        };
+
+        // ---- prologue: each addr-gen pipeline restarts per stationary
+        //      stripe of every group's GEMM ----
+        let stationary_prologue = prologue_cycles_for(mode, pass, Module::Stationary, p);
+        let dynamic_prologue = prologue_cycles_for(mode, pass, Module::Dynamic, p);
+        let prologue = (til.n_j * groups) as f64 * (stationary_prologue + dynamic_prologue) as f64;
+
+        // ---- reorganization (baseline only; whole dY, once per layer) ----
+        let (reorg_cycles, reorg_bytes, storage_overhead) = match mode {
+            Mode::Traditional => {
+                let r = reorg_cost(pass, p, cfg.reorg_cycles_per_elem);
+                (r.cycles, r.dram_bytes(), r.storage_bytes())
+            }
+            Mode::BpIm2col => (0.0, 0, 0),
+        };
+
+        // ---- on-chip buffer reads toward the array (Fig. 8) ----
+        let b_dense = til.buffer_b_dense_reads() * groups as u64;
+        let a_dense = til.buffer_a_dense_reads() * groups as u64;
+        let (buffer_a_reads, buffer_b_reads) = match (mode, pass) {
+            // Baseline streams the zero-spaced operands densely.
+            (Mode::Traditional, _) => (a_dense, b_dense),
+            // BP loss: stationary matrix B reads only stored pixels;
+            // dynamic matrix A (the kernel) is dense.
+            (Mode::BpIm2col, Pass::Loss) => {
+                let nz_frac = 1.0 - stat_stats.sparsity();
+                (a_dense, (b_dense as f64 * nz_frac) as u64)
+            }
+            // BP grad: dynamic matrix A reads only stored pixels;
+            // stationary matrix B (input im2col) skips only padding zeros.
+            (Mode::BpIm2col, Pass::Grad) => {
+                let a_nz = 1.0 - dyn_stats.expect("grad").sparsity();
+                let b_nz = 1.0 - stat_stats.sparsity();
+                ((a_dense as f64 * a_nz) as u64, (b_dense as f64 * b_nz) as u64)
+            }
+        };
+
+        // ---- off-chip traffic (Fig. 7) ----
+        // Unique underlying operand data over all groups, fetched once
+        // per pass into the double-buffered on-chip buffers (working-set
+        // rule, DESIGN.md §5).
+        let (a_unique_trad, a_unique_bp) = match pass {
+            // Loss: dynamic matrix is the dense rotated kernel (all groups).
+            Pass::Loss => {
+                let e = p.kernel_elems();
+                (e, e)
+            }
+            // Grad: dynamic matrix is the zero-inserted dY (virtual, all
+            // groups = N rows) vs the compact dY (BP).
+            Pass::Grad => (groups * shape.m * shape.k, p.output_elems()),
+        };
+        debug_assert!(
+            shape.m * t <= cfg.buf_a_half,
+            "dynamic panel must fit one buffer-A half"
+        );
+
+        let (b_unique_trad, b_unique_bp) = match pass {
+            // Loss: stationary source is the zero-spaced dYz vs compact dY.
+            Pass::Loss => (p.b * p.n * p.ho3() * p.wo3(), p.output_elems()),
+            // Grad: stationary source is the padded input vs compact
+            // input (padding zeros are never stored off-chip in either
+            // mode, but the baseline materializes Xpad during its
+            // explicit pipeline).
+            Pass::Grad => (
+                p.b * p.c * (p.hi + 2 * p.ph) * (p.wi + 2 * p.pw),
+                p.input_elems(),
+            ),
+        };
+
+        let out_bytes = (groups * shape.m * shape.j * 4) as u64;
+        let traffic = match mode {
+            Mode::Traditional => DramTraffic {
+                a_bytes: (a_unique_trad * 4) as u64,
+                b_bytes: (b_unique_trad * 4) as u64,
+                out_bytes,
+                reorg_bytes,
+                meta_bytes: 0,
+            },
+            Mode::BpIm2col => DramTraffic {
+                a_bytes: (a_unique_bp * 4) as u64,
+                b_bytes: (b_unique_bp * 4) as u64,
+                out_bytes,
+                reorg_bytes: 0,
+                // Compressed base addresses ride the command bus as read
+                // requests and the masks never leave the chip — they are
+                // not data traffic (Fig. 7 measures data transmission).
+                meta_bytes: 0,
+            },
+        };
+
+        // ---- additional storage beyond the compact tensors ----
+        // Baseline: the zero-spaced DRAM copy. BP: masks/base addresses
+        // are produced on the fly and consumed streaming; the only
+        // standing state is the double-buffered in-flight window queue of
+        // each address-generation module (depth 64 windows here).
+        const WINDOW_QUEUE_DEPTH: u64 = 64;
+        let storage_overhead_bytes = match mode {
+            Mode::Traditional => storage_overhead,
+            Mode::BpIm2col => 2 * 2 * WINDOW_QUEUE_DEPTH * META_BYTES_PER_WINDOW,
+        };
+
+        // ---- extra fetch cycles from split compressed runs ----
+        let extra_fetch_cycles = match (mode, pass) {
+            (Mode::BpIm2col, Pass::Grad) => {
+                (window_crossings * til.n_j * groups) as f64 * shape.m as f64 / t as f64
+            }
+            _ => 0.0,
+        };
+
+        // ---- DRAM fill stalls per stripe ----
+        let stripes = (til.n_j * groups) as f64;
+        let fill_elems_per_stripe =
+            (traffic.a_bytes + traffic.b_bytes + traffic.meta_bytes) as f64 / 4.0 / stripes;
+        let fill_cycles = cfg.dram.transfer_cycles(fill_elems_per_stripe.ceil() as usize);
+        let stripe_compute = til.stripe_compute_cycles();
+        let stall_cycles = stripes * (fill_cycles - stripe_compute).max(0.0);
+
+        let metrics = PassMetrics {
+            pass,
+            mode,
+            compute_cycles,
+            reorg_cycles,
+            prologue_cycles: prologue,
+            stall_cycles,
+            extra_fetch_cycles,
+            traffic,
+            buffer_a_reads,
+            buffer_b_reads,
+            storage_overhead_bytes,
+            sparsity: pass_sparsity,
+            macs: shape.macs() * groups as u64,
+        };
+
+        Self {
+            pass,
+            mode,
+            params: *p,
+            shape,
+            tiling: til,
+            stationary_prologue,
+            dynamic_prologue,
+            stat_sparsity: stat_stats,
+            dyn_sparsity: dyn_stats,
+            zero_windows,
+            window_crossings,
+            metrics,
+            cfg_key: CfgKey::of(cfg),
+        }
+    }
+
+    /// True when the plan was built under a config with identical
+    /// simulation-relevant fields (every field bit-identical). Consumers
+    /// that take a plan *and* a config ([`crate::sim::machine::run_pass_planned`])
+    /// use this to reject mixed configurations.
+    pub fn matches_config(&self, cfg: &AccelConfig) -> bool {
+        self.cfg_key == CfgKey::of(cfg)
+    }
+
+    /// Combined per-stripe address-generation prologue, in cycles.
+    pub fn prologue_per_stripe(&self) -> f64 {
+        (self.stationary_prologue + self.dynamic_prologue) as f64
+    }
+
+    /// Stationary stripes of the whole layer (all groups).
+    pub fn stripes(&self) -> usize {
+        self.tiling.n_j * self.params.groups
+    }
+}
+
+/// Hashable identity of an [`AccelConfig`] (float fields keyed by their
+/// bit patterns: two configs plan identically iff every field is
+/// bit-identical).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct CfgKey {
+    array_dim: usize,
+    buf_a_half: usize,
+    buf_b_half: usize,
+    elems_per_cycle_bits: u64,
+    burst_overhead_bits: u64,
+    burst_len: usize,
+    reorg_cycles_per_elem_bits: u64,
+    sparse_skip: bool,
+}
+
+impl CfgKey {
+    fn of(cfg: &AccelConfig) -> Self {
+        // Exhaustive destructuring (no `..`): adding a field to
+        // AccelConfig or DramModel without extending this key is a
+        // compile error, not a silent cache collision.
+        let AccelConfig { array_dim, dram, buf_a_half, buf_b_half, reorg_cycles_per_elem, sparse_skip } =
+            *cfg;
+        let crate::sim::dram::DramModel { elems_per_cycle, burst_overhead, burst_len } = dram;
+        Self {
+            array_dim,
+            buf_a_half,
+            buf_b_half,
+            elems_per_cycle_bits: elems_per_cycle.to_bits(),
+            burst_overhead_bits: burst_overhead.to_bits(),
+            burst_len,
+            reorg_cycles_per_elem_bits: reorg_cycles_per_elem.to_bits(),
+            sparse_skip,
+        }
+    }
+}
+
+/// Full memo key: layer geometry + pass + mode + accelerator config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    params: ConvParams,
+    pass: Pass,
+    mode: Mode,
+    cfg: CfgKey,
+}
+
+/// Hit/miss counters of a [`PlanCache`] (the planning-amortization
+/// numbers `repro fleet` and `benches/simspeed.rs` report).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups answered from the memo table.
+    pub hits: u64,
+    /// Lookups that had to build a fresh plan.
+    pub misses: u64,
+    /// Distinct plans currently stored.
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    /// Fraction of lookups served from the cache, in `[0, 1]`.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// Thread-safe memo table of [`LayerPlan`]s, keyed by
+/// `(ConvParams, Pass, Mode, AccelConfig)`.
+///
+/// Share one cache (behind an `Arc`) across every consumer that replays
+/// layer geometries — scheduler workers, fleet devices, sweep loops —
+/// and repeated layers are planned once.
+///
+/// # Example
+///
+/// ```
+/// use std::sync::Arc;
+/// use bp_im2col::accel::plan::PlanCache;
+/// use bp_im2col::accel::{simulate_pass, AccelConfig};
+/// use bp_im2col::im2col::pipeline::{Mode, Pass};
+/// use bp_im2col::ConvParams;
+///
+/// let cache = Arc::new(PlanCache::new());
+/// let cfg = AccelConfig::default();
+/// let p = ConvParams::square(56, 128, 128, 3, 2, 1);
+///
+/// let first = cache.metrics(Pass::Grad, Mode::BpIm2col, &p, &cfg); // miss: plans
+/// let second = cache.metrics(Pass::Grad, Mode::BpIm2col, &p, &cfg); // hit: memoized
+/// assert_eq!(first, second);
+/// // Bit-exact with the uncached analytic engine.
+/// assert_eq!(first, simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &cfg));
+/// let stats = cache.stats();
+/// assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+/// ```
+#[derive(Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<LayerPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The memoized plan for `(pass, mode, p, cfg)`, building it on first
+    /// use.
+    ///
+    /// Planning happens *outside* the table lock so concurrent workers
+    /// never serialize on a build; two racers may both build the same
+    /// (identical, deterministic) plan, and the first insert wins.
+    pub fn plan(&self, pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> Arc<LayerPlan> {
+        let key = PlanKey { params: *p, pass, mode, cfg: CfgKey::of(cfg) };
+        if let Some(hit) = self.plans.lock().expect("plan cache poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        let built = Arc::new(LayerPlan::build(pass, mode, p, cfg));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut table = self.plans.lock().expect("plan cache poisoned");
+        Arc::clone(table.entry(key).or_insert(built))
+    }
+
+    /// The analytic [`PassMetrics`] of `(pass, mode, p, cfg)` through the
+    /// cache — bit-exact with
+    /// [`crate::accel::timing::simulate_pass`].
+    pub fn metrics(&self, pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> PassMetrics {
+        self.plan(pass, mode, p, cfg).metrics
+    }
+
+    /// Current hit/miss/entry counters.
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.plans.lock().expect("plan cache poisoned").len(),
+        }
+    }
+
+    /// Drop every memoized plan and zero the counters.
+    pub fn clear(&self) {
+        self.plans.lock().expect("plan cache poisoned").clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::timing::simulate_pass;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::default()
+    }
+
+    #[test]
+    fn plan_metrics_equal_cold_simulate_pass() {
+        for p in [
+            ConvParams::square(112, 64, 64, 3, 2, 1),
+            ConvParams::square(56, 256, 512, 1, 2, 0),
+            ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2),
+            ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32),
+        ] {
+            for pass in Pass::ALL {
+                for mode in Mode::ALL {
+                    let plan = LayerPlan::build(pass, mode, &p, &cfg());
+                    assert_eq!(plan.metrics, simulate_pass(pass, mode, &p, &cfg()), "{} {pass:?} {mode:?}", p.id());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_return_the_same_plan() {
+        let cache = PlanCache::new();
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        let a = cache.plan(Pass::Loss, Mode::BpIm2col, &p, &cfg());
+        let b = cache.plan(Pass::Loss, Mode::BpIm2col, &p, &cfg());
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the memoized Arc");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_inputs_get_distinct_entries() {
+        let cache = PlanCache::new();
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &cfg());
+        cache.metrics(Pass::Grad, Mode::BpIm2col, &p, &cfg());
+        cache.metrics(Pass::Loss, Mode::Traditional, &p, &cfg());
+        // Different config (bandwidth) is a different key.
+        cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &AccelConfig::bandwidth_limited(1.0));
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (0, 4, 4));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let cache = PlanCache::new();
+        let p = ConvParams::square(56, 256, 512, 1, 2, 0);
+        cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &cfg());
+        cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &cfg());
+        cache.clear();
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (0, 0, 0));
+    }
+
+    #[test]
+    fn shared_cache_is_thread_safe_and_exact() {
+        use std::thread;
+        let cache = Arc::new(PlanCache::new());
+        let p = ConvParams::square(28, 244, 244, 3, 2, 1);
+        let cold = simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &cfg());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&cache);
+                thread::spawn(move || c.metrics(Pass::Grad, Mode::BpIm2col, &p, &cfg()))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), cold);
+        }
+        // Exactly one entry no matter how the race resolved.
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn plan_records_geometry_intermediates() {
+        let p = ConvParams::square(56, 256, 512, 1, 2, 0);
+        let plan = LayerPlan::build(Pass::Grad, Mode::BpIm2col, &p, &cfg());
+        assert_eq!(plan.shape, GemmShape::from_pass(Pass::Grad, &p));
+        assert_eq!(plan.tiling, Tiling::new(plan.shape, 16));
+        // Table III: BP grad = 68 dynamic + 51 stationary.
+        assert_eq!((plan.dynamic_prologue, plan.stationary_prologue), (68, 51));
+        assert!(plan.dyn_sparsity.is_some());
+        assert!(plan.zero_windows > 0, "stride-2 grad has all-zero windows");
+        assert_eq!(plan.stripes(), plan.tiling.n_j);
+    }
+}

@@ -14,8 +14,11 @@ use crate::tensor::ceil_div;
 /// Dimensions of a lowered GEMM `A[M x K] . B[K x J]`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GemmShape {
+    /// Rows of the dynamic matrix A.
     pub m: usize,
+    /// Inner (accumulation) dimension.
     pub k: usize,
+    /// Columns of the stationary matrix B.
     pub j: usize,
 }
 
@@ -38,7 +41,9 @@ impl GemmShape {
 /// Tiling of a [`GemmShape`] onto a `T x T` array.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Tiling {
+    /// Array dimension `T`.
     pub t: usize,
+    /// The GEMM being tiled.
     pub shape: GemmShape,
     /// Stationary blocks along K.
     pub n_k: usize,
@@ -51,6 +56,19 @@ pub struct Tiling {
 }
 
 impl Tiling {
+    /// Tile `shape` onto a `t x t` array.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use bp_im2col::accel::tiling::{GemmShape, Tiling};
+    ///
+    /// // A 17x33 . 33x40 GEMM on the paper's 16x16 array.
+    /// let til = Tiling::new(GemmShape { m: 17, k: 33, j: 40 }, 16);
+    /// assert_eq!((til.n_m, til.n_k, til.n_j), (2, 3, 3));
+    /// assert_eq!(til.m_last, 1); // 17 = 16 + 1
+    /// assert_eq!(til.block_passes(), 18); // (3 K-blocks x 3 stripes) x 2
+    /// ```
     pub fn new(shape: GemmShape, t: usize) -> Self {
         let n_m = ceil_div(shape.m, t);
         let m_last = if shape.m % t == 0 { t.min(shape.m) } else { shape.m % t };

@@ -1,6 +1,14 @@
 //! Analytic cycle/traffic engine — the full-size-layer simulator behind
 //! Tables II–III and Figures 6–8.
 //!
+//! Since coordinator v2 the pass model itself lives in
+//! [`crate::accel::plan::LayerPlan::build`]; [`simulate_pass`] builds an
+//! uncached plan and returns its metrics, and
+//! [`crate::accel::plan::PlanCache`] memoizes plans for callers that
+//! replay layer geometries. This module keeps the dilated-mode window
+//! classifiers ([`grad_zero_windows`], run-crossing counting) the plan
+//! builder uses.
+//!
 //! Model summary (DESIGN.md §5 documents the calibration against the
 //! paper's Table II; component costs within ~±20 %):
 //!
@@ -24,17 +32,13 @@
 
 use crate::accel::config::AccelConfig;
 use crate::accel::metrics::{LayerMetrics, PassMetrics};
-use crate::accel::tiling::{GemmShape, Tiling};
+use crate::accel::plan::LayerPlan;
 use crate::conv::ConvParams;
 use crate::im2col::pipeline::{Mode, Pass};
-use crate::im2col::sparsity;
-use crate::sim::addrgen::{prologue_cycles_for, Module};
-use crate::sim::dram::DramTraffic;
-use crate::sim::reorg_engine::reorg_cost;
 
 /// Bytes of side-band metadata per 16-lane window (4-byte base address +
 /// 2-byte mask, `sim::compress`).
-const META_BYTES_PER_WINDOW: u64 = 6;
+pub(crate) const META_BYTES_PER_WINDOW: u64 = 6;
 
 /// Count the `kb` windows of the dilated-mode dynamic matrix whose lanes
 /// are ALL structural zeros (the window lies entirely inside
@@ -83,7 +87,7 @@ pub fn grad_zero_windows(p: &ConvParams, t: usize) -> usize {
 /// Count the `kb` windows of the dilated-mode dynamic matrix whose 16
 /// virtual lanes span a compact-row boundary (the non-zero lanes then map
 /// to 2 contiguous runs and the fetch splits in two).
-fn grad_window_crossings(p: &ConvParams, t: usize) -> usize {
+pub(crate) fn grad_window_crossings(p: &ConvParams, t: usize) -> usize {
     let w2 = p.wo2();
     let k = p.b * p.ho2() * w2;
     let mut crossings = 0;
@@ -100,168 +104,30 @@ fn grad_window_crossings(p: &ConvParams, t: usize) -> usize {
 }
 
 /// Simulate one backpropagation pass of one layer.
+///
+/// This is the *cold* path: it derives a fresh [`LayerPlan`] and returns
+/// its metrics. Callers that replay layer geometries (training loops,
+/// network sweeps, fleets) should go through
+/// [`crate::accel::plan::PlanCache`] instead, which memoizes the plan and
+/// returns bit-identical metrics.
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::accel::{simulate_pass, AccelConfig};
+/// use bp_im2col::im2col::pipeline::{Mode, Pass};
+/// use bp_im2col::ConvParams;
+///
+/// let p = ConvParams::square(56, 256, 512, 1, 2, 0); // Table II row 3
+/// let cfg = AccelConfig::default();
+/// let trad = simulate_pass(Pass::Loss, Mode::Traditional, &p, &cfg);
+/// let bp = simulate_pass(Pass::Loss, Mode::BpIm2col, &p, &cfg);
+/// // Eliminating the reorganization makes BP-im2col strictly cheaper.
+/// assert!(bp.total_cycles() < trad.total_cycles());
+/// assert_eq!(bp.reorg_cycles, 0.0);
+/// ```
 pub fn simulate_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> PassMetrics {
-    let t = cfg.array_dim;
-    let groups = p.groups;
-    // Per-group GEMM; the layer runs `groups` of them.
-    let shape = GemmShape::from_pass(pass, p);
-    let til = Tiling::new(shape, t);
-    let mut compute_cycles = til.compute_cycles() * groups as f64;
-
-    // Future-work sparse computation: skip the dilated-mode blocks whose
-    // dynamic window is entirely zero-insertions (see `grad_zero_windows`).
-    // The window pattern is group-independent, so the skipped fraction
-    // applies to every group's GEMM alike.
-    if cfg.sparse_skip && mode == Mode::BpIm2col && pass == Pass::Grad {
-        let skipped = grad_zero_windows(p, t);
-        compute_cycles *= 1.0 - skipped as f64 / til.n_k as f64;
-    }
-
-    // ---- sparsity of the zero-spaced operand of this pass ----
-    let (stat_stats, dyn_stats) = match pass {
-        Pass::Loss => (sparsity::loss_matrix_b(p), None),
-        Pass::Grad => (sparsity::grad_matrix_b(p), Some(sparsity::grad_matrix_a(p))),
-    };
-    let pass_sparsity = match pass {
-        Pass::Loss => stat_stats.sparsity(),
-        Pass::Grad => dyn_stats.expect("grad has dynamic stats").sparsity(),
-    };
-
-    // ---- prologue: each addr-gen pipeline restarts per stationary stripe
-    //      of every group's GEMM ----
-    let prologue_per_stripe = (prologue_cycles_for(mode, pass, Module::Stationary, p)
-        + prologue_cycles_for(mode, pass, Module::Dynamic, p)) as f64;
-    let prologue = (til.n_j * groups) as f64 * prologue_per_stripe;
-
-    // ---- reorganization (baseline only; whole dY, once per layer) ----
-    let (reorg_cycles, reorg_bytes, storage_overhead) = match mode {
-        Mode::Traditional => {
-            let r = reorg_cost(pass, p, cfg.reorg_cycles_per_elem);
-            (r.cycles, r.dram_bytes(), r.storage_bytes())
-        }
-        Mode::BpIm2col => (0.0, 0, 0),
-    };
-
-    // ---- on-chip buffer reads toward the array (Fig. 8) ----
-    let b_dense = til.buffer_b_dense_reads() * groups as u64;
-    let a_dense = til.buffer_a_dense_reads() * groups as u64;
-    let (buffer_a_reads, buffer_b_reads) = match (mode, pass) {
-        // Baseline streams the zero-spaced operands densely.
-        (Mode::Traditional, _) => (a_dense, b_dense),
-        // BP loss: stationary matrix B reads only stored pixels; dynamic
-        // matrix A (the kernel) is dense.
-        (Mode::BpIm2col, Pass::Loss) => {
-            let nz_frac = 1.0 - stat_stats.sparsity();
-            (a_dense, (b_dense as f64 * nz_frac) as u64)
-        }
-        // BP grad: dynamic matrix A reads only stored pixels; stationary
-        // matrix B (input im2col) skips only padding zeros.
-        (Mode::BpIm2col, Pass::Grad) => {
-            let a_nz = 1.0 - dyn_stats.expect("grad").sparsity();
-            let b_nz = 1.0 - stat_stats.sparsity();
-            ((a_dense as f64 * a_nz) as u64, (b_dense as f64 * b_nz) as u64)
-        }
-    };
-
-    // ---- off-chip traffic (Fig. 7) ----
-    // Unique underlying operand data over all groups, fetched once per
-    // pass into the double-buffered on-chip buffers (working-set rule,
-    // DESIGN.md §5), except the dynamic matrix which is re-streamed per
-    // stripe when it does not fit in one buffer-A half.
-    // With the kb-outer block schedule only an `M x T` panel of A must be
-    // resident in a buffer-A half at a time (it is re-read toward the
-    // array once per stripe from on-chip, counted in `buffer_a_reads`),
-    // so each mode fetches its dynamic matrix from DRAM exactly once.
-    let (a_unique_trad, a_unique_bp) = match pass {
-        // Loss: dynamic matrix is the dense rotated kernel (all groups).
-        Pass::Loss => {
-            let e = p.kernel_elems();
-            (e, e)
-        }
-        // Grad: dynamic matrix is the zero-inserted dY (virtual, all
-        // groups = N rows) vs the compact dY (BP).
-        Pass::Grad => (groups * shape.m * shape.k, p.output_elems()),
-    };
-    debug_assert!(
-        shape.m * t <= cfg.buf_a_half,
-        "dynamic panel must fit one buffer-A half"
-    );
-
-    let (b_unique_trad, b_unique_bp) = match pass {
-        // Loss: stationary source is the zero-spaced dYz vs compact dY.
-        Pass::Loss => (p.b * p.n * p.ho3() * p.wo3(), p.output_elems()),
-        // Grad: stationary source is the padded input vs compact input
-        // (padding zeros are never stored off-chip in either mode, but
-        // the baseline materializes Xpad during its explicit pipeline).
-        Pass::Grad => (
-            p.b * p.c * (p.hi + 2 * p.ph) * (p.wi + 2 * p.pw),
-            p.input_elems(),
-        ),
-    };
-
-    let out_bytes = (groups * shape.m * shape.j * 4) as u64;
-    let traffic = match mode {
-        Mode::Traditional => DramTraffic {
-            a_bytes: (a_unique_trad * 4) as u64,
-            b_bytes: (b_unique_trad * 4) as u64,
-            out_bytes,
-            reorg_bytes,
-            meta_bytes: 0,
-        },
-        Mode::BpIm2col => DramTraffic {
-            a_bytes: (a_unique_bp * 4) as u64,
-            b_bytes: (b_unique_bp * 4) as u64,
-            out_bytes,
-            reorg_bytes: 0,
-            // Compressed base addresses ride the command bus as read
-            // requests and the masks never leave the chip — they are not
-            // data traffic (Fig. 7 measures data transmission).
-            meta_bytes: 0,
-        },
-    };
-
-    // ---- additional storage beyond the compact tensors ----
-    // Baseline: the zero-spaced DRAM copy. BP: masks/base addresses are
-    // produced on the fly and consumed streaming; the only standing
-    // state is the double-buffered in-flight window queue of each
-    // address-generation module (depth 64 windows here).
-    const WINDOW_QUEUE_DEPTH: u64 = 64;
-    let storage_overhead_bytes = match mode {
-        Mode::Traditional => storage_overhead,
-        Mode::BpIm2col => 2 * 2 * WINDOW_QUEUE_DEPTH * META_BYTES_PER_WINDOW,
-    };
-
-    // ---- extra fetch cycles from split compressed runs (dilated mode) ----
-    let extra_fetch_cycles = match (mode, pass) {
-        (Mode::BpIm2col, Pass::Grad) => {
-            (grad_window_crossings(p, t) * til.n_j * groups) as f64 * shape.m as f64 / t as f64
-        }
-        _ => 0.0,
-    };
-
-    // ---- DRAM fill stalls per stripe ----
-    let stripes = (til.n_j * groups) as f64;
-    let fill_elems_per_stripe =
-        (traffic.a_bytes + traffic.b_bytes + traffic.meta_bytes) as f64 / 4.0 / stripes;
-    let fill_cycles = cfg.dram.transfer_cycles(fill_elems_per_stripe.ceil() as usize);
-    let stripe_compute = til.stripe_compute_cycles();
-    let stall_cycles = stripes * (fill_cycles - stripe_compute).max(0.0);
-
-    PassMetrics {
-        pass,
-        mode,
-        compute_cycles,
-        reorg_cycles,
-        prologue_cycles: prologue,
-        stall_cycles,
-        extra_fetch_cycles,
-        traffic,
-        buffer_a_reads,
-        buffer_b_reads,
-        storage_overhead_bytes,
-        sparsity: pass_sparsity,
-        macs: shape.macs() * groups as u64,
-    }
+    LayerPlan::build(pass, mode, p, cfg).metrics
 }
 
 /// Simulate both passes of one layer.

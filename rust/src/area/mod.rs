@@ -38,15 +38,22 @@ pub const LANES: usize = 16;
 /// Area breakdown of one address-generation module.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ModuleArea {
+    /// Fixed-point divider lanes.
     pub dividers_um2: f64,
+    /// Adders (address composition / channel bases).
     pub adders_um2: f64,
+    /// Comparators (NZ detection).
     pub comparators_um2: f64,
+    /// Pipeline registers between stages.
     pub pipeline_regs_um2: f64,
+    /// Compression crossbar share.
     pub crossbar_um2: f64,
+    /// Control / sequencing overhead.
     pub control_um2: f64,
 }
 
 impl ModuleArea {
+    /// Total module area in um^2.
     pub fn total(&self) -> f64 {
         self.dividers_um2
             + self.adders_um2
@@ -116,9 +123,13 @@ pub fn accelerator_total_um2() -> f64 {
 /// One row of Table IV: module area and its share of the accelerator.
 #[derive(Clone, Copy, Debug)]
 pub struct Table4Row {
+    /// Which im2col design the module belongs to.
     pub mode: Mode,
+    /// Dynamic or stationary address generator.
     pub module: Module,
+    /// Structural area of the module in um^2.
     pub area_um2: f64,
+    /// Share of the whole accelerator's area, in percent.
     pub ratio_pct: f64,
 }
 

@@ -44,7 +44,26 @@ pub struct ConvParams {
 
 impl ConvParams {
     /// Square-image, square-kernel constructor matching the paper's
-    /// `Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw)` layer notation (dense, ungrouped).
+    /// `Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw)` layer notation (dense, ungrouped,
+    /// batch 2 as in the paper's evaluation).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use bp_im2col::ConvParams;
+    ///
+    /// // Table II layer 1: 224/3/64/3/2/0.
+    /// let p = ConvParams::square(224, 3, 64, 3, 2, 0);
+    /// assert_eq!(p.ho(), 111);  // floor((224 - 3)/2) + 1
+    /// assert_eq!(p.ho2(), 221); // zero-inserted loss map
+    /// assert_eq!(p.ho3(), 225); // + 2*(K-1-P) padding
+    /// assert_eq!(p.id(), "224/3/64/3/2/0");
+    ///
+    /// // Builders cover the generalized geometry.
+    /// let g = ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32);
+    /// assert_eq!((g.cg(), g.ng()), (4, 4));
+    /// g.validate().unwrap();
+    /// ```
     pub const fn square(hi: usize, c: usize, n: usize, k: usize, s: usize, p: usize) -> Self {
         Self::basic(2, c, hi, hi, n, k, k, s, p, p)
     }

@@ -1,0 +1,403 @@
+//! Fleet: shard a network's backward pass across `N` simulated
+//! accelerators.
+//!
+//! The paper models a single accelerator; the ROADMAP's north star is a
+//! sharded, high-throughput system. This module adds the scale-out
+//! layer:
+//!
+//! * **Layer parallelism** — a network's per-layer loss/grad jobs are
+//!   independent (`dX` and `dW` of different layers have no mutual
+//!   dependency once the loss maps exist), so they distribute
+//!   round-robin over devices, and idle devices *steal* queued jobs from
+//!   loaded ones ([`crate::coordinator::queue::StealDeques`]).
+//! * **Data parallelism** — optionally
+//!   ([`Sharding::DataParallel`]), jobs are first split along the batch
+//!   dimension so a fleet wider than the job list still has work per
+//!   device (each device runs the same layer on its own batch slice).
+//!
+//! Job *metrics* are computed once on the host worker pool through the
+//! shared [`PlanCache`] (plan once, simulate many); the device schedule
+//! is then replayed deterministically in virtual time, so per-device
+//! reports and the makespan are reproducible run to run. Aggregated
+//! totals go through [`NetworkReport::from_results`], which makes a
+//! one-device fleet bit-identical to the single-accelerator
+//! [`crate::coordinator::Scheduler`] (asserted in
+//! `tests/plan_fleet.rs`).
+
+use std::sync::Arc;
+
+use crate::accel::plan::{PlanCache, PlanCacheStats};
+use crate::accel::AccelConfig;
+use crate::coordinator::job::{enumerate_jobs, BackpropJob, JobResult};
+use crate::coordinator::queue::StealDeques;
+use crate::coordinator::scheduler::{compute_results, default_workers, NetworkReport};
+use crate::im2col::pipeline::Mode;
+use crate::workloads::Network;
+
+/// How the fleet splits a network's backward pass across devices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// Whole per-layer jobs, round-robin over devices by job id; idle
+    /// devices steal. The job list — and therefore every aggregated
+    /// total — is identical to the single-accelerator scheduler's.
+    LayerParallel,
+    /// Like [`Sharding::LayerParallel`], but when the fleet is wider
+    /// than the job list, each job's batch is first split into
+    /// per-device slices (data parallelism over the batch dimension).
+    /// With one device no job is split, so this too degenerates to the
+    /// single-accelerator job list.
+    DataParallel,
+}
+
+/// What one simulated device did during a fleet run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceReport {
+    /// Device index within the fleet.
+    pub device: usize,
+    /// Jobs this device executed (its own plus stolen ones).
+    pub jobs: usize,
+    /// Of those, jobs stolen from another device's queue.
+    pub stolen_jobs: usize,
+    /// Simulated cycles this device spent computing.
+    pub busy_cycles: f64,
+}
+
+/// Outcome of one fleet run: the fleet-wide aggregate plus per-device
+/// accounting.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Aggregate over every job, bit-identical to what the
+    /// single-accelerator scheduler reports for the same job list.
+    pub total: NetworkReport,
+    /// Per-device execution accounting.
+    pub devices: Vec<DeviceReport>,
+    /// Virtual-time finish of the slowest device — the fleet's wall
+    /// clock for this backward pass, in simulated cycles.
+    pub makespan_cycles: f64,
+    /// Plan-cache counters at the end of the run (cumulative over the
+    /// cache's lifetime, which may span networks).
+    pub planning: PlanCacheStats,
+}
+
+impl FleetReport {
+    /// Total busy cycles across all devices (equals
+    /// `total.loss_cycles + total.grad_cycles` up to f64 ordering).
+    pub fn busy_cycles(&self) -> f64 {
+        self.devices.iter().map(|d| d.busy_cycles).sum()
+    }
+
+    /// Speedup of the fleet over running the same jobs on one device.
+    pub fn speedup(&self) -> f64 {
+        if self.makespan_cycles == 0.0 {
+            return 1.0;
+        }
+        self.busy_cycles() / self.makespan_cycles
+    }
+
+    /// Parallel efficiency in `[0, 1]`: achieved speedup over the device
+    /// count.
+    pub fn parallel_efficiency(&self) -> f64 {
+        self.speedup() / self.devices.len() as f64
+    }
+
+    /// Jobs stolen across the whole fleet.
+    pub fn stolen_jobs(&self) -> usize {
+        self.devices.iter().map(|d| d.stolen_jobs).sum()
+    }
+}
+
+/// A fleet of `N` identical simulated accelerators sharing one plan
+/// cache.
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::accel::AccelConfig;
+/// use bp_im2col::coordinator::{Fleet, Scheduler};
+/// use bp_im2col::im2col::pipeline::Mode;
+/// use bp_im2col::workloads;
+///
+/// let net = workloads::resnet();
+/// let fleet = Fleet::new(AccelConfig::default(), 4);
+/// let rep = fleet.run_network(&net, Mode::BpIm2col);
+/// // Four devices finish the backward pass faster than one...
+/// assert!(rep.makespan_cycles < rep.busy_cycles());
+/// // ...while the aggregate totals stay exactly the single-device ones.
+/// let single = Scheduler::new(fleet.cfg).run_network(&net, Mode::BpIm2col);
+/// assert_eq!(rep.total.loss_cycles, single.loss_cycles);
+/// assert_eq!(rep.total.grad_cycles, single.grad_cycles);
+/// ```
+pub struct Fleet {
+    /// Configuration of every device (the fleet is homogeneous).
+    pub cfg: AccelConfig,
+    /// Number of simulated accelerators.
+    pub devices: usize,
+    /// Job-sharding strategy.
+    pub sharding: Sharding,
+    cache: Arc<PlanCache>,
+}
+
+impl Fleet {
+    /// Fleet of `devices` accelerators with a fresh plan cache.
+    pub fn new(cfg: AccelConfig, devices: usize) -> Self {
+        Self::with_cache(cfg, devices, Arc::new(PlanCache::new()))
+    }
+
+    /// Fleet over a shared plan cache (e.g. one cache across every
+    /// network of a sweep).
+    pub fn with_cache(cfg: AccelConfig, devices: usize, cache: Arc<PlanCache>) -> Self {
+        assert!(devices >= 1, "a fleet needs at least one device");
+        Self { cfg, devices, sharding: Sharding::LayerParallel, cache }
+    }
+
+    /// Same fleet with a different sharding strategy.
+    pub fn with_sharding(mut self, sharding: Sharding) -> Self {
+        self.sharding = sharding;
+        self
+    }
+
+    /// The shared plan cache (clone of the `Arc`).
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// The job list the fleet will execute for `net` under `mode`,
+    /// after sharding. Ids are reassigned sequentially so aggregation
+    /// stays deterministic.
+    pub fn shard_jobs(&self, net: &Network, mode: Mode) -> Vec<BackpropJob> {
+        let jobs = enumerate_jobs(net, mode);
+        match self.sharding {
+            Sharding::LayerParallel => jobs,
+            Sharding::DataParallel => {
+                // Split as soon as the fleet is wider than the job list
+                // (ceiling division, so 20 devices over 14 jobs already
+                // split), and never below batch 1 per slice.
+                let split = self.devices.div_ceil(jobs.len().max(1));
+                if split == 1 {
+                    return jobs;
+                }
+                let mut sharded = Vec::new();
+                for job in jobs {
+                    let slices = split.min(job.params.b);
+                    let base = job.params.b / slices;
+                    let rem = job.params.b % slices;
+                    for s in 0..slices {
+                        let mut shard = job;
+                        shard.id = sharded.len();
+                        shard.shard = s;
+                        shard.params = job.params.with_batch(base + usize::from(s < rem));
+                        sharded.push(shard);
+                    }
+                }
+                sharded
+            }
+        }
+    }
+
+    /// Execute every (sharded) job of `net` under `mode`.
+    ///
+    /// Metrics are computed in parallel on host threads through the
+    /// shared plan cache; devices are then scheduled deterministically
+    /// in virtual time with work stealing.
+    pub fn run_network(&self, net: &Network, mode: Mode) -> FleetReport {
+        // ---- host-parallel metric computation (plan once per geometry) ----
+        let jobs = self.shard_jobs(net, mode);
+        let mut results = compute_results(jobs, self.cfg, &self.cache, default_workers());
+        results.sort_by_key(|r| r.job.id);
+
+        // ---- deterministic virtual-time device schedule ----
+        let mut deques: StealDeques<JobResult> = StealDeques::new(self.devices);
+        for r in &results {
+            deques.push(r.job.id % self.devices, *r);
+        }
+        let mut clock = vec![0.0f64; self.devices];
+        let mut devices: Vec<DeviceReport> = (0..self.devices)
+            .map(|d| DeviceReport { device: d, ..Default::default() })
+            .collect();
+        while !deques.is_empty() {
+            // The device whose virtual clock is furthest behind asks for
+            // work next (lowest index on ties).
+            let d = (0..self.devices)
+                .min_by(|&a, &b| clock[a].partial_cmp(&clock[b]).expect("finite clocks"))
+                .expect("at least one device");
+            let Some((r, stolen_from)) = deques.pop_or_steal(d) else {
+                break;
+            };
+            clock[d] += r.scaled_cycles;
+            devices[d].jobs += 1;
+            devices[d].busy_cycles += r.scaled_cycles;
+            if stolen_from.is_some() {
+                devices[d].stolen_jobs += 1;
+            }
+        }
+        let makespan_cycles = clock.iter().cloned().fold(0.0, f64::max);
+
+        FleetReport {
+            total: NetworkReport::from_results(net.name, results),
+            devices,
+            makespan_cycles,
+            planning: self.cache.stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Scheduler;
+    use crate::workloads;
+
+    fn assert_reports_bit_equal(a: &NetworkReport, b: &NetworkReport) {
+        assert_eq!(a.loss_cycles, b.loss_cycles);
+        assert_eq!(a.grad_cycles, b.grad_cycles);
+        assert_eq!(a.loss_traffic, b.loss_traffic);
+        assert_eq!(a.grad_traffic, b.grad_traffic);
+        assert_eq!(a.loss_buffer_reads, b.loss_buffer_reads);
+        assert_eq!(a.grad_buffer_reads, b.grad_buffer_reads);
+        assert_eq!(a.storage_bytes, b.storage_bytes);
+        assert_eq!(a.loss_sparsity, b.loss_sparsity);
+        assert_eq!(a.grad_sparsity, b.grad_sparsity);
+        assert_eq!(a.results.len(), b.results.len());
+    }
+
+    #[test]
+    fn one_device_reproduces_scheduler_exactly() {
+        // Acceptance criterion: `fleet --devices 1` == today's
+        // single-accelerator totals, bit for bit, in both modes.
+        let cfg = AccelConfig::default();
+        for net in [workloads::resnet(), workloads::mobilenet()] {
+            for mode in Mode::ALL {
+                let single = Scheduler::new(cfg).run_network(&net, mode);
+                let fleet = Fleet::new(cfg, 1).run_network(&net, mode);
+                assert_reports_bit_equal(&fleet.total, &single);
+                // One device does all the work, steals nothing.
+                assert_eq!(fleet.devices.len(), 1);
+                assert_eq!(fleet.devices[0].jobs, single.results.len());
+                assert_eq!(fleet.stolen_jobs(), 0);
+                assert_eq!(fleet.makespan_cycles, fleet.busy_cycles());
+            }
+        }
+    }
+
+    #[test]
+    fn totals_independent_of_device_count_under_layer_parallelism() {
+        let cfg = AccelConfig::default();
+        let net = workloads::resnet();
+        let base = Fleet::new(cfg, 1).run_network(&net, Mode::BpIm2col);
+        for devices in [2, 3, 4, 8] {
+            let rep = Fleet::new(cfg, devices).run_network(&net, Mode::BpIm2col);
+            assert_reports_bit_equal(&rep.total, &base.total);
+        }
+    }
+
+    #[test]
+    fn makespan_shrinks_with_devices_and_efficiency_bounded() {
+        let cfg = AccelConfig::default();
+        let net = workloads::resnet();
+        let one = Fleet::new(cfg, 1).run_network(&net, Mode::BpIm2col);
+        let four = Fleet::new(cfg, 4).run_network(&net, Mode::BpIm2col);
+        assert!(four.makespan_cycles < one.makespan_cycles);
+        // Makespan can never beat the perfect split or the longest job.
+        let longest = one.total.results.iter().map(|r| r.scaled_cycles).fold(0.0, f64::max);
+        assert!(four.makespan_cycles >= one.busy_cycles() / 4.0 - 1e-6);
+        assert!(four.makespan_cycles >= longest - 1e-6);
+        assert!(four.parallel_efficiency() <= 1.0 + 1e-12);
+        assert!(four.speedup() > 1.0);
+    }
+
+    #[test]
+    fn every_job_executed_exactly_once() {
+        let cfg = AccelConfig::default();
+        let net = workloads::mobilenet();
+        let rep = Fleet::new(cfg, 3).run_network(&net, Mode::Traditional);
+        let total_jobs: usize = rep.devices.iter().map(|d| d.jobs).sum();
+        assert_eq!(total_jobs, net.layers.len() * 2);
+        let busy: f64 = rep.busy_cycles();
+        assert!((busy - (rep.total.loss_cycles + rep.total.grad_cycles)).abs() / busy < 1e-9);
+    }
+
+    #[test]
+    fn fleet_runs_are_deterministic() {
+        let cfg = AccelConfig::default();
+        let net = workloads::resnet();
+        let a = Fleet::new(cfg, 4).run_network(&net, Mode::BpIm2col);
+        let b = Fleet::new(cfg, 4).run_network(&net, Mode::BpIm2col);
+        assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        for (da, db) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(da.jobs, db.jobs);
+            assert_eq!(da.stolen_jobs, db.stolen_jobs);
+            assert_eq!(da.busy_cycles, db.busy_cycles);
+        }
+    }
+
+    #[test]
+    fn data_parallel_with_one_device_degenerates_to_layer_parallel() {
+        let cfg = AccelConfig::default();
+        let net = workloads::resnet();
+        let lp = Fleet::new(cfg, 1).run_network(&net, Mode::BpIm2col);
+        let dp = Fleet::new(cfg, 1).with_sharding(Sharding::DataParallel).run_network(&net, Mode::BpIm2col);
+        assert_reports_bit_equal(&dp.total, &lp.total);
+    }
+
+    #[test]
+    fn data_parallel_splits_as_soon_as_fleet_exceeds_jobs() {
+        // 20 devices over ResNet's 14 jobs: ceiling split = 2, so every
+        // batch-2 job splits (the regime data parallelism exists for).
+        let cfg = AccelConfig::default();
+        let net = workloads::resnet();
+        let fleet = Fleet::new(cfg, 20).with_sharding(Sharding::DataParallel);
+        let jobs = fleet.shard_jobs(&net, Mode::BpIm2col);
+        assert_eq!(jobs.len(), 28);
+        // At or below the job count, nothing splits.
+        let fleet14 = Fleet::new(cfg, 14).with_sharding(Sharding::DataParallel);
+        assert_eq!(fleet14.shard_jobs(&net, Mode::BpIm2col).len(), 14);
+    }
+
+    #[test]
+    fn data_parallel_splits_batches_when_fleet_is_wide() {
+        // ResNet at batch 2 has 14 jobs; 32 devices -> split=2, so every
+        // job splits into its two batch-1 slices.
+        let cfg = AccelConfig::default();
+        let net = workloads::resnet();
+        let fleet = Fleet::new(cfg, 32).with_sharding(Sharding::DataParallel);
+        let jobs = fleet.shard_jobs(&net, Mode::BpIm2col);
+        assert_eq!(jobs.len(), 28);
+        assert!(jobs.iter().all(|j| j.params.b == 1));
+        // Ids stay sequential for deterministic aggregation.
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+        }
+        // And the sharded run still executes everything exactly once.
+        let rep = fleet.run_network(&net, Mode::BpIm2col);
+        assert_eq!(rep.total.results.len(), 28);
+        let total_jobs: usize = rep.devices.iter().map(|d| d.jobs).sum();
+        assert_eq!(total_jobs, 28);
+    }
+
+    #[test]
+    fn data_parallel_storage_counts_every_slice() {
+        // Each batch slice stages its own zero-spaced copy on its own
+        // device, and the baseline's staging is exactly linear in batch:
+        // two batch-1 slices must sum to the batch-2 staging, not halve
+        // it (the per-layer max only spans a slice's own loss/grad).
+        let cfg = AccelConfig::default();
+        let net = workloads::resnet();
+        let whole = Fleet::new(cfg, 1).run_network(&net, Mode::Traditional);
+        let sliced = Fleet::new(cfg, 32)
+            .with_sharding(Sharding::DataParallel)
+            .run_network(&net, Mode::Traditional);
+        assert_eq!(sliced.total.storage_bytes, whole.total.storage_bytes);
+    }
+
+    #[test]
+    fn shared_cache_amortizes_planning_across_networks() {
+        let cfg = AccelConfig::default();
+        let cache = Arc::new(PlanCache::new());
+        // ResNet and ResNeXt share their conv1 stem geometry.
+        Fleet::with_cache(cfg, 2, Arc::clone(&cache)).run_network(&workloads::resnet(), Mode::BpIm2col);
+        let after_first = cache.stats();
+        Fleet::with_cache(cfg, 2, Arc::clone(&cache)).run_network(&workloads::resnext(), Mode::BpIm2col);
+        let after_second = cache.stats();
+        assert!(after_second.hits > after_first.hits, "stem plans must be reused");
+    }
+}

@@ -3,6 +3,7 @@
 use crate::accel::PassMetrics;
 use crate::conv::ConvParams;
 use crate::im2col::pipeline::{Mode, Pass};
+use crate::workloads::Network;
 
 /// One backpropagation pass of one layer instance, to be executed on a
 /// simulated accelerator in a given im2col mode.
@@ -26,12 +27,44 @@ pub struct BackpropJob {
     pub mode: Mode,
     /// Multiplicity (depthwise convs run `count` identical instances).
     pub count: usize,
+    /// Batch-slice index under data-parallel sharding (0 for whole
+    /// jobs). A layer's loss and grad jobs of the *same* slice share
+    /// reorg staging; different slices stage on different devices, so
+    /// storage aggregates per `(layer_idx, shard)`.
+    pub shard: usize,
+}
+
+/// Enumerate the backward-pass jobs of a network under `mode`: one loss
+/// and one gradient job per layer, ids assigned in layer order. Both the
+/// [`crate::coordinator::Scheduler`] and the [`crate::coordinator::Fleet`]
+/// schedule exactly this job list, which is what makes their aggregated
+/// totals bit-identical.
+pub fn enumerate_jobs(net: &Network, mode: Mode) -> Vec<BackpropJob> {
+    let mut jobs = Vec::new();
+    for (layer_idx, l) in net.layers.iter().enumerate() {
+        for pass in Pass::ALL {
+            jobs.push(BackpropJob {
+                id: jobs.len(),
+                layer_idx,
+                network: net.name,
+                layer: l.name,
+                params: l.params,
+                pass,
+                mode,
+                count: l.count,
+                shard: 0,
+            });
+        }
+    }
+    jobs
 }
 
 /// A finished job with its metrics (already scaled by `count`).
 #[derive(Clone, Copy, Debug)]
 pub struct JobResult {
+    /// The job that produced these metrics.
     pub job: BackpropJob,
+    /// Raw single-instance metrics from the analytic engine.
     pub metrics: PassMetrics,
     /// Total cycles including multiplicity.
     pub scaled_cycles: f64,
@@ -71,7 +104,7 @@ mod tests {
         let m = simulate_pass(Pass::Grad, Mode::BpIm2col, &p, &AccelConfig::default());
         let job1 = BackpropJob {
             id: 0, layer_idx: 0, network: "t", layer: "dw", params: p,
-            pass: Pass::Grad, mode: Mode::BpIm2col, count: 1,
+            pass: Pass::Grad, mode: Mode::BpIm2col, count: 1, shard: 0,
         };
         let job64 = BackpropJob { count: 64, ..job1 };
         let r1 = JobResult::from_metrics(job1, m);
@@ -86,7 +119,7 @@ mod tests {
         let cfg = AccelConfig::default();
         let mk = |pass| BackpropJob {
             id: 0, layer_idx: 0, network: "t", layer: "l", params: p,
-            pass, mode: Mode::Traditional, count: 1,
+            pass, mode: Mode::Traditional, count: 1, shard: 0,
         };
         let loss = JobResult::from_metrics(mk(Pass::Loss), simulate_pass(Pass::Loss, Mode::Traditional, &p, &cfg));
         let grad = JobResult::from_metrics(mk(Pass::Grad), simulate_pass(Pass::Grad, Mode::Traditional, &p, &cfg));

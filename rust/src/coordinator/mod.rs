@@ -5,20 +5,28 @@
 //!
 //! * [`job`] — per-layer backpropagation jobs (loss / gradient passes)
 //!   and their results.
-//! * [`queue`] — a blocking work queue feeding worker threads (one per
-//!   simulated accelerator instance).
+//! * [`queue`] — a blocking work queue feeding worker threads, plus the
+//!   work-stealing deques behind the fleet's device scheduler.
 //! * [`scheduler`] — fans a network's backward pass out over workers and
 //!   aggregates `PassMetrics` into per-network reports (Figs. 6–8).
+//!   Workers share a memoized plan cache (`accel::plan`), so repeated
+//!   layer geometries are planned once.
+//! * [`fleet`] — shards a network's backward pass across `N` simulated
+//!   accelerators (layer-parallel with work stealing, optionally
+//!   data-parallel over the batch) and reports per-device and
+//!   fleet-wide metrics.
 //! * [`trainer`] — the end-to-end driver: executes the AOT `train_step`
 //!   HLO (Pallas BP-im2col backward inside) on the PJRT runtime, owns
 //!   the parameter state, generates the synthetic data stream, and logs
 //!   the loss curve alongside simulated accelerator cycles per step.
 
+pub mod fleet;
 pub mod job;
 pub mod queue;
 pub mod scheduler;
 pub mod trainer;
 
+pub use fleet::{DeviceReport, Fleet, FleetReport, Sharding};
 pub use job::{BackpropJob, JobResult};
 pub use scheduler::{NetworkReport, Scheduler};
 #[cfg(feature = "pjrt")]

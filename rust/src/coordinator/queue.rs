@@ -1,4 +1,10 @@
-//! Blocking MPMC work queue (std-only; the offline image has no tokio).
+//! Work distribution structures (std-only; the offline image has no
+//! tokio or crossbeam):
+//!
+//! * [`WorkQueue`] — a blocking MPMC queue feeding the host-side worker
+//!   threads that compute job metrics in parallel.
+//! * [`StealDeques`] — per-device deques with work-stealing, used by the
+//!   fleet's deterministic virtual-time device scheduler.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -27,6 +33,7 @@ impl<T> Default for WorkQueue<T> {
 }
 
 impl<T> WorkQueue<T> {
+    /// Empty open queue.
     pub fn new() -> Self {
         Self {
             inner: Arc::new((Mutex::new(QueueState { items: VecDeque::new(), closed: false }), Condvar::new())),
@@ -70,8 +77,74 @@ impl<T> WorkQueue<T> {
         self.inner.0.lock().expect("queue poisoned").items.len()
     }
 
+    /// True when nothing is currently queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+/// Per-worker deques with work-stealing semantics, in the classic
+/// owner-front / thief-back arrangement: a worker pops its own queue
+/// from the front (FIFO over its assigned work) and, when empty, steals
+/// from the *back* of the most loaded other deque.
+///
+/// This is a plain data structure, not a concurrent one: the fleet's
+/// device scheduler drives it single-threaded in virtual time, which
+/// keeps device assignment — and therefore per-device reports and the
+/// makespan — fully deterministic. (Host-side parallelism uses
+/// [`WorkQueue`]; determinism of the *aggregated* totals never depends
+/// on either structure because results are re-sorted by job id.)
+#[derive(Clone, Debug)]
+pub struct StealDeques<T> {
+    deques: Vec<VecDeque<T>>,
+}
+
+impl<T> StealDeques<T> {
+    /// One empty deque per worker.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "at least one worker");
+        Self { deques: (0..workers).map(|_| VecDeque::new()).collect() }
+    }
+
+    /// Number of worker deques.
+    pub fn workers(&self) -> usize {
+        self.deques.len()
+    }
+
+    /// Append `item` to `worker`'s own deque.
+    pub fn push(&mut self, worker: usize, item: T) {
+        self.deques[worker].push_back(item);
+    }
+
+    /// Items currently queued for `worker`.
+    pub fn len(&self, worker: usize) -> usize {
+        self.deques[worker].len()
+    }
+
+    /// Items queued across all workers.
+    pub fn total_len(&self) -> usize {
+        self.deques.iter().map(VecDeque::len).sum()
+    }
+
+    /// True when every deque is empty.
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Pop the next item for `worker`: the front of its own deque, or —
+    /// when that is empty — the back of the most loaded other deque
+    /// (highest-index deque on ties; any fixed rule keeps the schedule
+    /// deterministic). Returns the item and, for a steal, the victim's
+    /// index. `None` only when every deque is empty.
+    pub fn pop_or_steal(&mut self, worker: usize) -> Option<(T, Option<usize>)> {
+        if let Some(item) = self.deques[worker].pop_front() {
+            return Some((item, None));
+        }
+        let victim = (0..self.deques.len())
+            .filter(|&i| i != worker && !self.deques[i].is_empty())
+            .max_by_key(|&i| self.deques[i].len())?;
+        let item = self.deques[victim].pop_back().expect("victim checked non-empty");
+        Some((item, Some(victim)))
     }
 }
 
@@ -122,5 +195,47 @@ mod tests {
         thread::sleep(std::time::Duration::from_millis(20));
         q.push(42);
         assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn steal_deques_local_pops_are_fifo() {
+        let mut d = StealDeques::new(2);
+        d.push(0, 'a');
+        d.push(0, 'b');
+        assert_eq!(d.pop_or_steal(0), Some(('a', None)));
+        assert_eq!(d.pop_or_steal(0), Some(('b', None)));
+        assert_eq!(d.pop_or_steal(0), None);
+    }
+
+    #[test]
+    fn steal_takes_back_of_most_loaded_victim() {
+        let mut d = StealDeques::new(3);
+        d.push(0, 1);
+        d.push(1, 2);
+        d.push(1, 3);
+        d.push(1, 4);
+        // Worker 2 is empty: steals from worker 1 (3 items), from the back.
+        assert_eq!(d.pop_or_steal(2), Some((4, Some(1))));
+        // Worker 1 still owns its front.
+        assert_eq!(d.pop_or_steal(1), Some((2, None)));
+        assert_eq!(d.total_len(), 2);
+    }
+
+    #[test]
+    fn steal_drains_everything_exactly_once() {
+        let mut d = StealDeques::new(4);
+        for i in 0..100 {
+            d.push(i % 4, i);
+        }
+        let mut got = Vec::new();
+        // Worker 3 never gets scheduled; the others drain it by stealing.
+        let mut w = 0;
+        while let Some((item, _)) = d.pop_or_steal(w % 3) {
+            got.push(item);
+            w += 1;
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+        assert!(d.is_empty());
     }
 }

@@ -1,9 +1,11 @@
 //! Fan a network's backward pass out over simulated accelerators.
 
+use std::sync::Arc;
 use std::thread;
 
-use crate::accel::{simulate_pass, AccelConfig};
-use crate::coordinator::job::{BackpropJob, JobResult};
+use crate::accel::plan::PlanCache;
+use crate::accel::AccelConfig;
+use crate::coordinator::job::{enumerate_jobs, BackpropJob, JobResult};
 use crate::coordinator::queue::WorkQueue;
 use crate::im2col::pipeline::{Mode, Pass};
 use crate::workloads::Network;
@@ -11,17 +13,19 @@ use crate::workloads::Network;
 /// Aggregated metrics of one network under one mode.
 #[derive(Clone, Debug, Default)]
 pub struct NetworkReport {
+    /// Name of the aggregated network.
     pub network: String,
     /// Total cycles of all loss-calculation jobs.
     pub loss_cycles: f64,
     /// Total cycles of all gradient-calculation jobs.
     pub grad_cycles: f64,
-    /// Total off-chip bytes, per pass.
+    /// Total off-chip bytes during the loss passes.
     pub loss_traffic: u64,
+    /// Total off-chip bytes during the gradient passes.
     pub grad_traffic: u64,
-    /// Buffer-B reads during loss calc / buffer-A reads during grad calc
-    /// (the Fig. 8 axes).
+    /// Buffer-B reads during loss calc (a Fig. 8 axis).
     pub loss_buffer_reads: u64,
+    /// Buffer-A reads during grad calc (the other Fig. 8 axis).
     pub grad_buffer_reads: u64,
     /// Additional storage (zero-spaced copies / mask staging), counted
     /// **once per layer**: the loss and gradient passes stage their
@@ -29,8 +33,9 @@ pub struct NetworkReport {
     /// layer's overhead is the larger of the two passes — not their sum
     /// (the paper's Table-III-style storage comparison is per layer).
     pub storage_bytes: u64,
-    /// Work-weighted average sparsity per pass (Fig. 8's second series).
+    /// Work-weighted average loss-pass sparsity (Fig. 8's second series).
     pub loss_sparsity: f64,
+    /// Work-weighted average grad-pass sparsity.
     pub grad_sparsity: f64,
     /// Job results, sorted by job id (deterministic regardless of
     /// worker scheduling).
@@ -38,106 +43,26 @@ pub struct NetworkReport {
 }
 
 impl NetworkReport {
-    pub fn pass_cycles(&self, pass: Pass) -> f64 {
-        match pass {
-            Pass::Loss => self.loss_cycles,
-            Pass::Grad => self.grad_cycles,
-        }
-    }
-
-    pub fn pass_traffic(&self, pass: Pass) -> u64 {
-        match pass {
-            Pass::Loss => self.loss_traffic,
-            Pass::Grad => self.grad_traffic,
-        }
-    }
-
-    pub fn pass_buffer_reads(&self, pass: Pass) -> u64 {
-        match pass {
-            Pass::Loss => self.loss_buffer_reads,
-            Pass::Grad => self.grad_buffer_reads,
-        }
-    }
-
-    pub fn pass_sparsity(&self, pass: Pass) -> f64 {
-        match pass {
-            Pass::Loss => self.loss_sparsity,
-            Pass::Grad => self.grad_sparsity,
-        }
-    }
-}
-
-/// Multi-worker scheduler over simulated accelerator instances.
-pub struct Scheduler {
-    pub cfg: AccelConfig,
-    pub workers: usize,
-}
-
-impl Scheduler {
-    pub fn new(cfg: AccelConfig) -> Self {
-        let workers = thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4);
-        Self { cfg, workers }
-    }
-
-    /// Enumerate the backward-pass jobs of a network under `mode`.
-    pub fn jobs_for(&self, net: &Network, mode: Mode) -> Vec<BackpropJob> {
-        let mut jobs = Vec::new();
-        for (layer_idx, l) in net.layers.iter().enumerate() {
-            for pass in Pass::ALL {
-                jobs.push(BackpropJob {
-                    id: jobs.len(),
-                    layer_idx,
-                    network: net.name,
-                    layer: l.name,
-                    params: l.params,
-                    pass,
-                    mode,
-                    count: l.count,
-                });
-            }
-        }
-        jobs
-    }
-
-    /// Run every job of `net` under `mode` across the worker pool and
-    /// aggregate.
-    pub fn run_network(&self, net: &Network, mode: Mode) -> NetworkReport {
-        let queue: WorkQueue<BackpropJob> = WorkQueue::new();
-        for job in self.jobs_for(net, mode) {
-            queue.push(job);
-        }
-        queue.close();
-
-        let cfg = self.cfg;
-        let handles: Vec<_> = (0..self.workers)
-            .map(|_| {
-                let q = queue.clone();
-                thread::spawn(move || {
-                    let mut results = Vec::new();
-                    while let Some(job) = q.pop() {
-                        let m = simulate_pass(job.pass, job.mode, &job.params, &cfg);
-                        results.push(JobResult::from_metrics(job, m));
-                    }
-                    results
-                })
-            })
-            .collect();
-
-        // Collect every worker's results first, then sort by job id
-        // BEFORE summing: f64 accumulation order would otherwise depend
-        // on thread-completion order and make parallel runs differ from
-        // sequential ones in the last bits.
-        let mut results: Vec<JobResult> = Vec::new();
-        for h in handles {
-            results.extend(h.join().expect("worker panicked"));
-        }
+    /// Aggregate raw job results into a report.
+    ///
+    /// Results are sorted by job id BEFORE summing, so the f64
+    /// accumulation order — and therefore every total, bit for bit — is
+    /// independent of which worker thread or fleet device produced each
+    /// result. The [`Scheduler`] and [`crate::coordinator::Fleet`] both
+    /// aggregate through this one function; that is what makes a
+    /// one-device fleet reproduce the scheduler's totals exactly.
+    pub fn from_results(network: &str, mut results: Vec<JobResult>) -> Self {
         results.sort_by_key(|r| r.job.id);
 
-        let mut report = NetworkReport { network: net.name.to_string(), ..Default::default() };
+        let mut report = NetworkReport { network: network.to_string(), ..Default::default() };
         let mut loss_weight = 0.0;
         let mut grad_weight = 0.0;
-        // Per-layer storage maximum, keyed by the job's layer index.
-        let mut layer_storage: Vec<u64> = Vec::new();
+        // Per-layer storage maximum. Keyed by (layer index, batch-slice
+        // index): a slice's loss and grad passes share one staging
+        // buffer (max, not sum), but different data-parallel slices
+        // stage on different devices and each contribute their own.
+        let mut layer_storage: std::collections::HashMap<(usize, usize), u64> =
+            std::collections::HashMap::new();
         for r in results {
             match r.job.pass {
                 Pass::Loss => {
@@ -157,15 +82,12 @@ impl Scheduler {
                     grad_weight += w;
                 }
             }
-            let layer_idx = r.job.layer_idx;
-            if layer_storage.len() <= layer_idx {
-                layer_storage.resize(layer_idx + 1, 0);
-            }
-            layer_storage[layer_idx] = layer_storage[layer_idx]
-                .max(r.metrics.storage_overhead_bytes * r.job.count as u64);
+            let slot = layer_storage.entry((r.job.layer_idx, r.job.shard)).or_insert(0);
+            *slot = (*slot).max(r.metrics.storage_overhead_bytes * r.job.count as u64);
             report.results.push(r);
         }
-        report.storage_bytes = layer_storage.iter().sum();
+        // u64 sum: iteration order of the map cannot perturb the total.
+        report.storage_bytes = layer_storage.values().sum();
         if loss_weight > 0.0 {
             report.loss_sparsity /= loss_weight;
         }
@@ -174,11 +96,154 @@ impl Scheduler {
         }
         report
     }
+
+    /// Total cycles of the given pass.
+    pub fn pass_cycles(&self, pass: Pass) -> f64 {
+        match pass {
+            Pass::Loss => self.loss_cycles,
+            Pass::Grad => self.grad_cycles,
+        }
+    }
+
+    /// Total off-chip bytes of the given pass.
+    pub fn pass_traffic(&self, pass: Pass) -> u64 {
+        match pass {
+            Pass::Loss => self.loss_traffic,
+            Pass::Grad => self.grad_traffic,
+        }
+    }
+
+    /// On-chip buffer reads of the given pass (B for loss, A for grad).
+    pub fn pass_buffer_reads(&self, pass: Pass) -> u64 {
+        match pass {
+            Pass::Loss => self.loss_buffer_reads,
+            Pass::Grad => self.grad_buffer_reads,
+        }
+    }
+
+    /// Work-weighted average sparsity of the given pass.
+    pub fn pass_sparsity(&self, pass: Pass) -> f64 {
+        match pass {
+            Pass::Loss => self.loss_sparsity,
+            Pass::Grad => self.grad_sparsity,
+        }
+    }
+}
+
+/// Compute every job's metrics on a pool of `workers` host threads
+/// sharing `cache`, returning results in arbitrary order (aggregation
+/// re-sorts by job id). The single home of the worker-pool pattern,
+/// used by both the [`Scheduler`] and the [`crate::coordinator::Fleet`].
+pub(crate) fn compute_results(
+    jobs: Vec<BackpropJob>,
+    cfg: AccelConfig,
+    cache: &Arc<PlanCache>,
+    workers: usize,
+) -> Vec<JobResult> {
+    let queue: WorkQueue<BackpropJob> = WorkQueue::new();
+    for job in jobs {
+        queue.push(job);
+    }
+    queue.close();
+
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let q = queue.clone();
+            let cache = Arc::clone(cache);
+            thread::spawn(move || {
+                let mut results = Vec::new();
+                while let Some(job) = q.pop() {
+                    let m = cache.metrics(job.pass, job.mode, &job.params, &cfg);
+                    results.push(JobResult::from_metrics(job, m));
+                }
+                results
+            })
+        })
+        .collect();
+
+    let mut results: Vec<JobResult> = Vec::new();
+    for h in handles {
+        results.extend(h.join().expect("metrics worker panicked"));
+    }
+    results
+}
+
+/// Default host worker count: one per core, capped at 8.
+pub(crate) fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4)
+}
+
+/// Multi-worker scheduler over simulated accelerator instances.
+///
+/// Workers share one [`PlanCache`]: the first job of a given
+/// `(layer, pass, mode)` plans the lowering, every later job — in this
+/// network or the next `run_network` call — reuses it.
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::accel::AccelConfig;
+/// use bp_im2col::coordinator::Scheduler;
+/// use bp_im2col::im2col::pipeline::Mode;
+/// use bp_im2col::workloads::{Network, WorkloadLayer};
+/// use bp_im2col::ConvParams;
+///
+/// let net = Network {
+///     name: "demo",
+///     layers: vec![WorkloadLayer {
+///         name: "conv1",
+///         params: ConvParams::square(56, 64, 64, 3, 2, 1),
+///         count: 1,
+///     }],
+/// };
+/// let sched = Scheduler::new(AccelConfig::default());
+/// let report = sched.run_network(&net, Mode::BpIm2col);
+/// assert_eq!(report.results.len(), 2); // one loss + one grad job
+/// assert!(report.loss_cycles > 0.0 && report.grad_cycles > 0.0);
+/// ```
+pub struct Scheduler {
+    /// Accelerator configuration every job is simulated under.
+    pub cfg: AccelConfig,
+    /// Host worker threads computing job metrics in parallel.
+    pub workers: usize,
+    cache: Arc<PlanCache>,
+}
+
+impl Scheduler {
+    /// Scheduler with its own fresh plan cache.
+    pub fn new(cfg: AccelConfig) -> Self {
+        Self::with_cache(cfg, Arc::new(PlanCache::new()))
+    }
+
+    /// Scheduler over a shared plan cache (e.g. one cache across every
+    /// network of a report sweep, or shared with a
+    /// [`crate::coordinator::Fleet`]).
+    pub fn with_cache(cfg: AccelConfig, cache: Arc<PlanCache>) -> Self {
+        Self { cfg, workers: default_workers(), cache }
+    }
+
+    /// The shared plan cache (clone of the `Arc`).
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// Enumerate the backward-pass jobs of a network under `mode`.
+    pub fn jobs_for(&self, net: &Network, mode: Mode) -> Vec<BackpropJob> {
+        enumerate_jobs(net, mode)
+    }
+
+    /// Run every job of `net` under `mode` across the worker pool and
+    /// aggregate.
+    pub fn run_network(&self, net: &Network, mode: Mode) -> NetworkReport {
+        let results = compute_results(self.jobs_for(net, mode), self.cfg, &self.cache, self.workers);
+        NetworkReport::from_results(net.name, results)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::simulate_pass;
     use crate::workloads;
 
     #[test]
@@ -202,6 +267,44 @@ mod tests {
         for (i, r) in par.results.iter().enumerate() {
             assert_eq!(r.job.id, i);
         }
+    }
+
+    #[test]
+    fn plan_cache_populated_and_hit_across_runs() {
+        let net = workloads::resnet();
+        let s = Scheduler::new(AccelConfig::default());
+        let first = s.run_network(&net, Mode::BpIm2col);
+        let after_first = s.plan_cache().stats();
+        // ResNet has 7 distinct layers x 2 passes = 14 distinct plans.
+        assert_eq!(after_first.entries, 14);
+        let second = s.run_network(&net, Mode::BpIm2col);
+        let after_second = s.plan_cache().stats();
+        // The replay added no entries and planned nothing new.
+        assert_eq!(after_second.entries, 14);
+        assert_eq!(after_second.misses, after_first.misses);
+        assert!(after_second.hits >= after_first.hits + 14);
+        // And produced the bit-identical report.
+        assert_eq!(first.loss_cycles, second.loss_cycles);
+        assert_eq!(first.grad_cycles, second.grad_cycles);
+        assert_eq!(first.loss_traffic, second.loss_traffic);
+    }
+
+    #[test]
+    fn cached_scheduler_matches_cold_simulate_pass_sums() {
+        // The memoized path must reproduce cold per-job simulation sums.
+        let net = workloads::mobilenet();
+        let s = Scheduler::new(AccelConfig::default());
+        let rep = s.run_network(&net, Mode::BpIm2col);
+        let mut loss = 0.0;
+        let mut grad = 0.0;
+        for l in &net.layers {
+            let lo = simulate_pass(Pass::Loss, Mode::BpIm2col, &l.params, &s.cfg);
+            let gr = simulate_pass(Pass::Grad, Mode::BpIm2col, &l.params, &s.cfg);
+            loss += lo.total_cycles() * l.count as f64;
+            grad += gr.total_cycles() * l.count as f64;
+        }
+        assert_eq!(rep.loss_cycles, loss);
+        assert_eq!(rep.grad_cycles, grad);
     }
 
     #[test]

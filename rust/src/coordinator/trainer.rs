@@ -6,9 +6,10 @@
 //! and — in parallel — asks the accelerator model what each step costs
 //! on the simulated hardware in both im2col modes.
 //!
-//! The PJRT-executing [`Trainer`] requires the `pjrt` feature (the `xla`
-//! crate); the model geometry, parameter state and synthetic data stream
-//! are dependency-free and always available.
+//! The PJRT-executing `Trainer` requires the `pjrt` feature (the `xla`
+//! crate) and is absent from default builds; the model geometry,
+//! parameter state and synthetic data stream are dependency-free and
+//! always available.
 
 #[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
@@ -22,8 +23,10 @@ use crate::im2col::pipeline::Mode;
 use crate::runtime::{literal_f32, literal_i32, LoadedModel, Runtime};
 use crate::tensor::Rng;
 
-/// The model geometry baked into `python/compile/model.py`.
+/// Training batch size (the model geometry baked into
+/// `python/compile/model.py`).
 pub const BATCH: usize = 8;
+/// Classification classes of the synthetic task.
 pub const NUM_CLASSES: usize = 10;
 /// conv1: 1->8, 16x16 -> 8x8, stride 2.
 pub const P1: ConvParams =
@@ -31,12 +34,15 @@ pub const P1: ConvParams =
 /// conv2: 8->16, 8x8 -> 4x4, stride 2.
 pub const P2: ConvParams =
     ConvParams::basic(BATCH, 8, 8, 8, 16, 3, 3, 2, 1, 1);
+/// Flattened feature count feeding the dense head (16 x 4 x 4).
 pub const DENSE_IN: usize = 256;
 
 /// Training-run configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
+    /// Training steps to run.
     pub steps: usize,
+    /// Seed of the parameter init and the synthetic data stream.
     pub seed: u64,
     /// Log the loss every `log_every` steps (0 = silent).
     pub log_every: usize,
@@ -53,12 +59,14 @@ impl Default for TrainConfig {
 pub struct TrainStats {
     /// Loss after every step.
     pub losses: Vec<f32>,
-    /// Mean loss over the first and last 10 % of steps.
+    /// Mean loss over the first 10 % of steps.
     pub initial_loss: f32,
+    /// Mean loss over the last 10 % of steps.
     pub final_loss: f32,
     /// Simulated accelerator cycles per training step (backprop of both
-    /// conv layers) under each mode.
+    /// conv layers) under the traditional baseline.
     pub sim_cycles_traditional: f64,
+    /// Simulated per-step cycles under BP-im2col.
     pub sim_cycles_bp: f64,
     /// Wall-clock seconds of the whole loop (PJRT execution).
     pub wall_seconds: f64,
@@ -66,9 +74,13 @@ pub struct TrainStats {
 
 /// Parameter state (flat f32 buffers matching the artifact signature).
 pub struct ParamState {
+    /// conv1 kernel, `[8, 1, 3, 3]` flattened.
     pub w1: Vec<f32>,
+    /// conv2 kernel, `[16, 8, 3, 3]` flattened.
     pub w2: Vec<f32>,
+    /// Dense head weights, `[DENSE_IN, NUM_CLASSES]` flattened.
     pub wd: Vec<f32>,
+    /// Dense head bias, `[NUM_CLASSES]`.
     pub bd: Vec<f32>,
 }
 

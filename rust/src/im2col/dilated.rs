@@ -21,8 +21,9 @@ pub struct VirtualPixelA {
     pub n: usize,
     /// Batch index.
     pub b: usize,
-    /// Position inside the virtual zero-inserted `Ho'' x Wo''` channel.
+    /// Row inside the virtual zero-inserted `Ho'' x Wo''` channel.
     pub h: usize,
+    /// Column inside the virtual zero-inserted channel.
     pub w: usize,
 }
 
@@ -84,6 +85,7 @@ pub struct AddrGen<'a> {
 }
 
 impl<'a> AddrGen<'a> {
+    /// Streaming generator over group `g`'s virtual dynamic matrix.
     pub fn new(p: &'a ConvParams, g: usize) -> Self {
         assert!(g < p.groups);
         Self { p, n_abs: g * p.ng(), row: 0, b: 0, h: 0, w: 0 }

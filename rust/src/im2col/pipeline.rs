@@ -42,8 +42,10 @@ pub enum Pass {
 }
 
 impl Pass {
+    /// Both passes, loss first (the order the figures report).
     pub const ALL: [Pass; 2] = [Pass::Loss, Pass::Grad];
 
+    /// Short lowercase name ("loss" / "grad").
     pub fn name(&self) -> &'static str {
         match self {
             Pass::Loss => "loss",

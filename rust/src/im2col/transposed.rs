@@ -22,10 +22,12 @@ pub struct VirtualPixelB {
     pub b: usize,
     /// Output-channel index *within the group* (from the row).
     pub n: usize,
-    /// Row/column inside the virtual `Ho''' x Wo'''` zero-spaced channel.
+    /// Row inside the virtual `Ho''' x Wo'''` zero-spaced channel.
     /// May exceed `Ho'''-1` when the forward floor-division is inexact;
     /// such pixels are always structural zeros.
     pub h: usize,
+    /// Column inside the virtual zero-spaced channel (same caveat as
+    /// `h`).
     pub w: usize,
 }
 
@@ -107,6 +109,7 @@ pub struct AddrGen<'a> {
 }
 
 impl<'a> AddrGen<'a> {
+    /// Streaming generator over group `g`'s virtual stationary matrix.
     pub fn new(p: &'a ConvParams, g: usize) -> Self {
         assert!(g < p.groups);
         Self {

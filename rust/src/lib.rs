@@ -35,12 +35,22 @@
 //!   §2–§3).
 //! * [`coordinator`] — the training-job coordinator: queues per-layer
 //!   backprop jobs, tiles them onto the accelerator, gathers metrics.
+//!   Since coordinator v2 it plans each layer geometry **once** through
+//!   a memoized plan cache (`accel::plan`) and can shard a backward
+//!   pass across a **fleet** of simulated accelerators with work
+//!   stealing (`coordinator::fleet`) — DESIGN.md §8.
 //! * `runtime` — PJRT (xla crate) wrapper that loads the AOT-lowered
 //!   JAX/Pallas HLO artifacts and runs them on the request path
 //!   (behind the `pjrt` feature; the default build has no external
 //!   dependencies).
 //! * [`area`] — ASAP7-calibrated structural area model (Table IV).
 //! * [`report`] — regenerates every table and figure of the paper.
+//!
+//! See the top-level `README.md` for a quickstart and the full CLI
+//! command table, `DESIGN.md` for modeling decisions, and
+//! `EXPERIMENTS.md` for measured results and deltas vs the paper.
+
+#![warn(missing_docs)]
 
 pub mod accel;
 pub mod area;

@@ -33,12 +33,28 @@ COMMANDS:
   fig8                  On-chip buffer bandwidth + sparsity per network
   sparsity              Lowered-matrix sparsity of every workload layer
   storage               Additional-storage overhead per network
-  sim --layer H/C/N/K/S/P[/G[/D]]   Simulate one layer in both modes
-                        (optional channel groups G and kernel dilation D)
+  sim --layer <SPEC>    Simulate one layer in both modes (spec below)
   traincost             Full training-step cost (fwd+loss+grad) per network
-  train [--steps N]     End-to-end training via the AOT HLO artifacts
-                        (requires the `pjrt` build feature)
+  fleet                 Backward-pass sharding across N simulated
+                        accelerators (makespan, efficiency, plan cache)
+  train [--steps N]     End-to-end training via the AOT HLO artifacts.
+                        NOTE: requires the `pjrt` build feature — uncomment
+                        the xla/anyhow [dependencies] in rust/Cargo.toml and
+                        build with `--features pjrt`
   all                   Every table and figure, in order
+
+LAYER SPEC (sim --layer):
+  H/C/N/K/S/P[/G[/D]]   H input size, C in-channels, N out-channels,
+                        K kernel, S stride, P padding — the paper's
+                        Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw) notation. Optional:
+                        G channel groups, D kernel dilation. S and D also
+                        accept asymmetric `HxW` forms (e.g. S=2x1), and
+                        G/D may be tagged in any order as `gG` / `dD`.
+  examples:
+    repro sim --layer 224/3/64/3/2/0          (Table II row 1)
+    repro sim --layer 56/128/128/3/2/1/g32    (ResNeXt-style, 32 groups)
+    repro sim --layer 28/256/256/3/1/2/d2     (DeepLab-style, dilation 2)
+    repro sim --layer 56/64/64/3/2x1/1        (asymmetric stride)
 
 OPTIONS:
   --config <file.cfg>         Platform preset (see configs/)
@@ -46,6 +62,12 @@ OPTIONS:
   --csv                       Emit CSV instead of rendered tables (figs)
   --pass loss|grad            Restrict fig6/7/8 to one pass
   --extended                  Include the dilated/grouped workload networks
+  --devices N                 Shard fig6/7/8/traincost/fleet backward
+                              passes across N simulated accelerators
+                              (fleet default 4; totals are bit-identical
+                              for any N, the fleet summary shows scaling;
+                              suppressed under --csv on figure commands —
+                              use `fleet --csv` for machine-readable rows)
   --steps N                   Training steps (train; default 300)
   --seed N                    Training seed (train; default 0)
 ";
@@ -133,6 +155,41 @@ fn accel_config(opts: &Opts) -> Result<AccelConfig, String> {
     Ok(cfg)
 }
 
+/// Parse `--devices N` (None when absent).
+fn devices(opts: &Opts) -> Result<Option<usize>, String> {
+    match opts.value("--devices") {
+        None => Ok(None),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| format!("bad --devices {v:?}"))?;
+            if n == 0 {
+                return Err("--devices must be >= 1".into());
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
+/// Print the fleet-scaling summary for the given networks.
+fn print_fleet_summary_for(
+    nets: &[workloads::Network],
+    cfg: &AccelConfig,
+    opts: &Opts,
+    n_devices: usize,
+) -> Result<(), String> {
+    let (bars, planning) = report::fleet_summary(nets, cfg, Mode::BpIm2col, n_devices);
+    if opts.flag("--csv") {
+        print!("{}", report::fleet_to_csv(&bars));
+    } else {
+        println!("{}", report::render_fleet(n_devices, &bars, &planning));
+    }
+    Ok(())
+}
+
+/// Print the fleet-scaling summary for the `--extended`-selected set.
+fn print_fleet_summary(cfg: &AccelConfig, opts: &Opts, n_devices: usize) -> Result<(), String> {
+    print_fleet_summary_for(&networks(opts), cfg, opts, n_devices)
+}
+
 fn passes(opts: &Opts) -> Result<Vec<Pass>, String> {
     match opts.value("--pass") {
         None => Ok(vec![Pass::Loss, Pass::Grad]),
@@ -180,11 +237,23 @@ fn cmd_fig(which: u8, cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
             println!("{}", report::render_bars(&title, &bars, with_sparsity));
         }
     }
+    // With --devices N the same backward passes shard across a fleet;
+    // totals are bit-identical, the summary shows the scaling. Under
+    // --csv the summary is suppressed so stdout stays one parseable CSV
+    // document — use `repro fleet --csv` for machine-readable scaling.
+    if let Some(n) = devices(opts)? {
+        if !opts.flag("--csv") {
+            print_fleet_summary(cfg, opts, n)?;
+        }
+    }
     Ok(())
 }
 
 fn cmd_sim(cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
-    let spec = opts.value("--layer").ok_or("sim requires --layer H/C/N/K/S/P")?;
+    let spec = opts.value("--layer").ok_or(
+        "sim requires --layer H/C/N/K/S/P[/G[/D]] \
+         (e.g. --layer 56/128/128/3/2/1/g32; see `repro help`)",
+    )?;
     let p = parse_layer(spec)?;
     println!("layer {} (batch {}):", p.id(), p.b);
     for pass in Pass::ALL {
@@ -311,6 +380,18 @@ fn run() -> Result<(), String> {
                     &rows
                 )
             );
+            // Same guard as the figure commands (keep stdout one format)
+            // and the same network set as the table above.
+            if let Some(n) = devices(&opts)? {
+                if !opts.flag("--csv") {
+                    println!();
+                    print_fleet_summary_for(&workloads::all_networks(), &cfg, &opts, n)?;
+                }
+            }
+        }
+        "fleet" => {
+            let n = devices(&opts)?.unwrap_or(4);
+            print_fleet_summary(&cfg, &opts, n)?;
         }
         "train" => cmd_train(&opts)?,
         "all" => {

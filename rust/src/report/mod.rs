@@ -5,11 +5,14 @@
 //! bars (the closest thing to the paper's plots a terminal can show) and
 //! `to_csv` emits machine-readable series for external plotting.
 
+use std::sync::Arc;
+
 use crate::accel::metrics::{reduction_pct, speedup};
+use crate::accel::plan::{PlanCache, PlanCacheStats};
 use crate::accel::{simulate_pass, AccelConfig};
 use crate::area;
 use crate::conv::ConvParams;
-use crate::coordinator::Scheduler;
+use crate::coordinator::{Fleet, Scheduler};
 use crate::im2col::pipeline::{Mode, Pass};
 use crate::im2col::sparsity;
 use crate::sim::addrgen;
@@ -28,12 +31,19 @@ pub const PAPER_TABLE2: [[f64; 8]; 5] = [
 /// One row of the regenerated Table II.
 #[derive(Clone, Debug)]
 pub struct Table2Row {
+    /// Layer id in the paper's notation.
     pub layer: String,
+    /// Which backpropagation pass the row reports.
     pub pass: Pass,
+    /// BP-im2col end-to-end cycles.
     pub bp_cycles: f64,
+    /// Baseline computation cycles (reorg excluded).
     pub trad_compute: f64,
+    /// Baseline reorganization cycles.
     pub trad_reorg: f64,
+    /// Regenerated speedup (baseline total / BP total).
     pub speedup: f64,
+    /// The paper's reported speedup for the same cell.
     pub paper_speedup: f64,
 }
 
@@ -61,9 +71,13 @@ pub fn table2(cfg: &AccelConfig) -> Vec<Table2Row> {
 /// One bar of a per-network figure.
 #[derive(Clone, Debug)]
 pub struct NetworkBar {
+    /// Network name (legend label).
     pub network: String,
+    /// Metric value under the traditional baseline.
     pub traditional: f64,
+    /// Metric value under BP-im2col.
     pub bp: f64,
+    /// Reduction of the metric, in percent.
     pub reduction_pct: f64,
     /// Fig. 8 also plots the workload sparsity next to the reduction.
     pub sparsity_pct: f64,
@@ -176,6 +190,106 @@ pub fn storage_for(nets: &[workloads::Network], cfg: &AccelConfig) -> Vec<Networ
 /// over the paper's six networks.
 pub fn storage(cfg: &AccelConfig) -> Vec<NetworkBar> {
     storage_for(&workloads::all_networks(), cfg)
+}
+
+/// One row of the fleet-scaling summary (`repro fleet`, or `--devices N`
+/// on the figure commands).
+#[derive(Clone, Debug)]
+pub struct FleetBar {
+    /// Network name.
+    pub network: String,
+    /// Backward-pass jobs executed (after sharding).
+    pub jobs: usize,
+    /// Total simulated compute cycles across all devices.
+    pub busy_cycles: f64,
+    /// Virtual-time finish of the slowest device.
+    pub makespan_cycles: f64,
+    /// Speedup over one device running the same jobs.
+    pub speedup: f64,
+    /// Parallel efficiency (speedup / devices), in percent.
+    pub efficiency_pct: f64,
+    /// Jobs that moved between devices via work stealing.
+    pub stolen_jobs: usize,
+}
+
+/// Run every network's backward pass on a `devices`-wide fleet (one
+/// shared plan cache across the whole sweep) and summarize scaling.
+/// Returns the per-network rows plus the final plan-cache counters.
+///
+/// The cache is local to this sweep: when a figure command renders its
+/// bars first (their schedulers plan through their own caches) and then
+/// appends this summary via `--devices`, the geometries are planned
+/// once more here. That keeps the printed hit/miss line an honest
+/// description of *this fleet sweep* — and planning is microseconds per
+/// layer, so the duplicate derivation is noise next to the simulations.
+pub fn fleet_summary(
+    nets: &[workloads::Network],
+    cfg: &AccelConfig,
+    mode: Mode,
+    devices: usize,
+) -> (Vec<FleetBar>, PlanCacheStats) {
+    let cache = Arc::new(PlanCache::new());
+    let bars = nets
+        .iter()
+        .map(|net| {
+            let fleet = Fleet::with_cache(*cfg, devices, Arc::clone(&cache));
+            let r = fleet.run_network(net, mode);
+            FleetBar {
+                network: net.name.to_string(),
+                jobs: r.total.results.len(),
+                busy_cycles: r.busy_cycles(),
+                makespan_cycles: r.makespan_cycles,
+                speedup: r.speedup(),
+                efficiency_pct: r.parallel_efficiency() * 100.0,
+                stolen_jobs: r.stolen_jobs(),
+            }
+        })
+        .collect();
+    (bars, cache.stats())
+}
+
+/// Render the fleet-scaling summary as a table plus a plan-cache line.
+pub fn render_fleet(devices: usize, bars: &[FleetBar], planning: &PlanCacheStats) -> String {
+    let body: Vec<Vec<String>> = bars
+        .iter()
+        .map(|b| {
+            vec![
+                b.network.clone(),
+                format!("{}", b.jobs),
+                format!("{:.0}", b.busy_cycles),
+                format!("{:.0}", b.makespan_cycles),
+                format!("{:.2}x", b.speedup),
+                format!("{:.1}%", b.efficiency_pct),
+                format!("{}", b.stolen_jobs),
+            ]
+        })
+        .collect();
+    let mut out = format!("Fleet of {devices} device(s): backward-pass sharding\n");
+    out.push_str(&fmt_table(
+        &["network", "jobs", "busy cycles", "makespan", "speedup", "efficiency", "stolen"],
+        &body,
+    ));
+    out.push_str(&format!(
+        "plan cache: {} plans, {} hits / {} misses ({:.0}% hit rate)\n",
+        planning.entries,
+        planning.hits,
+        planning.misses,
+        planning.hit_rate() * 100.0
+    ));
+    out
+}
+
+/// CSV emission of the fleet summary.
+pub fn fleet_to_csv(bars: &[FleetBar]) -> String {
+    let mut out =
+        String::from("network,jobs,busy_cycles,makespan_cycles,speedup,efficiency_pct,stolen\n");
+    for b in bars {
+        out.push_str(&format!(
+            "{},{},{},{},{:.4},{:.2},{}\n",
+            b.network, b.jobs, b.busy_cycles, b.makespan_cycles, b.speedup, b.efficiency_pct, b.stolen_jobs
+        ));
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -375,6 +489,23 @@ mod tests {
         for b in storage(&AccelConfig::default()) {
             assert!(b.reduction_pct >= 74.78, "{b:?}");
         }
+    }
+
+    #[test]
+    fn fleet_summary_rows_are_sane() {
+        let nets = workloads::all_networks();
+        let (bars, planning) = fleet_summary(&nets[..2], &AccelConfig::default(), Mode::BpIm2col, 4);
+        assert_eq!(bars.len(), 2);
+        for b in &bars {
+            assert!(b.jobs >= 2, "{b:?}");
+            assert!(b.speedup >= 1.0 - 1e-12, "{b:?}");
+            assert!(b.efficiency_pct <= 100.0 + 1e-9, "{b:?}");
+            assert!(b.busy_cycles >= b.makespan_cycles, "{b:?}");
+        }
+        assert!(planning.entries > 0);
+        let txt = render_fleet(4, &bars, &planning);
+        assert!(txt.contains("plan cache"));
+        assert!(fleet_to_csv(&bars).lines().count() == 3);
     }
 
     #[test]

@@ -57,7 +57,9 @@ pub enum Module {
 /// An address-generation pipeline.
 #[derive(Clone, Debug)]
 pub struct AddrGenPipeline {
+    /// Which address generator this pipeline implements.
     pub module: Module,
+    /// Pipeline stages, in dataflow order.
     pub stages: Vec<Stage>,
 }
 
@@ -179,6 +181,7 @@ pub struct PipelineSim {
 }
 
 impl PipelineSim {
+    /// Fresh simulation of pipeline `p` (all stages empty).
     pub fn new(p: &AddrGenPipeline) -> Self {
         Self {
             stages: p.stages.iter().map(|s| vec![None; s.latency]).collect(),

@@ -23,6 +23,7 @@ pub struct OnChipBuffer {
 }
 
 impl OnChipBuffer {
+    /// Fresh buffer with zeroed counters.
     pub fn new(name: &'static str, half_capacity: usize, read_width: usize) -> Self {
         Self { name, half_capacity, read_width, reads: 0, writes: 0, stall_cycles: 0.0 }
     }

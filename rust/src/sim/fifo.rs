@@ -19,6 +19,7 @@ impl SkewFifo {
         Self { depth, slots: vec![None; depth] }
     }
 
+    /// Configured depth of this FIFO.
     pub fn depth(&self) -> usize {
         self.depth
     }
@@ -46,10 +47,12 @@ pub struct SkewBank {
 }
 
 impl SkewBank {
+    /// Bank of `t` FIFOs: lane `i` gets depth `i`.
     pub fn new(t: usize) -> Self {
         Self { fifos: (0..t).map(SkewFifo::new).collect() }
     }
 
+    /// Number of lanes in the bank.
     pub fn lanes(&self) -> usize {
         self.fifos.len()
     }
@@ -66,6 +69,7 @@ impl SkewBank {
         self.fifos.len().saturating_sub(1)
     }
 
+    /// True when every lane has drained.
     pub fn is_empty(&self) -> bool {
         self.fifos.iter().all(SkewFifo::is_empty)
     }

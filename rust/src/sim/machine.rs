@@ -16,10 +16,9 @@
 //! against `accel::timing::simulate_pass` on both).
 
 use crate::accel::config::AccelConfig;
-use crate::accel::tiling::{GemmShape, Tiling};
+use crate::accel::plan::LayerPlan;
 use crate::conv::ConvParams;
 use crate::im2col::pipeline::{Mode, Pass};
-use crate::sim::addrgen::{prologue_cycles_for, Module};
 
 /// Outcome of the event-driven run.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -30,22 +29,38 @@ pub struct MachineResult {
     pub fill_wait: f64,
     /// Cycles the array sat idle waiting for data.
     pub array_idle: f64,
+    /// Stationary stripes executed (all channel groups).
     pub stripes: usize,
 }
 
-/// Run one pass at stripe granularity.
+/// Run one pass at stripe granularity (cold path: derives a fresh
+/// [`LayerPlan`] and delegates to [`run_pass_planned`]).
 pub fn run_pass(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> MachineResult {
-    let til = Tiling::new(GemmShape::from_pass(pass, p), cfg.array_dim);
+    run_pass_planned(&LayerPlan::build(pass, mode, p, cfg), cfg)
+}
+
+/// Run one pass at stripe granularity from a prepared (possibly
+/// memoized) [`LayerPlan`] — the tiling, prologues and analytic traffic
+/// are read from the plan instead of being re-derived.
+///
+/// `cfg` must be the configuration the plan was built under (checked by
+/// a debug assertion): mixing a memoized plan with a different DRAM
+/// model would produce a hybrid of two machines.
+pub fn run_pass_planned(plan: &LayerPlan, cfg: &AccelConfig) -> MachineResult {
+    debug_assert!(
+        plan.matches_config(cfg),
+        "plan was built under a different AccelConfig"
+    );
+    let til = plan.tiling;
     // One stripe sequence per channel group (per-group GEMMs run back to
     // back on the same array, exactly like `accel::timing`).
-    let n = til.n_j * p.groups;
+    let n = plan.stripes();
     let stripe_compute = til.stripe_compute_cycles();
-    let prologue = (prologue_cycles_for(mode, pass, Module::Stationary, p)
-        + prologue_cycles_for(mode, pass, Module::Dynamic, p)) as f64;
+    let prologue = plan.prologue_per_stripe();
 
     // Per-stripe fill: the same working-set rule as the analytic engine
     // (total fetch split evenly over stripes).
-    let m = crate::accel::timing::simulate_pass(pass, mode, p, cfg);
+    let m = &plan.metrics;
     let fill_elems =
         (m.traffic.a_bytes + m.traffic.b_bytes + m.traffic.meta_bytes) as f64 / 4.0 / n as f64;
     let fill_cycles = cfg.dram.transfer_cycles(fill_elems.ceil() as usize);
@@ -123,6 +138,26 @@ mod tests {
             analytic
         );
         assert!(ev.array_idle > 0.0);
+    }
+
+    #[test]
+    fn cached_plan_gives_identical_machine_result() {
+        // The event machine consumes plans; a memoized plan must drive it
+        // to the exact same result as cold planning.
+        use crate::accel::plan::PlanCache;
+        let cfg = AccelConfig::default();
+        let cache = PlanCache::new();
+        let p = ConvParams::square(56, 256, 512, 1, 2, 0);
+        for pass in Pass::ALL {
+            for mode in Mode::ALL {
+                let cold = run_pass(pass, mode, &p, &cfg);
+                let miss = run_pass_planned(&cache.plan(pass, mode, &p, &cfg), &cfg);
+                let hit = run_pass_planned(&cache.plan(pass, mode, &p, &cfg), &cfg);
+                assert_eq!(cold, miss, "{pass:?} {mode:?}");
+                assert_eq!(cold, hit, "{pass:?} {mode:?}");
+            }
+        }
+        assert!(cache.stats().hits >= 4);
     }
 
     #[test]

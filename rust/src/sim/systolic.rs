@@ -45,6 +45,7 @@ impl SystolicArray {
         Self { t, pes: vec![Pe::default(); t * t], cycles: 0, macs: 0 }
     }
 
+    /// Array dimension `T`.
     pub fn dim(&self) -> usize {
         self.t
     }

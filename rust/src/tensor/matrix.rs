@@ -3,8 +3,11 @@
 /// Dense row-major matrix of `rows x cols` f32.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major element storage (`rows * cols` values).
     pub data: Vec<f32>,
 }
 

@@ -29,7 +29,9 @@ pub struct WorkloadLayer {
 /// A CNN's stride>=2 (or dilated / grouped) convolutional layers.
 #[derive(Clone, Debug)]
 pub struct Network {
+    /// Network name (the paper's legend label).
     pub name: &'static str,
+    /// The layers of its backward-pass workload.
     pub layers: Vec<WorkloadLayer>,
 }
 

@@ -112,6 +112,51 @@ fn traincost_reports_all_networks() {
 }
 
 #[test]
+fn fleet_command_reports_scaling_and_plan_cache() {
+    let (stdout, _, ok) = repro(&["fleet", "--devices", "4"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("Fleet of 4"));
+    assert!(stdout.contains("makespan"));
+    assert!(stdout.contains("plan cache"));
+    let (csv, _, ok) = repro(&["fleet", "--devices", "2", "--csv"]);
+    assert!(ok);
+    assert!(csv.starts_with("network,jobs,busy_cycles"));
+    assert_eq!(csv.lines().count(), 7, "header + six networks:\n{csv}");
+}
+
+#[test]
+fn devices_flag_appends_fleet_summary_to_figs() {
+    let (stdout, _, ok) = repro(&["fig6", "--pass", "loss", "--devices", "2"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("Fig 6a"));
+    assert!(stdout.contains("Fleet of 2"));
+    let (stdout, _, ok) = repro(&["traincost", "--devices", "2"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("step cycles"));
+    assert!(stdout.contains("Fleet of 2"));
+}
+
+#[test]
+fn csv_figs_stay_parseable_with_devices() {
+    // --csv + --devices must not concatenate a second CSV table.
+    let (stdout, _, ok) = repro(&["fig6", "--csv", "--pass", "loss", "--devices", "2"]);
+    assert!(ok, "{stdout}");
+    assert!(!stdout.contains("Fleet of"), "{stdout}");
+    assert_eq!(
+        stdout.lines().next().unwrap(),
+        "network,traditional,bp_im2col,reduction_pct,sparsity_pct"
+    );
+    assert_eq!(stdout.lines().count(), 7, "one header + six networks:\n{stdout}");
+}
+
+#[test]
+fn zero_devices_rejected() {
+    let (_, stderr, ok) = repro(&["fleet", "--devices", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("--devices"), "{stderr}");
+}
+
+#[test]
 fn config_preset_changes_results() {
     let (default_out, _, ok1) = repro(&["sim", "--layer", "224/3/64/3/2/0"]);
     let (edge_out, _, ok2) = repro(&["sim", "--layer", "224/3/64/3/2/0", "--config", "configs/edge.cfg"]);

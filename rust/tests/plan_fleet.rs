@@ -1,0 +1,172 @@
+//! Coordinator-v2 acceptance tests (ISSUE 2):
+//!
+//! 1. Plan-cache hits produce **bit-identical** results to cold planning
+//!    across a seeded generalized-geometry sweep (analytic engine AND
+//!    event machine).
+//! 2. A fleet with `--devices 1` reproduces the single-accelerator
+//!    `NetworkReport` totals bit-exactly, and wider fleets keep the same
+//!    totals while shrinking the makespan.
+
+use std::sync::Arc;
+
+use bp_im2col::accel::plan::{LayerPlan, PlanCache};
+use bp_im2col::accel::{simulate_pass, AccelConfig};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::coordinator::{Fleet, NetworkReport, Scheduler};
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::sim::machine;
+use bp_im2col::tensor::Rng;
+use bp_im2col::workloads;
+
+/// Draw a random valid generalized geometry (same family as
+/// `tests/geometry_sweep.rs`: per-axis strides, dilation, groups), but
+/// with larger spatial sizes since only the analytic models run here.
+fn arb_geometry(rng: &mut Rng) -> ConvParams {
+    loop {
+        let (kh, kw) = (rng.range(1, 4), rng.range(1, 4));
+        let (dh, dw) = (rng.range(1, 3), rng.range(1, 3));
+        let groups = [1, 1, 2, 4][rng.below(4)];
+        let p = ConvParams::basic(
+            rng.range(1, 3),
+            groups * rng.range(1, 5),
+            rng.range(8, 40),
+            rng.range(8, 40),
+            groups * rng.range(1, 5),
+            kh,
+            kw,
+            1,
+            rng.below(dh * (kh - 1) + 1),
+            rng.below(dw * (kw - 1) + 1),
+        )
+        .with_stride(rng.range(1, 4), rng.range(1, 4))
+        .with_dilation(dh, dw)
+        .with_groups(groups);
+        if p.validate().is_ok() {
+            return p;
+        }
+    }
+}
+
+#[test]
+fn plan_cache_hits_identical_to_cold_planning_over_seeded_sweep() {
+    let mut rng = Rng::new(0xC0);
+    let cfg = AccelConfig::default();
+    let cache = PlanCache::new();
+    let geoms: Vec<ConvParams> = (0..60).map(|_| arb_geometry(&mut rng)).collect();
+
+    // Round 0 populates the cache (all misses), round 1 replays it (all
+    // hits). Both rounds must equal the cold path bit for bit.
+    for round in 0..2 {
+        for p in &geoms {
+            for pass in Pass::ALL {
+                for mode in Mode::ALL {
+                    let cold = simulate_pass(pass, mode, p, &cfg);
+                    let cached = cache.metrics(pass, mode, p, &cfg);
+                    assert_eq!(cold, cached, "round {round} {pass:?} {mode:?} {}", p.id());
+                }
+            }
+        }
+    }
+    let st = cache.stats();
+    // Distinct geometries may collide only if the sweep drew duplicates;
+    // at minimum the whole second round must have hit.
+    assert!(st.misses <= (geoms.len() * 4) as u64, "{st:?}");
+    assert!(st.hits >= (geoms.len() * 4) as u64, "{st:?}");
+    assert_eq!(st.entries as u64, st.misses, "one entry per miss");
+}
+
+#[test]
+fn event_machine_identical_through_cache_over_seeded_sweep() {
+    let mut rng = Rng::new(0xC1);
+    let cfg = AccelConfig::default();
+    let cache = PlanCache::new();
+    for _ in 0..20 {
+        let p = arb_geometry(&mut rng);
+        for pass in Pass::ALL {
+            for mode in Mode::ALL {
+                let cold = machine::run_pass(pass, mode, &p, &cfg);
+                // First lookup builds, second hits; both must agree.
+                let m1 = machine::run_pass_planned(&cache.plan(pass, mode, &p, &cfg), &cfg);
+                let m2 = machine::run_pass_planned(&cache.plan(pass, mode, &p, &cfg), &cfg);
+                assert_eq!(cold, m1, "{pass:?} {mode:?} {}", p.id());
+                assert_eq!(cold, m2, "{pass:?} {mode:?} {}", p.id());
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_build_is_deterministic() {
+    let mut rng = Rng::new(0xC2);
+    let cfg = AccelConfig::default();
+    for _ in 0..20 {
+        let p = arb_geometry(&mut rng);
+        for pass in Pass::ALL {
+            for mode in Mode::ALL {
+                let a = LayerPlan::build(pass, mode, &p, &cfg);
+                let b = LayerPlan::build(pass, mode, &p, &cfg);
+                assert_eq!(a.metrics, b.metrics);
+                assert_eq!(a.tiling, b.tiling);
+                assert_eq!((a.zero_windows, a.window_crossings), (b.zero_windows, b.window_crossings));
+            }
+        }
+    }
+}
+
+fn assert_reports_bit_equal(a: &NetworkReport, b: &NetworkReport, what: &str) {
+    assert_eq!(a.loss_cycles, b.loss_cycles, "{what}: loss_cycles");
+    assert_eq!(a.grad_cycles, b.grad_cycles, "{what}: grad_cycles");
+    assert_eq!(a.loss_traffic, b.loss_traffic, "{what}: loss_traffic");
+    assert_eq!(a.grad_traffic, b.grad_traffic, "{what}: grad_traffic");
+    assert_eq!(a.loss_buffer_reads, b.loss_buffer_reads, "{what}: loss_buffer_reads");
+    assert_eq!(a.grad_buffer_reads, b.grad_buffer_reads, "{what}: grad_buffer_reads");
+    assert_eq!(a.storage_bytes, b.storage_bytes, "{what}: storage_bytes");
+    assert_eq!(a.loss_sparsity, b.loss_sparsity, "{what}: loss_sparsity");
+    assert_eq!(a.grad_sparsity, b.grad_sparsity, "{what}: grad_sparsity");
+    assert_eq!(a.results.len(), b.results.len(), "{what}: result count");
+    for (ra, rb) in a.results.iter().zip(&b.results) {
+        assert_eq!(ra.job.id, rb.job.id, "{what}: job order");
+        assert_eq!(ra.scaled_cycles, rb.scaled_cycles, "{what}: job {}", ra.job.id);
+        assert_eq!(ra.scaled_traffic, rb.scaled_traffic, "{what}: job {}", ra.job.id);
+    }
+}
+
+#[test]
+fn fleet_of_one_reproduces_single_accelerator_reports() {
+    // The headline acceptance criterion, over every workload network and
+    // both modes.
+    let cfg = AccelConfig::default();
+    for net in workloads::extended_networks() {
+        for mode in Mode::ALL {
+            let single = Scheduler::new(cfg).run_network(&net, mode);
+            let fleet = Fleet::new(cfg, 1).run_network(&net, mode);
+            assert_reports_bit_equal(&fleet.total, &single, net.name);
+        }
+    }
+}
+
+#[test]
+fn fleet_totals_invariant_and_makespan_bounded() {
+    let cfg = AccelConfig::default();
+    let net = workloads::resnet();
+    let one = Fleet::new(cfg, 1).run_network(&net, Mode::BpIm2col);
+    let longest_job =
+        one.total.results.iter().map(|r| r.scaled_cycles).fold(0.0f64, f64::max);
+    for devices in [2, 4, 8] {
+        let rep = Fleet::new(cfg, devices).run_network(&net, Mode::BpIm2col);
+        assert_reports_bit_equal(&rep.total, &one.total, "devices");
+        // A wider fleet beats one device and respects the two classic
+        // lower bounds (mean load, longest job).
+        assert!(rep.makespan_cycles < one.makespan_cycles, "{devices} devices");
+        assert!(rep.makespan_cycles >= one.busy_cycles() / devices as f64 - 1e-6);
+        assert!(rep.makespan_cycles >= longest_job - 1e-6);
+    }
+    // And the whole sweep shares plans when given a common cache.
+    let cache = Arc::new(PlanCache::new());
+    Fleet::with_cache(cfg, 2, Arc::clone(&cache)).run_network(&net, Mode::BpIm2col);
+    let before = cache.stats();
+    Fleet::with_cache(cfg, 8, Arc::clone(&cache)).run_network(&net, Mode::BpIm2col);
+    let after = cache.stats();
+    assert_eq!(before.entries, after.entries, "no replanning at a new fleet width");
+    assert!(after.hits > before.hits);
+}
