@@ -1,34 +1,22 @@
-//! Full Figs. 6-8 sweep over the six CNN workloads, CSV to stdout.
+//! Full Figs. 6-8 + storage sweep over the six CNN workloads, served as
+//! one concurrent request batch through the Service facade, CSV to
+//! stdout (one `# <name>` comment line per artifact section).
 //!
 //! ```sh
 //! cargo run --release --example sweep_networks > sweep.csv
 //! ```
 
 use bp_im2col::accel::AccelConfig;
-use bp_im2col::im2col::pipeline::Pass;
-use bp_im2col::report;
+use bp_im2col::api::{render_all_csv, FigureRequest, Service, SimRequest};
+use bp_im2col::report::Figure;
 
 fn main() {
-    let cfg = AccelConfig::default();
-    println!("figure,pass,network,traditional,bp_im2col,reduction_pct,sparsity_pct");
-    for pass in Pass::ALL {
-        for (fig, bars) in [
-            ("fig6", report::fig6(&cfg, pass)),
-            ("fig7", report::fig7(&cfg, pass)),
-            ("fig8", report::fig8(&cfg, pass)),
-        ] {
-            for b in bars {
-                println!(
-                    "{},{},{},{:.0},{:.0},{:.3},{:.3}",
-                    fig, pass.name(), b.network, b.traditional, b.bp, b.reduction_pct, b.sparsity_pct
-                );
-            }
-        }
-    }
-    for b in report::storage(&cfg) {
-        println!(
-            "storage,both,{},{:.0},{:.0},{:.3},",
-            b.network, b.traditional, b.bp, b.reduction_pct
-        );
-    }
+    let svc = Service::new(AccelConfig::default());
+    let mut requests: Vec<SimRequest> =
+        Figure::ALL.iter().map(|f| FigureRequest::new(*f).into()).collect();
+    requests.push(SimRequest::Storage { extended: false });
+    // One batch: the shared plan cache plans each layer geometry once
+    // across all four sweeps, and results come back in request order.
+    let artifacts: Vec<_> = svc.run_batch(&requests).into_iter().flatten().collect();
+    print!("{}", render_all_csv(&artifacts));
 }

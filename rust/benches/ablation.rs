@@ -12,7 +12,7 @@ mod harness;
 
 use bp_im2col::accel::{metrics::speedup, simulate_pass, AccelConfig};
 use bp_im2col::im2col::pipeline::{Mode, Pass};
-use bp_im2col::report::fmt_table;
+use bp_im2col::api::artifact::fmt_table;
 use bp_im2col::workloads;
 
 fn main() {

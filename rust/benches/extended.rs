@@ -2,45 +2,52 @@
 //! **extended** workload set: the paper's six CNNs plus the dilated
 //! DeepLab-style backbone and the grouped ResNeXt-style network that
 //! exercise the generalized geometry (asymmetric stride / dilation /
-//! groups).
+//! groups). Runs through the Service facade with one shared plan cache
+//! across every figure.
 
 #[path = "harness.rs"]
 mod harness;
 
 use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{FigureRequest, Service, SimRequest};
 use bp_im2col::im2col::pipeline::Pass;
-use bp_im2col::report;
-use bp_im2col::workloads;
+use bp_im2col::report::Figure;
 
 fn main() {
-    let cfg = AccelConfig::default();
-    let nets = workloads::extended_networks();
+    let svc = Service::new(AccelConfig::default());
     for pass in Pass::ALL {
-        let runtime = harness::bench(&format!("extended/fig6_{}_8_networks", pass.name()), 1, 5, || {
-            report::fig6_for(&nets, &cfg, pass)
+        let bench_name = format!("extended/fig6_{}_8_networks", pass.name());
+        let runtime = harness::bench(&bench_name, 1, 5, || {
+            svc.run(&FigureRequest::new(Figure::Runtime).pass(pass).extended(true).into())
         });
         harness::report(
             &format!("Extended Fig 6 ({} calc): runtime reduction, 8 networks", pass.name()),
-            &report::render_bars("", &runtime, false),
+            &runtime[0].render_text(),
         );
-        let traffic = report::fig7_for(&nets, &cfg, pass);
+        let traffic =
+            svc.run(&FigureRequest::new(Figure::OffChipTraffic).pass(pass).extended(true).into());
         harness::report(
             &format!("Extended Fig 7 ({} calc): off-chip traffic reduction", pass.name()),
-            &report::render_bars("", &traffic, false),
+            &traffic[0].render_text(),
         );
-        let buffers = report::fig8_for(&nets, &cfg, pass);
+        let buffers =
+            svc.run(&FigureRequest::new(Figure::BufferReads).pass(pass).extended(true).into());
         harness::report(
-            &format!("Extended Fig 8 ({} calc): buffer bandwidth reduction + sparsity", pass.name()),
-            &report::render_bars("", &buffers, true),
+            &format!("Extended Fig 8 ({} calc): buffer bandwidth + sparsity", pass.name()),
+            &buffers[0].render_text(),
         );
         // The acceptance bar: BP strictly cheaper everywhere, including
         // the dilated and grouped networks.
-        for b in runtime.iter().chain(&traffic) {
-            assert!(b.bp < b.traditional, "{pass:?} {b:?}");
+        for fig in [&runtime[0], &traffic[0]] {
+            for r in 0..fig.rows.len() {
+                let trad = fig.float_at(r, "traditional").unwrap();
+                let bp = fig.float_at(r, "bp_im2col").unwrap();
+                assert!(bp < trad, "{pass:?} row {r}: bp {bp} !< trad {trad}");
+            }
         }
     }
     harness::report(
         "Extended storage-overhead reduction (8 networks)",
-        &report::render_bars("", &report::storage_for(&nets, &cfg), false),
+        &svc.run(&SimRequest::Storage { extended: true })[0].render_text(),
     );
 }

@@ -1,24 +1,26 @@
 //! Bench + regeneration of **Fig. 6**: backpropagation runtime reduction
-//! per network (loss calc = 6a, grad calc = 6b).
+//! per network (loss calc = 6a, grad calc = 6b), through the Service
+//! facade.
 
 #[path = "harness.rs"]
 mod harness;
 
 use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{FigureRequest, Service};
 use bp_im2col::im2col::pipeline::Pass;
-use bp_im2col::report;
+use bp_im2col::report::Figure;
 
 fn main() {
-    let cfg = AccelConfig::default();
+    let svc = Service::new(AccelConfig::default());
     for (panel, pass) in [("6a", Pass::Loss), ("6b", Pass::Grad)] {
-        let bars = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
-            report::fig6(&cfg, pass)
+        let arts = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
+            svc.run(&FigureRequest::new(Figure::Runtime).pass(pass).into())
         });
-        harness::report(
-            &format!("Fig {panel}: {}-calculation runtime reduction", pass.name()),
-            &report::render_bars("", &bars, false),
-        );
-        let avg = bars.iter().map(|b| b.reduction_pct).sum::<f64>() / bars.len() as f64;
+        let fig = &arts[0];
+        harness::report(&fig.title, &fig.render_text());
+        let rows = fig.rows.len();
+        let avg = (0..rows).filter_map(|r| fig.float_at(r, "reduction_pct")).sum::<f64>()
+            / rows as f64;
         println!("average reduction: {avg:.1}% (paper reports 34.9% overall average)");
     }
 }

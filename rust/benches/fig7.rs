@@ -1,25 +1,26 @@
 //! Bench + regeneration of **Fig. 7**: off-chip memory bandwidth
-//! occupation per network (buffer-B path during loss calc = 7a,
-//! buffer-A path during grad calc = 7b).
+//! occupation per network (loss calc = 7a, grad calc = 7b), through the
+//! Service facade.
 
 #[path = "harness.rs"]
 mod harness;
 
 use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{FigureRequest, Service};
 use bp_im2col::im2col::pipeline::Pass;
-use bp_im2col::report;
+use bp_im2col::report::Figure;
 
 fn main() {
-    let cfg = AccelConfig::default();
+    let svc = Service::new(AccelConfig::default());
     for (panel, pass) in [("7a", Pass::Loss), ("7b", Pass::Grad)] {
-        let bars = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
-            report::fig7(&cfg, pass)
+        let arts = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
+            svc.run(&FigureRequest::new(Figure::OffChipTraffic).pass(pass).into())
         });
-        harness::report(
-            &format!("Fig {panel}: off-chip traffic reduction ({} calc)", pass.name()),
-            &report::render_bars("", &bars, false),
-        );
-        let min = bars.iter().map(|b| b.reduction_pct).fold(f64::INFINITY, f64::min);
+        let fig = &arts[0];
+        harness::report(&fig.title, &fig.render_text());
+        let min = (0..fig.rows.len())
+            .filter_map(|r| fig.float_at(r, "reduction_pct"))
+            .fold(f64::INFINITY, f64::min);
         println!("minimum reduction: {min:.1}% (paper floor: 22.7%)");
     }
 }

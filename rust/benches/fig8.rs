@@ -1,26 +1,22 @@
 //! Bench + regeneration of **Fig. 8**: on-chip buffer bandwidth
 //! occupation + lowered-matrix sparsity per network (buffer B during
-//! loss calc = 8a, buffer A during grad calc = 8b).
+//! loss calc = 8a, buffer A during grad calc = 8b), through the Service
+//! facade.
 
 #[path = "harness.rs"]
 mod harness;
 
 use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{FigureRequest, Service};
 use bp_im2col::im2col::pipeline::Pass;
-use bp_im2col::report;
+use bp_im2col::report::Figure;
 
 fn main() {
-    let cfg = AccelConfig::default();
+    let svc = Service::new(AccelConfig::default());
     for (panel, pass) in [("8a", Pass::Loss), ("8b", Pass::Grad)] {
-        let bars = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
-            report::fig8(&cfg, pass)
+        let arts = harness::bench(&format!("fig{panel}/sweep_6_networks"), 1, 10, || {
+            svc.run(&FigureRequest::new(Figure::BufferReads).pass(pass).into())
         });
-        harness::report(
-            &format!(
-                "Fig {panel}: buffer bandwidth reduction vs sparsity ({} calc)",
-                pass.name()
-            ),
-            &report::render_bars("", &bars, true),
-        );
+        harness::report(&arts[0].title, &arts[0].render_text());
     }
 }

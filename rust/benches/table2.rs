@@ -1,16 +1,18 @@
 //! Bench + regeneration of **Table II**: loss/gradient runtime of the
-//! five convolutional layers under both im2col modes.
+//! five convolutional layers under both im2col modes, through the
+//! Service facade.
 
 #[path = "harness.rs"]
 mod harness;
 
 use bp_im2col::accel::AccelConfig;
-use bp_im2col::report;
+use bp_im2col::api::{Service, SimRequest};
 
 fn main() {
     let cfg = AccelConfig::default();
-    let rows = harness::bench("table2/simulate_10_passes", 2, 20, || report::table2(&cfg));
-    harness::report("Table II (cycles; paper speedups alongside)", &report::render_table2(&rows));
+    let svc = Service::new(cfg);
+    let arts = harness::bench("table2/simulate_10_passes", 2, 20, || svc.run(&SimRequest::Table2));
+    harness::report("Table II (cycles; paper speedups alongside)", &arts[0].render_text());
 
     // Per-layer single-pass timing (the simulator itself is a benchmark
     // subject: it must stay fast enough for design-space sweeps).

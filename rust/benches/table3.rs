@@ -1,14 +1,23 @@
 //! Bench + regeneration of **Table III** (prologue latencies) and
-//! **Table IV** (address-generator area).
+//! **Table IV** (address-generator area), through the Service facade.
 
 #[path = "harness.rs"]
 mod harness;
 
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{Service, SimRequest};
 use bp_im2col::report;
 
 fn main() {
+    let svc = Service::new(AccelConfig::default());
     harness::bench("table3/prologue_all_cells", 10, 1000, report::table3);
-    harness::report("Table III: prologue latency (cycles)", &report::render_table3());
+    harness::report(
+        "Table III: prologue latency (cycles)",
+        &svc.run(&SimRequest::Table3)[0].render_text(),
+    );
     harness::bench("table4/area_model", 10, 1000, bp_im2col::area::table4);
-    harness::report("Table IV: address-generation module area (ASAP7 model)", &report::render_table4());
+    harness::report(
+        "Table IV: address-generation module area (ASAP7 model)",
+        &svc.run(&SimRequest::Table4)[0].render_text(),
+    );
 }

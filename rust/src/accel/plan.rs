@@ -348,6 +348,18 @@ pub struct PlanCacheStats {
 }
 
 impl PlanCacheStats {
+    /// Total lookups (`hits + misses`).
+    ///
+    /// Unlike the individual hit/miss counters — which can shift by a
+    /// few either way when concurrent workers race to build the same
+    /// plan (both count a miss) — the lookup total is **deterministic**:
+    /// one per `plan`/`metrics` call. Artifacts that must render
+    /// reproducibly ([`crate::api`]'s fleet summary) report entries and
+    /// lookups, not hits and misses.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
     /// Fraction of lookups served from the cache, in `[0, 1]`.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
@@ -355,6 +367,12 @@ impl PlanCacheStats {
             return 0.0;
         }
         self.hits as f64 / total as f64
+    }
+
+    /// One-line human summary using only the deterministic counters:
+    /// `plan cache: 14 distinct plans over 28 lookups`.
+    pub fn summary(&self) -> String {
+        format!("plan cache: {} distinct plans over {} lookups", self.entries, self.lookups())
     }
 }
 

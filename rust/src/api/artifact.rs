@@ -1,0 +1,510 @@
+//! Structured result artifacts and their single rendering layer.
+//!
+//! Every query served by [`crate::api::Service`] returns [`Artifact`]s:
+//! typed rows under named, unit-annotated columns, plus free-form
+//! metadata and notes. Presentation is centralized here — aligned text
+//! tables (with ASCII bars for percentage columns), CSV, and a
+//! dependency-free JSON encoding — so every CLI command gains `--csv`
+//! and `--json` from one code path instead of a per-command printer.
+
+use std::fmt::Write as _;
+
+/// One typed cell of an artifact row.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// A label / identifier cell.
+    Text(String),
+    /// An exact unsigned count.
+    Int(u64),
+    /// A measured or derived quantity.
+    Float(f64),
+}
+
+impl Value {
+    /// The cell as `f64` (counts widen; text is `None`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Text(_) => None,
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(v) => Some(*v),
+        }
+    }
+
+    /// The cell as text (`None` for numeric cells).
+    pub fn as_text(&self) -> Option<&str> {
+        match self {
+            Value::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Text(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Text(s)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Int(v as u64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+
+/// One column of an artifact: machine name (the CSV/JSON field name),
+/// optional unit, text-mode float precision, and whether text mode also
+/// draws an ASCII bar (for 0–100 % columns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Column {
+    /// Field name (snake_case; used verbatim in CSV headers and JSON).
+    pub name: String,
+    /// Unit of numeric cells (`cycles`, `bytes`, `%`, `x`, ...).
+    pub unit: Option<String>,
+    /// Decimal places for `Float` cells in text mode.
+    pub precision: usize,
+    /// Draw a 0–100 ASCII bar after the value in text mode.
+    pub bar: bool,
+}
+
+impl Column {
+    /// New column with default presentation (2 decimals, no unit).
+    pub fn new(name: impl Into<String>) -> Self {
+        Column { name: name.into(), unit: None, precision: 2, bar: false }
+    }
+
+    /// With a unit label. `%` and `x` are suffixed to text-mode cells;
+    /// other units appear in the text header.
+    pub fn unit(mut self, unit: impl Into<String>) -> Self {
+        self.unit = Some(unit.into());
+        self
+    }
+
+    /// With a text-mode float precision.
+    pub fn precision(mut self, digits: usize) -> Self {
+        self.precision = digits;
+        self
+    }
+
+    /// Also draw an ASCII bar (cell interpreted as 0–100).
+    pub fn bar(mut self) -> Self {
+        self.bar = true;
+        self
+    }
+}
+
+/// A structured query result: typed rows + units + metadata, rendered to
+/// text, CSV or JSON by one shared layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    /// Stable machine id (`table2`, `fig6a`, `fleet`, ...).
+    pub name: String,
+    /// Human heading printed above the text rendering.
+    pub title: String,
+    /// Request/provenance metadata as ordered key-value pairs.
+    pub meta: Vec<(String, String)>,
+    /// Column schema; every row must match its length.
+    pub columns: Vec<Column>,
+    /// Typed data rows.
+    pub rows: Vec<Vec<Value>>,
+    /// Free-form trailing lines (ranges, cache counters, caveats).
+    pub notes: Vec<String>,
+}
+
+impl Artifact {
+    /// New empty artifact.
+    pub fn new(name: impl Into<String>, title: impl Into<String>) -> Self {
+        Artifact {
+            name: name.into(),
+            title: title.into(),
+            meta: Vec::new(),
+            columns: Vec::new(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// With a metadata pair appended.
+    pub fn meta(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.meta.push((key.into(), value.into()));
+        self
+    }
+
+    /// With the column schema set.
+    pub fn columns(mut self, columns: Vec<Column>) -> Self {
+        self.columns = columns;
+        self
+    }
+
+    /// Append one row (must match the column count).
+    pub fn push_row(&mut self, row: Vec<Value>) {
+        assert_eq!(row.len(), self.columns.len(), "row width != column count in {:?}", self.name);
+        self.rows.push(row);
+    }
+
+    /// Append a trailing note line.
+    pub fn push_note(&mut self, note: impl Into<String>) {
+        self.notes.push(note.into());
+    }
+
+    /// Index of the named column.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c.name == name)
+    }
+
+    /// Numeric cell at `(row, column-name)`, widening counts to `f64`.
+    pub fn float_at(&self, row: usize, col_name: &str) -> Option<f64> {
+        self.rows.get(row)?.get(self.col(col_name)?)?.as_f64()
+    }
+
+    // ---- text -----------------------------------------------------------
+
+    /// Render as a titled, aligned text table with notes, drawing ASCII
+    /// bars for [`Column::bar`] columns.
+    pub fn render_text(&self) -> String {
+        let headers: Vec<String> = self
+            .columns
+            .iter()
+            .map(|c| match &c.unit {
+                Some(u) if u != "%" && u != "x" => format!("{} ({u})", c.name),
+                _ => c.name.clone(),
+            })
+            .collect();
+        let body: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|row| {
+                row.iter().zip(&self.columns).map(|(v, c)| Self::text_cell(v, c)).collect()
+            })
+            .collect();
+        let mut out = format!("{}\n", self.title);
+        let header_refs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+        out.push_str(&fmt_table(&header_refs, &body));
+        for note in &self.notes {
+            out.push_str(note);
+            out.push('\n');
+        }
+        out
+    }
+
+    fn text_cell(v: &Value, c: &Column) -> String {
+        let suffix = match c.unit.as_deref() {
+            Some("%") => "%",
+            Some("x") => "x",
+            _ => "",
+        };
+        let base = match v {
+            Value::Text(s) => s.clone(),
+            Value::Int(i) => format!("{i}{suffix}"),
+            Value::Float(f) => format!("{:.*}{suffix}", c.precision, f),
+        };
+        if c.bar {
+            let pct = v.as_f64().unwrap_or(0.0);
+            let n = ((pct / 2.0).clamp(0.0, 50.0)) as usize;
+            format!("{base} |{:<50}|", "#".repeat(n))
+        } else {
+            base
+        }
+    }
+
+    // ---- CSV ------------------------------------------------------------
+
+    /// Render as one CSV document: header row of column names, then one
+    /// line per row. Numbers use round-trip formatting; text cells are
+    /// quoted only when they contain a delimiter.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        let header: Vec<String> = self.columns.iter().map(|c| csv_escape(&c.name)).collect();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .map(|v| match v {
+                    Value::Text(s) => csv_escape(s),
+                    Value::Int(i) => i.to_string(),
+                    Value::Float(f) => float_repr(*f),
+                })
+                .collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    // ---- JSON -----------------------------------------------------------
+
+    /// Render as one JSON object with `name`, `title`, `meta`, `columns`
+    /// (name + unit), `rows` and `notes`. Dependency-free; numbers use
+    /// Rust's shortest round-trip formatting, so a parser recovers the
+    /// exact `f64`/`u64` values.
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{");
+        write!(out, "\"name\":{}", json_string(&self.name)).unwrap();
+        write!(out, ",\"title\":{}", json_string(&self.title)).unwrap();
+        out.push_str(",\"meta\":{");
+        for (i, (k, v)) in self.meta.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write!(out, "{}:{}", json_string(k), json_string(v)).unwrap();
+        }
+        out.push_str("},\"columns\":[");
+        for (i, c) in self.columns.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let unit = match &c.unit {
+                Some(u) => json_string(u),
+                None => "null".to_string(),
+            };
+            write!(out, "{{\"name\":{},\"unit\":{}}}", json_string(&c.name), unit).unwrap();
+        }
+        out.push_str("],\"rows\":[");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            for (j, v) in row.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                match v {
+                    Value::Text(s) => out.push_str(&json_string(s)),
+                    Value::Int(n) => write!(out, "{n}").unwrap(),
+                    Value::Float(f) if f.is_finite() => out.push_str(&float_repr(*f)),
+                    Value::Float(_) => out.push_str("null"),
+                }
+            }
+            out.push(']');
+        }
+        out.push_str("],\"notes\":[");
+        for (i, n) in self.notes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&json_string(n));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Render a group of artifacts as one text document (titled tables,
+/// blank-line separated).
+pub fn render_all_text(artifacts: &[Artifact]) -> String {
+    let mut out = String::new();
+    for (i, a) in artifacts.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        out.push_str(&a.render_text());
+    }
+    out
+}
+
+/// Render a group of artifacts as CSV. A single artifact renders as one
+/// pure CSV document; with several, each section is preceded by a
+/// `# <name>` comment line so the document splits mechanically (this
+/// replaces the old behaviour of silently *dropping* sibling artifacts
+/// under `--csv`).
+pub fn render_all_csv(artifacts: &[Artifact]) -> String {
+    if let [only] = artifacts {
+        return only.render_csv();
+    }
+    let mut out = String::new();
+    for (i, a) in artifacts.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        out.push_str(&format!("# {}\n", a.name));
+        out.push_str(&a.render_csv());
+    }
+    out
+}
+
+/// Render a group of artifacts as one JSON document:
+/// `{"artifacts":[...]}` — the shape every command emits under `--json`,
+/// regardless of artifact count.
+pub fn render_all_json(artifacts: &[Artifact]) -> String {
+    let mut out = String::from("{\"artifacts\":[");
+    for (i, a) in artifacts.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&a.render_json());
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Align string rows into a text table under right-aligned headers (the
+/// shared table formatter; benches use it directly for ad-hoc tables).
+pub fn fmt_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len().max(1) - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Round-trip decimal representation of a finite `f64` (Rust's shortest
+/// `Display` form parses back to the identical value).
+fn float_repr(f: f64) -> String {
+    format!("{f}")
+}
+
+/// Quote a CSV cell only when it contains a delimiter, quote or newline.
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// JSON string literal with the mandatory escapes.
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                write!(out, "\\u{:04x}", c as u32).unwrap();
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Artifact {
+        let mut a = Artifact::new("sample", "Sample artifact")
+            .meta("pass", "loss")
+            .columns(vec![
+                Column::new("network"),
+                Column::new("cycles").unit("cycles").precision(0),
+                Column::new("reduction_pct").unit("%").bar(),
+                Column::new("jobs"),
+            ]);
+        a.push_row(vec!["AlexNet".into(), 1234.5f64.into(), 97.43f64.into(), 14usize.into()]);
+        a.push_row(vec!["ResNet".into(), 999.0f64.into(), 50.0f64.into(), 2usize.into()]);
+        a.push_note("a trailing note");
+        a
+    }
+
+    #[test]
+    fn text_render_has_title_bars_and_units() {
+        let txt = sample().render_text();
+        assert!(txt.starts_with("Sample artifact\n"));
+        assert!(txt.contains("cycles (cycles)"));
+        assert!(txt.contains("97.43% |"));
+        assert!(txt.contains('#'));
+        assert!(txt.ends_with("a trailing note\n"));
+    }
+
+    #[test]
+    fn csv_render_is_header_plus_rows() {
+        let csv = sample().render_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "network,cycles,reduction_pct,jobs");
+        assert_eq!(lines.next().unwrap(), "AlexNet,1234.5,97.43,14");
+        assert_eq!(lines.count(), 1);
+    }
+
+    #[test]
+    fn csv_escapes_delimiters() {
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn json_render_contains_fields_and_exact_numbers() {
+        let js = sample().render_json();
+        assert!(js.starts_with("{\"name\":\"sample\""));
+        assert!(js.contains("\"meta\":{\"pass\":\"loss\"}"));
+        assert!(js.contains("\"unit\":\"cycles\""));
+        assert!(js.contains("\"unit\":null"));
+        assert!(js.contains("[\"AlexNet\",1234.5,97.43,14]"));
+        assert!(js.ends_with("\"notes\":[\"a trailing note\"]}"));
+    }
+
+    #[test]
+    fn json_string_escaping() {
+        assert_eq!(json_string("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_string("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn group_renderers_cover_single_and_multi() {
+        let a = sample();
+        let group = [a.clone(), a.clone()];
+        assert_eq!(render_all_csv(&group[..1]), a.render_csv());
+        let multi = render_all_csv(&group);
+        assert!(multi.starts_with("# sample\n"));
+        assert_eq!(multi.matches("# sample").count(), 2);
+        let js = render_all_json(&group);
+        assert!(js.starts_with("{\"artifacts\":["));
+        assert!(js.ends_with("]}"));
+        assert!(render_all_text(&group).matches("Sample artifact").count() == 2);
+    }
+
+    #[test]
+    fn float_at_and_col_lookup() {
+        let a = sample();
+        assert_eq!(a.float_at(0, "cycles"), Some(1234.5));
+        assert_eq!(a.float_at(1, "jobs"), Some(2.0));
+        assert_eq!(a.float_at(0, "network"), None);
+        assert_eq!(a.col("missing"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn mismatched_row_width_panics() {
+        let mut a = Artifact::new("x", "x").columns(vec![Column::new("a")]);
+        a.push_row(vec![Value::Int(1), Value::Int(2)]);
+    }
+}

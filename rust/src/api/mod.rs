@@ -1,0 +1,488 @@
+//! The public query facade: typed requests in, structured artifacts out.
+//!
+//! Historically the crate had three parallel entry points into the same
+//! analytic model — free functions in [`crate::report`], the
+//! [`crate::coordinator::Scheduler`], and the
+//! [`crate::coordinator::Fleet`] — each threading `(Pass, Mode,
+//! ConvParams, AccelConfig)` tuples independently, and a CLI that
+//! stringified results ad hoc. This module consolidates them behind one
+//! surface (DESIGN.md §9):
+//!
+//! * [`SimRequest`] — every query as a comparable value with typed
+//!   options (pass filter, extended workloads, device counts).
+//! * [`Service`] — owns the [`AccelConfig`] and one shared
+//!   [`PlanCache`]; [`Service::run`] serves a request, and
+//!   [`Service::run_batch`] serves a request slice concurrently through
+//!   the shared cache — the building block for a request-serving
+//!   frontend.
+//! * [`Artifact`] — structured results (typed rows + units + metadata)
+//!   with one rendering layer: [`Artifact::render_text`],
+//!   [`Artifact::render_csv`], [`Artifact::render_json`].
+//!
+//! The facade is *numerically transparent*: `tests/api.rs` asserts
+//! every request reproduces the underlying [`crate::report`] functions
+//! bit-exactly, for every command and device count.
+
+pub mod artifact;
+pub mod request;
+
+pub use artifact::{render_all_csv, render_all_json, render_all_text, Artifact, Column, Value};
+pub use request::{FigureRequest, FleetRequest, PassFilter, SimRequest};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::accel::metrics::speedup;
+use crate::accel::plan::PlanCache;
+use crate::accel::AccelConfig;
+use crate::coordinator::Scheduler;
+use crate::im2col::pipeline::{Mode, Pass};
+use crate::im2col::sparsity;
+use crate::report;
+use crate::workloads::{self, Network};
+
+/// Serves [`SimRequest`]s against one accelerator configuration and one
+/// shared plan cache.
+///
+/// Construction is cheap; the cache warms as requests repeat layer
+/// geometries (every ResNet block, every step of a sweep), and
+/// [`Service::run_batch`] exploits it across concurrent requests.
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::accel::AccelConfig;
+/// use bp_im2col::api::{Service, SimRequest};
+///
+/// let svc = Service::new(AccelConfig::default());
+/// let artifacts = svc.run(&SimRequest::Table3);
+/// assert_eq!(artifacts.len(), 1);
+/// assert_eq!(artifacts[0].name, "table3");
+/// assert_eq!(artifacts[0].rows.len(), 8); // 2 modes x 2 passes x 2 modules
+/// assert!(artifacts[0].render_json().contains("\"prologue_cycles\""));
+/// ```
+pub struct Service {
+    cfg: AccelConfig,
+    cache: Arc<PlanCache>,
+}
+
+impl Service {
+    /// Service over `cfg` with a fresh shared plan cache.
+    pub fn new(cfg: AccelConfig) -> Self {
+        Self::with_cache(cfg, Arc::new(PlanCache::new()))
+    }
+
+    /// Service over an externally shared plan cache (e.g. one cache
+    /// across several services simulating the same platform).
+    pub fn with_cache(cfg: AccelConfig, cache: Arc<PlanCache>) -> Self {
+        Self { cfg, cache }
+    }
+
+    /// The accelerator configuration every request is served under.
+    pub fn config(&self) -> &AccelConfig {
+        &self.cfg
+    }
+
+    /// The shared plan cache (clone of the `Arc`).
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// A scheduler over the service's config and shared cache.
+    fn scheduler(&self) -> Scheduler {
+        Scheduler::with_cache(self.cfg, self.plan_cache())
+    }
+
+    /// Workload set selected by the `extended` option.
+    fn networks(extended: bool) -> Vec<Network> {
+        if extended {
+            workloads::extended_networks()
+        } else {
+            workloads::all_networks()
+        }
+    }
+
+    /// Serve one request; most requests yield one artifact, figure and
+    /// traincost requests with `devices` append a `fleet` sibling.
+    ///
+    /// Results are deterministic: repeated calls — in any order, on any
+    /// thread, hot or cold cache — return bit-identical artifacts.
+    pub fn run(&self, req: &SimRequest) -> Vec<Artifact> {
+        let mut artifacts = match req {
+            SimRequest::Table2 => vec![self.table2()],
+            SimRequest::Table3 => vec![table3()],
+            SimRequest::Table4 => vec![table4()],
+            SimRequest::Figure(f) => self.figure(f),
+            SimRequest::Sparsity { extended } => vec![sparsity_artifact(*extended)],
+            SimRequest::Storage { extended } => vec![self.storage(*extended)],
+            SimRequest::Layer(params) => vec![self.layer(params)],
+            SimRequest::TrainCost { devices } => self.traincost(*devices),
+            SimRequest::Fleet(f) => {
+                vec![self.fleet_artifact(&Self::networks(f.extended), f.devices)]
+            }
+        };
+        let cfg_meta = config_meta(&self.cfg);
+        for a in &mut artifacts {
+            a.meta.push(("request".into(), req.name().into()));
+            a.meta.push(("config".into(), cfg_meta.clone()));
+        }
+        artifacts
+    }
+
+    /// Serve a request slice concurrently through the shared plan cache,
+    /// returning results in request order.
+    ///
+    /// Equivalent to mapping [`Service::run`] — bit-exactly, because
+    /// plans are deterministic and cache hits return the value a cold
+    /// build would (`tests/api.rs` asserts this over a seeded sweep) —
+    /// but overlapping independent requests and planning each repeated
+    /// geometry once across the whole batch.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use bp_im2col::accel::AccelConfig;
+    /// use bp_im2col::api::{Service, SimRequest};
+    ///
+    /// let svc = Service::new(AccelConfig::default());
+    /// let reqs = [SimRequest::Table3, SimRequest::Table4];
+    /// let out = svc.run_batch(&reqs);
+    /// assert_eq!(out.len(), 2);
+    /// assert_eq!(out[0], svc.run(&reqs[0]));
+    /// assert_eq!(out[1], svc.run(&reqs[1]));
+    /// ```
+    pub fn run_batch(&self, reqs: &[SimRequest]) -> Vec<Vec<Artifact>> {
+        if reqs.len() <= 1 {
+            return reqs.iter().map(|r| self.run(r)).collect();
+        }
+        let workers = crate::coordinator::scheduler::default_workers().min(reqs.len());
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Vec<Artifact>>>> =
+            reqs.iter().map(|_| Mutex::new(None)).collect();
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(req) = reqs.get(i) else { break };
+                    let out = self.run(req);
+                    *slots[i].lock().expect("batch slot poisoned") = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().expect("batch slot poisoned").expect("slot filled"))
+            .collect()
+    }
+
+    // ---- per-request artifact builders ----------------------------------
+
+    fn table2(&self) -> Artifact {
+        let mut a = Artifact::new("table2", "Table II: per-layer backpropagation runtime")
+            .columns(vec![
+                Column::new("layer"),
+                Column::new("pass"),
+                Column::new("bp_cycles").unit("cycles").precision(0),
+                Column::new("trad_compute_cycles").unit("cycles").precision(0),
+                Column::new("trad_reorg_cycles").unit("cycles").precision(0),
+                Column::new("speedup").unit("x"),
+                Column::new("paper_speedup").unit("x"),
+            ]);
+        for r in report::table2(&self.cfg) {
+            a.push_row(vec![
+                r.layer.into(),
+                r.pass.name().into(),
+                r.bp_cycles.into(),
+                r.trad_compute.into(),
+                r.trad_reorg.into(),
+                r.speedup.into(),
+                r.paper_speedup.into(),
+            ]);
+        }
+        a
+    }
+
+    fn figure(&self, req: &FigureRequest) -> Vec<Artifact> {
+        let nets = Self::networks(req.extended);
+        let sched = self.scheduler();
+        let mut out = Vec::new();
+        for pass in req.passes.passes() {
+            let panel = if pass == Pass::Loss { "a" } else { "b" };
+            let bars = report::figure_bars(req.figure, &nets, &sched, pass);
+            let mut a = Artifact::new(
+                format!("fig{}{panel}", req.figure.number()),
+                req.figure.title(pass),
+            )
+            .meta("pass", pass.name())
+            .meta("networks", if req.extended { "extended" } else { "paper" })
+            .columns(network_bar_columns(req.figure.unit()));
+            for b in bars {
+                a.push_row(network_bar_row(b));
+            }
+            out.push(a);
+        }
+        if let Some(devices) = req.devices {
+            out.push(self.fleet_artifact(&nets, devices));
+        }
+        out
+    }
+
+    fn storage(&self, extended: bool) -> Artifact {
+        let nets = Self::networks(extended);
+        let bars = report::storage_bars(&nets, &self.scheduler());
+        let mut a = Artifact::new("storage", "Additional storage overhead reduction")
+            .meta("networks", if extended { "extended" } else { "paper" })
+            .columns(network_bar_columns("bytes"));
+        for b in bars {
+            a.push_row(network_bar_row(b));
+        }
+        a
+    }
+
+    fn layer(&self, p: &crate::conv::ConvParams) -> Artifact {
+        let mut a = Artifact::new("layer", format!("layer {} (batch {})", p.id(), p.b))
+            .meta("layer", p.id())
+            .columns(vec![
+                Column::new("pass"),
+                Column::new("bp_cycles").unit("cycles").precision(0),
+                Column::new("trad_compute_cycles").unit("cycles").precision(0),
+                Column::new("trad_reorg_cycles").unit("cycles").precision(0),
+                Column::new("speedup").unit("x"),
+                Column::new("sparsity_pct").unit("%"),
+            ]);
+        for pass in Pass::ALL {
+            let trad = self.cache.metrics(pass, Mode::Traditional, p, &self.cfg);
+            let bp = self.cache.metrics(pass, Mode::BpIm2col, p, &self.cfg);
+            a.push_row(vec![
+                pass.name().into(),
+                bp.total_cycles().into(),
+                (trad.total_cycles() - trad.reorg_cycles).into(),
+                trad.reorg_cycles.into(),
+                speedup(&trad, &bp).into(),
+                (bp.sparsity * 100.0).into(),
+            ]);
+        }
+        a
+    }
+
+    fn traincost(&self, devices: Option<usize>) -> Vec<Artifact> {
+        let mut a = Artifact::new("traincost", "Full training-step cost (fwd + loss + grad)")
+            .columns(vec![
+                Column::new("network"),
+                Column::new("trad_step_cycles").unit("cycles").precision(0),
+                Column::new("bp_step_cycles").unit("cycles").precision(0),
+                Column::new("speedup").unit("x"),
+                Column::new("bp_backward_share_pct").unit("%").precision(1),
+            ]);
+        for r in report::traincost(&self.cfg) {
+            a.push_row(vec![
+                r.network.into(),
+                r.trad_step_cycles.into(),
+                r.bp_step_cycles.into(),
+                r.speedup.into(),
+                r.backward_share_pct.into(),
+            ]);
+        }
+        let mut out = vec![a];
+        if let Some(devices) = devices {
+            // Same network set as the cost table (the paper's six).
+            out.push(self.fleet_artifact(&workloads::all_networks(), devices));
+        }
+        out
+    }
+
+    fn fleet_artifact(&self, nets: &[Network], devices: usize) -> Artifact {
+        let (bars, planning) =
+            report::fleet_summary(nets, &self.cfg, Mode::BpIm2col, devices);
+        let mut a = Artifact::new(
+            "fleet",
+            format!("Fleet of {devices} device(s): backward-pass sharding"),
+        )
+        .meta("devices", devices.to_string())
+        .columns(vec![
+            Column::new("network"),
+            Column::new("jobs"),
+            Column::new("busy_cycles").unit("cycles").precision(0),
+            Column::new("makespan_cycles").unit("cycles").precision(0),
+            Column::new("speedup").unit("x"),
+            Column::new("efficiency_pct").unit("%").precision(1),
+            Column::new("stolen_jobs"),
+        ]);
+        for b in bars {
+            a.push_row(vec![
+                b.network.into(),
+                b.jobs.into(),
+                b.busy_cycles.into(),
+                b.makespan_cycles.into(),
+                b.speedup.into(),
+                b.efficiency_pct.into(),
+                b.stolen_jobs.into(),
+            ]);
+        }
+        // Only the deterministic counters (entries, lookups) are
+        // reported: hit/miss splits vary with worker races, and the
+        // facade guarantees bit-identical artifacts run to run.
+        a.push_note(planning.summary());
+        a
+    }
+}
+
+fn table3() -> Artifact {
+    let mut a = Artifact::new("table3", "Table III: address-generation prologue latency")
+        .columns(vec![
+            Column::new("mode"),
+            Column::new("pass"),
+            Column::new("module"),
+            Column::new("prologue_cycles").unit("cycles"),
+        ]);
+    for (mode, pass, module, cycles) in report::table3() {
+        a.push_row(vec![
+            mode.legend().into(),
+            pass.name().into(),
+            format!("{module:?}").into(),
+            cycles.into(),
+        ]);
+    }
+    a
+}
+
+fn table4() -> Artifact {
+    let mut a = Artifact::new("table4", "Table IV: address-generation module area (ASAP7 model)")
+        .columns(vec![
+            Column::new("mode"),
+            Column::new("module"),
+            Column::new("area_um2").unit("um^2").precision(0),
+            Column::new("ratio_pct").unit("%"),
+        ]);
+    for r in crate::area::table4() {
+        a.push_row(vec![
+            r.mode.legend().into(),
+            format!("{:?}", r.module).into(),
+            r.area_um2.into(),
+            r.ratio_pct.into(),
+        ]);
+    }
+    a
+}
+
+fn sparsity_artifact(extended: bool) -> Artifact {
+    let nets = Service::networks(extended);
+    let mut a = Artifact::new("sparsity", "Lowered-matrix sparsity per workload layer")
+        .meta("networks", if extended { "extended" } else { "paper" })
+        .columns(vec![
+            Column::new("layer"),
+            Column::new("loss_matrix_b_sparsity_pct").unit("%"),
+            Column::new("grad_matrix_a_sparsity_pct").unit("%"),
+        ]);
+    for net in &nets {
+        for l in &net.layers {
+            a.push_row(vec![
+                l.params.id().into(),
+                (sparsity::loss_matrix_b(&l.params).sparsity() * 100.0).into(),
+                (sparsity::grad_matrix_a(&l.params).sparsity() * 100.0).into(),
+            ]);
+        }
+    }
+    // Ranges over the SAME network set as the rows above (the paper
+    // reference values describe its six-network set).
+    let ((lmin, lmax), (gmin, gmax)) = report::sparsity_ranges_for(&nets);
+    a.push_note(format!(
+        "loss matrix B sparsity range: {:.2}%..{:.2}% (paper: 75..93.91%)",
+        lmin * 100.0,
+        lmax * 100.0
+    ));
+    a.push_note(format!(
+        "grad matrix A sparsity range: {:.2}%..{:.2}% (paper: 74.8..93.6%)",
+        gmin * 100.0,
+        gmax * 100.0
+    ));
+    a
+}
+
+/// Shared column schema of every per-network comparison artifact
+/// (Figs. 6–8, storage) — the CSV header stays the seed's
+/// `network,traditional,bp_im2col,reduction_pct,sparsity_pct`.
+fn network_bar_columns(metric_unit: &str) -> Vec<Column> {
+    vec![
+        Column::new("network"),
+        Column::new("traditional").unit(metric_unit).precision(0),
+        Column::new("bp_im2col").unit(metric_unit).precision(0),
+        Column::new("reduction_pct").unit("%").bar(),
+        Column::new("sparsity_pct").unit("%"),
+    ]
+}
+
+fn network_bar_row(b: report::NetworkBar) -> Vec<Value> {
+    vec![
+        b.network.into(),
+        b.traditional.into(),
+        b.bp.into(),
+        b.reduction_pct.into(),
+        b.sparsity_pct.into(),
+    ]
+}
+
+/// Compact provenance string of the serving config, stamped into every
+/// artifact's metadata.
+fn config_meta(cfg: &AccelConfig) -> String {
+    format!(
+        "T={} bw={} bufA={} bufB={} reorg={} sparse_skip={}",
+        cfg.array_dim,
+        cfg.dram.elems_per_cycle,
+        cfg.buf_a_half,
+        cfg.buf_b_half,
+        cfg.reorg_cycles_per_elem,
+        cfg.sparse_skip
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::Figure;
+
+    #[test]
+    fn every_artifact_carries_request_and_config_meta() {
+        let svc = Service::new(AccelConfig::default());
+        for a in svc.run(&SimRequest::Table3) {
+            assert!(a.meta.iter().any(|(k, v)| k == "request" && v == "table3"));
+            assert!(a.meta.iter().any(|(k, v)| k == "config" && v.contains("T=16")));
+        }
+    }
+
+    #[test]
+    fn table_artifacts_have_expected_shapes() {
+        let svc = Service::new(AccelConfig::default());
+        let t2 = svc.run(&SimRequest::Table2);
+        assert_eq!(t2.len(), 1);
+        assert_eq!(t2[0].rows.len(), 10);
+        assert_eq!(t2[0].col("paper_speedup"), Some(6));
+        let t4 = svc.run(&SimRequest::Table4);
+        assert_eq!(t4[0].rows.len(), 4);
+        assert!(t4[0].render_text().contains('%'));
+    }
+
+    #[test]
+    fn layer_request_uses_the_shared_cache() {
+        let svc = Service::new(AccelConfig::default());
+        let p = crate::conv::ConvParams::square(56, 128, 128, 3, 2, 1);
+        svc.run(&SimRequest::layer(p));
+        let stats = svc.plan_cache().stats();
+        assert_eq!(stats.entries, 4, "two passes x two modes");
+        svc.run(&SimRequest::layer(p));
+        assert_eq!(svc.plan_cache().stats().entries, 4, "replay plans nothing new");
+    }
+
+    #[test]
+    fn figure_with_devices_appends_fleet_sibling() {
+        let svc = Service::new(AccelConfig::default());
+        let req: SimRequest =
+            FigureRequest::new(Figure::Runtime).pass(Pass::Loss).devices(2).into();
+        let arts = svc.run(&req);
+        assert_eq!(arts.len(), 2);
+        assert_eq!(arts[0].name, "fig6a");
+        assert_eq!(arts[1].name, "fleet");
+        assert!(arts[1].notes.iter().any(|n| n.contains("plan cache")));
+    }
+}

@@ -1,0 +1,245 @@
+//! Typed requests: everything the CLI (and any future request-serving
+//! frontend) can ask of the [`crate::api::Service`], as data.
+//!
+//! A [`SimRequest`] carries the *what* (which table / figure / sweep)
+//! and the per-request options (pass filter, network set, device
+//! count); the platform — [`crate::accel::AccelConfig`] and the shared
+//! plan cache — lives on the `Service` that serves it. Requests are
+//! plain comparable values, so they can be logged, queued, batched
+//! ([`crate::api::Service::run_batch`]) and round-tripped.
+
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::Pass;
+use crate::report::Figure;
+
+/// Which backpropagation passes a figure request covers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PassFilter {
+    /// Both panels (loss then grad) — the default.
+    #[default]
+    Both,
+    /// A single pass (`--pass loss|grad`).
+    Only(Pass),
+}
+
+impl PassFilter {
+    /// The selected passes, in panel order.
+    pub fn passes(&self) -> Vec<Pass> {
+        match self {
+            PassFilter::Both => vec![Pass::Loss, Pass::Grad],
+            PassFilter::Only(p) => vec![*p],
+        }
+    }
+}
+
+/// Request for one of the per-network figures (6, 7 or 8).
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::api::{FigureRequest, SimRequest};
+/// use bp_im2col::im2col::pipeline::Pass;
+/// use bp_im2col::report::Figure;
+///
+/// let req: SimRequest =
+///     FigureRequest::new(Figure::Runtime).pass(Pass::Loss).devices(2).into();
+/// match &req {
+///     SimRequest::Figure(f) => {
+///         assert_eq!(f.figure.number(), 6);
+///         assert_eq!(f.devices, Some(2));
+///         assert!(!f.extended);
+///     }
+///     _ => unreachable!(),
+/// }
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FigureRequest {
+    /// Which figure to regenerate.
+    pub figure: Figure,
+    /// Pass selection (both panels by default).
+    pub passes: PassFilter,
+    /// Include the dilated/grouped extension networks.
+    pub extended: bool,
+    /// Also produce a fleet-scaling sibling artifact over `N` devices.
+    pub devices: Option<usize>,
+}
+
+impl FigureRequest {
+    /// Figure request with default options (both passes, paper networks,
+    /// no fleet sibling).
+    pub fn new(figure: Figure) -> Self {
+        Self { figure, passes: PassFilter::Both, extended: false, devices: None }
+    }
+
+    /// Restrict to a single pass.
+    pub fn pass(mut self, pass: Pass) -> Self {
+        self.passes = PassFilter::Only(pass);
+        self
+    }
+
+    /// Select the extended (dilated/grouped) workload set.
+    pub fn extended(mut self, extended: bool) -> Self {
+        self.extended = extended;
+        self
+    }
+
+    /// Append a fleet-scaling summary over `devices` accelerators.
+    pub fn devices(mut self, devices: usize) -> Self {
+        self.devices = Some(devices);
+        self
+    }
+}
+
+impl From<FigureRequest> for SimRequest {
+    fn from(r: FigureRequest) -> Self {
+        SimRequest::Figure(r)
+    }
+}
+
+/// Request for the fleet-scaling summary on its own.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FleetRequest {
+    /// Number of simulated accelerators (>= 1).
+    pub devices: usize,
+    /// Include the dilated/grouped extension networks.
+    pub extended: bool,
+}
+
+impl FleetRequest {
+    /// Fleet summary over `devices` accelerators, paper networks.
+    pub fn new(devices: usize) -> Self {
+        Self { devices, extended: false }
+    }
+
+    /// Select the extended (dilated/grouped) workload set.
+    pub fn extended(mut self, extended: bool) -> Self {
+        self.extended = extended;
+        self
+    }
+}
+
+impl From<FleetRequest> for SimRequest {
+    fn from(r: FleetRequest) -> Self {
+        SimRequest::Fleet(r)
+    }
+}
+
+/// One query against the analytic/event model — every CLI command except
+/// the PJRT `train` action maps to exactly one of these.
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::api::SimRequest;
+/// use bp_im2col::ConvParams;
+///
+/// let req = SimRequest::layer(ConvParams::square(56, 128, 128, 3, 2, 1));
+/// assert_eq!(req.name(), "layer");
+/// assert_eq!(SimRequest::fleet(4).name(), "fleet");
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimRequest {
+    /// Table II: per-layer backpropagation runtime vs the paper.
+    Table2,
+    /// Table III: address-generation prologue latencies.
+    Table3,
+    /// Table IV: address-generation module areas (ASAP7 model).
+    Table4,
+    /// Figs. 6–8: per-network metric comparison.
+    Figure(FigureRequest),
+    /// Lowered-matrix sparsity of every workload layer.
+    Sparsity {
+        /// Include the dilated/grouped extension networks.
+        extended: bool,
+    },
+    /// Additional-storage overhead per network.
+    Storage {
+        /// Include the dilated/grouped extension networks.
+        extended: bool,
+    },
+    /// Single-layer simulation in both modes (`sim --layer`).
+    Layer(ConvParams),
+    /// Whole-training-step cost per network, optionally with a fleet
+    /// sibling over `devices` accelerators.
+    TrainCost {
+        /// Shard the backward passes across this many devices.
+        devices: Option<usize>,
+    },
+    /// Fleet-scaling summary.
+    Fleet(FleetRequest),
+}
+
+impl SimRequest {
+    /// Single-layer request (validates nothing — pass a
+    /// [`ConvParams::validate`]d geometry).
+    pub fn layer(params: ConvParams) -> Self {
+        SimRequest::Layer(params)
+    }
+
+    /// Fleet summary over `devices` accelerators, paper networks.
+    pub fn fleet(devices: usize) -> Self {
+        SimRequest::Fleet(FleetRequest::new(devices))
+    }
+
+    /// Stable request kind name (used for logging and artifact
+    /// provenance metadata).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimRequest::Table2 => "table2",
+            SimRequest::Table3 => "table3",
+            SimRequest::Table4 => "table4",
+            SimRequest::Figure(f) => match f.figure {
+                Figure::Runtime => "fig6",
+                Figure::OffChipTraffic => "fig7",
+                Figure::BufferReads => "fig8",
+            },
+            SimRequest::Sparsity { .. } => "sparsity",
+            SimRequest::Storage { .. } => "storage",
+            SimRequest::Layer(_) => "layer",
+            SimRequest::TrainCost { .. } => "traincost",
+            SimRequest::Fleet(_) => "fleet",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_fill_every_option() {
+        let f = FigureRequest::new(Figure::BufferReads)
+            .pass(Pass::Grad)
+            .extended(true)
+            .devices(8);
+        assert_eq!(f.passes.passes(), vec![Pass::Grad]);
+        assert!(f.extended);
+        assert_eq!(f.devices, Some(8));
+        let req: SimRequest = f.into();
+        assert_eq!(req.name(), "fig8");
+    }
+
+    #[test]
+    fn default_pass_filter_is_both_in_panel_order() {
+        assert_eq!(PassFilter::default().passes(), vec![Pass::Loss, Pass::Grad]);
+    }
+
+    #[test]
+    fn request_names_are_stable() {
+        assert_eq!(SimRequest::Table2.name(), "table2");
+        assert_eq!(SimRequest::Sparsity { extended: false }.name(), "sparsity");
+        assert_eq!(SimRequest::TrainCost { devices: None }.name(), "traincost");
+        let fleet: SimRequest = FleetRequest::new(2).extended(true).into();
+        assert_eq!(fleet.name(), "fleet");
+    }
+
+    #[test]
+    fn requests_are_comparable_and_hashable() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(SimRequest::Table2);
+        set.insert(SimRequest::Table2);
+        set.insert(SimRequest::fleet(4));
+        assert_eq!(set.len(), 2);
+    }
+}

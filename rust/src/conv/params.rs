@@ -245,6 +245,91 @@ impl ConvParams {
         id
     }
 
+    /// Parse a layer spec string into validated parameters.
+    ///
+    /// Accepts both the input form `H/C/N/K/S/P[/G[/D]]` (bare numerics,
+    /// groups then dilation) and the exact strings [`ConvParams::id`]
+    /// prints (`S` may be `ShxSw`; suffixes `dD`/`dDhxDw` and `gG` in
+    /// any order) — so every layer id in the tool's own output
+    /// round-trips through `sim --layer`.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use bp_im2col::ConvParams;
+    ///
+    /// let p = ConvParams::parse_spec("56/128/128/3/2/1/g32").unwrap();
+    /// assert_eq!(p.groups, 32);
+    /// // Printed ids parse back to the identical geometry.
+    /// assert_eq!(ConvParams::parse_spec(&p.id()).unwrap(), p);
+    /// assert!(ConvParams::parse_spec("1/2/3").is_err());
+    /// ```
+    pub fn parse_spec(spec: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = spec.split('/').collect();
+        if !(6..=8).contains(&parts.len()) {
+            return Err(format!("layer spec must be H/C/N/K/S/P[/G[/D]], got {spec:?}"));
+        }
+        let num = |s: &str| -> Result<usize, String> {
+            s.parse().map_err(|_| format!("bad layer component {s:?}"))
+        };
+        let (hi, c, n) = (num(parts[0])?, num(parts[1])?, num(parts[2])?);
+        let (k, ph) = (num(parts[3])?, num(parts[5])?);
+        let (sh, sw) = Self::parse_pair(parts[4])?;
+        let mut p = ConvParams::square(hi, c, n, k, 1, ph).with_stride(sh, sw);
+        let mut groups_set = false;
+        let mut dilation_set = false;
+        let mut tagged = false;
+        for extra in &parts[6..] {
+            if let Some(rest) = extra.strip_prefix('d') {
+                if dilation_set {
+                    return Err(format!("duplicate dilation component {extra:?} in {spec:?}"));
+                }
+                let (dh, dw) = Self::parse_pair(rest)?;
+                p = p.with_dilation(dh, dw);
+                dilation_set = true;
+                tagged = true;
+            } else if let Some(rest) = extra.strip_prefix('g') {
+                if groups_set {
+                    return Err(format!("duplicate groups component {extra:?} in {spec:?}"));
+                }
+                p = p.with_groups(num(rest)?);
+                groups_set = true;
+                tagged = true;
+            } else if tagged {
+                // A bare numeral after a gG/dD component is ambiguous
+                // (positional order is groups-then-dilation, which a tag
+                // may already have consumed) — require tags throughout.
+                return Err(format!(
+                    "bare component {extra:?} after a tagged g/d component in {spec:?}; \
+                     tag it as g{extra} or d{extra}"
+                ));
+            } else if !groups_set {
+                p = p.with_groups(num(extra)?);
+                groups_set = true;
+            } else {
+                let d = num(extra)?;
+                p = p.with_dilation(d, d);
+                dilation_set = true;
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Parse one `A` or `AxB` spec component (strides, dilation).
+    fn parse_pair(s: &str) -> Result<(usize, usize), String> {
+        let bad = || format!("bad layer component {s:?}");
+        match s.split_once('x') {
+            None => {
+                let v: usize = s.parse().map_err(|_| bad())?;
+                Ok((v, v))
+            }
+            Some((a, b)) => {
+                Ok((a.parse().map_err(|_| bad())?, b.parse().map_err(|_| bad())?))
+            }
+        }
+    }
+
     /// Validity checks used by tests and the workload tables.
     pub fn validate(&self) -> Result<(), String> {
         if self.kh == 0
@@ -402,6 +487,66 @@ mod tests {
         let mut p = ConvParams::square(28, 4, 4, 3, 1, 2).with_dilation(1, 1);
         p.ph = 3;
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn parse_spec_accepts_input_and_printed_forms() {
+        // Positional groups-then-dilation, tagged g/d in either order,
+        // asymmetric pairs — and every printed id round-trips.
+        let cases = [
+            ("224/3/64/3/2/0", ConvParams::square(224, 3, 64, 3, 2, 0)),
+            ("56/128/128/3/2/1/32", ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)),
+            (
+                "28/64/64/3/1/2/64/2",
+                ConvParams::square(28, 64, 64, 3, 1, 2).with_groups(64).with_dilation(2, 2),
+            ),
+            (
+                "28/64/64/3/1/2/d2/g64",
+                ConvParams::square(28, 64, 64, 3, 1, 2).with_groups(64).with_dilation(2, 2),
+            ),
+            ("9/1/1/3/2x3/1", ConvParams::square(9, 1, 1, 3, 1, 1).with_stride(2, 3)),
+        ];
+        for (spec, want) in cases {
+            let got = ConvParams::parse_spec(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(got, want, "{spec}");
+            assert_eq!(ConvParams::parse_spec(&got.id()).unwrap(), got, "{spec} id round-trip");
+        }
+    }
+
+    #[test]
+    fn parse_spec_rejects_malformed_and_invalid() {
+        let bad_specs =
+            ["1/2/3", "a/b/c/d/e/f", "224/3/64/3/0/0", "8/1/1/1/2/3", "56/100/100/3/2/1/32"];
+        for bad in bad_specs {
+            assert!(ConvParams::parse_spec(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn parse_spec_rejects_bare_component_after_tagged() {
+        // `g64/2` would silently overwrite groups (2 divides 64), and
+        // `d2/64` would misread 64 as groups — both ambiguous mixes.
+        for bad in ["28/64/64/3/1/2/g64/2", "28/64/64/3/1/2/d2/64"] {
+            let err = ConvParams::parse_spec(bad).unwrap_err();
+            assert!(err.contains("tagged"), "{bad}: {err}");
+        }
+        // Positional-then-tagged dilation stays unambiguous and accepted.
+        let p = ConvParams::parse_spec("28/64/64/3/1/2/64/d2").unwrap();
+        assert_eq!((p.groups, p.dh), (64, 2));
+    }
+
+    #[test]
+    fn parse_spec_rejects_component_overwrites() {
+        // Last-wins would silently drop what the user asked for: a tag
+        // re-setting a positionally-set groups, or a repeated tag.
+        for (bad, what) in [
+            ("28/64/64/3/1/2/64/g32", "groups"),
+            ("28/64/64/3/1/2/g4/g8", "groups"),
+            ("28/64/64/3/1/2/d2/d3", "dilation"),
+        ] {
+            let err = ConvParams::parse_spec(bad).unwrap_err();
+            assert!(err.contains("duplicate") && err.contains(what), "{bad}: {err}");
+        }
     }
 
     #[test]

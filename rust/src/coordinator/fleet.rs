@@ -109,6 +109,11 @@ impl FleetReport {
 /// A fleet of `N` identical simulated accelerators sharing one plan
 /// cache.
 ///
+/// Fleet *queries* (the scaling summary of `repro fleet` and
+/// `--devices N`) are served through the [`crate::api::Service`]
+/// facade, which owns fleet construction and renders the results;
+/// construct a `Fleet` directly for raw [`FleetReport`]s.
+///
 /// # Example
 ///
 /// ```

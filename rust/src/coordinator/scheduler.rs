@@ -179,6 +179,12 @@ pub(crate) fn default_workers() -> usize {
 /// `(layer, pass, mode)` plans the lowering, every later job — in this
 /// network or the next `run_network` call — reuses it.
 ///
+/// This is the *execution* layer. Query consumers (figures, sweeps,
+/// CLI) normally go through the [`crate::api::Service`] facade, which
+/// owns a scheduler-compatible shared cache and wraps results in
+/// renderable artifacts; construct a `Scheduler` directly when you need
+/// raw [`NetworkReport`]s.
+///
 /// # Example
 ///
 /// ```

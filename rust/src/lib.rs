@@ -44,7 +44,13 @@
 //!   (behind the `pjrt` feature; the default build has no external
 //!   dependencies).
 //! * [`area`] — ASAP7-calibrated structural area model (Table IV).
-//! * [`report`] — regenerates every table and figure of the paper.
+//! * [`report`] — regenerates the numbers behind every table and figure
+//!   of the paper.
+//! * [`api`] — the public query facade: typed [`api::SimRequest`]s
+//!   served by an [`api::Service`] (shared plan cache, concurrent
+//!   batches) into structured [`api::Artifact`]s with one
+//!   text/CSV/JSON rendering layer — what the `repro` CLI and any
+//!   request-serving frontend speak (DESIGN.md §9).
 //!
 //! See the top-level `README.md` for a quickstart and the full CLI
 //! command table, `DESIGN.md` for modeling decisions, and
@@ -53,6 +59,7 @@
 #![warn(missing_docs)]
 
 pub mod accel;
+pub mod api;
 pub mod area;
 pub mod conv;
 pub mod coordinator;
@@ -64,5 +71,6 @@ pub mod sim;
 pub mod tensor;
 pub mod workloads;
 
+pub use api::{Artifact, Service, SimRequest};
 pub use conv::ConvParams;
 pub use tensor::Tensor4;

@@ -1,23 +1,31 @@
 //! `repro` — CLI of the BP-im2col reproduction.
 //!
-//! Subcommands regenerate each experiment of the paper (see DESIGN.md §4)
-//! on the simulated TPU-like accelerator, run end-to-end training through
-//! the AOT HLO artifacts, or simulate individual layers.
+//! A thin, declarative shell over the [`bp_im2col::api`] facade: argv is
+//! parsed against a per-command option table into a
+//! [`SimRequest`] (or several, for `all`), served by one
+//! [`Service`], and the resulting [`Artifact`]s are printed by the
+//! shared renderer — text by default, `--csv` or `--json` on every
+//! command. The only command that bypasses the facade is `train`, which
+//! is a PJRT *action*, not a model query.
 //!
-//! The offline image has no clap; argument parsing is hand-rolled.
+//! The offline image has no clap; parsing is hand-rolled but strict:
+//! unknown options and flag-shaped values (`--config --csv`) are
+//! rejected instead of silently ignored or swallowed.
 
 use std::process::ExitCode;
 
 use bp_im2col::accel::AccelConfig;
-use bp_im2col::accel::{metrics::speedup, simulate_pass};
+use bp_im2col::api::{
+    render_all_csv, render_all_json, render_all_text, Artifact, FigureRequest, FleetRequest,
+    Service, SimRequest,
+};
 use bp_im2col::conv::ConvParams;
 #[cfg(feature = "pjrt")]
 use bp_im2col::coordinator::{TrainConfig, Trainer};
-use bp_im2col::im2col::pipeline::{Mode, Pass};
-use bp_im2col::report;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report::Figure;
 #[cfg(feature = "pjrt")]
 use bp_im2col::runtime::Runtime;
-use bp_im2col::workloads;
 
 const USAGE: &str = "\
 repro — BP-Im2col reproduction (Yang et al., 2022)
@@ -59,86 +67,156 @@ LAYER SPEC (sim --layer):
 OPTIONS:
   --config <file.cfg>         Platform preset (see configs/)
   --bandwidth <elems/cycle>   Off-chip bandwidth override (default 16)
-  --csv                       Emit CSV instead of rendered tables (figs)
+  --csv                       Emit CSV (several artifacts are separated
+                              by `# <name>` comment lines)
+  --json                      Emit one JSON document: {\"artifacts\":[...]}
   --pass loss|grad            Restrict fig6/7/8 to one pass
   --extended                  Include the dilated/grouped workload networks
   --devices N                 Shard fig6/7/8/traincost/fleet backward
                               passes across N simulated accelerators
                               (fleet default 4; totals are bit-identical
-                              for any N, the fleet summary shows scaling;
-                              suppressed under --csv on figure commands —
-                              use `fleet --csv` for machine-readable rows)
+                              for any N, the fleet summary artifact shows
+                              the scaling in every output format)
   --steps N                   Training steps (train; default 300)
   --seed N                    Training seed (train; default 0)
+
+Unknown options are errors; `--key` options require a value that does
+not itself start with `--`.
 ";
 
-/// Minimal option scanner: `--key value` pairs + flags.
+/// Options every command accepts.
+const UNIVERSAL_OPTS: [&str; 4] = ["--config", "--bandwidth", "--csv", "--json"];
+
+/// Options that consume a value (everything else is a bare flag).
+const VALUE_OPTS: [&str; 7] =
+    ["--config", "--bandwidth", "--pass", "--devices", "--layer", "--steps", "--seed"];
+
+/// One CLI command: its name, the options it accepts beyond the
+/// universal set, and whether the universal query options (config /
+/// bandwidth / output format) apply at all. The whole grammar is this
+/// table.
+struct CommandSpec {
+    name: &'static str,
+    extra_opts: &'static [&'static str],
+    /// `false` for `train`, the one non-query action: it neither
+    /// renders artifacts nor simulates under a config, so accepting
+    /// `--json`/`--csv`/`--config`/`--bandwidth` would silently ignore
+    /// them — exactly the footgun this parser exists to remove.
+    universal: bool,
+}
+
+/// Options shared by the figure commands (and `all`, which runs them).
+const FIG_OPTS: &[&str] = &["--pass", "--extended", "--devices"];
+
+const COMMANDS: [CommandSpec; 13] = [
+    CommandSpec { name: "table2", extra_opts: &[], universal: true },
+    CommandSpec { name: "table3", extra_opts: &[], universal: true },
+    CommandSpec { name: "table4", extra_opts: &[], universal: true },
+    CommandSpec { name: "fig6", extra_opts: FIG_OPTS, universal: true },
+    CommandSpec { name: "fig7", extra_opts: FIG_OPTS, universal: true },
+    CommandSpec { name: "fig8", extra_opts: FIG_OPTS, universal: true },
+    CommandSpec { name: "sparsity", extra_opts: &["--extended"], universal: true },
+    CommandSpec { name: "storage", extra_opts: &["--extended"], universal: true },
+    CommandSpec { name: "sim", extra_opts: &["--layer"], universal: true },
+    CommandSpec { name: "traincost", extra_opts: &["--devices"], universal: true },
+    CommandSpec { name: "fleet", extra_opts: &["--devices", "--extended"], universal: true },
+    CommandSpec { name: "train", extra_opts: &["--steps", "--seed"], universal: false },
+    CommandSpec { name: "all", extra_opts: FIG_OPTS, universal: true },
+];
+
+/// Strictly parsed options: `--key value` pairs and bare flags, each
+/// checked against the command's option table at parse time.
 struct Opts {
-    args: Vec<String>,
+    values: Vec<(String, String)>,
+    flags: Vec<String>,
 }
 
 impl Opts {
+    /// Scan `args` against the allowed option set. Rejects unknown
+    /// options, duplicate options, missing values, flag-shaped values
+    /// and stray positional arguments.
+    fn parse(args: &[String], spec: &CommandSpec) -> Result<Self, String> {
+        let universal: &[&str] = if spec.universal { &UNIVERSAL_OPTS } else { &[] };
+        let allowed: Vec<&str> = universal.iter().chain(spec.extra_opts).copied().collect();
+        let mut values = Vec::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if !arg.starts_with("--") {
+                return Err(format!(
+                    "unexpected argument {arg:?} (options start with --; see `repro help`)"
+                ));
+            }
+            if !allowed.contains(&arg.as_str()) {
+                return Err(format!(
+                    "unknown option {arg:?} for `{}` (supported: {})",
+                    spec.name,
+                    allowed.join(", ")
+                ));
+            }
+            let seen =
+                flags.iter().any(|f| f == arg) || values.iter().any(|(k, _)| k == arg);
+            if seen {
+                return Err(format!("duplicate option {arg:?}"));
+            }
+            if VALUE_OPTS.contains(&arg.as_str()) {
+                let Some(v) = args.get(i + 1) else {
+                    return Err(format!("option {arg} needs a value"));
+                };
+                if v.starts_with("--") {
+                    return Err(format!(
+                        "option {arg} needs a value, but got the option-like {v:?}"
+                    ));
+                }
+                values.push((arg.clone(), v.clone()));
+                i += 2;
+            } else {
+                flags.push(arg.clone());
+                i += 1;
+            }
+        }
+        Ok(Opts { values, flags })
+    }
+
     fn value(&self, key: &str) -> Option<&str> {
-        self.args
-            .iter()
-            .position(|a| a == key)
-            .and_then(|i| self.args.get(i + 1))
-            .map(|s| s.as_str())
+        self.values.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
     fn flag(&self, key: &str) -> bool {
-        self.args.iter().any(|a| a == key)
+        self.flags.iter().any(|f| f == key)
     }
 }
 
-/// Parse one `A` or `AxB` pair (strides, dilation).
-fn parse_pair(s: &str) -> Result<(usize, usize), String> {
-    let bad = || format!("bad layer component {s:?}");
-    match s.split_once('x') {
-        None => {
-            let v: usize = s.parse().map_err(|_| bad())?;
-            Ok((v, v))
-        }
-        Some((a, b)) => {
-            Ok((a.parse().map_err(|_| bad())?, b.parse().map_err(|_| bad())?))
-        }
-    }
+/// Output format selected by `--csv` / `--json` (mutually exclusive).
+#[derive(Clone, Copy, PartialEq)]
+enum Format {
+    Text,
+    Csv,
+    Json,
 }
 
-/// Parse a layer spec. Accepts both the input form
-/// `H/C/N/K/S/P[/G[/D]]` (bare numerics, groups then dilation) and the
-/// exact strings [`ConvParams::id`] prints (`S` may be `ShxSw`;
-/// suffixes `dD`/`dDhxDw` and `gG` in any order) — so every layer id in
-/// the tool's own output round-trips through `sim --layer`.
-fn parse_layer(spec: &str) -> Result<ConvParams, String> {
-    let parts: Vec<&str> = spec.split('/').collect();
-    if !(6..=8).contains(&parts.len()) {
-        return Err(format!("layer spec must be H/C/N/K/S/P[/G[/D]], got {spec:?}"));
-    }
-    let num = |s: &str| -> Result<usize, String> {
-        s.parse().map_err(|_| format!("bad layer component {s:?}"))
-    };
-    let (hi, c, n) = (num(parts[0])?, num(parts[1])?, num(parts[2])?);
-    let (k, ph) = (num(parts[3])?, num(parts[5])?);
-    let (sh, sw) = parse_pair(parts[4])?;
-    let mut p = ConvParams::square(hi, c, n, k, 1, ph).with_stride(sh, sw);
-    let mut positional = 0usize;
-    for extra in &parts[6..] {
-        if let Some(rest) = extra.strip_prefix('d') {
-            let (dh, dw) = parse_pair(rest)?;
-            p = p.with_dilation(dh, dw);
-        } else if let Some(rest) = extra.strip_prefix('g') {
-            p = p.with_groups(num(rest)?);
-        } else if positional == 0 {
-            p = p.with_groups(num(extra)?);
-            positional += 1;
-        } else {
-            let d = num(extra)?;
-            p = p.with_dilation(d, d);
+impl Format {
+    fn from_opts(opts: &Opts) -> Result<Self, String> {
+        match (opts.flag("--csv"), opts.flag("--json")) {
+            (true, true) => Err("--csv and --json are mutually exclusive".into()),
+            (true, false) => Ok(Format::Csv),
+            (false, true) => Ok(Format::Json),
+            (false, false) => Ok(Format::Text),
         }
     }
-    p.validate()?;
-    Ok(p)
+
+    fn render(&self, artifacts: &[Artifact]) -> String {
+        match self {
+            Format::Text => render_all_text(artifacts),
+            Format::Csv => render_all_csv(artifacts),
+            Format::Json => {
+                let mut out = render_all_json(artifacts);
+                out.push('\n');
+                out
+            }
+        }
+    }
 }
 
 fn accel_config(opts: &Opts) -> Result<AccelConfig, String> {
@@ -169,107 +247,63 @@ fn devices(opts: &Opts) -> Result<Option<usize>, String> {
     }
 }
 
-/// Print the fleet-scaling summary for the given networks.
-fn print_fleet_summary_for(
-    nets: &[workloads::Network],
-    cfg: &AccelConfig,
-    opts: &Opts,
-    n_devices: usize,
-) -> Result<(), String> {
-    let (bars, planning) = report::fleet_summary(nets, cfg, Mode::BpIm2col, n_devices);
-    if opts.flag("--csv") {
-        print!("{}", report::fleet_to_csv(&bars));
-    } else {
-        println!("{}", report::render_fleet(n_devices, &bars, &planning));
-    }
-    Ok(())
-}
-
-/// Print the fleet-scaling summary for the `--extended`-selected set.
-fn print_fleet_summary(cfg: &AccelConfig, opts: &Opts, n_devices: usize) -> Result<(), String> {
-    print_fleet_summary_for(&networks(opts), cfg, opts, n_devices)
-}
-
-fn passes(opts: &Opts) -> Result<Vec<Pass>, String> {
+/// Build one figure request from the command's options.
+fn figure_request(figure: Figure, opts: &Opts) -> Result<FigureRequest, String> {
+    let mut req = FigureRequest::new(figure).extended(opts.flag("--extended"));
     match opts.value("--pass") {
-        None => Ok(vec![Pass::Loss, Pass::Grad]),
-        Some("loss") => Ok(vec![Pass::Loss]),
-        Some("grad") => Ok(vec![Pass::Grad]),
-        Some(o) => Err(format!("bad --pass {o:?} (loss|grad)")),
+        None => {}
+        Some("loss") => req = req.pass(Pass::Loss),
+        Some("grad") => req = req.pass(Pass::Grad),
+        Some(o) => return Err(format!("bad --pass {o:?} (loss|grad)")),
     }
-}
-
-/// Workload set selected by `--extended` (the paper's six networks plus
-/// the dilated/grouped ones).
-fn networks(opts: &Opts) -> Vec<workloads::Network> {
-    if opts.flag("--extended") {
-        workloads::extended_networks()
-    } else {
-        workloads::all_networks()
-    }
-}
-
-fn cmd_fig(which: u8, cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
-    let nets = networks(opts);
-    for pass in passes(opts)? {
-        let panel = if pass == Pass::Loss { "a" } else { "b" };
-        let (bars, title, with_sparsity) = match which {
-            6 => (
-                report::fig6_for(&nets, cfg, pass),
-                format!("Fig 6{panel}: {}-calculation runtime reduction", pass.name()),
-                false,
-            ),
-            7 => (
-                report::fig7_for(&nets, cfg, pass),
-                format!("Fig 7{panel}: off-chip traffic reduction ({} calc)", pass.name()),
-                false,
-            ),
-            8 => (
-                report::fig8_for(&nets, cfg, pass),
-                format!("Fig 8{panel}: on-chip buffer bandwidth reduction ({} calc)", pass.name()),
-                true,
-            ),
-            _ => unreachable!(),
-        };
-        if opts.flag("--csv") {
-            print!("{}", report::bars_to_csv(&bars));
-        } else {
-            println!("{}", report::render_bars(&title, &bars, with_sparsity));
-        }
-    }
-    // With --devices N the same backward passes shard across a fleet;
-    // totals are bit-identical, the summary shows the scaling. Under
-    // --csv the summary is suppressed so stdout stays one parseable CSV
-    // document — use `repro fleet --csv` for machine-readable scaling.
     if let Some(n) = devices(opts)? {
-        if !opts.flag("--csv") {
-            print_fleet_summary(cfg, opts, n)?;
-        }
+        req = req.devices(n);
     }
-    Ok(())
+    Ok(req)
 }
 
-fn cmd_sim(cfg: &AccelConfig, opts: &Opts) -> Result<(), String> {
-    let spec = opts.value("--layer").ok_or(
-        "sim requires --layer H/C/N/K/S/P[/G[/D]] \
-         (e.g. --layer 56/128/128/3/2/1/g32; see `repro help`)",
-    )?;
-    let p = parse_layer(spec)?;
-    println!("layer {} (batch {}):", p.id(), p.b);
-    for pass in Pass::ALL {
-        let trad = simulate_pass(pass, Mode::Traditional, &p, cfg);
-        let bp = simulate_pass(pass, Mode::BpIm2col, &p, cfg);
-        println!(
-            "  {:<4}  BP {:>12.0} cyc | trad {:>12.0} comp + {:>12.0} reorg | speedup {:>5.2}x | sparsity {:>5.2}%",
-            pass.name(),
-            bp.total_cycles(),
-            trad.total_cycles() - trad.reorg_cycles,
-            trad.reorg_cycles,
-            speedup(&trad, &bp),
-            bp.sparsity * 100.0,
-        );
-    }
-    Ok(())
+/// Map a parsed command line onto the facade's typed requests — the
+/// entire command dispatch. `all` expands to the full report sequence.
+fn build_requests(cmd: &str, opts: &Opts) -> Result<Vec<SimRequest>, String> {
+    let extended = opts.flag("--extended");
+    Ok(match cmd {
+        "table2" => vec![SimRequest::Table2],
+        "table3" => vec![SimRequest::Table3],
+        "table4" => vec![SimRequest::Table4],
+        "fig6" => vec![figure_request(Figure::Runtime, opts)?.into()],
+        "fig7" => vec![figure_request(Figure::OffChipTraffic, opts)?.into()],
+        "fig8" => vec![figure_request(Figure::BufferReads, opts)?.into()],
+        "sparsity" => vec![SimRequest::Sparsity { extended }],
+        "storage" => vec![SimRequest::Storage { extended }],
+        "sim" => {
+            let spec = opts.value("--layer").ok_or(
+                "sim requires --layer H/C/N/K/S/P[/G[/D]] \
+                 (e.g. --layer 56/128/128/3/2/1/g32; see `repro help`)",
+            )?;
+            vec![SimRequest::layer(ConvParams::parse_spec(spec)?)]
+        }
+        "traincost" => vec![SimRequest::TrainCost { devices: devices(opts)? }],
+        "fleet" => {
+            let n = devices(opts)?.unwrap_or(4);
+            vec![FleetRequest::new(n).extended(extended).into()]
+        }
+        "all" => {
+            let mut reqs = vec![SimRequest::Table2, SimRequest::Table3, SimRequest::Table4];
+            for figure in Figure::ALL {
+                // One trailing fleet summary for the whole report, not
+                // one identical sibling per figure.
+                let mut fig = figure_request(figure, opts)?;
+                fig.devices = None;
+                reqs.push(fig.into());
+            }
+            reqs.push(SimRequest::Storage { extended });
+            if let Some(n) = devices(opts)? {
+                reqs.push(FleetRequest::new(n).extended(extended).into());
+            }
+            reqs
+        }
+        other => return Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    })
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -312,104 +346,29 @@ fn run() -> Result<(), String> {
         print!("{USAGE}");
         return Ok(());
     };
-    let opts = Opts { args: argv[1..].to_vec() };
-    let cfg = accel_config(&opts)?;
-    match cmd.as_str() {
-        "table2" => print!("{}", report::render_table2(&report::table2(&cfg))),
-        "table3" => print!("{}", report::render_table3()),
-        "table4" => print!("{}", report::render_table4()),
-        "fig6" => cmd_fig(6, &cfg, &opts)?,
-        "fig7" => cmd_fig(7, &cfg, &opts)?,
-        "fig8" => cmd_fig(8, &cfg, &opts)?,
-        "sparsity" => {
-            let nets = networks(&opts);
-            let layers: Vec<ConvParams> =
-                nets.iter().flat_map(|n| n.layers.iter().map(|l| l.params)).collect();
-            print!("{}", report::render_sparsity(&layers));
-            let ((lmin, lmax), (gmin, gmax)) = report::sparsity_ranges();
-            println!(
-                "\nloss matrix B sparsity range: {:.2}%..{:.2}% (paper: 75..93.91%)",
-                lmin * 100.0,
-                lmax * 100.0
-            );
-            println!(
-                "grad matrix A sparsity range: {:.2}%..{:.2}% (paper: 74.8..93.6%)",
-                gmin * 100.0,
-                gmax * 100.0
-            );
-        }
-        "storage" => {
-            let bars = report::storage_for(&networks(&opts), &cfg);
-            if opts.flag("--csv") {
-                print!("{}", report::bars_to_csv(&bars));
-            } else {
-                println!(
-                    "{}",
-                    report::render_bars("Additional storage overhead reduction", &bars, false)
-                );
-            }
-        }
-        "sim" => cmd_sim(&cfg, &opts)?,
-        "traincost" => {
-            use bp_im2col::accel::inference::training_step_cost;
-            let mut rows = Vec::new();
-            for net in workloads::all_networks() {
-                let mut sum = [0.0f64; 2]; // per mode
-                let mut fwd = 0.0f64;
-                for l in &net.layers {
-                    for (mi, mode) in Mode::ALL.iter().enumerate() {
-                        let c = training_step_cost(&l.params, *mode, &cfg);
-                        sum[mi] += (c.loss + c.grad) * l.count as f64;
-                        if mi == 0 {
-                            fwd += c.fwd * l.count as f64;
-                        }
-                    }
-                }
-                rows.push(vec![
-                    net.name.to_string(),
-                    format!("{:.0}", fwd + sum[0]),
-                    format!("{:.0}", fwd + sum[1]),
-                    format!("{:.2}x", (fwd + sum[0]) / (fwd + sum[1])),
-                    format!("{:.1}%", sum[1] / (fwd + sum[1]) * 100.0),
-                ]);
-            }
-            print!(
-                "{}",
-                report::fmt_table(
-                    &["network", "step cycles (trad)", "step cycles (BP)", "speedup", "bwd share (BP)"],
-                    &rows
-                )
-            );
-            // Same guard as the figure commands (keep stdout one format)
-            // and the same network set as the table above.
-            if let Some(n) = devices(&opts)? {
-                if !opts.flag("--csv") {
-                    println!();
-                    print_fleet_summary_for(&workloads::all_networks(), &cfg, &opts, n)?;
-                }
-            }
-        }
-        "fleet" => {
-            let n = devices(&opts)?.unwrap_or(4);
-            print_fleet_summary(&cfg, &opts, n)?;
-        }
-        "train" => cmd_train(&opts)?,
-        "all" => {
-            println!("== Table II ==\n{}", report::render_table2(&report::table2(&cfg)));
-            println!("== Table III ==\n{}", report::render_table3());
-            println!("== Table IV ==\n{}", report::render_table4());
-            for w in [6u8, 7, 8] {
-                cmd_fig(w, &cfg, &opts)?;
-            }
-            let bars = report::storage(&cfg);
-            println!(
-                "{}",
-                report::render_bars("Additional storage overhead reduction", &bars, false)
-            );
-        }
-        "help" | "--help" | "-h" => print!("{USAGE}"),
-        other => return Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+        print!("{USAGE}");
+        return Ok(());
     }
+    let Some(spec) = COMMANDS.iter().find(|c| c.name == cmd) else {
+        return Err(format!("unknown command {cmd:?}\n\n{USAGE}"));
+    };
+    let opts = Opts::parse(&argv[1..], spec)?;
+    let format = Format::from_opts(&opts)?;
+    if cmd == "train" {
+        return cmd_train(&opts);
+    }
+    let cfg = accel_config(&opts)?;
+    let requests = build_requests(&cmd, &opts)?;
+    let service = Service::new(cfg);
+    let artifacts: Vec<Artifact> = if requests.len() > 1 {
+        // `all`: serve the whole report sequence concurrently through
+        // the shared plan cache, print in request order.
+        service.run_batch(&requests).into_iter().flatten().collect()
+    } else {
+        service.run(&requests[0])
+    };
+    print!("{}", format.render(&artifacts));
     Ok(())
 }
 
@@ -420,5 +379,46 @@ fn main() -> ExitCode {
             eprintln!("error: {e}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parsed(cmd: &str, args: &[&str]) -> Opts {
+        let spec = COMMANDS.iter().find(|c| c.name == cmd).unwrap();
+        let args: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        Opts::parse(&args, spec).unwrap()
+    }
+
+    #[test]
+    fn all_with_devices_appends_exactly_one_fleet_request() {
+        let opts = parsed("all", &["--devices", "4"]);
+        let reqs = build_requests("all", &opts).unwrap();
+        let fleets = reqs.iter().filter(|r| matches!(r, SimRequest::Fleet(_))).count();
+        assert_eq!(fleets, 1, "one trailing fleet, not one per figure");
+        for r in &reqs {
+            if let SimRequest::Figure(f) = r {
+                assert_eq!(f.devices, None, "figures must not carry fleet siblings in `all`");
+            }
+        }
+        assert_eq!(reqs.len(), 8); // 3 tables + 3 figures + storage + fleet
+    }
+
+    #[test]
+    fn all_without_devices_has_no_fleet_request() {
+        let reqs = build_requests("all", &parsed("all", &[])).unwrap();
+        assert!(!reqs.iter().any(|r| matches!(r, SimRequest::Fleet(_))));
+        assert_eq!(reqs.len(), 7);
+    }
+
+    #[test]
+    fn train_spec_rejects_universal_options() {
+        let spec = COMMANDS.iter().find(|c| c.name == "train").unwrap();
+        for opt in UNIVERSAL_OPTS {
+            assert!(Opts::parse(&[opt.to_string()], spec).is_err(), "{opt}");
+        }
+        assert!(Opts::parse(&["--steps".into(), "5".into()], spec).is_ok());
     }
 }

@@ -1,0 +1,306 @@
+//! Facade equivalence tests: `SimRequest` → `Artifact` through the
+//! `Service` must reproduce the legacy free-function results
+//! **bit-exactly** for every command, network set and device count, and
+//! `run_batch` must equal sequential `run` over a seeded geometry sweep.
+
+use bp_im2col::accel::metrics::speedup;
+use bp_im2col::accel::{simulate_pass, AccelConfig};
+use bp_im2col::api::{Artifact, FigureRequest, FleetRequest, Service, SimRequest, Value};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::im2col::sparsity;
+use bp_im2col::report::{self, Figure};
+use bp_im2col::tensor::Rng;
+use bp_im2col::workloads;
+
+fn svc() -> Service {
+    Service::new(AccelConfig::default())
+}
+
+fn float(a: &Artifact, row: usize, col: &str) -> f64 {
+    a.float_at(row, col)
+        .unwrap_or_else(|| panic!("no numeric cell at ({row}, {col}) in {}", a.name))
+}
+
+fn text<'a>(a: &'a Artifact, row: usize, col: &str) -> &'a str {
+    a.rows[row][a.col(col).unwrap()].as_text().unwrap()
+}
+
+#[test]
+fn table2_bit_identical_to_legacy() {
+    let arts = svc().run(&SimRequest::Table2);
+    assert_eq!(arts.len(), 1);
+    let a = &arts[0];
+    let legacy = report::table2(&AccelConfig::default());
+    assert_eq!(a.rows.len(), legacy.len());
+    for (i, r) in legacy.iter().enumerate() {
+        assert_eq!(text(a, i, "layer"), r.layer);
+        assert_eq!(text(a, i, "pass"), r.pass.name());
+        assert_eq!(float(a, i, "bp_cycles"), r.bp_cycles);
+        assert_eq!(float(a, i, "trad_compute_cycles"), r.trad_compute);
+        assert_eq!(float(a, i, "trad_reorg_cycles"), r.trad_reorg);
+        assert_eq!(float(a, i, "speedup"), r.speedup);
+        assert_eq!(float(a, i, "paper_speedup"), r.paper_speedup);
+    }
+}
+
+#[test]
+fn table3_and_table4_bit_identical_to_legacy() {
+    let s = svc();
+    let t3 = &s.run(&SimRequest::Table3)[0];
+    let legacy3 = report::table3();
+    assert_eq!(t3.rows.len(), legacy3.len());
+    for (i, (mode, pass, module, cycles)) in legacy3.iter().enumerate() {
+        assert_eq!(text(t3, i, "mode"), mode.legend());
+        assert_eq!(text(t3, i, "pass"), pass.name());
+        assert_eq!(text(t3, i, "module"), format!("{module:?}"));
+        assert_eq!(float(t3, i, "prologue_cycles"), *cycles as f64);
+    }
+    let t4 = &s.run(&SimRequest::Table4)[0];
+    let legacy4 = bp_im2col::area::table4();
+    assert_eq!(t4.rows.len(), legacy4.len());
+    for (i, r) in legacy4.iter().enumerate() {
+        assert_eq!(float(t4, i, "area_um2"), r.area_um2);
+        assert_eq!(float(t4, i, "ratio_pct"), r.ratio_pct);
+    }
+}
+
+/// The acceptance sweep: every figure x pass x network set x device
+/// count 1/2/4 must be bit-identical to the legacy `fig*_for` results,
+/// and the fleet sibling must match `fleet_summary`.
+#[test]
+fn figures_bit_identical_to_legacy_for_devices_1_2_4() {
+    let cfg = AccelConfig::default();
+    let s = svc();
+    for figure in Figure::ALL {
+        for extended in [false, true] {
+            let nets =
+                if extended { workloads::extended_networks() } else { workloads::all_networks() };
+            for devices in [None, Some(1), Some(2), Some(4)] {
+                let mut req = FigureRequest::new(figure).pass(Pass::Loss).extended(extended);
+                if let Some(n) = devices {
+                    req = req.devices(n);
+                }
+                let arts = s.run(&req.into());
+                assert_eq!(arts.len(), if devices.is_some() { 2 } else { 1 });
+                let legacy = match figure {
+                    Figure::Runtime => report::fig6_for(&nets, &cfg, Pass::Loss),
+                    Figure::OffChipTraffic => report::fig7_for(&nets, &cfg, Pass::Loss),
+                    Figure::BufferReads => report::fig8_for(&nets, &cfg, Pass::Loss),
+                };
+                let a = &arts[0];
+                assert_eq!(a.rows.len(), legacy.len());
+                for (i, b) in legacy.iter().enumerate() {
+                    assert_eq!(text(a, i, "network"), b.network);
+                    assert_eq!(float(a, i, "traditional"), b.traditional);
+                    assert_eq!(float(a, i, "bp_im2col"), b.bp);
+                    assert_eq!(float(a, i, "reduction_pct"), b.reduction_pct);
+                    assert_eq!(float(a, i, "sparsity_pct"), b.sparsity_pct);
+                }
+                if let Some(n) = devices {
+                    let fleet = &arts[1];
+                    assert_eq!(fleet.name, "fleet");
+                    let (bars, _) = report::fleet_summary(&nets, &cfg, Mode::BpIm2col, n);
+                    assert_eq!(fleet.rows.len(), bars.len());
+                    for (i, b) in bars.iter().enumerate() {
+                        assert_eq!(text(fleet, i, "network"), b.network);
+                        assert_eq!(float(fleet, i, "jobs"), b.jobs as f64);
+                        assert_eq!(float(fleet, i, "busy_cycles"), b.busy_cycles);
+                        assert_eq!(float(fleet, i, "makespan_cycles"), b.makespan_cycles);
+                        assert_eq!(float(fleet, i, "speedup"), b.speedup);
+                        assert_eq!(float(fleet, i, "efficiency_pct"), b.efficiency_pct);
+                        assert_eq!(float(fleet, i, "stolen_jobs"), b.stolen_jobs as f64);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn figure_both_passes_yields_both_panels() {
+    let arts = svc().run(&FigureRequest::new(Figure::Runtime).into());
+    assert_eq!(arts.len(), 2);
+    assert_eq!(arts[0].name, "fig6a");
+    assert_eq!(arts[1].name, "fig6b");
+    let legacy_grad = report::fig6(&AccelConfig::default(), Pass::Grad);
+    for (i, b) in legacy_grad.iter().enumerate() {
+        assert_eq!(float(&arts[1], i, "traditional"), b.traditional);
+        assert_eq!(float(&arts[1], i, "bp_im2col"), b.bp);
+    }
+}
+
+#[test]
+fn sparsity_bit_identical_to_legacy() {
+    for extended in [false, true] {
+        let arts = svc().run(&SimRequest::Sparsity { extended });
+        let a = &arts[0];
+        let nets =
+            if extended { workloads::extended_networks() } else { workloads::all_networks() };
+        let mut i = 0;
+        for net in &nets {
+            for l in &net.layers {
+                assert_eq!(text(a, i, "layer"), l.params.id());
+                assert_eq!(
+                    float(a, i, "loss_matrix_b_sparsity_pct"),
+                    sparsity::loss_matrix_b(&l.params).sparsity() * 100.0
+                );
+                assert_eq!(
+                    float(a, i, "grad_matrix_a_sparsity_pct"),
+                    sparsity::grad_matrix_a(&l.params).sparsity() * 100.0
+                );
+                i += 1;
+            }
+        }
+        assert_eq!(a.rows.len(), i);
+        assert_eq!(a.notes.len(), 2, "loss + grad range notes");
+    }
+}
+
+#[test]
+fn storage_bit_identical_to_legacy() {
+    let cfg = AccelConfig::default();
+    for extended in [false, true] {
+        let nets =
+            if extended { workloads::extended_networks() } else { workloads::all_networks() };
+        let a = &svc().run(&SimRequest::Storage { extended })[0];
+        let legacy = report::storage_for(&nets, &cfg);
+        assert_eq!(a.rows.len(), legacy.len());
+        for (i, b) in legacy.iter().enumerate() {
+            assert_eq!(text(a, i, "network"), b.network);
+            assert_eq!(float(a, i, "traditional"), b.traditional);
+            assert_eq!(float(a, i, "bp_im2col"), b.bp);
+            assert_eq!(float(a, i, "reduction_pct"), b.reduction_pct);
+        }
+    }
+}
+
+#[test]
+fn layer_request_bit_identical_to_simulate_pass() {
+    let cfg = AccelConfig::default();
+    for p in [
+        ConvParams::square(224, 3, 64, 3, 2, 0),
+        ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32),
+        ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2),
+    ] {
+        let a = &svc().run(&SimRequest::layer(p))[0];
+        assert_eq!(a.rows.len(), 2);
+        for (i, pass) in Pass::ALL.iter().enumerate() {
+            let trad = simulate_pass(*pass, Mode::Traditional, &p, &cfg);
+            let bp = simulate_pass(*pass, Mode::BpIm2col, &p, &cfg);
+            assert_eq!(text(a, i, "pass"), pass.name());
+            assert_eq!(float(a, i, "bp_cycles"), bp.total_cycles());
+            assert_eq!(
+                float(a, i, "trad_compute_cycles"),
+                trad.total_cycles() - trad.reorg_cycles
+            );
+            assert_eq!(float(a, i, "trad_reorg_cycles"), trad.reorg_cycles);
+            assert_eq!(float(a, i, "speedup"), speedup(&trad, &bp));
+            assert_eq!(float(a, i, "sparsity_pct"), bp.sparsity * 100.0);
+        }
+        assert!(a.title.contains(&p.id()));
+    }
+}
+
+#[test]
+fn traincost_bit_identical_to_legacy() {
+    let a = &svc().run(&SimRequest::TrainCost { devices: None })[0];
+    let legacy = report::traincost(&AccelConfig::default());
+    assert_eq!(a.rows.len(), legacy.len());
+    for (i, r) in legacy.iter().enumerate() {
+        assert_eq!(text(a, i, "network"), r.network);
+        assert_eq!(float(a, i, "trad_step_cycles"), r.trad_step_cycles);
+        assert_eq!(float(a, i, "bp_step_cycles"), r.bp_step_cycles);
+        assert_eq!(float(a, i, "speedup"), r.speedup);
+        assert_eq!(float(a, i, "bp_backward_share_pct"), r.backward_share_pct);
+    }
+    // With devices, the fleet sibling rides along over the same six
+    // networks.
+    let with_fleet = svc().run(&SimRequest::TrainCost { devices: Some(2) });
+    assert_eq!(with_fleet.len(), 2);
+    assert_eq!(with_fleet[1].name, "fleet");
+    assert_eq!(with_fleet[1].rows.len(), 6);
+}
+
+#[test]
+fn fleet_request_bit_identical_for_devices_1_2_4() {
+    let cfg = AccelConfig::default();
+    for devices in [1usize, 2, 4] {
+        let a = &svc().run(&FleetRequest::new(devices).into())[0];
+        let (bars, planning) =
+            report::fleet_summary(&workloads::all_networks(), &cfg, Mode::BpIm2col, devices);
+        assert_eq!(a.rows.len(), bars.len());
+        for (i, b) in bars.iter().enumerate() {
+            assert_eq!(float(a, i, "busy_cycles"), b.busy_cycles);
+            assert_eq!(float(a, i, "makespan_cycles"), b.makespan_cycles);
+            assert_eq!(float(a, i, "speedup"), b.speedup);
+            assert_eq!(float(a, i, "stolen_jobs"), b.stolen_jobs as f64);
+        }
+        // The note reports only the deterministic counters.
+        assert_eq!(a.notes, vec![planning.summary()]);
+        assert!(a.title.contains(&format!("Fleet of {devices}")));
+    }
+}
+
+/// Seeded geometry sweep: `run_batch` must equal sequential `run`,
+/// artifact for artifact, including figure and fleet requests mixed in.
+#[test]
+fn run_batch_equals_sequential_over_seeded_sweep() {
+    let mut rng = Rng::new(20260729);
+    let mut requests: Vec<SimRequest> = Vec::new();
+    for _ in 0..12 {
+        let s = rng.range(2, 4);
+        let k = rng.range(1, 4);
+        let ph = rng.below(k);
+        let p = ConvParams::basic(
+            rng.range(1, 3),
+            rng.range(1, 4),
+            rng.range(k.max(6), 20),
+            rng.range(k.max(6), 20),
+            rng.range(1, 5),
+            k,
+            k,
+            s,
+            ph,
+            ph,
+        );
+        p.validate().expect("seeded geometry valid");
+        requests.push(SimRequest::layer(p));
+    }
+    requests.push(SimRequest::Table2);
+    requests.push(FigureRequest::new(Figure::Runtime).pass(Pass::Loss).into());
+    requests.push(FleetRequest::new(3).into());
+
+    let service = svc();
+    let sequential: Vec<Vec<_>> = requests.iter().map(|r| service.run(r)).collect();
+    let batched = service.run_batch(&requests);
+    assert_eq!(batched.len(), sequential.len());
+    for (i, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+        assert_eq!(b, s, "request {i} ({})", requests[i].name());
+    }
+    // And a second, fresh service (cold cache) still agrees bit-exactly.
+    let cold = Service::new(AccelConfig::default()).run_batch(&requests);
+    assert_eq!(cold, batched);
+}
+
+#[test]
+fn batch_shares_one_plan_cache_across_requests() {
+    let service = svc();
+    let p = ConvParams::square(56, 128, 128, 3, 2, 1);
+    let reqs = [SimRequest::layer(p), SimRequest::layer(p), SimRequest::layer(p)];
+    service.run_batch(&reqs);
+    let stats = service.plan_cache().stats();
+    assert_eq!(stats.entries, 4, "one geometry: 2 passes x 2 modes planned once");
+    assert_eq!(stats.lookups(), 12, "3 requests x 4 lookups each");
+}
+
+#[test]
+fn artifact_values_are_typed() {
+    // Counts come back as Int, measures as Float, labels as Text — the
+    // facade's contract with JSON consumers.
+    let a = &svc().run(&SimRequest::fleet(2))[0];
+    let row = &a.rows[0];
+    assert!(matches!(row[a.col("network").unwrap()], Value::Text(_)));
+    assert!(matches!(row[a.col("jobs").unwrap()], Value::Int(_)));
+    assert!(matches!(row[a.col("busy_cycles").unwrap()], Value::Float(_)));
+}

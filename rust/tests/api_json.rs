@@ -1,0 +1,365 @@
+//! Serialization round-trip tests: every `Artifact` renders to JSON a
+//! minimal in-test parser can read back — field names, row counts and
+//! numeric fidelity survive — and layer specs printed by
+//! `ConvParams::id` still round-trip through the spec parser.
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{render_all_json, Artifact, Column, FigureRequest, Service, SimRequest, Value};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report::Figure;
+
+// ---------------------------------------------------------------------------
+// A deliberately small recursive-descent JSON parser (tests only — the
+// crate itself stays dependency-free and the renderer untested-by-itself
+// would be circular).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn arr(&self) -> &[Json] {
+        match self {
+            Json::Arr(v) => v,
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    fn str(&self) -> &str {
+        match self {
+            Json::Str(s) => s,
+            other => panic!("expected string, got {other:?}"),
+        }
+    }
+
+    fn num(&self) -> f64 {
+        match self {
+            Json::Num(n) => *n,
+            other => panic!("expected number, got {other:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing bytes at {}", p.pos));
+    }
+    Ok(v)
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied().ok_or_else(|| "unexpected end".to_string())
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek()? != b {
+            return Err(format!("expected {:?} at {}", b as char, self.pos));
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at {}", self.pos))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            pairs.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                other => return Err(format!("bad object separator {:?}", other as char)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => return Err(format!("bad array separator {:?}", other as char)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self.bytes.get(self.pos).ok_or("unterminated string")?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = *self.bytes.get(self.pos).ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or("short \\u escape")?;
+                            self.pos += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                16,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            out.push(char::from_u32(code).ok_or("bad \\u code point")?);
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8: copy the whole scalar.
+                    let start = self.pos - 1;
+                    let len = utf8_len(b);
+                    self.pos = start + len;
+                    let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|e| e.to_string())?;
+                    out.push_str(s);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        s.parse::<f64>().map(Json::Num).map_err(|_| format!("bad number {s:?} at {start}"))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip assertions
+// ---------------------------------------------------------------------------
+
+/// Parse an artifact's JSON and check it reproduces the artifact's
+/// schema, row counts and numeric values exactly.
+fn assert_roundtrip(a: &Artifact) {
+    let parsed = parse_json(&a.render_json()).unwrap_or_else(|e| {
+        panic!("{}: unparseable JSON ({e}):\n{}", a.name, a.render_json())
+    });
+    assert_eq!(parsed.get("name").unwrap().str(), a.name);
+    assert_eq!(parsed.get("title").unwrap().str(), a.title);
+    let cols = parsed.get("columns").unwrap().arr();
+    assert_eq!(cols.len(), a.columns.len(), "{}: column count", a.name);
+    for (c, jc) in a.columns.iter().zip(cols) {
+        assert_eq!(jc.get("name").unwrap().str(), c.name);
+        match &c.unit {
+            Some(u) => assert_eq!(jc.get("unit").unwrap().str(), u),
+            None => assert_eq!(jc.get("unit").unwrap(), &Json::Null),
+        }
+    }
+    let rows = parsed.get("rows").unwrap().arr();
+    assert_eq!(rows.len(), a.rows.len(), "{}: row count", a.name);
+    for (row, jrow) in a.rows.iter().zip(rows) {
+        let jrow = jrow.arr();
+        assert_eq!(jrow.len(), row.len());
+        for (v, jv) in row.iter().zip(jrow) {
+            match v {
+                Value::Text(s) => assert_eq!(jv.str(), s),
+                // Shortest round-trip formatting: the parsed number is
+                // the exact original value, bit for bit.
+                Value::Int(n) => assert_eq!(jv.num(), *n as f64),
+                Value::Float(f) if f.is_finite() => {
+                    assert_eq!(jv.num().to_bits(), f.to_bits(), "{}: float fidelity", a.name)
+                }
+                Value::Float(_) => assert_eq!(jv, &Json::Null),
+            }
+        }
+    }
+    let notes = parsed.get("notes").unwrap().arr();
+    assert_eq!(notes.len(), a.notes.len());
+    for (n, jn) in a.notes.iter().zip(notes) {
+        assert_eq!(jn.str(), n);
+    }
+    let meta = parsed.get("meta").unwrap();
+    for (k, v) in &a.meta {
+        assert_eq!(meta.get(k).unwrap().str(), v, "{}: meta {k}", a.name);
+    }
+}
+
+#[test]
+fn every_request_kind_round_trips_through_json() {
+    let svc = Service::new(AccelConfig::default());
+    let requests: Vec<SimRequest> = vec![
+        SimRequest::Table2,
+        SimRequest::Table3,
+        SimRequest::Table4,
+        FigureRequest::new(Figure::Runtime).pass(Pass::Loss).devices(2).into(),
+        FigureRequest::new(Figure::OffChipTraffic).pass(Pass::Grad).into(),
+        FigureRequest::new(Figure::BufferReads).pass(Pass::Loss).extended(true).into(),
+        SimRequest::Sparsity { extended: false },
+        SimRequest::Storage { extended: true },
+        SimRequest::layer(ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)),
+        SimRequest::TrainCost { devices: Some(2) },
+        SimRequest::fleet(4),
+    ];
+    for req in &requests {
+        let arts = svc.run(req);
+        assert!(!arts.is_empty(), "{}: empty response", req.name());
+        for a in &arts {
+            assert!(!a.columns.is_empty() && !a.rows.is_empty(), "{}: empty artifact", a.name);
+            assert_roundtrip(a);
+        }
+    }
+}
+
+#[test]
+fn grouped_json_document_parses_and_keeps_order() {
+    let svc = Service::new(AccelConfig::default());
+    let arts = svc.run(&FigureRequest::new(Figure::Runtime).devices(2).into());
+    let doc = render_all_json(&arts);
+    let parsed = parse_json(&doc).unwrap();
+    let list = parsed.get("artifacts").unwrap().arr();
+    assert_eq!(list.len(), 3, "fig6a, fig6b, fleet");
+    let names: Vec<&str> = list.iter().map(|a| a.get("name").unwrap().str()).collect();
+    assert_eq!(names, ["fig6a", "fig6b", "fleet"]);
+}
+
+#[test]
+fn hostile_strings_survive_the_escape_path() {
+    let mut a = Artifact::new("esc", "quotes \" backslash \\ newline \n tab \t control \u{1}")
+        .meta("key \"k\"", "value\nwith\nnewlines")
+        .columns(vec![Column::new("label"), Column::new("v")]);
+    a.push_row(vec![Value::Text("cell, with , commas and \"quotes\"".into()), Value::Float(1.5)]);
+    a.push_note("note with \\u and \u{7f} bytes");
+    assert_roundtrip(&a);
+    // The CSV path quotes the hostile cell.
+    let csv = a.render_csv();
+    assert!(csv.contains("\"cell, with , commas and \"\"quotes\"\"\""));
+}
+
+#[test]
+fn numeric_extremes_round_trip() {
+    let mut a = Artifact::new("nums", "numeric fidelity").columns(vec![
+        Column::new("tiny"),
+        Column::new("big"),
+        Column::new("negative"),
+        Column::new("count"),
+    ]);
+    a.push_row(vec![
+        Value::Float(1.0e-12),
+        Value::Float(9.007199254740991e15), // 2^53 - 1
+        Value::Float(-123.456789012345),
+        Value::Int(u64::pow(2, 53) - 1),
+    ]);
+    assert_roundtrip(&a);
+}
+
+#[test]
+fn layer_ids_round_trip_through_the_spec_parser() {
+    // Every workload layer's printed id — including dilated, grouped and
+    // depthwise geometries — parses back to the identical ConvParams.
+    for net in bp_im2col::workloads::extended_networks() {
+        for l in &net.layers {
+            let id = l.params.id();
+            let parsed = ConvParams::parse_spec(&id)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", net.name, l.name));
+            assert_eq!(parsed, l.params, "{id}");
+        }
+    }
+    // Asymmetric strides and mixed tag order too.
+    for spec in ["9/1/1/3/2x3/1", "28/64/64/3/1/2/d2/g64", "56/64/64/3/2x1/1"] {
+        let p = ConvParams::parse_spec(spec).unwrap();
+        assert_eq!(ConvParams::parse_spec(&p.id()).unwrap(), p, "{spec}");
+    }
+}

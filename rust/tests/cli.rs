@@ -132,21 +132,115 @@ fn devices_flag_appends_fleet_summary_to_figs() {
     assert!(stdout.contains("Fleet of 2"));
     let (stdout, _, ok) = repro(&["traincost", "--devices", "2"]);
     assert!(ok, "{stdout}");
-    assert!(stdout.contains("step cycles"));
+    assert!(stdout.contains("step_cycles"));
     assert!(stdout.contains("Fleet of 2"));
 }
 
 #[test]
-fn csv_figs_stay_parseable_with_devices() {
-    // --csv + --devices must not concatenate a second CSV table.
+fn csv_figs_emit_fleet_as_separate_section() {
+    // --csv + --devices emits BOTH artifacts (no more silent fleet
+    // suppression): each section is preceded by a `# <name>` comment so
+    // the document still splits mechanically.
     let (stdout, _, ok) = repro(&["fig6", "--csv", "--pass", "loss", "--devices", "2"]);
     assert!(ok, "{stdout}");
-    assert!(!stdout.contains("Fleet of"), "{stdout}");
-    assert_eq!(
-        stdout.lines().next().unwrap(),
-        "network,traditional,bp_im2col,reduction_pct,sparsity_pct"
-    );
-    assert_eq!(stdout.lines().count(), 7, "one header + six networks:\n{stdout}");
+    assert!(stdout.starts_with("# fig6a\n"), "{stdout}");
+    assert!(stdout.contains("\n# fleet\n"), "{stdout}");
+    assert!(stdout.contains("network,traditional,bp_im2col,reduction_pct,sparsity_pct"));
+    assert!(stdout.contains("network,jobs,busy_cycles"));
+    // Six networks under each header.
+    let fig_rows = stdout
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.starts_with("network") && !l.is_empty());
+    assert_eq!(fig_rows.count(), 12, "{stdout}");
+}
+
+#[test]
+fn json_flag_works_on_every_command() {
+    for cmd in ["table2", "table3", "table4", "sparsity", "storage", "traincost"] {
+        let (stdout, stderr, ok) = repro(&[cmd, "--json"]);
+        assert!(ok, "{cmd}: {stderr}");
+        assert!(stdout.starts_with("{\"artifacts\":["), "{cmd}:\n{stdout}");
+        assert!(stdout.trim_end().ends_with("]}"), "{cmd}:\n{stdout}");
+    }
+    let (stdout, _, ok) = repro(&["fleet", "--json", "--devices", "2"]);
+    assert!(ok);
+    assert!(stdout.contains("\"name\":\"fleet\""));
+    assert!(stdout.contains("\"devices\":\"2\""));
+    let (stdout, _, ok) = repro(&["sim", "--json", "--layer", "56/256/512/1/2/0"]);
+    assert!(ok);
+    assert!(stdout.contains("\"name\":\"layer\""));
+    let (stdout, _, ok) = repro(&["fig6", "--json", "--pass", "loss", "--devices", "2"]);
+    assert!(ok);
+    assert!(stdout.contains("\"name\":\"fig6a\"") && stdout.contains("\"name\":\"fleet\""));
+}
+
+#[test]
+fn csv_and_json_are_mutually_exclusive() {
+    let (_, stderr, ok) = repro(&["table2", "--csv", "--json"]);
+    assert!(!ok);
+    assert!(stderr.contains("mutually exclusive"), "{stderr}");
+}
+
+#[test]
+fn unknown_option_rejected() {
+    // The seed scanner silently ignored misspellings like --extendd.
+    let (_, stderr, ok) = repro(&["fig6", "--extendd"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown option"), "{stderr}");
+    assert!(stderr.contains("--extended"), "should list supported options: {stderr}");
+    // Options valid on one command are rejected on another.
+    let (_, stderr, ok) = repro(&["table2", "--devices", "2"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown option"), "{stderr}");
+}
+
+#[test]
+fn flag_shaped_value_rejected() {
+    // The seed scanner happily took `--csv` as the value of `--config`.
+    let (_, stderr, ok) = repro(&["table2", "--config", "--csv"]);
+    assert!(!ok);
+    assert!(stderr.contains("--config"), "{stderr}");
+    assert!(stderr.contains("value"), "{stderr}");
+    // Trailing value-option with nothing after it.
+    let (_, stderr, ok) = repro(&["fig6", "--pass"]);
+    assert!(!ok);
+    assert!(stderr.contains("needs a value"), "{stderr}");
+}
+
+#[test]
+fn train_rejects_query_options_instead_of_ignoring_them() {
+    // `train` is a PJRT action, not a model query: it renders no
+    // artifacts and uses no AccelConfig, so the query options must be
+    // rejected rather than silently swallowed. Parsing runs before the
+    // pjrt-feature check, so this holds in every build.
+    for bad in [
+        ["train", "--json"],
+        ["train", "--csv"],
+        ["train", "--config"],
+        ["train", "--bandwidth"],
+    ] {
+        let (_, stderr, ok) = repro(&bad);
+        assert!(!ok, "{bad:?}");
+        assert!(stderr.contains("unknown option"), "{bad:?}: {stderr}");
+    }
+}
+
+#[test]
+fn bare_spec_component_after_tagged_rejected() {
+    // g64 followed by a bare 2 would silently overwrite groups.
+    let (_, stderr, ok) = repro(&["sim", "--layer", "28/64/64/3/1/2/g64/2"]);
+    assert!(!ok);
+    assert!(stderr.contains("tagged"), "{stderr}");
+}
+
+#[test]
+fn stray_positional_and_duplicate_options_rejected() {
+    let (_, stderr, ok) = repro(&["table2", "oops"]);
+    assert!(!ok);
+    assert!(stderr.contains("unexpected argument"), "{stderr}");
+    let (_, stderr, ok) = repro(&["fig6", "--pass", "loss", "--pass", "grad"]);
+    assert!(!ok);
+    assert!(stderr.contains("duplicate option"), "{stderr}");
 }
 
 #[test]
