@@ -16,7 +16,12 @@ fn main() {
         Figure::ALL.iter().map(|f| FigureRequest::new(*f).into()).collect();
     requests.push(SimRequest::Storage { extended: false });
     // One batch: the shared plan cache plans each layer geometry once
-    // across all four sweeps, and results come back in request order.
-    let artifacts: Vec<_> = svc.run_batch(&requests).into_iter().flatten().collect();
+    // across all four sweeps, and results come back in request order
+    // (per-request Results; these trusted requests cannot fail).
+    let artifacts: Vec<_> = svc
+        .run_batch(&requests)
+        .into_iter()
+        .flat_map(|r| r.expect("sweep request failed"))
+        .collect();
     print!("{}", render_all_csv(&artifacts));
 }

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""CI smoke test for `repro serve` (stdlib only: subprocess + urllib).
+
+Starts the server on an ephemeral port, exercises /healthz, /v1/query,
+/v1/batch, /v1/requests and /metrics, then asserts a clean graceful
+shutdown through POST /v1/shutdown (exit code 0).
+
+Usage: python3 python/server_smoke.py [path/to/repro]
+"""
+
+import json
+import subprocess
+import sys
+import urllib.request
+
+
+def request(base, path, body=None):
+    """GET when body is None, else POST the JSON body. Returns (status, bytes)."""
+    data = None if body is None else json.dumps(body).encode()
+    req = urllib.request.Request(
+        base + path, data=data, headers={"Content-Type": "application/json"}
+    )
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        return resp.status, resp.read()
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else "./target/release/repro"
+    proc = subprocess.Popen(
+        [binary, "serve", "--addr", "127.0.0.1:0", "--threads", "2"],
+        stdout=subprocess.PIPE,
+        text=True,
+    )
+    try:
+        # First line: "repro serve: listening on http://127.0.0.1:PORT (...)"
+        line = proc.stdout.readline()
+        assert "listening on http://" in line, f"unexpected banner: {line!r}"
+        addr = line.split("http://", 1)[1].split()[0]
+        base = "http://" + addr
+        print(f"server up at {base}")
+
+        status, body = request(base, "/healthz")
+        health = json.loads(body)
+        assert status == 200 and health["status"] == "ok", (status, health)
+
+        status, body = request(base, "/v1/requests")
+        catalog = json.loads(body)
+        kinds = {shape["kind"] for shape in catalog["requests"]}
+        assert "table2" in kinds and "fleet" in kinds, kinds
+
+        status, body = request(base, "/v1/query", {"kind": "table3"})
+        doc = json.loads(body)
+        assert status == 200 and doc["artifacts"][0]["name"] == "table3", status
+        # Repeat: must serve identical bytes (from the artifact cache).
+        status, body2 = request(base, "/v1/query", {"kind": "table3"})
+        assert body2 == body, "repeated query must be byte-identical"
+
+        status, body = request(
+            base,
+            "/v1/batch",
+            {"requests": [{"kind": "table2"}, {"kind": "fleet", "devices": 2}]},
+        )
+        doc = json.loads(body)
+        assert status == 200 and len(doc["results"]) == 2, (status, doc)
+        assert doc["results"][1]["artifacts"][0]["name"] == "fleet", doc
+
+        status, body = request(base, "/metrics")
+        text = body.decode()
+        for needle in (
+            'bp_server_requests_total{route="query"} 2',
+            "bp_artifact_cache_hits_total 1",
+            "bp_plan_cache_entries",
+            "bp_server_request_duration_us_bucket",
+        ):
+            assert needle in text, f"missing {needle!r} in /metrics:\n{text}"
+
+        status, body = request(base, "/v1/shutdown", {})
+        assert status == 200, status
+        code = proc.wait(timeout=60)
+        assert code == 0, f"server exited with {code}"
+        print("server smoke OK: query/batch/metrics round-trips + clean shutdown")
+    finally:
+        # Kill quietly if still alive; the propagating exception (an
+        # assertion or the wait() timeout) already names the real
+        # failure, so never replace it here.
+        if proc.poll() is None:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    main()

@@ -24,9 +24,10 @@
 //! returns the identical `PassMetrics` value (asserted over a seeded
 //! geometry sweep in `tests/plan_fleet.rs`).
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::accel::config::AccelConfig;
 use crate::accel::metrics::PassMetrics;
@@ -336,7 +337,7 @@ struct PlanKey {
 }
 
 /// Hit/miss counters of a [`PlanCache`] (the planning-amortization
-/// numbers `repro fleet` and `benches/simspeed.rs` report).
+/// numbers `repro fleet`, `/metrics` and `benches/simspeed.rs` report).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PlanCacheStats {
     /// Lookups answered from the memo table.
@@ -348,14 +349,7 @@ pub struct PlanCacheStats {
 }
 
 impl PlanCacheStats {
-    /// Total lookups (`hits + misses`).
-    ///
-    /// Unlike the individual hit/miss counters — which can shift by a
-    /// few either way when concurrent workers race to build the same
-    /// plan (both count a miss) — the lookup total is **deterministic**:
-    /// one per `plan`/`metrics` call. Artifacts that must render
-    /// reproducibly ([`crate::api`]'s fleet summary) report entries and
-    /// lookups, not hits and misses.
+    /// Total lookups (`hits + misses`) — one per `plan`/`metrics` call.
     pub fn lookups(&self) -> u64 {
         self.hits + self.misses
     }
@@ -369,10 +363,22 @@ impl PlanCacheStats {
         self.hits as f64 / total as f64
     }
 
-    /// One-line human summary using only the deterministic counters:
-    /// `plan cache: 14 distinct plans over 28 lookups`.
+    /// One-line human summary:
+    /// `plan cache: 14 distinct plans, 14 hits / 14 misses over 28 lookups`.
+    ///
+    /// Every counter in it is deterministic — hit/miss classification
+    /// happens under the table lock, so for a fixed request set the
+    /// split is identical run to run, however many workers race (the
+    /// historical lookups-only workaround is gone; asserted over a
+    /// seeded device sweep in `tests/plan_fleet.rs`).
     pub fn summary(&self) -> String {
-        format!("plan cache: {} distinct plans over {} lookups", self.entries, self.lookups())
+        format!(
+            "plan cache: {} distinct plans, {} hits / {} misses over {} lookups",
+            self.entries,
+            self.hits,
+            self.misses,
+            self.lookups()
+        )
     }
 }
 
@@ -406,12 +412,34 @@ impl PlanCacheStats {
 /// ```
 #[derive(Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<PlanKey, Arc<LayerPlan>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    inner: Mutex<PlanCacheInner>,
+}
+
+/// Table and counters behind one lock: hit/miss classification and the
+/// slot insert are a single critical section, so the split cannot race.
+/// (The seed kept the counters in separate atomics bumped *outside* the
+/// table lock; two workers racing the same key then both counted a miss
+/// and the reported split varied run to run.)
+#[derive(Default)]
+struct PlanCacheInner {
+    /// One build slot per key. The slot — not the table — synchronizes
+    /// the build itself, so distinct keys still plan in parallel and a
+    /// key is built exactly once ([`OnceLock`] runs one initializer and
+    /// blocks latecomers until it finishes).
+    plans: HashMap<PlanKey, Arc<OnceLock<Arc<LayerPlan>>>>,
+    hits: u64,
+    misses: u64,
 }
 
 impl PlanCache {
+    /// Hard bound on memoized plans. Far above any honest workload (the
+    /// full extended sweep is dozens of plans), it exists so an
+    /// adversarial stream of distinct geometries (e.g. through
+    /// `repro serve`) cannot grow the table without limit: past the
+    /// bound, lookups still build correct plans, they just stop
+    /// memoizing.
+    pub const MAX_ENTRIES: usize = 1 << 16;
+
     /// Empty cache.
     pub fn new() -> Self {
         Self::default()
@@ -420,19 +448,66 @@ impl PlanCache {
     /// The memoized plan for `(pass, mode, p, cfg)`, building it on first
     /// use.
     ///
-    /// Planning happens *outside* the table lock so concurrent workers
-    /// never serialize on a build; two racers may both build the same
-    /// (identical, deterministic) plan, and the first insert wins.
+    /// Planning happens *outside* the table lock (inside the key's own
+    /// [`OnceLock`]), so concurrent workers never serialize on a build of
+    /// a different key, and every key is built **exactly once** — the
+    /// first looker-up of a key counts the one miss and every other
+    /// caller (even one that arrives mid-build and blocks on the slot)
+    /// counts a hit. For a fixed request set the hit/miss split is
+    /// therefore deterministic: `misses == entries`,
+    /// `hits == lookups - entries`, regardless of thread interleaving
+    /// (below [`PlanCache::MAX_ENTRIES`] and absent build panics; a
+    /// panicking build removes its slot again, so no phantom entry
+    /// lingers and the panic reproduces on retry instead of
+    /// masquerading as a hit).
     pub fn plan(&self, pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> Arc<LayerPlan> {
         let key = PlanKey { params: *p, pass, mode, cfg: CfgKey::of(cfg) };
-        if let Some(hit) = self.plans.lock().expect("plan cache poisoned").get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(hit);
+        let slot = {
+            let mut guard = self.inner.lock().expect("plan cache poisoned");
+            let inner = &mut *guard;
+            if let Some(existing) = inner.plans.get(&key) {
+                inner.hits += 1;
+                Arc::clone(existing)
+            } else {
+                inner.misses += 1;
+                if inner.plans.len() >= Self::MAX_ENTRIES {
+                    // Table full: plan without memoizing (outside the
+                    // lock).
+                    drop(guard);
+                    return Arc::new(LayerPlan::build(pass, mode, p, cfg));
+                }
+                match inner.plans.entry(key) {
+                    Entry::Occupied(e) => Arc::clone(e.get()),
+                    Entry::Vacant(v) => Arc::clone(v.insert(Arc::new(OnceLock::new()))),
+                }
+            }
+        };
+        // Build outside the table lock. If the build panics, evict the
+        // still-empty slot so the table never carries a phantom entry
+        // (and the next lookup of the key honestly re-misses).
+        match panic::catch_unwind(AssertUnwindSafe(|| {
+            Arc::clone(slot.get_or_init(|| Arc::new(LayerPlan::build(pass, mode, p, cfg))))
+        })) {
+            Ok(plan) => plan,
+            Err(payload) => {
+                if slot.get().is_none() {
+                    if let Ok(mut inner) = self.inner.lock() {
+                        // Evict only *this* slot: by the time we take
+                        // the lock, another thread may have evicted it
+                        // already and re-missed a fresh slot for the
+                        // key — that one is not ours to remove.
+                        let ours = inner
+                            .plans
+                            .get(&key)
+                            .is_some_and(|s| Arc::ptr_eq(s, &slot) && s.get().is_none());
+                        if ours {
+                            inner.plans.remove(&key);
+                        }
+                    }
+                }
+                panic::resume_unwind(payload)
+            }
         }
-        let built = Arc::new(LayerPlan::build(pass, mode, p, cfg));
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut table = self.plans.lock().expect("plan cache poisoned");
-        Arc::clone(table.entry(key).or_insert(built))
     }
 
     /// The analytic [`PassMetrics`] of `(pass, mode, p, cfg)` through the
@@ -442,20 +517,19 @@ impl PlanCache {
         self.plan(pass, mode, p, cfg).metrics
     }
 
-    /// Current hit/miss/entry counters.
+    /// Current hit/miss/entry counters, read as one consistent snapshot
+    /// (all three under the same lock that classifies lookups).
     pub fn stats(&self) -> PlanCacheStats {
-        PlanCacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            entries: self.plans.lock().expect("plan cache poisoned").len(),
-        }
+        let inner = self.inner.lock().expect("plan cache poisoned");
+        PlanCacheStats { hits: inner.hits, misses: inner.misses, entries: inner.plans.len() }
     }
 
     /// Drop every memoized plan and zero the counters.
     pub fn clear(&self) {
-        self.plans.lock().expect("plan cache poisoned").clear();
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.plans.clear();
+        inner.hits = 0;
+        inner.misses = 0;
     }
 }
 
@@ -536,7 +610,75 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), cold);
         }
-        // Exactly one entry no matter how the race resolved.
+        // Exactly one entry no matter how the race resolved — and the
+        // hit/miss split is exact too: the first looker-up counts the
+        // one miss, the other three count hits (even those that blocked
+        // on the in-flight build).
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (3, 1, 1));
+    }
+
+    #[test]
+    fn hit_miss_split_is_deterministic_under_contention() {
+        use std::thread;
+        // Many threads, many keys, replayed lookups: for a fixed lookup
+        // multiset the counters must come out identical on every run.
+        let geoms: Vec<ConvParams> = (0..6)
+            .map(|i| ConvParams::square(16 + 8 * i, 8, 8, 3, 2, 1))
+            .collect();
+        let run = || {
+            let cache = Arc::new(PlanCache::new());
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let c = Arc::clone(&cache);
+                    let gs = geoms.clone();
+                    thread::spawn(move || {
+                        for p in &gs {
+                            for pass in Pass::ALL {
+                                c.metrics(pass, Mode::BpIm2col, p, &cfg());
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            cache.stats()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "stats must not depend on interleaving");
+        assert_eq!(a.entries, geoms.len() * 2, "one entry per (geometry, pass)");
+        assert_eq!(a.misses, a.entries as u64, "one miss per distinct key");
+        assert_eq!(a.lookups(), (8 * geoms.len() * 2) as u64);
+    }
+
+    /// Overflow checks make the bad-geometry build panic; in release the
+    /// arithmetic wraps instead, so the eviction path is exercised under
+    /// the test profile only.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn panicking_build_leaves_no_phantom_entry() {
+        let cache = PlanCache::new();
+        // Kernel larger than the (unpadded) input: output-dim
+        // subtraction underflows inside the build. `validate()` rejects
+        // this geometry — the cache itself must still stay clean when
+        // called below the validation layer.
+        let bad = ConvParams::square(4, 1, 1, 9, 1, 0);
+        for attempt in 0..2 {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                cache.plan(Pass::Loss, Mode::BpIm2col, &bad, &cfg())
+            }));
+            assert!(result.is_err(), "attempt {attempt} must panic");
+        }
+        let st = cache.stats();
+        assert_eq!(st.entries, 0, "no phantom entry may linger: {st:?}");
+        assert_eq!(st.misses, 2, "each failed attempt honestly re-misses: {st:?}");
+        assert_eq!(st.hits, 0, "{st:?}");
+        // And the cache still works for good geometries afterwards.
+        let good = ConvParams::square(56, 64, 64, 3, 2, 1);
+        cache.metrics(Pass::Loss, Mode::BpIm2col, &good, &cfg());
         assert_eq!(cache.stats().entries, 1);
     }
 

@@ -322,6 +322,12 @@ pub fn render_all_text(artifacts: &[Artifact]) -> String {
 /// `# <name>` comment line so the document splits mechanically (this
 /// replaces the old behaviour of silently *dropping* sibling artifacts
 /// under `--csv`).
+///
+/// The section markers are unforgeable: a data cell whose value begins
+/// with `#` is quoted by [`Artifact::render_csv`] (so no data line ever
+/// *starts* with a bare `#`), and artifact names are sanitized through
+/// [`csv_section_name`] before they reach a marker line. A consumer can
+/// therefore split sections on exactly the unquoted `^# ` lines.
 pub fn render_all_csv(artifacts: &[Artifact]) -> String {
     if let [only] = artifacts {
         return only.render_csv();
@@ -331,10 +337,28 @@ pub fn render_all_csv(artifacts: &[Artifact]) -> String {
         if i > 0 {
             out.push('\n');
         }
-        out.push_str(&format!("# {}\n", a.name));
+        out.push_str(&format!("# {}\n", csv_section_name(&a.name)));
         out.push_str(&a.render_csv());
     }
     out
+}
+
+/// Sanitize an artifact name for use in a `# <name>` CSV section marker:
+/// newlines would break the one-line marker, and carriage returns or
+/// leading/trailing whitespace would corrupt mechanical splitting, so
+/// each is replaced by `_`; an empty name becomes `artifact`. Well-formed
+/// names (`table2`, `fig6a`, `fleet`, ...) pass through unchanged.
+pub fn csv_section_name(name: &str) -> String {
+    let cleaned: String = name
+        .chars()
+        .map(|c| if c == '\n' || c == '\r' || c.is_control() { '_' } else { c })
+        .collect();
+    let trimmed = cleaned.trim();
+    if trimmed.is_empty() {
+        "artifact".to_string()
+    } else {
+        trimmed.to_string()
+    }
 }
 
 /// Render a group of artifacts as one JSON document:
@@ -386,9 +410,13 @@ fn float_repr(f: f64) -> String {
     format!("{f}")
 }
 
-/// Quote a CSV cell only when it contains a delimiter, quote or newline.
+/// Quote a CSV cell when it contains a delimiter, quote or newline — or
+/// when it *begins* with `#`, which would otherwise let a field value
+/// forge the `# <name>` section markers of [`render_all_csv`] (a line
+/// starting with `"#` is unambiguously data, one starting with `# ` is
+/// unambiguously a marker).
 fn csv_escape(s: &str) -> String {
-    if s.contains(',') || s.contains('"') || s.contains('\n') {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.starts_with('#') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
         s.to_string()
@@ -396,7 +424,7 @@ fn csv_escape(s: &str) -> String {
 }
 
 /// JSON string literal with the mandatory escapes.
-fn json_string(s: &str) -> String {
+pub(crate) fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for ch in s.chars() {
@@ -459,6 +487,37 @@ mod tests {
         assert_eq!(csv_escape("a,b"), "\"a,b\"");
         assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
         assert_eq!(csv_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn csv_quotes_leading_hash_so_markers_cannot_be_forged() {
+        assert_eq!(csv_escape("# fleet"), "\"# fleet\"");
+        assert_eq!(csv_escape("#x"), "\"#x\"");
+        assert_eq!(csv_escape("a#b"), "a#b", "inner # is harmless");
+        // End to end: a hostile first cell must not look like a section
+        // marker in a multi-artifact document.
+        let mut a = Artifact::new("real", "t").columns(vec![Column::new("label")]);
+        a.push_row(vec!["# forged".into()]);
+        let doc = render_all_csv(&[a.clone(), a]);
+        let marker_lines: Vec<&str> =
+            doc.lines().filter(|l| l.starts_with("# ")).collect();
+        assert_eq!(marker_lines, ["# real", "# real"], "{doc}");
+        assert!(doc.contains("\"# forged\""), "{doc}");
+    }
+
+    #[test]
+    fn csv_section_names_are_sanitized() {
+        assert_eq!(csv_section_name("fleet"), "fleet");
+        assert_eq!(csv_section_name("bad\nname"), "bad_name");
+        assert_eq!(csv_section_name("a\r\nb"), "a__b");
+        assert_eq!(csv_section_name("  "), "artifact");
+        assert_eq!(csv_section_name(""), "artifact");
+        // A hostile artifact name cannot inject extra marker lines.
+        let mut a = Artifact::new("evil\n# fake", "t").columns(vec![Column::new("c")]);
+        a.push_row(vec![1u64.into()]);
+        let doc = render_all_csv(&[a.clone(), a]);
+        assert_eq!(doc.lines().filter(|l| l.starts_with("# ")).count(), 2, "{doc}");
+        assert!(doc.contains("# evil_# fake"), "{doc}");
     }
 
     #[test]

@@ -1,0 +1,737 @@
+//! The request side of the JSON wire format: a minimal dependency-free
+//! parser plus the [`SimRequest`] codec.
+//!
+//! [`crate::api::artifact`] already *encodes* results as JSON
+//! ([`crate::api::Artifact::render_json`]); this module adds the
+//! mirror-image *decoder* a request-serving frontend needs
+//! ([`crate::server`]'s `POST /v1/query` and `POST /v1/batch`): hand a
+//! body like `{"kind":"fig6","pass":"loss","devices":2}` to
+//! [`SimRequest::from_json`] and get the same typed request the CLI
+//! would have built. Like the CLI option scanner, decoding is strict —
+//! unknown kinds, unknown keys, wrong types and out-of-range device
+//! counts are errors, never silently ignored.
+//!
+//! The wire shapes are documented machine-readably by
+//! [`request_catalog_json`] (served at `GET /v1/requests`), and
+//! [`SimRequest::to_json`] emits them, so
+//! `from_json(&req.to_json()) == req` for every request — asserted for
+//! the full catalog in this module's tests.
+
+use crate::api::artifact::json_string;
+use crate::api::request::{FigureRequest, FleetRequest, PassFilter, SimRequest};
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::Pass;
+use crate::report::Figure;
+use std::fmt::Write as _;
+
+/// Maximum device count a decoded request may ask for. A fleet request
+/// allocates per-device state, so an attacker-supplied `devices` must be
+/// bounded well below anything that could exhaust the server.
+pub const MAX_DEVICES: usize = 1024;
+
+/// Maximum number of requests one decoded batch may carry.
+pub const MAX_BATCH_REQUESTS: usize = 256;
+
+/// Maximum nesting depth the parser accepts (hostile inputs like
+/// `[[[[...]]]]` must not be able to overflow the parse stack).
+const MAX_DEPTH: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Generic JSON values
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value (the decoder's intermediate representation).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (parsed as `f64`).
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, with key order preserved.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Member of an object by key (`None` for other variants or a
+    /// missing key).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as a bool, if it is one.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The value as a non-negative integer, if it is a number with no
+    /// fractional part that fits `u64` exactly.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n <= 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse one complete JSON document (trailing non-whitespace is an
+/// error).
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::api::json::{parse, Json};
+///
+/// let v = parse("{\"kind\":\"fleet\",\"devices\":4}").unwrap();
+/// assert_eq!(v.get("kind").and_then(Json::as_str), Some("fleet"));
+/// assert_eq!(v.get("devices").and_then(Json::as_u64), Some(4));
+/// assert!(parse("{\"unterminated\":").is_err());
+/// ```
+pub fn parse(text: &str) -> Result<Json, String> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing bytes after JSON document at offset {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied().ok_or_else(|| "unexpected end of JSON".to_string())
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek()? != b {
+            return Err(format!("expected {:?} at offset {}", b as char, self.pos));
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("JSON nested deeper than {MAX_DEPTH} levels"));
+        }
+        match self.peek()? {
+            b'{' => self.object(depth),
+            b'[' => self.array(depth),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at offset {}", self.pos))
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs: Vec<(String, Json)> = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            if pairs.iter().any(|(k, _)| *k == key) {
+                return Err(format!("duplicate key {key:?}"));
+            }
+            self.expect(b':')?;
+            pairs.push((key, self.value(depth + 1)?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                other => {
+                    return Err(format!(
+                        "expected ',' or '}}' in object, got {:?} at offset {}",
+                        other as char, self.pos
+                    ))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => {
+                    return Err(format!(
+                        "expected ',' or ']' in array, got {:?} at offset {}",
+                        other as char, self.pos
+                    ))
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self.bytes.get(self.pos).ok_or("unterminated string")?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = *self.bytes.get(self.pos).ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let code = self.hex4()?;
+                            let ch = match code {
+                                // High surrogate: RFC 8259 encodes
+                                // non-BMP characters as a \uXXXX\uXXXX
+                                // pair (what e.g. Python's json.dumps
+                                // emits); combine it with the low half.
+                                0xD800..=0xDBFF => {
+                                    if self.bytes.get(self.pos..self.pos + 2) != Some(b"\\u".as_slice()) {
+                                        return Err("high surrogate without a low surrogate"
+                                            .to_string());
+                                    }
+                                    self.pos += 2;
+                                    let low = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&low) {
+                                        return Err(format!(
+                                            "bad low surrogate \\u{low:04x}"
+                                        ));
+                                    }
+                                    let combined = 0x10000
+                                        + ((code - 0xD800) << 10)
+                                        + (low - 0xDC00);
+                                    char::from_u32(combined).ok_or("bad surrogate pair")?
+                                }
+                                0xDC00..=0xDFFF => {
+                                    return Err(format!("lone low surrogate \\u{code:04x}"))
+                                }
+                                _ => char::from_u32(code).ok_or("bad \\u code point")?,
+                            };
+                            out.push(ch);
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8: copy the whole scalar through.
+                    let start = self.pos - 1;
+                    let len = match b {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    if start + len > self.bytes.len() {
+                        return Err("truncated UTF-8 sequence".to_string());
+                    }
+                    self.pos = start + len;
+                    let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|e| e.to_string())?;
+                    out.push_str(s);
+                }
+            }
+        }
+    }
+
+    /// Four hex digits of a `\u` escape, advancing past them.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self.bytes.get(self.pos..self.pos + 4).ok_or("short \\u escape")?;
+        self.pos += 4;
+        u32::from_str_radix(std::str::from_utf8(hex).map_err(|e| e.to_string())?, 16)
+            .map_err(|e| e.to_string())
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        s.parse::<f64>().map(Json::Num).map_err(|_| format!("bad number {s:?} at offset {start}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimRequest codec
+// ---------------------------------------------------------------------------
+
+impl SimRequest {
+    /// Encode the request in its wire shape, e.g.
+    /// `{"kind":"fig6","pass":"loss","devices":2}`. Only non-default
+    /// options are emitted, so the output is the minimal body a client
+    /// would write by hand. Decodes back to the identical request via
+    /// [`SimRequest::from_json`].
+    pub fn to_json(&self) -> String {
+        let mut out = format!("{{\"kind\":{}", json_string(self.name()));
+        match self {
+            SimRequest::Table2 | SimRequest::Table3 | SimRequest::Table4 => {}
+            SimRequest::Figure(f) => {
+                if let PassFilter::Only(p) = f.passes {
+                    write!(out, ",\"pass\":{}", json_string(p.name())).unwrap();
+                }
+                if f.extended {
+                    out.push_str(",\"extended\":true");
+                }
+                if let Some(n) = f.devices {
+                    write!(out, ",\"devices\":{n}").unwrap();
+                }
+            }
+            SimRequest::Sparsity { extended } | SimRequest::Storage { extended } => {
+                if *extended {
+                    out.push_str(",\"extended\":true");
+                }
+            }
+            SimRequest::Layer(p) => {
+                write!(out, ",\"spec\":{}", json_string(&p.id())).unwrap();
+                if p.b != 1 {
+                    write!(out, ",\"batch\":{}", p.b).unwrap();
+                }
+            }
+            SimRequest::TrainCost { devices } => {
+                if let Some(n) = devices {
+                    write!(out, ",\"devices\":{n}").unwrap();
+                }
+            }
+            SimRequest::Fleet(f) => {
+                write!(out, ",\"devices\":{}", f.devices).unwrap();
+                if f.extended {
+                    out.push_str(",\"extended\":true");
+                }
+            }
+        }
+        out.push('}');
+        out
+    }
+
+    /// Decode one request from its JSON wire shape (see
+    /// [`request_catalog_json`] for every accepted form).
+    ///
+    /// Strict like the CLI scanner: unknown `kind`s, unknown keys, wrong
+    /// value types, malformed layer specs and device counts outside
+    /// `1..=`[`MAX_DEVICES`] are all errors.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use bp_im2col::api::SimRequest;
+    ///
+    /// let req = SimRequest::from_json("{\"kind\":\"fleet\",\"devices\":4}").unwrap();
+    /// assert_eq!(req, SimRequest::fleet(4));
+    /// assert_eq!(SimRequest::from_json(&req.to_json()).unwrap(), req);
+    /// assert!(SimRequest::from_json("{\"kind\":\"nope\"}").is_err());
+    /// ```
+    pub fn from_json(text: &str) -> Result<SimRequest, String> {
+        decode_request(&parse(text)?)
+    }
+}
+
+/// Decode one request from an already-parsed JSON value (the object
+/// form [`SimRequest::from_json`] documents).
+pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
+    let Json::Obj(pairs) = v else {
+        return Err("request must be a JSON object with a \"kind\" field".to_string());
+    };
+    let kind = v
+        .get("kind")
+        .ok_or("request object is missing the \"kind\" field")?
+        .as_str()
+        .ok_or("\"kind\" must be a string")?;
+    let allowed: &[&str] = match kind {
+        "table2" | "table3" | "table4" => &[],
+        "fig6" | "fig7" | "fig8" => &["pass", "extended", "devices"],
+        "sparsity" | "storage" => &["extended"],
+        "layer" => &["spec", "batch"],
+        "traincost" => &["devices"],
+        "fleet" => &["devices", "extended"],
+        other => {
+            return Err(format!(
+                "unknown request kind {other:?} (supported: table2, table3, table4, fig6, \
+                 fig7, fig8, sparsity, storage, layer, traincost, fleet)"
+            ))
+        }
+    };
+    for (key, _) in pairs {
+        if key != "kind" && !allowed.contains(&key.as_str()) {
+            return Err(format!(
+                "unknown key {key:?} for kind {kind:?} (supported: {})",
+                if allowed.is_empty() { "none".to_string() } else { allowed.join(", ") }
+            ));
+        }
+    }
+    let extended = opt_bool(v, "extended")?.unwrap_or(false);
+    Ok(match kind {
+        "table2" => SimRequest::Table2,
+        "table3" => SimRequest::Table3,
+        "table4" => SimRequest::Table4,
+        "fig6" | "fig7" | "fig8" => {
+            let figure = match kind {
+                "fig6" => Figure::Runtime,
+                "fig7" => Figure::OffChipTraffic,
+                _ => Figure::BufferReads,
+            };
+            let mut req = FigureRequest::new(figure).extended(extended);
+            match v.get("pass").map(|p| p.as_str().ok_or("\"pass\" must be a string")) {
+                None => {}
+                Some(Ok("loss")) => req = req.pass(Pass::Loss),
+                Some(Ok("grad")) => req = req.pass(Pass::Grad),
+                Some(Ok(other)) => {
+                    return Err(format!("bad pass {other:?} (expected \"loss\" or \"grad\")"))
+                }
+                Some(Err(e)) => return Err(e.to_string()),
+            }
+            if let Some(n) = opt_devices(v)? {
+                req = req.devices(n);
+            }
+            req.into()
+        }
+        "sparsity" => SimRequest::Sparsity { extended },
+        "storage" => SimRequest::Storage { extended },
+        "layer" => {
+            let spec = v
+                .get("spec")
+                .ok_or("layer request needs a \"spec\" (H/C/N/K/S/P[/G[/D]])")?
+                .as_str()
+                .ok_or("\"spec\" must be a string")?;
+            let mut p = ConvParams::parse_spec(spec)?;
+            if let Some(b) = v.get("batch") {
+                let b = b.as_u64().ok_or("\"batch\" must be a non-negative integer")?;
+                if b == 0 || b > MAX_DEVICES as u64 {
+                    return Err(format!("batch must be in 1..={MAX_DEVICES}, got {b}"));
+                }
+                p.b = b as usize;
+            }
+            SimRequest::layer(p)
+        }
+        "traincost" => SimRequest::TrainCost { devices: opt_devices(v)? },
+        "fleet" => {
+            // Mirrors the CLI: `fleet` without --devices means 4.
+            let devices = opt_devices(v)?.unwrap_or(4);
+            FleetRequest::new(devices).extended(extended).into()
+        }
+        _ => unreachable!("kind validated above"),
+    })
+}
+
+/// Optional boolean member (`Ok(None)` when absent).
+fn opt_bool(v: &Json, key: &str) -> Result<Option<bool>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(b) => {
+            Ok(Some(b.as_bool().ok_or_else(|| format!("{key:?} must be true or false"))?))
+        }
+    }
+}
+
+/// Optional `devices` member, range-checked to `1..=`[`MAX_DEVICES`].
+fn opt_devices(v: &Json) -> Result<Option<usize>, String> {
+    match v.get("devices") {
+        None => Ok(None),
+        Some(d) => {
+            let n = d.as_u64().ok_or("\"devices\" must be a non-negative integer")?;
+            if n == 0 || n > MAX_DEVICES as u64 {
+                return Err(format!("devices must be in 1..={MAX_DEVICES}, got {n}"));
+            }
+            Ok(Some(n as usize))
+        }
+    }
+}
+
+/// Decode a batch body `{"requests":[...]}` into per-item results.
+///
+/// The *document* must decode (valid JSON, a `requests` array, at most
+/// [`MAX_BATCH_REQUESTS`] items) or the whole call fails; each *item*
+/// decodes independently, so one malformed request becomes an `Err` in
+/// its slot while its siblings proceed — the decoder-side half of the
+/// per-item error contract [`crate::api::Service::run_batch`] implements
+/// for execution failures.
+pub fn parse_batch(text: &str) -> Result<Vec<Result<SimRequest, String>>, String> {
+    let doc = parse(text)?;
+    let Some(Json::Arr(items)) = doc.get("requests") else {
+        return Err("batch body must be {\"requests\":[...]}".to_string());
+    };
+    if items.len() > MAX_BATCH_REQUESTS {
+        return Err(format!(
+            "batch carries {} requests, maximum is {MAX_BATCH_REQUESTS}",
+            items.len()
+        ));
+    }
+    Ok(items.iter().map(decode_request).collect())
+}
+
+/// The machine-readable catalog of supported request shapes (served at
+/// `GET /v1/requests`): one entry per kind with its optional keys and a
+/// ready-to-send example body.
+pub fn request_catalog_json() -> String {
+    // (kind, description, extra keys, example body)
+    const SHAPES: [(&str, &str, &str, &str); 11] = [
+        ("table2", "Table II: per-layer backpropagation runtime", "[]", "{\"kind\":\"table2\"}"),
+        ("table3", "Table III: address-generation prologue latency", "[]", "{\"kind\":\"table3\"}"),
+        ("table4", "Table IV: address-generation module area", "[]", "{\"kind\":\"table4\"}"),
+        (
+            "fig6",
+            "Backprop runtime per network",
+            "[\"pass\",\"extended\",\"devices\"]",
+            "{\"kind\":\"fig6\",\"pass\":\"loss\",\"devices\":2}",
+        ),
+        (
+            "fig7",
+            "Off-chip traffic per network",
+            "[\"pass\",\"extended\",\"devices\"]",
+            "{\"kind\":\"fig7\"}",
+        ),
+        (
+            "fig8",
+            "On-chip buffer reads + sparsity per network",
+            "[\"pass\",\"extended\",\"devices\"]",
+            "{\"kind\":\"fig8\",\"extended\":true}",
+        ),
+        (
+            "sparsity",
+            "Lowered-matrix sparsity of every workload layer",
+            "[\"extended\"]",
+            "{\"kind\":\"sparsity\"}",
+        ),
+        (
+            "storage",
+            "Additional-storage overhead per network",
+            "[\"extended\"]",
+            "{\"kind\":\"storage\"}",
+        ),
+        (
+            "layer",
+            "Single-layer simulation in both modes",
+            "[\"spec\",\"batch\"]",
+            "{\"kind\":\"layer\",\"spec\":\"56/128/128/3/2/1/g32\"}",
+        ),
+        (
+            "traincost",
+            "Full training-step cost per network",
+            "[\"devices\"]",
+            "{\"kind\":\"traincost\",\"devices\":4}",
+        ),
+        (
+            "fleet",
+            "Backward-pass sharding across N accelerators",
+            "[\"devices\",\"extended\"]",
+            "{\"kind\":\"fleet\",\"devices\":4}",
+        ),
+    ];
+    let mut out = String::from("{\"requests\":[");
+    for (i, (kind, desc, keys, example)) in SHAPES.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write!(
+            out,
+            "{{\"kind\":{},\"description\":{},\"optional_keys\":{keys},\"example\":{}}}",
+            json_string(kind),
+            json_string(desc),
+            json_string(example)
+        )
+        .unwrap();
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catalog() -> Vec<SimRequest> {
+        vec![
+            SimRequest::Table2,
+            SimRequest::Table3,
+            SimRequest::Table4,
+            FigureRequest::new(Figure::Runtime).pass(Pass::Loss).devices(2).into(),
+            FigureRequest::new(Figure::OffChipTraffic).pass(Pass::Grad).into(),
+            FigureRequest::new(Figure::BufferReads).extended(true).into(),
+            SimRequest::Sparsity { extended: false },
+            SimRequest::Sparsity { extended: true },
+            SimRequest::Storage { extended: true },
+            SimRequest::layer(ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)),
+            SimRequest::layer(ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2)),
+            SimRequest::TrainCost { devices: None },
+            SimRequest::TrainCost { devices: Some(2) },
+            SimRequest::fleet(4),
+            SimRequest::Fleet(FleetRequest::new(8).extended(true)),
+        ]
+    }
+
+    #[test]
+    fn every_request_kind_round_trips_through_the_codec() {
+        for req in catalog() {
+            let encoded = req.to_json();
+            let decoded = SimRequest::from_json(&encoded)
+                .unwrap_or_else(|e| panic!("{encoded}: {e}"));
+            assert_eq!(decoded, req, "{encoded}");
+        }
+    }
+
+    #[test]
+    fn layer_batch_survives_the_round_trip() {
+        let mut p = ConvParams::square(56, 128, 128, 3, 2, 1);
+        p.b = 8;
+        let req = SimRequest::layer(p);
+        let encoded = req.to_json();
+        assert!(encoded.contains("\"batch\":8"), "{encoded}");
+        assert_eq!(SimRequest::from_json(&encoded).unwrap(), req);
+    }
+
+    #[test]
+    fn decoder_is_strict() {
+        // Unknown kind / key, wrong types, bad ranges.
+        assert!(SimRequest::from_json("{\"kind\":\"fig9\"}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"table2\",\"devices\":2}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"fleet\",\"devices\":\"four\"}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"fleet\",\"devices\":0}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"fleet\",\"devices\":1.5}").is_err());
+        assert!(SimRequest::from_json(&format!(
+            "{{\"kind\":\"fleet\",\"devices\":{}}}",
+            MAX_DEVICES + 1
+        ))
+        .is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"fig6\",\"pass\":\"both\"}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"layer\"}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"layer\",\"spec\":\"1/2/3\"}").is_err());
+        assert!(SimRequest::from_json("[1,2]").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"table2\"").is_err());
+        // Absent pass means both panels.
+        let req = SimRequest::from_json("{\"kind\":\"fig6\"}").unwrap();
+        assert_eq!(req, FigureRequest::new(Figure::Runtime).into());
+        // Fleet defaults to 4 devices like the CLI.
+        assert_eq!(SimRequest::from_json("{\"kind\":\"fleet\"}").unwrap(), SimRequest::fleet(4));
+    }
+
+    #[test]
+    fn parser_rejects_hostile_documents() {
+        assert!(parse("").is_err());
+        assert!(parse("{\"a\":1,\"a\":2}").is_err(), "duplicate keys");
+        assert!(parse("{\"a\":1} trailing").is_err());
+        let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&deep).is_err(), "depth limit");
+        assert!(parse("\"\\q\"").is_err(), "bad escape");
+        assert!(parse("01a").is_err());
+    }
+
+    #[test]
+    fn parser_reads_escapes_and_unicode() {
+        let v = parse("{\"k\":\"a\\n\\\"b\\u0041\",\"n\":-1.5e3,\"t\":true}").unwrap();
+        assert_eq!(v.get("k").unwrap().as_str(), Some("a\n\"bA"));
+        assert_eq!(v.get("n").unwrap(), &Json::Num(-1500.0));
+        assert_eq!(v.get("t").unwrap().as_bool(), Some(true));
+        let v = parse("[null, \"héllo\", 3]").unwrap();
+        assert_eq!(v, Json::Arr(vec![Json::Null, Json::Str("héllo".into()), Json::Num(3.0)]));
+        // RFC 8259 surrogate pairs (what json.dumps with ensure_ascii
+        // emits for non-BMP characters).
+        let v = parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v, Json::Str("\u{1F600}".into()));
+        assert!(parse("\"\\ud83d\"").is_err(), "high surrogate alone");
+        assert!(parse("\"\\ude00\"").is_err(), "lone low surrogate");
+        assert!(parse("\"\\ud83dx\"").is_err(), "high surrogate then junk");
+    }
+
+    #[test]
+    fn batch_decodes_per_item() {
+        let body = "{\"requests\":[{\"kind\":\"table3\"},{\"kind\":\"nope\"},{\"kind\":\"fleet\",\"devices\":2}]}";
+        let items = parse_batch(body).unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0], Ok(SimRequest::Table3));
+        assert!(items[1].is_err());
+        assert_eq!(items[2], Ok(SimRequest::fleet(2)));
+        // Document-level failures.
+        assert!(parse_batch("{\"reqs\":[]}").is_err());
+        assert!(parse_batch("not json").is_err());
+        let big: Vec<String> =
+            (0..MAX_BATCH_REQUESTS + 1).map(|_| "{\"kind\":\"table2\"}".to_string()).collect();
+        assert!(parse_batch(&format!("{{\"requests\":[{}]}}", big.join(","))).is_err());
+    }
+
+    #[test]
+    fn request_catalog_parses_and_examples_decode() {
+        let doc = parse(&request_catalog_json()).unwrap();
+        let Some(Json::Arr(shapes)) = doc.get("requests") else { panic!("no requests array") };
+        assert_eq!(shapes.len(), 11, "one entry per SimRequest kind");
+        for shape in shapes {
+            let example = shape.get("example").unwrap().as_str().unwrap();
+            let req = SimRequest::from_json(example)
+                .unwrap_or_else(|e| panic!("catalog example {example}: {e}"));
+            assert_eq!(
+                Some(req.name()),
+                shape.get("kind").unwrap().as_str(),
+                "example kind mismatch"
+            );
+            assert!(req.validate().is_ok(), "{example}");
+        }
+    }
+}

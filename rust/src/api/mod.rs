@@ -24,11 +24,14 @@
 //! bit-exactly, for every command and device count.
 
 pub mod artifact;
+pub mod json;
 pub mod request;
 
 pub use artifact::{render_all_csv, render_all_json, render_all_text, Artifact, Column, Value};
 pub use request::{FigureRequest, FleetRequest, PassFilter, SimRequest};
 
+use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -41,6 +44,51 @@ use crate::im2col::pipeline::{Mode, Pass};
 use crate::im2col::sparsity;
 use crate::report;
 use crate::workloads::{self, Network};
+
+/// Why one request of a batch (or one [`Service::try_run`] call) failed.
+///
+/// Failures are *per request*: a bad geometry or a panicking model pass
+/// produces one `RequestError` for that request only, never poisons the
+/// sibling requests of a [`Service::run_batch`] call (the seed let one
+/// panicking scoped worker take the whole batch down with it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestError {
+    /// Stable kind name of the failing request ([`SimRequest::name`]).
+    pub request: String,
+    /// Human-readable failure description (validation message or the
+    /// caught panic payload).
+    pub message: String,
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "request {:?} failed: {}", self.request, self.message)
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// Outcome of one request served through the fallible path: the
+/// artifacts, or the per-request error.
+pub type RequestResult = Result<Vec<Artifact>, RequestError>;
+
+/// Run `f`, converting a panic into an `Err` with the panic payload as
+/// the message. The backstop under [`Service::try_run`]: model internals
+/// are deterministic pure math, so a panic means an input outside the
+/// validated envelope — worth reporting, not worth a dead batch worker
+/// (or a dead HTTP connection).
+fn catch_request<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    match panic::catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => Err(match payload.downcast_ref::<&'static str>() {
+            Some(s) => (*s).to_string(),
+            None => match payload.downcast_ref::<String>() {
+                Some(s) => s.clone(),
+                None => "request handler panicked".to_string(),
+            },
+        }),
+    }
+}
 
 /// Serves [`SimRequest`]s against one accelerator configuration and one
 /// shared plan cache.
@@ -130,14 +178,31 @@ impl Service {
         artifacts
     }
 
-    /// Serve a request slice concurrently through the shared plan cache,
-    /// returning results in request order.
+    /// Serve one request through the fallible path: validate its options
+    /// ([`SimRequest::validate`]), then run it with a panic backstop, so
+    /// a bad geometry or a model invariant violation comes back as a
+    /// clean [`RequestError`] instead of unwinding into the caller.
     ///
-    /// Equivalent to mapping [`Service::run`] — bit-exactly, because
-    /// plans are deterministic and cache hits return the value a cold
-    /// build would (`tests/api.rs` asserts this over a seeded sweep) —
-    /// but overlapping independent requests and planning each repeated
-    /// geometry once across the whole batch.
+    /// This is the entry point request-serving frontends use
+    /// ([`crate::server`]'s `/v1/query`); the infallible [`Service::run`]
+    /// remains for trusted in-process requests.
+    pub fn try_run(&self, req: &SimRequest) -> RequestResult {
+        let fail = |message: String| RequestError { request: req.name().into(), message };
+        req.validate().map_err(&fail)?;
+        catch_request(|| self.run(req)).map_err(fail)
+    }
+
+    /// Serve a request slice concurrently through the shared plan cache,
+    /// returning per-request results in request order.
+    ///
+    /// Successful requests are equivalent to mapping [`Service::run`] —
+    /// bit-exactly, because plans are deterministic and cache hits
+    /// return the value a cold build would (`tests/api.rs` asserts this
+    /// over a seeded sweep) — but overlap on worker threads and plan
+    /// each repeated geometry once across the whole batch. A request
+    /// that fails validation or panics yields `Err` in *its* slot only;
+    /// the rest of the batch completes normally (the seed instead let
+    /// one panicking scoped worker poison every result).
     ///
     /// # Example
     ///
@@ -149,23 +214,26 @@ impl Service {
     /// let reqs = [SimRequest::Table3, SimRequest::Table4];
     /// let out = svc.run_batch(&reqs);
     /// assert_eq!(out.len(), 2);
-    /// assert_eq!(out[0], svc.run(&reqs[0]));
-    /// assert_eq!(out[1], svc.run(&reqs[1]));
+    /// assert_eq!(out[0].as_ref().unwrap(), &svc.run(&reqs[0]));
+    /// assert_eq!(out[1].as_ref().unwrap(), &svc.run(&reqs[1]));
     /// ```
-    pub fn run_batch(&self, reqs: &[SimRequest]) -> Vec<Vec<Artifact>> {
+    pub fn run_batch(&self, reqs: &[SimRequest]) -> Vec<RequestResult> {
         if reqs.len() <= 1 {
-            return reqs.iter().map(|r| self.run(r)).collect();
+            return reqs.iter().map(|r| self.try_run(r)).collect();
         }
         let workers = crate::coordinator::scheduler::default_workers().min(reqs.len());
         let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Vec<Artifact>>>> =
+        let slots: Vec<Mutex<Option<RequestResult>>> =
             reqs.iter().map(|_| Mutex::new(None)).collect();
         thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     let Some(req) = reqs.get(i) else { break };
-                    let out = self.run(req);
+                    // try_run catches the panic before it can unwind the
+                    // scoped worker, so one bad request cannot abort the
+                    // scope (which would discard every sibling result).
+                    let out = self.try_run(req);
                     *slots[i].lock().expect("batch slot poisoned") = Some(out);
                 });
             }
@@ -320,9 +388,10 @@ impl Service {
                 b.stolen_jobs.into(),
             ]);
         }
-        // Only the deterministic counters (entries, lookups) are
-        // reported: hit/miss splits vary with worker races, and the
-        // facade guarantees bit-identical artifacts run to run.
+        // The full counter set (entries, hits, misses, lookups) renders
+        // here: since hit/miss classification moved under the plan-cache
+        // table lock the split is deterministic, so the facade's
+        // bit-identical-artifacts guarantee holds for the note too.
         a.push_note(planning.summary());
         a
     }
@@ -472,6 +541,29 @@ mod tests {
         assert_eq!(stats.entries, 4, "two passes x two modes");
         svc.run(&SimRequest::layer(p));
         assert_eq!(svc.plan_cache().stats().entries, 4, "replay plans nothing new");
+    }
+
+    #[test]
+    fn catch_request_reports_panics_as_errors() {
+        assert_eq!(catch_request(|| 41 + 1), Ok(42));
+        let err = catch_request::<()>(|| panic!("boom: {}", 7)).unwrap_err();
+        assert!(err.contains("boom: 7"), "{err}");
+        let err = catch_request::<()>(|| panic!("static payload")).unwrap_err();
+        assert!(err.contains("static payload"), "{err}");
+    }
+
+    #[test]
+    fn try_run_rejects_invalid_requests_cleanly() {
+        let svc = Service::new(AccelConfig::default());
+        let bad = SimRequest::layer(
+            crate::conv::ConvParams::square(56, 100, 100, 3, 2, 1).with_groups(32),
+        );
+        let err = svc.try_run(&bad).unwrap_err();
+        assert_eq!(err.request, "layer");
+        assert!(err.message.contains("groups"), "{err}");
+        // A valid request through try_run equals the infallible path.
+        let ok = svc.try_run(&SimRequest::Table3).unwrap();
+        assert_eq!(ok, svc.run(&SimRequest::Table3));
     }
 
     #[test]

@@ -181,6 +181,26 @@ impl SimRequest {
         SimRequest::Fleet(FleetRequest::new(devices))
     }
 
+    /// Check the request's own options before serving it: layer
+    /// geometries must pass [`ConvParams::validate`] and device counts
+    /// must be at least 1. [`crate::api::Service::try_run`] rejects
+    /// invalid requests with a clean error instead of letting them panic
+    /// deep inside the model — the contract a request-serving frontend
+    /// ([`crate::server`]) relies on.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            SimRequest::Layer(p) => p.validate(),
+            SimRequest::Figure(f) if f.devices == Some(0) => {
+                Err("figure devices must be >= 1".into())
+            }
+            SimRequest::TrainCost { devices: Some(0) } => {
+                Err("traincost devices must be >= 1".into())
+            }
+            SimRequest::Fleet(f) if f.devices == 0 => Err("fleet devices must be >= 1".into()),
+            _ => Ok(()),
+        }
+    }
+
     /// Stable request kind name (used for logging and artifact
     /// provenance metadata).
     pub fn name(&self) -> &'static str {
@@ -231,6 +251,23 @@ mod tests {
         assert_eq!(SimRequest::TrainCost { devices: None }.name(), "traincost");
         let fleet: SimRequest = FleetRequest::new(2).extended(true).into();
         assert_eq!(fleet.name(), "fleet");
+    }
+
+    #[test]
+    fn validate_rejects_bad_geometry_and_zero_devices() {
+        assert!(SimRequest::Table2.validate().is_ok());
+        assert!(SimRequest::fleet(4).validate().is_ok());
+        assert!(SimRequest::fleet(0).validate().is_err());
+        assert!(SimRequest::TrainCost { devices: Some(0) }.validate().is_err());
+        assert!(SimRequest::TrainCost { devices: None }.validate().is_ok());
+        let mut fig = FigureRequest::new(Figure::Runtime);
+        fig.devices = Some(0);
+        assert!(SimRequest::Figure(fig).validate().is_err());
+        // Groups that do not divide the channels fail ConvParams::validate.
+        let bad = ConvParams::square(56, 100, 100, 3, 2, 1).with_groups(32);
+        assert!(SimRequest::layer(bad).validate().is_err());
+        let good = ConvParams::square(56, 128, 128, 3, 2, 1);
+        assert!(SimRequest::layer(good).validate().is_ok());
     }
 
     #[test]

@@ -345,6 +345,58 @@ impl ConvParams {
         {
             return Err(format!("degenerate parameter in {self:?}"));
         }
+        // Magnitude bounds. The analytic model multiplies these
+        // components freely in usize/u64/f64; without a cap, a hostile
+        // spec (e.g. through the HTTP query route) wraps in release
+        // builds and returns silently wrong numbers instead of an
+        // error. Per-component first (so the checks below cannot
+        // themselves overflow), then a combined volume bound computed
+        // in u128: every quantity the model derives — zero-spaced
+        // extents, MACs, traffic bytes — is a small multiple of it, so
+        // capping it at 2^48 keeps all downstream arithmetic far from
+        // wrap-around (and exactly representable in f64). Real
+        // workloads sit near 2^32.
+        const MAX_DIM: usize = 1 << 20;
+        for (label, v) in [
+            ("B", self.b),
+            ("C", self.c),
+            ("N", self.n),
+            ("Hi", self.hi),
+            ("Wi", self.wi),
+            ("Kh", self.kh),
+            ("Kw", self.kw),
+            ("Sh", self.sh),
+            ("Sw", self.sw),
+            ("Dh", self.dh),
+            ("Dw", self.dw),
+            ("Ph", self.ph),
+            ("Pw", self.pw),
+        ] {
+            if v > MAX_DIM {
+                return Err(format!("{label}={v} exceeds the supported maximum {MAX_DIM}"));
+            }
+        }
+        const MAX_VOLUME: u128 = 1 << 48;
+        // Checked multiplication throughout: with components up to 2^20
+        // the raw product can overflow even u128, and a wrapped product
+        // sneaking under the bound would defeat the guard. Overflow IS
+        // "too large".
+        let hz = (self.hi + 2 * self.ph) as u128 * self.sh as u128
+            + (self.dh * (self.kh - 1) + 1) as u128;
+        let wz = (self.wi + 2 * self.pw) as u128 * self.sw as u128
+            + (self.dw * (self.kw - 1) + 1) as u128;
+        let volume = [self.c as u128, self.n as u128, hz, wz, (self.kh * self.kw) as u128]
+            .iter()
+            .try_fold(self.b as u128, |acc, &v| acc.checked_mul(v));
+        match volume {
+            Some(v) if v <= MAX_VOLUME => {}
+            _ => {
+                return Err(format!(
+                    "layer volume (B*C*N*zero-spaced-H*W*Kh*Kw) exceeds the supported \
+                     maximum 2^48 in {self:?}"
+                ));
+            }
+        }
         if self.c % self.groups != 0 || self.n % self.groups != 0 {
             return Err(format!("groups must divide C and N in {self:?}"));
         }
@@ -479,6 +531,26 @@ mod tests {
     fn validate_rejects_nondividing_groups() {
         let p = ConvParams::square(56, 6, 8, 3, 2, 1).with_groups(4);
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_oversized_geometry() {
+        // Single huge component: caught by the per-component cap (and
+        // before any subtraction that could wrap).
+        let p = ConvParams::square(usize::MAX / 2, 1, 1, 1, 1, 0);
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("maximum"), "{err}");
+        // Every component under the cap but the combined volume huge:
+        // caught by the u128 volume bound.
+        let p = ConvParams::square(1 << 14, 1 << 12, 1 << 12, 3, 2, 1);
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("volume"), "{err}");
+        // The largest real workloads stay comfortably inside.
+        for net in crate::workloads::extended_networks() {
+            for l in &net.layers {
+                l.params.validate().unwrap_or_else(|e| panic!("{}/{}: {e}", net.name, l.name));
+            }
+        }
     }
 
     #[test]

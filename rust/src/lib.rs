@@ -48,9 +48,15 @@
 //!   of the paper.
 //! * [`api`] — the public query facade: typed [`api::SimRequest`]s
 //!   served by an [`api::Service`] (shared plan cache, concurrent
-//!   batches) into structured [`api::Artifact`]s with one
-//!   text/CSV/JSON rendering layer — what the `repro` CLI and any
-//!   request-serving frontend speak (DESIGN.md §9).
+//!   batches, per-request error isolation) into structured
+//!   [`api::Artifact`]s with one text/CSV/JSON rendering layer — what
+//!   the `repro` CLI and the server speak (DESIGN.md §9). The
+//!   [`api::json`] submodule adds the request-side wire codec.
+//! * [`server`] — a dependency-free HTTP/1.1 JSON frontend over the
+//!   facade (`repro serve`): request framing with hard limits, a
+//!   bounded worker pool, a rendered-response [`server::cache::ArtifactCache`]
+//!   above the shared plan cache, `/metrics` observability and a
+//!   signal-free graceful shutdown (DESIGN.md §10).
 //!
 //! See the top-level `README.md` for a quickstart and the full CLI
 //! command table, `DESIGN.md` for modeling decisions, and
@@ -67,6 +73,7 @@ pub mod im2col;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod tensor;
 pub mod workloads;

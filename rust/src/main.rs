@@ -45,6 +45,11 @@ COMMANDS:
   traincost             Full training-step cost (fwd+loss+grad) per network
   fleet                 Backward-pass sharding across N simulated
                         accelerators (makespan, efficiency, plan cache)
+  serve                 Long-running HTTP/1.1 JSON server over the query
+                        facade: POST /v1/query, POST /v1/batch,
+                        GET /v1/requests, GET /healthz, GET /metrics,
+                        POST /v1/shutdown (graceful). One shared plan
+                        cache + rendered-response cache per process.
   train [--steps N]     End-to-end training via the AOT HLO artifacts.
                         NOTE: requires the `pjrt` build feature — uncomment
                         the xla/anyhow [dependencies] in rust/Cargo.toml and
@@ -79,6 +84,10 @@ OPTIONS:
                               the scaling in every output format)
   --steps N                   Training steps (train; default 300)
   --seed N                    Training seed (train; default 0)
+  --addr HOST:PORT            Bind address (serve; default 127.0.0.1:8000,
+                              port 0 picks an ephemeral port)
+  --threads N                 Connection worker threads (serve; default:
+                              one per core, capped at 8)
 
 Unknown options are errors; `--key` options require a value that does
 not itself start with `--`.
@@ -88,8 +97,17 @@ not itself start with `--`.
 const UNIVERSAL_OPTS: [&str; 4] = ["--config", "--bandwidth", "--csv", "--json"];
 
 /// Options that consume a value (everything else is a bare flag).
-const VALUE_OPTS: [&str; 7] =
-    ["--config", "--bandwidth", "--pass", "--devices", "--layer", "--steps", "--seed"];
+const VALUE_OPTS: [&str; 9] = [
+    "--config",
+    "--bandwidth",
+    "--pass",
+    "--devices",
+    "--layer",
+    "--steps",
+    "--seed",
+    "--addr",
+    "--threads",
+];
 
 /// One CLI command: its name, the options it accepts beyond the
 /// universal set, and whether the universal query options (config /
@@ -108,7 +126,7 @@ struct CommandSpec {
 /// Options shared by the figure commands (and `all`, which runs them).
 const FIG_OPTS: &[&str] = &["--pass", "--extended", "--devices"];
 
-const COMMANDS: [CommandSpec; 13] = [
+const COMMANDS: [CommandSpec; 14] = [
     CommandSpec { name: "table2", extra_opts: &[], universal: true },
     CommandSpec { name: "table3", extra_opts: &[], universal: true },
     CommandSpec { name: "table4", extra_opts: &[], universal: true },
@@ -120,6 +138,15 @@ const COMMANDS: [CommandSpec; 13] = [
     CommandSpec { name: "sim", extra_opts: &["--layer"], universal: true },
     CommandSpec { name: "traincost", extra_opts: &["--devices"], universal: true },
     CommandSpec { name: "fleet", extra_opts: &["--devices", "--extended"], universal: true },
+    // `serve` is an action, not a one-shot query: it renders nothing, so
+    // `--csv`/`--json` are rejected like `train`'s — but it *does*
+    // simulate under a platform config, so `--config`/`--bandwidth`
+    // come back in via extra_opts.
+    CommandSpec {
+        name: "serve",
+        extra_opts: &["--addr", "--threads", "--config", "--bandwidth"],
+        universal: false,
+    },
     CommandSpec { name: "train", extra_opts: &["--steps", "--seed"], universal: false },
     CommandSpec { name: "all", extra_opts: FIG_OPTS, universal: true },
 ];
@@ -306,6 +333,35 @@ fn build_requests(cmd: &str, opts: &Opts) -> Result<Vec<SimRequest>, String> {
     })
 }
 
+/// `serve`: bind the HTTP frontend and run it until the shutdown
+/// sentinel arrives. Prints the bound address first (on one line, so
+/// scripts binding port 0 can scrape the ephemeral port).
+fn cmd_serve(opts: &Opts) -> Result<(), String> {
+    use std::io::Write as _;
+    let cfg = accel_config(opts)?;
+    let addr = opts.value("--addr").unwrap_or(bp_im2col::server::DEFAULT_ADDR);
+    let threads = match opts.value("--threads") {
+        None => bp_im2col::server::default_threads(),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| format!("bad --threads {v:?}"))?;
+            if n == 0 {
+                return Err("--threads must be >= 1".into());
+            }
+            n
+        }
+    };
+    let server = bp_im2col::server::Server::bind(cfg, addr, threads)
+        .map_err(|e| format!("cannot bind {addr}: {e}"))?;
+    println!(
+        "repro serve: listening on http://{} ({threads} worker threads)",
+        server.local_addr()
+    );
+    let _ = std::io::stdout().flush();
+    server.serve().map_err(|e| format!("serve failed: {e}"))?;
+    println!("repro serve: shut down cleanly");
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_train(_opts: &Opts) -> Result<(), String> {
     Err("the `train` command needs the PJRT runtime — uncomment the xla/anyhow \
@@ -358,13 +414,22 @@ fn run() -> Result<(), String> {
     if cmd == "train" {
         return cmd_train(&opts);
     }
+    if cmd == "serve" {
+        return cmd_serve(&opts);
+    }
     let cfg = accel_config(&opts)?;
     let requests = build_requests(&cmd, &opts)?;
     let service = Service::new(cfg);
     let artifacts: Vec<Artifact> = if requests.len() > 1 {
         // `all`: serve the whole report sequence concurrently through
-        // the shared plan cache, print in request order.
-        service.run_batch(&requests).into_iter().flatten().collect()
+        // the shared plan cache, print in request order. Per-request
+        // failures surface as the command's error (CLI requests are
+        // pre-validated, so this is a can't-happen backstop).
+        let mut artifacts = Vec::new();
+        for result in service.run_batch(&requests) {
+            artifacts.extend(result.map_err(|e| e.to_string())?);
+        }
+        artifacts
     } else {
         service.run(&requests[0])
     };
@@ -411,6 +476,23 @@ mod tests {
         let reqs = build_requests("all", &parsed("all", &[])).unwrap();
         assert!(!reqs.iter().any(|r| matches!(r, SimRequest::Fleet(_))));
         assert_eq!(reqs.len(), 7);
+    }
+
+    #[test]
+    fn serve_spec_rejects_render_options_but_takes_config() {
+        let spec = COMMANDS.iter().find(|c| c.name == "serve").unwrap();
+        for opt in ["--csv", "--json"] {
+            assert!(Opts::parse(&[opt.to_string()], spec).is_err(), "{opt}");
+        }
+        let ok = [
+            "--addr".to_string(),
+            "127.0.0.1:0".to_string(),
+            "--threads".to_string(),
+            "2".to_string(),
+            "--config".to_string(),
+            "configs/edge.cfg".to_string(),
+        ];
+        assert!(Opts::parse(&ok, spec).is_ok());
     }
 
     #[test]

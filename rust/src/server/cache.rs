@@ -1,0 +1,139 @@
+//! Response memoization above the plan cache.
+//!
+//! A [`crate::api::SimRequest`] is `Copy + Eq + Hash` and the
+//! [`crate::api::Service`] is deterministic, so the *rendered JSON* of a
+//! successful request is itself a pure function of the request — one
+//! warm process can answer a repeated geometry sweep without touching
+//! the model at all. [`ArtifactCache`] memoizes those rendered bodies;
+//! the plan cache below it still amortizes planning across *distinct*
+//! requests that share layer geometries.
+//!
+//! Only successful responses are cached (errors are cheap to recompute
+//! and should not be pinned), and the whole body is behind one `Arc` so
+//! a hit is a pointer clone.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::api::SimRequest;
+
+/// Counters of an [`ArtifactCache`] (rendered into `/metrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArtifactCacheStats {
+    /// Lookups answered from the memo table.
+    pub hits: u64,
+    /// Lookups that found nothing cached.
+    pub misses: u64,
+    /// Distinct rendered responses stored.
+    pub entries: usize,
+}
+
+/// Memo table of rendered JSON responses, keyed by request.
+#[derive(Default)]
+pub struct ArtifactCache {
+    inner: Mutex<CacheInner>,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    rendered: HashMap<SimRequest, Arc<String>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ArtifactCache {
+    /// Hard bound on cached responses. A hostile client can mint
+    /// unlimited *distinct* requests (the layer-spec space is huge), so
+    /// the table must not grow with attacker-controlled cardinality:
+    /// past the bound, [`ArtifactCache::insert`] stops storing and the
+    /// server simply serves uncached.
+    pub const MAX_ENTRIES: usize = 4096;
+
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cached body for `req`, counting a hit or miss. Unlike the
+    /// plan cache there is no build slot: the caller renders on a miss
+    /// and [`ArtifactCache::insert`]s, so two concurrent first requests
+    /// may both render (identical bytes; the first insert wins) — wasted
+    /// work bounded by one render, accepted to keep error responses out
+    /// of the table.
+    pub fn get(&self, req: &SimRequest) -> Option<Arc<String>> {
+        let mut inner = self.inner.lock().expect("artifact cache poisoned");
+        match inner.rendered.get(req) {
+            Some(body) => {
+                let body = Arc::clone(body);
+                inner.hits += 1;
+                Some(body)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store the rendered body of a successful request. Keeps the
+    /// existing entry when one raced in first (so callers can use the
+    /// returned `Arc` either way), and stores nothing once
+    /// [`ArtifactCache::MAX_ENTRIES`] distinct responses are pinned —
+    /// the returned body still serves this response.
+    pub fn insert(&self, req: SimRequest, body: String) -> Arc<String> {
+        let mut inner = self.inner.lock().expect("artifact cache poisoned");
+        if inner.rendered.len() >= Self::MAX_ENTRIES && !inner.rendered.contains_key(&req) {
+            return Arc::new(body);
+        }
+        Arc::clone(inner.rendered.entry(req).or_insert_with(|| Arc::new(body)))
+    }
+
+    /// Current counters as one consistent snapshot.
+    pub fn stats(&self) -> ArtifactCacheStats {
+        let inner = self.inner.lock().expect("artifact cache poisoned");
+        ArtifactCacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            entries: inner.rendered.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_insert_then_hit() {
+        let cache = ArtifactCache::new();
+        let req = SimRequest::Table3;
+        assert!(cache.get(&req).is_none());
+        cache.insert(req, "{\"artifacts\":[]}".to_string());
+        let body = cache.get(&req).expect("cached");
+        assert_eq!(*body, "{\"artifacts\":[]}");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn first_insert_wins_a_race() {
+        let cache = ArtifactCache::new();
+        let req = SimRequest::Table4;
+        let a = cache.insert(req, "first".to_string());
+        let b = cache.insert(req, "second".to_string());
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(*b, "first");
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn distinct_requests_are_distinct_entries() {
+        let cache = ArtifactCache::new();
+        cache.insert(SimRequest::Table2, "t2".to_string());
+        cache.insert(SimRequest::Table3, "t3".to_string());
+        cache.insert(SimRequest::fleet(2), "f2".to_string());
+        cache.insert(SimRequest::fleet(4), "f4".to_string());
+        assert_eq!(cache.stats().entries, 4);
+        assert_eq!(*cache.get(&SimRequest::fleet(4)).unwrap(), "f4");
+    }
+}

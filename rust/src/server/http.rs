@@ -1,0 +1,461 @@
+//! Minimal HTTP/1.1 framing over any `Read + Write` byte stream.
+//!
+//! Exactly the subset the query server needs, std-only: request line,
+//! headers, `Content-Length` bodies, keep-alive. Everything else is
+//! rejected with the right status code instead of being half-supported:
+//! oversized heads are 431, oversized bodies 413, chunked uploads 501,
+//! and any malformed or truncated request 400 — all without panicking,
+//! so one hostile connection can never take a worker thread down.
+//!
+//! [`HttpConn`] is generic over the stream so the parser is unit-tested
+//! against in-memory transcripts; the live server instantiates it with a
+//! [`std::net::TcpStream`].
+
+use std::io::{self, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Upper bound on the request head (request line + headers), bytes.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Wall-clock budget for reading one complete request. The socket read
+/// timeout bounds a single silent read; this bounds the whole request,
+/// so a slow-trickle client (one byte per read, forever) cannot pin a
+/// worker past it.
+pub const REQUEST_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Upper bound on a request body, bytes (a `/v1/batch` of the maximum
+/// request count fits comfortably).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Upper bound on the header count of one request.
+pub const MAX_HEADERS: usize = 64;
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Method token, upper-cased by the client (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target as sent (path plus optional `?query`).
+    pub path: String,
+    /// True when the request line declared `HTTP/1.0`.
+    pub http10: bool,
+    /// Headers in arrival order, names lower-cased.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == lower).map(|(_, v)| v.as_str())
+    }
+
+    /// The path with any `?query` suffix removed.
+    pub fn route_path(&self) -> &str {
+        self.path.split('?').next().unwrap_or(&self.path)
+    }
+
+    /// Whether the connection should stay open after this request:
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`,
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => !self.http10,
+        }
+    }
+}
+
+/// Why a request could not be read. Each variant maps to the response
+/// the server should send before closing the connection ([`HttpError::response`]).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Syntactically invalid request (bad request line, header, length
+    /// field, or a body cut short by the peer).
+    Malformed(String),
+    /// Request head exceeded [`MAX_HEAD_BYTES`].
+    HeadTooLarge,
+    /// Declared `Content-Length` exceeded [`MAX_BODY_BYTES`].
+    BodyTooLarge(usize),
+    /// A feature outside the supported subset (chunked bodies).
+    Unsupported(String),
+    /// Transport error (reset, timeout); no response can be delivered.
+    Io(io::Error),
+}
+
+impl HttpError {
+    /// The 4xx/5xx response this error maps to, or `None` when the
+    /// transport itself failed and writing would be pointless.
+    pub fn response(&self) -> Option<Response> {
+        match self {
+            HttpError::Malformed(msg) => Some(Response::error(400, msg)),
+            HttpError::HeadTooLarge => Some(Response::error(
+                431,
+                &format!("request head exceeds {MAX_HEAD_BYTES} bytes"),
+            )),
+            HttpError::BodyTooLarge(n) => Some(Response::error(
+                413,
+                &format!("request body of {n} bytes exceeds {MAX_BODY_BYTES}"),
+            )),
+            HttpError::Unsupported(msg) => Some(Response::error(501, msg)),
+            HttpError::Io(_) => None,
+        }
+    }
+}
+
+/// One response to serialize. Construction helpers fill the usual
+/// content types; [`HttpConn::write_response`] adds the framing headers.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, body: impl Into<Vec<u8>>) -> Self {
+        Response { status, content_type: "application/json", body: body.into() }
+    }
+
+    /// A plain-text response.
+    pub fn text(status: u16, body: impl Into<Vec<u8>>) -> Self {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+    }
+
+    /// A JSON error envelope `{"error":"..."}`.
+    pub fn error(status: u16, message: &str) -> Self {
+        Response::json(
+            status,
+            format!("{{\"error\":{}}}", crate::api::artifact::json_string(message)),
+        )
+    }
+}
+
+/// Reason phrase for the status codes the server emits.
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        207 => "Multi-Status",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Unknown",
+    }
+}
+
+/// A buffered HTTP connection: reads framed requests (retaining
+/// pipelined leftovers between keep-alive requests) and writes framed
+/// responses.
+pub struct HttpConn<S> {
+    stream: S,
+    /// Bytes read from the stream but not yet consumed by a request.
+    buf: Vec<u8>,
+}
+
+impl<S: Read + Write> HttpConn<S> {
+    /// Wrap a byte stream.
+    pub fn new(stream: S) -> Self {
+        HttpConn { stream, buf: Vec::new() }
+    }
+
+    /// Read the next request. `Ok(None)` is a clean close: the peer shut
+    /// the connection down between requests (the normal end of a
+    /// keep-alive session).
+    pub fn read_request(&mut self) -> Result<Option<Request>, HttpError> {
+        let started = Instant::now();
+        // Accumulate until the blank line that ends the head.
+        let head_end = loop {
+            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            if self.buf.len() > MAX_HEAD_BYTES {
+                return Err(HttpError::HeadTooLarge);
+            }
+            if started.elapsed() > REQUEST_DEADLINE {
+                return Err(HttpError::Malformed(
+                    "request head not completed within the request deadline".to_string(),
+                ));
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk).map_err(HttpError::Io)?;
+            if n == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::Malformed(
+                    "connection closed mid-request head".to_string(),
+                ));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        if head_end > MAX_HEAD_BYTES {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let head = self.buf[..head_end].to_vec();
+        self.buf.drain(..head_end + 4);
+        let head = String::from_utf8(head)
+            .map_err(|_| HttpError::Malformed("request head is not UTF-8".to_string()))?;
+        let mut lines = head.split("\r\n");
+        let request_line =
+            lines.next().ok_or_else(|| HttpError::Malformed("empty request".to_string()))?;
+        let mut parts = request_line.split_ascii_whitespace();
+        let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+        {
+            (Some(m), Some(p), Some(v), None) => (m, p, v),
+            _ => {
+                return Err(HttpError::Malformed(format!(
+                    "bad request line {request_line:?}"
+                )))
+            }
+        };
+        let http10 = match version {
+            "HTTP/1.1" => false,
+            "HTTP/1.0" => true,
+            other => {
+                return Err(HttpError::Malformed(format!("unsupported version {other:?}")))
+            }
+        };
+        if !path.starts_with('/') {
+            return Err(HttpError::Malformed(format!("bad request target {path:?}")));
+        }
+
+        let mut headers = Vec::new();
+        for line in lines {
+            if headers.len() >= MAX_HEADERS {
+                return Err(HttpError::HeadTooLarge);
+            }
+            let (name, value) = line.split_once(':').ok_or_else(|| {
+                HttpError::Malformed(format!("bad header line {line:?}"))
+            })?;
+            if name.is_empty() || name.contains(' ') {
+                return Err(HttpError::Malformed(format!("bad header name {name:?}")));
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+
+        let mut req =
+            Request { method: method.to_string(), path: path.to_string(), http10, headers, body: Vec::new() };
+        if let Some(te) = req.header("transfer-encoding") {
+            return Err(HttpError::Unsupported(format!(
+                "transfer-encoding {te:?} is not supported; send a Content-Length body"
+            )));
+        }
+        // RFC 9110: conflicting (or repeated) Content-Length headers
+        // desynchronize framing — classic request-smuggling material —
+        // so any duplicate is rejected outright.
+        if req.headers.iter().filter(|(n, _)| n == "content-length").count() > 1 {
+            return Err(HttpError::Malformed(
+                "multiple content-length headers".to_string(),
+            ));
+        }
+        // RFC 9110 allows DIGIT only — `parse()` alone would also take
+        // a leading `+`, which intermediaries may frame differently
+        // (another smuggling desync).
+        let content_length = match req.header("content-length") {
+            None => 0usize,
+            Some(v) => {
+                let v = v.trim();
+                if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                    return Err(HttpError::Malformed(format!("bad content-length {v:?}")));
+                }
+                v.parse().map_err(|_| {
+                    HttpError::Malformed(format!("bad content-length {v:?}"))
+                })?
+            }
+        };
+        if content_length > MAX_BODY_BYTES {
+            return Err(HttpError::BodyTooLarge(content_length));
+        }
+
+        // Take the body: first from the leftover buffer, then the stream.
+        let from_buf = content_length.min(self.buf.len());
+        req.body.extend_from_slice(&self.buf[..from_buf]);
+        self.buf.drain(..from_buf);
+        while req.body.len() < content_length {
+            if started.elapsed() > REQUEST_DEADLINE {
+                return Err(HttpError::Malformed(
+                    "request body not completed within the request deadline".to_string(),
+                ));
+            }
+            let mut chunk = [0u8; 4096];
+            let want = (content_length - req.body.len()).min(chunk.len());
+            let n = self.stream.read(&mut chunk[..want]).map_err(HttpError::Io)?;
+            if n == 0 {
+                return Err(HttpError::Malformed(format!(
+                    "connection closed after {} of {content_length} body bytes",
+                    req.body.len()
+                )));
+            }
+            req.body.extend_from_slice(&chunk[..n]);
+        }
+        Ok(Some(req))
+    }
+
+    /// Write one framed response. `keep_alive` selects the `Connection`
+    /// header (the caller owns the close decision).
+    pub fn write_response(&mut self, resp: &Response, keep_alive: bool) -> io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            resp.status,
+            status_reason(resp.status),
+            resp.content_type,
+            resp.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(&resp.body)?;
+        self.stream.flush()
+    }
+}
+
+/// First index where `needle` occurs in `haystack`.
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An in-memory byte stream: reads from a scripted input, records
+    /// writes.
+    struct MockStream {
+        input: io::Cursor<Vec<u8>>,
+        output: Vec<u8>,
+    }
+
+    impl MockStream {
+        fn new(input: &[u8]) -> Self {
+            MockStream { input: io::Cursor::new(input.to_vec()), output: Vec::new() }
+        }
+    }
+
+    impl Read for MockStream {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.input.read(buf)
+        }
+    }
+
+    impl Write for MockStream {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.output.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn conn(input: &str) -> HttpConn<MockStream> {
+        HttpConn::new(MockStream::new(input.as_bytes()))
+    }
+
+    #[test]
+    fn parses_a_get_request() {
+        let mut c = conn("GET /healthz?x=1 HTTP/1.1\r\nHost: localhost\r\n\r\n");
+        let req = c.read_request().unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz?x=1");
+        assert_eq!(req.route_path(), "/healthz");
+        assert_eq!(req.header("host"), Some("localhost"));
+        assert_eq!(req.header("HOST"), Some("localhost"));
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+        assert!(req.body.is_empty());
+        // Next read: clean close.
+        assert!(c.read_request().unwrap().is_none());
+    }
+
+    #[test]
+    fn parses_a_post_body_and_pipelined_follow_up() {
+        let mut c = conn(
+            "POST /v1/query HTTP/1.1\r\nContent-Length: 16\r\n\r\n{\"kind\":\"table\"}GET / HTTP/1.1\r\nConnection: close\r\n\r\n",
+        );
+        let req = c.read_request().unwrap().unwrap();
+        assert_eq!(req.body, b"{\"kind\":\"table\"}");
+        let second = c.read_request().unwrap().unwrap();
+        assert_eq!(second.method, "GET");
+        assert!(!second.keep_alive(), "explicit close wins");
+    }
+
+    #[test]
+    fn http10_defaults_to_close_unless_keep_alive() {
+        let mut c = conn("GET / HTTP/1.0\r\n\r\n");
+        assert!(!c.read_request().unwrap().unwrap().keep_alive());
+        let mut c = conn("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(c.read_request().unwrap().unwrap().keep_alive());
+    }
+
+    #[test]
+    fn malformed_requests_map_to_400() {
+        for bad in [
+            "NOT_A_REQUEST\r\n\r\n",
+            "GET / HTTP/2\r\n\r\n",
+            "GET no-slash HTTP/1.1\r\n\r\n",
+            "GET / HTTP/1.1\r\nBroken Header No Colon\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 20\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello",
+            "POST / HTTP/1.1\r\nContent-Length: +5\r\n\r\nhello",
+        ] {
+            let err = conn(bad).read_request().unwrap_err();
+            assert_eq!(err.response().unwrap().status, 400, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_head_and_body_are_malformed() {
+        let err = conn("GET / HTT").read_request().unwrap_err();
+        assert!(matches!(err, HttpError::Malformed(_)), "{err:?}");
+        let err = conn("POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort")
+            .read_request()
+            .unwrap_err();
+        assert!(matches!(err, HttpError::Malformed(_)), "{err:?}");
+        assert_eq!(err.response().unwrap().status, 400);
+    }
+
+    #[test]
+    fn oversized_head_and_body_are_rejected() {
+        let huge = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES + 1));
+        let err = conn(&huge).read_request().unwrap_err();
+        assert_eq!(err.response().unwrap().status, 431);
+        let req = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let err = conn(&req).read_request().unwrap_err();
+        assert_eq!(err.response().unwrap().status, 413);
+    }
+
+    #[test]
+    fn chunked_bodies_are_unsupported() {
+        let err = conn("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+            .read_request()
+            .unwrap_err();
+        assert_eq!(err.response().unwrap().status, 501);
+    }
+
+    #[test]
+    fn writes_a_framed_response() {
+        let mut c = conn("");
+        c.write_response(&Response::json(200, "{\"ok\":true}"), true).unwrap();
+        let out = String::from_utf8(c.stream.output.clone()).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "{out}");
+        assert!(out.contains("Content-Type: application/json\r\n"));
+        assert!(out.contains("Content-Length: 11\r\n"));
+        assert!(out.contains("Connection: keep-alive\r\n"));
+        assert!(out.ends_with("\r\n\r\n{\"ok\":true}"), "{out}");
+        c.write_response(&Response::error(404, "no such route"), false).unwrap();
+        let out = String::from_utf8(c.stream.output).unwrap();
+        assert!(out.contains("HTTP/1.1 404 Not Found\r\n"));
+        assert!(out.contains("Connection: close\r\n"));
+        assert!(out.contains("{\"error\":\"no such route\"}"));
+    }
+}

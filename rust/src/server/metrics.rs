@@ -1,0 +1,234 @@
+//! Server observability: per-route request counters, status classes and
+//! latency histograms, rendered in the Prometheus text exposition
+//! format (plus the plan- and artifact-cache counters) at `/metrics`.
+//!
+//! Lock-free on the hot path: every series is an [`AtomicU64`], bumped
+//! once per response. The histogram buckets are cumulative (`le`
+//! semantics), fixed at microsecond bounds that bracket the server's
+//! realistic range — a cached hit is tens of microseconds, a cold
+//! 8-device fleet sweep tens of milliseconds.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::accel::plan::PlanCacheStats;
+use crate::server::cache::ArtifactCacheStats;
+use crate::server::router::Route;
+
+/// Upper bounds of the latency histogram buckets, in microseconds
+/// (a final implicit `+Inf` bucket follows).
+pub const LATENCY_BUCKETS_US: [u64; 8] =
+    [100, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 1_000_000];
+
+/// Counters of one route.
+#[derive(Default)]
+struct RouteMetrics {
+    /// Requests served (also the histogram count).
+    requests: AtomicU64,
+    /// Responses by status class: 2xx, 4xx, 5xx (3xx never emitted).
+    classes: [AtomicU64; 3],
+    /// Cumulative-style histogram counts, one per bucket plus `+Inf`.
+    buckets: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
+    /// Total latency, microseconds.
+    sum_us: AtomicU64,
+}
+
+/// All server metrics; one instance lives for the server's lifetime.
+pub struct ServerMetrics {
+    /// One slot per [`Route`] plus a final `other` slot for responses
+    /// that never resolved a route (404/405, framing 4xx/5xx) — hostile
+    /// traffic must be visible, not invisible, in `/metrics`.
+    routes: Vec<RouteMetrics>,
+}
+
+/// Series label of the unrouted-response slot.
+pub const OTHER_LABEL: &str = "other";
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    /// Zeroed metrics for every route (plus the `other` slot).
+    pub fn new() -> Self {
+        ServerMetrics {
+            routes: (0..Route::ALL.len() + 1).map(|_| RouteMetrics::default()).collect(),
+        }
+    }
+
+    /// `(slot index, series label)` of every slot, in slot order.
+    fn labels() -> impl Iterator<Item = (usize, &'static str)> {
+        Route::ALL.iter().map(|r| r.label()).chain(std::iter::once(OTHER_LABEL)).enumerate()
+    }
+
+    /// Record one served response. `None` is the unrouted slot —
+    /// resolver 404/405s and request-framing errors.
+    pub fn record(&self, route: Option<Route>, status: u16, elapsed_us: u64) {
+        let index = route.map_or(Route::ALL.len(), |r| r.index());
+        let m = &self.routes[index];
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        let class = match status {
+            200..=299 => 0,
+            400..=499 => 1,
+            _ => 2,
+        };
+        m.classes[class].fetch_add(1, Ordering::Relaxed);
+        let bucket = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&le| elapsed_us <= le)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        m.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        m.sum_us.fetch_add(elapsed_us, Ordering::Relaxed);
+    }
+
+    /// Total requests served across every route.
+    pub fn requests_total(&self) -> u64 {
+        self.routes.iter().map(|m| m.requests.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Render the Prometheus text exposition, folding in the model-side
+    /// cache counters.
+    pub fn render(&self, plan: &PlanCacheStats, artifacts: &ArtifactCacheStats) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("# HELP bp_server_requests_total Requests served per route.\n");
+        out.push_str("# TYPE bp_server_requests_total counter\n");
+        for (index, label) in Self::labels() {
+            let m = &self.routes[index];
+            writeln!(
+                out,
+                "bp_server_requests_total{{route=\"{label}\"}} {}",
+                m.requests.load(Ordering::Relaxed)
+            )
+            .unwrap();
+        }
+        out.push_str("# HELP bp_server_responses_total Responses per route and status class.\n");
+        out.push_str("# TYPE bp_server_responses_total counter\n");
+        for (index, label) in Self::labels() {
+            let m = &self.routes[index];
+            for (i, class) in ["2xx", "4xx", "5xx"].iter().enumerate() {
+                writeln!(
+                    out,
+                    "bp_server_responses_total{{route=\"{label}\",class=\"{class}\"}} {}",
+                    m.classes[i].load(Ordering::Relaxed)
+                )
+                .unwrap();
+            }
+        }
+        out.push_str(
+            "# HELP bp_server_request_duration_us Request latency histogram, microseconds.\n",
+        );
+        out.push_str("# TYPE bp_server_request_duration_us histogram\n");
+        for (index, label) in Self::labels() {
+            let m = &self.routes[index];
+            let mut cumulative = 0u64;
+            for (i, le) in LATENCY_BUCKETS_US.iter().enumerate() {
+                cumulative += m.buckets[i].load(Ordering::Relaxed);
+                writeln!(
+                    out,
+                    "bp_server_request_duration_us_bucket{{route=\"{label}\",le=\"{le}\"}} {cumulative}",
+                )
+                .unwrap();
+            }
+            cumulative += m.buckets[LATENCY_BUCKETS_US.len()].load(Ordering::Relaxed);
+            writeln!(
+                out,
+                "bp_server_request_duration_us_bucket{{route=\"{label}\",le=\"+Inf\"}} {cumulative}",
+            )
+            .unwrap();
+            writeln!(
+                out,
+                "bp_server_request_duration_us_sum{{route=\"{label}\"}} {}",
+                m.sum_us.load(Ordering::Relaxed)
+            )
+            .unwrap();
+            writeln!(
+                out,
+                "bp_server_request_duration_us_count{{route=\"{label}\"}} {}",
+                m.requests.load(Ordering::Relaxed)
+            )
+            .unwrap();
+        }
+        // One HELP/TYPE pair per metric family (hits/misses are
+        // counters, entry counts are gauges) so strict parsers accept
+        // the exposition.
+        let counters = [
+            ("bp_plan_cache_hits_total", "Plan-cache lookups served from the table.", plan.hits),
+            ("bp_plan_cache_misses_total", "Plan-cache lookups that built a plan.", plan.misses),
+            (
+                "bp_artifact_cache_hits_total",
+                "Rendered-response cache lookups served from the table.",
+                artifacts.hits,
+            ),
+            (
+                "bp_artifact_cache_misses_total",
+                "Rendered-response cache lookups that found nothing.",
+                artifacts.misses,
+            ),
+        ];
+        for (name, help, value) in counters {
+            writeln!(out, "# HELP {name} {help}").unwrap();
+            writeln!(out, "# TYPE {name} counter").unwrap();
+            writeln!(out, "{name} {value}").unwrap();
+        }
+        let gauges = [
+            ("bp_plan_cache_entries", "Distinct plans memoized.", plan.entries),
+            ("bp_artifact_cache_entries", "Distinct rendered responses memoized.", artifacts.entries),
+        ];
+        for (name, help, value) in gauges {
+            writeln!(out, "# HELP {name} {help}").unwrap();
+            writeln!(out, "# TYPE {name} gauge").unwrap();
+            writeln!(out, "{name} {value}").unwrap();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_land_in_the_right_series() {
+        let m = ServerMetrics::new();
+        m.record(Some(Route::Query), 200, 80);
+        m.record(Some(Route::Query), 200, 700);
+        m.record(Some(Route::Query), 400, 2_000_000);
+        m.record(Some(Route::Healthz), 200, 10);
+        m.record(None, 404, 5);
+        assert_eq!(m.requests_total(), 5);
+        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default());
+        assert!(text.contains("bp_server_requests_total{route=\"query\"} 3"), "{text}");
+        assert!(text.contains("bp_server_requests_total{route=\"healthz\"} 1"));
+        // Unrouted traffic (404s, framing errors) is visible too.
+        assert!(text.contains("bp_server_requests_total{route=\"other\"} 1"), "{text}");
+        assert!(text.contains("bp_server_responses_total{route=\"other\",class=\"4xx\"} 1"));
+        assert!(text.contains("bp_server_responses_total{route=\"query\",class=\"2xx\"} 2"));
+        assert!(text.contains("bp_server_responses_total{route=\"query\",class=\"4xx\"} 1"));
+        // Histogram: 80us falls in le=100, 700us in le=1000 (cumulative 2),
+        // 2s only in +Inf (cumulative 3).
+        assert!(text.contains("bp_server_request_duration_us_bucket{route=\"query\",le=\"100\"} 1"));
+        assert!(
+            text.contains("bp_server_request_duration_us_bucket{route=\"query\",le=\"1000\"} 2")
+        );
+        assert!(
+            text.contains("bp_server_request_duration_us_bucket{route=\"query\",le=\"+Inf\"} 3")
+        );
+        assert!(text.contains("bp_server_request_duration_us_count{route=\"query\"} 3"));
+    }
+
+    #[test]
+    fn renders_cache_counters() {
+        let m = ServerMetrics::new();
+        let plan = PlanCacheStats { hits: 7, misses: 3, entries: 3 };
+        let art = ArtifactCacheStats { hits: 2, misses: 1, entries: 1 };
+        let text = m.render(&plan, &art);
+        assert!(text.contains("bp_plan_cache_hits_total 7"));
+        assert!(text.contains("bp_plan_cache_misses_total 3"));
+        assert!(text.contains("bp_plan_cache_entries 3"));
+        assert!(text.contains("bp_artifact_cache_hits_total 2"));
+        assert!(text.contains("bp_artifact_cache_misses_total 1"));
+        assert!(text.contains("bp_artifact_cache_entries 1"));
+    }
+}

@@ -1,0 +1,504 @@
+//! A dependency-free HTTP/1.1 JSON frontend over the
+//! [`crate::api::Service`] facade (DESIGN.md §10).
+//!
+//! One warm process, one [`AccelConfig`], one shared plan cache, one
+//! [`ArtifactCache`] of rendered responses — so a fleet of clients
+//! sweeping layer geometries pays for each distinct plan once and for
+//! each repeated request nothing at all. The layering is deliberately
+//! boring:
+//!
+//! * [`http`] — request framing (request line, headers, `Content-Length`
+//!   bodies, keep-alive) with hard size limits; hostile input maps to
+//!   4xx, never to a dead worker.
+//! * [`router`] — the closed `(method, path)` table.
+//! * [`pool`] — a bounded worker pool; the queue bound backpressures the
+//!   accept loop.
+//! * [`cache`] — rendered-response memoization keyed by
+//!   [`SimRequest`] (`Copy + Eq + Hash`).
+//! * [`metrics`] — per-route counters and latency histograms, plus the
+//!   plan/artifact cache counters, in Prometheus text format.
+//!
+//! Everything is `std` only — the offline build has no crate registry,
+//! and nothing here needs one: the protocol subset is small enough that
+//! owning it outright is less code than binding a framework would be.
+//!
+//! # Routes
+//!
+//! | Route | Answer |
+//! |---|---|
+//! | `POST /v1/query` | One [`SimRequest`] body → the same bytes [`crate::api::render_all_json`] prints in-process |
+//! | `POST /v1/batch` | `{"requests":[...]}` → per-item results (`207` when any item fails) |
+//! | `GET /v1/requests` | Machine-readable request catalog |
+//! | `GET /healthz` | Liveness + request count |
+//! | `GET /metrics` | Prometheus text: routes, latencies, cache counters |
+//! | `POST /v1/shutdown` | Graceful shutdown sentinel (drains, then exits) |
+//!
+//! # Example
+//!
+//! ```no_run
+//! use bp_im2col::accel::AccelConfig;
+//! use bp_im2col::server::Server;
+//!
+//! let server = Server::bind(AccelConfig::default(), "127.0.0.1:0", 4).unwrap();
+//! println!("listening on {}", server.local_addr());
+//! server.serve().unwrap(); // returns after POST /v1/shutdown
+//! ```
+
+pub mod cache;
+pub mod http;
+pub mod metrics;
+pub mod pool;
+pub mod router;
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::accel::AccelConfig;
+use crate::api::artifact::json_string;
+use crate::api::json::{self, parse_batch};
+use crate::api::{render_all_json, Service, SimRequest};
+use cache::ArtifactCache;
+use http::{HttpConn, Request, Response};
+use metrics::ServerMetrics;
+use pool::ThreadPool;
+use router::Route;
+
+/// Address `serve` binds when `--addr` is not given.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:8000";
+
+/// Per-connection socket read timeout: bounds how long an idle
+/// keep-alive connection can pin a worker (notably during shutdown
+/// drain).
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Default worker-thread count for [`Server::bind`] callers that take
+/// the platform default (one per core, capped — same policy as the
+/// scheduler's host workers).
+pub fn default_threads() -> usize {
+    crate::coordinator::scheduler::default_workers()
+}
+
+/// Shared state of one running server.
+struct ServerState {
+    service: Service,
+    artifacts: ArtifactCache,
+    metrics: ServerMetrics,
+    shutdown: AtomicBool,
+    local_addr: SocketAddr,
+}
+
+/// The HTTP frontend: owns the listener, the worker pool, the
+/// [`Service`] and both caches.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    threads: usize,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:8000`, port `0` for ephemeral) and
+    /// prepare `threads` connection workers over a service for `cfg`.
+    pub fn bind(cfg: AccelConfig, addr: &str, threads: usize) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            service: Service::new(cfg),
+            artifacts: ArtifactCache::new(),
+            metrics: ServerMetrics::new(),
+            shutdown: AtomicBool::new(false),
+            local_addr,
+        });
+        Ok(Server { listener, state, threads: threads.max(1) })
+    }
+
+    /// The bound address (the actual port when `:0` was requested).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.local_addr
+    }
+
+    /// Accept and serve connections until a `POST /v1/shutdown` arrives,
+    /// then drain in-flight work and return. Signal-free by design: the
+    /// sentinel route sets the shutdown flag and pokes the accept loop
+    /// with a loopback connection, so no platform signal handling is
+    /// needed.
+    pub fn serve(self) -> io::Result<()> {
+        let pool = ThreadPool::new(self.threads);
+        for stream in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let state = Arc::clone(&self.state);
+                    pool.execute(move || handle_connection(stream, &state));
+                }
+                // Transient accept errors (aborted handshake, fd
+                // pressure): keep serving, but back off briefly so
+                // persistent failure (EMFILE) cannot busy-spin a core.
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+            }
+        }
+        drop(self.listener);
+        pool.join();
+        Ok(())
+    }
+}
+
+/// Serve one connection: a keep-alive loop of read → route → respond.
+/// Parse failures answer with their 4xx/5xx and close; transport errors
+/// just close. Never panics the worker — handler panics are caught per
+/// request inside [`Service::try_run`].
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut conn = HttpConn::new(&stream);
+    loop {
+        match conn.read_request() {
+            Ok(None) => break, // peer finished its keep-alive session
+            Ok(Some(req)) => {
+                let start = Instant::now();
+                let (route, response) = handle_request(&req, state);
+                let elapsed_us = start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                // Unresolved routes land in the "other" series — hostile
+                // traffic stays visible in /metrics.
+                state.metrics.record(route, response.status, elapsed_us);
+                let shutting_down = state.shutdown.load(Ordering::Acquire);
+                // Application-level errors (a 400 for a typo'd request
+                // kind, a 404) leave the stream consistently framed, so
+                // the keep-alive session continues; only framing errors
+                // (the Err arm below) desync the stream and must close.
+                let keep = req.keep_alive() && !shutting_down;
+                let is_shutdown = route == Some(Route::Shutdown);
+                if is_shutdown {
+                    // Wake the accept loop so it observes the flag even
+                    // with no other traffic in flight — before (and
+                    // regardless of) the response write, so a client
+                    // that resets the connection cannot strand serve()
+                    // in accept() with the flag already set.
+                    let _ = TcpStream::connect(wake_addr(state.local_addr));
+                }
+                if conn.write_response(&response, keep).is_err() || is_shutdown || !keep {
+                    break;
+                }
+            }
+            Err(err) => {
+                if let Some(response) = err.response() {
+                    state.metrics.record(None, response.status, 0);
+                    let _ = conn.write_response(&response, false);
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Where to connect to wake the accept loop: the bound address, except
+/// that a wildcard bind (`0.0.0.0` / `[::]`) is not a connectable
+/// destination everywhere, so it is replaced by the matching loopback.
+fn wake_addr(addr: SocketAddr) -> SocketAddr {
+    use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
+    let ip = match addr.ip() {
+        IpAddr::V4(ip) if ip.is_unspecified() => IpAddr::V4(Ipv4Addr::LOCALHOST),
+        IpAddr::V6(ip) if ip.is_unspecified() => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        ip => ip,
+    };
+    SocketAddr::new(ip, addr.port())
+}
+
+/// Dispatch one parsed request. Returns the route (when one resolved —
+/// used for metrics) and the response.
+fn handle_request(req: &Request, state: &Arc<ServerState>) -> (Option<Route>, Response) {
+    let route = match Route::resolve(req) {
+        Ok(route) => route,
+        Err(response) => return (None, response),
+    };
+    let response = match route {
+        Route::Healthz => Response::json(
+            200,
+            format!(
+                "{{\"status\":\"ok\",\"requests_served\":{}}}",
+                state.metrics.requests_total()
+            ),
+        ),
+        Route::Metrics => Response::text(
+            200,
+            state
+                .metrics
+                .render(&state.service.plan_cache().stats(), &state.artifacts.stats()),
+        ),
+        Route::Requests => Response::json(200, json::request_catalog_json()),
+        Route::Query => handle_query(&req.body, state),
+        Route::Batch => handle_batch(&req.body, state),
+        Route::Shutdown => {
+            state.shutdown.store(true, Ordering::Release);
+            Response::json(200, "{\"status\":\"shutting down\"}")
+        }
+    };
+    (Some(route), response)
+}
+
+/// `POST /v1/query`: decode one request, serve it through the artifact
+/// cache. The success body is byte-identical to
+/// [`crate::api::render_all_json`] over an in-process
+/// [`Service::run`] — asserted for every request kind in
+/// `tests/server.rs`.
+fn handle_query(body: &[u8], state: &Arc<ServerState>) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(text) => text,
+        Err(_) => return Response::error(400, "request body is not UTF-8"),
+    };
+    let req = match SimRequest::from_json(text) {
+        Ok(req) => req,
+        Err(msg) => return Response::error(400, &msg),
+    };
+    if let Err(msg) = req.validate() {
+        return Response::error(400, &msg);
+    }
+    match serve_cached(req, state) {
+        Ok(rendered) => Response::json(200, rendered.as_bytes().to_vec()),
+        // Validation passed, so a failure here is the panic backstop.
+        Err(err) => Response::error(500, &err.to_string()),
+    }
+}
+
+/// Serve one validated request through the artifact cache.
+fn serve_cached(
+    req: SimRequest,
+    state: &Arc<ServerState>,
+) -> Result<Arc<String>, crate::api::RequestError> {
+    if let Some(rendered) = state.artifacts.get(&req) {
+        return Ok(rendered);
+    }
+    let artifacts = state.service.try_run(&req)?;
+    Ok(state.artifacts.insert(req, render_all_json(&artifacts)))
+}
+
+/// `POST /v1/batch`: decode `{"requests":[...]}`, serve the decodable
+/// items concurrently through [`Service::run_batch`] (misses only; hits
+/// come from the artifact cache), and answer per item — `200` when all
+/// succeeded, `207` when any item failed. Item `i` of `results` is
+/// either the same JSON document `/v1/query` would return for that
+/// request or `{"error":...}`.
+fn handle_batch(body: &[u8], state: &Arc<ServerState>) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(text) => text,
+        Err(_) => return Response::error(400, "request body is not UTF-8"),
+    };
+    let decoded = match parse_batch(text) {
+        Ok(decoded) => decoded,
+        Err(msg) => return Response::error(400, &msg),
+    };
+
+    // Per-item outcome slots; decode errors fill theirs immediately.
+    let mut slots: Vec<Result<Arc<String>, String>> = decoded
+        .iter()
+        .map(|item| match item {
+            Ok(_) => Err(String::new()), // placeholder, filled below
+            Err(msg) => Err(format!("bad request: {msg}")),
+        })
+        .collect();
+
+    // Artifact-cache pass, then one concurrent run_batch over the
+    // *distinct* misses — N copies of the same request in one batch run
+    // the model once and fan the result back out to every copy's slot.
+    let mut miss_reqs: Vec<SimRequest> = Vec::new();
+    let mut miss_of: std::collections::HashMap<SimRequest, usize> = std::collections::HashMap::new();
+    let mut pending: Vec<(usize, usize)> = Vec::new(); // (slot, miss index)
+    for (i, item) in decoded.iter().enumerate() {
+        if let Ok(req) = item {
+            if let Some(rendered) = state.artifacts.get(req) {
+                slots[i] = Ok(rendered);
+                continue;
+            }
+            let mi = *miss_of.entry(*req).or_insert_with(|| {
+                miss_reqs.push(*req);
+                miss_reqs.len() - 1
+            });
+            pending.push((i, mi));
+        }
+    }
+    let results = state.service.run_batch(&miss_reqs);
+    let rendered: Vec<Result<Arc<String>, String>> = miss_reqs
+        .iter()
+        .zip(results)
+        .map(|(req, result)| match result {
+            Ok(artifacts) => Ok(state.artifacts.insert(*req, render_all_json(&artifacts))),
+            Err(err) => Err(err.to_string()),
+        })
+        .collect();
+    for (slot, mi) in pending {
+        slots[slot] = rendered[mi].clone();
+    }
+
+    let any_failed = slots.iter().any(|s| s.is_err());
+    let mut out = String::from("{\"results\":[");
+    for (i, slot) in slots.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        match slot {
+            Ok(rendered) => out.push_str(rendered),
+            Err(msg) => {
+                out.push_str("{\"error\":");
+                out.push_str(&json_string(msg));
+                out.push('}');
+            }
+        }
+    }
+    out.push_str("]}");
+    Response::json(if any_failed { 207 } else { 200 }, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> Arc<ServerState> {
+        Arc::new(ServerState {
+            service: Service::new(AccelConfig::default()),
+            artifacts: ArtifactCache::new(),
+            metrics: ServerMetrics::new(),
+            shutdown: AtomicBool::new(false),
+            local_addr: "127.0.0.1:0".parse().unwrap(),
+        })
+    }
+
+    fn body_str(r: &Response) -> &str {
+        std::str::from_utf8(&r.body).unwrap()
+    }
+
+    #[test]
+    fn query_serves_the_in_process_bytes_and_then_the_cache() {
+        let st = state();
+        let resp = handle_query(b"{\"kind\":\"table3\"}", &st);
+        assert_eq!(resp.status, 200);
+        let direct = render_all_json(&st.service.run(&SimRequest::Table3));
+        assert_eq!(body_str(&resp), direct);
+        // Second hit comes from the artifact cache.
+        let again = handle_query(b"{\"kind\":\"table3\"}", &st);
+        assert_eq!(body_str(&again), direct);
+        let cache = st.artifacts.stats();
+        assert_eq!((cache.hits, cache.misses, cache.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn query_errors_are_4xx_json() {
+        let st = state();
+        assert_eq!(handle_query(b"\xff\xfe", &st).status, 400);
+        assert_eq!(handle_query(b"not json", &st).status, 400);
+        assert_eq!(handle_query(b"{\"kind\":\"nope\"}", &st).status, 400);
+        // Decodes but fails validation (groups do not divide channels).
+        let resp =
+            handle_query(b"{\"kind\":\"layer\",\"spec\":\"56/100/100/3/2/1/g32\"}", &st);
+        assert_eq!(resp.status, 400);
+        assert!(body_str(&resp).contains("error"), "{}", body_str(&resp));
+    }
+
+    #[test]
+    fn batch_answers_per_item_with_207_on_partial_failure() {
+        let st = state();
+        let body = b"{\"requests\":[{\"kind\":\"table3\"},{\"kind\":\"nope\"},{\"kind\":\"table4\"}]}";
+        let resp = handle_batch(body, &st);
+        assert_eq!(resp.status, 207);
+        let text = body_str(&resp);
+        assert!(text.starts_with("{\"results\":["), "{text}");
+        assert!(text.contains("\"error\":\"bad request:"), "{text}");
+        let t3 = render_all_json(&st.service.run(&SimRequest::Table3));
+        let t4 = render_all_json(&st.service.run(&SimRequest::Table4));
+        assert!(text.contains(&t3), "{text}");
+        assert!(text.contains(&t4), "{text}");
+        // All-good batches are plain 200.
+        let resp = handle_batch(b"{\"requests\":[{\"kind\":\"table2\"}]}", &st);
+        assert_eq!(resp.status, 200);
+        // And batch results landed in the artifact cache: re-query hits.
+        let cached = handle_query(b"{\"kind\":\"table4\"}", &st);
+        assert_eq!(body_str(&cached), t4);
+        assert!(st.artifacts.stats().hits >= 1);
+    }
+
+    #[test]
+    fn batch_runs_identical_requests_once_and_fans_out() {
+        let st = state();
+        let spec = "{\"kind\":\"layer\",\"spec\":\"56/128/128/3/2/1\"}";
+        let body = format!("{{\"requests\":[{spec},{spec},{spec}]}}");
+        let resp = handle_batch(body.as_bytes(), &st);
+        assert_eq!(resp.status, 200);
+        let req = SimRequest::from_json(spec).unwrap();
+        let doc = render_all_json(&st.service.run(&req));
+        // The comparison run above replays the cache, so subtract its
+        // lookups: the *batch* must have planned the layer exactly once
+        // (4 lookups = 2 passes x 2 modes), not once per copy.
+        let stats = st.service.plan_cache().stats();
+        assert_eq!(stats.misses, 4, "{stats:?}");
+        assert_eq!(stats.lookups(), 8, "batch once + comparison run: {stats:?}");
+        assert_eq!(body_str(&resp), format!("{{\"results\":[{doc},{doc},{doc}]}}"));
+        assert_eq!(st.artifacts.stats().entries, 1);
+    }
+
+    #[test]
+    fn unknown_route_and_method_reach_the_router_answers() {
+        let st = state();
+        let req = Request {
+            method: "GET".into(),
+            path: "/nope".into(),
+            http10: false,
+            headers: vec![],
+            body: vec![],
+        };
+        let (route, resp) = handle_request(&req, &st);
+        assert_eq!(route, None);
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn wake_addr_replaces_wildcard_binds_with_loopback() {
+        let w = |s: &str| wake_addr(s.parse().unwrap()).to_string();
+        assert_eq!(w("0.0.0.0:8000"), "127.0.0.1:8000");
+        assert_eq!(w("[::]:8000"), "[::1]:8000");
+        assert_eq!(w("127.0.0.1:9000"), "127.0.0.1:9000");
+        assert_eq!(w("192.168.1.5:80"), "192.168.1.5:80");
+    }
+
+    #[test]
+    fn shutdown_route_sets_the_flag() {
+        let st = state();
+        let req = Request {
+            method: "POST".into(),
+            path: "/v1/shutdown".into(),
+            http10: false,
+            headers: vec![],
+            body: vec![],
+        };
+        let (route, resp) = handle_request(&req, &st);
+        assert_eq!(route, Some(Route::Shutdown));
+        assert_eq!(resp.status, 200);
+        assert!(st.shutdown.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn healthz_and_metrics_render() {
+        let st = state();
+        let req = Request {
+            method: "GET".into(),
+            path: "/healthz".into(),
+            http10: false,
+            headers: vec![],
+            body: vec![],
+        };
+        let (route, resp) = handle_request(&req, &st);
+        assert_eq!(resp.status, 200);
+        assert!(body_str(&resp).contains("\"status\":\"ok\""));
+        // The connection loop records after dispatch; emulate it here.
+        st.metrics.record(route, resp.status, 10);
+        let req = Request { path: "/metrics".into(), ..req };
+        let (_, resp) = handle_request(&req, &st);
+        assert!(body_str(&resp).contains("bp_plan_cache_entries"));
+        assert!(body_str(&resp).contains("bp_server_requests_total{route=\"healthz\"} 1"));
+    }
+}

@@ -1,0 +1,136 @@
+//! A bounded worker pool for connection handling.
+//!
+//! std-only: a [`std::sync::mpsc::sync_channel`] feeds `N` worker
+//! threads. The channel bound gives natural backpressure — when every
+//! worker is busy and the queue is full, the accept loop blocks instead
+//! of buffering unbounded connections. Jobs run under a panic guard so a
+//! handler bug degrades one connection, never the pool's capacity.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool with a bounded job queue.
+pub struct ThreadPool {
+    sender: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` workers (at least 1) and a queue bounded at
+    /// `2 * threads` pending jobs.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (sender, receiver) = std::sync::mpsc::sync_channel::<Job>(2 * threads);
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(sender), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue one job, blocking while the queue is full (backpressure
+    /// toward the accept loop). Jobs queued before a [`ThreadPool::join`]
+    /// are guaranteed to run.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool joined")
+            .send(Box::new(job))
+            .expect("pool workers alive");
+    }
+
+    /// Close the queue and wait for every queued job to finish.
+    pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        // Dropping the sender ends every worker's recv loop once the
+        // queue drains.
+        drop(self.sender.take());
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Hold the lock only to receive; run the job unlocked.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        match job {
+            Ok(job) => {
+                // A panicking job must not kill the worker: the pool
+                // would silently shrink and, at zero, hang the accept
+                // loop's backpressure forever.
+                let _ = panic::catch_unwind(AssertUnwindSafe(job));
+            }
+            Err(_) => return, // queue closed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_across_workers() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn survives_panicking_jobs() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("job bug"));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.join();
+        assert_eq!(done.load(Ordering::Relaxed), 1, "worker outlived the panic");
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        pool.join();
+    }
+}

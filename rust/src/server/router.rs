@@ -1,0 +1,135 @@
+//! Route table of the query server: `(method, path)` → [`Route`].
+//!
+//! The table is tiny and closed, so routing is a match — no trie, no
+//! registration. Unknown paths are 404, known paths with the wrong
+//! method are 405, and both answers carry the catalog pointer so a
+//! client can self-correct.
+
+use crate::server::http::{Request, Response};
+
+/// One of the server's endpoints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// `POST /v1/query` — serve one [`crate::api::SimRequest`].
+    Query,
+    /// `POST /v1/batch` — serve a request slice through
+    /// [`crate::api::Service::run_batch`].
+    Batch,
+    /// `GET /v1/requests` — machine-readable request catalog.
+    Requests,
+    /// `GET /healthz` — liveness probe.
+    Healthz,
+    /// `GET /metrics` — Prometheus-style counters.
+    Metrics,
+    /// `POST /v1/shutdown` — graceful-shutdown sentinel.
+    Shutdown,
+}
+
+impl Route {
+    /// Every route, in display order. `Route::ALL[r.index()] == r`.
+    pub const ALL: [Route; 6] = [
+        Route::Query,
+        Route::Batch,
+        Route::Requests,
+        Route::Healthz,
+        Route::Metrics,
+        Route::Shutdown,
+    ];
+
+    /// Stable label used in metrics series.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Route::Query => "query",
+            Route::Batch => "batch",
+            Route::Requests => "requests",
+            Route::Healthz => "healthz",
+            Route::Metrics => "metrics",
+            Route::Shutdown => "shutdown",
+        }
+    }
+
+    /// Index into [`Route::ALL`] (and the per-route metrics arrays).
+    pub fn index(&self) -> usize {
+        Route::ALL.iter().position(|r| r == self).expect("route in ALL")
+    }
+
+    /// The method this route answers.
+    pub fn method(&self) -> &'static str {
+        match self {
+            Route::Query | Route::Batch | Route::Shutdown => "POST",
+            Route::Requests | Route::Healthz | Route::Metrics => "GET",
+        }
+    }
+
+    /// The path this route answers.
+    pub fn path(&self) -> &'static str {
+        match self {
+            Route::Query => "/v1/query",
+            Route::Batch => "/v1/batch",
+            Route::Requests => "/v1/requests",
+            Route::Healthz => "/healthz",
+            Route::Metrics => "/metrics",
+            Route::Shutdown => "/v1/shutdown",
+        }
+    }
+
+    /// Resolve a request to its route, or to the 404/405 response that
+    /// explains why it has none.
+    pub fn resolve(req: &Request) -> Result<Route, Response> {
+        let path = req.route_path();
+        let Some(route) = Route::ALL.iter().find(|r| r.path() == path).copied() else {
+            return Err(Response::error(
+                404,
+                &format!("no route {path:?}; see GET /v1/requests for the API"),
+            ));
+        };
+        if req.method != route.method() {
+            return Err(Response::error(
+                405,
+                &format!("{} {} expects method {}", req.method, path, route.method()),
+            ));
+        }
+        Ok(route)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(method: &str, path: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            http10: false,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn resolves_every_route_by_method_and_path() {
+        for route in Route::ALL {
+            let r = Route::resolve(&req(route.method(), route.path())).unwrap();
+            assert_eq!(r, route);
+            assert_eq!(Route::ALL[route.index()], route);
+        }
+        // Query strings are ignored for routing.
+        assert_eq!(Route::resolve(&req("GET", "/healthz?verbose=1")).unwrap(), Route::Healthz);
+    }
+
+    #[test]
+    fn unknown_path_is_404_wrong_method_is_405() {
+        assert_eq!(Route::resolve(&req("GET", "/nope")).unwrap_err().status, 404);
+        assert_eq!(Route::resolve(&req("GET", "/v1/query")).unwrap_err().status, 405);
+        assert_eq!(Route::resolve(&req("POST", "/metrics")).unwrap_err().status, 405);
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let mut labels: Vec<&str> = Route::ALL.iter().map(|r| r.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), Route::ALL.len());
+    }
+}

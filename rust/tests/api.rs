@@ -236,7 +236,7 @@ fn fleet_request_bit_identical_for_devices_1_2_4() {
             assert_eq!(float(a, i, "speedup"), b.speedup);
             assert_eq!(float(a, i, "stolen_jobs"), b.stolen_jobs as f64);
         }
-        // The note reports only the deterministic counters.
+        // The note reports the full deterministic counter set.
         assert_eq!(a.notes, vec![planning.summary()]);
         assert!(a.title.contains(&format!("Fleet of {devices}")));
     }
@@ -276,11 +276,41 @@ fn run_batch_equals_sequential_over_seeded_sweep() {
     let batched = service.run_batch(&requests);
     assert_eq!(batched.len(), sequential.len());
     for (i, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+        let b = b.as_ref().unwrap_or_else(|e| panic!("request {i}: {e}"));
         assert_eq!(b, s, "request {i} ({})", requests[i].name());
     }
     // And a second, fresh service (cold cache) still agrees bit-exactly.
     let cold = Service::new(AccelConfig::default()).run_batch(&requests);
     assert_eq!(cold, batched);
+}
+
+/// One invalid request must fail alone: its siblings complete and match
+/// the sequential results (the old run_batch let a panicking scoped
+/// worker poison the entire batch).
+#[test]
+fn run_batch_isolates_per_request_failures() {
+    let service = svc();
+    // Valid at parse time, invalid at validate time: groups do not
+    // divide the channel counts.
+    let bad = ConvParams::square(56, 100, 100, 3, 2, 1).with_groups(32);
+    let requests = [
+        SimRequest::Table3,
+        SimRequest::layer(bad),
+        SimRequest::Table4,
+        SimRequest::fleet(0),
+        SimRequest::Table2,
+    ];
+    let out = service.run_batch(&requests);
+    assert_eq!(out.len(), requests.len());
+    assert_eq!(out[0].as_ref().unwrap(), &service.run(&SimRequest::Table3));
+    let err = out[1].as_ref().unwrap_err();
+    assert_eq!(err.request, "layer");
+    assert!(err.message.contains("groups"), "{err}");
+    assert_eq!(out[2].as_ref().unwrap(), &service.run(&SimRequest::Table4));
+    let err = out[3].as_ref().unwrap_err();
+    assert_eq!(err.request, "fleet");
+    assert!(err.message.contains(">= 1"), "{err}");
+    assert_eq!(out[4].as_ref().unwrap(), &service.run(&SimRequest::Table2));
 }
 
 #[test]

@@ -170,3 +170,61 @@ fn fleet_totals_invariant_and_makespan_bounded() {
     assert_eq!(before.entries, after.entries, "no replanning at a new fleet width");
     assert!(after.hits > before.hits);
 }
+
+/// ISSUE 4 acceptance: the hit/miss split the fleet artifacts report is
+/// deterministic again. Over a seeded geometry sweep at every device
+/// width 1/2/4/8, two independent runs — with fleet device replay and
+/// host-parallel metrics workers racing on the shared cache — must
+/// produce bit-identical `PlanCacheStats`, with the structural
+/// invariants `misses == entries` (one miss per distinct plan) and
+/// `hits == lookups - misses` holding exactly.
+#[test]
+fn fleet_hit_miss_split_deterministic_over_seeded_sweep_devices_1_2_4_8() {
+    let cfg = AccelConfig::default();
+    // Seeded sweep with repeated geometries so hits are guaranteed.
+    let mut rng = Rng::new(0xD4);
+    let mut layers = Vec::new();
+    for i in 0..12usize {
+        let p = arb_geometry(&mut rng);
+        layers.push(bp_im2col::workloads::WorkloadLayer {
+            name: if i % 2 == 0 { "even" } else { "odd" },
+            params: p,
+            count: 1 + i % 3,
+        });
+        if i % 3 == 0 {
+            // Exact repeat: must hit, never replan.
+            layers.push(bp_im2col::workloads::WorkloadLayer {
+                name: "repeat",
+                params: p,
+                count: 1,
+            });
+        }
+    }
+    let net = bp_im2col::workloads::Network { name: "seeded", layers };
+
+    for devices in [1usize, 2, 4, 8] {
+        let run = || {
+            let cache = Arc::new(PlanCache::new());
+            for mode in Mode::ALL {
+                Fleet::with_cache(cfg, devices, Arc::clone(&cache)).run_network(&net, mode);
+            }
+            cache.stats()
+        };
+        let first = run();
+        let second = run();
+        assert_eq!(first, second, "{devices} devices: split must not depend on interleaving");
+        assert_eq!(first.misses, first.entries as u64, "{devices} devices: one miss per plan");
+        assert_eq!(
+            first.hits,
+            first.lookups() - first.misses,
+            "{devices} devices: hits are the remainder"
+        );
+        assert!(first.hits > 0, "{devices} devices: the repeats must hit");
+        // The artifact note renders the full split now.
+        let summary = first.summary();
+        assert!(
+            summary.contains("hits") && summary.contains("misses"),
+            "summary must report the real split: {summary}"
+        );
+    }
+}

@@ -1,0 +1,349 @@
+//! End-to-end server tests over real loopback `TcpStream`s (ISSUE 4):
+//!
+//! 1. `POST /v1/query` responses are **byte-identical** to
+//!    `render_all_json` of the same `SimRequest` served in-process, for
+//!    every request kind in the `tests/api.rs` catalog, and repeats are
+//!    served from the `ArtifactCache`.
+//! 2. `POST /v1/batch` round-trips per item (and maps failures to
+//!    per-item error objects under a 207).
+//! 3. Keep-alive connections serve several requests.
+//! 4. Malformed / oversized / truncated requests get 4xx without killing
+//!    the worker.
+//! 5. Concurrent clients share one plan cache (deterministic miss
+//!    split).
+//! 6. The shutdown sentinel drains and joins cleanly.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{render_all_json, FigureRequest, FleetRequest, Service, SimRequest};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report::Figure;
+use bp_im2col::server::Server;
+
+// ---------------------------------------------------------------------------
+// Harness: an in-process server and a deliberately raw HTTP client.
+// ---------------------------------------------------------------------------
+
+fn start_server(threads: usize) -> (SocketAddr, JoinHandle<()>) {
+    let server = Server::bind(AccelConfig::default(), "127.0.0.1:0", threads).expect("bind");
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.serve().expect("serve"));
+    (addr, handle)
+}
+
+/// Raw client over one connection, so keep-alive behaviour is under the
+/// test's control (no std HTTP client exists anyway).
+struct Client {
+    stream: TcpStream,
+}
+
+#[derive(Debug)]
+struct ClientResponse {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl ClientResponse {
+    fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == lower).map(|(_, v)| v.as_str())
+    }
+
+    fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).expect("utf-8 body")
+    }
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client { stream }
+    }
+
+    fn send(&mut self, method: &str, path: &str, body: Option<&str>) {
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+        if let Some(body) = body {
+            req.push_str(&format!("Content-Length: {}\r\n", body.len()));
+        }
+        req.push_str("\r\n");
+        if let Some(body) = body {
+            req.push_str(body);
+        }
+        self.stream.write_all(req.as_bytes()).expect("send");
+    }
+
+    fn read_response(&mut self) -> ClientResponse {
+        let mut buf = Vec::new();
+        let head_end = loop {
+            if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break pos;
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk).expect("read head");
+            assert!(n > 0, "connection closed mid-response head");
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8(buf[..head_end].to_vec()).expect("utf-8 head");
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().expect("status line");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
+        let headers: Vec<(String, String)> = lines
+            .filter_map(|l| l.split_once(':'))
+            .map(|(n, v)| (n.to_ascii_lowercase(), v.trim().to_string()))
+            .collect();
+        let content_length: usize = headers
+            .iter()
+            .find(|(n, _)| n == "content-length")
+            .and_then(|(_, v)| v.parse().ok())
+            .expect("content-length");
+        let mut body = buf[head_end + 4..].to_vec();
+        while body.len() < content_length {
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk).expect("read body");
+            assert!(n > 0, "connection closed mid-body");
+            body.extend_from_slice(&chunk[..n]);
+        }
+        assert_eq!(body.len(), content_length, "no trailing bytes expected");
+        ClientResponse { status, headers, body }
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> ClientResponse {
+        self.send(method, path, body);
+        self.read_response()
+    }
+}
+
+/// One-shot request on a fresh connection.
+fn once(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> ClientResponse {
+    Client::connect(addr).request(method, path, body)
+}
+
+fn shutdown(addr: SocketAddr, handle: JoinHandle<()>) {
+    let resp = once(addr, "POST", "/v1/shutdown", Some("{}"));
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    handle.join().expect("server thread joined cleanly");
+}
+
+/// The `tests/api.rs` request catalog: every request kind, including
+/// figure/fleet variants.
+fn catalog() -> Vec<SimRequest> {
+    vec![
+        SimRequest::Table2,
+        SimRequest::Table3,
+        SimRequest::Table4,
+        FigureRequest::new(Figure::Runtime).pass(Pass::Loss).devices(2).into(),
+        FigureRequest::new(Figure::OffChipTraffic).pass(Pass::Grad).into(),
+        FigureRequest::new(Figure::BufferReads).pass(Pass::Loss).extended(true).into(),
+        SimRequest::Sparsity { extended: false },
+        SimRequest::Storage { extended: true },
+        SimRequest::layer(ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)),
+        SimRequest::TrainCost { devices: Some(2) },
+        SimRequest::fleet(4),
+        SimRequest::Fleet(FleetRequest::new(2).extended(true)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn query_round_trips_bit_identical_for_every_request_kind() {
+    let (addr, handle) = start_server(2);
+    let svc = Service::new(AccelConfig::default());
+    for req in catalog() {
+        let expected = render_all_json(&svc.run(&req));
+        let resp = once(addr, "POST", "/v1/query", Some(&req.to_json()));
+        assert_eq!(resp.status, 200, "{}: {}", req.name(), resp.body_str());
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(
+            resp.body,
+            expected.as_bytes(),
+            "{}: served bytes differ from in-process render",
+            req.name()
+        );
+    }
+    // Replays are served from the artifact cache: as many hits as
+    // repeated requests, no new entries.
+    for req in catalog() {
+        let resp = once(addr, "POST", "/v1/query", Some(&req.to_json()));
+        assert_eq!(resp.status, 200);
+    }
+    let metrics = once(addr, "GET", "/metrics", None);
+    let text = metrics.body_str();
+    let hits = metric_value(text, "bp_artifact_cache_hits_total");
+    let entries = metric_value(text, "bp_artifact_cache_entries");
+    assert_eq!(entries, catalog().len() as u64, "{text}");
+    assert_eq!(hits, catalog().len() as u64, "{text}");
+    shutdown(addr, handle);
+}
+
+/// Value of a single (label-free) metrics series.
+fn metric_value(text: &str, name: &str) -> u64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("{name} not in:\n{text}"))
+        .trim()
+        .parse()
+        .expect("metric value")
+}
+
+#[test]
+fn batch_round_trips_per_item_and_maps_failures_to_207() {
+    let (addr, handle) = start_server(2);
+    let svc = Service::new(AccelConfig::default());
+
+    // All-good batch: 200, items in order, each byte-identical to the
+    // query route's document.
+    let body = "{\"requests\":[{\"kind\":\"table3\"},{\"kind\":\"fleet\",\"devices\":2},{\"kind\":\"table4\"}]}";
+    let resp = once(addr, "POST", "/v1/batch", Some(body));
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let t3 = render_all_json(&svc.run(&SimRequest::Table3));
+    let fleet = render_all_json(&svc.run(&SimRequest::fleet(2)));
+    let t4 = render_all_json(&svc.run(&SimRequest::Table4));
+    let expected = format!("{{\"results\":[{t3},{fleet},{t4}]}}");
+    assert_eq!(resp.body_str(), expected);
+
+    // Partial failure: the undecodable item errors alone, 207 overall.
+    let body = "{\"requests\":[{\"kind\":\"table3\"},{\"kind\":\"layer\",\"spec\":\"56/100/100/3/2/1/g32\"},{\"kind\":\"table4\"}]}";
+    let resp = once(addr, "POST", "/v1/batch", Some(body));
+    assert_eq!(resp.status, 207, "{}", resp.body_str());
+    let text = resp.body_str();
+    assert!(text.contains(&t3), "{text}");
+    assert!(text.contains(&t4), "{text}");
+    assert!(text.contains("\"error\":\"bad request:"), "{text}");
+    assert!(text.contains("groups"), "{text}");
+
+    // Undecodable documents are a whole-request 400.
+    assert_eq!(once(addr, "POST", "/v1/batch", Some("[]")).status, 400);
+    shutdown(addr, handle);
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let (addr, handle) = start_server(2);
+    let mut client = Client::connect(addr);
+    let first = client.request("GET", "/healthz", None);
+    assert_eq!(first.status, 200);
+    assert_eq!(first.header("connection"), Some("keep-alive"));
+    let second = client.request("POST", "/v1/query", Some("{\"kind\":\"table3\"}"));
+    assert_eq!(second.status, 200);
+    let third = client.request("GET", "/v1/requests", None);
+    assert_eq!(third.status, 200);
+    assert!(third.body_str().contains("\"kind\":\"fleet\""));
+    drop(client);
+    shutdown(addr, handle);
+}
+
+#[test]
+fn hostile_requests_get_4xx_and_the_worker_survives() {
+    // One worker thread: if any hostile request killed it, the follow-up
+    // healthz would hang instead of answering.
+    let (addr, handle) = start_server(1);
+
+    // Garbage request line.
+    let mut c = Client::connect(addr);
+    c.stream.write_all(b"THIS IS NOT HTTP\r\n\r\n").unwrap();
+    assert_eq!(c.read_response().status, 400);
+
+    // Oversized declared body: rejected before it is read.
+    let mut c = Client::connect(addr);
+    c.stream
+        .write_all(b"POST /v1/query HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n")
+        .unwrap();
+    assert_eq!(c.read_response().status, 413);
+
+    // Truncated body: client half-closes before delivering it.
+    let mut c = Client::connect(addr);
+    c.stream
+        .write_all(b"POST /v1/query HTTP/1.1\r\nContent-Length: 64\r\n\r\n{\"kind\"")
+        .unwrap();
+    c.stream.shutdown(Shutdown::Write).unwrap();
+    assert_eq!(c.read_response().status, 400);
+
+    // Chunked uploads are 501.
+    let mut c = Client::connect(addr);
+    c.stream
+        .write_all(b"POST /v1/query HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+        .unwrap();
+    assert_eq!(c.read_response().status, 501);
+
+    // Unknown route / wrong method / bad JSON body.
+    assert_eq!(once(addr, "GET", "/nope", None).status, 404);
+    assert_eq!(once(addr, "GET", "/v1/query", None).status, 405);
+    assert_eq!(once(addr, "POST", "/v1/query", Some("not json")).status, 400);
+    assert_eq!(
+        once(addr, "POST", "/v1/query", Some("{\"kind\":\"fleet\",\"devices\":0}")).status,
+        400
+    );
+
+    // The single worker is still alive and serving.
+    assert_eq!(once(addr, "GET", "/healthz", None).status, 200);
+
+    // And none of the hostile traffic was invisible: framing errors and
+    // resolver rejections all land in the "other" metrics series
+    // (garbage line, oversized, truncated, chunked, 404, 405 = 6), while
+    // the two decodable-but-bad bodies count against the query route.
+    let metrics = once(addr, "GET", "/metrics", None);
+    let text = metrics.body_str();
+    assert!(
+        text.contains("bp_server_requests_total{route=\"other\"} 6"),
+        "{text}"
+    );
+    assert!(
+        text.contains("bp_server_responses_total{route=\"query\",class=\"4xx\"} 2"),
+        "{text}"
+    );
+    shutdown(addr, handle);
+}
+
+#[test]
+fn concurrent_clients_share_one_plan_cache() {
+    let (addr, handle) = start_server(4);
+    // Four clients, two distinct layer geometries, all in flight at
+    // once. Both geometries plan 2 passes x 2 modes = 4 entries each.
+    let specs =
+        ["{\"kind\":\"layer\",\"spec\":\"56/128/128/3/2/1\"}", "{\"kind\":\"layer\",\"spec\":\"28/64/64/3/2/1\"}"];
+    let workers: Vec<_> = (0..4)
+        .map(|i| {
+            let body = specs[i % 2].to_string();
+            thread::spawn(move || {
+                let resp = once(addr, "POST", "/v1/query", Some(&body));
+                assert_eq!(resp.status, 200);
+                resp.body
+            })
+        })
+        .collect();
+    let bodies: Vec<Vec<u8>> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    assert_eq!(bodies[0], bodies[2], "same request, same bytes");
+    assert_eq!(bodies[1], bodies[3]);
+
+    let metrics = once(addr, "GET", "/metrics", None);
+    let text = metrics.body_str();
+    // However the clients raced (artifact-cache hits may have absorbed
+    // some), the plan cache is shared and its miss split deterministic:
+    // one miss per distinct (geometry, pass, mode).
+    assert_eq!(metric_value(text, "bp_plan_cache_entries"), 8, "{text}");
+    assert_eq!(metric_value(text, "bp_plan_cache_misses_total"), 8, "{text}");
+    shutdown(addr, handle);
+}
+
+#[test]
+fn shutdown_sentinel_drains_and_joins() {
+    let (addr, handle) = start_server(2);
+    assert_eq!(once(addr, "GET", "/healthz", None).status, 200);
+    // shutdown() asserts the 200 and joins the serve thread; returning
+    // at all proves the accept loop observed the sentinel.
+    shutdown(addr, handle);
+}
