@@ -64,11 +64,24 @@ def main():
         assert status == 200 and len(doc["results"]) == 2, (status, doc)
         assert doc["results"][1]["artifacts"][0]["name"] == "fleet", doc
 
+        # Design-space exploration: a small seeded sweep returns a
+        # non-empty frontier, and the repeat is byte-identical (served
+        # from the artifact cache).
+        dse = {"kind": "dse", "budget": 8, "seed": 7}
+        status, body = request(base, "/v1/query", dse)
+        doc = json.loads(body)
+        assert status == 200 and doc["artifacts"][0]["name"] == "dse", (status, doc)
+        notes = doc["artifacts"][0]["notes"]
+        assert any(n.startswith("frontier: ") and not n.startswith("frontier: 0") for n in notes), notes
+        status, body2 = request(base, "/v1/query", dse)
+        assert body2 == body, "repeated DSE query must be byte-identical"
+
         status, body = request(base, "/metrics")
         text = body.decode()
         for needle in (
-            'bp_server_requests_total{route="query"} 2',
-            "bp_artifact_cache_hits_total 1",
+            'bp_server_requests_total{route="query"} 4',
+            "bp_artifact_cache_hits_total 2",
+            "bp_artifact_cache_evictions_total 0",
             "bp_plan_cache_entries",
             "bp_server_request_duration_us_bucket",
         ):
@@ -78,7 +91,7 @@ def main():
         assert status == 200, status
         code = proc.wait(timeout=60)
         assert code == 0, f"server exited with {code}"
-        print("server smoke OK: query/batch/metrics round-trips + clean shutdown")
+        print("server smoke OK: query/batch/dse/metrics round-trips + clean shutdown")
     finally:
         # Kill quietly if still alive; the propagating exception (an
         # assertion or the wait() timeout) already names the real

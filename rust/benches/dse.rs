@@ -1,0 +1,75 @@
+//! Design-space exploration throughput: points/sec cold (fresh plan
+//! cache) vs warm (re-serving the same sweep through one Service), on a
+//! repeated-geometry sweep (EXPERIMENTS.md §Design-space exploration).
+//!
+//! A sweep revisits the same workload geometries under every candidate
+//! config, and a *re-served* sweep revisits every `(geometry, config)`
+//! plan verbatim — warm evaluation skips all plan building and should
+//! amortize at least 2x over cold (the acceptance bar; the printed
+//! ratio is the measurement).
+
+// This bench hand-rolls its timing (it needs the raw cold/warm ratio),
+// so the shared harness's `bench` helper goes unused here.
+#[allow(dead_code)]
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{DseRequest, Service, SimRequest};
+
+/// Mean seconds per call over `iters` calls. No warmup on purpose: the
+/// cold case measures exactly the fresh-cache build, and the warm case
+/// is pre-warmed by its baseline run.
+fn mean_secs(iters: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let req: SimRequest = DseRequest::new().budget(48).seed(7).into();
+    let iters = 5;
+
+    // Cold: a fresh Service (fresh plan cache) per sweep — every
+    // (geometry, config) plan is built from scratch.
+    let cold = mean_secs(iters, || {
+        let svc = Service::new(AccelConfig::default());
+        let arts = svc.run(&req);
+        assert_eq!(arts[0].name, "dse");
+    });
+
+    // Warm: one Service re-serves the identical sweep; the shared plan
+    // cache answers every lookup.
+    let svc = Service::new(AccelConfig::default());
+    let baseline = svc.run(&req); // populate the cache once
+    let warm = mean_secs(iters, || {
+        let arts = svc.run(&req);
+        assert_eq!(arts, baseline, "warm replay must be bit-identical");
+    });
+
+    // Points evaluated per sweep (rows of the frontier artifact).
+    let points = baseline[0].rows.len() as f64;
+    println!(
+        "bench dse/sweep48_cold   {:>10.3} ms  ({:.0} points/s)",
+        cold * 1e3,
+        points / cold
+    );
+    println!(
+        "bench dse/sweep48_warm   {:>10.3} ms  ({:.0} points/s)",
+        warm * 1e3,
+        points / warm
+    );
+    println!(
+        "bench dse/plan_cache_amortization  {:.2}x (warm over cold; acceptance bar: >= 2x)",
+        cold / warm
+    );
+
+    harness::report(
+        "DSE frontier (budget 48, seed 7)",
+        &baseline[0].render_text(),
+    );
+}

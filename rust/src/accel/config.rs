@@ -37,7 +37,7 @@ impl Default for AccelConfig {
     fn default() -> Self {
         Self {
             array_dim: 16,
-            dram: DramModel { elems_per_cycle: 16.0, burst_overhead: 8.0, burst_len: 64 },
+            dram: DramModel::with_bandwidth(16.0),
             // 128 KiB halves (32 Ki FP32 elements) — TPU-class on-chip
             // SRAM scaled to a 16x16 array.
             buf_a_half: 32 * 1024,
@@ -51,11 +51,11 @@ impl Default for AccelConfig {
 impl AccelConfig {
     /// A bandwidth-constrained variant (the paper's motivation about
     /// "processors with mismatched bandwidth and computing power").
+    /// Burst shape comes from [`DramModel::with_bandwidth`], the same
+    /// constructor the default platform and the DSE axes use — the
+    /// burst constants live in exactly one place.
     pub fn bandwidth_limited(elems_per_cycle: f64) -> Self {
-        Self {
-            dram: DramModel { elems_per_cycle, burst_overhead: 8.0, burst_len: 64 },
-            ..Self::default()
-        }
+        Self { dram: DramModel::with_bandwidth(elems_per_cycle), ..Self::default() }
     }
 }
 
@@ -75,5 +75,17 @@ mod tests {
         let c = AccelConfig::bandwidth_limited(2.0);
         assert_eq!(c.dram.elems_per_cycle, 2.0);
         assert_eq!(c.array_dim, AccelConfig::default().array_dim);
+    }
+
+    #[test]
+    fn burst_constants_come_from_one_constructor() {
+        // Default platform, bandwidth_limited and DramModel::default
+        // must agree on the burst shape — with_bandwidth is the single
+        // home of those constants.
+        let d = DramModel::default();
+        for cfg in [AccelConfig::default(), AccelConfig::bandwidth_limited(2.0)] {
+            assert_eq!(cfg.dram.burst_overhead, d.burst_overhead);
+            assert_eq!(cfg.dram.burst_len, d.burst_len);
+        }
     }
 }

@@ -37,8 +37,14 @@ impl std::error::Error for ConfigError {}
 
 /// Parse an accelerator config from `key = value` text, starting from
 /// the defaults.
+///
+/// Strict like the CLI scanner: unknown keys, malformed values,
+/// **duplicate keys** (last-wins would silently drop the earlier
+/// setting) and out-of-range values are all errors, each naming the
+/// offending line.
 pub fn parse(text: &str) -> Result<AccelConfig, ConfigError> {
     let mut cfg = AccelConfig::default();
+    let mut seen: Vec<String> = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
@@ -51,6 +57,13 @@ pub fn parse(text: &str) -> Result<AccelConfig, ConfigError> {
             )));
         };
         let (key, value) = (key.trim(), value.trim());
+        if seen.iter().any(|k| k == key) {
+            return Err(ConfigError::new(format!(
+                "line {}: duplicate key {key:?} (each key may appear once)",
+                lineno + 1
+            )));
+        }
+        seen.push(key.to_string());
         let bad = || ConfigError::new(format!("line {}: bad value for {key}: {value:?}", lineno + 1));
         match key {
             "array_dim" => cfg.array_dim = value.parse().map_err(|_| bad())?,
@@ -65,9 +78,40 @@ pub fn parse(text: &str) -> Result<AccelConfig, ConfigError> {
                 return Err(ConfigError::new(format!("line {}: unknown key {other:?}", lineno + 1)))
             }
         }
+        // Per-key range errors carry the line number too — a preset
+        // with `array_dim = 32` fails pointing at its own line, not
+        // with a whole-file message after parsing. The predicate itself
+        // is shared with [`validate`], so the two can never drift.
+        if let Some(msg) = field_range_error(key, &cfg) {
+            return Err(ConfigError::new(format!("line {}: {msg}", lineno + 1)));
+        }
     }
     validate(&cfg)?;
     Ok(cfg)
+}
+
+/// Render a config back into the `key = value` file format [`parse`]
+/// reads — every key, in a fixed order, so `parse(&render(&cfg))`
+/// reproduces `cfg` exactly (floats use the shortest round-trip form).
+pub fn render(cfg: &AccelConfig) -> String {
+    format!(
+        "array_dim = {}\n\
+         dram_elems_per_cycle = {}\n\
+         dram_burst_overhead = {}\n\
+         dram_burst_len = {}\n\
+         buf_a_half = {}\n\
+         buf_b_half = {}\n\
+         reorg_cycles_per_elem = {}\n\
+         sparse_skip = {}\n",
+        cfg.array_dim,
+        cfg.dram.elems_per_cycle,
+        cfg.dram.burst_overhead,
+        cfg.dram.burst_len,
+        cfg.buf_a_half,
+        cfg.buf_b_half,
+        cfg.reorg_cycles_per_elem,
+        cfg.sparse_skip,
+    )
 }
 
 /// Load a config file.
@@ -78,20 +122,96 @@ pub fn load(path: impl AsRef<Path>) -> Result<AccelConfig, ConfigError> {
     parse(&text).map_err(|e| e.context(format!("parsing {}", path.display())))
 }
 
-/// Sanity constraints on a parsed config.
+/// Largest supported array dimension (compress/crossbar lane masks are
+/// `u16` — one bit per lane).
+pub const MAX_ARRAY_DIM: usize = 16;
+
+/// Largest supported buffer half, in elements (4 Gi elements = 16 GiB
+/// of SRAM per half — far beyond silicon, close enough to keep every
+/// downstream byte computation inside `usize`/`f64`).
+pub const MAX_BUF_HALF: usize = 1 << 32;
+
+/// Largest supported DRAM burst length, in elements.
+pub const MAX_BURST_LEN: usize = 1 << 24;
+
+/// Largest supported DRAM rate, in elements/cycle.
+pub const MAX_DRAM_RATE: f64 = 1e6;
+
+/// Largest supported per-burst / per-element cycle cost.
+pub const MAX_COST_CYCLES: f64 = 1e9;
+
+/// Range error of one config field (named in config-file key syntax),
+/// if any. The single home of the per-field domain predicates: [`parse`]
+/// applies it per assigned key (wrapping the message with the line
+/// number), [`validate`] applies it to every field, and the DSE axis
+/// validation ([`crate::dse::space::SpaceSpec::validate`]) enforces the
+/// same `MAX_*` bounds — so the three front ends cannot drift apart.
+fn field_range_error(key: &str, cfg: &AccelConfig) -> Option<String> {
+    match key {
+        "array_dim" => (cfg.array_dim == 0 || cfg.array_dim > MAX_ARRAY_DIM).then(|| {
+            format!(
+                "array_dim must be in 1..={MAX_ARRAY_DIM} (lane masks are u16), got {}",
+                cfg.array_dim
+            )
+        }),
+        "dram_elems_per_cycle" => {
+            let v = cfg.dram.elems_per_cycle;
+            (!v.is_finite() || v <= 0.0 || v > MAX_DRAM_RATE).then(|| {
+                format!(
+                    "dram_elems_per_cycle must be positive, finite and at most \
+                     {MAX_DRAM_RATE}, got {v}"
+                )
+            })
+        }
+        "dram_burst_overhead" => {
+            let v = cfg.dram.burst_overhead;
+            (!v.is_finite() || v < 0.0 || v > MAX_COST_CYCLES).then(|| {
+                format!(
+                    "dram_burst_overhead must be non-negative, finite and at most \
+                     {MAX_COST_CYCLES}, got {v}"
+                )
+            })
+        }
+        "dram_burst_len" => (cfg.dram.burst_len == 0 || cfg.dram.burst_len > MAX_BURST_LEN)
+            .then(|| {
+                format!("dram_burst_len must be in 1..={MAX_BURST_LEN}, got {}", cfg.dram.burst_len)
+            }),
+        "buf_a_half" => (cfg.buf_a_half == 0 || cfg.buf_a_half > MAX_BUF_HALF)
+            .then(|| format!("buf_a_half must be in 1..={MAX_BUF_HALF}, got {}", cfg.buf_a_half)),
+        "buf_b_half" => (cfg.buf_b_half == 0 || cfg.buf_b_half > MAX_BUF_HALF)
+            .then(|| format!("buf_b_half must be in 1..={MAX_BUF_HALF}, got {}", cfg.buf_b_half)),
+        "reorg_cycles_per_elem" => {
+            let v = cfg.reorg_cycles_per_elem;
+            (!v.is_finite() || v < 0.0 || v > MAX_COST_CYCLES).then(|| {
+                format!(
+                    "reorg_cycles_per_elem must be non-negative, finite and at most \
+                     {MAX_COST_CYCLES}, got {v}"
+                )
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Every range-checked config key, in file order.
+const RANGE_KEYS: [&str; 7] = [
+    "array_dim",
+    "dram_elems_per_cycle",
+    "dram_burst_overhead",
+    "dram_burst_len",
+    "buf_a_half",
+    "buf_b_half",
+    "reorg_cycles_per_elem",
+];
+
+/// Sanity constraints on a config, however it was built (file, preset,
+/// point spec, hand construction). Field predicates are shared with
+/// [`parse`]'s line-numbered per-key checks.
 pub fn validate(cfg: &AccelConfig) -> Result<(), ConfigError> {
-    if cfg.array_dim == 0 || cfg.array_dim > 16 {
-        // compress/crossbar masks are u16 (one bit per lane).
-        return Err(ConfigError::new(format!("array_dim must be in 1..=16, got {}", cfg.array_dim)));
-    }
-    if cfg.dram.elems_per_cycle <= 0.0 {
-        return Err(ConfigError::new("dram_elems_per_cycle must be positive"));
-    }
-    if cfg.buf_a_half == 0 || cfg.buf_b_half == 0 {
-        return Err(ConfigError::new("buffer halves must be non-empty"));
-    }
-    if cfg.reorg_cycles_per_elem < 0.0 {
-        return Err(ConfigError::new("reorg_cycles_per_elem must be non-negative"));
+    for key in RANGE_KEYS {
+        if let Some(msg) = field_range_error(key, cfg) {
+            return Err(ConfigError::new(msg));
+        }
     }
     Ok(())
 }
@@ -165,5 +285,100 @@ mod tests {
             let path = concat!(env!("CARGO_MANIFEST_DIR"), "/").to_string() + preset;
             load(&path).unwrap_or_else(|e| panic!("{preset}: {e:#}"));
         }
+    }
+
+    /// Every preset shipped under `configs/` must round-trip through
+    /// the parser: read from disk, validate, render, re-parse, and land
+    /// on the bit-identical configuration.
+    #[test]
+    fn every_shipped_preset_round_trips_through_render() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+        let mut presets: Vec<_> = std::fs::read_dir(dir)
+            .expect("configs/ exists")
+            .map(|e| e.expect("readable entry").path())
+            .filter(|p| p.extension().is_some_and(|e| e == "cfg"))
+            .collect();
+        presets.sort();
+        assert!(presets.len() >= 3, "default/edge/hpc at minimum: {presets:?}");
+        for path in presets {
+            let cfg = load(&path).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            validate(&cfg).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            let text = render(&cfg);
+            let back = parse(&text).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            // Bit-exact round trip, float fields included.
+            assert_eq!(back.array_dim, cfg.array_dim, "{}", path.display());
+            assert_eq!(
+                back.dram.elems_per_cycle.to_bits(),
+                cfg.dram.elems_per_cycle.to_bits(),
+                "{}",
+                path.display()
+            );
+            assert_eq!(
+                back.dram.burst_overhead.to_bits(),
+                cfg.dram.burst_overhead.to_bits(),
+                "{}",
+                path.display()
+            );
+            assert_eq!(back.dram.burst_len, cfg.dram.burst_len, "{}", path.display());
+            assert_eq!(back.buf_a_half, cfg.buf_a_half, "{}", path.display());
+            assert_eq!(back.buf_b_half, cfg.buf_b_half, "{}", path.display());
+            assert_eq!(
+                back.reorg_cycles_per_elem.to_bits(),
+                cfg.reorg_cycles_per_elem.to_bits(),
+                "{}",
+                path.display()
+            );
+            assert_eq!(back.sparse_skip, cfg.sparse_skip, "{}", path.display());
+            // Rendering is idempotent.
+            assert_eq!(render(&back), text, "{}", path.display());
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_rejected_with_line_number() {
+        let err = parse("array_dim = 8\nbuf_a_half = 1024\narray_dim = 16\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("duplicate key"), "{msg}");
+        assert!(msg.contains("array_dim"), "{msg}");
+    }
+
+    #[test]
+    fn out_of_range_values_name_their_line() {
+        for (text, line, needle) in [
+            ("array_dim = 32", "line 1", "1..=16"),
+            ("buf_a_half = 4096\narray_dim = 0", "line 2", "1..=16"),
+            ("dram_elems_per_cycle = -1", "line 1", "positive"),
+            ("dram_elems_per_cycle = inf", "line 1", "finite"),
+            ("\n\ndram_burst_len = 0", "line 3", "1..="),
+            ("dram_burst_overhead = -0.5", "line 1", "non-negative"),
+            ("buf_b_half = 0", "line 1", "1..="),
+            ("reorg_cycles_per_elem = nan", "line 1", "finite"),
+        ] {
+            let err = parse(text).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(line), "{text:?}: {msg}");
+            assert!(msg.contains(needle), "{text:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn validate_shares_the_parse_predicates() {
+        // A config built outside the file parser (point spec, hand
+        // construction) hits the same domain bounds — burst_len 0 would
+        // otherwise divide by zero inside DramModel::transfer_cycles.
+        let mut cfg = AccelConfig::default();
+        cfg.dram.burst_len = 0;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = AccelConfig::default();
+        cfg.dram.elems_per_cycle = f64::INFINITY;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = AccelConfig::default();
+        cfg.buf_a_half = MAX_BUF_HALF + 1;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = AccelConfig::default();
+        cfg.reorg_cycles_per_elem = f64::NAN;
+        assert!(validate(&cfg).is_err());
+        validate(&AccelConfig::default()).unwrap();
     }
 }

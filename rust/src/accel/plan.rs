@@ -174,7 +174,7 @@ impl LayerPlan {
             Pass::Grad => (groups * shape.m * shape.k, p.output_elems()),
         };
         debug_assert!(
-            shape.m * t <= cfg.buf_a_half,
+            shape.dynamic_panel_elems(t) <= cfg.buf_a_half,
             "dynamic panel must fit one buffer-A half"
         );
 
@@ -293,9 +293,11 @@ impl LayerPlan {
 
 /// Hashable identity of an [`AccelConfig`] (float fields keyed by their
 /// bit patterns: two configs plan identically iff every field is
-/// bit-identical).
+/// bit-identical). Crate-visible: the design-space engine dedups its
+/// candidates by the same identity ([`crate::dse::search`]), so there
+/// is exactly one definition of "the same config".
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-struct CfgKey {
+pub(crate) struct CfgKey {
     array_dim: usize,
     buf_a_half: usize,
     buf_b_half: usize,
@@ -307,7 +309,7 @@ struct CfgKey {
 }
 
 impl CfgKey {
-    fn of(cfg: &AccelConfig) -> Self {
+    pub(crate) fn of(cfg: &AccelConfig) -> Self {
         // Exhaustive destructuring (no `..`): adding a field to
         // AccelConfig or DramModel without extending this key is a
         // compile error, not a silent cache collision.

@@ -36,6 +36,16 @@ impl GemmShape {
     pub fn macs(&self) -> u64 {
         (self.m * self.k * self.j) as u64
     }
+
+    /// Elements of the dynamic panel one stripe stages in buffer A
+    /// (`M` rows x `T` lanes). The single home of the "panel must fit
+    /// one buffer-A half" working-set rule: the plan builder asserts
+    /// it, and the design-space engine's feasibility filter
+    /// ([`crate::dse::objective::feasibility`]) rejects candidate
+    /// configs by the same formula.
+    pub fn dynamic_panel_elems(&self, t: usize) -> usize {
+        self.m * t
+    }
 }
 
 /// Tiling of a [`GemmShape`] onto a `T x T` array.

@@ -18,8 +18,12 @@
 //! the full catalog in this module's tests.
 
 use crate::api::artifact::json_string;
-use crate::api::request::{FigureRequest, FleetRequest, PassFilter, SimRequest};
+use crate::api::request::{
+    DseRequest, DseWorkloads, FigureRequest, FleetRequest, PassFilter, SimRequest,
+    MAX_DSE_BUDGET, MAX_DSE_SEED,
+};
 use crate::conv::ConvParams;
+use crate::dse::space::{SpaceSpec, AXIS_NAMES};
 use crate::im2col::pipeline::Pass;
 use crate::report::Figure;
 use std::fmt::Write as _;
@@ -353,7 +357,11 @@ impl SimRequest {
             }
             SimRequest::Layer(p) => {
                 write!(out, ",\"spec\":{}", json_string(&p.id())).unwrap();
-                if p.b != 1 {
+                // The decoder's default is the paper's batch 2
+                // (`ConvParams::parse_spec` builds on `square`), so any
+                // OTHER batch — including 1 — must travel explicitly or
+                // the round trip would silently come back as 2.
+                if p.b != 2 {
                     write!(out, ",\"batch\":{}", p.b).unwrap();
                 }
             }
@@ -366,6 +374,56 @@ impl SimRequest {
                 write!(out, ",\"devices\":{}", f.devices).unwrap();
                 if f.extended {
                     out.push_str(",\"extended\":true");
+                }
+            }
+            SimRequest::Dse(d) => {
+                let defaults = DseRequest::new();
+                if d.budget != defaults.budget {
+                    write!(out, ",\"budget\":{}", d.budget).unwrap();
+                }
+                if d.seed != defaults.seed {
+                    write!(out, ",\"seed\":{}", d.seed).unwrap();
+                }
+                match d.workloads {
+                    DseWorkloads::Paper => {}
+                    DseWorkloads::Extended => out.push_str(",\"extended\":true"),
+                    DseWorkloads::Layer(p) => {
+                        write!(out, ",\"layer\":{}", json_string(&p.id())).unwrap();
+                        // Same batch rule as the `layer` kind: the spec
+                        // string does not carry `b`, so non-default
+                        // batches travel as their own key.
+                        if p.b != 2 {
+                            write!(out, ",\"batch\":{}", p.b).unwrap();
+                        }
+                    }
+                }
+                // Only the overridden axes travel, in canonical order,
+                // in their compact `V` / `LO:HI:STEP` form.
+                let default_space = SpaceSpec::default();
+                let overridden: Vec<(usize, &str)> = AXIS_NAMES
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| d.space.axes()[*i] != default_space.axes()[*i])
+                    .map(|(i, name)| (i, *name))
+                    .collect();
+                if !overridden.is_empty() {
+                    out.push_str(",\"axes\":{");
+                    for (j, (i, name)) in overridden.iter().enumerate() {
+                        if j > 0 {
+                            out.push(',');
+                        }
+                        write!(
+                            out,
+                            "{}:{}",
+                            json_string(name),
+                            json_string(&d.space.axis_string(*i))
+                        )
+                        .unwrap();
+                    }
+                    out.push('}');
+                }
+                if let Some(n) = d.devices {
+                    write!(out, ",\"devices\":{n}").unwrap();
                 }
             }
         }
@@ -413,10 +471,11 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
         "layer" => &["spec", "batch"],
         "traincost" => &["devices"],
         "fleet" => &["devices", "extended"],
+        "dse" => &["budget", "seed", "axes", "extended", "layer", "batch", "devices"],
         other => {
             return Err(format!(
                 "unknown request kind {other:?} (supported: table2, table3, table4, fig6, \
-                 fig7, fig8, sparsity, storage, layer, traincost, fleet)"
+                 fig7, fig8, sparsity, storage, layer, traincost, fleet, dse)"
             ))
         }
     };
@@ -463,12 +522,8 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
                 .as_str()
                 .ok_or("\"spec\" must be a string")?;
             let mut p = ConvParams::parse_spec(spec)?;
-            if let Some(b) = v.get("batch") {
-                let b = b.as_u64().ok_or("\"batch\" must be a non-negative integer")?;
-                if b == 0 || b > MAX_DEVICES as u64 {
-                    return Err(format!("batch must be in 1..={MAX_DEVICES}, got {b}"));
-                }
-                p.b = b as usize;
+            if let Some(b) = opt_batch(v)? {
+                p.b = b;
             }
             SimRequest::layer(p)
         }
@@ -477,6 +532,56 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
             // Mirrors the CLI: `fleet` without --devices means 4.
             let devices = opt_devices(v)?.unwrap_or(4);
             FleetRequest::new(devices).extended(extended).into()
+        }
+        "dse" => {
+            let mut req = DseRequest::new().extended(extended);
+            if let Some(b) = v.get("budget") {
+                let b = b.as_u64().ok_or("\"budget\" must be a non-negative integer")?;
+                if b == 0 || b > MAX_DSE_BUDGET as u64 {
+                    return Err(format!("budget must be in 1..={MAX_DSE_BUDGET}, got {b}"));
+                }
+                req.budget = b as u32;
+            }
+            if let Some(s) = v.get("seed") {
+                let s = s.as_u64().ok_or("\"seed\" must be a non-negative integer")?;
+                if s > MAX_DSE_SEED {
+                    // MAX_DSE_SEED is 2^53 - 1: an f64-decoded 2^53
+                    // might really have been 2^53 + 1, so only values
+                    // the decoding provably kept exact are accepted.
+                    return Err(format!("seed must be below 2^53, got {s}"));
+                }
+                req.seed = s;
+            }
+            if let Some(layer) = v.get("layer") {
+                if extended {
+                    return Err("\"extended\" and \"layer\" are mutually exclusive".to_string());
+                }
+                let spec =
+                    layer.as_str().ok_or("\"layer\" must be a layer spec string")?;
+                let mut p = ConvParams::parse_spec(spec)?;
+                if let Some(b) = opt_batch(v)? {
+                    p.b = b;
+                }
+                req.workloads = DseWorkloads::Layer(p);
+            } else if v.get("batch").is_some() {
+                return Err("\"batch\" is only meaningful together with \"layer\"".to_string());
+            }
+            if let Some(axes) = v.get("axes") {
+                let Json::Obj(pairs) = axes else {
+                    return Err(
+                        "\"axes\" must be an object of {\"axis\":\"V|LO:HI:STEP\"}".to_string()
+                    );
+                };
+                for (key, range) in pairs {
+                    let range =
+                        range.as_str().ok_or_else(|| format!("axis {key:?} must be a string"))?;
+                    req.space.set_axis(key, range)?;
+                }
+            }
+            if let Some(n) = opt_devices(v)? {
+                req.devices = Some(n);
+            }
+            req.into()
         }
         _ => unreachable!("kind validated above"),
     })
@@ -488,6 +593,22 @@ fn opt_bool(v: &Json, key: &str) -> Result<Option<bool>, String> {
         None => Ok(None),
         Some(b) => {
             Ok(Some(b.as_bool().ok_or_else(|| format!("{key:?} must be true or false"))?))
+        }
+    }
+}
+
+/// Optional `batch` member (a layer workload's batch size),
+/// range-checked to `1..=`[`MAX_DEVICES`] — the one definition both the
+/// `layer` kind and the `dse` layer workload decode through.
+fn opt_batch(v: &Json) -> Result<Option<usize>, String> {
+    match v.get("batch") {
+        None => Ok(None),
+        Some(b) => {
+            let b = b.as_u64().ok_or("\"batch\" must be a non-negative integer")?;
+            if b == 0 || b > MAX_DEVICES as u64 {
+                return Err(format!("batch must be in 1..={MAX_DEVICES}, got {b}"));
+            }
+            Ok(Some(b as usize))
         }
     }
 }
@@ -533,7 +654,7 @@ pub fn parse_batch(text: &str) -> Result<Vec<Result<SimRequest, String>>, String
 /// ready-to-send example body.
 pub fn request_catalog_json() -> String {
     // (kind, description, extra keys, example body)
-    const SHAPES: [(&str, &str, &str, &str); 11] = [
+    const SHAPES: [(&str, &str, &str, &str); 12] = [
         ("table2", "Table II: per-layer backpropagation runtime", "[]", "{\"kind\":\"table2\"}"),
         ("table3", "Table III: address-generation prologue latency", "[]", "{\"kind\":\"table3\"}"),
         ("table4", "Table IV: address-generation module area", "[]", "{\"kind\":\"table4\"}"),
@@ -585,6 +706,12 @@ pub fn request_catalog_json() -> String {
             "[\"devices\",\"extended\"]",
             "{\"kind\":\"fleet\",\"devices\":4}",
         ),
+        (
+            "dse",
+            "Design-space exploration: Pareto frontier over AccelConfig",
+            "[\"budget\",\"seed\",\"axes\",\"extended\",\"layer\",\"batch\",\"devices\"]",
+            "{\"kind\":\"dse\",\"budget\":64,\"seed\":7,\"axes\":{\"array_dim\":\"4:16:4\"}}",
+        ),
     ];
     let mut out = String::from("{\"requests\":[");
     for (i, (kind, desc, keys, example)) in SHAPES.iter().enumerate() {
@@ -625,6 +752,16 @@ mod tests {
             SimRequest::TrainCost { devices: Some(2) },
             SimRequest::fleet(4),
             SimRequest::Fleet(FleetRequest::new(8).extended(true)),
+            DseRequest::new().into(),
+            DseRequest::new().budget(128).seed(9).extended(true).devices(4).into(),
+            DseRequest::new().layer(ConvParams::square(56, 128, 128, 3, 2, 1)).into(),
+            {
+                let mut d = DseRequest::new().budget(32).seed(7);
+                d.space.set_axis("array_dim", "4:16:4").unwrap();
+                d.space.set_axis("elems_per_cycle", "0.5:4:0.5").unwrap();
+                d.space.set_axis("sparse_skip", "0:1:1").unwrap();
+                d.into()
+            },
         ]
     }
 
@@ -640,12 +777,27 @@ mod tests {
 
     #[test]
     fn layer_batch_survives_the_round_trip() {
-        let mut p = ConvParams::square(56, 128, 128, 3, 2, 1);
-        p.b = 8;
-        let req = SimRequest::layer(p);
-        let encoded = req.to_json();
-        assert!(encoded.contains("\"batch\":8"), "{encoded}");
-        assert_eq!(SimRequest::from_json(&encoded).unwrap(), req);
+        // Every non-default batch must travel — including 1, which is
+        // below the decoder's parse_spec default of 2.
+        for b in [1usize, 2, 8] {
+            let mut p = ConvParams::square(56, 128, 128, 3, 2, 1);
+            p.b = b;
+            for req in [SimRequest::layer(p), DseRequest::new().layer(p).into()] {
+                let encoded = req.to_json();
+                assert_eq!(
+                    encoded.contains("\"batch\":"),
+                    b != 2,
+                    "batch {b} minimal body: {encoded}"
+                );
+                assert_eq!(SimRequest::from_json(&encoded).unwrap(), req, "{encoded}");
+            }
+        }
+        // Batch without a layer workload is meaningless for dse.
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"batch\":4}").is_err());
+        assert!(
+            SimRequest::from_json("{\"kind\":\"dse\",\"layer\":\"56/128/128/3/2/1\",\"batch\":0}")
+                .is_err()
+        );
     }
 
     #[test]
@@ -671,6 +823,43 @@ mod tests {
         assert_eq!(req, FigureRequest::new(Figure::Runtime).into());
         // Fleet defaults to 4 devices like the CLI.
         assert_eq!(SimRequest::from_json("{\"kind\":\"fleet\"}").unwrap(), SimRequest::fleet(4));
+    }
+
+    #[test]
+    fn dse_decoder_is_strict_and_fills_defaults() {
+        // A bare request is the full-default search.
+        let req = SimRequest::from_json("{\"kind\":\"dse\"}").unwrap();
+        assert_eq!(req, DseRequest::new().into());
+        // Axes decode in their compact string form.
+        let req = SimRequest::from_json(
+            "{\"kind\":\"dse\",\"budget\":32,\"seed\":7,\"axes\":{\"elems_per_cycle\":\"0.5:4:0.5\"}}",
+        )
+        .unwrap();
+        let SimRequest::Dse(d) = req else { panic!("{req:?}") };
+        assert_eq!((d.budget, d.seed), (32, 7));
+        assert_eq!(d.space.axis_string(1), "0.5:4:0.5");
+        // Strictness: ranges, types, unknown axes, conflicting workloads.
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"budget\":0}").is_err());
+        assert!(SimRequest::from_json(&format!(
+            "{{\"kind\":\"dse\",\"budget\":{}}}",
+            MAX_DSE_BUDGET + 1
+        ))
+        .is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"seed\":-1}").is_err());
+        // 2^53 + 1 collapses to 2^53 in the f64 decode — the bound must
+        // reject it (only provably-exact seeds pass; CLI parity).
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"seed\":9007199254740993}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"seed\":9007199254740992}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"seed\":9007199254740991}").is_ok());
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"axes\":[]}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"axes\":{\"nope\":\"1\"}}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"axes\":{\"array_dim\":8}}").is_err());
+        assert!(
+            SimRequest::from_json("{\"kind\":\"dse\",\"extended\":true,\"layer\":\"1/2/3\"}")
+                .is_err()
+        );
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"layer\":\"1/2/3\"}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"dse\",\"pass\":\"loss\"}").is_err());
     }
 
     #[test]
@@ -721,7 +910,7 @@ mod tests {
     fn request_catalog_parses_and_examples_decode() {
         let doc = parse(&request_catalog_json()).unwrap();
         let Some(Json::Arr(shapes)) = doc.get("requests") else { panic!("no requests array") };
-        assert_eq!(shapes.len(), 11, "one entry per SimRequest kind");
+        assert_eq!(shapes.len(), 12, "one entry per SimRequest kind");
         for shape in shapes {
             let example = shape.get("example").unwrap().as_str().unwrap();
             let req = SimRequest::from_json(example)

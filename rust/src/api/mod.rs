@@ -28,7 +28,10 @@ pub mod json;
 pub mod request;
 
 pub use artifact::{render_all_csv, render_all_json, render_all_text, Artifact, Column, Value};
-pub use request::{FigureRequest, FleetRequest, PassFilter, SimRequest};
+pub use request::{
+    DseRequest, DseWorkloads, FigureRequest, FleetRequest, PassFilter, SimRequest,
+    MAX_DSE_BUDGET, MAX_DSE_SEED,
+};
 
 use std::fmt;
 use std::panic::{self, AssertUnwindSafe};
@@ -169,6 +172,7 @@ impl Service {
             SimRequest::Fleet(f) => {
                 vec![self.fleet_artifact(&Self::networks(f.extended), f.devices)]
             }
+            SimRequest::Dse(d) => vec![self.dse(d)],
         };
         let cfg_meta = config_meta(&self.cfg);
         for a in &mut artifacts {
@@ -358,6 +362,92 @@ impl Service {
             out.push(self.fleet_artifact(&workloads::all_networks(), devices));
         }
         out
+    }
+
+    /// Serve a design-space exploration: run the search through the
+    /// service's shared plan cache and wrap the scored set as one
+    /// frontier artifact (rows sorted by dominance rank, then candidate
+    /// id).
+    ///
+    /// Everything in the artifact is a pure function of the request and
+    /// the service config — evaluation thread count (`devices`), cache
+    /// temperature and sibling requests leave no trace — so repeated
+    /// sweeps render byte-identical JSON from the CLI, the HTTP route
+    /// and the in-process facade alike (`tests/dse.rs`).
+    fn dse(&self, req: &DseRequest) -> Artifact {
+        use crate::dse::{objective::OBJECTIVE_COLUMNS, search};
+
+        let result = search::run(req, &self.cfg, &self.plan_cache());
+
+        let mut columns = vec![
+            Column::new("point"),
+            Column::new("origin"),
+            Column::new("spec"),
+            Column::new("rank"),
+        ];
+        for (name, unit) in OBJECTIVE_COLUMNS {
+            columns.push(Column::new(name).unit(unit).precision(0));
+        }
+        let mut a = Artifact::new(
+            "dse",
+            format!(
+                "Design-space exploration: Pareto frontier over {} candidate platform(s)",
+                result.points.len()
+            ),
+        )
+        .meta("workloads", req.workloads.label())
+        .meta("budget", req.budget.to_string())
+        .meta("seed", req.seed.to_string())
+        .meta("space", req.space.describe())
+        .columns(columns);
+
+        let mut rows: Vec<&crate::dse::EvaluatedPoint> = result.points.iter().collect();
+        rows.sort_by_key(|p| (p.rank, p.id));
+        for p in rows {
+            let mut row: Vec<Value> = vec![
+                p.id.into(),
+                p.origin.label().into(),
+                p.spec.clone().into(),
+                p.rank.into(),
+            ];
+            row.push(p.obj.runtime_cycles.into());
+            row.push(p.obj.traffic_bytes.into());
+            row.push(p.obj.buffer_reads.into());
+            row.push(p.obj.storage_bytes.into());
+            row.push(p.obj.area_um2.into());
+            a.push_row(row);
+        }
+
+        let frontier = result.frontier().len();
+        a.push_note(format!(
+            "frontier: {frontier} non-dominated of {} evaluated points ({} of {} grid points, \
+             {} sampled, {} refined; budget {}, seed {})",
+            result.points.len(),
+            if result.exhaustive { "all" } else { "part" },
+            result.grid_size,
+            result.sampled,
+            result.refined,
+            req.budget,
+            req.seed
+        ));
+        for (i, (name, unit)) in OBJECTIVE_COLUMNS.iter().enumerate() {
+            if let Some(champ) = result.champion(i) {
+                a.push_note(format!(
+                    "best {name}: point {} ({}) = {} {unit}",
+                    champ.id,
+                    champ.spec,
+                    champ.obj.as_array()[i]
+                ));
+            }
+        }
+        if !result.infeasible.is_empty() {
+            let (spec, reason) = &result.infeasible[0];
+            a.push_note(format!(
+                "skipped {} infeasible point(s), e.g. {spec}: {reason}",
+                result.infeasible.len()
+            ));
+        }
+        a
     }
 
     fn fleet_artifact(&self, nets: &[Network], devices: usize) -> Artifact {
@@ -564,6 +654,28 @@ mod tests {
         // A valid request through try_run equals the infallible path.
         let ok = svc.try_run(&SimRequest::Table3).unwrap();
         assert_eq!(ok, svc.run(&SimRequest::Table3));
+    }
+
+    #[test]
+    fn dse_artifact_has_frontier_rows_and_champion_notes() {
+        let svc = Service::new(AccelConfig::default());
+        let req: SimRequest = DseRequest::new().budget(16).seed(7).into();
+        let arts = svc.run(&req);
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.name, "dse");
+        assert!(!a.rows.is_empty());
+        // Rows are sorted by rank: the first row is on the frontier.
+        assert_eq!(a.float_at(0, "rank"), Some(0.0));
+        assert!(a.col("runtime_cycles").is_some() && a.col("area_um2").is_some());
+        assert!(a.meta.iter().any(|(k, v)| k == "space" && v.contains("array_dim=")));
+        assert!(a.notes.iter().any(|n| n.starts_with("frontier: ")), "{:?}", a.notes);
+        assert!(a.notes.iter().any(|n| n.starts_with("best runtime_cycles")), "{:?}", a.notes);
+        // Replay through the warmed cache renders identical bytes, and
+        // the devices knob leaves no trace in the artifact.
+        assert_eq!(svc.run(&req), arts);
+        let two: SimRequest = DseRequest::new().budget(16).seed(7).devices(2).into();
+        assert_eq!(svc.run(&two)[0].render_json(), a.render_json());
     }
 
     #[test]

@@ -9,8 +9,20 @@
 //! ([`crate::api::Service::run_batch`]) and round-tripped.
 
 use crate::conv::ConvParams;
+use crate::dse::space::SpaceSpec;
 use crate::im2col::pipeline::Pass;
 use crate::report::Figure;
+
+/// Hard cap on a DSE request's evaluation budget (design points per
+/// search). Ranking is O(points²), so an attacker-supplied budget must
+/// stay well below anything that could pin a server core.
+pub const MAX_DSE_BUDGET: u32 = 1024;
+
+/// Largest DSE seed the JSON wire format can carry exactly (JSON
+/// numbers are f64; integers from 2^53 up may decode inexactly — 2^53+1
+/// collapses to 2^53 — so the request layer accepts only values the
+/// decoder can prove exact, everywhere, for CLI/HTTP parity).
+pub const MAX_DSE_SEED: u64 = (1 << 53) - 1;
 
 /// Which backpropagation passes a figure request covers.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -124,6 +136,136 @@ impl From<FleetRequest> for SimRequest {
     }
 }
 
+/// Which workload set a design-space search scores candidates on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DseWorkloads {
+    /// The paper's six networks (the default).
+    #[default]
+    Paper,
+    /// The paper's six plus the dilated/grouped extension networks.
+    Extended,
+    /// A single layer geometry (`--layer`, or `"layer"` on the wire).
+    Layer(ConvParams),
+}
+
+impl DseWorkloads {
+    /// The layers (with multiplicity) of the selected set, in fixed
+    /// network-then-layer order — the order the objective sums run in.
+    pub fn layers(&self) -> Vec<(ConvParams, usize)> {
+        let nets = match self {
+            DseWorkloads::Paper => crate::workloads::all_networks(),
+            DseWorkloads::Extended => crate::workloads::extended_networks(),
+            DseWorkloads::Layer(p) => return vec![(*p, 1)],
+        };
+        nets.iter().flat_map(|n| n.layers.iter().map(|l| (l.params, l.count))).collect()
+    }
+
+    /// Stable label used in artifact metadata (`paper`, `extended`, or
+    /// the layer id *with its batch* — the spec string alone omits `b`,
+    /// and the frontier must be reproducible from its metadata).
+    pub fn label(&self) -> String {
+        match self {
+            DseWorkloads::Paper => "paper".to_string(),
+            DseWorkloads::Extended => "extended".to_string(),
+            DseWorkloads::Layer(p) => format!("{} (batch {})", p.id(), p.b),
+        }
+    }
+}
+
+/// Request for a design-space exploration over
+/// [`crate::accel::AccelConfig`] (DESIGN.md §11): score every candidate
+/// of `space` (up to `budget` points, sampled with `seed` when the grid
+/// is larger) on the chosen `workloads` and return the exact Pareto
+/// frontier.
+///
+/// `devices` is pure evaluation parallelism — results are bit-identical
+/// for any value (asserted in `tests/dse.rs`) — so it never appears in
+/// the artifact.
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::api::{DseRequest, SimRequest};
+///
+/// let mut req = DseRequest::new().budget(64).seed(7);
+/// req.space.set_axis("array_dim", "4:16:4").unwrap();
+/// let req: SimRequest = req.into();
+/// assert_eq!(req.name(), "dse");
+/// assert!(req.validate().is_ok());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DseRequest {
+    /// The searchable axes (defaults sweep array/bandwidth/buffers).
+    pub space: SpaceSpec,
+    /// Workload set candidates are scored on.
+    pub workloads: DseWorkloads,
+    /// Maximum design points to evaluate (1..=[`MAX_DSE_BUDGET`]).
+    pub budget: u32,
+    /// Sampling seed (over-budget grids only; below `2^53` so the JSON
+    /// wire format carries it exactly).
+    pub seed: u64,
+    /// Evaluation worker threads. Can only *lower* the host worker
+    /// policy (a wire-supplied value never spawns extra OS threads);
+    /// results are bit-identical for every value.
+    pub devices: Option<usize>,
+}
+
+impl Default for DseRequest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DseRequest {
+    /// The default search: default space, paper networks, budget 64,
+    /// seed 0.
+    pub fn new() -> Self {
+        Self {
+            space: SpaceSpec::default(),
+            workloads: DseWorkloads::Paper,
+            budget: 64,
+            seed: 0,
+            devices: None,
+        }
+    }
+
+    /// With an evaluation budget.
+    pub fn budget(mut self, budget: u32) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// With a sampling seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Score on the extended (dilated/grouped) workload set.
+    pub fn extended(mut self, extended: bool) -> Self {
+        self.workloads = if extended { DseWorkloads::Extended } else { DseWorkloads::Paper };
+        self
+    }
+
+    /// Score on a single layer geometry.
+    pub fn layer(mut self, params: ConvParams) -> Self {
+        self.workloads = DseWorkloads::Layer(params);
+        self
+    }
+
+    /// With an explicit evaluation worker count.
+    pub fn devices(mut self, devices: usize) -> Self {
+        self.devices = Some(devices);
+        self
+    }
+}
+
+impl From<DseRequest> for SimRequest {
+    fn from(r: DseRequest) -> Self {
+        SimRequest::Dse(r)
+    }
+}
+
 /// One query against the analytic/event model — every CLI command except
 /// the PJRT `train` action maps to exactly one of these.
 ///
@@ -167,6 +309,8 @@ pub enum SimRequest {
     },
     /// Fleet-scaling summary.
     Fleet(FleetRequest),
+    /// Design-space exploration: Pareto frontier over `AccelConfig`.
+    Dse(DseRequest),
 }
 
 impl SimRequest {
@@ -197,7 +341,47 @@ impl SimRequest {
                 Err("traincost devices must be >= 1".into())
             }
             SimRequest::Fleet(f) if f.devices == 0 => Err("fleet devices must be >= 1".into()),
+            SimRequest::Dse(d) => {
+                if d.budget == 0 || d.budget > MAX_DSE_BUDGET {
+                    return Err(format!(
+                        "dse budget must be in 1..={MAX_DSE_BUDGET}, got {}",
+                        d.budget
+                    ));
+                }
+                if d.seed > MAX_DSE_SEED {
+                    return Err(format!("dse seed must be below 2^53, got {}", d.seed));
+                }
+                if d.devices == Some(0) {
+                    return Err("dse devices must be >= 1".into());
+                }
+                d.space.validate()?;
+                if let DseWorkloads::Layer(p) = d.workloads {
+                    p.validate()?;
+                }
+                Ok(())
+            }
             _ => Ok(()),
+        }
+    }
+
+    /// The request with evaluation-environmental knobs normalized away
+    /// — the key response caches should store under.
+    ///
+    /// A DSE request's `devices` field is pure evaluation parallelism:
+    /// the rendered artifact is bit-identical for every value
+    /// (`tests/dse.rs`), so caching per-devices would recompute and
+    /// store byte-identical bodies once per value — and let a client
+    /// cycle `devices` to bypass the response cache entirely. Every
+    /// other request kind keys as itself (`devices` there is semantic:
+    /// it sizes the simulated fleet).
+    pub fn cache_key(&self) -> SimRequest {
+        match self {
+            SimRequest::Dse(d) => {
+                let mut d = *d;
+                d.devices = None;
+                SimRequest::Dse(d)
+            }
+            other => *other,
         }
     }
 
@@ -218,6 +402,7 @@ impl SimRequest {
             SimRequest::Layer(_) => "layer",
             SimRequest::TrainCost { .. } => "traincost",
             SimRequest::Fleet(_) => "fleet",
+            SimRequest::Dse(_) => "dse",
         }
     }
 }
@@ -268,6 +453,58 @@ mod tests {
         assert!(SimRequest::layer(bad).validate().is_err());
         let good = ConvParams::square(56, 128, 128, 3, 2, 1);
         assert!(SimRequest::layer(good).validate().is_ok());
+    }
+
+    #[test]
+    fn dse_requests_validate_budget_seed_space_and_workloads() {
+        assert_eq!(SimRequest::from(DseRequest::new()).name(), "dse");
+        assert!(SimRequest::from(DseRequest::new()).validate().is_ok());
+        assert!(SimRequest::from(DseRequest::new().budget(0)).validate().is_err());
+        assert!(
+            SimRequest::from(DseRequest::new().budget(MAX_DSE_BUDGET + 1)).validate().is_err()
+        );
+        assert!(SimRequest::from(DseRequest::new().seed(MAX_DSE_SEED + 1)).validate().is_err());
+        let mut req = DseRequest::new();
+        req.devices = Some(0);
+        assert!(SimRequest::from(req).validate().is_err());
+        let mut req = DseRequest::new();
+        req.space.set_axis("array_dim", "8:32:8").unwrap();
+        assert!(SimRequest::from(req).validate().is_err(), "space domain checks run");
+        let bad_layer = ConvParams::square(56, 100, 100, 3, 2, 1).with_groups(32);
+        assert!(SimRequest::from(DseRequest::new().layer(bad_layer)).validate().is_err());
+        let good_layer = ConvParams::square(56, 128, 128, 3, 2, 1);
+        assert!(SimRequest::from(DseRequest::new().layer(good_layer)).validate().is_ok());
+    }
+
+    #[test]
+    fn cache_key_normalizes_only_dse_devices() {
+        let tuned: SimRequest = DseRequest::new().devices(8).into();
+        let plain: SimRequest = DseRequest::new().into();
+        assert_eq!(tuned.cache_key(), plain);
+        assert_eq!(plain.cache_key(), plain);
+        // Elsewhere `devices` is semantic (it sizes the simulated
+        // fleet) and must stay in the key.
+        let fleet = SimRequest::fleet(4);
+        assert_eq!(fleet.cache_key(), fleet);
+        let fig: SimRequest = FigureRequest::new(Figure::Runtime).devices(2).into();
+        assert_eq!(fig.cache_key(), fig);
+    }
+
+    #[test]
+    fn dse_workload_sets_flatten_in_network_order() {
+        let paper = DseWorkloads::Paper.layers();
+        let extended = DseWorkloads::Extended.layers();
+        assert!(paper.len() > 10);
+        assert!(extended.len() > paper.len());
+        assert_eq!(&extended[..paper.len()], &paper[..], "extended extends the paper set");
+        let p = ConvParams::square(56, 128, 128, 3, 2, 1);
+        assert_eq!(DseWorkloads::Layer(p).layers(), vec![(p, 1)]);
+        assert_eq!(DseWorkloads::Paper.label(), "paper");
+        // The label carries the batch: two sweeps differing only in
+        // `b` must stamp distinguishable provenance metadata.
+        assert_eq!(DseWorkloads::Layer(p).label(), format!("{} (batch 2)", p.id()));
+        let batched = p.with_batch(8);
+        assert_ne!(DseWorkloads::Layer(batched).label(), DseWorkloads::Layer(p).label());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! few percent of the accelerator, an order of magnitude cheaper than
 //! the reorganization hardware + traffic it removes.
 
+use crate::accel::AccelConfig;
 use crate::im2col::pipeline::{Mode, Pass};
 use crate::sim::addrgen::{AddrGenPipeline, Module};
 use crate::sim::crossbar::pruned_crossbar_mux2_count;
@@ -69,6 +70,14 @@ impl ModuleArea {
 /// must support both backpropagation passes, so we take the union of the
 /// per-pass pipelines (the deeper one dominates).
 pub fn addrgen_area(mode: Mode, module: Module) -> ModuleArea {
+    addrgen_area_for(mode, module, LANES)
+}
+
+/// [`addrgen_area`] generalized to an arbitrary lane count (one lane
+/// per array row/column) — the design-space engine scales address
+/// generation with the candidate's `array_dim`; Table IV stays pinned
+/// at the paper's [`LANES`].
+pub fn addrgen_area_for(mode: Mode, module: Module, lanes: usize) -> ModuleArea {
     // Deepest pipeline this module needs across the two passes.
     let divs = Pass::ALL
         .iter()
@@ -77,27 +86,30 @@ pub fn addrgen_area(mode: Mode, module: Module) -> ModuleArea {
         .unwrap_or(0);
 
     // Every lane carries its own divider chain + address adders.
-    let dividers_um2 = (divs * LANES) as f64 * unit::DIV32;
+    let dividers_um2 = (divs * lanes) as f64 * unit::DIV32;
     // Base-address composition (3 adders/lane) + window incrementers.
-    let adders_um2 = (3 * LANES) as f64 * unit::ADD32;
+    let adders_um2 = (3 * lanes) as f64 * unit::ADD32;
     // NZ detection (Eqs. 2–4): 4 comparators per lane in BP mode,
     // 2 per lane (padding bounds only) in traditional mode.
     let cmps = match mode {
-        Mode::Traditional => 2 * LANES,
-        Mode::BpIm2col => 4 * LANES,
+        Mode::Traditional => 2 * lanes,
+        Mode::BpIm2col => 4 * lanes,
     };
     let comparators_um2 = cmps as f64 * unit::CMP32;
     // Pipeline registers: 64 bits of (address + tag) per stage per lane.
     let stages = divs.max(1);
-    let pipeline_regs_um2 = (stages * LANES * 64) as f64 * unit::FF_BIT;
+    let pipeline_regs_um2 = (stages * lanes * 64) as f64 * unit::FF_BIT;
     // BP modules own the compression logic + recovery crossbar and the
-    // compacted-data staging registers (16 lanes x 32 bits x 2 ranks).
+    // compacted-data staging registers (lanes x 32 bits x 2 ranks).
     let crossbar_um2 = match mode {
         Mode::Traditional => 0.0,
         Mode::BpIm2col => {
-            pruned_crossbar_mux2_count(LANES, 32) as f64 * unit::MUX2_BIT
-                + (LANES * 32 * 2) as f64 * unit::FF_BIT
-                + (LANES * LANES) as f64 * unit::MUX2_BIT * 16.0 // priority encode / mask distribute
+            // Priority encode / mask distribute: masks carry one bit
+            // per lane, so the fanout factor scales with the lane
+            // count (16 at the paper's platform — Table IV unchanged).
+            pruned_crossbar_mux2_count(lanes, 32) as f64 * unit::MUX2_BIT
+                + (lanes * 32 * 2) as f64 * unit::FF_BIT
+                + (lanes * lanes) as f64 * unit::MUX2_BIT * lanes as f64
         }
     };
     // FSM + request queues.
@@ -118,6 +130,38 @@ pub fn accelerator_total_um2() -> f64 {
     let addrgen = addrgen_area(Mode::Traditional, Module::Dynamic).total()
         + addrgen_area(Mode::Traditional, Module::Stationary).total();
     pes + sram + addrgen
+}
+
+/// Structural area (µm²) of a *configured* BP-im2col accelerator — the
+/// design-space engine's area/SRAM-cost objective. Unlike
+/// [`accelerator_total_um2`] (pinned to the paper's platform so Table
+/// IV's ratios stay put), this scales with the candidate:
+///
+/// * `array_dim²` FP32 MACs plus 256 B of accumulator SRAM per PE;
+/// * the double-buffered A and B SRAM at their configured half sizes
+///   (elements are FP32, both halves counted);
+/// * all four address generators — the traditional pair (inference
+///   still runs) *and* the BP pair — at one lane per array row/column;
+/// * a per-lane NZ-skip comparator + queue when `sparse_skip` is on.
+pub fn accelerator_area_um2(cfg: &AccelConfig) -> f64 {
+    let lanes = cfg.array_dim;
+    let pes = (lanes * lanes) as f64 * unit::MAC_FP32;
+    let data_bytes = 2 * (cfg.buf_a_half + cfg.buf_b_half) * 4; // both halves, FP32
+    let accum_bytes = lanes * lanes * 256;
+    let sram = ((data_bytes + accum_bytes) * 8) as f64 * unit::SRAM_BIT;
+    let addrgen = [Mode::Traditional, Mode::BpIm2col]
+        .iter()
+        .map(|mode| {
+            addrgen_area_for(*mode, Module::Dynamic, lanes).total()
+                + addrgen_area_for(*mode, Module::Stationary, lanes).total()
+        })
+        .sum::<f64>();
+    let sparse = if cfg.sparse_skip {
+        lanes as f64 * (unit::CMP32 + 64.0 * unit::FF_BIT)
+    } else {
+        0.0
+    };
+    pes + sram + addrgen + sparse
 }
 
 /// One row of Table IV: module area and its share of the accelerator.
@@ -195,5 +239,46 @@ mod tests {
         // total ~2.2 mm².
         let t = accelerator_total_um2();
         assert!((1.4e6..3.2e6).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn configured_area_tracks_the_knobs_monotonically() {
+        let base = AccelConfig::default();
+        let a0 = accelerator_area_um2(&base);
+        assert!((1.0e6..4.0e6).contains(&a0), "{a0}");
+        // Bigger buffers, bigger array and sparse hardware all cost area.
+        let mut bufs = base;
+        bufs.buf_a_half *= 2;
+        assert!(accelerator_area_um2(&bufs) > a0);
+        let mut small = base;
+        small.array_dim = 8;
+        assert!(accelerator_area_um2(&small) < a0);
+        let mut sparse = base;
+        sparse.sparse_skip = true;
+        assert!(accelerator_area_um2(&sparse) > a0);
+        // DRAM timing is free silicon in this model.
+        let mut bw = base;
+        bw.dram.elems_per_cycle = 1.0;
+        assert_eq!(accelerator_area_um2(&bw), a0);
+    }
+
+    #[test]
+    fn lane_scaled_addrgen_matches_table4_at_paper_lanes() {
+        for mode in Mode::ALL {
+            for module in [Module::Dynamic, Module::Stationary] {
+                assert_eq!(
+                    addrgen_area_for(mode, module, LANES),
+                    addrgen_area(mode, module),
+                    "{mode:?} {module:?}"
+                );
+            }
+        }
+        // Fewer lanes, less area — and the mask-distribute fanout
+        // scales with the lane count, so the crossbar term shrinks
+        // superlinearly (its other components stay roughly linear).
+        let a8 = addrgen_area_for(Mode::BpIm2col, Module::Dynamic, 8);
+        let a16 = addrgen_area_for(Mode::BpIm2col, Module::Dynamic, 16);
+        assert!(a8.total() < a16.total());
+        assert!(a8.crossbar_um2 * 2.0 < a16.crossbar_um2, "fanout scales with lanes");
     }
 }

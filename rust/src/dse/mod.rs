@@ -1,0 +1,27 @@
+//! Design-space exploration over [`crate::accel::AccelConfig`]
+//! (DESIGN.md §11).
+//!
+//! The paper evaluates BP-im2col on exactly one TPU-like design point.
+//! This subsystem turns the reproduction into a search tool: describe a
+//! space of accelerator configurations ([`space::SpaceSpec`] — array
+//! geometry, off-chip bandwidth and burst shape, buffer capacities,
+//! reorganization cost, sparse skipping), pick a workload set, and the
+//! engine scores every candidate on five minimized objectives
+//! ([`objective::Objectives`]) and returns the exact Pareto frontier
+//! with dominance ranks and per-objective champions
+//! ([`search::DseResult`]).
+//!
+//! The layering mirrors the rest of the crate: `space` is pure data and
+//! codecs, `objective` is pure scoring over the shared plan cache, and
+//! `search` owns candidate generation and the (deterministic) thread
+//! fan-out. Everything is served through the ordinary request path —
+//! [`crate::api::SimRequest::Dse`], `repro dse`, `POST /v1/query` — so
+//! a sweep is one reproducible request like any table or figure.
+
+pub mod objective;
+pub mod search;
+pub mod space;
+
+pub use objective::{Objectives, NUM_OBJECTIVES, OBJECTIVE_COLUMNS};
+pub use search::{DseResult, EvaluatedPoint, Origin};
+pub use space::{AxisRange, SpaceSpec};

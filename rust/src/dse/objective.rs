@@ -1,0 +1,290 @@
+//! Scoring one candidate configuration, and the Pareto machinery over
+//! the scored set.
+//!
+//! A candidate is scored on five objectives, all *minimized*:
+//! backward runtime, off-chip traffic, on-chip buffer reads, additional
+//! storage, and a structural area proxy
+//! ([`crate::area::accelerator_area_um2`]). The first four come from
+//! the same plan-cache path every figure uses
+//! ([`crate::accel::plan::PlanCache::metrics`], BP-im2col mode), summed
+//! over the workload layers in fixed order — so a point's score is a
+//! pure function of `(config, workload set)` and bit-identical however
+//! many evaluation threads the search runs.
+//!
+//! The frontier is the exact non-dominated set; [`pareto_ranks`] also
+//! assigns every dominated point its dominance depth (rank 1 = frontier
+//! after removing rank 0, and so on), which the artifact reports next
+//! to the raw objective columns.
+
+use std::sync::Arc;
+
+use crate::accel::plan::PlanCache;
+use crate::accel::tiling::GemmShape;
+use crate::accel::AccelConfig;
+use crate::area;
+use crate::conv::ConvParams;
+use crate::im2col::pipeline::{Mode, Pass};
+
+/// Number of scored objectives.
+pub const NUM_OBJECTIVES: usize = 5;
+
+/// `(column name, unit)` of each objective, in score-vector order.
+pub const OBJECTIVE_COLUMNS: [(&str, &str); NUM_OBJECTIVES] = [
+    ("runtime_cycles", "cycles"),
+    ("traffic_bytes", "bytes"),
+    ("buffer_reads", "elems"),
+    ("storage_bytes", "bytes"),
+    ("area_um2", "um^2"),
+];
+
+/// The score of one candidate configuration over one workload set
+/// (every objective minimized).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// BP-im2col backward runtime (loss + grad), cycles, summed over
+    /// the workload layers.
+    pub runtime_cycles: f64,
+    /// Off-chip traffic of the backward passes, bytes.
+    pub traffic_bytes: u64,
+    /// On-chip buffer reads toward the array (A + B), elements.
+    pub buffer_reads: u64,
+    /// Additional storage beyond the compact tensors, bytes (per layer:
+    /// the larger of the two passes, as in the network aggregation).
+    pub storage_bytes: u64,
+    /// Structural area of the configured accelerator, µm².
+    pub area_um2: f64,
+}
+
+impl Objectives {
+    /// The score as a vector in [`OBJECTIVE_COLUMNS`] order (counts
+    /// widened to `f64`; all workload sums sit far below 2^53, so the
+    /// widening is exact).
+    pub fn as_array(&self) -> [f64; NUM_OBJECTIVES] {
+        [
+            self.runtime_cycles,
+            self.traffic_bytes as f64,
+            self.buffer_reads as f64,
+            self.storage_bytes as f64,
+            self.area_um2,
+        ]
+    }
+}
+
+/// Whether `cfg` can run every workload layer at all: the dynamic-panel
+/// working set of each pass must fit one buffer-A half (the invariant
+/// the plan builder asserts). Infeasible points are reported and
+/// excluded from the frontier instead of aborting the sweep.
+pub fn feasibility(cfg: &AccelConfig, layers: &[(ConvParams, usize)]) -> Result<(), String> {
+    crate::accel::config_file::validate(cfg).map_err(|e| e.to_string())?;
+    for (p, _) in layers {
+        for pass in Pass::ALL {
+            let shape = GemmShape::from_pass(pass, p);
+            // The same formula the plan builder asserts — one home, no
+            // drift ([`GemmShape::dynamic_panel_elems`]).
+            let panel = shape.dynamic_panel_elems(cfg.array_dim);
+            if panel > cfg.buf_a_half {
+                return Err(format!(
+                    "layer {} {} pass needs a {panel}-element dynamic panel, buffer A half \
+                     holds {}",
+                    p.id(),
+                    pass.name(),
+                    cfg.buf_a_half
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Score `cfg` over the workload layers through the shared plan cache
+/// (BP-im2col mode, both backward passes). Deterministic: layers are
+/// visited in slice order, so the f64 sums are reproducible bit for
+/// bit; cache hits return the plans a cold build would.
+pub fn evaluate(
+    cfg: &AccelConfig,
+    layers: &[(ConvParams, usize)],
+    cache: &Arc<PlanCache>,
+) -> Objectives {
+    let mut runtime = 0.0f64;
+    let mut traffic = 0u64;
+    let mut reads = 0u64;
+    let mut storage = 0u64;
+    for (p, count) in layers {
+        let count = *count as u64;
+        let loss = cache.metrics(Pass::Loss, Mode::BpIm2col, p, cfg);
+        let grad = cache.metrics(Pass::Grad, Mode::BpIm2col, p, cfg);
+        runtime += (loss.total_cycles() + grad.total_cycles()) * count as f64;
+        traffic += (loss.traffic.total() + grad.traffic.total()) * count;
+        reads += (loss.buffer_a_reads
+            + loss.buffer_b_reads
+            + grad.buffer_a_reads
+            + grad.buffer_b_reads)
+            * count;
+        // Per-layer staging is shared by the two passes: max, not sum
+        // (the NetworkReport convention).
+        storage += loss.storage_overhead_bytes.max(grad.storage_overhead_bytes) * count;
+    }
+    Objectives {
+        runtime_cycles: runtime,
+        traffic_bytes: traffic,
+        buffer_reads: reads,
+        storage_bytes: storage,
+        area_um2: area::accelerator_area_um2(cfg),
+    }
+}
+
+/// `a` dominates `b`: no worse on every objective, strictly better on
+/// at least one (all objectives minimized).
+pub fn dominates(a: &[f64; NUM_OBJECTIVES], b: &[f64; NUM_OBJECTIVES]) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Dominance rank of every point: rank 0 is the exact Pareto frontier
+/// (the non-dominated set), rank `k` the frontier after removing ranks
+/// `< k` (fast non-dominated sorting). Equal score vectors never
+/// dominate each other, so exact ties share a rank.
+///
+/// `tests/dse.rs` property-checks the result against a direct O(n²)
+/// oracle over both real search results and seeded random score sets.
+pub fn pareto_ranks(scores: &[[f64; NUM_OBJECTIVES]]) -> Vec<usize> {
+    let n = scores.len();
+    let mut dominated_by = vec![0u32; n];
+    let mut dominates_list: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&scores[i], &scores[j]) {
+                dominates_list[i].push(j as u32);
+                dominated_by[j] += 1;
+            } else if dominates(&scores[j], &scores[i]) {
+                dominates_list[j].push(i as u32);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut ranks = vec![0usize; n];
+    let mut front: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut rank = 0usize;
+    let mut assigned = front.len();
+    while !front.is_empty() {
+        let mut next = Vec::new();
+        for &i in &front {
+            ranks[i] = rank;
+            for &j in &dominates_list[i] {
+                let j = j as usize;
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        rank += 1;
+        assigned += next.len();
+        front = next;
+    }
+    debug_assert_eq!(assigned, n, "every point must receive a rank");
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::timing::simulate_pass;
+    use crate::api::DseWorkloads;
+
+    fn paper_layers() -> Vec<(ConvParams, usize)> {
+        DseWorkloads::Paper.layers()
+    }
+
+    #[test]
+    fn evaluate_matches_cold_simulate_pass_sums() {
+        let cfg = AccelConfig::default();
+        let layers = paper_layers();
+        let cache = Arc::new(PlanCache::new());
+        let got = evaluate(&cfg, &layers, &cache);
+        let mut runtime = 0.0f64;
+        let mut traffic = 0u64;
+        for (p, count) in &layers {
+            let loss = simulate_pass(Pass::Loss, Mode::BpIm2col, p, &cfg);
+            let grad = simulate_pass(Pass::Grad, Mode::BpIm2col, p, &cfg);
+            runtime += (loss.total_cycles() + grad.total_cycles()) * *count as f64;
+            traffic += (loss.traffic.total() + grad.traffic.total()) * *count as u64;
+        }
+        assert_eq!(got.runtime_cycles, runtime);
+        assert_eq!(got.traffic_bytes, traffic);
+        assert!(got.buffer_reads > 0 && got.storage_bytes > 0);
+        assert_eq!(got.area_um2, area::accelerator_area_um2(&cfg));
+        // Replay through the warmed cache is bit-identical.
+        assert_eq!(evaluate(&cfg, &layers, &cache), got);
+    }
+
+    #[test]
+    fn higher_bandwidth_never_hurts_runtime() {
+        let layers = paper_layers();
+        let cache = Arc::new(PlanCache::new());
+        let slow = evaluate(&AccelConfig::bandwidth_limited(1.0), &layers, &cache);
+        let fast = evaluate(&AccelConfig::bandwidth_limited(16.0), &layers, &cache);
+        assert!(fast.runtime_cycles < slow.runtime_cycles);
+        // Traffic is geometry-only: bandwidth does not move bytes.
+        assert_eq!(fast.traffic_bytes, slow.traffic_bytes);
+    }
+
+    #[test]
+    fn feasibility_rejects_undersized_buffer_a() {
+        let layers = paper_layers();
+        let mut cfg = AccelConfig::default();
+        assert!(feasibility(&cfg, &layers).is_ok());
+        // ResNet's conv5_x.proj grad pass needs m*T = 2048*16 elements.
+        cfg.buf_a_half = 16 * 1024;
+        let err = feasibility(&cfg, &layers).unwrap_err();
+        assert!(err.contains("buffer A half"), "{err}");
+        // And structural config constraints are enforced too.
+        let mut cfg = AccelConfig::default();
+        cfg.array_dim = 0;
+        assert!(feasibility(&cfg, &layers).is_err());
+    }
+
+    #[test]
+    fn dominance_is_strict_and_partial() {
+        let a = [1.0, 1.0, 1.0, 1.0, 1.0];
+        let b = [2.0, 1.0, 1.0, 1.0, 1.0];
+        let c = [0.5, 2.0, 1.0, 1.0, 1.0];
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &a), "equal vectors never dominate");
+        assert!(!dominates(&a, &c) && !dominates(&c, &a), "incomparable");
+    }
+
+    #[test]
+    fn ranks_match_a_direct_oracle() {
+        // Small hand-built set with ties, chains and incomparables.
+        let scores = [
+            [1.0, 1.0, 1.0, 1.0, 1.0], // frontier
+            [2.0, 2.0, 2.0, 2.0, 2.0], // rank 1 (dominated by 0)
+            [3.0, 3.0, 3.0, 3.0, 3.0], // rank 2
+            [1.0, 1.0, 1.0, 1.0, 1.0], // exact tie with 0: frontier
+            [0.5, 9.0, 1.0, 1.0, 1.0], // incomparable: frontier
+        ];
+        assert_eq!(pareto_ranks(&scores), vec![0, 1, 2, 0, 0]);
+        // Oracle: rank-0 = points no other point dominates.
+        let ranks = pareto_ranks(&scores);
+        for (i, s) in scores.iter().enumerate() {
+            let dominated = scores.iter().any(|o| dominates(o, s));
+            assert_eq!(ranks[i] == 0, !dominated, "point {i}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_score_sets() {
+        assert!(pareto_ranks(&[]).is_empty());
+        assert_eq!(pareto_ranks(&[[1.0; NUM_OBJECTIVES]]), vec![0]);
+    }
+}

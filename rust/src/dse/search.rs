@@ -1,0 +1,442 @@
+//! The search driver: candidate generation (exhaustive grid, seeded
+//! sampling, hill-climb refinement), parallel evaluation, and the
+//! finished, deterministic result set.
+//!
+//! Determinism contract (asserted in `tests/dse.rs`): for a fixed
+//! `(space, workloads, budget, seed)` the evaluated candidate sequence,
+//! every score, every rank and the rendered artifact are **bit-identical**
+//! — across 1/4/8 evaluation threads, across cold and warm plan caches,
+//! and across the CLI and `POST /v1/query`. The ingredients:
+//!
+//! * candidates are generated single-threaded in a fixed order and get
+//!   ids in that order;
+//! * evaluation fans out on scoped threads but writes into per-candidate
+//!   slots, and each candidate's own f64 sums run sequentially inside
+//!   one thread ([`crate::dse::objective::evaluate`]);
+//! * refinement waves derive from the frontier of the *sorted* result
+//!   set, never from thread completion order;
+//! * the sampler is a seeded SplitMix64 stream ([`crate::tensor::Rng`]),
+//!   independent of everything but `seed`.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::accel::plan::PlanCache;
+use crate::accel::AccelConfig;
+use crate::api::request::DseRequest;
+use crate::conv::ConvParams;
+use crate::dse::objective::{self, Objectives};
+use crate::dse::space::{point_spec, SpaceSpec, NUM_AXES};
+use crate::tensor::Rng;
+
+/// How a candidate entered the search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Origin {
+    /// The serving platform's own configuration (always candidate 0 —
+    /// the paper's design point under the default platform).
+    Baseline,
+    /// Exhaustive grid enumeration (spaces within budget).
+    Grid,
+    /// Seeded random sample of an over-budget grid.
+    Sampled,
+    /// Hill-climb neighbor of a frontier point.
+    Refined,
+}
+
+impl Origin {
+    /// Stable label used in the artifact's `origin` column.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Origin::Baseline => "baseline",
+            Origin::Grid => "grid",
+            Origin::Sampled => "sampled",
+            Origin::Refined => "refined",
+        }
+    }
+}
+
+/// One scored, feasible design point of the finished search.
+#[derive(Clone, Debug)]
+pub struct EvaluatedPoint {
+    /// Candidate id (generation order; stable across thread counts).
+    pub id: usize,
+    /// Reproducible point spec ([`crate::dse::space::point_spec`]).
+    pub spec: String,
+    /// The configuration itself.
+    pub cfg: AccelConfig,
+    /// How the candidate entered the search.
+    pub origin: Origin,
+    /// Dominance rank: 0 = on the Pareto frontier.
+    pub rank: usize,
+    /// The five objective values.
+    pub obj: Objectives,
+}
+
+/// The finished search: scored points (by id), skipped points, and the
+/// generation statistics the artifact reports.
+#[derive(Clone, Debug)]
+pub struct DseResult {
+    /// Feasible, scored points in candidate-id order.
+    pub points: Vec<EvaluatedPoint>,
+    /// Infeasible candidates as `(spec, reason)`, in candidate-id order.
+    pub infeasible: Vec<(String, String)>,
+    /// Cardinality of the full grid.
+    pub grid_size: u128,
+    /// Whether the whole grid fit the budget (no sampling).
+    pub exhaustive: bool,
+    /// Candidates that came from random sampling.
+    pub sampled: usize,
+    /// Candidates that came from hill-climb refinement.
+    pub refined: usize,
+}
+
+impl DseResult {
+    /// The frontier (rank-0 points), in id order.
+    pub fn frontier(&self) -> Vec<&EvaluatedPoint> {
+        self.points.iter().filter(|p| p.rank == 0).collect()
+    }
+
+    /// The lowest-id point minimizing objective `index`
+    /// ([`crate::dse::objective::OBJECTIVE_COLUMNS`] order). Ties keep
+    /// the earliest candidate, so the champion is deterministic.
+    pub fn champion(&self, index: usize) -> Option<&EvaluatedPoint> {
+        self.points.iter().reduce(|best, p| {
+            if p.obj.as_array()[index] < best.obj.as_array()[index] {
+                p
+            } else {
+                best
+            }
+        })
+    }
+}
+
+/// One generated, not-yet-scored candidate.
+struct Candidate {
+    cfg: AccelConfig,
+    /// Grid coordinate, when the candidate lies on the space's grid
+    /// (an off-grid baseline has none and seeds no neighbors).
+    indices: Option<[u64; NUM_AXES]>,
+    origin: Origin,
+}
+
+/// Candidate dedup key: the plan cache's own bitwise config identity
+/// (float fields by bit pattern) — one definition of "the same config"
+/// for the whole crate.
+fn cfg_bits(cfg: &AccelConfig) -> crate::accel::plan::CfgKey {
+    crate::accel::plan::CfgKey::of(cfg)
+}
+
+/// Run the search described by `req` under `baseline` (the serving
+/// platform, always evaluated as candidate 0) through `cache`.
+///
+/// The workload set and the evaluation fan-out both come from the
+/// request itself — callers cannot accidentally score one workload set
+/// while the request (and the artifact built from it) claims another.
+/// `req.devices` can only *lower* the host worker policy: results are
+/// bit-identical for every value, so a wire-supplied count must never
+/// translate into extra OS threads.
+pub fn run(req: &DseRequest, baseline: &AccelConfig, cache: &Arc<PlanCache>) -> DseResult {
+    let layers = req.workloads.layers();
+    let layers = layers.as_slice();
+    let workers = crate::coordinator::scheduler::default_workers()
+        .min(req.devices.unwrap_or(usize::MAX))
+        .max(1);
+    let space = &req.space;
+    let budget = req.budget as usize;
+    let grid_size = space.grid_size();
+
+    let mut seen: HashSet<_> = HashSet::new();
+    let mut scored: Vec<(Candidate, Result<Objectives, String>)> = Vec::new();
+    let mut sampled = 0usize;
+    let mut refined = 0usize;
+
+    // ---- wave 0: the baseline plus the grid (exhaustive or sampled) ----
+    let mut wave: Vec<Candidate> = Vec::new();
+    seen.insert(cfg_bits(baseline));
+    let baseline_indices = space.indices_of_config(baseline);
+    wave.push(Candidate {
+        cfg: *baseline,
+        indices: baseline_indices,
+        origin: Origin::Baseline,
+    });
+    let mut budget_left = budget.saturating_sub(1);
+
+    // An on-grid baseline dedups against its own grid point, so the
+    // grid costs one candidate less — `--budget 32` covers the default
+    // 32-point grid exhaustively instead of falling back to sampling.
+    let distinct_grid = grid_size - baseline_indices.is_some() as u128;
+    let exhaustive = distinct_grid <= budget_left as u128;
+    if exhaustive {
+        for rank in 0..grid_size as u64 {
+            let indices = space.indices_of_rank(rank);
+            let cfg = space.config_at(indices);
+            if seen.insert(cfg_bits(&cfg)) {
+                wave.push(Candidate { cfg, indices: Some(indices), origin: Origin::Grid });
+                budget_left -= 1;
+            }
+        }
+    } else {
+        // Reserve a quarter of the remaining budget for refinement, and
+        // fill the rest with distinct seeded samples. The attempt bound
+        // only guards degenerate spaces (nearly every rank already
+        // seen); the sampler itself is pure in `seed`.
+        let refine_reserve = budget_left / 4;
+        let mut sample_left = budget_left - refine_reserve;
+        let mut rng = Rng::new(req.seed);
+        let mut attempts = 0usize;
+        let max_attempts = 64 * (sample_left + 1);
+        while sample_left > 0 && attempts < max_attempts {
+            attempts += 1;
+            let rank = rng.next_u64() % grid_size as u64;
+            let indices = space.indices_of_rank(rank);
+            let cfg = space.config_at(indices);
+            if seen.insert(cfg_bits(&cfg)) {
+                wave.push(Candidate { cfg, indices: Some(indices), origin: Origin::Sampled });
+                sample_left -= 1;
+                budget_left -= 1;
+                sampled += 1;
+            }
+        }
+    }
+
+    // ---- evaluate wave, then hill-climb around the frontier ----
+    loop {
+        evaluate_wave(&mut scored, wave, layers, cache, workers);
+        if budget_left == 0 {
+            break;
+        }
+        let next = neighbor_wave(space, &scored, &mut seen, budget_left);
+        if next.is_empty() {
+            break;
+        }
+        budget_left -= next.len();
+        refined += next.len();
+        wave = next;
+    }
+
+    finish(scored, grid_size, exhaustive, sampled, refined)
+}
+
+/// Score one wave of candidates on `workers` scoped threads, appending
+/// `(candidate, outcome)` pairs in candidate order.
+fn evaluate_wave(
+    scored: &mut Vec<(Candidate, Result<Objectives, String>)>,
+    wave: Vec<Candidate>,
+    layers: &[(ConvParams, usize)],
+    cache: &Arc<PlanCache>,
+    workers: usize,
+) {
+    let slots: Vec<Mutex<Option<Result<Objectives, String>>>> =
+        wave.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = workers.clamp(1, wave.len().max(1));
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(cand) = wave.get(i) else { break };
+                let outcome = match objective::feasibility(&cand.cfg, layers) {
+                    Ok(()) => Ok(objective::evaluate(&cand.cfg, layers, cache)),
+                    Err(reason) => Err(reason),
+                };
+                *slots[i].lock().expect("dse slot poisoned") = Some(outcome);
+            });
+        }
+    });
+    for (cand, slot) in wave.into_iter().zip(slots) {
+        let outcome = slot.into_inner().expect("dse slot poisoned").expect("slot filled");
+        scored.push((cand, outcome));
+    }
+}
+
+/// Generate the next refinement wave: unvisited grid neighbors (one
+/// step along one axis) of the current frontier, in a fixed order —
+/// frontier points by candidate id, axes in canonical order, step down
+/// before step up — truncated to the remaining budget.
+fn neighbor_wave(
+    space: &SpaceSpec,
+    scored: &[(Candidate, Result<Objectives, String>)],
+    seen: &mut HashSet<crate::accel::plan::CfgKey>,
+    budget_left: usize,
+) -> Vec<Candidate> {
+    let feasible: Vec<(usize, [f64; objective::NUM_OBJECTIVES])> = scored
+        .iter()
+        .enumerate()
+        .filter_map(|(i, (_, outcome))| outcome.as_ref().ok().map(|o| (i, o.as_array())))
+        .collect();
+    let scores: Vec<[f64; objective::NUM_OBJECTIVES]> =
+        feasible.iter().map(|(_, s)| *s).collect();
+    let ranks = objective::pareto_ranks(&scores);
+    let axes = space.axes();
+    let mut wave = Vec::new();
+    for (pos, (idx, _)) in feasible.iter().enumerate() {
+        if ranks[pos] != 0 {
+            continue;
+        }
+        let Some(indices) = scored[*idx].0.indices else { continue };
+        for axis in 0..NUM_AXES {
+            for delta in [-1i64, 1] {
+                let i = indices[axis] as i64 + delta;
+                if i < 0 || i as u64 >= axes[axis].count() {
+                    continue;
+                }
+                let mut neighbor = indices;
+                neighbor[axis] = i as u64;
+                let cfg = space.config_at(neighbor);
+                if seen.insert(cfg_bits(&cfg)) {
+                    wave.push(Candidate {
+                        cfg,
+                        indices: Some(neighbor),
+                        origin: Origin::Refined,
+                    });
+                    if wave.len() == budget_left {
+                        return wave;
+                    }
+                }
+            }
+        }
+    }
+    wave
+}
+
+/// Assemble the final result: split feasible from infeasible, rank the
+/// feasible set, keep everything in candidate-id order.
+fn finish(
+    scored: Vec<(Candidate, Result<Objectives, String>)>,
+    grid_size: u128,
+    exhaustive: bool,
+    sampled: usize,
+    refined: usize,
+) -> DseResult {
+    let mut points = Vec::new();
+    let mut infeasible = Vec::new();
+    for (id, (cand, outcome)) in scored.into_iter().enumerate() {
+        match outcome {
+            Ok(obj) => points.push(EvaluatedPoint {
+                id,
+                spec: point_spec(&cand.cfg),
+                cfg: cand.cfg,
+                origin: cand.origin,
+                rank: 0,
+                obj,
+            }),
+            Err(reason) => infeasible.push((point_spec(&cand.cfg), reason)),
+        }
+    }
+    let scores: Vec<[f64; objective::NUM_OBJECTIVES]> =
+        points.iter().map(|p| p.obj.as_array()).collect();
+    for (p, rank) in points.iter_mut().zip(objective::pareto_ranks(&scores)) {
+        p.rank = rank;
+    }
+    DseResult { points, infeasible, grid_size, exhaustive, sampled, refined }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn search(req: DseRequest, workers: usize) -> DseResult {
+        run(&req.devices(workers), &AccelConfig::default(), &Arc::new(PlanCache::new()))
+    }
+
+    #[test]
+    fn default_budget_walks_the_grid_exhaustively() {
+        let result = search(DseRequest::new().seed(7), 4);
+        assert!(result.exhaustive);
+        assert_eq!(result.grid_size, 32);
+        assert_eq!(result.sampled, 0);
+        // Baseline dedups against its own grid point: 32 candidates.
+        assert_eq!(result.points.len() + result.infeasible.len(), 32);
+        assert_eq!(result.points[0].origin, Origin::Baseline);
+        assert!(!result.frontier().is_empty());
+    }
+
+    #[test]
+    fn baseline_stays_on_the_default_frontier() {
+        // The acceptance property: the paper's platform is rank 0 under
+        // the default space (nothing in it dominates the default point).
+        let result = search(DseRequest::new().budget(64).seed(7), 4);
+        let baseline = &result.points[0];
+        assert_eq!(baseline.origin, Origin::Baseline);
+        assert_eq!(baseline.rank, 0, "paper point must be non-dominated: {baseline:?}");
+        assert_eq!(baseline.spec, point_spec(&AccelConfig::default()));
+    }
+
+    #[test]
+    fn budget_exactly_covering_the_grid_is_exhaustive() {
+        // 32 distinct candidates (baseline dedups against its own grid
+        // point), so budget 32 must walk the grid, not sample it.
+        let result = search(DseRequest::new().budget(32).seed(7), 2);
+        assert!(result.exhaustive, "{result:?}");
+        assert_eq!(result.sampled, 0);
+        assert_eq!(result.points.len() + result.infeasible.len(), 32);
+    }
+
+    #[test]
+    fn identical_across_worker_counts_and_cache_states() {
+        let req = DseRequest::new().budget(24).seed(7);
+        let shared = Arc::new(PlanCache::new());
+        let base = run(&req.devices(1), &AccelConfig::default(), &Arc::new(PlanCache::new()));
+        for workers in [2, 4, 8] {
+            let got = run(&req.devices(workers), &AccelConfig::default(), &shared);
+            assert_eq!(got.points.len(), base.points.len(), "workers {workers}");
+            for (a, b) in base.points.iter().zip(&got.points) {
+                assert_eq!(a.spec, b.spec, "workers {workers}");
+                assert_eq!(a.rank, b.rank, "workers {workers}");
+                assert_eq!(a.obj, b.obj, "workers {workers}");
+                assert_eq!(a.origin, b.origin, "workers {workers}");
+            }
+            assert_eq!(got.infeasible, base.infeasible, "workers {workers}");
+        }
+    }
+
+    #[test]
+    fn over_budget_spaces_sample_and_refine_deterministically() {
+        let mut req = DseRequest::new().budget(16).seed(3);
+        req.space.set_axis("array_dim", "2:16:2").unwrap();
+        let a = search(req, 4);
+        let b = search(req, 1);
+        assert!(!a.exhaustive);
+        assert!(a.sampled > 0, "{a:?}");
+        assert!(a.points.len() + a.infeasible.len() <= 16, "budget is a hard cap");
+        let specs = |r: &DseResult| r.points.iter().map(|p| p.spec.clone()).collect::<Vec<_>>();
+        assert_eq!(specs(&a), specs(&b));
+        // A different seed explores a different sample set.
+        let mut reseeded = DseRequest::new().budget(16).seed(4);
+        reseeded.space.set_axis("array_dim", "2:16:2").unwrap();
+        assert_ne!(specs(&a), specs(&search(reseeded, 4)), "seed must steer the sample");
+    }
+
+    #[test]
+    fn champions_minimize_their_objective() {
+        let result = search(DseRequest::new().budget(32).seed(7), 4);
+        for i in 0..objective::NUM_OBJECTIVES {
+            let champ = result.champion(i).expect("non-empty");
+            let best = champ.obj.as_array()[i];
+            for p in &result.points {
+                assert!(p.obj.as_array()[i] >= best, "objective {i}: {p:?}");
+            }
+            // Champions are non-dominated in their own objective's
+            // direction only when unique; rank may still be > 0 for
+            // tied minima, but a strict per-objective minimum is always
+            // on the frontier.
+        }
+    }
+
+    #[test]
+    fn infeasible_points_are_reported_not_fatal() {
+        let mut req = DseRequest::new().budget(8).seed(1);
+        // Buffers too small for the paper workloads: every grid point
+        // infeasible, the baseline alone survives.
+        req.space.set_axis("buf_a_half", "1024").unwrap();
+        req.space.set_axis("buf_b_half", "1024").unwrap();
+        let result = search(req, 2);
+        assert_eq!(result.points.len(), 1, "only the baseline is feasible");
+        assert!(!result.infeasible.is_empty());
+        for (_, reason) in &result.infeasible {
+            assert!(reason.contains("buffer A half"), "{reason}");
+        }
+    }
+}

@@ -1,0 +1,695 @@
+//! The searchable [`crate::accel::AccelConfig`] space: typed axes,
+//! compact range and point specs, and grid enumeration.
+//!
+//! A [`SpaceSpec`] is the *wire form* of a search space — eight
+//! [`AxisRange`]s (one per `AccelConfig` field), each a plain integer
+//! triple so the whole spec is `Copy + Eq + Hash` and rides inside
+//! [`crate::api::SimRequest`] unchanged. Fractional axes
+//! (`elems_per_cycle`, `burst_overhead`, `reorg_cycles_per_elem`) are
+//! stored in fixed-point **thousandths**, so `0.5` is the exact integer
+//! `500`, equality is bitwise, and the same spec string always names the
+//! same `f64`.
+//!
+//! Two compact string forms, both strict and both round-tripping (the
+//! [`crate::conv::ConvParams::parse_spec`] convention):
+//!
+//! * an **axis range** is `V` or `LO:HI:STEP` (`--axis array_dim=8:16:8`),
+//! * a **design point** is `t16/e16/o8/l64/a32768/b32768/r4/s0`
+//!   ([`point_spec`] / [`parse_point_spec`]) — every frontier row prints
+//!   one, and feeding it back reproduces the exact configuration.
+
+use crate::accel::AccelConfig;
+use crate::sim::dram::DramModel;
+
+/// Number of search axes (one per [`AccelConfig`] field).
+pub const NUM_AXES: usize = 8;
+
+/// Fixed-point scale of the fractional axes (values in thousandths).
+pub const MILLI: u64 = 1000;
+
+/// Hard cap on values per axis: keeps hostile ranges (`1:1000000:1`)
+/// from minting near-infinite grids the sampler would have to reject
+/// one rank at a time.
+pub const MAX_AXIS_VALUES: u64 = 256;
+
+/// Stable axis names, in canonical (enumeration) order.
+pub const AXIS_NAMES: [&str; NUM_AXES] = [
+    "array_dim",
+    "elems_per_cycle",
+    "burst_overhead",
+    "burst_len",
+    "buf_a_half",
+    "buf_b_half",
+    "reorg_cycles_per_elem",
+    "sparse_skip",
+];
+
+/// Which axes hold fixed-point thousandths (the others are plain
+/// integers).
+const AXIS_IS_MILLI: [bool; NUM_AXES] = [false, true, true, false, false, false, true, false];
+
+/// One inclusive arithmetic range `lo, lo+step, ..., <= hi` over an
+/// axis's raw integer domain (thousandths for fractional axes).
+/// `step == 0` means the single value `lo` (and requires `hi == lo`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AxisRange {
+    /// First value of the range.
+    pub lo: u64,
+    /// Inclusive upper bound (values never exceed it).
+    pub hi: u64,
+    /// Increment between values (0 = the single value `lo`).
+    pub step: u64,
+}
+
+impl AxisRange {
+    /// The single-value range `[v]`.
+    pub const fn single(v: u64) -> Self {
+        Self { lo: v, hi: v, step: 0 }
+    }
+
+    /// The range `lo, lo+step, ..., <= hi`.
+    pub const fn new(lo: u64, hi: u64, step: u64) -> Self {
+        Self { lo, hi, step }
+    }
+
+    /// Number of values the range enumerates. Saturating: a hostile
+    /// full-u64 range reports `u64::MAX` values (and is then rejected
+    /// by the [`MAX_AXIS_VALUES`] check) instead of wrapping.
+    pub fn count(&self) -> u64 {
+        if self.step == 0 {
+            1
+        } else {
+            (self.hi.saturating_sub(self.lo) / self.step).saturating_add(1)
+        }
+    }
+
+    /// The `i`-th value (callers index below [`AxisRange::count`]).
+    pub fn value(&self, i: u64) -> u64 {
+        self.lo + i * self.step
+    }
+
+    /// Index of `v` within the range, when it lies exactly on a step.
+    pub fn index_of(&self, v: u64) -> Option<u64> {
+        if v < self.lo || v > self.hi {
+            return None;
+        }
+        if self.step == 0 {
+            return (v == self.lo).then_some(0);
+        }
+        let off = v - self.lo;
+        (off % self.step == 0).then(|| off / self.step)
+    }
+
+    /// Structural validity: ordered bounds, single-value ranges written
+    /// as such, and the value count under [`MAX_AXIS_VALUES`].
+    pub fn validate(&self, name: &str) -> Result<(), String> {
+        if self.step == 0 && self.lo != self.hi {
+            return Err(format!("axis {name}: step 0 requires LO == HI, got {self:?}"));
+        }
+        if self.lo > self.hi {
+            return Err(format!("axis {name}: LO must not exceed HI, got {self:?}"));
+        }
+        if self.count() > MAX_AXIS_VALUES {
+            return Err(format!(
+                "axis {name}: {} values exceeds the maximum {MAX_AXIS_VALUES}",
+                self.count()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Format a fixed-point thousandths value the way the CLI writes it
+/// (`4000` → `4`, `4500` → `4.5`).
+pub fn fmt_milli(m: u64) -> String {
+    if m % MILLI == 0 {
+        (m / MILLI).to_string()
+    } else {
+        let mut s = format!("{}.{:03}", m / MILLI, m % MILLI);
+        while s.ends_with('0') {
+            s.pop();
+        }
+        s
+    }
+}
+
+/// Parse a decimal with up to three fractional digits into fixed-point
+/// thousandths (`"4.5"` → `4500`).
+pub fn parse_milli(s: &str) -> Result<u64, String> {
+    let bad = || format!("bad decimal value {s:?} (up to 3 fractional digits)");
+    let (int, frac) = match s.split_once('.') {
+        None => (s, ""),
+        Some((i, f)) => (i, f),
+    };
+    if int.is_empty() || frac.len() > 3 || (s.contains('.') && frac.is_empty()) {
+        return Err(bad());
+    }
+    let whole: u64 = int.parse().map_err(|_| bad())?;
+    let mut milli = 0u64;
+    for (i, ch) in frac.chars().enumerate() {
+        let d = ch.to_digit(10).ok_or_else(bad)? as u64;
+        milli += d * 10u64.pow(2 - i as u32);
+    }
+    whole.checked_mul(MILLI).and_then(|w| w.checked_add(milli)).ok_or_else(bad)
+}
+
+/// The full search space: one [`AxisRange`] per [`AccelConfig`] field,
+/// in [`AXIS_NAMES`] order. Plain integers throughout, so the spec is
+/// `Copy + Eq + Hash` and embeds directly in a
+/// [`crate::api::SimRequest`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpaceSpec {
+    /// Systolic array dimension `T` (hardware cap: 1..=16, lane masks
+    /// are `u16`).
+    pub array_dim: AxisRange,
+    /// DRAM sustained rate, milli-elements/cycle.
+    pub elems_per_cycle: AxisRange,
+    /// DRAM per-burst setup cost, milli-cycles.
+    pub burst_overhead: AxisRange,
+    /// DRAM burst length, elements.
+    pub burst_len: AxisRange,
+    /// Buffer A half-capacity, elements.
+    pub buf_a_half: AxisRange,
+    /// Buffer B half-capacity, elements.
+    pub buf_b_half: AxisRange,
+    /// Baseline reorganization cost, milli-cycles per element.
+    pub reorg_cycles_per_elem: AxisRange,
+    /// Sparse window skipping (0 = off, 1 = on; a range spanning both
+    /// sweeps the feature).
+    pub sparse_skip: AxisRange,
+}
+
+impl Default for SpaceSpec {
+    /// The default sweep: array geometry, off-chip bandwidth and buffer
+    /// capacity move; the remaining axes pin the paper's platform
+    /// (single values, see [`AccelConfig::default`]). 2 x 4 x 2 x 2 =
+    /// 32 grid points, so the default `--budget 64` walks it
+    /// exhaustively and the paper's own design point is always one of
+    /// the candidates.
+    fn default() -> Self {
+        Self {
+            array_dim: AxisRange::new(8, 16, 8),
+            elems_per_cycle: AxisRange::new(4 * MILLI, 16 * MILLI, 4 * MILLI),
+            burst_overhead: AxisRange::single(8 * MILLI),
+            burst_len: AxisRange::single(64),
+            buf_a_half: AxisRange::new(32 * 1024, 64 * 1024, 32 * 1024),
+            buf_b_half: AxisRange::new(32 * 1024, 64 * 1024, 32 * 1024),
+            reorg_cycles_per_elem: AxisRange::single(4 * MILLI),
+            sparse_skip: AxisRange::single(0),
+        }
+    }
+}
+
+impl SpaceSpec {
+    /// The axes in canonical order (paired with [`AXIS_NAMES`]).
+    pub fn axes(&self) -> [AxisRange; NUM_AXES] {
+        [
+            self.array_dim,
+            self.elems_per_cycle,
+            self.burst_overhead,
+            self.burst_len,
+            self.buf_a_half,
+            self.buf_b_half,
+            self.reorg_cycles_per_elem,
+            self.sparse_skip,
+        ]
+    }
+
+    /// Mutable access to one axis by canonical index.
+    fn axis_mut(&mut self, index: usize) -> &mut AxisRange {
+        match index {
+            0 => &mut self.array_dim,
+            1 => &mut self.elems_per_cycle,
+            2 => &mut self.burst_overhead,
+            3 => &mut self.burst_len,
+            4 => &mut self.buf_a_half,
+            5 => &mut self.buf_b_half,
+            6 => &mut self.reorg_cycles_per_elem,
+            _ => &mut self.sparse_skip,
+        }
+    }
+
+    /// Override one axis from its compact string form: `V` (single
+    /// value) or `LO:HI:STEP`, fractional for the milli axes
+    /// (`elems_per_cycle=0.5:4:0.5`). Unknown keys and malformed ranges
+    /// are errors, like every other spec parser in the crate.
+    pub fn set_axis(&mut self, key: &str, range: &str) -> Result<(), String> {
+        let index = AXIS_NAMES.iter().position(|n| *n == key).ok_or_else(|| {
+            format!("unknown DSE axis {key:?} (supported: {})", AXIS_NAMES.join(", "))
+        })?;
+        let parsed = Self::parse_range(key, range, AXIS_IS_MILLI[index])?;
+        parsed.validate(key)?;
+        *self.axis_mut(index) = parsed;
+        Ok(())
+    }
+
+    /// Parse one range string (`V` or `LO:HI:STEP`).
+    fn parse_range(key: &str, s: &str, milli: bool) -> Result<AxisRange, String> {
+        let num = |part: &str| -> Result<u64, String> {
+            if milli {
+                parse_milli(part).map_err(|e| format!("axis {key}: {e}"))
+            } else {
+                part.parse::<u64>().map_err(|_| format!("axis {key}: bad integer {part:?}"))
+            }
+        };
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            [v] => Ok(AxisRange::single(num(v)?)),
+            [lo, hi, step] => {
+                let (lo, hi, step) = (num(lo)?, num(hi)?, num(step)?);
+                let range = AxisRange::new(lo, hi, step);
+                // Canonicalize every well-formed range that enumerates
+                // exactly one value (`16:16:1`, `8:16:9` — both mean
+                // {LO}) to the bare single-value form: otherwise
+                // `from_json(to_json(req))` and the response-cache key
+                // would distinguish equal sweeps. Malformed shapes
+                // (descending bounds, step 0 over a span) pass through
+                // unchanged and fail `validate()` as before.
+                if lo <= hi && step > 0 && range.count() == 1 {
+                    Ok(AxisRange::single(lo))
+                } else {
+                    Ok(range)
+                }
+            }
+            _ => Err(format!("axis {key}: range must be V or LO:HI:STEP, got {s:?}")),
+        }
+    }
+
+    /// The compact string form of one axis (inverse of
+    /// [`SpaceSpec::set_axis`]'s range argument).
+    pub fn axis_string(&self, index: usize) -> String {
+        let a = self.axes()[index];
+        let fmt = |v: u64| {
+            if AXIS_IS_MILLI[index] {
+                fmt_milli(v)
+            } else {
+                v.to_string()
+            }
+        };
+        if a.count() == 1 {
+            fmt(a.lo)
+        } else {
+            format!("{}:{}:{}", fmt(a.lo), fmt(a.hi), fmt(a.step))
+        }
+    }
+
+    /// One-line description of the whole space
+    /// (`array_dim=8:16:8 elems_per_cycle=4:16:4 ...`), stamped into
+    /// the frontier artifact's metadata for reproducibility.
+    pub fn describe(&self) -> String {
+        AXIS_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, name)| format!("{name}={}", self.axis_string(i)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Total grid cardinality (product of axis counts, exact in u128).
+    pub fn grid_size(&self) -> u128 {
+        self.axes().iter().map(|a| a.count() as u128).product()
+    }
+
+    /// Structural validity of the whole space: every axis well-formed,
+    /// every axis domain inside the platform bounds the config layer
+    /// enforces ([`crate::accel::config_file`]'s `MAX_*` constants — the
+    /// same predicates `--config` files are held to, so no wire-supplied
+    /// axis can mint a config the rest of the model would overflow on),
+    /// and the grid small enough for u64 rank arithmetic.
+    pub fn validate(&self) -> Result<(), String> {
+        use crate::accel::config_file::{
+            MAX_ARRAY_DIM, MAX_BUF_HALF, MAX_BURST_LEN, MAX_COST_CYCLES, MAX_DRAM_RATE,
+        };
+        for (i, name) in AXIS_NAMES.iter().enumerate() {
+            self.axes()[i].validate(name)?;
+        }
+        let bounded = |name: &str, axis: AxisRange, lo: u64, hi: u64| -> Result<(), String> {
+            if axis.lo < lo || axis.hi > hi {
+                return Err(format!("axis {name}: values must stay in {lo}..={hi}"));
+            }
+            Ok(())
+        };
+        bounded("array_dim", self.array_dim, 1, MAX_ARRAY_DIM as u64)?;
+        bounded("elems_per_cycle", self.elems_per_cycle, 1, MAX_DRAM_RATE as u64 * MILLI)?;
+        bounded("burst_overhead", self.burst_overhead, 0, MAX_COST_CYCLES as u64 * MILLI)?;
+        bounded("burst_len", self.burst_len, 1, MAX_BURST_LEN as u64)?;
+        bounded("buf_a_half", self.buf_a_half, 1, MAX_BUF_HALF as u64)?;
+        bounded("buf_b_half", self.buf_b_half, 1, MAX_BUF_HALF as u64)?;
+        bounded(
+            "reorg_cycles_per_elem",
+            self.reorg_cycles_per_elem,
+            0,
+            MAX_COST_CYCLES as u64 * MILLI,
+        )?;
+        bounded("sparse_skip", self.sparse_skip, 0, 1)?;
+        if self.grid_size() > 1 << 62 {
+            return Err("search space exceeds 2^62 grid points".to_string());
+        }
+        Ok(())
+    }
+
+    /// The configuration at one grid coordinate (per-axis value
+    /// indices, [`AXIS_NAMES`] order).
+    pub fn config_at(&self, indices: [u64; NUM_AXES]) -> AccelConfig {
+        let axes = self.axes();
+        let v = |i: usize| axes[i].value(indices[i]);
+        AccelConfig {
+            array_dim: v(0) as usize,
+            dram: DramModel {
+                elems_per_cycle: v(1) as f64 / MILLI as f64,
+                burst_overhead: v(2) as f64 / MILLI as f64,
+                burst_len: v(3) as usize,
+            },
+            buf_a_half: v(4) as usize,
+            buf_b_half: v(5) as usize,
+            reorg_cycles_per_elem: v(6) as f64 / MILLI as f64,
+            sparse_skip: v(7) != 0,
+        }
+    }
+
+    /// Decode a lexicographic grid rank into per-axis indices
+    /// (mixed-radix, last axis fastest). Ranks come from the sampler;
+    /// callers keep them below [`SpaceSpec::grid_size`].
+    pub fn indices_of_rank(&self, mut rank: u64) -> [u64; NUM_AXES] {
+        let axes = self.axes();
+        let mut indices = [0u64; NUM_AXES];
+        for i in (0..NUM_AXES).rev() {
+            let n = axes[i].count();
+            indices[i] = rank % n;
+            rank /= n;
+        }
+        indices
+    }
+
+    /// Grid coordinate of `cfg`, when every field lies exactly on this
+    /// space's axes (used to hill-climb around an off-grid baseline
+    /// only if it happens to be a grid point).
+    pub fn indices_of_config(&self, cfg: &AccelConfig) -> Option<[u64; NUM_AXES]> {
+        let raw = raw_values(cfg)?;
+        let axes = self.axes();
+        let mut indices = [0u64; NUM_AXES];
+        for i in 0..NUM_AXES {
+            indices[i] = axes[i].index_of(raw[i])?;
+        }
+        Some(indices)
+    }
+}
+
+/// The raw integer (thousandths for fractional fields) values of a
+/// config, in axis order — `None` when a float field is not an exact
+/// multiple of 1/1000 (such a config cannot lie on any axis).
+fn raw_values(cfg: &AccelConfig) -> Option<[u64; NUM_AXES]> {
+    let milli = |f: f64| -> Option<u64> {
+        if !f.is_finite() || f < 0.0 {
+            return None;
+        }
+        let m = f * MILLI as f64;
+        (m.fract() == 0.0 && m <= u64::MAX as f64).then_some(m as u64)
+    };
+    Some([
+        cfg.array_dim as u64,
+        milli(cfg.dram.elems_per_cycle)?,
+        milli(cfg.dram.burst_overhead)?,
+        cfg.dram.burst_len as u64,
+        cfg.buf_a_half as u64,
+        cfg.buf_b_half as u64,
+        milli(cfg.reorg_cycles_per_elem)?,
+        cfg.sparse_skip as u64,
+    ])
+}
+
+/// Shortest decimal form of an `f64` (round-trips through `parse`).
+fn fmt_f64(f: f64) -> String {
+    format!("{f}")
+}
+
+/// The compact, reproducible spec of one design point:
+/// `t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>`.
+/// [`parse_point_spec`] decodes it back to the identical
+/// [`AccelConfig`], so any frontier row can be re-simulated exactly.
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::accel::AccelConfig;
+/// use bp_im2col::dse::space::{parse_point_spec, point_spec};
+///
+/// let spec = point_spec(&AccelConfig::default());
+/// assert_eq!(spec, "t16/e16/o8/l64/a32768/b32768/r4/s0");
+/// let cfg = parse_point_spec(&spec).unwrap();
+/// assert_eq!(point_spec(&cfg), spec);
+/// ```
+pub fn point_spec(cfg: &AccelConfig) -> String {
+    format!(
+        "t{}/e{}/o{}/l{}/a{}/b{}/r{}/s{}",
+        cfg.array_dim,
+        fmt_f64(cfg.dram.elems_per_cycle),
+        fmt_f64(cfg.dram.burst_overhead),
+        cfg.dram.burst_len,
+        cfg.buf_a_half,
+        cfg.buf_b_half,
+        fmt_f64(cfg.reorg_cycles_per_elem),
+        cfg.sparse_skip as u8,
+    )
+}
+
+/// Parse a [`point_spec`] string back into its configuration. Strict:
+/// all eight `prefix+value` components, in order.
+pub fn parse_point_spec(spec: &str) -> Result<AccelConfig, String> {
+    let parts: Vec<&str> = spec.split('/').collect();
+    const PREFIXES: [char; NUM_AXES] = ['t', 'e', 'o', 'l', 'a', 'b', 'r', 's'];
+    if parts.len() != NUM_AXES {
+        return Err(format!(
+            "point spec must be t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>, got {spec:?}"
+        ));
+    }
+    let mut vals: [&str; NUM_AXES] = [""; NUM_AXES];
+    for (i, part) in parts.iter().enumerate() {
+        let rest = part.strip_prefix(PREFIXES[i]).ok_or_else(|| {
+            format!("point spec component {part:?} must start with {:?}", PREFIXES[i])
+        })?;
+        vals[i] = rest;
+    }
+    let int = |s: &str| -> Result<usize, String> {
+        s.parse().map_err(|_| format!("bad point spec component {s:?}"))
+    };
+    let float = |s: &str| -> Result<f64, String> {
+        let v: f64 = s.parse().map_err(|_| format!("bad point spec component {s:?}"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("point spec component {s:?} must be finite and non-negative"));
+        }
+        Ok(v)
+    };
+    let sparse = match vals[7] {
+        "0" => false,
+        "1" => true,
+        other => return Err(format!("point spec sparse flag must be 0 or 1, got {other:?}")),
+    };
+    Ok(AccelConfig {
+        array_dim: int(vals[0])?,
+        dram: DramModel {
+            elems_per_cycle: float(vals[1])?,
+            burst_overhead: float(vals[2])?,
+            burst_len: int(vals[3])?,
+        },
+        buf_a_half: int(vals[4])?,
+        buf_b_half: int(vals[5])?,
+        reorg_cycles_per_elem: float(vals[6])?,
+        sparse_skip: sparse,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_range_enumeration() {
+        let a = AxisRange::new(4, 16, 4);
+        assert_eq!(a.count(), 4);
+        assert_eq!((0..4).map(|i| a.value(i)).collect::<Vec<_>>(), vec![4, 8, 12, 16]);
+        assert_eq!(a.index_of(12), Some(2));
+        assert_eq!(a.index_of(13), None);
+        assert_eq!(a.index_of(20), None);
+        let s = AxisRange::single(7);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.index_of(7), Some(0));
+        // Step that does not land on HI stops below it.
+        let odd = AxisRange::new(1, 10, 4);
+        assert_eq!(odd.count(), 3); // 1, 5, 9
+        assert_eq!(odd.value(2), 9);
+    }
+
+    #[test]
+    fn axis_range_validation() {
+        assert!(AxisRange::new(8, 4, 2).validate("x").is_err(), "lo > hi");
+        assert!(AxisRange { lo: 1, hi: 2, step: 0 }.validate("x").is_err(), "step 0 span");
+        assert!(AxisRange::new(0, 10_000, 1).validate("x").is_err(), "too many values");
+        // A hostile full-u64 range must fail validation, not overflow
+        // the count arithmetic.
+        assert!(AxisRange::new(0, u64::MAX, 1).validate("x").is_err(), "full-u64 range");
+        assert_eq!(AxisRange::new(0, u64::MAX, 1).count(), u64::MAX, "saturating count");
+        assert!(AxisRange::new(4, 16, 4).validate("x").is_ok());
+    }
+
+    #[test]
+    fn milli_codec_round_trips() {
+        for (s, m) in [("4", 4000), ("0.5", 500), ("4.5", 4500), ("0.125", 125), ("12.05", 12050)]
+        {
+            assert_eq!(parse_milli(s).unwrap(), m, "{s}");
+            assert_eq!(parse_milli(&fmt_milli(m)).unwrap(), m, "{s}");
+        }
+        assert!(parse_milli("").is_err());
+        assert!(parse_milli(".5").is_err());
+        assert!(parse_milli("4.").is_err());
+        assert!(parse_milli("4.1234").is_err(), "too many digits");
+        assert!(parse_milli("x").is_err());
+    }
+
+    #[test]
+    fn default_space_contains_the_paper_point() {
+        let space = SpaceSpec::default();
+        space.validate().unwrap();
+        assert_eq!(space.grid_size(), 32);
+        let idx = space.indices_of_config(&AccelConfig::default()).expect("on the grid");
+        let cfg = space.config_at(idx);
+        assert_eq!(point_spec(&cfg), point_spec(&AccelConfig::default()));
+    }
+
+    #[test]
+    fn default_axes_match_the_platform_constants() {
+        // The default space pins its fixed axes to the same DRAM
+        // constants the platform default uses — the shared source is
+        // DramModel::with_bandwidth, so neither can drift alone.
+        let space = SpaceSpec::default();
+        let dram = DramModel::with_bandwidth(16.0);
+        assert_eq!(space.burst_overhead.lo as f64 / MILLI as f64, dram.burst_overhead);
+        assert_eq!(space.burst_len.lo as usize, dram.burst_len);
+        assert_eq!(space.elems_per_cycle.hi as f64 / MILLI as f64, dram.elems_per_cycle);
+        let cfg = AccelConfig::default();
+        assert_eq!(space.reorg_cycles_per_elem.lo as f64 / MILLI as f64, cfg.reorg_cycles_per_elem);
+        assert_eq!(space.buf_a_half.lo as usize, cfg.buf_a_half);
+    }
+
+    #[test]
+    fn set_axis_parses_both_forms_and_rejects_junk() {
+        let mut s = SpaceSpec::default();
+        s.set_axis("array_dim", "4:16:4").unwrap();
+        assert_eq!(s.array_dim, AxisRange::new(4, 16, 4));
+        s.set_axis("elems_per_cycle", "0.5:4:0.5").unwrap();
+        assert_eq!(s.elems_per_cycle, AxisRange::new(500, 4000, 500));
+        s.set_axis("sparse_skip", "0:1:1").unwrap();
+        assert_eq!(s.sparse_skip.count(), 2);
+        s.set_axis("burst_len", "32").unwrap();
+        assert_eq!(s.burst_len, AxisRange::single(32));
+        // Single-value spans canonicalize to the bare form, so
+        // `16:16:1`, `8:16:9` and their `V` spellings are one request
+        // (and one response-cache key) each.
+        s.set_axis("array_dim", "16:16:1").unwrap();
+        assert_eq!(s.array_dim, AxisRange::single(16));
+        assert_eq!(s.axis_string(0), "16");
+        s.set_axis("array_dim", "8:16:9").unwrap();
+        assert_eq!(s.array_dim, AxisRange::single(8), "step beyond span means {{LO}}");
+        // Malformed shapes are still rejected, never canonicalized:
+        // descending bounds and zero steps over a span.
+        assert!(s.set_axis("array_dim", "16:8:4").is_err(), "descending bounds");
+        assert!(s.set_axis("array_dim", "8:16:0").is_err(), "zero step over a span");
+        assert!(s.set_axis("nope", "1").is_err(), "unknown axis");
+        assert!(s.set_axis("array_dim", "1:2").is_err(), "two-part range");
+        assert!(s.set_axis("array_dim", "16:8:4").is_err(), "descending");
+        assert!(s.set_axis("array_dim", "1.5").is_err(), "fraction on integer axis");
+        assert!(s.set_axis("burst_len", "x").is_err());
+    }
+
+    #[test]
+    fn axis_strings_round_trip() {
+        let mut s = SpaceSpec::default();
+        s.set_axis("elems_per_cycle", "0.5:4:0.5").unwrap();
+        s.set_axis("burst_overhead", "2.25").unwrap();
+        for (i, name) in AXIS_NAMES.iter().enumerate() {
+            let text = s.axis_string(i);
+            let mut other = SpaceSpec::default();
+            other.set_axis(name, &text).unwrap_or_else(|e| panic!("{name}={text}: {e}"));
+            assert_eq!(other.axes()[i], s.axes()[i], "{name}={text}");
+        }
+        assert!(s.describe().contains("elems_per_cycle=0.5:4:0.5"), "{}", s.describe());
+        assert!(s.describe().contains("burst_overhead=2.25"), "{}", s.describe());
+    }
+
+    #[test]
+    fn space_validation_rejects_bad_domains() {
+        let mut s = SpaceSpec::default();
+        s.set_axis("array_dim", "8:32:8").unwrap();
+        assert!(s.validate().is_err(), "array_dim beyond the u16-mask cap");
+        let mut s = SpaceSpec::default();
+        s.set_axis("sparse_skip", "0:2:1").unwrap();
+        assert!(s.validate().is_err(), "sparse flag beyond 0/1");
+        let mut s = SpaceSpec::default();
+        s.set_axis("elems_per_cycle", "0").unwrap();
+        assert!(s.validate().is_err(), "zero bandwidth");
+        let mut s = SpaceSpec::default();
+        s.set_axis("buf_a_half", "0").unwrap();
+        assert!(s.validate().is_err(), "empty buffer");
+        // Astronomically large axes are rejected up front (the area
+        // model multiplies buffer bytes in usize — the config-layer
+        // MAX_* bounds keep that arithmetic far from overflow).
+        let mut s = SpaceSpec::default();
+        s.set_axis("buf_a_half", &u64::MAX.to_string()).unwrap();
+        assert!(s.validate().is_err(), "oversized buffer axis");
+        let mut s = SpaceSpec::default();
+        s.set_axis("burst_len", "100000000").unwrap();
+        assert!(s.validate().is_err(), "oversized burst axis");
+    }
+
+    #[test]
+    fn rank_decoding_is_mixed_radix_last_axis_fastest() {
+        let mut s = SpaceSpec::default();
+        s.set_axis("sparse_skip", "0:1:1").unwrap();
+        // sparse_skip is the last axis: rank 0 and 1 differ only there.
+        let a = s.indices_of_rank(0);
+        let b = s.indices_of_rank(1);
+        assert_eq!(a[7], 0);
+        assert_eq!(b[7], 1);
+        assert_eq!(a[..7], b[..7]);
+        // Every rank decodes to in-range indices and a unique config.
+        let n = s.grid_size() as u64;
+        let mut specs = std::collections::HashSet::new();
+        for rank in 0..n {
+            let idx = s.indices_of_rank(rank);
+            for (i, axis) in s.axes().iter().enumerate() {
+                assert!(idx[i] < axis.count(), "rank {rank} axis {i}");
+            }
+            assert!(specs.insert(point_spec(&s.config_at(idx))), "rank {rank} duplicated");
+        }
+        assert_eq!(specs.len() as u64, n);
+    }
+
+    #[test]
+    fn point_specs_round_trip() {
+        let mut cfg = AccelConfig::default();
+        cfg.dram.elems_per_cycle = 0.5;
+        cfg.sparse_skip = true;
+        let spec = point_spec(&cfg);
+        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1");
+        let back = parse_point_spec(&spec).unwrap();
+        assert_eq!(point_spec(&back), spec);
+        assert_eq!(back.dram.elems_per_cycle, 0.5);
+        assert!(back.sparse_skip);
+        // Strictness.
+        assert!(parse_point_spec("t16/e16").is_err(), "too short");
+        assert!(parse_point_spec("x16/e16/o8/l64/a1/b1/r4/s0").is_err(), "bad prefix");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s2").is_err(), "bad flag");
+        assert!(parse_point_spec("t16/e-1/o8/l64/a1/b1/r4/s0").is_err(), "negative");
+    }
+
+    #[test]
+    fn off_grid_configs_have_no_indices() {
+        let space = SpaceSpec::default();
+        let mut cfg = AccelConfig::default();
+        cfg.array_dim = 12; // between the 8 and 16 grid lines
+        assert_eq!(space.indices_of_config(&cfg), None);
+        let mut cfg = AccelConfig::default();
+        cfg.dram.elems_per_cycle = 0.0001; // not a thousandth
+        assert_eq!(space.indices_of_config(&cfg), None);
+    }
+}

@@ -46,6 +46,11 @@
 //! * [`area`] — ASAP7-calibrated structural area model (Table IV).
 //! * [`report`] — regenerates the numbers behind every table and figure
 //!   of the paper.
+//! * [`dse`] — design-space exploration over [`accel::AccelConfig`]:
+//!   typed axes, seeded sampling + hill-climb refinement, exact Pareto
+//!   frontiers over runtime/traffic/buffer/storage/area objectives,
+//!   served like any other query (`repro dse`, `POST /v1/query` —
+//!   DESIGN.md §11).
 //! * [`api`] — the public query facade: typed [`api::SimRequest`]s
 //!   served by an [`api::Service`] (shared plan cache, concurrent
 //!   batches, per-request error isolation) into structured
@@ -69,6 +74,7 @@ pub mod api;
 pub mod area;
 pub mod conv;
 pub mod coordinator;
+pub mod dse;
 pub mod im2col;
 pub mod report;
 #[cfg(feature = "pjrt")]

@@ -16,8 +16,8 @@ use std::process::ExitCode;
 
 use bp_im2col::accel::AccelConfig;
 use bp_im2col::api::{
-    render_all_csv, render_all_json, render_all_text, Artifact, FigureRequest, FleetRequest,
-    Service, SimRequest,
+    render_all_csv, render_all_json, render_all_text, Artifact, DseRequest, DseWorkloads,
+    FigureRequest, FleetRequest, Service, SimRequest,
 };
 use bp_im2col::conv::ConvParams;
 #[cfg(feature = "pjrt")]
@@ -45,6 +45,13 @@ COMMANDS:
   traincost             Full training-step cost (fwd+loss+grad) per network
   fleet                 Backward-pass sharding across N simulated
                         accelerators (makespan, efficiency, plan cache)
+  dse                   Design-space exploration: search the AccelConfig
+                        space (array size, bandwidth, burst shape,
+                        buffers, reorg cost, sparse skip) for
+                        Pareto-optimal backprop platforms. Exhaustive
+                        within --budget, seeded sampling + hill-climb
+                        refinement beyond it; rows carry reproducible
+                        point specs (t16/e16/o8/l64/a32768/b32768/r4/s0)
   serve                 Long-running HTTP/1.1 JSON server over the query
                         facade: POST /v1/query, POST /v1/batch,
                         GET /v1/requests, GET /healthz, GET /metrics,
@@ -83,7 +90,22 @@ OPTIONS:
                               for any N, the fleet summary artifact shows
                               the scaling in every output format)
   --steps N                   Training steps (train; default 300)
-  --seed N                    Training seed (train; default 0)
+  --seed N                    Sampling seed (dse; default 0) / training
+                              seed (train; default 0)
+  --budget N                  Max design points to evaluate (dse;
+                              default 64, cap 1024)
+  --axis KEY=RANGE            Override one dse search axis (repeatable).
+                              KEY: array_dim, elems_per_cycle,
+                              burst_overhead, burst_len, buf_a_half,
+                              buf_b_half, reorg_cycles_per_elem,
+                              sparse_skip. RANGE: a single value V or
+                              LO:HI:STEP (elems_per_cycle,
+                              burst_overhead and reorg_cycles_per_elem
+                              accept fractional values), e.g.
+                              --axis elems_per_cycle=0.5:4:0.5
+  --layer SPEC                Layer geometry (sim: required; dse: score
+                              candidates on one layer instead of the
+                              paper networks)
   --addr HOST:PORT            Bind address (serve; default 127.0.0.1:8000,
                               port 0 picks an ephemeral port)
   --threads N                 Connection worker threads (serve; default:
@@ -97,7 +119,7 @@ not itself start with `--`.
 const UNIVERSAL_OPTS: [&str; 4] = ["--config", "--bandwidth", "--csv", "--json"];
 
 /// Options that consume a value (everything else is a bare flag).
-const VALUE_OPTS: [&str; 9] = [
+const VALUE_OPTS: [&str; 11] = [
     "--config",
     "--bandwidth",
     "--pass",
@@ -107,7 +129,13 @@ const VALUE_OPTS: [&str; 9] = [
     "--seed",
     "--addr",
     "--threads",
+    "--budget",
+    "--axis",
 ];
+
+/// Options that may appear more than once (`--axis` stacks one override
+/// per search axis); everything else still rejects duplicates.
+const REPEATABLE_OPTS: [&str; 1] = ["--axis"];
 
 /// One CLI command: its name, the options it accepts beyond the
 /// universal set, and whether the universal query options (config /
@@ -126,7 +154,7 @@ struct CommandSpec {
 /// Options shared by the figure commands (and `all`, which runs them).
 const FIG_OPTS: &[&str] = &["--pass", "--extended", "--devices"];
 
-const COMMANDS: [CommandSpec; 14] = [
+const COMMANDS: [CommandSpec; 15] = [
     CommandSpec { name: "table2", extra_opts: &[], universal: true },
     CommandSpec { name: "table3", extra_opts: &[], universal: true },
     CommandSpec { name: "table4", extra_opts: &[], universal: true },
@@ -138,6 +166,11 @@ const COMMANDS: [CommandSpec; 14] = [
     CommandSpec { name: "sim", extra_opts: &["--layer"], universal: true },
     CommandSpec { name: "traincost", extra_opts: &["--devices"], universal: true },
     CommandSpec { name: "fleet", extra_opts: &["--devices", "--extended"], universal: true },
+    CommandSpec {
+        name: "dse",
+        extra_opts: &["--budget", "--seed", "--axis", "--extended", "--layer", "--devices"],
+        universal: true,
+    },
     // `serve` is an action, not a one-shot query: it renders nothing, so
     // `--csv`/`--json` are rejected like `train`'s — but it *does*
     // simulate under a platform config, so `--config`/`--bandwidth`
@@ -182,9 +215,10 @@ impl Opts {
                     allowed.join(", ")
                 ));
             }
+            let repeatable = REPEATABLE_OPTS.contains(&arg.as_str());
             let seen =
                 flags.iter().any(|f| f == arg) || values.iter().any(|(k, _)| k == arg);
-            if seen {
+            if seen && !repeatable {
                 return Err(format!("duplicate option {arg:?}"));
             }
             if VALUE_OPTS.contains(&arg.as_str()) {
@@ -208,6 +242,11 @@ impl Opts {
 
     fn value(&self, key: &str) -> Option<&str> {
         self.values.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Every value of a repeatable option, in argv order.
+    fn values_all(&self, key: &str) -> Vec<&str> {
+        self.values.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
     }
 
     fn flag(&self, key: &str) -> bool {
@@ -313,6 +352,42 @@ fn build_requests(cmd: &str, opts: &Opts) -> Result<Vec<SimRequest>, String> {
         "fleet" => {
             let n = devices(opts)?.unwrap_or(4);
             vec![FleetRequest::new(n).extended(extended).into()]
+        }
+        "dse" => {
+            let mut req = DseRequest::new().extended(extended);
+            if let Some(v) = opts.value("--budget") {
+                req.budget = v.parse().map_err(|_| format!("bad --budget {v:?}"))?;
+            }
+            if let Some(v) = opts.value("--seed") {
+                req.seed = v.parse().map_err(|_| format!("bad --seed {v:?}"))?;
+            }
+            if let Some(spec) = opts.value("--layer") {
+                if extended {
+                    return Err("--extended and --layer are mutually exclusive for dse".into());
+                }
+                req.workloads = DseWorkloads::Layer(ConvParams::parse_spec(spec)?);
+            }
+            if let Some(n) = devices(opts)? {
+                req.devices = Some(n);
+            }
+            let mut axis_keys: Vec<&str> = Vec::new();
+            for axis in opts.values_all("--axis") {
+                let (key, range) = axis.split_once('=').ok_or_else(|| {
+                    format!("--axis needs KEY=RANGE (e.g. array_dim=8:16:8), got {axis:?}")
+                })?;
+                // Last-wins would silently drop the earlier override —
+                // the same footgun the config-file parser rejects.
+                if axis_keys.contains(&key) {
+                    return Err(format!("duplicate --axis key {key:?}"));
+                }
+                axis_keys.push(key);
+                req.space.set_axis(key, range)?;
+            }
+            let req: SimRequest = req.into();
+            // Surface budget/seed/space errors here, with the CLI's
+            // clean error prefix, instead of panicking inside the model.
+            req.validate()?;
+            vec![req]
         }
         "all" => {
             let mut reqs = vec![SimRequest::Table2, SimRequest::Table3, SimRequest::Table4];
@@ -476,6 +551,55 @@ mod tests {
         let reqs = build_requests("all", &parsed("all", &[])).unwrap();
         assert!(!reqs.iter().any(|r| matches!(r, SimRequest::Fleet(_))));
         assert_eq!(reqs.len(), 7);
+    }
+
+    #[test]
+    fn dse_accepts_repeated_axis_overrides() {
+        let opts = parsed(
+            "dse",
+            &[
+                "--budget",
+                "32",
+                "--seed",
+                "7",
+                "--axis",
+                "array_dim=4:16:4",
+                "--axis",
+                "sparse_skip=0:1:1",
+            ],
+        );
+        let reqs = build_requests("dse", &opts).unwrap();
+        let [SimRequest::Dse(d)] = reqs.as_slice() else { panic!("{reqs:?}") };
+        assert_eq!((d.budget, d.seed), (32, 7));
+        assert_eq!(d.space.axis_string(0), "4:16:4");
+        assert_eq!(d.space.axis_string(7), "0:1:1");
+    }
+
+    #[test]
+    fn dse_rejects_malformed_options() {
+        let spec = COMMANDS.iter().find(|c| c.name == "dse").unwrap();
+        // Only --axis may repeat.
+        let dup: Vec<String> =
+            ["--budget", "8", "--budget", "9"].iter().map(|s| s.to_string()).collect();
+        assert!(Opts::parse(&dup, spec).is_err(), "duplicate --budget");
+        let axes: Vec<String> = ["--axis", "array_dim=8", "--axis", "burst_len=32"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(Opts::parse(&axes, spec).is_ok(), "repeated --axis");
+        // KEY=RANGE shape, workload conflicts, range errors.
+        let opts = parsed("dse", &["--axis", "array_dim"]);
+        assert!(build_requests("dse", &opts).unwrap_err().contains("KEY=RANGE"));
+        let opts = parsed("dse", &["--extended", "--layer", "56/128/128/3/2/1"]);
+        assert!(build_requests("dse", &opts).unwrap_err().contains("mutually exclusive"));
+        let opts = parsed("dse", &["--budget", "0"]);
+        assert!(build_requests("dse", &opts).unwrap_err().contains("budget"));
+        let opts = parsed("dse", &["--axis", "array_dim=8:32:8"]);
+        assert!(build_requests("dse", &opts).unwrap_err().contains("array_dim"));
+        // Repeating the same axis KEY is an error (distinct keys repeat
+        // fine) — last-wins would silently drop the first override.
+        let opts = parsed("dse", &["--axis", "array_dim=8", "--axis", "array_dim=16"]);
+        assert!(build_requests("dse", &opts).unwrap_err().contains("duplicate --axis"));
     }
 
     #[test]

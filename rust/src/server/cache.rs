@@ -11,8 +11,17 @@
 //! Only successful responses are cached (errors are cheap to recompute
 //! and should not be pinned), and the whole body is behind one `Arc` so
 //! a hit is a pointer clone.
+//!
+//! The table is bounded by **second-chance eviction** (FIFO of keys
+//! plus a referenced bit set on every hit): at
+//! [`ArtifactCache::MAX_ENTRIES`] the oldest unreferenced entry is
+//! evicted to make room, so a long-running server keeps caching fresh
+//! traffic while hot entries survive. The seed instead *stopped caching
+//! forever* once the table filled — a DSE sweep minting thousands of
+//! distinct requests would have permanently pinned the table with its
+//! one-off points and disabled caching for every later client.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::api::SimRequest;
@@ -26,9 +35,20 @@ pub struct ArtifactCacheStats {
     pub misses: u64,
     /// Distinct rendered responses stored.
     pub entries: usize,
+    /// Entries evicted to make room (second-chance victims).
+    pub evictions: u64,
 }
 
-/// Memo table of rendered JSON responses, keyed by request.
+/// One cached body plus its second-chance bit.
+struct Entry {
+    body: Arc<String>,
+    /// Set on every hit, cleared when the clock hand passes — an entry
+    /// is evicted only after going un-hit for one full queue rotation.
+    referenced: bool,
+}
+
+/// Memo table of rendered JSON responses, keyed by request, with
+/// second-chance eviction at the size bound.
 #[derive(Default)]
 pub struct ArtifactCache {
     inner: Mutex<CacheInner>,
@@ -36,17 +56,20 @@ pub struct ArtifactCache {
 
 #[derive(Default)]
 struct CacheInner {
-    rendered: HashMap<SimRequest, Arc<String>>,
+    rendered: HashMap<SimRequest, Entry>,
+    /// FIFO of keys, oldest first (exactly the map's keys, once each).
+    queue: VecDeque<SimRequest>,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl ArtifactCache {
-    /// Hard bound on cached responses. A hostile client can mint
-    /// unlimited *distinct* requests (the layer-spec space is huge), so
-    /// the table must not grow with attacker-controlled cardinality:
-    /// past the bound, [`ArtifactCache::insert`] stops storing and the
-    /// server simply serves uncached.
+    /// Bound on cached responses. A hostile client can mint unlimited
+    /// *distinct* requests (the layer-spec space is huge), so the table
+    /// must not grow with attacker-controlled cardinality; at the bound
+    /// the second-chance scan recycles the oldest cold entry instead of
+    /// giving up on caching.
     pub const MAX_ENTRIES: usize = 4096;
 
     /// Empty cache.
@@ -61,31 +84,47 @@ impl ArtifactCache {
     /// work bounded by one render, accepted to keep error responses out
     /// of the table.
     pub fn get(&self, req: &SimRequest) -> Option<Arc<String>> {
-        let mut inner = self.inner.lock().expect("artifact cache poisoned");
-        match inner.rendered.get(req) {
-            Some(body) => {
-                let body = Arc::clone(body);
-                inner.hits += 1;
-                Some(body)
-            }
-            None => {
-                inner.misses += 1;
-                None
-            }
+        let mut guard = self.inner.lock().expect("artifact cache poisoned");
+        let inner = &mut *guard;
+        let found = inner.rendered.get_mut(req).map(|entry| {
+            entry.referenced = true;
+            Arc::clone(&entry.body)
+        });
+        match &found {
+            Some(_) => inner.hits += 1,
+            None => inner.misses += 1,
         }
+        found
     }
 
     /// Store the rendered body of a successful request. Keeps the
     /// existing entry when one raced in first (so callers can use the
-    /// returned `Arc` either way), and stores nothing once
-    /// [`ArtifactCache::MAX_ENTRIES`] distinct responses are pinned —
-    /// the returned body still serves this response.
+    /// returned `Arc` either way); at [`ArtifactCache::MAX_ENTRIES`]
+    /// the second-chance scan evicts the oldest entry whose referenced
+    /// bit is clear (clearing bits as it passes), then stores — the
+    /// scan terminates within one queue rotation because a pass leaves
+    /// every bit clear.
     pub fn insert(&self, req: SimRequest, body: String) -> Arc<String> {
-        let mut inner = self.inner.lock().expect("artifact cache poisoned");
-        if inner.rendered.len() >= Self::MAX_ENTRIES && !inner.rendered.contains_key(&req) {
-            return Arc::new(body);
+        let mut guard = self.inner.lock().expect("artifact cache poisoned");
+        let inner = &mut *guard;
+        if let Some(existing) = inner.rendered.get(&req) {
+            return Arc::clone(&existing.body);
         }
-        Arc::clone(inner.rendered.entry(req).or_insert_with(|| Arc::new(body)))
+        while inner.rendered.len() >= Self::MAX_ENTRIES {
+            let victim = inner.queue.pop_front().expect("queue tracks every entry");
+            let entry = inner.rendered.get_mut(&victim).expect("queued key is cached");
+            if entry.referenced {
+                entry.referenced = false;
+                inner.queue.push_back(victim);
+            } else {
+                inner.rendered.remove(&victim);
+                inner.evictions += 1;
+            }
+        }
+        let body = Arc::new(body);
+        inner.rendered.insert(req, Entry { body: Arc::clone(&body), referenced: false });
+        inner.queue.push_back(req);
+        body
     }
 
     /// Current counters as one consistent snapshot.
@@ -95,6 +134,7 @@ impl ArtifactCache {
             hits: inner.hits,
             misses: inner.misses,
             entries: inner.rendered.len(),
+            evictions: inner.evictions,
         }
     }
 }
@@ -102,6 +142,14 @@ impl ArtifactCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvParams;
+
+    /// A family of distinct requests (one per batch size).
+    fn layer_req(i: usize) -> SimRequest {
+        let mut p = ConvParams::square(56, 64, 64, 3, 2, 1);
+        p.b = i + 1;
+        SimRequest::layer(p)
+    }
 
     #[test]
     fn miss_then_insert_then_hit() {
@@ -112,7 +160,7 @@ mod tests {
         let body = cache.get(&req).expect("cached");
         assert_eq!(*body, "{\"artifacts\":[]}");
         let st = cache.stats();
-        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert_eq!((st.hits, st.misses, st.entries, st.evictions), (1, 1, 1, 0));
     }
 
     #[test]
@@ -135,5 +183,48 @@ mod tests {
         cache.insert(SimRequest::fleet(4), "f4".to_string());
         assert_eq!(cache.stats().entries, 4);
         assert_eq!(*cache.get(&SimRequest::fleet(4)).unwrap(), "f4");
+    }
+
+    #[test]
+    fn full_table_keeps_caching_by_evicting_the_oldest_cold_entry() {
+        let cache = ArtifactCache::new();
+        for i in 0..ArtifactCache::MAX_ENTRIES {
+            cache.insert(layer_req(i), format!("body{i}"));
+        }
+        let st = cache.stats();
+        assert_eq!((st.entries, st.evictions), (ArtifactCache::MAX_ENTRIES, 0));
+        // The table is full; the next distinct insert still lands, by
+        // evicting entry 0 (oldest, never referenced since insertion).
+        let fresh = layer_req(ArtifactCache::MAX_ENTRIES);
+        cache.insert(fresh, "fresh".to_string());
+        let st = cache.stats();
+        assert_eq!((st.entries, st.evictions), (ArtifactCache::MAX_ENTRIES, 1));
+        assert_eq!(*cache.get(&fresh).unwrap(), "fresh");
+        assert!(cache.get(&layer_req(0)).is_none(), "oldest entry was the victim");
+        assert!(cache.get(&layer_req(1)).is_some(), "second-oldest survives");
+    }
+
+    #[test]
+    fn referenced_entries_get_a_second_chance() {
+        let cache = ArtifactCache::new();
+        for i in 0..ArtifactCache::MAX_ENTRIES {
+            cache.insert(layer_req(i), format!("body{i}"));
+        }
+        // Touch the oldest entry: its referenced bit now protects it
+        // for one rotation, so the *next*-oldest is evicted instead.
+        assert!(cache.get(&layer_req(0)).is_some());
+        cache.insert(layer_req(ArtifactCache::MAX_ENTRIES), "fresh".to_string());
+        assert!(cache.get(&layer_req(0)).is_some(), "hot entry survived");
+        assert!(cache.get(&layer_req(1)).is_none(), "cold runner-up evicted");
+        assert_eq!(cache.stats().evictions, 1);
+        // The get above re-marked entry 0, which buys it one more full
+        // rotation (the hand clears the bit on its first pass and only
+        // evicts on the second). With no further hits, two rotations of
+        // insert pressure retire it.
+        for i in 1..=2 * ArtifactCache::MAX_ENTRIES {
+            cache.insert(layer_req(ArtifactCache::MAX_ENTRIES + i), format!("n{i}"));
+        }
+        assert!(cache.get(&layer_req(0)).is_none(), "unreferenced entries retire");
+        assert_eq!(cache.stats().entries, ArtifactCache::MAX_ENTRIES);
     }
 }

@@ -166,6 +166,11 @@ impl ServerMetrics {
                 "Rendered-response cache lookups that found nothing.",
                 artifacts.misses,
             ),
+            (
+                "bp_artifact_cache_evictions_total",
+                "Rendered responses evicted to admit fresh requests (second chance).",
+                artifacts.evictions,
+            ),
         ];
         for (name, help, value) in counters {
             writeln!(out, "# HELP {name} {help}").unwrap();
@@ -222,13 +227,14 @@ mod tests {
     fn renders_cache_counters() {
         let m = ServerMetrics::new();
         let plan = PlanCacheStats { hits: 7, misses: 3, entries: 3 };
-        let art = ArtifactCacheStats { hits: 2, misses: 1, entries: 1 };
+        let art = ArtifactCacheStats { hits: 2, misses: 1, entries: 1, evictions: 5 };
         let text = m.render(&plan, &art);
         assert!(text.contains("bp_plan_cache_hits_total 7"));
         assert!(text.contains("bp_plan_cache_misses_total 3"));
         assert!(text.contains("bp_plan_cache_entries 3"));
         assert!(text.contains("bp_artifact_cache_hits_total 2"));
         assert!(text.contains("bp_artifact_cache_misses_total 1"));
+        assert!(text.contains("bp_artifact_cache_evictions_total 5"));
         assert!(text.contains("bp_artifact_cache_entries 1"));
     }
 }

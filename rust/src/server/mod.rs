@@ -268,15 +268,21 @@ fn handle_query(body: &[u8], state: &Arc<ServerState>) -> Response {
 }
 
 /// Serve one validated request through the artifact cache.
+///
+/// Caching keys by [`SimRequest::cache_key`], which normalizes
+/// evaluation-environmental knobs away (a DSE sweep's `devices` thread
+/// count changes no byte of the response), so repeats hit regardless
+/// of how the client parallelized the first run.
 fn serve_cached(
     req: SimRequest,
     state: &Arc<ServerState>,
 ) -> Result<Arc<String>, crate::api::RequestError> {
-    if let Some(rendered) = state.artifacts.get(&req) {
+    let key = req.cache_key();
+    if let Some(rendered) = state.artifacts.get(&key) {
         return Ok(rendered);
     }
     let artifacts = state.service.try_run(&req)?;
-    Ok(state.artifacts.insert(req, render_all_json(&artifacts)))
+    Ok(state.artifacts.insert(key, render_all_json(&artifacts)))
 }
 
 /// `POST /v1/batch`: decode `{"requests":[...]}`, serve the decodable
@@ -307,16 +313,24 @@ fn handle_batch(body: &[u8], state: &Arc<ServerState>) -> Response {
     // Artifact-cache pass, then one concurrent run_batch over the
     // *distinct* misses — N copies of the same request in one batch run
     // the model once and fan the result back out to every copy's slot.
+    // Distinctness is by [`SimRequest::cache_key`], so items differing
+    // only in evaluation-environmental knobs (a DSE `devices` value)
+    // also collapse to one run.
     let mut miss_reqs: Vec<SimRequest> = Vec::new();
     let mut miss_of: std::collections::HashMap<SimRequest, usize> = std::collections::HashMap::new();
     let mut pending: Vec<(usize, usize)> = Vec::new(); // (slot, miss index)
     for (i, item) in decoded.iter().enumerate() {
         if let Ok(req) = item {
-            if let Some(rendered) = state.artifacts.get(req) {
+            let key = req.cache_key();
+            if let Some(rendered) = state.artifacts.get(&key) {
                 slots[i] = Ok(rendered);
                 continue;
             }
-            let mi = *miss_of.entry(*req).or_insert_with(|| {
+            // Execute the *original* request (the first one to miss for
+            // this key), so a DSE item's devices lowering is honored
+            // during evaluation — same contract as /v1/query — while
+            // the response is cached under the normalized key.
+            let mi = *miss_of.entry(key).or_insert_with(|| {
                 miss_reqs.push(*req);
                 miss_reqs.len() - 1
             });
@@ -328,7 +342,9 @@ fn handle_batch(body: &[u8], state: &Arc<ServerState>) -> Response {
         .iter()
         .zip(results)
         .map(|(req, result)| match result {
-            Ok(artifacts) => Ok(state.artifacts.insert(*req, render_all_json(&artifacts))),
+            Ok(artifacts) => {
+                Ok(state.artifacts.insert(req.cache_key(), render_all_json(&artifacts)))
+            }
             Err(err) => Err(err.to_string()),
         })
         .collect();
@@ -439,6 +455,20 @@ mod tests {
         assert_eq!(stats.lookups(), 8, "batch once + comparison run: {stats:?}");
         assert_eq!(body_str(&resp), format!("{{\"results\":[{doc},{doc},{doc}]}}"));
         assert_eq!(st.artifacts.stats().entries, 1);
+    }
+
+    #[test]
+    fn dse_queries_cache_across_devices_values() {
+        // `devices` is evaluation parallelism, not semantics: the same
+        // sweep at a different thread count must be a cache hit, not a
+        // recomputation (and not a second cache entry).
+        let st = state();
+        let a = handle_query(b"{\"kind\":\"dse\",\"budget\":4,\"seed\":7,\"devices\":2}", &st);
+        assert_eq!(a.status, 200);
+        let b = handle_query(b"{\"kind\":\"dse\",\"budget\":4,\"seed\":7,\"devices\":1}", &st);
+        assert_eq!(body_str(&b), body_str(&a));
+        let cache = st.artifacts.stats();
+        assert_eq!((cache.hits, cache.misses, cache.entries), (1, 1, 1));
     }
 
     #[test]

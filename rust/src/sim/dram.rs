@@ -28,6 +28,26 @@ impl Default for DramModel {
 }
 
 impl DramModel {
+    /// The default burst shape (8-cycle setup, 64-element rows) at a
+    /// caller-chosen sustained rate — the single home of those burst
+    /// constants. [`crate::accel::AccelConfig::default`],
+    /// [`crate::accel::AccelConfig::bandwidth_limited`] and the DSE
+    /// axis defaults ([`crate::dse::space::SpaceSpec`]) all construct
+    /// through here, so the shared constants cannot drift apart.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use bp_im2col::sim::dram::DramModel;
+    ///
+    /// let d = DramModel::with_bandwidth(16.0);
+    /// assert_eq!(d.elems_per_cycle, 16.0);
+    /// assert_eq!((d.burst_overhead, d.burst_len), (DramModel::default().burst_overhead, DramModel::default().burst_len));
+    /// ```
+    pub fn with_bandwidth(elems_per_cycle: f64) -> Self {
+        Self { elems_per_cycle, ..Self::default() }
+    }
+
     /// Cycles to move `elems` contiguous elements.
     pub fn transfer_cycles(&self, elems: usize) -> f64 {
         if elems == 0 {

@@ -1,0 +1,216 @@
+//! Design-space exploration acceptance suite (ISSUE 5):
+//!
+//! 1. The frontier is the exact non-dominated set — property-checked
+//!    against a direct O(n²) oracle, over real search results and over
+//!    seeded random score sets.
+//! 2. Artifacts are **byte-identical** across 1/4/8 evaluation threads,
+//!    across cold and warm plan caches, and across the CLI (`repro dse
+//!    --json`) and HTTP (`POST /v1/query`) for the same seed/budget.
+//! 3. The paper's default `AccelConfig` point is a frontier member of
+//!    the default `--budget 64 --seed 7` search.
+//! 4. The request codec round-trips every DSE shape, axes included.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::process::Command;
+use std::sync::Arc;
+use std::thread;
+
+use bp_im2col::accel::plan::PlanCache;
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{render_all_json, DseRequest, Service, SimRequest};
+use bp_im2col::dse::objective::{dominates, pareto_ranks, NUM_OBJECTIVES};
+use bp_im2col::dse::search;
+use bp_im2col::dse::space::{parse_point_spec, point_spec};
+use bp_im2col::server::Server;
+use bp_im2col::tensor::Rng;
+use bp_im2col::ConvParams;
+
+/// Direct O(n²) oracle: the non-dominated set is exactly the points no
+/// other point dominates.
+fn oracle_frontier(scores: &[[f64; NUM_OBJECTIVES]]) -> Vec<bool> {
+    scores
+        .iter()
+        .map(|s| !scores.iter().any(|o| dominates(o, s)))
+        .collect()
+}
+
+#[test]
+fn frontier_is_non_dominated_against_the_oracle_on_real_results() {
+    let req = DseRequest::new().budget(64).seed(7).devices(4);
+    let result = search::run(&req, &AccelConfig::default(), &Arc::new(PlanCache::new()));
+    let scores: Vec<[f64; NUM_OBJECTIVES]> =
+        result.points.iter().map(|p| p.obj.as_array()).collect();
+    let oracle = oracle_frontier(&scores);
+    for (p, on_frontier) in result.points.iter().zip(&oracle) {
+        assert_eq!(p.rank == 0, *on_frontier, "point {} ({})", p.id, p.spec);
+    }
+    assert!(oracle.iter().any(|f| *f), "a finite set always has a frontier");
+}
+
+#[test]
+fn pareto_ranks_match_the_oracle_on_seeded_random_scores() {
+    let mut rng = Rng::new(1234);
+    for round in 0..20 {
+        let n = 1 + (rng.below(60));
+        let scores: Vec<[f64; NUM_OBJECTIVES]> = (0..n)
+            .map(|_| {
+                // Coarse grid values force plenty of ties and exact
+                // dominance chains.
+                let mut s = [0.0; NUM_OBJECTIVES];
+                for v in &mut s {
+                    *v = rng.below(4) as f64;
+                }
+                s
+            })
+            .collect();
+        let ranks = pareto_ranks(&scores);
+        let oracle = oracle_frontier(&scores);
+        for i in 0..n {
+            assert_eq!(ranks[i] == 0, oracle[i], "round {round} point {i}: {:?}", scores[i]);
+        }
+        // Rank peeling property: removing rank-0 points, the rank-1
+        // points become the oracle frontier of the remainder.
+        let rest: Vec<[f64; NUM_OBJECTIVES]> = (0..n)
+            .filter(|&i| ranks[i] > 0)
+            .map(|i| scores[i])
+            .collect();
+        let rest_oracle = oracle_frontier(&rest);
+        let rest_ranks: Vec<usize> = (0..n).filter(|&i| ranks[i] > 0).map(|i| ranks[i]).collect();
+        for (r, on_front) in rest_ranks.iter().zip(&rest_oracle) {
+            assert_eq!(*r == 1, *on_front, "round {round}");
+        }
+    }
+}
+
+#[test]
+fn paper_default_point_is_on_the_default_frontier() {
+    // Acceptance: `repro dse --budget 64 --seed 7` keeps the paper's
+    // platform (the baseline, candidate 0) in the non-dominated set.
+    let svc = Service::new(AccelConfig::default());
+    let req: SimRequest = DseRequest::new().budget(64).seed(7).into();
+    let artifact = &svc.run(&req)[0];
+    let spec_col = artifact.col("spec").expect("spec column");
+    let origin_col = artifact.col("origin").expect("origin column");
+    let default_spec = point_spec(&AccelConfig::default());
+    let baseline_row = artifact
+        .rows
+        .iter()
+        .find(|r| r[origin_col].as_text() == Some("baseline"))
+        .expect("baseline row present");
+    assert_eq!(baseline_row[spec_col].as_text(), Some(default_spec.as_str()));
+    let rank_col = artifact.col("rank").expect("rank column");
+    assert_eq!(
+        baseline_row[rank_col].as_f64(),
+        Some(0.0),
+        "the paper's design point must be non-dominated under the default space"
+    );
+    // And its spec round-trips to the exact default config.
+    assert_eq!(point_spec(&parse_point_spec(&default_spec).unwrap()), default_spec);
+}
+
+#[test]
+fn artifacts_byte_identical_across_1_4_8_threads() {
+    let reference = {
+        let svc = Service::new(AccelConfig::default());
+        render_all_json(&svc.run(&DseRequest::new().budget(32).seed(7).devices(1).into()))
+    };
+    for devices in [4, 8] {
+        let svc = Service::new(AccelConfig::default());
+        let req: SimRequest = DseRequest::new().budget(32).seed(7).devices(devices).into();
+        let got = render_all_json(&svc.run(&req));
+        assert_eq!(got, reference, "devices {devices}");
+        // Warm replay through the same service: still identical bytes.
+        assert_eq!(render_all_json(&svc.run(&req)), reference, "warm devices {devices}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI vs HTTP byte identity
+// ---------------------------------------------------------------------------
+
+/// Minimal HTTP client: one POST, read to EOF (Connection: close).
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read");
+    let text = String::from_utf8(raw).expect("utf-8 response");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn cli_and_http_query_serve_identical_bytes() {
+    // CLI: the `repro dse --json` document for budget 16, seed 7.
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["dse", "--budget", "16", "--seed", "7", "--json"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let cli = String::from_utf8(out.stdout).expect("utf-8 stdout");
+
+    // HTTP: the same request through POST /v1/query.
+    let server = Server::bind(AccelConfig::default(), "127.0.0.1:0", 2).expect("bind");
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.serve().expect("serve"));
+    let (status, http) =
+        http_post(addr, "/v1/query", "{\"kind\":\"dse\",\"budget\":16,\"seed\":7}");
+    assert_eq!(status, 200, "{http}");
+    // Repeat comes from the artifact cache: byte-identical again.
+    let (_, http2) = http_post(addr, "/v1/query", "{\"kind\":\"dse\",\"budget\":16,\"seed\":7}");
+    assert_eq!(http2, http);
+    let (_, _) = http_post(addr, "/v1/shutdown", "{}");
+    handle.join().expect("clean shutdown");
+
+    // The CLI prints the same JSON document plus a trailing newline.
+    assert_eq!(cli, format!("{http}\n"));
+}
+
+// ---------------------------------------------------------------------------
+// Codec + spec round trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dse_codec_round_trips_axes_workloads_and_options() {
+    let mut spaced = DseRequest::new().budget(128).seed(9);
+    spaced.space.set_axis("array_dim", "4:16:4").unwrap();
+    spaced.space.set_axis("elems_per_cycle", "0.5:4:0.5").unwrap();
+    spaced.space.set_axis("sparse_skip", "0:1:1").unwrap();
+    let catalog: Vec<SimRequest> = vec![
+        DseRequest::new().into(),
+        DseRequest::new().budget(256).seed(11).extended(true).into(),
+        DseRequest::new().layer(ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)).into(),
+        DseRequest::new().devices(8).into(),
+        spaced.into(),
+    ];
+    for req in catalog {
+        let encoded = req.to_json();
+        let decoded = SimRequest::from_json(&encoded).unwrap_or_else(|e| panic!("{encoded}: {e}"));
+        assert_eq!(decoded, req, "{encoded}");
+        assert!(req.validate().is_ok(), "{encoded}");
+    }
+}
+
+#[test]
+fn every_artifact_row_spec_reproduces_its_config() {
+    let svc = Service::new(AccelConfig::default());
+    let artifact = &svc.run(&DseRequest::new().budget(16).seed(7).into())[0];
+    let spec_col = artifact.col("spec").unwrap();
+    assert!(!artifact.rows.is_empty());
+    for row in &artifact.rows {
+        let spec = row[spec_col].as_text().expect("spec is text");
+        let cfg = parse_point_spec(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert_eq!(point_spec(&cfg), spec, "row spec must round-trip");
+    }
+}
