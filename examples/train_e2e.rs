@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== loss curve (every 10th step) ==");
     for (i, chunk) in stats.losses.chunks(10).enumerate() {
+        // lint: allow(float-accumulation) — chunk is a contiguous slice; fold order is fixed
         let mean = chunk.iter().sum::<f32>() / chunk.len() as f32;
         let bar = "#".repeat((mean * 20.0).min(60.0) as usize);
         println!("  steps {:>4}-{:<4} mean loss {:.4} |{}", i * 10, i * 10 + chunk.len() - 1, mean, bar);

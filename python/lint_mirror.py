@@ -1,0 +1,1095 @@
+#!/usr/bin/env python3
+"""Validation mirror of the Rust `repro lint` analyzer.
+
+A line-for-line port of rust/src/lint/{lexer,tree,engine,rules}, used to
+predict the analyzer's findings on the real tree in environments without
+a Rust toolchain (the Rust implementation is the source of truth; CI
+runs that one). Run from the repo root:
+
+    python3 python/lint_mirror.py            # findings after allows
+    python3 python/lint_mirror.py --pre      # findings before allows
+"""
+
+import os
+import sys
+
+# ---- lexer ---------------------------------------------------------------
+
+PUNCTS = [
+    "..=", "<<=", ">>=", "::", "->", "=>", "..", "+=", "-=", "*=", "/=", "%=", "^=", "&=",
+    "|=", "==", "!=", "<=", ">=", "&&", "||", "<<",
+]
+
+IDENT, LIFETIME, CHAR, BYTE, STR, BYTESTR, INT, FLOAT, PUNCT = range(9)
+
+
+class LexError(Exception):
+    def __init__(self, line, msg):
+        super().__init__(f"{line}: {msg}")
+        self.line = line
+        self.msg = msg
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind, self.text, self.line = kind, text, line
+
+
+def lex(src):
+    chars = list(src)
+    n = len(chars)
+    pos = 0
+    line = 1
+    tokens = []
+    comments = []
+    line_has_tokens = False
+
+    def peek(ahead=0):
+        i = pos + ahead
+        return chars[i] if i < n else None
+
+    def push(kind, text, tline):
+        nonlocal line_has_tokens
+        tokens.append(Tok(kind, text, tline))
+        line_has_tokens = True
+
+    def bump():
+        nonlocal pos, line, line_has_tokens
+        if pos >= n:
+            return None
+        c = chars[pos]
+        pos += 1
+        if c == "\n":
+            line += 1
+            line_has_tokens = False
+        return c
+
+    while pos < n:
+        c = chars[pos]
+        if c.isspace():
+            bump()
+        elif c == "/" and peek(1) == "/":
+            cline, own = line, not line_has_tokens
+            bump(); bump()
+            text = []
+            while peek(0) is not None and peek(0) != "\n":
+                text.append(bump())
+            comments.append((cline, "".join(text), own))
+        elif c == "/" and peek(1) == "*":
+            start = line
+            bump(); bump()
+            depth = 1
+            while depth > 0:
+                a, b = peek(0), peek(1)
+                if a == "/" and b == "*":
+                    depth += 1
+                    bump(); bump()
+                elif a == "*" and b == "/":
+                    depth -= 1
+                    bump(); bump()
+                elif a is not None:
+                    bump()
+                else:
+                    raise LexError(start, "unterminated block comment")
+        elif c == "r" and peek(1) in ('"', "#"):
+            pos, line = _raw_or_ident(chars, n, pos, line, push, False)
+            line_has_tokens = True
+        elif c == "b" and peek(1) == "'":
+            tline = line
+            bump(); bump()
+            text = []
+            while True:
+                e = bump()
+                if e == "\\":
+                    text.append("\\")
+                    f = bump()
+                    if f is not None:
+                        text.append(f)
+                elif e == "'":
+                    break
+                elif e is None:
+                    raise LexError(tline, "unterminated byte literal")
+                else:
+                    text.append(e)
+            push(BYTE, "".join(text), tline)
+        elif c == "b" and peek(1) == '"':
+            bump()
+            _plain_string(bump, push, BYTESTR, line)
+        elif c == "b" and peek(1) == "r" and peek(2) in ('"', "#"):
+            bump()
+            pos, line = _raw_or_ident(chars, n, pos, line, push, True)
+            line_has_tokens = True
+        elif c == "'":
+            c1, c2 = peek(1), peek(2)
+            ident_start = c1 is not None and (c1.isalpha() or c1 == "_")
+            if ident_start and c2 != "'":
+                tline = line
+                bump()
+                text = []
+                while peek(0) is not None and (peek(0).isalnum() or peek(0) == "_"):
+                    text.append(bump())
+                push(LIFETIME, "".join(text), tline)
+            else:
+                tline = line
+                bump()
+                text = []
+                while True:
+                    e = bump()
+                    if e == "\\":
+                        text.append("\\")
+                        f = bump()
+                        if f is not None:
+                            text.append(f)
+                    elif e == "'":
+                        break
+                    elif e is None:
+                        raise LexError(tline, "unterminated char literal")
+                    else:
+                        text.append(e)
+                push(CHAR, "".join(text), tline)
+        elif c == '"':
+            _plain_string(bump, push, STR, line)
+        elif c.isdigit():
+            tline = line
+            text = []
+            kind = INT
+            if peek(0) == "0" and peek(1) in ("x", "o", "b"):
+                text.append(bump())
+                text.append(bump())
+                while peek(0) is not None and (peek(0) in "0123456789abcdefABCDEF_"):
+                    text.append(bump())
+            else:
+                while peek(0) is not None and (peek(0).isdigit() or peek(0) == "_"):
+                    text.append(bump())
+                if peek(0) == ".":
+                    after = peek(1)
+                    if after is not None and after.isdigit():
+                        is_float = True
+                    elif after == ".":
+                        is_float = False
+                    elif after is not None and (after.isalpha() or after == "_"):
+                        is_float = False
+                    else:
+                        is_float = True
+                    if is_float:
+                        kind = FLOAT
+                        text.append(bump())
+                        while peek(0) is not None and (peek(0).isdigit() or peek(0) == "_"):
+                            text.append(bump())
+                if peek(0) in ("e", "E"):
+                    a, b = peek(1), peek(2)
+                    exp = (a is not None and a.isdigit()) or (
+                        a in ("+", "-") and b is not None and b.isdigit()
+                    )
+                    if exp:
+                        kind = FLOAT
+                        text.append(bump())
+                        if peek(0) in ("+", "-"):
+                            text.append(bump())
+                        while peek(0) is not None and (peek(0).isdigit() or peek(0) == "_"):
+                            text.append(bump())
+            suffix = []
+            while peek(0) is not None and (peek(0).isalnum() or peek(0) == "_"):
+                suffix.append(bump())
+            if suffix and suffix[0] == "f":
+                kind = FLOAT
+            text.extend(suffix)
+            push(kind, "".join(text), tline)
+        elif c.isalpha() or c == "_":
+            tline = line
+            text = []
+            while peek(0) is not None and (peek(0).isalnum() or peek(0) == "_"):
+                text.append(bump())
+            push(IDENT, "".join(text), tline)
+        else:
+            tline = line
+            matched = False
+            for op in PUNCTS:
+                if all(peek(i) == oc for i, oc in enumerate(op)):
+                    pos += len(op)
+                    push(PUNCT, op, tline)
+                    matched = True
+                    break
+            if not matched:
+                if peek(0) == ">" and peek(1) == ">":
+                    pos += 2
+                    push(PUNCT, ">>", tline)
+                else:
+                    push(PUNCT, bump(), tline)
+    return tokens, comments
+
+
+def _raw_or_ident(chars, n, pos, line, push, is_byte):
+    # `pos` is at the 'r'. Mirrors Lexer::raw_or_ident; returns (pos, line).
+    tline = line
+    pos += 1  # the 'r'
+    hashes = 0
+    while pos + hashes < n and chars[pos + hashes] == "#":
+        hashes += 1
+    after = chars[pos + hashes] if pos + hashes < n else None
+    if after != '"':
+        pos += hashes
+        text = []
+        while pos < n and (chars[pos].isalnum() or chars[pos] == "_"):
+            text.append(chars[pos])
+            pos += 1
+        push(IDENT, "".join(text), tline)
+        return pos, line
+    pos += hashes + 1
+    body = []
+    while True:
+        if pos >= n:
+            raise LexError(tline, "unterminated raw string")
+        c = chars[pos]
+        if c == '"':
+            close = 0
+            while close < hashes and pos + 1 + close < n and chars[pos + 1 + close] == "#":
+                close += 1
+            if close == hashes:
+                pos += 1 + hashes
+                break
+        body.append(c)
+        if c == "\n":
+            line += 1
+        pos += 1
+    push(BYTESTR if is_byte else STR, "".join(body), tline)
+    return pos, line
+
+
+def _plain_string(bump, push, kind, line):
+    tline = line
+    bump()  # opening quote
+    body = []
+    while True:
+        c = bump()
+        if c == "\\":
+            body.append("\\")
+            e = bump()
+            if e is not None:
+                body.append(e)
+        elif c == '"':
+            break
+        elif c is None:
+            raise LexError(tline, "unterminated string literal")
+        else:
+            body.append(c)
+    push(kind, "".join(body), tline)
+
+
+# ---- tree ----------------------------------------------------------------
+
+class Group:
+    __slots__ = ("delim", "line", "children")
+
+    def __init__(self, delim, line):
+        self.delim, self.line, self.children = delim, line, []
+
+
+class TreeError(Exception):
+    def __init__(self, line, msg):
+        super().__init__(f"{line}: {msg}")
+        self.line = line
+        self.msg = msg
+
+
+def build(tokens):
+    stack = []
+    top = []
+    for tok in tokens:
+        if tok.kind == PUNCT and tok.text in "([{":
+            stack.append(Group(tok.text, tok.line))
+            continue
+        if tok.kind == PUNCT and tok.text in ")]}":
+            if not stack:
+                raise TreeError(tok.line, "unmatched closing")
+            g = stack.pop()
+            expected = {"(": ")", "[": "]", "{": "}"}[g.delim]
+            if tok.text != expected:
+                raise TreeError(tok.line, "mismatched closing")
+            (stack[-1].children if stack else top).append(g)
+            continue
+        (stack[-1].children if stack else top).append(tok)
+    if stack:
+        raise TreeError(stack[-1].line, "unclosed")
+    return top
+
+
+def is_group(node, delim=None):
+    return isinstance(node, Group) and (delim is None or node.delim == delim)
+
+
+def is_ident(node, name=None):
+    return (
+        isinstance(node, Tok)
+        and node.kind == IDENT
+        and (name is None or node.text == name)
+    )
+
+
+def is_punct(node, op):
+    return isinstance(node, Tok) and node.kind == PUNCT and node.text == op
+
+
+def node_line(node):
+    return node.line
+
+
+def for_each_seq(nodes, f):
+    f(nodes)
+    for n in nodes:
+        if isinstance(n, Group):
+            for_each_seq(n.children, f)
+
+
+# ---- engine --------------------------------------------------------------
+
+RULE_IDS = [
+    "unordered-iteration", "float-accumulation", "wall-clock-in-model",
+    "lock-order", "panic-in-request-path", "env-leak",
+]
+
+
+class Scope:
+    def __init__(self, path):
+        self.is_server = "src/server/" in path
+        self.is_api = "src/api/" in path
+        self.is_src = "src/" in path
+        self.is_bench = "benches/" in path
+        self.is_test_file = "tests/" in path
+        self.is_main = path.endswith("src/main.rs")
+        self.is_parser = (self.is_server and path.endswith("http.rs")) or (
+            self.is_api and path.endswith("json.rs")
+        )
+
+
+def attr_marks_test(attr):
+    ch = attr.children
+    if not ch:
+        return False
+    if (is_ident(ch[0], "test") or is_ident(ch[0], "bench")) and len(ch) == 1:
+        return True
+    if is_ident(ch[0], "cfg") and len(ch) > 1 and is_group(ch[1]):
+        found = [False]
+
+        def look(seq):
+            if any(is_ident(x, "test") for x in seq):
+                found[0] = True
+
+        for_each_seq(ch[1].children, look)
+        return found[0]
+    return False
+
+
+def collect_functions(nodes, in_test, out):
+    i = 0
+    pending_test = False
+    while i < len(nodes):
+        node = nodes[i]
+        if is_punct(node, "#"):
+            if i + 1 < len(nodes) and is_group(nodes[i + 1], "["):
+                if attr_marks_test(nodes[i + 1]):
+                    pending_test = True
+                i += 2
+                continue
+            i += 1
+            continue
+        if is_ident(node, "mod"):
+            j = i + 1
+            if j < len(nodes) and is_ident(nodes[j]):
+                j += 1
+            if j < len(nodes) and is_group(nodes[j], "{"):
+                collect_functions(nodes[j].children, in_test or pending_test, out)
+                pending_test = False
+                i = j + 1
+                continue
+            pending_test = False
+            i = j
+            continue
+        if is_ident(node, "fn"):
+            name = None
+            if i + 1 < len(nodes) and is_ident(nodes[i + 1]):
+                name = nodes[i + 1].text
+            if name is not None:
+                j = i + 2
+                body = None
+                while j < len(nodes):
+                    if is_punct(nodes[j], ";"):
+                        break
+                    if is_group(nodes[j], "{"):
+                        body = nodes[j]
+                        break
+                    j += 1
+                if body is not None:
+                    is_test = in_test or pending_test
+                    out.append((name, node.line, body, is_test))
+                    collect_functions(body.children, is_test, out)
+                    pending_test = False
+                    i = j + 1
+                    continue
+            pending_test = False
+            i += 1
+            continue
+        if is_group(node, "{"):
+            collect_functions(node.children, in_test or pending_test, out)
+        pending_test = False
+        i += 1
+
+
+def type_head(nodes, j):
+    while j < len(nodes):
+        n = nodes[j]
+        if is_punct(n, "&") or is_punct(n, "::") or is_ident(n, "std") or is_ident(
+            n, "collections"
+        ):
+            j += 1
+            continue
+        return n.text if is_ident(n) else None
+    return None
+
+
+def collect_hash_names(nodes):
+    out = []
+
+    def scan(seq):
+        for i, n in enumerate(seq):
+            if not is_ident(n):
+                continue
+            nxt = seq[i + 1] if i + 1 < len(seq) else None
+            if nxt is None or not (is_punct(nxt, ":") or is_punct(nxt, "=")):
+                continue
+            head = type_head(seq, i + 2)
+            if head in ("HashMap", "HashSet") and n.text not in out:
+                out.append(n.text)
+
+    for_each_seq(nodes, scan)
+    return out
+
+
+class Ctx:
+    def __init__(self, path, source, nodes):
+        self.path = path
+        self.lines = source.split("\n")
+        self.nodes = nodes
+        self.scope = Scope(path)
+        self.functions = []
+        collect_functions(nodes, self.scope.is_test_file, self.functions)
+        self.hash_names = collect_hash_names(nodes)
+
+    def finding(self, line, rule, message):
+        snippet = self.lines[line - 1].strip() if 0 < line <= len(self.lines) else ""
+        return (self.path, line, rule, message, snippet[:90])
+
+
+# ---- rules ---------------------------------------------------------------
+
+ITER_METHODS = [
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "into_keys",
+    "into_values",
+]
+
+
+def rule_unordered(ctx, out):
+    if not ctx.hash_names:
+        return
+    for _, _, body, is_test in ctx.functions:
+        if is_test:
+            continue
+
+        def scan(seq):
+            for i, n in enumerate(seq):
+                if isinstance(n, Tok) and n.text in ctx.hash_names and not isinstance(n, Group):
+                    if i + 3 < len(seq) + 1 and i + 1 < len(seq) and is_punct(seq[i + 1], "."):
+                        m = seq[i + 2] if i + 2 < len(seq) else None
+                        called = i + 3 < len(seq) and is_group(seq[i + 3], "(")
+                        if (
+                            m is not None
+                            and isinstance(m, Tok)
+                            and called
+                            and (m.text in ITER_METHODS or m.text == "drain")
+                        ):
+                            out.append(ctx.finding(m.line, "unordered-iteration", "hash iter"))
+                if is_ident(n, "for"):
+                    t = _direct_for_target(ctx, seq, i)
+                    if t is not None:
+                        out.append(ctx.finding(t[1], "unordered-iteration", "for over hash"))
+
+        for_each_seq(body.children, scan)
+
+
+def _direct_for_target(ctx, seq, for_idx):
+    j = for_idx + 1
+    while j < len(seq) and not is_ident(seq[j], "in"):
+        if is_group(seq[j], "{"):
+            return None
+        j += 1
+    k = j + 1
+    while k < len(seq) and (is_punct(seq[k], "&") or is_ident(seq[k], "mut")):
+        k += 1
+    if k >= len(seq) or not isinstance(seq[k], Tok):
+        return None
+    tok = seq[k]
+    if tok.text not in ctx.hash_names:
+        return None
+    if k + 1 < len(seq) and is_group(seq[k + 1], "{"):
+        return (tok.text, tok.line)
+    return None
+
+
+def collect_float_names(nodes):
+    out = []
+
+    def scan(seq):
+        for i, n in enumerate(seq):
+            if not is_ident(n):
+                continue
+            nxt = seq[i + 1] if i + 1 < len(seq) else None
+            n2 = seq[i + 2] if i + 2 < len(seq) else None
+            annotated = (
+                nxt is not None
+                and is_punct(nxt, ":")
+                and (is_ident(n2, "f64") or is_ident(n2, "f32"))
+            )
+            initialized = (
+                nxt is not None
+                and is_punct(nxt, "=")
+                and isinstance(n2, Tok)
+                and n2.kind == FLOAT
+            )
+            if (annotated or initialized) and n.text not in out:
+                out.append(n.text)
+
+    for_each_seq(nodes, scan)
+    return out
+
+
+def first_sort_line(nodes):
+    best = [None]
+
+    def scan(seq):
+        for i, n in enumerate(seq):
+            if not is_punct(n, "."):
+                continue
+            m = seq[i + 1] if i + 1 < len(seq) else None
+            if (
+                isinstance(m, Tok)
+                and m.kind == IDENT
+                and m.text.startswith("sort")
+                and i + 2 < len(seq)
+                and is_group(seq[i + 2], "(")
+            ):
+                best[0] = m.line if best[0] is None else min(best[0], m.line)
+
+    for_each_seq(nodes, scan)
+    return best[0]
+
+
+def loop_parts(seq, for_idx):
+    j = for_idx + 1
+    while j < len(seq) and not is_ident(seq[j], "in"):
+        if is_group(seq[j], "{"):
+            return None
+        j += 1
+    head_start = j + 1
+    k = head_start
+    while k < len(seq) and not is_group(seq[k], "{"):
+        k += 1
+    if k >= len(seq) or head_start > k:
+        return None
+    return (seq[head_start:k], k)
+
+
+def direct_float_acc(seq, floats):
+    i = 0
+    while i < len(seq):
+        if is_ident(seq[i], "for"):
+            parts = loop_parts(seq, i)
+            if parts is not None:
+                i = parts[1] + 1
+                continue
+        if is_group(seq[i]):
+            inner = direct_float_acc(seq[i].children, floats)
+            if inner is not None:
+                return inner
+            i += 1
+            continue
+        n = seq[i]
+        if (
+            isinstance(n, Tok)
+            and n.kind == IDENT
+            and i + 1 < len(seq)
+            and is_punct(seq[i + 1], "+=")
+        ):
+            if n.text in floats or rhs_is_float(seq[i + 2:], floats):
+                return n.text
+        i += 1
+    return None
+
+
+def rhs_is_float(seq, floats):
+    for n in seq:
+        if is_punct(n, ";"):
+            return False
+        if isinstance(n, Tok) and (
+            n.kind == FLOAT
+            or (n.kind == IDENT and n.text in ("f64", "f32"))
+            or (n.kind == IDENT and n.text in floats)
+        ):
+            return True
+    return False
+
+
+def scan_loops(ctx, seq, floats, sorted_line, out):
+    i = 0
+    while i < len(seq):
+        if is_group(seq[i]):
+            scan_loops(ctx, seq[i].children, floats, sorted_line, out)
+            i += 1
+            continue
+        if not is_ident(seq[i], "for"):
+            i += 1
+            continue
+        parts = loop_parts(seq, i)
+        if parts is None:
+            i += 1
+            continue
+        head, body_idx = parts
+        body = seq[body_idx]
+        scan_loops(ctx, body.children, floats, sorted_line, out)
+        line = seq[i].line
+        range_headed = any(
+            isinstance(n, Tok) and n.kind == PUNCT and n.text in ("..", "..=") for n in head
+        )
+        sort_guarded = sorted_line is not None and sorted_line < line
+        if not range_headed and not sort_guarded:
+            acc = direct_float_acc(body.children, floats)
+            if acc is not None:
+                out.append(ctx.finding(line, "float-accumulation", f"{acc} += in loop"))
+        i = body_idx + 1
+
+
+def chain_head_is_ordered(seq, dot):
+    j = dot
+    while j > 0:
+        prev = seq[j - 1]
+        link = (
+            is_punct(prev, ".")
+            or is_punct(prev, "::")
+            or is_punct(prev, "<")
+            or is_punct(prev, ">")
+            or is_group(prev, "(")
+            or is_group(prev, "[")
+            or is_ident(prev)
+        )
+        if not link:
+            break
+        j -= 1
+    head = seq[j]
+    if is_group(head, "["):
+        return True
+    if is_group(head, "("):
+        return any(
+            isinstance(n, Tok) and n.kind == PUNCT and n.text in ("..", "..=")
+            for n in head.children
+        )
+    return False
+
+
+def scan_sums(ctx, nodes, out):
+    def scan(seq):
+        for i, n in enumerate(seq):
+            if not is_punct(n, "."):
+                continue
+            if i + 1 >= len(seq) or not is_ident(seq[i + 1], "sum"):
+                continue
+            turbofish = (
+                i + 4 < len(seq)
+                and is_punct(seq[i + 2], "::")
+                and is_punct(seq[i + 3], "<")
+                and (is_ident(seq[i + 4], "f64") or is_ident(seq[i + 4], "f32"))
+            )
+            if not turbofish:
+                continue
+            if chain_head_is_ordered(seq, i):
+                continue
+            out.append(ctx.finding(seq[i + 1].line, "float-accumulation", "sum::<f64>"))
+
+    for_each_seq(nodes, scan)
+
+
+def rule_float(ctx, out):
+    floats = collect_float_names(ctx.nodes)
+    for _, _, body, is_test in ctx.functions:
+        if is_test:
+            continue
+        sl = first_sort_line(body.children)
+        scan_loops(ctx, body.children, floats, sl, out)
+        scan_sums(ctx, body.children, out)
+
+
+def rule_wall_clock(ctx, out):
+    def scan(seq):
+        for i, n in enumerate(seq):
+            if (
+                is_ident(n, "Instant")
+                and i + 2 < len(seq)
+                and is_punct(seq[i + 1], "::")
+                and is_ident(seq[i + 2], "now")
+            ):
+                out.append(ctx.finding(n.line, "wall-clock-in-model", "Instant::now"))
+            if is_ident(n, "SystemTime") and i + 1 < len(seq) and is_punct(seq[i + 1], "::"):
+                out.append(ctx.finding(n.line, "wall-clock-in-model", "SystemTime::"))
+            if is_ident(n, "sleep") and i + 1 < len(seq) and is_group(seq[i + 1], "("):
+                out.append(ctx.finding(n.line, "wall-clock-in-model", "sleep()"))
+
+    for_each_seq(ctx.nodes, scan)
+
+
+def rule_lock_order(ctx, out, edges):
+    for _, _, body, is_test in ctx.functions:
+        if is_test:
+            continue
+        _lock_walk(ctx, body.children, [], out, edges)
+
+
+def _lock_walk(ctx, seq, held, out, edges):
+    base = len(held)
+    i = 0
+    while i < len(seq):
+        if (
+            is_ident(seq[i], "drop")
+            and i + 1 < len(seq)
+            and is_group(seq[i + 1], "(")
+            and len(held) > base
+        ):
+            held.pop()
+            i += 2
+            continue
+        if is_group(seq[i]):
+            if seq[i].delim == "{":
+                _lock_walk(ctx, seq[i].children, held, out, edges)
+            else:
+                depth = len(held)
+                _lock_walk(ctx, seq[i].children, held, out, edges)
+                del held[depth:]
+            i += 1
+            continue
+        acquisition = (
+            is_punct(seq[i], ".")
+            and i + 2 < len(seq)
+            and (
+                is_ident(seq[i + 1], "lock")
+                or is_ident(seq[i + 1], "read")
+                or is_ident(seq[i + 1], "write")
+            )
+            and is_group(seq[i + 2], "(")
+            and not seq[i + 2].children
+        )
+        if acquisition:
+            line = seq[i + 1].line
+            recv = _receiver_name(seq, i)
+            if recv is not None:
+                for h in held:
+                    if h == recv:
+                        out.append(ctx.finding(line, "lock-order", f"re-lock {recv}"))
+                    else:
+                        edges.append((h, recv, ctx.path, line))
+                if _stmt_has_let(seq, i):
+                    held.append(recv)
+            i += 3
+            continue
+        i += 1
+    del held[base:]
+
+
+def _receiver_name(seq, dot):
+    j = dot
+    while j > 0:
+        j -= 1
+        n = seq[j]
+        if is_group(n):
+            continue
+        if isinstance(n, Tok) and n.kind == IDENT:
+            return None if n.text == "self" else n.text
+        if is_punct(n, ".") or is_punct(n, "&"):
+            continue
+        return None
+    return None
+
+
+def _stmt_has_let(seq, dot):
+    j = dot
+    while j > 0:
+        j -= 1
+        if is_punct(seq[j], ";"):
+            return False
+        if is_ident(seq[j], "let"):
+            return True
+    return False
+
+
+def cycle_findings(edges):
+    out = []
+    reported = set()
+
+    def reaches(frm, to):
+        stack, seen = [frm], set()
+        while stack:
+            cur = stack.pop()
+            if cur == to:
+                return True
+            if cur in seen:
+                continue
+            seen.add(cur)
+            for e in edges:
+                if e[0] == cur:
+                    stack.append(e[1])
+        return False
+
+    for frm, to, path, line in edges:
+        if not reaches(to, frm):
+            continue
+        if (frm, to) in reported or (to, frm) in reported:
+            continue
+        reported.add((frm, to))
+        out.append((path, line, "lock-order", f"cycle {frm}<->{to}", ""))
+    return out
+
+
+def _poisoning_chain(seq, i):
+    return (
+        i >= 3
+        and is_punct(seq[i - 3], ".")
+        and (is_ident(seq[i - 2], "lock") or is_ident(seq[i - 2], "into_inner"))
+        and is_group(seq[i - 1], "(")
+    )
+
+
+def _stmt_has_write_macro(seq, i):
+    j = i
+    while True:
+        if is_punct(seq[j], ";"):
+            return False
+        if (is_ident(seq[j], "write") or is_ident(seq[j], "writeln")) and j + 1 < len(
+            seq
+        ) and is_punct(seq[j + 1], "!"):
+            return True
+        if j == 0:
+            return False
+        j -= 1
+
+
+def rule_panic_path(ctx, out):
+    for _, _, body, is_test in ctx.functions:
+        if is_test:
+            continue
+
+        def scan(seq):
+            for i, n in enumerate(seq):
+                if (
+                    is_punct(n, ".")
+                    and i + 2 < len(seq)
+                    and is_ident(seq[i + 1], "unwrap")
+                    and is_group(seq[i + 2], "(")
+                    and not _poisoning_chain(seq, i)
+                    and not _stmt_has_write_macro(seq, i)
+                ):
+                    out.append(ctx.finding(seq[i + 1].line, "panic-in-request-path", "unwrap"))
+                if (
+                    is_punct(n, ".")
+                    and i + 2 < len(seq)
+                    and is_ident(seq[i + 1], "expect")
+                    and is_group(seq[i + 2], "(")
+                ):
+                    ch = seq[i + 2].children
+                    arg_is_str = bool(ch) and isinstance(ch[0], Tok) and ch[0].kind == STR
+                    if arg_is_str and not _poisoning_chain(seq, i):
+                        out.append(
+                            ctx.finding(seq[i + 1].line, "panic-in-request-path", "expect")
+                        )
+                if (
+                    isinstance(n, Tok)
+                    and n.kind == IDENT
+                    and n.text in ("panic", "todo", "unimplemented")
+                    and i + 1 < len(seq)
+                    and is_punct(seq[i + 1], "!")
+                ):
+                    out.append(ctx.finding(n.line, "panic-in-request-path", n.text + "!"))
+                if ctx.scope.is_parser and is_group(n, "["):
+                    prev = seq[i - 1] if i > 0 else None
+                    postfix = prev is not None and (
+                        (isinstance(prev, Tok) and prev.kind == IDENT)
+                        or is_group(prev, "(")
+                        or is_group(prev, "[")
+                    )
+                    keyword_before = (
+                        prev is not None
+                        and isinstance(prev, Tok)
+                        and prev.kind == IDENT
+                        and prev.text in ("mut", "in", "return")
+                    )
+                    ranged = any(
+                        isinstance(x, Tok) and x.kind == PUNCT and x.text in ("..", "..=")
+                        for x in n.children
+                    )
+                    literal = (
+                        len(n.children) == 1
+                        and isinstance(n.children[0], Tok)
+                        and n.children[0].kind == INT
+                    )
+                    if postfix and not keyword_before and not ranged and not literal and n.children:
+                        out.append(ctx.finding(n.line, "panic-in-request-path", "indexing"))
+
+        for_each_seq(body.children, scan)
+
+
+ENV_FNS = ["var", "var_os", "vars", "vars_os", "args", "args_os"]
+
+
+def rule_env_leak(ctx, out):
+    for _, _, body, is_test in ctx.functions:
+        if is_test:
+            continue
+
+        def scan(seq):
+            for i, n in enumerate(seq):
+                if (
+                    is_ident(n, "env")
+                    and i + 3 < len(seq)
+                    and is_punct(seq[i + 1], "::")
+                    and isinstance(seq[i + 2], Tok)
+                    and seq[i + 2].kind == IDENT
+                    and seq[i + 2].text in ENV_FNS
+                    and is_group(seq[i + 3], "(")
+                ):
+                    out.append(ctx.finding(n.line, "env-leak", "env::" + seq[i + 2].text))
+                if is_ident(n, "available_parallelism") and i + 1 < len(seq) and is_group(
+                    seq[i + 1], "("
+                ):
+                    out.append(ctx.finding(n.line, "env-leak", "available_parallelism"))
+
+        for_each_seq(body.children, scan)
+
+
+def run_rules(ctx, out, edges):
+    rule_unordered(ctx, out)
+    if not ctx.scope.is_bench:
+        rule_float(ctx, out)
+    if not ctx.scope.is_bench and not ctx.scope.is_server:
+        rule_wall_clock(ctx, out)
+    rule_lock_order(ctx, out, edges)
+    if ctx.scope.is_server or ctx.scope.is_api:
+        rule_panic_path(ctx, out)
+    if ctx.scope.is_src and not ctx.scope.is_main and not ctx.scope.is_server:
+        rule_env_leak(ctx, out)
+
+
+# ---- allows --------------------------------------------------------------
+
+def parse_allows(path, lines, comments, tokens, findings):
+    allows = []
+    for cline, text, own_line in comments:
+        t = text.lstrip()
+        if not t.startswith("lint:"):
+            continue
+        rest = t[len("lint:"):].lstrip()
+        if not rest.startswith("allow("):
+            findings.append((path, cline, "malformed-allow", "no allow(", ""))
+            continue
+        rest = rest[len("allow("):]
+        close = rest.find(")")
+        if close < 0:
+            findings.append((path, cline, "malformed-allow", "unclosed", ""))
+            continue
+        rule = rest[:close].strip()
+        if rule not in RULE_IDS:
+            findings.append((path, cline, "malformed-allow", f"unknown rule {rule}", ""))
+            continue
+        after = rest[close + 1:].lstrip()
+        if after.startswith("—"):
+            reason = after[1:].strip()
+        elif after.startswith("--"):
+            reason = after[2:].strip()
+        else:
+            reason = ""
+        if not reason:
+            findings.append((path, cline, "malformed-allow", "missing reason", ""))
+            continue
+        if own_line:
+            target = next((t2.line for t2 in tokens if t2.line > cline), cline)
+        else:
+            target = cline
+        allows.append((cline, rule, target))
+    return allows
+
+
+def apply_allows(path, findings, allows):
+    used = [False] * len(allows)
+    kept = []
+    for f in findings:
+        suppressed = False
+        for ai, (_, rule, target) in enumerate(allows):
+            if rule == f[2] and target == f[1]:
+                used[ai] = True
+                suppressed = True
+        if not suppressed:
+            kept.append(f)
+    for ai, (aline, rule, _) in enumerate(allows):
+        if not used[ai]:
+            kept.append((path, aline, "unused-allow", f"allow({rule}) unused", ""))
+    return kept, sum(used)
+
+
+# ---- driver --------------------------------------------------------------
+
+def analyze(path, source, edges):
+    findings = []
+    try:
+        tokens, comments = lex(source)
+    except LexError as e:
+        return [(path, e.line, "parse-error", e.msg, "")], []
+    try:
+        nodes = build(tokens)
+    except TreeError as e:
+        return [(path, e.line, "parse-error", e.msg, "")], []
+    ctx = Ctx(path, source, nodes)
+    run_rules(ctx, findings, edges)
+    allows = parse_allows(path, ctx.lines, comments, tokens, findings)
+    return findings, allows
+
+
+def main():
+    pre = "--pre" in sys.argv
+    roots = [r for r in ("rust/src", "rust/tests", "rust/benches", "examples") if os.path.isdir(r)]
+    files = []
+    for root in roots:
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames.sort()
+            for fn in sorted(filenames):
+                if fn.endswith(".rs"):
+                    files.append(os.path.join(dirpath, fn))
+    files.sort()
+    all_findings = []
+    edges = []
+    used_total = 0
+    for path in files:
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        findings, allows = analyze(path, source, edges)
+        if pre:
+            all_findings.extend(findings)
+            continue
+        kept, used = apply_allows(path, findings, allows)
+        used_total += used
+        all_findings.extend(kept)
+    all_findings.extend(cycle_findings(edges))
+    all_findings.sort(key=lambda f: (f[0], f[1], f[2], f[3]))
+    for f in all_findings:
+        print(f"{f[0]}:{f[1]}: {f[2]}: {f[3]}  | {f[4]}")
+    print(f"-- {len(all_findings)} findings, {len(files)} files, {used_total} allows used")
+    return 1 if all_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -87,6 +87,25 @@ def main():
         ):
             assert needle in text, f"missing {needle!r} in /metrics:\n{text}"
 
+        # Determinism of the exposition itself: two consecutive scrapes
+        # must emit the series in the same order (values may move, e.g.
+        # the metrics route counter or duration buckets — strip them).
+        status, body2 = request(base, "/metrics")
+        assert status == 200, status
+
+        def series_order(raw):
+            lines = raw.decode().splitlines()
+            return [ln if ln.startswith("#") else ln.rsplit(" ", 1)[0] for ln in lines]
+
+        assert series_order(body) == series_order(body2), (
+            "metrics line ordering changed between scrapes:\n"
+            + "\n".join(
+                f"- {a!r} vs {b!r}"
+                for a, b in zip(series_order(body), series_order(body2))
+                if a != b
+            )
+        )
+
         status, body = request(base, "/v1/shutdown", {})
         assert status == 200, status
         code = proc.wait(timeout=60)

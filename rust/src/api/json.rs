@@ -130,6 +130,7 @@ struct Parser<'a> {
 impl Parser<'_> {
     fn skip_ws(&mut self) {
         while self.pos < self.bytes.len()
+            // lint: allow(panic-in-request-path) — index guarded by the bounds check above
             && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
         {
             self.pos += 1;
@@ -316,6 +317,7 @@ impl Parser<'_> {
         self.skip_ws();
         let start = self.pos;
         while self.pos < self.bytes.len()
+            // lint: allow(panic-in-request-path) — index guarded by the bounds check above
             && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
         {
             self.pos += 1;
@@ -403,6 +405,7 @@ impl SimRequest {
                 let overridden: Vec<(usize, &str)> = AXIS_NAMES
                     .iter()
                     .enumerate()
+                    // lint: allow(panic-in-request-path) — enumerate index, same-length arrays
                     .filter(|(i, _)| d.space.axes()[*i] != default_space.axes()[*i])
                     .map(|(i, name)| (i, *name))
                     .collect();

@@ -192,6 +192,7 @@ mod tests {
         let q = WorkQueue::new();
         let q2 = q.clone();
         let h = thread::spawn(move || q2.pop());
+        // lint: allow(wall-clock-in-model) — test deliberately widens a real race window
         thread::sleep(std::time::Duration::from_millis(20));
         q.push(42);
         assert_eq!(h.join().unwrap(), Some(42));

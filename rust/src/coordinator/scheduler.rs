@@ -61,8 +61,11 @@ impl NetworkReport {
         // index): a slice's loss and grad passes share one staging
         // buffer (max, not sum), but different data-parallel slices
         // stage on different devices and each contribute their own.
-        let mut layer_storage: std::collections::HashMap<(usize, usize), u64> =
-            std::collections::HashMap::new();
+        // BTreeMap, not HashMap: the total below is a u64 sum today, but
+        // an ordered map keeps any future aggregation over these slots
+        // deterministic by construction (`repro lint` unordered-iteration).
+        let mut layer_storage: std::collections::BTreeMap<(usize, usize), u64> =
+            std::collections::BTreeMap::new();
         for r in results {
             match r.job.pass {
                 Pass::Loss => {
@@ -86,7 +89,7 @@ impl NetworkReport {
             *slot = (*slot).max(r.metrics.storage_overhead_bytes * r.job.count as u64);
             report.results.push(r);
         }
-        // u64 sum: iteration order of the map cannot perturb the total.
+        // Ordered u64 sum over the BTreeMap slots.
         report.storage_bytes = layer_storage.values().sum();
         if loss_weight > 0.0 {
             report.loss_sparsity /= loss_weight;
@@ -170,6 +173,7 @@ pub(crate) fn compute_results(
 
 /// Default host worker count: one per core, capped at 8.
 pub(crate) fn default_workers() -> usize {
+    // lint: allow(env-leak) — worker count is operational; results are sorted before aggregation
     thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4)
 }
 

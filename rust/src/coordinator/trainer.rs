@@ -154,6 +154,7 @@ impl Trainer {
     pub fn train(&self) -> Result<TrainStats> {
         let mut params = ParamState::init(self.cfg.seed);
         let mut losses = Vec::with_capacity(self.cfg.steps);
+        // lint: allow(wall-clock-in-model) — wall_seconds is host telemetry, labeled as such
         let start = std::time::Instant::now();
         for step in 0..self.cfg.steps {
             let (x, y) = synthetic_batch(step, self.cfg.seed);
@@ -188,7 +189,9 @@ impl Trainer {
         };
         let tail = (losses.len() / 10).max(1);
         Ok(TrainStats {
+            // lint: allow(float-accumulation) — losses is in push order; fold order is fixed
             initial_loss: losses.iter().take(tail).sum::<f32>() / tail as f32,
+            // lint: allow(float-accumulation) — losses is in push order; fold order is fixed
             final_loss: losses.iter().rev().take(tail).sum::<f32>() / tail as f32,
             losses,
             sim_cycles_traditional: sim(Mode::Traditional),

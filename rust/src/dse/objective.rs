@@ -109,6 +109,7 @@ pub fn evaluate(
     let mut traffic = 0u64;
     let mut reads = 0u64;
     let mut storage = 0u64;
+    // lint: allow(float-accumulation) — layers slice order is fixed by the caller
     for (p, count) in layers {
         let count = *count as u64;
         let loss = cache.metrics(Pass::Loss, Mode::BpIm2col, p, cfg);

@@ -62,6 +62,10 @@
 //!   bounded worker pool, a rendered-response [`server::cache::ArtifactCache`]
 //!   above the shared plan cache, `/metrics` observability and a
 //!   signal-free graceful shutdown (DESIGN.md §10).
+//! * [`lint`] — a std-only determinism & concurrency static analyzer
+//!   for this crate's own sources (`repro lint`): six deny-by-default
+//!   rules over a hand-rolled token-tree parse, suppressible only by
+//!   reasoned in-source allows, gating CI (DESIGN.md §12).
 //!
 //! See the top-level `README.md` for a quickstart and the full CLI
 //! command table, `DESIGN.md` for modeling decisions, and
@@ -76,6 +80,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod dse;
 pub mod im2col;
+pub mod lint;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

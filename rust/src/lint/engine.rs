@@ -1,0 +1,375 @@
+//! Per-file analysis context and the allow-directive machinery.
+//!
+//! A file is lexed, grouped into token trees, and summarized into a
+//! [`FileCtx`]: its function bodies (with `#[cfg(test)]` / `#[test]`
+//! classification), path-derived scope flags, and the set of
+//! identifiers declared with hash-ordered collection types. Rules
+//! pattern-match over that context.
+//!
+//! Suppression: a finding is silenced only by a line comment of the
+//! form `lint: allow(rule-name) — reason` (`--` works too), either
+//! trailing on the flagged line or standing alone on the line directly
+//! above the next token-bearing line. Allows that suppress nothing and
+//! allows that fail to parse are findings themselves, so suppressions
+//! cannot rot.
+
+use crate::lint::lexer::{Comment, Kind, Tok};
+use crate::lint::tree::{for_each_seq, Group, Node};
+use crate::lint::{Finding, RULE_IDS};
+
+/// Path-derived scope flags steering which rules run on a file.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Scope {
+    /// Under a `src/` tree (library/binary code).
+    pub is_src: bool,
+    /// Under `src/server/` (the one place wall-clock time is real).
+    pub is_server: bool,
+    /// Under `src/api/` (request-handling facade).
+    pub is_api: bool,
+    /// Under a `benches/` tree (harness timing is the point).
+    pub is_bench: bool,
+    /// Under a `tests/` tree (integration tests; test code throughout).
+    pub is_test_file: bool,
+    /// The `src/main.rs` CLI shell (argv/env access is its job).
+    pub is_main: bool,
+    /// Wire-parsing module (`server/http.rs`, `api/json.rs`) where the
+    /// slice-indexing check of panic-path applies.
+    pub is_parser: bool,
+}
+
+impl Scope {
+    /// Classify a `/`-normalized path.
+    pub fn of(path: &str) -> Scope {
+        let is_server = path.contains("src/server/");
+        let is_api = path.contains("src/api/");
+        Scope {
+            is_src: path.contains("src/"),
+            is_server,
+            is_api,
+            is_bench: path.contains("benches/"),
+            is_test_file: path.contains("tests/"),
+            is_main: path.ends_with("src/main.rs"),
+            is_parser: (is_server && path.ends_with("http.rs"))
+                || (is_api && path.ends_with("json.rs")),
+        }
+    }
+}
+
+/// One function body found in the file.
+pub struct Function<'a> {
+    /// Function name.
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// The `{ ... }` body group.
+    pub body: &'a Group,
+    /// Inside `#[cfg(test)]`, under `#[test]`/`#[bench]`, or in a
+    /// `tests/` file.
+    pub is_test: bool,
+}
+
+/// Everything a rule may look at for one file.
+pub struct FileCtx<'a> {
+    /// `/`-normalized path label.
+    pub path: &'a str,
+    /// Source split into lines (for finding snippets).
+    pub lines: Vec<&'a str>,
+    /// Token tree of the whole file.
+    pub nodes: &'a [Node],
+    /// Every function body, in source order.
+    pub functions: Vec<Function<'a>>,
+    /// Path-derived scope flags.
+    pub scope: Scope,
+    /// Identifiers declared or annotated as `HashMap`/`HashSet`.
+    pub hash_names: Vec<String>,
+}
+
+impl<'a> FileCtx<'a> {
+    /// Build the context for one parsed file.
+    pub fn new(path: &'a str, source: &'a str, nodes: &'a [Node]) -> FileCtx<'a> {
+        let scope = Scope::of(path);
+        let mut functions = Vec::new();
+        collect_functions(nodes, scope.is_test_file, &mut functions);
+        let mut hash_names = Vec::new();
+        collect_hash_names(nodes, &mut hash_names);
+        FileCtx { path, lines: source.lines().collect(), nodes, functions, scope, hash_names }
+    }
+
+    /// Construct a finding at `line`, pulling the snippet from source.
+    pub fn finding(&self, line: u32, rule: &str, message: String) -> Finding {
+        let snippet = self
+            .lines
+            .get(line.saturating_sub(1) as usize)
+            .map(|l| truncate(l.trim()))
+            .unwrap_or_default();
+        Finding { file: self.path.to_string(), line, rule: rule.to_string(), message, snippet }
+    }
+}
+
+fn truncate(s: &str) -> String {
+    if s.chars().count() <= 90 {
+        return s.to_string();
+    }
+    let head: String = s.chars().take(87).collect();
+    format!("{head}...")
+}
+
+/// Does the node list contain an identifier named `name` at any depth?
+pub fn contains_ident(nodes: &[Node], name: &str) -> bool {
+    let mut found = false;
+    for_each_seq(nodes, &mut |seq| {
+        if seq.iter().any(|n| n.is_ident(name)) {
+            found = true;
+        }
+    });
+    found
+}
+
+/// Does `#[...]` attribute content mark the next item as test-only?
+fn attr_marks_test(attr: &Group) -> bool {
+    let Some(first) = attr.children.first() else {
+        return false;
+    };
+    if (first.is_ident("test") || first.is_ident("bench")) && attr.children.len() == 1 {
+        return true;
+    }
+    if first.is_ident("cfg") {
+        if let Some(args) = attr.children.get(1).and_then(|n| n.group()) {
+            return contains_ident(&args.children, "test");
+        }
+    }
+    false
+}
+
+/// Walk an item-level sequence, collecting every function body.
+fn collect_functions<'a>(nodes: &'a [Node], in_test: bool, out: &mut Vec<Function<'a>>) {
+    let mut i = 0;
+    let mut pending_test = false;
+    while i < nodes.len() {
+        let node = &nodes[i];
+        // `#[...]` attribute: note test markers, consume both tokens.
+        if node.is_punct("#") {
+            if let Some(attr) = nodes.get(i + 1).and_then(|n| n.group()) {
+                if attr.delim == '[' {
+                    if attr_marks_test(attr) {
+                        pending_test = true;
+                    }
+                    i += 2;
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        // `mod name { ... }`: recurse with the test flag threaded down.
+        if node.is_ident("mod") {
+            let mut j = i + 1;
+            if nodes.get(j).and_then(|n| n.leaf()).is_some_and(|t| t.kind == Kind::Ident) {
+                j += 1;
+            }
+            if let Some(g) = nodes.get(j).and_then(|n| n.group()) {
+                if g.delim == '{' {
+                    collect_functions(&g.children, in_test || pending_test, out);
+                    pending_test = false;
+                    i = j + 1;
+                    continue;
+                }
+            }
+            pending_test = false;
+            i = j;
+            continue;
+        }
+        // `fn name ... { body }` (a `;` first means no body: trait decl).
+        if node.is_ident("fn") {
+            let name = nodes
+                .get(i + 1)
+                .and_then(|n| n.leaf())
+                .filter(|t| t.kind == Kind::Ident)
+                .map(|t| t.text.clone());
+            if let Some(name) = name {
+                let mut j = i + 2;
+                let mut body = None;
+                while let Some(n) = nodes.get(j) {
+                    if n.is_punct(";") {
+                        break;
+                    }
+                    if let Some(g) = n.group() {
+                        if g.delim == '{' {
+                            body = Some(g);
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                if let Some(body) = body {
+                    let is_test = in_test || pending_test;
+                    out.push(Function { name, line: node.line(), body, is_test });
+                    collect_functions(&body.children, is_test, out);
+                    pending_test = false;
+                    i = j + 1;
+                    continue;
+                }
+            }
+            pending_test = false;
+            i += 1;
+            continue;
+        }
+        // Other `{}` groups (impl/trait bodies, blocks) may hold fns.
+        if let Some(g) = node.group() {
+            if g.delim == '{' {
+                collect_functions(&g.children, in_test || pending_test, out);
+            }
+        }
+        pending_test = false;
+        i += 1;
+    }
+}
+
+/// Idents after a skippable type-path prefix (`&`, `std::collections::`).
+fn type_head(nodes: &[Node], mut j: usize) -> Option<&str> {
+    while let Some(n) = nodes.get(j) {
+        if n.is_punct("&") || n.is_punct("::") || n.is_ident("std") || n.is_ident("collections") {
+            j += 1;
+            continue;
+        }
+        return n.leaf().filter(|t| t.kind == Kind::Ident).map(|t| t.text.as_str());
+    }
+    None
+}
+
+/// Record every identifier whose type annotation or initializer names a
+/// hash-ordered collection (`n: HashMap<..>`, `n = HashSet::new()`).
+fn collect_hash_names(nodes: &[Node], out: &mut Vec<String>) {
+    for_each_seq(nodes, &mut |seq| {
+        for i in 0..seq.len() {
+            let Some(tok) = seq[i].leaf() else {
+                continue;
+            };
+            if tok.kind != Kind::Ident {
+                continue;
+            }
+            let annotated = seq.get(i + 1).is_some_and(|n| n.is_punct(":"));
+            let assigned = seq.get(i + 1).is_some_and(|n| n.is_punct("="));
+            if !annotated && !assigned {
+                continue;
+            }
+            let head = type_head(seq, i + 2);
+            if matches!(head, Some("HashMap") | Some("HashSet")) && !out.contains(&tok.text) {
+                out.push(tok.text.clone());
+            }
+        }
+    });
+}
+
+// ---- allow directives ---------------------------------------------------
+
+/// One parsed `allow(rule) — reason` suppression.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Line of the comment.
+    pub line: u32,
+    /// Rule being suppressed.
+    pub rule: String,
+    /// Line whose findings this allow covers.
+    pub target: u32,
+}
+
+const MARKER: &str = "lint:";
+
+/// Parse every allow directive in the file's line comments.
+/// Malformed directives become findings immediately.
+pub fn parse_allows(
+    path: &str,
+    lines: &[&str],
+    comments: &[Comment],
+    tokens: &[Tok],
+    findings: &mut Vec<Finding>,
+) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for c in comments {
+        let text = c.text.trim_start();
+        if !text.starts_with(MARKER) {
+            continue;
+        }
+        match parse_directive(text) {
+            Ok((rule, _reason)) => {
+                let target = if c.own_line {
+                    tokens.iter().map(|t| t.line).find(|&l| l > c.line).unwrap_or(c.line)
+                } else {
+                    c.line
+                };
+                allows.push(Allow { line: c.line, rule, target });
+            }
+            Err(why) => {
+                findings.push(snip(path, lines, c.line, "malformed-allow", why));
+            }
+        }
+    }
+    allows
+}
+
+/// Grammar: `lint: allow(<rule>) — <reason>` (or ` -- `). The reason is
+/// mandatory; the rule must be one the analyzer ships.
+fn parse_directive(text: &str) -> Result<(String, String), String> {
+    let rest = text[MARKER.len()..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Err("expected `allow(<rule>)` after `lint:`".to_string());
+    };
+    let Some(close) = rest.find(')') else {
+        return Err("unclosed `allow(`".to_string());
+    };
+    let rule = rest[..close].trim().to_string();
+    if !RULE_IDS.contains(&rule.as_str()) {
+        return Err(format!("unknown rule {rule:?} (known: {})", RULE_IDS.join(", ")));
+    }
+    let after = rest[close + 1..].trim_start();
+    let reason = after
+        .strip_prefix("—")
+        .or_else(|| after.strip_prefix("--"))
+        .map(str::trim)
+        .unwrap_or("");
+    if reason.is_empty() {
+        return Err("an allow needs a reason: `allow(rule) — why this is sound`".to_string());
+    }
+    Ok((rule, reason.to_string()))
+}
+
+/// Drop findings covered by an allow; report allows that covered
+/// nothing. Returns the surviving findings and the used-allow count.
+pub fn apply_allows(
+    path: &str,
+    lines: &[&str],
+    findings: Vec<Finding>,
+    allows: &[Allow],
+) -> (Vec<Finding>, usize) {
+    let mut used = vec![false; allows.len()];
+    let mut kept = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        for (ai, a) in allows.iter().enumerate() {
+            if a.rule == f.rule && a.target == f.line {
+                used[ai] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    let used_count = used.iter().filter(|u| **u).count();
+    for (ai, a) in allows.iter().enumerate() {
+        if !used[ai] {
+            let msg = format!("allow({}) suppressed nothing — remove it", a.rule);
+            kept.push(snip(path, lines, a.line, "unused-allow", msg));
+        }
+    }
+    (kept, used_count)
+}
+
+fn snip(path: &str, lines: &[&str], line: u32, rule: &str, message: String) -> Finding {
+    let snippet = lines
+        .get(line.saturating_sub(1) as usize)
+        .map(|l| truncate(l.trim()))
+        .unwrap_or_default();
+    Finding { file: path.to_string(), line, rule: rule.to_string(), message, snippet }
+}

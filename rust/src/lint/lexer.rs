@@ -1,0 +1,661 @@
+//! Hand-rolled Rust lexer for the lint pass.
+//!
+//! Covers the surface the analyzer actually reasons about: identifiers,
+//! lifetimes vs char literals, string/byte/raw-string literals, nested
+//! block comments, numeric literals (the int/float split matters to the
+//! float-accumulation rule) and maximal-munch punctuation. Line
+//! comments are captured separately — that is where `lint: allow(...)`
+//! directives live.
+//!
+//! Known, documented approximation: `>>` is munched greedily, so closing
+//! a nested generic (`Vec<Vec<u8>>`) produces one `>>` token. No rule
+//! pattern depends on single `>` tokens in that position.
+
+/// Lexical class of a [`Tok`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (including raw `r#ident` forms).
+    Ident,
+    /// Lifetime (`'a`, `'static`), text without the leading quote.
+    Lifetime,
+    /// Character literal (`'x'`, `'\n'`).
+    Char,
+    /// Byte literal (`b'x'`).
+    Byte,
+    /// String literal, plain or raw; text is the literal body.
+    Str,
+    /// Byte-string literal, plain or raw.
+    ByteStr,
+    /// Integer literal (including suffixed forms like `8u64`).
+    Int,
+    /// Float literal (`1.0`, `1.`, `1e3`, `1f64`).
+    Float,
+    /// Operator or punctuation, maximal munch (`::`, `+=`, `..=`).
+    Punct,
+}
+
+/// One lexical token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    /// Token class.
+    pub kind: Kind,
+    /// Source spelling (identifier name, operator, literal body).
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+impl Tok {
+    /// Is this an identifier with exactly this name?
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == Kind::Ident && self.text == name
+    }
+
+    /// Is this a punctuation token with exactly this spelling?
+    pub fn is_punct(&self, op: &str) -> bool {
+        self.kind == Kind::Punct && self.text == op
+    }
+}
+
+/// One `//` line comment (block comments are discarded — allow
+/// directives must be line comments, so they can't hide mid-expression).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Comment {
+    /// 1-based source line.
+    pub line: u32,
+    /// Text after the `//` marker, untrimmed.
+    pub text: String,
+    /// True when nothing but whitespace precedes the comment on its line.
+    pub own_line: bool,
+}
+
+/// Lexing failure (unterminated literal or comment).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LexError {
+    /// 1-based line where the failing construct started.
+    pub line: u32,
+    /// Human-readable cause.
+    pub msg: String,
+}
+
+/// Multi-char operators, longest first (maximal munch).
+const PUNCTS: [&str; 22] = [
+    "..=", "<<=", ">>=", "::", "->", "=>", "..", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=",
+    "==", "!=", "<=", ">=", "&&", "||", "<<",
+];
+
+/// Tokenize `src`, returning the token stream and every line comment.
+pub fn lex(src: &str) -> Result<(Vec<Tok>, Vec<Comment>), LexError> {
+    Lexer::new(src).run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    tokens: Vec<Tok>,
+    comments: Vec<Comment>,
+    line_has_tokens: bool,
+}
+
+impl Lexer {
+    fn new(src: &str) -> Self {
+        Lexer {
+            chars: src.chars().collect(),
+            pos: 0,
+            line: 1,
+            tokens: Vec::new(),
+            comments: Vec::new(),
+            line_has_tokens: false,
+        }
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    /// Advance one char, tracking line numbers.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(ch) = c {
+            self.pos += 1;
+            if ch == '\n' {
+                self.line += 1;
+                self.line_has_tokens = false;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: Kind, text: String, line: u32) {
+        self.tokens.push(Tok { kind, text, line });
+        self.line_has_tokens = true;
+    }
+
+    fn err(&self, line: u32, msg: &str) -> LexError {
+        LexError { line, msg: msg.to_string() }
+    }
+
+    fn run(mut self) -> Result<(Vec<Tok>, Vec<Comment>), LexError> {
+        while let Some(c) = self.peek(0) {
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment()?,
+                'r' if matches!(self.peek(1), Some('"') | Some('#')) => self.raw_or_ident(false)?,
+                'b' if self.peek(1) == Some('\'') => self.byte_literal()?,
+                'b' if self.peek(1) == Some('"') => {
+                    self.bump();
+                    self.plain_string(Kind::ByteStr)?;
+                }
+                'b' if self.peek(1) == Some('r')
+                    && matches!(self.peek(2), Some('"') | Some('#')) =>
+                {
+                    self.bump();
+                    self.raw_or_ident(true)?;
+                }
+                '\'' => self.lifetime_or_char()?,
+                '"' => self.plain_string(Kind::Str)?,
+                c if c.is_ascii_digit() => self.number(),
+                c if c.is_alphabetic() || c == '_' => self.ident(),
+                _ => self.punct(),
+            }
+        }
+        Ok((self.tokens, self.comments))
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let own_line = !self.line_has_tokens;
+        self.bump();
+        self.bump();
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.comments.push(Comment { line, text, own_line });
+    }
+
+    fn block_comment(&mut self) -> Result<(), LexError> {
+        let start = self.line;
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some('*'), Some('/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => return Err(self.err(start, "unterminated block comment")),
+            }
+        }
+        Ok(())
+    }
+
+    /// At `r` (or just past `b` of `br`): raw string, or raw identifier
+    /// (`r#type`). `byte` marks the `br` form.
+    fn raw_or_ident(&mut self, byte: bool) -> Result<(), LexError> {
+        let line = self.line;
+        self.bump(); // the 'r'
+        let mut hashes = 0usize;
+        while self.peek(hashes) == Some('#') {
+            hashes += 1;
+        }
+        let after = self.peek(hashes);
+        if after != Some('"') {
+            // `r#ident` raw identifier (exactly one '#', then ident).
+            self.pos += hashes;
+            let mut text = String::new();
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push(Kind::Ident, text, line);
+            return Ok(());
+        }
+        self.pos += hashes + 1; // consume hashes and opening quote
+        let mut body = String::new();
+        loop {
+            let Some(c) = self.peek(0) else {
+                return Err(self.err(line, "unterminated raw string"));
+            };
+            if c == '"' {
+                let mut close = 0usize;
+                while close < hashes && self.peek(1 + close) == Some('#') {
+                    close += 1;
+                }
+                if close == hashes {
+                    self.bump();
+                    self.pos += hashes;
+                    break;
+                }
+            }
+            body.push(c);
+            self.bump();
+        }
+        let kind = if byte { Kind::ByteStr } else { Kind::Str };
+        self.push(kind, body, line);
+        Ok(())
+    }
+
+    fn byte_literal(&mut self) -> Result<(), LexError> {
+        let line = self.line;
+        self.bump(); // b
+        self.bump(); // '
+        let mut text = String::new();
+        loop {
+            match self.bump() {
+                Some('\\') => {
+                    text.push('\\');
+                    if let Some(e) = self.bump() {
+                        text.push(e);
+                    }
+                }
+                Some('\'') => break,
+                Some(c) => text.push(c),
+                None => return Err(self.err(line, "unterminated byte literal")),
+            }
+        }
+        self.push(Kind::Byte, text, line);
+        Ok(())
+    }
+
+    fn plain_string(&mut self, kind: Kind) -> Result<(), LexError> {
+        let line = self.line;
+        self.bump(); // opening quote
+        let mut body = String::new();
+        loop {
+            match self.bump() {
+                Some('\\') => {
+                    body.push('\\');
+                    if let Some(e) = self.bump() {
+                        body.push(e);
+                    }
+                }
+                Some('"') => break,
+                Some(c) => body.push(c),
+                None => return Err(self.err(line, "unterminated string literal")),
+            }
+        }
+        self.push(kind, body, line);
+        Ok(())
+    }
+
+    /// At a `'`: lifetime (`'a`, `'_`, `'outer:`) or char literal
+    /// (`'x'`, `'\n'`, `'_'`).
+    fn lifetime_or_char(&mut self) -> Result<(), LexError> {
+        let line = self.line;
+        let c1 = self.peek(1);
+        let c2 = self.peek(2);
+        let ident_start = c1.map(|c| c.is_alphabetic() || c == '_').unwrap_or(false);
+        if ident_start && c2 != Some('\'') {
+            // Lifetime: quote + ident chars, no closing quote.
+            self.bump();
+            let mut text = String::new();
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push(Kind::Lifetime, text, line);
+            return Ok(());
+        }
+        // Char literal (possibly escaped or multi-char like '\u{7F}').
+        self.bump(); // opening quote
+        let mut text = String::new();
+        loop {
+            match self.bump() {
+                Some('\\') => {
+                    text.push('\\');
+                    if let Some(e) = self.bump() {
+                        text.push(e);
+                    }
+                }
+                Some('\'') => break,
+                Some(c) => text.push(c),
+                None => return Err(self.err(line, "unterminated char literal")),
+            }
+        }
+        self.push(Kind::Char, text, line);
+        Ok(())
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        let mut kind = Kind::Int;
+        if self.peek(0) == Some('0') && matches!(self.peek(1), Some('x') | Some('o') | Some('b')) {
+            text.push(self.bump().unwrap_or('0'));
+            text.push(self.bump().unwrap_or('x'));
+            while let Some(c) = self.peek(0) {
+                if c.is_ascii_hexdigit() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        } else {
+            while let Some(c) = self.peek(0) {
+                if c.is_ascii_digit() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            if self.peek(0) == Some('.') {
+                let after = self.peek(1);
+                let is_float = match after {
+                    Some(c) if c.is_ascii_digit() => true,
+                    Some('.') => false,                            // `0..n` range
+                    Some(c) if c.is_alphabetic() || c == '_' => false, // `1.max(2)`
+                    _ => true,                                     // trailing-dot `1.`
+                };
+                if is_float {
+                    kind = Kind::Float;
+                    text.push('.');
+                    self.bump();
+                    while let Some(c) = self.peek(0) {
+                        if c.is_ascii_digit() || c == '_' {
+                            text.push(c);
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+            // Exponent (`1e3`, `2.5E-7`).
+            if matches!(self.peek(0), Some('e') | Some('E')) {
+                let (a, b) = (self.peek(1), self.peek(2));
+                let exp = match a {
+                    Some(c) if c.is_ascii_digit() => true,
+                    Some('+') | Some('-') => b.map(|c| c.is_ascii_digit()).unwrap_or(false),
+                    _ => false,
+                };
+                if exp {
+                    kind = Kind::Float;
+                    text.push(self.bump().unwrap_or('e'));
+                    if matches!(self.peek(0), Some('+') | Some('-')) {
+                        text.push(self.bump().unwrap_or('+'));
+                    }
+                    while let Some(c) = self.peek(0) {
+                        if c.is_ascii_digit() || c == '_' {
+                            text.push(c);
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // Type suffix (`u64`, `f64`, `usize`); an `f` suffix makes it a float.
+        let mut suffix = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                suffix.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        if suffix.starts_with('f') {
+            kind = Kind::Float;
+        }
+        text.push_str(&suffix);
+        self.push(kind, text, line);
+    }
+
+    fn ident(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(Kind::Ident, text, line);
+    }
+
+    fn punct(&mut self) {
+        let line = self.line;
+        for op in PUNCTS {
+            let n = op.chars().count();
+            let matches = op.chars().enumerate().all(|(i, oc)| self.peek(i) == Some(oc));
+            if matches {
+                self.pos += n;
+                self.push(Kind::Punct, op.to_string(), line);
+                return;
+            }
+        }
+        // `>>` munch: only when not immediately assignment (handled above).
+        if self.peek(0) == Some('>') && self.peek(1) == Some('>') {
+            self.pos += 2;
+            self.push(Kind::Punct, ">>".to_string(), line);
+            return;
+        }
+        if let Some(c) = self.bump() {
+            self.push(Kind::Punct, c.to_string(), line);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Token stream as `(kind, text)` pairs, for exact assertions.
+    fn toks(src: &str) -> Vec<(Kind, String)> {
+        let (tokens, _) = lex(src).expect("lexes");
+        tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    fn t(kind: Kind, text: &str) -> (Kind, String) {
+        (kind, text.to_string())
+    }
+
+    #[test]
+    fn raw_strings_including_empty_and_quoted() {
+        assert_eq!(
+            toks(r##"let s = r#""#;"##),
+            vec![
+                t(Kind::Ident, "let"),
+                t(Kind::Ident, "s"),
+                t(Kind::Punct, "="),
+                t(Kind::Str, ""),
+                t(Kind::Punct, ";"),
+            ]
+        );
+        assert_eq!(
+            toks(r###"r##"a "quote" inside"##"###),
+            vec![t(Kind::Str, "a \"quote\" inside")]
+        );
+        // A raw string body never processes escapes.
+        assert_eq!(toks(r#"r"back\slash""#), vec![t(Kind::Str, "back\\slash")]);
+    }
+
+    #[test]
+    fn raw_identifiers_are_idents_not_strings() {
+        assert_eq!(
+            toks("let r#type = 1;"),
+            vec![
+                t(Kind::Ident, "let"),
+                t(Kind::Ident, "type"),
+                t(Kind::Punct, "="),
+                t(Kind::Int, "1"),
+                t(Kind::Punct, ";"),
+            ]
+        );
+    }
+
+    #[test]
+    fn nested_block_comments_vanish() {
+        assert_eq!(
+            toks("a /* x /* y /* z */ */ still comment */ b"),
+            vec![t(Kind::Ident, "a"), t(Kind::Ident, "b")]
+        );
+        assert!(lex("/* /* unclosed */").is_err());
+    }
+
+    #[test]
+    fn byte_strings_and_byte_literals() {
+        assert_eq!(
+            toks(r##"b"st\"r" br#"raw bytes"# b'x' b'\''"##),
+            vec![
+                t(Kind::ByteStr, "st\\\"r"),
+                t(Kind::ByteStr, "raw bytes"),
+                t(Kind::Byte, "x"),
+                t(Kind::Byte, "\\'"),
+            ]
+        );
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        assert_eq!(
+            toks("<'a, 'static> 'x' '\\n' '_' '_, 'outer: loop"),
+            vec![
+                t(Kind::Punct, "<"),
+                t(Kind::Lifetime, "a"),
+                t(Kind::Punct, ","),
+                t(Kind::Lifetime, "static"),
+                t(Kind::Punct, ">"),
+                t(Kind::Char, "x"),
+                t(Kind::Char, "\\n"),
+                t(Kind::Char, "_"),
+                t(Kind::Lifetime, "_"),
+                t(Kind::Punct, ","),
+                t(Kind::Lifetime, "outer"),
+                t(Kind::Punct, ":"),
+                t(Kind::Ident, "loop"),
+            ]
+        );
+        assert_eq!(toks("'\\u{7FFF}'"), vec![t(Kind::Char, "\\u{7FFF}")]);
+    }
+
+    #[test]
+    fn doc_attribute_is_plain_tokens() {
+        assert_eq!(
+            toks("#[doc = \"summary /* not a comment */\"]"),
+            vec![
+                t(Kind::Punct, "#"),
+                t(Kind::Punct, "["),
+                t(Kind::Ident, "doc"),
+                t(Kind::Punct, "="),
+                t(Kind::Str, "summary /* not a comment */"),
+                t(Kind::Punct, "]"),
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers_int_float_split() {
+        assert_eq!(
+            toks("1.0 1. 1.max(2) 0x1F 1_000 1e3 1f64 8u64 0..n 2.5e-7"),
+            vec![
+                t(Kind::Float, "1.0"),
+                t(Kind::Float, "1."),
+                t(Kind::Int, "1"),
+                t(Kind::Punct, "."),
+                t(Kind::Ident, "max"),
+                t(Kind::Punct, "("),
+                t(Kind::Int, "2"),
+                t(Kind::Punct, ")"),
+                t(Kind::Int, "0x1F"),
+                t(Kind::Int, "1_000"),
+                t(Kind::Float, "1e3"),
+                t(Kind::Float, "1f64"),
+                t(Kind::Int, "8u64"),
+                t(Kind::Int, "0"),
+                t(Kind::Punct, ".."),
+                t(Kind::Ident, "n"),
+                t(Kind::Float, "2.5e-7"),
+            ]
+        );
+    }
+
+    #[test]
+    fn punct_maximal_munch() {
+        assert_eq!(
+            toks("a += b; c ..= d; x ..y; p -> q; m => n; s::t"),
+            vec![
+                t(Kind::Ident, "a"),
+                t(Kind::Punct, "+="),
+                t(Kind::Ident, "b"),
+                t(Kind::Punct, ";"),
+                t(Kind::Ident, "c"),
+                t(Kind::Punct, "..="),
+                t(Kind::Ident, "d"),
+                t(Kind::Punct, ";"),
+                t(Kind::Ident, "x"),
+                t(Kind::Punct, ".."),
+                t(Kind::Ident, "y"),
+                t(Kind::Punct, ";"),
+                t(Kind::Ident, "p"),
+                t(Kind::Punct, "->"),
+                t(Kind::Ident, "q"),
+                t(Kind::Punct, ";"),
+                t(Kind::Ident, "m"),
+                t(Kind::Punct, "=>"),
+                t(Kind::Ident, "n"),
+                t(Kind::Punct, ";"),
+                t(Kind::Ident, "s"),
+                t(Kind::Punct, "::"),
+                t(Kind::Ident, "t"),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_are_captured_with_placement() {
+        let (_, comments) = lex("let x = 1; // trailing note\n// own line\nlet y = 2;\n").unwrap();
+        assert_eq!(comments.len(), 2);
+        assert_eq!(comments[0].text, " trailing note");
+        assert!(!comments[0].own_line);
+        assert_eq!(comments[1].line, 2);
+        assert!(comments[1].own_line);
+    }
+
+    #[test]
+    fn strings_swallow_would_be_tokens() {
+        // Nothing inside a string may leak into the token stream.
+        assert_eq!(
+            toks(r#"let s = "thread::sleep(/*x*/) // not a comment";"#),
+            vec![
+                t(Kind::Ident, "let"),
+                t(Kind::Ident, "s"),
+                t(Kind::Punct, "="),
+                t(Kind::Str, "thread::sleep(/*x*/) // not a comment"),
+                t(Kind::Punct, ";"),
+            ]
+        );
+    }
+}

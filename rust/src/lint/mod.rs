@@ -1,0 +1,224 @@
+//! A dependency-free determinism & concurrency lint for this crate.
+//!
+//! `repro lint` parses every `.rs` file with a small hand-rolled lexer
+//! (`lexer`), groups the tokens into delimiter trees (`tree`), and
+//! pattern-matches six deny-by-default rules over the sibling
+//! sequences (`rules`): `unordered-iteration`, `float-accumulation`,
+//! `wall-clock-in-model`, `lock-order`, `panic-in-request-path`, and
+//! `env-leak`. Each rule encodes a bug class this repo has actually
+//! shipped (DESIGN.md §12 maps them to the PRs that motivated them).
+//!
+//! Findings are suppressed only by an in-source comment of the form
+//! `lint: allow(<rule>) — <reason>`; the reason is mandatory, unknown
+//! rules are rejected, and an allow that suppresses nothing is itself
+//! a finding (`unused-allow`), so suppressions cannot rot. Files that
+//! fail to lex or have unbalanced delimiters produce a `parse-error`
+//! finding rather than being silently skipped. The three meta rules
+//! (`malformed-allow`, `unused-allow`, `parse-error`) are not
+//! suppressible, and neither are cross-file lock-order cycles — the
+//! fix for those is reordering, not annotating.
+
+mod engine;
+mod lexer;
+mod rules;
+mod tree;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::api::{Artifact, Column, Value};
+
+/// The six suppressible rule identifiers, in reporting order.
+pub const RULE_IDS: [&str; 6] = [
+    rules::unordered_iteration::ID,
+    rules::float_accumulation::ID,
+    rules::wall_clock::ID,
+    rules::lock_order::ID,
+    rules::panic_path::ID,
+    rules::env_leak::ID,
+];
+
+/// One lint finding, pinned to a source line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// `/`-normalized path of the offending file.
+    pub file: String,
+    /// 1-based line (0 for whole-file conditions).
+    pub line: u32,
+    /// Rule identifier (one of [`RULE_IDS`] or a meta rule).
+    pub rule: String,
+    /// What is wrong and what to do instead.
+    pub message: String,
+    /// The trimmed source line, truncated for display.
+    pub snippet: String,
+}
+
+/// The outcome of linting a set of paths.
+#[derive(Clone, Debug)]
+pub struct LintReport {
+    /// Unsuppressed findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Number of allow directives that suppressed at least one finding.
+    pub allows_used: usize,
+}
+
+impl LintReport {
+    /// No unsuppressed findings anywhere?
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Lint one in-memory source file. `path` is a label steering the
+/// path-scoped rules (e.g. `src/server/h.rs` enables panic-path);
+/// allow directives and same-file lock cycles are honored.
+pub fn lint_source(path: &str, source: &str) -> Vec<Finding> {
+    let mut edges = Vec::new();
+    let (mut findings, allows) = analyze(path, source, &mut edges);
+    findings.extend(rules::lock_order::cycle_findings(&edges));
+    let lines: Vec<&str> = source.lines().collect();
+    let (mut kept, _) = engine::apply_allows(path, &lines, findings, &allows);
+    sort_findings(&mut kept);
+    kept
+}
+
+/// Lint every `.rs` file under the given paths (files or directories,
+/// walked in sorted order), then run the cross-file lock-cycle pass.
+pub fn lint_paths(paths: &[PathBuf]) -> LintReport {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            walk_rs(p, &mut files);
+        } else if p.is_file() {
+            files.push(p.clone());
+        }
+    }
+    files.sort();
+    files.dedup();
+    let mut findings = Vec::new();
+    let mut edges = Vec::new();
+    let mut allows_used = 0;
+    for path in &files {
+        let label = path.to_string_lossy().replace('\\', "/");
+        let source = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                findings.push(parse_error(&label, 0, format!("unreadable: {e}")));
+                continue;
+            }
+        };
+        let (pre, allows) = analyze(&label, &source, &mut edges);
+        let lines: Vec<&str> = source.lines().collect();
+        let (kept, used) = engine::apply_allows(&label, &lines, pre, &allows);
+        allows_used += used;
+        findings.extend(kept);
+    }
+    findings.extend(rules::lock_order::cycle_findings(&edges));
+    sort_findings(&mut findings);
+    LintReport { findings, files: files.len(), allows_used }
+}
+
+/// The default scan roots, resolved relative to the current directory:
+/// works from the repo root (`rust/src`, ...) and from `rust/` itself
+/// (the cargo test working directory).
+pub fn default_roots() -> Vec<PathBuf> {
+    let candidates: &[&str] = if Path::new("rust/src").is_dir() {
+        &["rust/src", "rust/tests", "rust/benches", "examples"]
+    } else {
+        &["src", "tests", "benches", "../examples"]
+    };
+    candidates.iter().map(PathBuf::from).filter(|p| p.is_dir()).collect()
+}
+
+/// Render a report through the shared artifact layer (text/CSV/JSON).
+pub fn artifact(report: &LintReport) -> Artifact {
+    let mut art = Artifact::new("lint", "Static analysis findings")
+        .meta("files_scanned", report.files.to_string())
+        .meta("allows_used", report.allows_used.to_string())
+        .meta("rules", RULE_IDS.join(", "))
+        .columns(vec![
+            Column::new("file"),
+            Column::new("line"),
+            Column::new("rule"),
+            Column::new("message"),
+            Column::new("snippet"),
+        ]);
+    for f in &report.findings {
+        art.push_row(vec![
+            Value::from(f.file.as_str()),
+            Value::from(u64::from(f.line)),
+            Value::from(f.rule.as_str()),
+            Value::from(f.message.as_str()),
+            Value::from(f.snippet.as_str()),
+        ]);
+    }
+    if report.findings.is_empty() {
+        art.push_note("clean: no unsuppressed findings");
+    }
+    art
+}
+
+/// Lex, parse, and run every applicable rule on one file. Returns the
+/// pre-suppression findings and the parsed allow directives; lock
+/// edges accumulate into `edges` for the caller's cycle pass.
+fn analyze(
+    path: &str,
+    source: &str,
+    edges: &mut Vec<rules::LockEdge>,
+) -> (Vec<Finding>, Vec<engine::Allow>) {
+    let mut findings = Vec::new();
+    let (tokens, comments) = match lexer::lex(source) {
+        Ok(x) => x,
+        Err(e) => {
+            findings.push(parse_error(path, e.line, e.msg));
+            return (findings, Vec::new());
+        }
+    };
+    let nodes = match tree::build(tokens.clone()) {
+        Ok(n) => n,
+        Err(e) => {
+            findings.push(parse_error(path, e.line, e.msg));
+            return (findings, Vec::new());
+        }
+    };
+    let ctx = engine::FileCtx::new(path, source, &nodes);
+    rules::run(&ctx, &mut findings, edges);
+    let lines: Vec<&str> = source.lines().collect();
+    let allows = engine::parse_allows(path, &lines, &comments, &tokens, &mut findings);
+    (findings, allows)
+}
+
+fn parse_error(path: &str, line: u32, msg: String) -> Finding {
+    Finding {
+        file: path.to_string(),
+        line,
+        rule: "parse-error".to_string(),
+        message: msg,
+        snippet: String::new(),
+    }
+}
+
+fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule, &a.message).cmp(&(&b.file, b.line, &b.rule, &b.message))
+    });
+}
+
+/// Collect `.rs` files under `dir`, recursing in sorted order so the
+/// report itself is deterministic.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! `env-leak`: host environment flowing into modeled results.
+//!
+//! Library code that reads `std::env` or sizes itself from
+//! `available_parallelism()` produces artifacts that differ between
+//! hosts — the PR 5 sweep engine once keyed batch width off the CPU
+//! count and two machines disagreed on every table. Environment access
+//! belongs in the CLI shell (`src/main.rs`) and the server, which the
+//! dispatcher already exempts; everywhere else it needs an allow
+//! explaining why the value cannot reach an artifact.
+
+use crate::lint::engine::FileCtx;
+use crate::lint::tree::for_each_seq;
+use crate::lint::Finding;
+
+/// Rule id.
+pub const ID: &str = "env-leak";
+
+const ENV_FNS: [&str; 6] = ["var", "var_os", "vars", "vars_os", "args", "args_os"];
+
+/// Run the rule over the whole file (non-test functions are the
+/// interesting ones, but a use in test helpers is flagged too — tests
+/// must also be host-independent here).
+pub fn check(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for func in ctx.functions.iter().filter(|f| !f.is_test) {
+        for_each_seq(&func.body.children, &mut |seq| {
+            for i in 0..seq.len() {
+                // `env::var(..)`-family calls. A bare `use std::env::var;`
+                // has no call parentheses and stays silent.
+                if seq[i].is_ident("env")
+                    && seq.get(i + 1).is_some_and(|n| n.is_punct("::"))
+                    && seq
+                        .get(i + 2)
+                        .and_then(|n| n.leaf())
+                        .is_some_and(|t| ENV_FNS.contains(&t.text.as_str()))
+                    && seq.get(i + 3).is_some_and(|n| n.is_group('('))
+                {
+                    let msg = String::from(
+                        "`std::env` read in library code; environment must enter through \
+                         the CLI shell as explicit config",
+                    );
+                    out.push(ctx.finding(seq[i].line(), ID, msg));
+                }
+                // `available_parallelism()` — host CPU count.
+                if seq[i].is_ident("available_parallelism")
+                    && seq.get(i + 1).is_some_and(|n| n.is_group('('))
+                {
+                    let msg = String::from(
+                        "host CPU count must not shape modeled results; take the width \
+                         as explicit config",
+                    );
+                    out.push(ctx.finding(seq[i].line(), ID, msg));
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! `float-accumulation`: order-sensitive f64 reduction in a loop.
+//!
+//! Float addition is not associative, so `acc += x` inside a loop whose
+//! visit order is not pinned can drift between runs — the PR 3 report
+//! totals drifted exactly this way. Exemptions: loops headed by a
+//! literal range (`for i in 0..n` — order is fixed by construction),
+//! loops preceded by a `.sort*` call on something in the same function
+//! (the sort pins the visit order), and `.sum::<f64>()` chains whose
+//! head is an array literal or a parenthesized range (fixed order
+//! again). One finding per innermost accumulating loop, so a single
+//! allow on the `for` line covers the whole reduction.
+
+use crate::lint::engine::FileCtx;
+use crate::lint::lexer::Kind;
+use crate::lint::tree::{for_each_seq, Node};
+use crate::lint::Finding;
+
+/// Rule id.
+pub const ID: &str = "float-accumulation";
+
+/// Run the rule over every non-test function.
+pub fn check(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let floats = collect_float_names(ctx.nodes);
+    for func in ctx.functions.iter().filter(|f| !f.is_test) {
+        let sorted_line = first_sort_line(&func.body.children);
+        scan_loops(ctx, &func.body.children, &floats, sorted_line, out);
+        scan_sums(ctx, &func.body.children, out);
+    }
+}
+
+/// Identifiers bound or annotated as floats anywhere in the file:
+/// `x: f64`, `x: f32`, or `let [mut] x = <float literal>`.
+fn collect_float_names(nodes: &[Node]) -> Vec<String> {
+    let mut out = Vec::new();
+    for_each_seq(nodes, &mut |seq| {
+        for i in 0..seq.len() {
+            let Some(tok) = seq[i].leaf() else {
+                continue;
+            };
+            if tok.kind != Kind::Ident {
+                continue;
+            }
+            let annotated = seq.get(i + 1).is_some_and(|n| n.is_punct(":"))
+                && seq.get(i + 2).is_some_and(|n| n.is_ident("f64") || n.is_ident("f32"));
+            let initialized = seq.get(i + 1).is_some_and(|n| n.is_punct("="))
+                && seq.get(i + 2).and_then(|n| n.leaf()).is_some_and(|t| t.kind == Kind::Float);
+            if (annotated || initialized) && !out.contains(&tok.text) {
+                out.push(tok.text.clone());
+            }
+        }
+    });
+    out
+}
+
+/// Line of the first `.sort*` call in the function body, if any.
+fn first_sort_line(nodes: &[Node]) -> Option<u32> {
+    let mut best: Option<u32> = None;
+    for_each_seq(nodes, &mut |seq| {
+        for i in 0..seq.len() {
+            if !seq[i].is_punct(".") {
+                continue;
+            }
+            let Some(m) = seq.get(i + 1).and_then(|n| n.leaf()) else {
+                continue;
+            };
+            if m.text.starts_with("sort") && seq.get(i + 2).is_some_and(|n| n.is_group('(')) {
+                best = Some(best.map_or(m.line, |b| b.min(m.line)));
+            }
+        }
+    });
+    best
+}
+
+/// Find `for PAT in HEAD { body }` loops and report the innermost ones
+/// that accumulate into a float without an order guard.
+fn scan_loops(
+    ctx: &FileCtx,
+    seq: &[Node],
+    floats: &[String],
+    sorted_line: Option<u32>,
+    out: &mut Vec<Finding>,
+) {
+    let mut i = 0;
+    while i < seq.len() {
+        if let Some(g) = seq[i].group() {
+            // Non-loop groups (blocks, call args) may hold loops too.
+            scan_loops(ctx, &g.children, floats, sorted_line, out);
+            i += 1;
+            continue;
+        }
+        if !seq[i].is_ident("for") {
+            i += 1;
+            continue;
+        }
+        let Some((head, body_idx)) = loop_parts(seq, i) else {
+            i += 1;
+            continue;
+        };
+        let body = seq[body_idx].group().expect("loop_parts returns a group index");
+        // Inner loops first: the finding belongs to the innermost loop.
+        scan_loops(ctx, &body.children, floats, sorted_line, out);
+        let line = seq[i].line();
+        let range_headed = head.iter().any(|n| n.is_punct("..") || n.is_punct("..="));
+        let sort_guarded = sorted_line.is_some_and(|s| s < line);
+        if !range_headed && !sort_guarded {
+            if let Some(acc) = direct_float_acc(&body.children, floats) {
+                let msg = format!(
+                    "`{acc} +=` accumulates f64 in a loop whose visit order is not \
+                     pinned; sort the input or sum over a fixed-order range"
+                );
+                out.push(ctx.finding(line, ID, msg));
+            }
+        }
+        i = body_idx + 1;
+    }
+}
+
+/// The header nodes (between `in` and the body) and body index of a
+/// `for` loop starting at `for_idx`.
+fn loop_parts(seq: &[Node], for_idx: usize) -> Option<(&[Node], usize)> {
+    let mut j = for_idx + 1;
+    while j < seq.len() && !seq[j].is_ident("in") {
+        if seq[j].is_group('{') {
+            return None;
+        }
+        j += 1;
+    }
+    let head_start = j + 1;
+    let mut k = head_start;
+    while k < seq.len() && !seq[k].is_group('{') {
+        k += 1;
+    }
+    if k >= seq.len() || head_start > k {
+        return None;
+    }
+    Some((&seq[head_start..k], k))
+}
+
+/// First float accumulator `NAME += ...` in the loop body, skipping
+/// nested `for` loop bodies (those report on their own line) and
+/// indexed left-hand sides (`a[i] +=` writes to distinct slots).
+fn direct_float_acc(seq: &[Node], floats: &[String]) -> Option<String> {
+    let mut i = 0;
+    while i < seq.len() {
+        if seq[i].is_ident("for") {
+            if let Some((_, body_idx)) = loop_parts(seq, i) {
+                i = body_idx + 1;
+                continue;
+            }
+        }
+        if let Some(g) = seq[i].group() {
+            if let Some(name) = direct_float_acc(&g.children, floats) {
+                return Some(name);
+            }
+            i += 1;
+            continue;
+        }
+        if let Some(tok) = seq[i].leaf() {
+            if tok.kind == Kind::Ident && seq.get(i + 1).is_some_and(|n| n.is_punct("+=")) {
+                let is_float = floats.contains(&tok.text) || rhs_is_float(&seq[i + 2..], floats);
+                if is_float {
+                    return Some(tok.text.clone());
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Does the right-hand side (up to `;` at this level) mention a float
+/// literal, an `f64`/`f32` cast, or a known float name?
+fn rhs_is_float(seq: &[Node], floats: &[String]) -> bool {
+    for node in seq {
+        if node.is_punct(";") {
+            return false;
+        }
+        if let Some(tok) = node.leaf() {
+            if tok.kind == Kind::Float
+                || tok.is_ident("f64")
+                || tok.is_ident("f32")
+                || (tok.kind == Kind::Ident && floats.contains(&tok.text))
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Report `.sum::<f64>()` / `.sum::<f32>()` chains with unpinned heads.
+fn scan_sums(ctx: &FileCtx, nodes: &[Node], out: &mut Vec<Finding>) {
+    for_each_seq(nodes, &mut |seq| {
+        for i in 0..seq.len() {
+            if !seq[i].is_punct(".") || !seq.get(i + 1).is_some_and(|n| n.is_ident("sum")) {
+                continue;
+            }
+            let turbofish = seq.get(i + 2).is_some_and(|n| n.is_punct("::"))
+                && seq.get(i + 3).is_some_and(|n| n.is_punct("<"))
+                && seq.get(i + 4).is_some_and(|n| n.is_ident("f64") || n.is_ident("f32"));
+            if !turbofish {
+                continue; // plain `.sum()` is integer-typed here by convention
+            }
+            if chain_head_is_ordered(seq, i) {
+                continue;
+            }
+            let msg = String::from(
+                "`.sum::<f64>()` over an iterator whose order is not pinned; sum a \
+                 sorted Vec or a fixed array instead",
+            );
+            out.push(ctx.finding(seq[i + 1].line(), ID, msg));
+        }
+    });
+}
+
+/// Walk the method chain back from the `.` at `dot` to its head; heads
+/// that fix the order (array literal, parenthesized range) are exempt.
+fn chain_head_is_ordered(seq: &[Node], dot: usize) -> bool {
+    let mut j = dot;
+    while j > 0 {
+        let prev = &seq[j - 1];
+        let chain_link = prev.is_punct(".")
+            || prev.is_punct("::")
+            || prev.is_punct("<")
+            || prev.is_punct(">")
+            || prev.is_group('(')
+            || prev.is_group('[')
+            || prev.leaf().is_some_and(|t| t.kind == Kind::Ident);
+        if !chain_link {
+            break;
+        }
+        j -= 1;
+    }
+    match &seq[j] {
+        // `[a, b].iter()...` — head is the array literal itself; an
+        // indexing `name[i]...` chain instead heads at the ident.
+        Node::Group(g) if g.delim == '[' => true,
+        Node::Group(g) if g.delim == '(' => {
+            g.children.iter().any(|n| n.is_punct("..") || n.is_punct("..="))
+        }
+        _ => false,
+    }
+}

@@ -1,0 +1,214 @@
+//! `lock-order`: nested lock acquisition and cross-function cycles.
+//!
+//! Two threads taking the same pair of locks in opposite orders
+//! deadlock; one function re-locking a mutex it already holds deadlocks
+//! alone. The walker tracks which lock guards are held at each point: a
+//! `let`-bound guard lives until its enclosing brace closes or an
+//! explicit `drop(..)`; a temporary guard
+//! (`x.lock().unwrap().push(..)`) spans only its own expression, so it
+//! contributes edges but is never left held. Every acquisition made
+//! while holding another lock records a held→acquired edge;
+//! same-receiver edges are reported immediately, and the edge set is
+//! merged across all files for a global cycle check (AB/BA orders in
+//! different functions).
+
+use crate::lint::engine::FileCtx;
+use crate::lint::lexer::Kind;
+use crate::lint::tree::Node;
+use crate::lint::Finding;
+
+/// Rule id.
+pub const ID: &str = "lock-order";
+
+/// One observed "acquired `to` while holding `from`" event.
+#[derive(Clone, Debug)]
+pub struct LockEdge {
+    /// Receiver name of the lock already held.
+    pub from: String,
+    /// Receiver name of the lock being acquired.
+    pub to: String,
+    /// File of the acquisition.
+    pub file: String,
+    /// Line of the acquisition.
+    pub line: u32,
+    /// Source line of the acquisition, for the finding snippet.
+    pub snippet: String,
+}
+
+/// Walk every non-test function, reporting same-receiver re-locks and
+/// recording cross-receiver edges for the global cycle pass.
+pub fn collect(ctx: &FileCtx, out: &mut Vec<Finding>, edges: &mut Vec<LockEdge>) {
+    for func in ctx.functions.iter().filter(|f| !f.is_test) {
+        let mut held: Vec<String> = Vec::new();
+        walk(ctx, &func.body.children, &mut held, out, edges);
+    }
+}
+
+fn walk(
+    ctx: &FileCtx,
+    seq: &[Node],
+    held: &mut Vec<String>,
+    out: &mut Vec<Finding>,
+    edges: &mut Vec<LockEdge>,
+) {
+    let base = held.len();
+    let mut i = 0;
+    while i < seq.len() {
+        // `drop(..)` releases a guard early. The dropped name is not
+        // matched against receivers (guards are bound under arbitrary
+        // names), so release the most recent hold — the idiomatic
+        // target of an explicit drop.
+        if seq[i].is_ident("drop")
+            && seq.get(i + 1).is_some_and(|n| n.is_group('('))
+            && held.len() > base
+        {
+            held.pop();
+            i += 2;
+            continue;
+        }
+        if let Some(g) = seq[i].group() {
+            if g.delim == '{' {
+                // Nested scope: guards bound inside die at the brace.
+                walk(ctx, &g.children, held, out, edges);
+            } else {
+                // Expression group: temporaries inside cannot outlive it.
+                let depth = held.len();
+                walk(ctx, &g.children, held, out, edges);
+                held.truncate(depth);
+            }
+            i += 1;
+            continue;
+        }
+        let acquisition = seq[i].is_punct(".")
+            && seq
+                .get(i + 1)
+                .is_some_and(|n| n.is_ident("lock") || n.is_ident("read") || n.is_ident("write"))
+            && seq
+                .get(i + 2)
+                .and_then(|n| n.group())
+                .is_some_and(|g| g.delim == '(' && g.children.is_empty());
+        if acquisition {
+            let line = seq[i + 1].line();
+            if let Some(recv) = receiver_name(seq, i) {
+                for h in held.iter() {
+                    if *h == recv {
+                        let msg = format!(
+                            "`{recv}` is locked while a guard on `{recv}` is still held \
+                             — this deadlocks"
+                        );
+                        out.push(ctx.finding(line, ID, msg));
+                    } else {
+                        let snippet = ctx.finding(line, ID, String::new()).snippet;
+                        let edge = LockEdge {
+                            from: h.clone(),
+                            to: recv.clone(),
+                            file: ctx.path.to_string(),
+                            line,
+                            snippet,
+                        };
+                        edges.push(edge);
+                    }
+                }
+                if stmt_has_let(seq, i) {
+                    held.push(recv);
+                }
+            }
+            i += 3;
+            continue;
+        }
+        i += 1;
+    }
+    held.truncate(base);
+}
+
+/// Receiver of a `.lock()`-style call: the nearest identifier before
+/// the dot, skipping indexing/call groups (`slots[i].lock()` → slots)
+/// and field chains (`self.inner.lock()` → inner). A bare
+/// `self.lock()` has no usable name.
+fn receiver_name(seq: &[Node], dot: usize) -> Option<String> {
+    let mut j = dot;
+    while j > 0 {
+        j -= 1;
+        match &seq[j] {
+            Node::Group(_) => continue,
+            Node::Leaf(t) if t.kind == Kind::Ident => {
+                if t.text == "self" {
+                    return None;
+                }
+                return Some(t.text.clone());
+            }
+            Node::Leaf(t) if t.is_punct(".") || t.is_punct("&") => continue,
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Is the acquisition at `dot` part of a `let` statement at this level?
+/// (Guards not bound by `let` are temporaries: edge-only, never held.)
+fn stmt_has_let(seq: &[Node], dot: usize) -> bool {
+    let mut j = dot;
+    while j > 0 {
+        j -= 1;
+        if seq[j].is_punct(";") {
+            return false;
+        }
+        if seq[j].is_ident("let") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Global pass over the merged edge set: report one finding per
+/// distinct pair of locks that is taken in both orders somewhere.
+pub fn cycle_findings(edges: &[LockEdge]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut reported: Vec<(String, String)> = Vec::new();
+    for e in edges {
+        // The edge closes a cycle if `to` can already reach `from`.
+        if !reaches(edges, &e.to, &e.from) {
+            continue;
+        }
+        let key = (e.from.clone(), e.to.clone());
+        let mirror = (e.to.clone(), e.from.clone());
+        if reported.contains(&key) || reported.contains(&mirror) {
+            continue;
+        }
+        reported.push(key);
+        let message = format!(
+            "lock order cycle: `{}` is taken while holding `{}`, but elsewhere `{}` is \
+             reachable while holding `{}`",
+            e.to, e.from, e.from, e.to
+        );
+        out.push(Finding {
+            file: e.file.clone(),
+            line: e.line,
+            rule: ID.to_string(),
+            message,
+            snippet: e.snippet.clone(),
+        });
+    }
+    out
+}
+
+/// Is `to` reachable from `from` over the edge set (iterative DFS)?
+fn reaches(edges: &[LockEdge], from: &str, to: &str) -> bool {
+    let mut stack = vec![from.to_string()];
+    let mut seen: Vec<String> = Vec::new();
+    while let Some(cur) = stack.pop() {
+        if cur == to {
+            return true;
+        }
+        if seen.contains(&cur) {
+            continue;
+        }
+        seen.push(cur.clone());
+        for e in edges {
+            if e.from == cur {
+                stack.push(e.to.clone());
+            }
+        }
+    }
+    false
+}

@@ -1,0 +1,41 @@
+//! The rule catalog and per-file dispatcher.
+//!
+//! Scope policy (DESIGN.md §12): every rule skips test code except
+//! wall-clock (sleeping tests are a real flake source); wall-clock
+//! and float-accumulation skip `benches/`, where real time is the
+//! point and the floats being folded are timing samples, not modeled
+//! results; wall-clock also skips `src/server/` (timeouts need real
+//! clocks); panic-path runs only on the request-handling trees
+//! (`src/server/`, `src/api/`); env-leak runs on library code but not
+//! the CLI shell or the server (whose thread count is operational, not
+//! modeled).
+
+pub mod env_leak;
+pub mod float_accumulation;
+pub mod lock_order;
+pub mod panic_path;
+pub mod unordered_iteration;
+pub mod wall_clock;
+
+use crate::lint::engine::FileCtx;
+use crate::lint::Finding;
+pub use self::lock_order::LockEdge;
+
+/// Run every rule that applies to this file. Lock-acquisition edges are
+/// collected into `edges` for the cross-file cycle pass.
+pub fn run(ctx: &FileCtx, out: &mut Vec<Finding>, edges: &mut Vec<LockEdge>) {
+    unordered_iteration::check(ctx, out);
+    if !ctx.scope.is_bench {
+        float_accumulation::check(ctx, out);
+    }
+    if !ctx.scope.is_bench && !ctx.scope.is_server {
+        wall_clock::check(ctx, out);
+    }
+    lock_order::collect(ctx, out, edges);
+    if ctx.scope.is_server || ctx.scope.is_api {
+        panic_path::check(ctx, out);
+    }
+    if ctx.scope.is_src && !ctx.scope.is_main && !ctx.scope.is_server {
+        env_leak::check(ctx, out);
+    }
+}

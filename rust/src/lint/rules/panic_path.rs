@@ -1,0 +1,126 @@
+//! `panic-in-request-path`: aborts reachable from a served request.
+//!
+//! A panic inside `src/server/` or `src/api/` kills the worker thread
+//! mid-request (the PR 4 server leaked a half-written response exactly
+//! this way); request handling must surface errors as responses.
+//! Exemptions keep the rule honest: lock-poisoning `unwrap`/`expect`
+//! directly chained on `.lock()` / `.into_inner()` (poisoning already
+//! means a panic elsewhere), `unwrap` on `write!`/`writeln!` into a
+//! `String` (infallible by contract), `expect` calls whose argument is
+//! not a string literal (those are parser methods, not
+//! `Option::expect`), and — in the wire parsers only — slice indexing
+//! by a literal or a range (bounds are locally checked there).
+
+use crate::lint::engine::FileCtx;
+use crate::lint::lexer::Kind;
+use crate::lint::tree::{for_each_seq, Node};
+use crate::lint::Finding;
+
+/// Rule id.
+pub const ID: &str = "panic-in-request-path";
+
+/// Run the rule over every non-test function of a server/api file.
+pub fn check(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for func in ctx.functions.iter().filter(|f| !f.is_test) {
+        for_each_seq(&func.body.children, &mut |seq| {
+            scan_seq(ctx, seq, out);
+        });
+    }
+}
+
+/// Is the `.` at position `i` directly chained on a `.lock()` or
+/// `.into_inner()` call (the lock-poisoning idiom)?
+fn poisoning_chain(seq: &[Node], i: usize) -> bool {
+    i >= 3
+        && seq[i - 3].is_punct(".")
+        && (seq[i - 2].is_ident("lock") || seq[i - 2].is_ident("into_inner"))
+        && seq[i - 1].is_group('(')
+}
+
+fn scan_seq(ctx: &FileCtx, seq: &[Node], out: &mut Vec<Finding>) {
+    for i in 0..seq.len() {
+        // `.unwrap()` — exempt when chained on a lock acquisition or
+        // when the statement is a write!-family macro into a buffer.
+        if seq[i].is_punct(".")
+            && seq.get(i + 1).is_some_and(|n| n.is_ident("unwrap"))
+            && seq.get(i + 2).is_some_and(|n| n.is_group('('))
+            && !poisoning_chain(seq, i)
+            && !stmt_has_write_macro(seq, i)
+        {
+            let msg = String::from(
+                "`.unwrap()` can panic mid-request; map the error into a response",
+            );
+            out.push(ctx.finding(seq[i + 1].line(), ID, msg));
+        }
+        // `.expect("...")` — poisoning chains are exempt; non-string
+        // arguments are not `Option::expect` at all.
+        if seq[i].is_punct(".")
+            && seq.get(i + 1).is_some_and(|n| n.is_ident("expect"))
+            && seq.get(i + 2).is_some_and(|n| n.is_group('('))
+        {
+            let arg_is_str = seq[i + 2]
+                .group()
+                .and_then(|g| g.children.first())
+                .and_then(|n| n.leaf())
+                .is_some_and(|t| t.kind == Kind::Str);
+            if arg_is_str && !poisoning_chain(seq, i) {
+                let msg = String::from(
+                    "`.expect()` can panic mid-request; map the error into a response",
+                );
+                out.push(ctx.finding(seq[i + 1].line(), ID, msg));
+            }
+        }
+        // `panic!` / `todo!` / `unimplemented!` macro invocations.
+        if seq.get(i + 1).is_some_and(|n| n.is_punct("!")) {
+            if let Some(t) = seq[i].leaf() {
+                if matches!(t.text.as_str(), "panic" | "todo" | "unimplemented") {
+                    let msg = format!("`{}!` aborts the worker mid-request", t.text);
+                    out.push(ctx.finding(t.line, ID, msg));
+                }
+            }
+        }
+        // Slice indexing, wire parsers only: `expr[i]` with a computed
+        // index. Literal indices and `..` ranges are locally checked.
+        if ctx.scope.is_parser {
+            if let Some(g) = seq[i].group().filter(|g| g.delim == '[') {
+                let postfix = i > 0
+                    && (seq[i - 1].leaf().is_some_and(|t| t.kind == Kind::Ident)
+                        || seq[i - 1].is_group('(')
+                        || seq[i - 1].is_group('['));
+                let keyword_before = i > 0
+                    && seq[i - 1]
+                        .leaf()
+                        .is_some_and(|t| matches!(t.text.as_str(), "mut" | "in" | "return"));
+                let ranged = g.children.iter().any(|n| n.is_punct("..") || n.is_punct("..="));
+                let literal = g.children.len() == 1
+                    && g.children[0].leaf().is_some_and(|t| t.kind == Kind::Int);
+                if postfix && !keyword_before && !ranged && !literal && !g.children.is_empty() {
+                    let msg = String::from(
+                        "computed slice index can panic on malformed input; use `.get()`",
+                    );
+                    out.push(ctx.finding(g.line, ID, msg));
+                }
+            }
+        }
+    }
+}
+
+/// Does the statement containing position `i` start with a
+/// `write!`/`writeln!` macro at this sibling level?
+fn stmt_has_write_macro(seq: &[Node], i: usize) -> bool {
+    let mut j = i;
+    loop {
+        if seq[j].is_punct(";") {
+            return false;
+        }
+        if (seq[j].is_ident("write") || seq[j].is_ident("writeln"))
+            && seq.get(j + 1).is_some_and(|n| n.is_punct("!"))
+        {
+            return true;
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+}

@@ -1,0 +1,89 @@
+//! `unordered-iteration`: iterating a `HashMap`/`HashSet`.
+//!
+//! Hash iteration order is seeded per process, so anything it feeds —
+//! artifact rows, report totals, f64 accumulation — can differ between
+//! runs. The PR 1 storage-bytes bug was exactly this class. Keyed
+//! access (`get`/`entry`/`insert`/`remove`/`len`) is fine; producing an
+//! order is not. Fix by switching to `BTreeMap`/`BTreeSet` or sorting
+//! into a `Vec` first.
+
+use crate::lint::engine::FileCtx;
+use crate::lint::tree::{for_each_seq, Node};
+use crate::lint::Finding;
+
+/// Rule id.
+pub const ID: &str = "unordered-iteration";
+
+const ITER_METHODS: [&str; 8] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "into_keys", "into_values"];
+
+/// Run the rule over every non-test function.
+pub fn check(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.hash_names.is_empty() {
+        return;
+    }
+    for func in ctx.functions.iter().filter(|f| !f.is_test) {
+        for_each_seq(&func.body.children, &mut |seq| {
+            scan_seq(ctx, seq, out);
+        });
+    }
+}
+
+fn scan_seq(ctx: &FileCtx, seq: &[Node], out: &mut Vec<Finding>) {
+    for i in 0..seq.len() {
+        // `name.iter()` / `.keys()` / `.values()` / `.drain(..)` chains.
+        if let Some(tok) = seq[i].leaf() {
+            if ctx.hash_names.contains(&tok.text)
+                && seq.get(i + 1).is_some_and(|n| n.is_punct("."))
+            {
+                let method = seq.get(i + 2).and_then(|n| n.leaf());
+                let called = seq.get(i + 3).is_some_and(|n| n.is_group('('));
+                if let Some(m) = method {
+                    if called && (ITER_METHODS.contains(&m.text.as_str()) || m.text == "drain") {
+                        let msg = format!(
+                            "iteration order of hash-keyed `{}` is seeded per process; \
+                             use a BTree collection or sort first",
+                            tok.text
+                        );
+                        out.push(ctx.finding(m.line, ID, msg));
+                    }
+                }
+            }
+        }
+        // `for pat in [&][mut] name { .. }` direct iteration.
+        if seq[i].is_ident("for") {
+            if let Some((name, line)) = direct_for_target(ctx, seq, i) {
+                let msg = format!(
+                    "`for` over hash-keyed `{name}` visits entries in seeded order; \
+                     use a BTree collection or sort first"
+                );
+                out.push(ctx.finding(line, ID, msg));
+            }
+        }
+    }
+}
+
+/// For `for .. in [&][mut] NAME {`, the hash-typed NAME if any.
+fn direct_for_target(ctx: &FileCtx, seq: &[Node], for_idx: usize) -> Option<(String, u32)> {
+    let mut j = for_idx + 1;
+    while j < seq.len() && !seq[j].is_ident("in") {
+        if seq[j].is_group('{') {
+            return None; // `for` without `in` (not a loop header)
+        }
+        j += 1;
+    }
+    let mut k = j + 1;
+    while seq.get(k).is_some_and(|n| n.is_punct("&") || n.is_ident("mut")) {
+        k += 1;
+    }
+    let tok = seq.get(k).and_then(|n| n.leaf())?;
+    if !ctx.hash_names.contains(&tok.text) {
+        return None;
+    }
+    // The body brace must follow directly: a method call on the map is
+    // handled by the chain pattern instead (avoids double-reporting).
+    if seq.get(k + 1).is_some_and(|n| n.is_group('{')) {
+        return Some((tok.text.clone(), tok.line));
+    }
+    None
+}

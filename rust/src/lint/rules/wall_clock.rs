@@ -1,0 +1,51 @@
+//! `wall-clock-in-model`: real time read inside modeled code.
+//!
+//! The simulator's outputs must be a pure function of its inputs;
+//! `Instant::now()`, `SystemTime` reads, and `thread::sleep` smuggle
+//! host timing into results and make tests flaky (the PR 4 queue tests
+//! deadlocked on exactly such a sleep). The dispatcher already exempts
+//! `benches/` and `src/server/`, where wall time is the point; test
+//! code is deliberately NOT exempt — sleeping tests are a flake source,
+//! so a test that truly needs time must carry an allow with a reason.
+
+use crate::lint::engine::FileCtx;
+use crate::lint::tree::for_each_seq;
+use crate::lint::Finding;
+
+/// Rule id.
+pub const ID: &str = "wall-clock-in-model";
+
+/// Run the rule over the whole file, test code included.
+pub fn check(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for_each_seq(ctx.nodes, &mut |seq| {
+        for i in 0..seq.len() {
+            // `Instant::now` — a use-decl lacks the `::now` tail.
+            if seq[i].is_ident("Instant")
+                && seq.get(i + 1).is_some_and(|n| n.is_punct("::"))
+                && seq.get(i + 2).is_some_and(|n| n.is_ident("now"))
+            {
+                let msg = String::from(
+                    "`Instant::now()` reads the host clock; model time must come from \
+                     simulated cycles",
+                );
+                out.push(ctx.finding(seq[i].line(), ID, msg));
+            }
+            // Any `SystemTime::` member access.
+            if seq[i].is_ident("SystemTime") && seq.get(i + 1).is_some_and(|n| n.is_punct("::")) {
+                let msg = String::from(
+                    "`SystemTime` reads the host clock; results must not depend on when \
+                     the run happened",
+                );
+                out.push(ctx.finding(seq[i].line(), ID, msg));
+            }
+            // A `sleep(..)` call — a bare `use ...::sleep;` has no args.
+            if seq[i].is_ident("sleep") && seq.get(i + 1).is_some_and(|n| n.is_group('(')) {
+                let msg = String::from(
+                    "`sleep` couples behavior to host scheduling; synchronize on \
+                     channels or conditions instead",
+                );
+                out.push(ctx.finding(seq[i].line(), ID, msg));
+            }
+        }
+    });
+}

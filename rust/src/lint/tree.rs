@@ -1,0 +1,176 @@
+//! Token trees: the flat token stream grouped by `()`/`[]`/`{}`.
+//!
+//! Rules pattern-match over sibling sequences (a group's children plus
+//! the top-level sequence) instead of a full AST — precise enough for
+//! the lint patterns, tiny enough to audit.
+
+use crate::lint::lexer::{Kind, Tok};
+
+/// One node of a token tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    /// A non-delimiter token.
+    Leaf(Tok),
+    /// A delimited group and its children.
+    Group(Group),
+}
+
+/// A delimited token group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Group {
+    /// Opening delimiter: `(`, `[` or `{`.
+    pub delim: char,
+    /// Line of the opening delimiter.
+    pub line: u32,
+    /// Child nodes between the delimiters.
+    pub children: Vec<Node>,
+}
+
+/// Tree-building failure (unbalanced delimiters).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TreeError {
+    /// Line of the offending delimiter (or 0 at end of input).
+    pub line: u32,
+    /// Human-readable cause.
+    pub msg: String,
+}
+
+impl Node {
+    /// The leaf token, if this node is one.
+    pub fn leaf(&self) -> Option<&Tok> {
+        match self {
+            Node::Leaf(t) => Some(t),
+            Node::Group(_) => None,
+        }
+    }
+
+    /// The group, if this node is one.
+    pub fn group(&self) -> Option<&Group> {
+        match self {
+            Node::Leaf(_) => None,
+            Node::Group(g) => Some(g),
+        }
+    }
+
+    /// Is this a leaf identifier with the given name?
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.leaf().is_some_and(|t| t.is_ident(name))
+    }
+
+    /// Is this a leaf punct with the given spelling?
+    pub fn is_punct(&self, op: &str) -> bool {
+        self.leaf().is_some_and(|t| t.is_punct(op))
+    }
+
+    /// Is this a group with the given opening delimiter?
+    pub fn is_group(&self, delim: char) -> bool {
+        self.group().is_some_and(|g| g.delim == delim)
+    }
+
+    /// Source line of the node (opening delimiter for groups).
+    pub fn line(&self) -> u32 {
+        match self {
+            Node::Leaf(t) => t.line,
+            Node::Group(g) => g.line,
+        }
+    }
+}
+
+/// Group a token stream into a tree. Delimiters must balance.
+pub fn build(tokens: Vec<Tok>) -> Result<Vec<Node>, TreeError> {
+    let mut stack: Vec<Group> = Vec::new();
+    let mut top: Vec<Node> = Vec::new();
+    for tok in tokens {
+        if tok.kind == Kind::Punct && matches!(tok.text.as_str(), "(" | "[" | "{") {
+            let delim = tok.text.chars().next().unwrap_or('(');
+            stack.push(Group { delim, line: tok.line, children: Vec::new() });
+            continue;
+        }
+        if tok.kind == Kind::Punct && matches!(tok.text.as_str(), ")" | "]" | "}") {
+            let Some(group) = stack.pop() else {
+                return Err(TreeError {
+                    line: tok.line,
+                    msg: format!("unmatched closing `{}`", tok.text),
+                });
+            };
+            let expected = match group.delim {
+                '(' => ")",
+                '[' => "]",
+                _ => "}",
+            };
+            if tok.text != expected {
+                return Err(TreeError {
+                    line: tok.line,
+                    msg: format!("`{}` closed by `{}`", group.delim, tok.text),
+                });
+            }
+            let node = Node::Group(group);
+            match stack.last_mut() {
+                Some(parent) => parent.children.push(node),
+                None => top.push(node),
+            }
+            continue;
+        }
+        let node = Node::Leaf(tok);
+        match stack.last_mut() {
+            Some(parent) => parent.children.push(node),
+            None => top.push(node),
+        }
+    }
+    if let Some(open) = stack.pop() {
+        return Err(TreeError { line: open.line, msg: format!("unclosed `{}`", open.delim) });
+    }
+    Ok(top)
+}
+
+/// Call `f` on every sibling sequence of the tree: the top-level
+/// sequence and, recursively, every group's children.
+pub fn for_each_seq<'a>(nodes: &'a [Node], f: &mut dyn FnMut(&'a [Node])) {
+    f(nodes);
+    for node in nodes {
+        if let Node::Group(g) = node {
+            for_each_seq(&g.children, f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn parse(src: &str) -> Vec<Node> {
+        let (tokens, _) = lex(src).expect("lexes");
+        build(tokens).expect("balances")
+    }
+
+    #[test]
+    fn groups_nest() {
+        let nodes = parse("fn f(a: u32) { g([1, 2]); }");
+        assert!(nodes[0].is_ident("fn"));
+        assert!(nodes[2].is_group('('));
+        let body = nodes[3].group().expect("body");
+        assert_eq!(body.delim, '{');
+        assert!(body.children[1].is_group('('));
+        let args = body.children[1].group().expect("args");
+        assert!(args.children[0].is_group('['));
+    }
+
+    #[test]
+    fn unbalanced_is_an_error() {
+        let (tokens, _) = lex("fn f( {").unwrap();
+        assert!(build(tokens).is_err());
+        let (tokens, _) = lex("a)").unwrap();
+        assert!(build(tokens).is_err());
+        let (tokens, _) = lex("(a]").unwrap();
+        assert!(build(tokens).is_err());
+    }
+
+    #[test]
+    fn sequences_visit_every_level() {
+        let nodes = parse("a { b ( c ) }");
+        let mut seqs = 0;
+        for_each_seq(&nodes, &mut |_| seqs += 1);
+        assert_eq!(seqs, 3);
+    }
+}

@@ -62,6 +62,13 @@ COMMANDS:
                         the xla/anyhow [dependencies] in rust/Cargo.toml and
                         build with `--features pjrt`
   all                   Every table and figure, in order
+  lint [PATHS..]        Determinism & concurrency static analysis over
+                        the crate's own sources (six deny-by-default
+                        rules; DESIGN.md §12). PATHS are files or
+                        directories; default roots are src, tests,
+                        benches and examples. Renders the findings
+                        through the artifact layer and exits nonzero
+                        if any finding is unsuppressed
 
 LAYER SPEC (sim --layer):
   H/C/N/K/S/P[/G[/D]]   H input size, C in-channels, N out-channels,
@@ -149,28 +156,33 @@ struct CommandSpec {
     /// `--json`/`--csv`/`--config`/`--bandwidth` would silently ignore
     /// them — exactly the footgun this parser exists to remove.
     universal: bool,
+    /// Whether bare (non-`--`) arguments are accepted. Only `lint`
+    /// takes positional paths; everywhere else a stray positional is
+    /// still a hard error.
+    positionals: bool,
 }
 
 /// Options shared by the figure commands (and `all`, which runs them).
 const FIG_OPTS: &[&str] = &["--pass", "--extended", "--devices"];
 
-const COMMANDS: [CommandSpec; 15] = [
-    CommandSpec { name: "table2", extra_opts: &[], universal: true },
-    CommandSpec { name: "table3", extra_opts: &[], universal: true },
-    CommandSpec { name: "table4", extra_opts: &[], universal: true },
-    CommandSpec { name: "fig6", extra_opts: FIG_OPTS, universal: true },
-    CommandSpec { name: "fig7", extra_opts: FIG_OPTS, universal: true },
-    CommandSpec { name: "fig8", extra_opts: FIG_OPTS, universal: true },
-    CommandSpec { name: "sparsity", extra_opts: &["--extended"], universal: true },
-    CommandSpec { name: "storage", extra_opts: &["--extended"], universal: true },
-    CommandSpec { name: "sim", extra_opts: &["--layer"], universal: true },
-    CommandSpec { name: "traincost", extra_opts: &["--devices"], universal: true },
-    CommandSpec { name: "fleet", extra_opts: &["--devices", "--extended"], universal: true },
-    CommandSpec {
-        name: "dse",
-        extra_opts: &["--budget", "--seed", "--axis", "--extended", "--layer", "--devices"],
-        universal: true,
-    },
+/// Shorthand for the common query-command shape (no positionals).
+const fn cmd(name: &'static str, extra_opts: &'static [&'static str]) -> CommandSpec {
+    CommandSpec { name, extra_opts, universal: true, positionals: false }
+}
+
+const COMMANDS: [CommandSpec; 16] = [
+    cmd("table2", &[]),
+    cmd("table3", &[]),
+    cmd("table4", &[]),
+    cmd("fig6", FIG_OPTS),
+    cmd("fig7", FIG_OPTS),
+    cmd("fig8", FIG_OPTS),
+    cmd("sparsity", &["--extended"]),
+    cmd("storage", &["--extended"]),
+    cmd("sim", &["--layer"]),
+    cmd("traincost", &["--devices"]),
+    cmd("fleet", &["--devices", "--extended"]),
+    cmd("dse", &["--budget", "--seed", "--axis", "--extended", "--layer", "--devices"]),
     // `serve` is an action, not a one-shot query: it renders nothing, so
     // `--csv`/`--json` are rejected like `train`'s — but it *does*
     // simulate under a platform config, so `--config`/`--bandwidth`
@@ -179,9 +191,18 @@ const COMMANDS: [CommandSpec; 15] = [
         name: "serve",
         extra_opts: &["--addr", "--threads", "--config", "--bandwidth"],
         universal: false,
+        positionals: false,
     },
-    CommandSpec { name: "train", extra_opts: &["--steps", "--seed"], universal: false },
-    CommandSpec { name: "all", extra_opts: FIG_OPTS, universal: true },
+    CommandSpec {
+        name: "train",
+        extra_opts: &["--steps", "--seed"],
+        universal: false,
+        positionals: false,
+    },
+    cmd("all", FIG_OPTS),
+    // `lint` analyzes sources, not the model: no platform config, no
+    // CSV; its positional arguments are the paths to scan.
+    CommandSpec { name: "lint", extra_opts: &["--json"], universal: false, positionals: true },
 ];
 
 /// Strictly parsed options: `--key value` pairs and bare flags, each
@@ -189,21 +210,28 @@ const COMMANDS: [CommandSpec; 15] = [
 struct Opts {
     values: Vec<(String, String)>,
     flags: Vec<String>,
+    positionals: Vec<String>,
 }
 
 impl Opts {
     /// Scan `args` against the allowed option set. Rejects unknown
     /// options, duplicate options, missing values, flag-shaped values
-    /// and stray positional arguments.
+    /// and — unless the command declares them — positional arguments.
     fn parse(args: &[String], spec: &CommandSpec) -> Result<Self, String> {
         let universal: &[&str] = if spec.universal { &UNIVERSAL_OPTS } else { &[] };
         let allowed: Vec<&str> = universal.iter().chain(spec.extra_opts).copied().collect();
         let mut values = Vec::new();
         let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
         let mut i = 0;
         while i < args.len() {
             let arg = &args[i];
             if !arg.starts_with("--") {
+                if spec.positionals {
+                    positionals.push(arg.clone());
+                    i += 1;
+                    continue;
+                }
                 return Err(format!(
                     "unexpected argument {arg:?} (options start with --; see `repro help`)"
                 ));
@@ -237,7 +265,7 @@ impl Opts {
                 i += 1;
             }
         }
-        Ok(Opts { values, flags })
+        Ok(Opts { values, flags, positionals })
     }
 
     fn value(&self, key: &str) -> Option<&str> {
@@ -471,26 +499,68 @@ fn cmd_train(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
-fn run() -> Result<(), String> {
+/// `lint`: run the static analyzer over the given paths (or the
+/// default roots), render the findings artifact, and report the exit
+/// status — nonzero when any unsuppressed finding remains, so CI can
+/// gate on it directly.
+fn cmd_lint(opts: &Opts) -> Result<ExitCode, String> {
+    use std::path::PathBuf;
+    let paths: Vec<PathBuf> = if opts.positionals.is_empty() {
+        bp_im2col::lint::default_roots()
+    } else {
+        opts.positionals.iter().map(PathBuf::from).collect()
+    };
+    if paths.is_empty() {
+        return Err("lint: no scan roots found (run from the repo root or rust/)".into());
+    }
+    for p in &paths {
+        if !p.exists() {
+            return Err(format!("lint: no such path {}", p.display()));
+        }
+    }
+    let report = bp_im2col::lint::lint_paths(&paths);
+    let art = bp_im2col::lint::artifact(&report);
+    let rendered = if opts.flag("--json") {
+        Format::Json.render(std::slice::from_ref(&art))
+    } else {
+        Format::Text.render(std::slice::from_ref(&art))
+    };
+    print!("{rendered}");
+    if report.is_clean() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        eprintln!(
+            "lint: {} unsuppressed finding(s) across {} files",
+            report.findings.len(),
+            report.files
+        );
+        Ok(ExitCode::FAILURE)
+    }
+}
+
+fn run() -> Result<ExitCode, String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         print!("{USAGE}");
-        return Ok(());
+        return Ok(ExitCode::SUCCESS);
     };
     if matches!(cmd.as_str(), "help" | "--help" | "-h") {
         print!("{USAGE}");
-        return Ok(());
+        return Ok(ExitCode::SUCCESS);
     }
     let Some(spec) = COMMANDS.iter().find(|c| c.name == cmd) else {
         return Err(format!("unknown command {cmd:?}\n\n{USAGE}"));
     };
     let opts = Opts::parse(&argv[1..], spec)?;
     let format = Format::from_opts(&opts)?;
+    if cmd == "lint" {
+        return cmd_lint(&opts);
+    }
     if cmd == "train" {
-        return cmd_train(&opts);
+        return cmd_train(&opts).map(|()| ExitCode::SUCCESS);
     }
     if cmd == "serve" {
-        return cmd_serve(&opts);
+        return cmd_serve(&opts).map(|()| ExitCode::SUCCESS);
     }
     let cfg = accel_config(&opts)?;
     let requests = build_requests(&cmd, &opts)?;
@@ -509,12 +579,12 @@ fn run() -> Result<(), String> {
         service.run(&requests[0])
     };
     print!("{}", format.render(&artifacts));
-    Ok(())
+    Ok(ExitCode::SUCCESS)
 }
 
 fn main() -> ExitCode {
     match run() {
-        Ok(()) => ExitCode::SUCCESS,
+        Ok(code) => code,
         Err(e) => {
             eprintln!("error: {e}");
             ExitCode::FAILURE
@@ -617,6 +687,18 @@ mod tests {
             "configs/edge.cfg".to_string(),
         ];
         assert!(Opts::parse(&ok, spec).is_ok());
+    }
+
+    #[test]
+    fn lint_takes_positionals_other_commands_reject_them() {
+        let spec = COMMANDS.iter().find(|c| c.name == "lint").unwrap();
+        let args: Vec<String> = ["src", "--json", "tests"].iter().map(|s| s.to_string()).collect();
+        let opts = Opts::parse(&args, spec).unwrap();
+        assert_eq!(opts.positionals, vec!["src", "tests"]);
+        assert!(opts.flag("--json"));
+        let table2 = COMMANDS.iter().find(|c| c.name == "table2").unwrap();
+        assert!(Opts::parse(&args, table2).is_err(), "positionals stay errors elsewhere");
+        assert!(Opts::parse(&["--csv".to_string()], spec).is_err(), "lint has no CSV mode");
     }
 
     #[test]

@@ -317,6 +317,7 @@ pub fn traincost(cfg: &AccelConfig) -> Vec<TrainCostRow> {
         let mut sum = [0.0f64; 2]; // per mode
         let mut fwd = 0.0f64;
         for l in &net.layers {
+            // lint: allow(float-accumulation) — folds over fixed arrays in source order
             for (mi, mode) in Mode::ALL.iter().enumerate() {
                 let c = training_step_cost(&l.params, *mode, cfg);
                 sum[mi] += (c.loss + c.grad) * l.count as f64;

@@ -32,6 +32,7 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("serve-worker-{i}"))
                     .spawn(move || worker_loop(&rx))
+                    // lint: allow(panic-in-request-path) — startup path, no requests yet
                     .expect("spawn pool worker")
             })
             .collect();
@@ -49,8 +50,10 @@ impl ThreadPool {
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.sender
             .as_ref()
+            // lint: allow(panic-in-request-path) — sender is Some until join() consumes the pool
             .expect("pool joined")
             .send(Box::new(job))
+            // lint: allow(panic-in-request-path) — workers only exit after the channel closes
             .expect("pool workers alive");
     }
 

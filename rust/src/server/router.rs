@@ -49,8 +49,17 @@ impl Route {
     }
 
     /// Index into [`Route::ALL`] (and the per-route metrics arrays).
+    /// A panic-free match, mirroring the `ALL` order — the exhaustive
+    /// match is what ties the two together at compile time.
     pub fn index(&self) -> usize {
-        Route::ALL.iter().position(|r| r == self).expect("route in ALL")
+        match self {
+            Route::Query => 0,
+            Route::Batch => 1,
+            Route::Requests => 2,
+            Route::Healthz => 3,
+            Route::Metrics => 4,
+            Route::Shutdown => 5,
+        }
     }
 
     /// The method this route answers.

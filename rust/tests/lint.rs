@@ -1,0 +1,394 @@
+//! Fixture tests for `repro lint`: every rule gets a must-fire and a
+//! near-miss fixture, the allow grammar is exercised round-trip, and
+//! the crate's own tree is asserted lint-clean — which is exactly the
+//! gate CI runs. Fixtures are lexed, never compiled, so they only need
+//! to be lexically valid Rust.
+
+use std::process::Command;
+
+use bp_im2col::lint::{default_roots, lint_paths, lint_source, Finding};
+
+/// Rule ids of the findings, in report order.
+fn rules(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+// ---- unordered-iteration -----------------------------------------------
+
+#[test]
+fn unordered_iteration_fires_on_hashmap_chain() {
+    let src = r##"
+use std::collections::HashMap;
+fn count(m: &HashMap<String, u32>) -> u32 {
+    let mut total = 0;
+    for v in m.values() {
+        total += v;
+    }
+    total
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["unordered-iteration"]);
+    assert_eq!(f[0].line, 5, "finding pins the .values() line");
+}
+
+#[test]
+fn unordered_iteration_fires_on_direct_for_over_hashset() {
+    let src = r##"
+use std::collections::HashSet;
+fn total(s: &HashSet<u32>) -> u32 {
+    let mut n = 0;
+    for x in s {
+        n += x;
+    }
+    n
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["unordered-iteration"]);
+}
+
+#[test]
+fn unordered_iteration_is_silent_on_btreemap() {
+    let src = r##"
+use std::collections::BTreeMap;
+fn count(m: &BTreeMap<String, u32>) -> u32 {
+    let mut total = 0;
+    for v in m.values() {
+        total += v;
+    }
+    total
+}
+"##;
+    assert!(lint_source("src/demo.rs", src).is_empty());
+}
+
+// ---- float-accumulation ------------------------------------------------
+
+#[test]
+fn float_accumulation_fires_in_unsorted_loop() {
+    let src = r##"
+fn mean(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for x in xs {
+        acc += *x;
+    }
+    acc
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["float-accumulation"]);
+    assert_eq!(f[0].line, 4, "one finding, at the for line");
+}
+
+#[test]
+fn float_accumulation_respects_sort_guard_and_range_heads() {
+    let src = r##"
+fn mean_sorted(xs: &mut Vec<f64>) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    let mut acc = 0.0;
+    for x in xs.iter() {
+        acc += *x;
+    }
+    acc
+}
+fn horner(c: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..c.len() {
+        acc += c[i];
+    }
+    acc
+}
+"##;
+    assert!(lint_source("src/demo.rs", src).is_empty());
+}
+
+#[test]
+fn float_sum_turbofish_fires_unless_head_is_ordered_literal() {
+    let fires = r##"
+fn total(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+"##;
+    assert_eq!(rules(&lint_source("src/demo.rs", fires)), vec!["float-accumulation"]);
+    let exempt = r##"
+fn avg() -> f64 {
+    [0.125, 0.25].iter().sum::<f64>()
+}
+"##;
+    assert!(lint_source("src/demo.rs", exempt).is_empty());
+}
+
+// ---- wall-clock-in-model -----------------------------------------------
+
+#[test]
+fn wall_clock_fires_in_src_but_not_in_benches() {
+    let src = r##"
+fn elapsed() {
+    let _t = std::time::Instant::now();
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["wall-clock-in-model", "wall-clock-in-model"]);
+    assert!(lint_source("benches/demo.rs", src).is_empty(), "benches time things");
+}
+
+// ---- lock-order --------------------------------------------------------
+
+#[test]
+fn lock_order_flags_relocking_the_same_mutex() {
+    let src = r##"
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    let a = m.lock().unwrap();
+    let b = m.lock().unwrap();
+    *a + *b
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["lock-order"]);
+}
+
+#[test]
+fn lock_order_detects_cross_function_cycles() {
+    let src = r##"
+fn ab(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    drop(gb);
+    drop(ga);
+}
+fn ba(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let gb = b.lock().unwrap();
+    let ga = a.lock().unwrap();
+    drop(ga);
+    drop(gb);
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["lock-order"]);
+    assert!(f[0].message.contains("cycle"), "{}", f[0].message);
+}
+
+#[test]
+fn lock_order_honors_consistent_order_and_drop() {
+    let consistent = r##"
+fn one(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+}
+fn two(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+}
+"##;
+    assert!(lint_source("src/demo.rs", consistent).is_empty());
+    // `drop(ga)` releases a before b is taken, so the b->a edge in the
+    // second function closes no cycle.
+    let dropped = r##"
+fn one(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let ga = a.lock().unwrap();
+    drop(ga);
+    let gb = b.lock().unwrap();
+}
+fn two(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let gb = b.lock().unwrap();
+    let ga = a.lock().unwrap();
+}
+"##;
+    assert!(lint_source("src/demo.rs", dropped).is_empty());
+}
+
+// ---- panic-in-request-path ---------------------------------------------
+
+#[test]
+fn panic_path_flags_unwrap_expect_and_macros_in_server_code() {
+    let src = r##"
+fn handle(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+fn greet(x: Option<u32>) -> u32 {
+    x.expect("missing")
+}
+fn later() {
+    todo!()
+}
+"##;
+    let f = lint_source("src/server/h.rs", src);
+    assert_eq!(
+        rules(&f),
+        vec!["panic-in-request-path", "panic-in-request-path", "panic-in-request-path"]
+    );
+    // The same file outside the request-handling trees is out of scope.
+    assert!(lint_source("src/demo.rs", src).is_empty());
+}
+
+#[test]
+fn panic_path_exempts_poisoning_expect_and_write_macros() {
+    let src = r##"
+fn safe(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().expect("poisoned")
+}
+fn log(w: &mut String, v: u32) {
+    writeln!(w, "{v}").unwrap();
+}
+"##;
+    assert!(lint_source("src/server/h.rs", src).is_empty());
+}
+
+#[test]
+fn panic_path_flags_indexing_only_in_parser_files() {
+    let src = r##"
+fn byte_at(b: &[u8], i: usize) -> u8 {
+    b[i]
+}
+fn tail(b: &[u8]) -> &[u8] {
+    &b[1..]
+}
+fn first(b: &[u8]) -> u8 {
+    b[0]
+}
+"##;
+    let f = lint_source("src/server/http.rs", src);
+    assert_eq!(rules(&f), vec!["panic-in-request-path"]);
+    assert_eq!(f[0].line, 3, "only the variable index fires");
+    assert!(lint_source("src/server/h.rs", src).is_empty(), "non-parser server file");
+}
+
+// ---- env-leak ----------------------------------------------------------
+
+#[test]
+fn env_leak_fires_in_library_but_not_the_cli_shell() {
+    let src = r##"
+fn home() -> String {
+    std::env::var("HOME").unwrap_or_default()
+}
+fn width() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["env-leak", "env-leak"]);
+    assert!(lint_source("src/main.rs", src).is_empty(), "main.rs is the CLI shell");
+}
+
+// ---- allow directives --------------------------------------------------
+
+#[test]
+fn allow_suppresses_trailing_and_own_line() {
+    let own_line = r##"
+fn t() {
+    // lint: allow(wall-clock-in-model) — fixture justification
+    let _x = std::time::Instant::now();
+}
+"##;
+    assert!(lint_source("src/demo.rs", own_line).is_empty());
+    let trailing = r##"
+fn t() {
+    let _x = std::time::Instant::now(); // lint: allow(wall-clock-in-model) — fixture
+}
+"##;
+    assert!(lint_source("src/demo.rs", trailing).is_empty());
+}
+
+#[test]
+fn unused_allow_is_itself_a_finding() {
+    let src = r##"
+fn t() {
+    // lint: allow(env-leak) — nothing here reads env
+    let _x = 1;
+}
+"##;
+    let f = lint_source("src/demo.rs", src);
+    assert_eq!(rules(&f), vec!["unused-allow"]);
+}
+
+#[test]
+fn malformed_allows_are_rejected() {
+    let unknown = r##"
+// lint: allow(made-up-rule) — because
+fn t() {}
+"##;
+    assert_eq!(rules(&lint_source("src/demo.rs", unknown)), vec!["malformed-allow"]);
+    let no_reason = r##"
+// lint: allow(env-leak)
+fn t() {}
+"##;
+    assert_eq!(rules(&lint_source("src/demo.rs", no_reason)), vec!["malformed-allow"]);
+}
+
+// ---- parse errors ------------------------------------------------------
+
+#[test]
+fn unparseable_files_are_findings_not_skips() {
+    let unbalanced = "fn broken( {\n";
+    assert_eq!(rules(&lint_source("src/demo.rs", unbalanced)), vec!["parse-error"]);
+    let unterminated = r##"fn f() { let s = "oops; }"##;
+    assert_eq!(rules(&lint_source("src/demo.rs", unterminated)), vec!["parse-error"]);
+}
+
+// ---- the real tree -----------------------------------------------------
+
+#[test]
+fn tree_is_lint_clean() {
+    let report = lint_paths(&default_roots());
+    assert!(
+        report.is_clean(),
+        "the tree must lint clean; findings:\n{:#?}",
+        report.findings
+    );
+    assert!(report.files >= 90, "scanned only {} files", report.files);
+    assert!(report.allows_used >= 10, "allows_used = {}", report.allows_used);
+}
+
+// ---- CLI gate ----------------------------------------------------------
+
+fn repro(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+fn write_temp(name: &str, content: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("bp_im2col_lint_fixtures");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let p = dir.join(name);
+    std::fs::write(&p, content).expect("write fixture");
+    p
+}
+
+#[test]
+fn cli_lint_exits_nonzero_on_a_seeded_violation() {
+    let bad = write_temp("bad.rs", "fn t() {\n    let _x = std::time::Instant::now();\n}\n");
+    let (_, stderr, ok) = repro(&["lint", bad.to_str().expect("utf8 path")]);
+    assert!(!ok, "violation must gate");
+    assert!(stderr.contains("unsuppressed"), "stderr: {stderr}");
+}
+
+#[test]
+fn cli_lint_passes_a_clean_file_and_the_whole_tree() {
+    let good = write_temp("good.rs", "fn main() {}\n");
+    let (stdout, _, ok) = repro(&["lint", good.to_str().expect("utf8 path")]);
+    assert!(ok, "clean file should pass:\n{stdout}");
+    assert!(stdout.contains("clean"), "renders the clean note:\n{stdout}");
+    // The invocation CI gates on: lint the default roots.
+    let (stdout, stderr, ok) = repro(&["lint"]);
+    assert!(ok, "tree must be clean\nstdout:\n{stdout}\nstderr:\n{stderr}");
+}
+
+#[test]
+fn cli_lint_json_renders_through_the_artifact_layer() {
+    let good = write_temp("good_json.rs", "fn main() {}\n");
+    let (stdout, _, ok) = repro(&["lint", "--json", good.to_str().expect("utf8 path")]);
+    assert!(ok);
+    assert!(stdout.starts_with("{\"artifacts\":[{"), "json envelope:\n{stdout}");
+    assert!(stdout.contains("\"name\":\"lint\""));
+    assert!(stdout.contains("files_scanned"));
+}
