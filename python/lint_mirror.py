@@ -359,8 +359,10 @@ class Scope:
         self.is_bench = "benches/" in path
         self.is_test_file = "tests/" in path
         self.is_main = path.endswith("src/main.rs")
-        self.is_parser = (self.is_server and path.endswith("http.rs")) or (
-            self.is_api and path.endswith("json.rs")
+        self.is_parser = (
+            (self.is_server and path.endswith("http.rs"))
+            or (self.is_server and path.endswith("conn.rs"))
+            or (self.is_api and path.endswith("json.rs"))
         )
 
 

@@ -1,0 +1,240 @@
+#!/usr/bin/env python3
+"""Closed-loop load harness for `repro serve` (stdlib only).
+
+Starts the server on an ephemeral port, drives it with keep-alive
+workers rotating through the cached query kinds, and reports
+
+    {"rps": ..., "p50_ms": ..., "p99_ms": ..., "shed_rate": ...,
+     "requests": ..., "shed": ..., "errors": ...}
+
+After the measured window it scrapes /metrics (asserting the
+event-loop series are present), then POSTs /v1/shutdown and asserts
+the process exits 0 — so every load run doubles as a graceful-drain
+test under real concurrency.
+
+Regression gate: `--gate BENCH_SERVER.json` compares the measured RPS
+against the tracked baseline and fails (exit 1) when it drops by more
+than `--tolerance` (default 0.30). `--update` rewrites the gate file
+with this run as the new baseline and appends it to the trajectory.
+
+Usage:
+    python3 python/load_test.py ./target/release/repro \
+        --workers 4 --duration 2 --gate BENCH_SERVER.json
+"""
+
+import argparse
+import http.client
+import json
+import statistics
+import subprocess
+import sys
+import threading
+import time
+
+# Cached catalog kinds: after the first miss each is served from the
+# artifact cache, so the steady-state load measures the serving core,
+# not the simulator.
+KINDS = ("table2", "table3", "table4")
+
+# Event-loop series that must appear in /metrics after a load run.
+METRIC_NEEDLES = (
+    "bp_server_connections_total",
+    "bp_server_open_connections",
+    "bp_server_shed_total",
+    "bp_server_read_stalls_total",
+    "bp_server_write_stalls_total",
+    "bp_server_deadline_closes_total",
+)
+
+
+class Counters:
+    """Shared tally across worker threads."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.latencies_ms = []
+        self.ok = 0
+        self.shed = 0
+        self.errors = 0
+
+
+def worker(host, port, deadline, counters, index):
+    conn = http.client.HTTPConnection(host, port, timeout=10)
+    kind = KINDS[index % len(KINDS)]
+    body = json.dumps({"kind": kind}).encode()
+    n = 0
+    while time.monotonic() < deadline:
+        start = time.monotonic()
+        try:
+            conn.request(
+                "POST", "/v1/query", body, {"Content-Type": "application/json"}
+            )
+            resp = conn.getresponse()
+            resp.read()
+            elapsed_ms = (time.monotonic() - start) * 1000.0
+            with counters.lock:
+                if resp.status == 200:
+                    counters.ok += 1
+                    counters.latencies_ms.append(elapsed_ms)
+                elif resp.status == 429:
+                    counters.shed += 1
+                else:
+                    counters.errors += 1
+        except (OSError, http.client.HTTPException):
+            with counters.lock:
+                counters.errors += 1
+            conn.close()
+            conn = http.client.HTTPConnection(host, port, timeout=10)
+        n += 1
+        kind = KINDS[n % len(KINDS)]
+        body = json.dumps({"kind": kind}).encode()
+    conn.close()
+
+
+def one_shot(host, port, method, path, body=None):
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    data = None if body is None else json.dumps(body).encode()
+    conn.request(method, path, data, {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    payload = resp.read()
+    conn.close()
+    return resp.status, payload
+
+
+def percentile(sorted_values, q):
+    if not sorted_values:
+        return None
+    idx = min(len(sorted_values) - 1, int(q * (len(sorted_values) - 1) + 0.5))
+    return sorted_values[idx]
+
+
+def run_load(binary, workers, duration, threads):
+    proc = subprocess.Popen(
+        [binary, "serve", "--addr", "127.0.0.1:0", "--threads", str(threads)],
+        stdout=subprocess.PIPE,
+        text=True,
+    )
+    try:
+        line = proc.stdout.readline()
+        assert "listening on http://" in line, f"unexpected banner: {line!r}"
+        addr = line.split("http://", 1)[1].split()[0]
+        host, port = addr.rsplit(":", 1)
+        port = int(port)
+        print(f"load: server up at http://{addr} ({workers} workers, {duration}s)")
+
+        # Warm the artifact cache so the measured window is steady-state.
+        for kind in KINDS:
+            status, _ = one_shot(host, port, "POST", "/v1/query", {"kind": kind})
+            assert status == 200, f"warmup {kind} -> {status}"
+
+        counters = Counters()
+        deadline = time.monotonic() + duration
+        begin = time.monotonic()
+        pool = [
+            threading.Thread(
+                target=worker, args=(host, port, deadline, counters, i), daemon=True
+            )
+            for i in range(workers)
+        ]
+        for t in pool:
+            t.start()
+        for t in pool:
+            t.join()
+        wall = time.monotonic() - begin
+
+        total = counters.ok + counters.shed + counters.errors
+        lat = sorted(counters.latencies_ms)
+        result = {
+            "rps": round(counters.ok / wall, 2) if wall > 0 else 0.0,
+            "p50_ms": round(statistics.median(lat), 3) if lat else None,
+            "p99_ms": round(percentile(lat, 0.99), 3) if lat else None,
+            "shed_rate": round(counters.shed / total, 4) if total else 0.0,
+            "requests": counters.ok,
+            "shed": counters.shed,
+            "errors": counters.errors,
+            "workers": workers,
+            "duration_s": duration,
+        }
+        print("load:", json.dumps(result))
+        assert counters.errors == 0, f"{counters.errors} transport/protocol errors"
+        assert counters.ok > 0, "no successful requests during the window"
+
+        status, body = one_shot(host, port, "GET", "/metrics")
+        assert status == 200, status
+        text = body.decode()
+        for needle in METRIC_NEEDLES:
+            assert needle in text, f"missing {needle!r} in /metrics"
+
+        status, _ = one_shot(host, port, "POST", "/v1/shutdown", {})
+        assert status == 200, status
+        code = proc.wait(timeout=60)
+        assert code == 0, f"server exited with {code} after load + shutdown"
+        print("load: clean shutdown (exit 0) with all event-loop series present")
+        return result
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+def apply_gate(result, gate_path, tolerance, update):
+    with open(gate_path) as fh:
+        gate = json.load(fh)
+    baseline = gate["baseline"]
+    floor = baseline["rps"] * (1.0 - tolerance)
+    print(
+        f"gate: measured {result['rps']} rps vs baseline "
+        f"{baseline['rps']} rps ({baseline['label']}), floor {floor:.2f}"
+    )
+    if result["rps"] < floor:
+        print(
+            f"gate: FAIL — rps regressed more than {tolerance:.0%} "
+            f"below the tracked baseline",
+            file=sys.stderr,
+        )
+        return False
+    if update:
+        entry = {
+            "label": "measured",
+            "rps": result["rps"],
+            "p50_ms": result["p50_ms"],
+            "p99_ms": result["p99_ms"],
+            "shed_rate": result["shed_rate"],
+            "workers": result["workers"],
+            "duration_s": result["duration_s"],
+            "provenance": "recorded by python/load_test.py --update",
+        }
+        gate["baseline"] = entry
+        gate.setdefault("trajectory", []).append(entry)
+        with open(gate_path, "w") as fh:
+            json.dump(gate, fh, indent=2)
+            fh.write("\n")
+        print(f"gate: baseline updated in {gate_path}")
+    return True
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("binary", nargs="?", default="./target/release/repro")
+    parser.add_argument("--workers", type=int, default=4)
+    parser.add_argument("--duration", type=float, default=2.0)
+    parser.add_argument("--threads", type=int, default=4, help="server worker threads")
+    parser.add_argument("--gate", help="BENCH_SERVER.json to gate against")
+    parser.add_argument("--tolerance", type=float, default=0.30)
+    parser.add_argument("--out", help="write the measured result as JSON")
+    parser.add_argument(
+        "--update", action="store_true", help="rewrite the gate baseline from this run"
+    )
+    args = parser.parse_args()
+
+    result = run_load(args.binary, args.workers, args.duration, args.threads)
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(result, fh, indent=2)
+            fh.write("\n")
+    if args.gate and not apply_gate(result, args.gate, args.tolerance, args.update):
+        sys.exit(1)
+    print("load test OK")
+
+
+if __name__ == "__main__":
+    main()

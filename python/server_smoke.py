@@ -84,6 +84,15 @@ def main():
             "bp_artifact_cache_evictions_total 0",
             "bp_plan_cache_entries",
             "bp_server_request_duration_us_bucket",
+            # Event-loop serving core: connection lifecycle and shedding
+            # series must be exposed; nothing in this smoke overloads the
+            # server, so the shed counter must read exactly zero.
+            "bp_server_connections_total",
+            "bp_server_open_connections",
+            "bp_server_shed_total 0",
+            "bp_server_read_stalls_total",
+            "bp_server_write_stalls_total",
+            "bp_server_deadline_closes_total",
         ):
             assert needle in text, f"missing {needle!r} in /metrics:\n{text}"
 

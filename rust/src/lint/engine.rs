@@ -32,8 +32,9 @@ pub struct Scope {
     pub is_test_file: bool,
     /// The `src/main.rs` CLI shell (argv/env access is its job).
     pub is_main: bool,
-    /// Wire-parsing module (`server/http.rs`, `api/json.rs`) where the
-    /// slice-indexing check of panic-path applies.
+    /// Wire-parsing module (`server/http.rs`, `server/conn.rs`,
+    /// `api/json.rs`) where the slice-indexing check of panic-path
+    /// applies.
     pub is_parser: bool,
 }
 
@@ -50,6 +51,7 @@ impl Scope {
             is_test_file: path.contains("tests/"),
             is_main: path.ends_with("src/main.rs"),
             is_parser: (is_server && path.ends_with("http.rs"))
+                || (is_server && path.ends_with("conn.rs"))
                 || (is_api && path.ends_with("json.rs")),
         }
     }

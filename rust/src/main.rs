@@ -117,6 +117,16 @@ OPTIONS:
                               port 0 picks an ephemeral port)
   --threads N                 Connection worker threads (serve; default:
                               one per core, capped at 8)
+  --frontend event|pool       Serving core (serve; default event): the
+                              nonblocking event loop with overload
+                              shedding, or the legacy blocking pool
+  --max-conns N               Event loop only: connection cap; further
+                              connections are answered 429 (serve;
+                              default 1024)
+  --shed-queue N              Event loop only: dispatches allowed beyond
+                              busy workers before requests are shed
+                              with 429 + Retry-After (serve; default
+                              2 x threads)
 
 Unknown options are errors; `--key` options require a value that does
 not itself start with `--`.
@@ -126,7 +136,7 @@ not itself start with `--`.
 const UNIVERSAL_OPTS: [&str; 4] = ["--config", "--bandwidth", "--csv", "--json"];
 
 /// Options that consume a value (everything else is a bare flag).
-const VALUE_OPTS: [&str; 11] = [
+const VALUE_OPTS: [&str; 14] = [
     "--config",
     "--bandwidth",
     "--pass",
@@ -138,6 +148,9 @@ const VALUE_OPTS: [&str; 11] = [
     "--threads",
     "--budget",
     "--axis",
+    "--frontend",
+    "--max-conns",
+    "--shed-queue",
 ];
 
 /// Options that may appear more than once (`--axis` stacks one override
@@ -189,7 +202,15 @@ const COMMANDS: [CommandSpec; 16] = [
     // come back in via extra_opts.
     CommandSpec {
         name: "serve",
-        extra_opts: &["--addr", "--threads", "--config", "--bandwidth"],
+        extra_opts: &[
+            "--addr",
+            "--threads",
+            "--frontend",
+            "--max-conns",
+            "--shed-queue",
+            "--config",
+            "--bandwidth",
+        ],
         universal: false,
         positionals: false,
     },
@@ -440,6 +461,7 @@ fn build_requests(cmd: &str, opts: &Opts) -> Result<Vec<SimRequest>, String> {
 /// sentinel arrives. Prints the bound address first (on one line, so
 /// scripts binding port 0 can scrape the ephemeral port).
 fn cmd_serve(opts: &Opts) -> Result<(), String> {
+    use bp_im2col::server::{Frontend, ServeOptions, Server};
     use std::io::Write as _;
     let cfg = accel_config(opts)?;
     let addr = opts.value("--addr").unwrap_or(bp_im2col::server::DEFAULT_ADDR);
@@ -453,10 +475,36 @@ fn cmd_serve(opts: &Opts) -> Result<(), String> {
             n
         }
     };
-    let server = bp_im2col::server::Server::bind(cfg, addr, threads)
+    let mut serve_opts = ServeOptions::for_threads(threads);
+    if let Some(v) = opts.value("--frontend") {
+        serve_opts.frontend = match v {
+            "event" => Frontend::EventLoop,
+            "pool" => Frontend::BlockingPool,
+            other => return Err(format!("bad --frontend {other:?} (expected event or pool)")),
+        };
+    }
+    if let Some(v) = opts.value("--max-conns") {
+        let n: usize = v.parse().map_err(|_| format!("bad --max-conns {v:?}"))?;
+        if n == 0 {
+            return Err("--max-conns must be >= 1".into());
+        }
+        serve_opts.max_conns = n;
+    }
+    if let Some(v) = opts.value("--shed-queue") {
+        let n: usize = v.parse().map_err(|_| format!("bad --shed-queue {v:?}"))?;
+        if n == 0 {
+            return Err("--shed-queue must be >= 1".into());
+        }
+        serve_opts.shed_queue = n;
+    }
+    let server = Server::bind_with(cfg, addr, serve_opts)
         .map_err(|e| format!("cannot bind {addr}: {e}"))?;
+    let core = match serve_opts.frontend {
+        Frontend::EventLoop => "event loop",
+        Frontend::BlockingPool => "blocking pool",
+    };
     println!(
-        "repro serve: listening on http://{} ({threads} worker threads)",
+        "repro serve: listening on http://{} ({threads} worker threads, {core} frontend)",
         server.local_addr()
     );
     let _ = std::io::stdout().flush();
@@ -685,8 +733,19 @@ mod tests {
             "2".to_string(),
             "--config".to_string(),
             "configs/edge.cfg".to_string(),
+            "--frontend".to_string(),
+            "event".to_string(),
+            "--max-conns".to_string(),
+            "64".to_string(),
+            "--shed-queue".to_string(),
+            "4".to_string(),
         ];
         assert!(Opts::parse(&ok, spec).is_ok());
+        // The event-loop tuning flags are serve-only: every other
+        // command must reject them at parse time.
+        let table2 = COMMANDS.iter().find(|c| c.name == "table2").unwrap();
+        let bad = ["--max-conns".to_string(), "64".to_string()];
+        assert!(Opts::parse(&bad, table2).is_err());
     }
 
     #[test]

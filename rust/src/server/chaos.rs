@@ -1,0 +1,201 @@
+//! Fault-injection transports for exercising the connection state
+//! machine under hostile I/O.
+//!
+//! [`MemStream`] is an in-memory nonblocking peer: scripted input
+//! bytes, captured output, and `WouldBlock` when the input is exhausted
+//! (exactly like a live nonblocking socket with nothing readable) until
+//! [`MemStream::close_input`] turns further reads into EOF.
+//! [`ChaosStream`] wraps any stream and replays scripted faults — short
+//! reads, short writes, `WouldBlock` storms, mid-body disconnects,
+//! broken pipes — before delegating; an exhausted script passes calls
+//! through untouched.
+//!
+//! This is the serving layer's test rig (driven by the `conn` unit
+//! tests and `tests/server.rs`); the live server never constructs one.
+//! It lives in the crate rather than under `#[cfg(test)]` so unit and
+//! integration tests share a single implementation.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+
+/// Scripted behavior of one read call.
+#[derive(Clone, Copy, Debug)]
+pub enum ReadFault {
+    /// Deliver at most this many bytes (clamped to at least 1).
+    Short(usize),
+    /// Fail with [`io::ErrorKind::WouldBlock`].
+    WouldBlock,
+    /// Report end-of-file regardless of remaining inner bytes.
+    Disconnect,
+}
+
+/// Scripted behavior of one write call.
+#[derive(Clone, Copy, Debug)]
+pub enum WriteFault {
+    /// Accept at most this many bytes (clamped to at least 1).
+    Short(usize),
+    /// Fail with [`io::ErrorKind::WouldBlock`].
+    WouldBlock,
+    /// Fail with [`io::ErrorKind::BrokenPipe`].
+    Broken,
+}
+
+/// An in-memory `Read + Write` peer for driving the state machine
+/// without sockets.
+pub struct MemStream {
+    input: Vec<u8>,
+    pos: usize,
+    input_closed: bool,
+    /// Every byte the server side wrote.
+    pub written: Vec<u8>,
+}
+
+impl MemStream {
+    /// A stream that will serve `input` and then report `WouldBlock`.
+    pub fn new(input: &[u8]) -> Self {
+        MemStream { input: input.to_vec(), pos: 0, input_closed: false, written: Vec::new() }
+    }
+
+    /// Append more inbound bytes (a client that keeps typing).
+    pub fn push_input(&mut self, bytes: &[u8]) {
+        self.input.extend_from_slice(bytes);
+    }
+
+    /// Half-close: once the scripted input is drained, reads return
+    /// EOF instead of `WouldBlock`.
+    pub fn close_input(&mut self) {
+        self.input_closed = true;
+    }
+}
+
+impl Read for MemStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let remaining = self.input.len() - self.pos;
+        if remaining == 0 {
+            return if self.input_closed { Ok(0) } else { Err(io::ErrorKind::WouldBlock.into()) };
+        }
+        let n = remaining.min(buf.len());
+        buf[..n].copy_from_slice(&self.input[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl Write for MemStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.written.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A stream wrapper that replays scripted faults before delegating to
+/// the inner stream.
+pub struct ChaosStream<S> {
+    inner: S,
+    reads: VecDeque<ReadFault>,
+    writes: VecDeque<WriteFault>,
+}
+
+impl<S> ChaosStream<S> {
+    /// Wrap `inner` with empty fault scripts (a transparent proxy).
+    pub fn new(inner: S) -> Self {
+        ChaosStream { inner, reads: VecDeque::new(), writes: VecDeque::new() }
+    }
+
+    /// Append read faults to the script (consumed one per read call).
+    pub fn script_reads(mut self, faults: &[ReadFault]) -> Self {
+        self.reads.extend(faults.iter().copied());
+        self
+    }
+
+    /// Append write faults to the script (consumed one per write call).
+    pub fn script_writes(mut self, faults: &[WriteFault]) -> Self {
+        self.writes.extend(faults.iter().copied());
+        self
+    }
+
+    /// The wrapped stream (to inspect captured output).
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// Mutable access to the wrapped stream (to push more input).
+    pub fn inner_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self.reads.pop_front() {
+            None => self.inner.read(buf),
+            Some(ReadFault::Short(n)) => {
+                let n = n.max(1).min(buf.len());
+                self.inner.read(&mut buf[..n])
+            }
+            Some(ReadFault::WouldBlock) => Err(io::ErrorKind::WouldBlock.into()),
+            Some(ReadFault::Disconnect) => Ok(0),
+        }
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self.writes.pop_front() {
+            None => self.inner.write(buf),
+            Some(WriteFault::Short(n)) => {
+                let n = n.max(1).min(buf.len());
+                self.inner.write(&buf[..n])
+            }
+            Some(WriteFault::WouldBlock) => Err(io::ErrorKind::WouldBlock.into()),
+            Some(WriteFault::Broken) => Err(io::ErrorKind::BrokenPipe.into()),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_stream_reads_then_blocks_then_eofs() {
+        let mut s = MemStream::new(b"abc");
+        let mut buf = [0u8; 8];
+        assert_eq!(s.read(&mut buf).unwrap(), 3);
+        assert_eq!(&buf[..3], b"abc");
+        let err = s.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
+        s.close_input();
+        assert_eq!(s.read(&mut buf).unwrap(), 0, "EOF after close_input");
+        s.write_all(b"reply").unwrap();
+        assert_eq!(s.written, b"reply");
+    }
+
+    #[test]
+    fn chaos_replays_scripted_faults_then_passes_through() {
+        let inner = MemStream::new(b"hello");
+        let mut s = ChaosStream::new(inner)
+            .script_reads(&[ReadFault::Short(2), ReadFault::WouldBlock])
+            .script_writes(&[WriteFault::Short(1), WriteFault::Broken]);
+        let mut buf = [0u8; 8];
+        assert_eq!(s.read(&mut buf).unwrap(), 2, "short read caps the transfer");
+        assert_eq!(s.read(&mut buf).unwrap_err().kind(), io::ErrorKind::WouldBlock);
+        assert_eq!(s.read(&mut buf).unwrap(), 3, "script exhausted: pass-through");
+        assert_eq!(s.write(b"xyz").unwrap(), 1, "short write caps the transfer");
+        assert_eq!(s.write(b"yz").unwrap_err().kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(s.write(b"yz").unwrap(), 2);
+        assert_eq!(s.inner().written, b"xyz");
+
+        let mut dead = ChaosStream::new(MemStream::new(b"bytes"))
+            .script_reads(&[ReadFault::Disconnect]);
+        assert_eq!(dead.read(&mut buf).unwrap(), 0, "scripted disconnect is EOF");
+    }
+}

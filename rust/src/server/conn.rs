@@ -1,0 +1,489 @@
+//! The per-connection state machine of the event-loop frontend.
+//!
+//! One [`Conn`] owns one nonblocking byte stream and walks it through
+//! `Reading → Dispatching → Writing → (KeepAlive | Closed)`:
+//!
+//! ```text
+//!             bytes arrive                completion arrives
+//!   Reading ────────────────► Dispatching ───────────────► Writing
+//!      ▲   try_parse Complete              start_response     │
+//!      │                                                      │ flushed,
+//!      │   keep-alive (buffered pipelined bytes re-parse      │ keep-alive
+//!      └──────────────────────────────────────────────────────┘
+//!            framing error / EOF / deadline / !keep ──► Closed
+//! ```
+//!
+//! The machine is generic over `Read + Write` and performs **no**
+//! blocking call: every read/write treats `WouldBlock` as "no progress,
+//! try next tick", which is what lets one loop thread multiplex
+//! thousands of connections. It holds the partial-read buffer (feeding
+//! [`crate::server::http::try_parse`] incrementally) and the
+//! partial-write buffer (a serialized response drained across ticks),
+//! plus the per-phase deadline. Policy — metrics, shedding, dispatch —
+//! stays in the event loop; this type only reports what happened.
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::server::http::{self, serialize_response, Parse, Request, Response};
+
+/// Deadlines governing one connection's phases.
+#[derive(Clone, Copy, Debug)]
+pub struct ConnConfig {
+    /// Budget for completing one request, first byte to full body; a
+    /// slow-trickle (slowloris) sender is answered with 408 and closed.
+    pub read_deadline: Duration,
+    /// Budget for flushing one response to a stalled peer.
+    pub write_deadline: Duration,
+    /// Budget for an idle keep-alive connection to start its next
+    /// request; expiry closes silently (normal end of session).
+    pub idle_deadline: Duration,
+}
+
+impl Default for ConnConfig {
+    fn default() -> Self {
+        ConnConfig {
+            read_deadline: Duration::from_secs(10),
+            write_deadline: Duration::from_secs(10),
+            idle_deadline: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Lifecycle phase of one connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnState {
+    /// Waiting for (more of) a request.
+    Reading,
+    /// One parsed request is out for execution; the connection reads
+    /// nothing more until [`Conn::start_response`].
+    Dispatching,
+    /// Flushing a serialized response.
+    Writing,
+    /// Finished; the owner removes and drops the connection.
+    Closed,
+}
+
+/// What one driving step produced.
+#[derive(Debug)]
+pub enum Step {
+    /// A complete request parsed; the connection is now `Dispatching`
+    /// and the owner decides: execute, handle inline, or shed.
+    Request(Box<Request>),
+    /// A framing error was answered with this status; the connection
+    /// flushes the error response and then closes.
+    Rejected(u16),
+    /// No request completed; `true` when any bytes moved.
+    Progress(bool),
+    /// The connection finished (peer closed, fatal transport error).
+    Close,
+}
+
+/// Why [`Conn::check_deadline`] gave up on the connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Timeout {
+    /// Idle keep-alive expiry between requests — silent close.
+    Idle,
+    /// Mid-request read deadline (slowloris) — a 408 was queued and the
+    /// connection will close after flushing it.
+    SlowRequest,
+    /// The peer stopped draining its response — hard close.
+    WriteStall,
+}
+
+/// One nonblocking connection: buffers, phase, and deadline.
+pub struct Conn<S> {
+    stream: S,
+    state: ConnState,
+    /// Bytes received but not yet consumed by a parsed request.
+    read_buf: Vec<u8>,
+    /// Serialized response bytes not yet written.
+    write_buf: Vec<u8>,
+    written: usize,
+    /// When the current phase must be done (meaning depends on state).
+    deadline: Instant,
+    close_after_write: bool,
+    cfg: ConnConfig,
+}
+
+impl<S: Read + Write> Conn<S> {
+    /// Adopt a stream (already in nonblocking mode when it is a
+    /// socket); the idle clock starts at `now`.
+    pub fn new(stream: S, now: Instant, cfg: ConnConfig) -> Self {
+        Conn {
+            stream,
+            state: ConnState::Reading,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            written: 0,
+            deadline: now + cfg.idle_deadline,
+            close_after_write: false,
+            cfg,
+        }
+    }
+
+    /// Current lifecycle phase.
+    pub fn state(&self) -> ConnState {
+        self.state
+    }
+
+    /// Whether a request has started arriving but is not complete (the
+    /// read-stall signal, and what separates a 408 from an idle close).
+    pub fn mid_request(&self) -> bool {
+        self.state == ConnState::Reading && !self.read_buf.is_empty()
+    }
+
+    /// The wrapped stream (tests inspect captured output here).
+    pub fn stream_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Drive the read side one step. Only meaningful in `Reading`; any
+    /// other phase reports no progress. Buffered pipelined bytes are
+    /// re-parsed before touching the stream, so a back-to-back client
+    /// costs no extra syscalls.
+    pub fn poll_read(&mut self, now: Instant) -> Step {
+        if self.state != ConnState::Reading {
+            return Step::Progress(false);
+        }
+        let mut progressed = false;
+        loop {
+            match http::try_parse(&self.read_buf) {
+                Ok(Parse::Complete { req, consumed }) => {
+                    self.read_buf.drain(..consumed);
+                    self.state = ConnState::Dispatching;
+                    return Step::Request(Box::new(req));
+                }
+                Ok(_) => {}
+                Err(err) => {
+                    return match err.response() {
+                        Some(resp) => {
+                            self.start_response(&resp, false, now);
+                            Step::Rejected(resp.status)
+                        }
+                        None => self.close(),
+                    };
+                }
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // EOF: clean between requests, a framing error in
+                    // the middle of one (same wording as the blocking
+                    // frontend's reader).
+                    return if self.read_buf.is_empty() {
+                        self.close()
+                    } else {
+                        let resp = self.eof_mid_request_response();
+                        self.start_response(&resp, false, now);
+                        Step::Rejected(resp.status)
+                    };
+                }
+                Ok(n) => {
+                    if self.read_buf.is_empty() {
+                        // First byte of a new request starts its clock.
+                        self.deadline = now + self.cfg.read_deadline;
+                    }
+                    self.read_buf.extend_from_slice(&chunk[..n]);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return Step::Progress(progressed);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return self.close(),
+            }
+        }
+    }
+
+    /// The 400 for a peer that closed mid-request, mirroring the
+    /// blocking reader's diagnostic (head vs. body progress).
+    fn eof_mid_request_response(&self) -> Response {
+        let msg = match http::try_parse(&self.read_buf) {
+            Ok(Parse::NeedBody { have, want }) => {
+                format!("connection closed after {have} of {want} body bytes")
+            }
+            _ => "connection closed mid-request head".to_string(),
+        };
+        Response::error(400, &msg)
+    }
+
+    /// Queue one response (an executor completion, an inline answer, or
+    /// a shed) and switch to `Writing`. `keep` controls whether the
+    /// connection returns to `Reading` after the flush.
+    pub fn start_response(&mut self, resp: &Response, keep: bool, now: Instant) {
+        self.write_buf = serialize_response(resp, keep);
+        self.written = 0;
+        self.close_after_write = !keep;
+        self.state = ConnState::Writing;
+        self.deadline = now + self.cfg.write_deadline;
+    }
+
+    /// Drive the write side one step. Only meaningful in `Writing`.
+    pub fn poll_write(&mut self, now: Instant) -> Step {
+        if self.state != ConnState::Writing {
+            return Step::Progress(false);
+        }
+        let mut progressed = false;
+        while self.written < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.written..]) {
+                Ok(0) => return self.close(),
+                Ok(n) => {
+                    self.written += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return Step::Progress(progressed);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return self.close(),
+            }
+        }
+        // TcpStream::flush is a no-op, but in-memory test transports
+        // may buffer; a flush failure is not worth killing the
+        // already-answered connection over.
+        let _ = self.stream.flush();
+        if self.close_after_write {
+            return self.close();
+        }
+        self.write_buf.clear();
+        self.written = 0;
+        self.state = ConnState::Reading;
+        // Pipelined bytes already buffered mean the next request is in
+        // progress; otherwise the idle clock starts.
+        self.deadline = now
+            + if self.read_buf.is_empty() {
+                self.cfg.idle_deadline
+            } else {
+                self.cfg.read_deadline
+            };
+        Step::Progress(true)
+    }
+
+    /// Enforce the current phase deadline. `Dispatching` is exempt:
+    /// executor latency is the service's own business, not a wire
+    /// stall. Returns what expired (the owner records metrics).
+    pub fn check_deadline(&mut self, now: Instant) -> Option<Timeout> {
+        if now < self.deadline || self.state == ConnState::Dispatching {
+            return None;
+        }
+        match self.state {
+            ConnState::Reading if self.read_buf.is_empty() => {
+                self.close();
+                Some(Timeout::Idle)
+            }
+            ConnState::Reading => {
+                let resp =
+                    Response::error(408, "request not completed within the read deadline");
+                self.start_response(&resp, false, now);
+                Some(Timeout::SlowRequest)
+            }
+            ConnState::Writing => {
+                self.close();
+                Some(Timeout::WriteStall)
+            }
+            _ => None,
+        }
+    }
+
+    fn close(&mut self) -> Step {
+        self.state = ConnState::Closed;
+        Step::Close
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::chaos::{ChaosStream, MemStream, ReadFault, WriteFault};
+
+    const T0: Duration = Duration::ZERO;
+
+    fn now() -> Instant {
+        Instant::now()
+    }
+
+    fn request_wire(path: &str, body: &str) -> Vec<u8> {
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .into_bytes()
+    }
+
+    fn expect_request(step: Step) -> Request {
+        match step {
+            Step::Request(req) => *req,
+            other => panic!("expected Step::Request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn whole_request_then_response_round_trip() {
+        let base = now();
+        let stream = MemStream::new(&request_wire("/v1/query", "{\"kind\":\"table3\"}"));
+        let mut conn = Conn::new(stream, base, ConnConfig::default());
+        assert_eq!(conn.state(), ConnState::Reading);
+        let req = expect_request(conn.poll_read(base));
+        assert_eq!(req.path, "/v1/query");
+        assert_eq!(req.body, b"{\"kind\":\"table3\"}");
+        assert_eq!(conn.state(), ConnState::Dispatching);
+        // While dispatched, reads are a no-op and deadlines never fire.
+        assert!(matches!(conn.poll_read(base), Step::Progress(false)));
+        assert_eq!(conn.check_deadline(base + Duration::from_secs(3600)), None);
+
+        let resp = Response::json(200, "{\"ok\":true}");
+        conn.start_response(&resp, true, base);
+        assert!(matches!(conn.poll_write(base), Step::Progress(true)));
+        assert_eq!(conn.state(), ConnState::Reading, "keep-alive returns to Reading");
+        assert_eq!(conn.stream_mut().written, serialize_response(&resp, true));
+    }
+
+    #[test]
+    fn drip_fed_request_parses_across_many_polls() {
+        let base = now();
+        let wire = request_wire("/v1/query", "{\"kind\":\"table2\"}");
+        // One byte per read, a WouldBlock between each: a worst-case
+        // trickle that must still parse to the identical request.
+        let mut faults = Vec::new();
+        for _ in 0..wire.len() {
+            faults.push(ReadFault::Short(1));
+            faults.push(ReadFault::WouldBlock);
+        }
+        let stream = ChaosStream::new(MemStream::new(&wire)).script_reads(&faults);
+        let mut conn = Conn::new(stream, base, ConnConfig::default());
+        let mut polls = 0usize;
+        let req = loop {
+            polls += 1;
+            assert!(polls < 10_000, "state machine failed to make progress");
+            match conn.poll_read(base) {
+                Step::Request(req) => break *req,
+                Step::Progress(_) => {}
+                other => panic!("unexpected step {other:?}"),
+            }
+        };
+        assert!(polls > 10, "the drip really did span many polls");
+        assert_eq!(req.body, b"{\"kind\":\"table2\"}");
+    }
+
+    #[test]
+    fn mid_body_disconnect_is_rejected_with_400() {
+        let base = now();
+        let mut stream = MemStream::new(b"POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort");
+        stream.close_input();
+        let mut conn = Conn::new(stream, base, ConnConfig::default());
+        match conn.poll_read(base) {
+            Step::Rejected(status) => assert_eq!(status, 400),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert!(matches!(conn.poll_write(base), Step::Close));
+        assert_eq!(conn.state(), ConnState::Closed);
+        let out = String::from_utf8(conn.stream_mut().written.clone()).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400 "), "{out}");
+        assert!(out.contains("connection closed after 5 of 50 body bytes"), "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
+    }
+
+    #[test]
+    fn scripted_disconnect_mid_head_is_rejected_with_400() {
+        let base = now();
+        let stream = ChaosStream::new(MemStream::new(b"GET / HT"))
+            .script_reads(&[ReadFault::Short(8), ReadFault::Disconnect]);
+        let mut conn = Conn::new(stream, base, ConnConfig::default());
+        match conn.poll_read(base) {
+            Step::Rejected(status) => assert_eq!(status, 400),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        let _ = conn.poll_write(base);
+        let out = String::from_utf8(conn.stream_mut().inner().written.clone()).unwrap();
+        assert!(out.contains("connection closed mid-request head"), "{out}");
+    }
+
+    #[test]
+    fn framing_garbage_is_rejected_and_closes_after_the_write() {
+        let base = now();
+        let stream = MemStream::new(b"THIS IS NOT HTTP\r\n\r\n");
+        let mut conn = Conn::new(stream, base, ConnConfig::default());
+        match conn.poll_read(base) {
+            Step::Rejected(status) => assert_eq!(status, 400),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(conn.state(), ConnState::Writing);
+        assert!(matches!(conn.poll_write(base), Step::Close));
+    }
+
+    #[test]
+    fn idle_deadline_closes_silently() {
+        let base = now();
+        let cfg = ConnConfig::default();
+        let mut conn = Conn::new(MemStream::new(b""), base, cfg);
+        assert_eq!(conn.check_deadline(base + T0), None, "fresh connection is within budget");
+        let t = base + cfg.idle_deadline + Duration::from_millis(1);
+        assert_eq!(conn.check_deadline(t), Some(Timeout::Idle));
+        assert_eq!(conn.state(), ConnState::Closed);
+        assert!(conn.stream_mut().written.is_empty(), "idle close writes nothing");
+    }
+
+    #[test]
+    fn slowloris_gets_408_then_close() {
+        let base = now();
+        let cfg = ConnConfig::default();
+        let mut conn = Conn::new(MemStream::new(b"GET /healthz HTT"), base, cfg);
+        assert!(matches!(conn.poll_read(base), Step::Progress(true)));
+        assert!(conn.mid_request());
+        // Within budget: still waiting politely.
+        assert_eq!(conn.check_deadline(base + cfg.read_deadline / 2), None);
+        // Past it: 408 queued, then the flush closes the connection.
+        let t = base + cfg.read_deadline + Duration::from_millis(1);
+        assert_eq!(conn.check_deadline(t), Some(Timeout::SlowRequest));
+        assert_eq!(conn.state(), ConnState::Writing);
+        assert!(matches!(conn.poll_write(t), Step::Close));
+        let out = String::from_utf8(conn.stream_mut().written.clone()).unwrap();
+        assert!(out.starts_with("HTTP/1.1 408 Request Timeout\r\n"), "{out}");
+    }
+
+    #[test]
+    fn write_stall_is_closed_at_the_write_deadline() {
+        let base = now();
+        let cfg = ConnConfig::default();
+        let wire = request_wire("/v1/query", "{}");
+        let stream = ChaosStream::new(MemStream::new(&wire))
+            .script_writes(&[WriteFault::Short(5), WriteFault::WouldBlock, WriteFault::WouldBlock]);
+        let mut conn = Conn::new(stream, base, cfg);
+        let _ = expect_request(conn.poll_read(base));
+        conn.start_response(&Response::json(200, "x".repeat(256)), true, base);
+        // Partial progress, then the peer stops draining.
+        assert!(matches!(conn.poll_write(base), Step::Progress(true)));
+        assert_eq!(conn.state(), ConnState::Writing);
+        assert!(matches!(conn.poll_write(base), Step::Progress(false)));
+        assert_eq!(conn.check_deadline(base + cfg.write_deadline / 2), None);
+        let t = base + cfg.write_deadline + Duration::from_millis(1);
+        assert_eq!(conn.check_deadline(t), Some(Timeout::WriteStall));
+        assert_eq!(conn.state(), ConnState::Closed);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_without_new_bytes() {
+        let base = now();
+        let mut wire = request_wire("/v1/query", "{\"kind\":\"table3\"}");
+        wire.extend_from_slice(b"GET /healthz HTTP/1.1\r\n\r\n");
+        let mut conn = Conn::new(MemStream::new(&wire), base, ConnConfig::default());
+        let first = expect_request(conn.poll_read(base));
+        assert_eq!(first.path, "/v1/query");
+        conn.start_response(&Response::json(200, "{}"), true, base);
+        assert!(matches!(conn.poll_write(base), Step::Progress(true)));
+        // The second request was already buffered: no stream I/O needed.
+        let second = expect_request(conn.poll_read(base));
+        assert_eq!(second.path, "/healthz");
+    }
+
+    #[test]
+    fn broken_pipe_during_write_closes() {
+        let base = now();
+        let stream = ChaosStream::new(MemStream::new(b"")).script_writes(&[WriteFault::Broken]);
+        let mut conn = Conn::new(stream, base, ConnConfig::default());
+        conn.start_response(&Response::json(200, "{}"), false, base);
+        assert!(matches!(conn.poll_write(base), Step::Close));
+        assert_eq!(conn.state(), ConnState::Closed);
+    }
+}

@@ -1,0 +1,329 @@
+//! The nonblocking readiness loop: one thread multiplexing every
+//! connection, with CPU-bound request work dispatched to an
+//! [`Executor`].
+//!
+//! std-only means no epoll/kqueue bindings, so readiness is discovered
+//! by *optimistic polling*: every socket is nonblocking, each tick
+//! drives every connection one step, and a tick that moved no bytes
+//! anywhere sleeps [`IDLE_TICK`] before the next scan. That is O(conns)
+//! per tick rather than O(ready), which is the honest trade for zero
+//! dependencies — measured in `BENCH_SERVER.json`, the loop sustains
+//! the same cached-query throughput as the blocking pool frontend while
+//! surviving slowloris and write-stall clients that would pin a
+//! blocking worker for the full request deadline (DESIGN.md §13).
+//!
+//! Per tick: accept new sockets (shedding `429 Too Many Requests` over
+//! the connection cap), apply worker completions, then drive each
+//! connection's deadline/write/read steps. Control-plane routes
+//! (healthz, metrics, shutdown) are answered inline on the loop thread
+//! — they stay responsive under data-plane overload and are never
+//! shed; `/v1/*` data-plane requests go to the executor, or are shed
+//! with `Retry-After` when `in_flight` reaches `workers + shed_queue`
+//! or the executor queue is full.
+//!
+//! Shutdown needs no loopback wake hack (unlike the blocking accept
+//! loop): the sentinel is handled inline, the next tick observes the
+//! flag, stops accepting, closes idle connections, and finishes the
+//! in-flight ones before joining the executor.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::server::conn::{Conn, ConnState, Step, Timeout};
+use crate::server::executor::{Executor, Job};
+use crate::server::http::{serialize_response, Request, Response};
+use crate::server::router::Route;
+use crate::server::{handle_request, ServeOptions, ServerState, RETRY_AFTER_SECS};
+
+/// Sleep applied after a tick that moved no bytes and saw no events:
+/// bounds the idle scan rate (a few thousand syscalls per second) while
+/// adding at most ~half a millisecond of latency to a quiet server.
+const IDLE_TICK: Duration = Duration::from_micros(500);
+
+/// One finished unit of request work, sent from a worker to the loop.
+struct Completion {
+    id: u64,
+    response: Response,
+    keep: bool,
+}
+
+/// Run the readiness loop until shutdown completes. Consumes the
+/// listener and the executor; returns once every accepted request has
+/// been answered and the executor has joined.
+pub(crate) fn run(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    executor: Box<dyn Executor>,
+    opts: ServeOptions,
+) -> io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+    // BTreeMap, not HashMap: connection visit order is deterministic
+    // (id order), which the repo's unordered-iteration lint insists on
+    // for anything that feeds observable behavior.
+    let mut conns: BTreeMap<u64, Conn<TcpStream>> = BTreeMap::new();
+    let mut next_id: u64 = 0;
+    let mut in_flight: usize = 0;
+    let shed_limit = executor.workers().max(1) + opts.shed_queue;
+
+    loop {
+        let now = Instant::now();
+        let shutting_down = state.shutdown.load(Ordering::Acquire);
+        let mut progressed = false;
+
+        // 1. Accept every pending connection (draining servers stop).
+        if !shutting_down {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        progressed = true;
+                        state.metrics.conn_accepted();
+                        if conns.len() >= opts.max_conns {
+                            shed_connection(stream, &state);
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue; // peer already gone
+                        }
+                        let _ = stream.set_nodelay(true);
+                        state.metrics.conn_opened();
+                        conns.insert(next_id, Conn::new(stream, now, opts.conn));
+                        next_id += 1;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    // Transient accept errors (aborted handshake, fd
+                    // pressure): end the burst; the idle-tick sleep
+                    // paces retries so EMFILE cannot busy-spin a core.
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // 2. Apply completions from the workers.
+        while let Ok(done) = done_rx.try_recv() {
+            progressed = true;
+            in_flight = in_flight.saturating_sub(1);
+            // The connection may have died while its request ran; the
+            // work is still accounted, the response just has no home.
+            if let Some(conn) = conns.get_mut(&done.id) {
+                conn.start_response(&done.response, done.keep, now);
+            }
+        }
+
+        // 3. Drive every connection one step.
+        let mut closed: Vec<u64> = Vec::new();
+        for (&id, conn) in conns.iter_mut() {
+            match conn.check_deadline(now) {
+                Some(Timeout::SlowRequest) => {
+                    state.metrics.record(None, 408, 0);
+                    state.metrics.record_deadline_close();
+                    progressed = true;
+                }
+                Some(Timeout::WriteStall) => {
+                    state.metrics.record_deadline_close();
+                    progressed = true;
+                }
+                Some(Timeout::Idle) | None => {}
+            }
+            // Flush first: completing a response can re-enter Reading
+            // with pipelined bytes already buffered.
+            if conn.state() == ConnState::Writing {
+                match conn.poll_write(now) {
+                    Step::Progress(true) if conn.state() == ConnState::Writing => {
+                        // Partial progress, then the socket filled up.
+                        state.metrics.record_write_stall();
+                        progressed = true;
+                    }
+                    Step::Progress(moved) => progressed |= moved,
+                    _ => progressed = true, // Close
+                }
+            }
+            if conn.state() == ConnState::Reading {
+                match conn.poll_read(now) {
+                    Step::Request(req) => {
+                        progressed = true;
+                        let req = *req;
+                        if is_control_plane(&req) {
+                            let started = Instant::now();
+                            let (route, response) = handle_request(&req, &state);
+                            let elapsed_us =
+                                started.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                            state.metrics.record(route, response.status, elapsed_us);
+                            // Read the flag *after* the handler: the
+                            // shutdown sentinel must answer with
+                            // `Connection: close`, same as the
+                            // blocking frontend.
+                            let keep = req.keep_alive()
+                                && !state.shutdown.load(Ordering::Acquire);
+                            conn.start_response(&response, keep, now);
+                        } else if in_flight >= shed_limit {
+                            shed_request(conn, &req, &state, shutting_down, now);
+                        } else {
+                            let job = make_job(id, req.clone(), &state, &done_tx);
+                            match executor.try_spawn(job) {
+                                Ok(()) => in_flight += 1,
+                                Err(_rejected) => {
+                                    shed_request(conn, &req, &state, shutting_down, now);
+                                }
+                            }
+                        }
+                    }
+                    Step::Rejected(status) => {
+                        progressed = true;
+                        state.metrics.record(None, status, 0);
+                    }
+                    Step::Progress(moved) => {
+                        if moved && conn.mid_request() {
+                            state.metrics.record_read_stall();
+                        }
+                        progressed |= moved;
+                    }
+                    Step::Close => progressed = true,
+                }
+            }
+            if shutting_down && conn.state() == ConnState::Reading {
+                // Drain policy: connections with no request in flight
+                // close now; Dispatching/Writing ones finish first.
+                closed.push(id);
+            } else if conn.state() == ConnState::Closed {
+                closed.push(id);
+            }
+        }
+        for id in closed {
+            conns.remove(&id);
+            state.metrics.conn_closed();
+        }
+
+        if shutting_down && conns.is_empty() && in_flight == 0 {
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(IDLE_TICK);
+        }
+    }
+    drop(listener);
+    executor.join();
+    Ok(())
+}
+
+/// Routes answered inline on the loop thread: cheap, never shed, and —
+/// for the shutdown sentinel — the reason the loop needs no loopback
+/// wake. Resolver misses (404/405) are also inline; they never reach a
+/// handler. Everything else is data-plane work for the executor.
+fn is_control_plane(req: &Request) -> bool {
+    match Route::resolve(req) {
+        Ok(Route::Healthz | Route::Metrics | Route::Shutdown) => true,
+        Ok(Route::Query | Route::Batch | Route::Requests) => false,
+        Err(_) => true,
+    }
+}
+
+/// Queue the 429 shed response on the connection. The session stays
+/// keep-alive (unless draining): a shed is an invitation to retry, not
+/// a punishment.
+fn shed_request(
+    conn: &mut Conn<TcpStream>,
+    req: &Request,
+    state: &Arc<ServerState>,
+    shutting_down: bool,
+    now: Instant,
+) {
+    let resp = Response::shed(RETRY_AFTER_SECS);
+    state.metrics.record_shed();
+    state.metrics.record(None, resp.status, 0);
+    let keep = req.keep_alive() && !shutting_down;
+    conn.start_response(&resp, keep, now);
+}
+
+/// Best-effort 429 for a socket over the connection cap: write the
+/// shed response if the fresh socket will take it immediately, then
+/// drop the connection.
+fn shed_connection(stream: TcpStream, state: &Arc<ServerState>) {
+    state.metrics.record_shed();
+    state.metrics.record(None, 429, 0);
+    let mut stream = stream;
+    if stream.set_nonblocking(true).is_ok() {
+        let wire = serialize_response(&Response::shed(RETRY_AFTER_SECS), false);
+        let _ = stream.write_all(&wire);
+    }
+}
+
+/// Package one data-plane request as an executor job: run the handler
+/// (panic-guarded so the completion is never lost), record metrics,
+/// send the completion home.
+fn make_job(
+    id: u64,
+    req: Request,
+    state: &Arc<ServerState>,
+    done_tx: &Sender<Completion>,
+) -> Job {
+    let state = Arc::clone(state);
+    let tx = done_tx.clone();
+    Box::new(move || {
+        let started = Instant::now();
+        let result =
+            panic::catch_unwind(AssertUnwindSafe(|| handle_request(&req, &state)));
+        let (route, response) = match result {
+            Ok(pair) => pair,
+            // The backstop of the backstop: Service::try_run already
+            // catches handler panics, so this 500 is near-unreachable,
+            // but losing a completion would leak `in_flight` forever.
+            Err(_) => (None, Response::error(500, "request handler panicked")),
+        };
+        let elapsed_us = started.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        state.metrics.record(route, response.status, elapsed_us);
+        let keep = req.keep_alive() && !state.shutdown.load(Ordering::Acquire);
+        // The loop may already be gone on a racing shutdown; dropping
+        // the completion is then harmless.
+        let _ = tx.send(Completion { id, response, keep });
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelConfig;
+    use crate::api::Service;
+    use crate::server::cache::ArtifactCache;
+    use crate::server::executor::InlineExecutor;
+    use crate::server::metrics::ServerMetrics;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn run_exits_immediately_when_shutdown_is_already_set() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let state = Arc::new(ServerState {
+            service: Service::new(AccelConfig::default()),
+            artifacts: ArtifactCache::new(),
+            metrics: ServerMetrics::new(),
+            shutdown: AtomicBool::new(true),
+            local_addr: listener.local_addr().expect("local addr"),
+        });
+        let opts = ServeOptions::for_threads(1);
+        run(listener, state, Box::new(InlineExecutor), opts).expect("run returns cleanly");
+    }
+
+    #[test]
+    fn control_plane_routes_are_classified_inline() {
+        let req = |method: &str, path: &str| Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            http10: false,
+            headers: vec![],
+            body: vec![],
+        };
+        assert!(is_control_plane(&req("GET", "/healthz")));
+        assert!(is_control_plane(&req("GET", "/metrics")));
+        assert!(is_control_plane(&req("POST", "/v1/shutdown")));
+        assert!(is_control_plane(&req("GET", "/nope")), "404s answer inline");
+        assert!(!is_control_plane(&req("POST", "/v1/query")));
+        assert!(!is_control_plane(&req("POST", "/v1/batch")));
+        assert!(!is_control_plane(&req("GET", "/v1/requests")));
+    }
+}

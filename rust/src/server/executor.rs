@@ -1,0 +1,77 @@
+//! Pluggable request-dispatch strategies for the serving frontends.
+//!
+//! The event loop parses requests on one thread but runs the CPU-bound
+//! [`crate::api::Service`] work elsewhere; *where* is behind the
+//! [`Executor`] trait. The production strategy is the bounded
+//! [`crate::server::pool::ThreadPool`]; [`InlineExecutor`] runs jobs on
+//! the caller thread for deterministic single-threaded tests. Keeping
+//! the seam this narrow is what lets `tests/server.rs` A/B the legacy
+//! blocking frontend against the event loop byte-for-byte.
+
+/// One queued unit of request work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A scheduling strategy for CPU-bound request work.
+pub trait Executor: Send {
+    /// Queue `job` without blocking. A saturated executor hands the job
+    /// back so the caller can shed the request instead of stalling.
+    fn try_spawn(&self, job: Job) -> Result<(), Job>;
+
+    /// Queue `job`, waiting for room (the blocking frontend's
+    /// backpressure toward its accept loop).
+    fn spawn(&self, job: Job);
+
+    /// Worker threads executing jobs; `0` means jobs run on the caller.
+    fn workers(&self) -> usize;
+
+    /// Stop accepting work, run every already-queued job, and join.
+    fn join(self: Box<Self>);
+}
+
+/// Runs every job inline on the calling thread. Deterministic — jobs
+/// finish before `try_spawn`/`spawn` returns — which makes event-loop
+/// unit tests single-threaded and schedule-free.
+pub struct InlineExecutor;
+
+impl Executor for InlineExecutor {
+    fn try_spawn(&self, job: Job) -> Result<(), Job> {
+        job();
+        Ok(())
+    }
+
+    fn spawn(&self, job: Job) {
+        job();
+    }
+
+    fn workers(&self) -> usize {
+        0
+    }
+
+    fn join(self: Box<Self>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn inline_executor_runs_jobs_immediately() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let exec = InlineExecutor;
+        let c = Arc::clone(&counter);
+        assert!(exec.try_spawn(Box::new(move || {
+            c.fetch_add(1, Ordering::Relaxed);
+        }))
+        .is_ok());
+        assert_eq!(counter.load(Ordering::Relaxed), 1, "ran before try_spawn returned");
+        let c = Arc::clone(&counter);
+        exec.spawn(Box::new(move || {
+            c.fetch_add(1, Ordering::Relaxed);
+        }));
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+        assert_eq!(exec.workers(), 0);
+        Box::new(exec).join();
+    }
+}

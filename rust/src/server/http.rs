@@ -7,6 +7,14 @@
 //! and any malformed or truncated request 400 — all without panicking,
 //! so one hostile connection can never take a worker thread down.
 //!
+//! The parser core is [`try_parse`]: a pure, incremental function over
+//! the buffered prefix of a connection's byte stream, shared by the
+//! blocking [`HttpConn`] reader and the event-loop connection state
+//! machine ([`crate::server::conn`]) — one grammar, two frontends.
+//! Likewise [`serialize_response`] produces the exact wire bytes of a
+//! response, so both frontends frame replies identically (asserted
+//! byte-for-byte in `tests/http_proto.rs`).
+//!
 //! [`HttpConn`] is generic over the stream so the parser is unit-tested
 //! against in-memory transcripts; the live server instantiates it with a
 //! [`std::net::TcpStream`].
@@ -31,7 +39,7 @@ pub const MAX_BODY_BYTES: usize = 1 << 20;
 pub const MAX_HEADERS: usize = 64;
 
 /// One parsed HTTP request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Request {
     /// Method token, upper-cased by the client (`GET`, `POST`, ...).
     pub method: String,
@@ -107,8 +115,8 @@ impl HttpError {
 }
 
 /// One response to serialize. Construction helpers fill the usual
-/// content types; [`HttpConn::write_response`] adds the framing headers.
-#[derive(Clone, Debug)]
+/// content types; [`serialize_response`] adds the framing headers.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Response {
     /// HTTP status code.
     pub status: u16,
@@ -116,17 +124,29 @@ pub struct Response {
     pub content_type: &'static str,
     /// Response body bytes.
     pub body: Vec<u8>,
+    /// Seconds for a `Retry-After` header (shed responses only).
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
     /// A JSON response.
     pub fn json(status: u16, body: impl Into<Vec<u8>>) -> Self {
-        Response { status, content_type: "application/json", body: body.into() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into(),
+            retry_after: None,
+        }
     }
 
     /// A plain-text response.
     pub fn text(status: u16, body: impl Into<Vec<u8>>) -> Self {
-        Response { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into(),
+            retry_after: None,
+        }
     }
 
     /// A JSON error envelope `{"error":"..."}`.
@@ -135,6 +155,16 @@ impl Response {
             status,
             format!("{{\"error\":{}}}", crate::api::artifact::json_string(message)),
         )
+    }
+
+    /// The overload-shedding response: `429 Too Many Requests` with a
+    /// `Retry-After` hint, sent when the server would otherwise queue
+    /// the request behind more work than it can absorb.
+    pub fn shed(retry_after_secs: u64) -> Self {
+        let mut resp =
+            Response::error(429, "server overloaded; retry after the indicated delay");
+        resp.retry_after = Some(retry_after_secs);
+        resp
     }
 }
 
@@ -146,12 +176,170 @@ pub fn status_reason(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
+}
+
+/// Progress of one incremental parse over the buffered prefix of a
+/// connection's byte stream ([`try_parse`]).
+#[derive(Debug, PartialEq, Eq)]
+pub enum Parse {
+    /// The blank line ending the head has not arrived yet.
+    NeedHead,
+    /// The head parsed and declared a body; not all of it has arrived.
+    NeedBody {
+        /// Body bytes already buffered.
+        have: usize,
+        /// Declared `Content-Length`.
+        want: usize,
+    },
+    /// One complete request parsed from the front of the buffer.
+    Complete {
+        /// The parsed request.
+        req: Request,
+        /// Buffer bytes the request spanned — the caller drains them;
+        /// any remainder is pipelined input for the next request.
+        consumed: usize,
+    },
+}
+
+/// Try to parse one complete request from the front of `buf`. Pure and
+/// incremental: callers accumulate bytes and re-call until
+/// [`Parse::Complete`] (then drain `consumed` bytes) or an error.
+/// Feeding byte-at-a-time reaches the same final result as one call
+/// over the whole buffer (property-tested in `tests/http_proto.rs`).
+pub fn try_parse(buf: &[u8]) -> Result<Parse, HttpError> {
+    let Some(head_end) = find_subslice(buf, b"\r\n\r\n") else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::HeadTooLarge);
+        }
+        return Ok(Parse::NeedHead);
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return Err(HttpError::HeadTooLarge);
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::Malformed("request head is not UTF-8".to_string()))?;
+    let mut req = parse_head(head)?;
+    let want = declared_body_length(&req)?;
+    if want > MAX_BODY_BYTES {
+        return Err(HttpError::BodyTooLarge(want));
+    }
+    let body_start = head_end + 4;
+    let have = buf.len() - body_start;
+    if have < want {
+        return Ok(Parse::NeedBody { have, want });
+    }
+    req.body.extend_from_slice(&buf[body_start..body_start + want]);
+    Ok(Parse::Complete { req, consumed: body_start + want })
+}
+
+/// Parse the request line and headers (everything before the blank
+/// line). The returned request carries an empty body.
+fn parse_head(head: &str) -> Result<Request, HttpError> {
+    let mut lines = head.split("\r\n");
+    let request_line =
+        lines.next().ok_or_else(|| HttpError::Malformed("empty request".to_string()))?;
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => {
+            return Err(HttpError::Malformed(format!("bad request line {request_line:?}")))
+        }
+    };
+    let http10 = match version {
+        "HTTP/1.1" => false,
+        "HTTP/1.0" => true,
+        other => return Err(HttpError::Malformed(format!("unsupported version {other:?}"))),
+    };
+    if !path.starts_with('/') {
+        return Err(HttpError::Malformed(format!("bad request target {path:?}")));
+    }
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header line {line:?}")))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::Malformed(format!("bad header name {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        http10,
+        headers,
+        body: Vec::new(),
+    })
+}
+
+/// The body length the head declares, enforcing the framing rules that
+/// keep request smuggling out: no transfer-encoding, no duplicate and
+/// no non-DIGIT `Content-Length`.
+fn declared_body_length(req: &Request) -> Result<usize, HttpError> {
+    if let Some(te) = req.header("transfer-encoding") {
+        return Err(HttpError::Unsupported(format!(
+            "transfer-encoding {te:?} is not supported; send a Content-Length body"
+        )));
+    }
+    // RFC 9110: conflicting (or repeated) Content-Length headers
+    // desynchronize framing — classic request-smuggling material —
+    // so any duplicate is rejected outright.
+    if req.headers.iter().filter(|(n, _)| n == "content-length").count() > 1 {
+        return Err(HttpError::Malformed("multiple content-length headers".to_string()));
+    }
+    // RFC 9110 allows DIGIT only — `parse()` alone would also take
+    // a leading `+`, which intermediaries may frame differently
+    // (another smuggling desync).
+    match req.header("content-length") {
+        None => Ok(0),
+        Some(v) => {
+            let v = v.trim();
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(HttpError::Malformed(format!("bad content-length {v:?}")));
+            }
+            v.parse().map_err(|_| HttpError::Malformed(format!("bad content-length {v:?}")))
+        }
+    }
+}
+
+/// Serialize one framed response — status line, framing headers, body —
+/// exactly as written to the wire. Both frontends (the blocking
+/// connection loop and the event loop) emit these bytes verbatim, which
+/// is what makes their responses byte-identical.
+pub fn serialize_response(resp: &Response, keep_alive: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(resp.body.len() + 160);
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        resp.status,
+        status_reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+    );
+    out.extend_from_slice(head.as_bytes());
+    if let Some(secs) = resp.retry_after {
+        out.extend_from_slice(format!("Retry-After: {secs}\r\n").as_bytes());
+    }
+    let connection: &[u8] = if keep_alive {
+        b"Connection: keep-alive\r\n\r\n"
+    } else {
+        b"Connection: close\r\n\r\n"
+    };
+    out.extend_from_slice(connection);
+    out.extend_from_slice(&resp.body);
+    out
 }
 
 /// A buffered HTTP connection: reads framed requests (retaining
@@ -174,147 +362,48 @@ impl<S: Read + Write> HttpConn<S> {
     /// keep-alive session).
     pub fn read_request(&mut self) -> Result<Option<Request>, HttpError> {
         let started = Instant::now();
-        // Accumulate until the blank line that ends the head.
-        let head_end = loop {
-            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
-                break pos;
-            }
-            if self.buf.len() > MAX_HEAD_BYTES {
-                return Err(HttpError::HeadTooLarge);
-            }
+        loop {
+            // `waiting` is None while the head is incomplete, or the
+            // (have, want) body progress once the head has parsed.
+            let waiting = match try_parse(&self.buf)? {
+                Parse::Complete { req, consumed } => {
+                    self.buf.drain(..consumed);
+                    return Ok(Some(req));
+                }
+                Parse::NeedHead => None,
+                Parse::NeedBody { have, want } => Some((have, want)),
+            };
             if started.elapsed() > REQUEST_DEADLINE {
-                return Err(HttpError::Malformed(
-                    "request head not completed within the request deadline".to_string(),
-                ));
+                return Err(HttpError::Malformed(match waiting {
+                    None => {
+                        "request head not completed within the request deadline".to_string()
+                    }
+                    Some(_) => {
+                        "request body not completed within the request deadline".to_string()
+                    }
+                }));
             }
             let mut chunk = [0u8; 4096];
             let n = self.stream.read(&mut chunk).map_err(HttpError::Io)?;
             if n == 0 {
-                if self.buf.is_empty() {
-                    return Ok(None);
-                }
-                return Err(HttpError::Malformed(
-                    "connection closed mid-request head".to_string(),
-                ));
+                return match waiting {
+                    None if self.buf.is_empty() => Ok(None),
+                    None => Err(HttpError::Malformed(
+                        "connection closed mid-request head".to_string(),
+                    )),
+                    Some((have, want)) => Err(HttpError::Malformed(format!(
+                        "connection closed after {have} of {want} body bytes"
+                    ))),
+                };
             }
             self.buf.extend_from_slice(&chunk[..n]);
-        };
-        if head_end > MAX_HEAD_BYTES {
-            return Err(HttpError::HeadTooLarge);
         }
-        let head = self.buf[..head_end].to_vec();
-        self.buf.drain(..head_end + 4);
-        let head = String::from_utf8(head)
-            .map_err(|_| HttpError::Malformed("request head is not UTF-8".to_string()))?;
-        let mut lines = head.split("\r\n");
-        let request_line =
-            lines.next().ok_or_else(|| HttpError::Malformed("empty request".to_string()))?;
-        let mut parts = request_line.split_ascii_whitespace();
-        let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
-        {
-            (Some(m), Some(p), Some(v), None) => (m, p, v),
-            _ => {
-                return Err(HttpError::Malformed(format!(
-                    "bad request line {request_line:?}"
-                )))
-            }
-        };
-        let http10 = match version {
-            "HTTP/1.1" => false,
-            "HTTP/1.0" => true,
-            other => {
-                return Err(HttpError::Malformed(format!("unsupported version {other:?}")))
-            }
-        };
-        if !path.starts_with('/') {
-            return Err(HttpError::Malformed(format!("bad request target {path:?}")));
-        }
-
-        let mut headers = Vec::new();
-        for line in lines {
-            if headers.len() >= MAX_HEADERS {
-                return Err(HttpError::HeadTooLarge);
-            }
-            let (name, value) = line.split_once(':').ok_or_else(|| {
-                HttpError::Malformed(format!("bad header line {line:?}"))
-            })?;
-            if name.is_empty() || name.contains(' ') {
-                return Err(HttpError::Malformed(format!("bad header name {name:?}")));
-            }
-            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
-        }
-
-        let mut req =
-            Request { method: method.to_string(), path: path.to_string(), http10, headers, body: Vec::new() };
-        if let Some(te) = req.header("transfer-encoding") {
-            return Err(HttpError::Unsupported(format!(
-                "transfer-encoding {te:?} is not supported; send a Content-Length body"
-            )));
-        }
-        // RFC 9110: conflicting (or repeated) Content-Length headers
-        // desynchronize framing — classic request-smuggling material —
-        // so any duplicate is rejected outright.
-        if req.headers.iter().filter(|(n, _)| n == "content-length").count() > 1 {
-            return Err(HttpError::Malformed(
-                "multiple content-length headers".to_string(),
-            ));
-        }
-        // RFC 9110 allows DIGIT only — `parse()` alone would also take
-        // a leading `+`, which intermediaries may frame differently
-        // (another smuggling desync).
-        let content_length = match req.header("content-length") {
-            None => 0usize,
-            Some(v) => {
-                let v = v.trim();
-                if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
-                    return Err(HttpError::Malformed(format!("bad content-length {v:?}")));
-                }
-                v.parse().map_err(|_| {
-                    HttpError::Malformed(format!("bad content-length {v:?}"))
-                })?
-            }
-        };
-        if content_length > MAX_BODY_BYTES {
-            return Err(HttpError::BodyTooLarge(content_length));
-        }
-
-        // Take the body: first from the leftover buffer, then the stream.
-        let from_buf = content_length.min(self.buf.len());
-        req.body.extend_from_slice(&self.buf[..from_buf]);
-        self.buf.drain(..from_buf);
-        while req.body.len() < content_length {
-            if started.elapsed() > REQUEST_DEADLINE {
-                return Err(HttpError::Malformed(
-                    "request body not completed within the request deadline".to_string(),
-                ));
-            }
-            let mut chunk = [0u8; 4096];
-            let want = (content_length - req.body.len()).min(chunk.len());
-            let n = self.stream.read(&mut chunk[..want]).map_err(HttpError::Io)?;
-            if n == 0 {
-                return Err(HttpError::Malformed(format!(
-                    "connection closed after {} of {content_length} body bytes",
-                    req.body.len()
-                )));
-            }
-            req.body.extend_from_slice(&chunk[..n]);
-        }
-        Ok(Some(req))
     }
 
     /// Write one framed response. `keep_alive` selects the `Connection`
     /// header (the caller owns the close decision).
     pub fn write_response(&mut self, resp: &Response, keep_alive: bool) -> io::Result<()> {
-        let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-            resp.status,
-            status_reason(resp.status),
-            resp.content_type,
-            resp.body.len(),
-            if keep_alive { "keep-alive" } else { "close" },
-        );
-        self.stream.write_all(head.as_bytes())?;
-        self.stream.write_all(&resp.body)?;
+        self.stream.write_all(&serialize_response(resp, keep_alive))?;
         self.stream.flush()
     }
 }
@@ -443,6 +532,39 @@ mod tests {
     }
 
     #[test]
+    fn try_parse_reports_need_head_then_need_body_then_complete() {
+        let wire = b"POST /v1/query HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        // Any strict prefix of the head: NeedHead.
+        assert_eq!(try_parse(&wire[..10]).unwrap(), Parse::NeedHead);
+        // Head complete, body partial: NeedBody with exact progress.
+        let head_end = 42 + 4; // head bytes + the "\r\n\r\n" terminator
+        assert_eq!(
+            try_parse(&wire[..head_end + 2]).unwrap(),
+            Parse::NeedBody { have: 2, want: 5 }
+        );
+        // Whole request: Complete, consuming every byte.
+        match try_parse(wire).unwrap() {
+            Parse::Complete { req, consumed } => {
+                assert_eq!(consumed, wire.len());
+                assert_eq!(req.body, b"hello");
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn try_parse_leaves_pipelined_bytes_unconsumed() {
+        let wire = b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n";
+        match try_parse(wire).unwrap() {
+            Parse::Complete { req, consumed } => {
+                assert_eq!(req.path, "/healthz");
+                assert_eq!(consumed, 25);
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn writes_a_framed_response() {
         let mut c = conn("");
         c.write_response(&Response::json(200, "{\"ok\":true}"), true).unwrap();
@@ -457,5 +579,18 @@ mod tests {
         assert!(out.contains("HTTP/1.1 404 Not Found\r\n"));
         assert!(out.contains("Connection: close\r\n"));
         assert!(out.contains("{\"error\":\"no such route\"}"));
+    }
+
+    #[test]
+    fn shed_responses_carry_retry_after() {
+        let wire = serialize_response(&Response::shed(1), true);
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.contains("overloaded"), "{text}");
+        // Ordinary responses never emit the header.
+        let plain = String::from_utf8(serialize_response(&Response::json(200, "{}"), true)).unwrap();
+        assert!(!plain.contains("Retry-After"), "{plain}");
     }
 }

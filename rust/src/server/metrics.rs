@@ -39,6 +39,23 @@ pub struct ServerMetrics {
     /// that never resolved a route (404/405, framing 4xx/5xx) — hostile
     /// traffic must be visible, not invisible, in `/metrics`.
     routes: Vec<RouteMetrics>,
+    /// Connections accepted, including ones shed at the cap.
+    accepted: AtomicU64,
+    /// Connections admitted past the cap check (gauge numerator).
+    opened: AtomicU64,
+    /// Admitted connections since closed (gauge denominator).
+    closed: AtomicU64,
+    /// Requests (or whole connections) answered `429` by overload
+    /// shedding.
+    shed: AtomicU64,
+    /// Reads that moved bytes but left a request incomplete — a measure
+    /// of drip-fed (slowloris-shaped) traffic.
+    read_stalls: AtomicU64,
+    /// Writes that moved bytes but could not finish a response — the
+    /// peer's receive window is the bottleneck.
+    write_stalls: AtomicU64,
+    /// Connections closed by a read/write deadline, not by the peer.
+    deadline_closes: AtomicU64,
 }
 
 /// Series label of the unrouted-response slot.
@@ -55,7 +72,54 @@ impl ServerMetrics {
     pub fn new() -> Self {
         ServerMetrics {
             routes: (0..Route::ALL.len() + 1).map(|_| RouteMetrics::default()).collect(),
+            accepted: AtomicU64::new(0),
+            opened: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            read_stalls: AtomicU64::new(0),
+            write_stalls: AtomicU64::new(0),
+            deadline_closes: AtomicU64::new(0),
         }
+    }
+
+    /// Count one accepted TCP connection (admitted or shed).
+    pub fn conn_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one connection admitted into the event loop.
+    pub fn conn_opened(&self) {
+        self.opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one admitted connection leaving the event loop.
+    pub fn conn_closed(&self) {
+        self.closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request (or over-cap connection) shed with a `429`.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed so far (used by the shed tests).
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Count a read that progressed without completing a request.
+    pub fn record_read_stall(&self) {
+        self.read_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a write that progressed without finishing the response.
+    pub fn record_write_stall(&self) {
+        self.write_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a connection closed by a deadline (idle closes excluded).
+    pub fn record_deadline_close(&self) {
+        self.deadline_closes.fetch_add(1, Ordering::Relaxed);
     }
 
     /// `(slot index, series label)` of every slot, in slot order.
@@ -150,6 +214,47 @@ impl ServerMetrics {
             )
             .unwrap();
         }
+        // Event-loop serving series. `open_connections` is derived from
+        // two monotone counters so the hot path never needs a CAS loop
+        // (a racy read can transiently undercount, never go negative
+        // thanks to the saturating subtraction).
+        let opened = self.opened.load(Ordering::Relaxed);
+        let closed = self.closed.load(Ordering::Relaxed);
+        out.push_str("# HELP bp_server_open_connections Connections currently admitted.\n");
+        out.push_str("# TYPE bp_server_open_connections gauge\n");
+        writeln!(out, "bp_server_open_connections {}", opened.saturating_sub(closed)).unwrap();
+        let loop_counters = [
+            (
+                "bp_server_connections_total",
+                "TCP connections accepted (admitted or shed).",
+                self.accepted.load(Ordering::Relaxed),
+            ),
+            (
+                "bp_server_shed_total",
+                "Requests or connections answered 429 by overload shedding.",
+                self.shed.load(Ordering::Relaxed),
+            ),
+            (
+                "bp_server_read_stalls_total",
+                "Reads that progressed without completing a request.",
+                self.read_stalls.load(Ordering::Relaxed),
+            ),
+            (
+                "bp_server_write_stalls_total",
+                "Writes that progressed without finishing a response.",
+                self.write_stalls.load(Ordering::Relaxed),
+            ),
+            (
+                "bp_server_deadline_closes_total",
+                "Connections closed by a read or write deadline.",
+                self.deadline_closes.load(Ordering::Relaxed),
+            ),
+        ];
+        for (name, help, value) in loop_counters {
+            writeln!(out, "# HELP {name} {help}").unwrap();
+            writeln!(out, "# TYPE {name} counter").unwrap();
+            writeln!(out, "{name} {value}").unwrap();
+        }
         // One HELP/TYPE pair per metric family (hits/misses are
         // counters, entry counts are gauges) so strict parsers accept
         // the exposition.
@@ -221,6 +326,35 @@ mod tests {
             text.contains("bp_server_request_duration_us_bucket{route=\"query\",le=\"+Inf\"} 3")
         );
         assert!(text.contains("bp_server_request_duration_us_count{route=\"query\"} 3"));
+    }
+
+    #[test]
+    fn renders_event_loop_series() {
+        let m = ServerMetrics::new();
+        for _ in 0..3 {
+            m.conn_accepted();
+        }
+        m.conn_opened();
+        m.conn_opened();
+        m.conn_closed();
+        m.record_shed();
+        m.record_read_stall();
+        m.record_read_stall();
+        m.record_write_stall();
+        m.record_deadline_close();
+        assert_eq!(m.shed_total(), 1);
+        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default());
+        assert!(text.contains("bp_server_open_connections 1"), "{text}");
+        assert!(text.contains("bp_server_connections_total 3"), "{text}");
+        assert!(text.contains("bp_server_shed_total 1"), "{text}");
+        assert!(text.contains("bp_server_read_stalls_total 2"), "{text}");
+        assert!(text.contains("bp_server_write_stalls_total 1"), "{text}");
+        assert!(text.contains("bp_server_deadline_closes_total 1"), "{text}");
+        // The gauge never goes negative even if closes race ahead.
+        m.conn_closed();
+        m.conn_closed();
+        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default());
+        assert!(text.contains("bp_server_open_connections 0"), "{text}");
     }
 
     #[test]

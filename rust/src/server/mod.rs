@@ -9,14 +9,33 @@
 //!
 //! * [`http`] — request framing (request line, headers, `Content-Length`
 //!   bodies, keep-alive) with hard size limits; hostile input maps to
-//!   4xx, never to a dead worker.
+//!   4xx, never to a dead worker. Parsing is incremental
+//!   ([`http::try_parse`]) so both frontends share one grammar.
+//! * [`conn`] — the per-connection state machine
+//!   (`Reading → Dispatching → Writing → KeepAlive/Closing`) over any
+//!   `Read + Write` transport, with partial-I/O buffers and deadlines.
+//! * `event_loop` (private) — the default frontend: one nonblocking
+//!   readiness loop multiplexing every connection, shedding overload
+//!   with `429 Too Many Requests` + `Retry-After`.
 //! * [`router`] — the closed `(method, path)` table.
-//! * [`pool`] — a bounded worker pool; the queue bound backpressures the
-//!   accept loop.
+//! * [`executor`] — the dispatch seam: CPU-bound request work runs
+//!   behind the [`executor::Executor`] trait.
+//! * [`pool`] — the production [`executor::Executor`]: a bounded worker
+//!   pool whose queue bound backpressures the legacy accept loop and
+//!   enforces the event loop's shed policy.
 //! * [`cache`] — rendered-response memoization keyed by
 //!   [`SimRequest`] (`Copy + Eq + Hash`).
-//! * [`metrics`] — per-route counters and latency histograms, plus the
+//! * [`metrics`] — per-route counters and latency histograms, the
+//!   event-loop series (open connections, sheds, stalls), plus the
 //!   plan/artifact cache counters, in Prometheus text format.
+//! * [`chaos`] — fault-injection transports ([`chaos::MemStream`],
+//!   [`chaos::ChaosStream`]) for hostile-I/O tests; never constructed
+//!   by the live server.
+//!
+//! Two frontends serve the same routes with byte-identical responses
+//! (asserted in `tests/server.rs`): [`Frontend::EventLoop`] (default)
+//! and [`Frontend::BlockingPool`], the original
+//! thread-per-connection loop, kept as the A/B baseline.
 //!
 //! Everything is `std` only — the offline build has no crate registry,
 //! and nothing here needs one: the protocol subset is small enough that
@@ -45,6 +64,10 @@
 //! ```
 
 pub mod cache;
+pub mod chaos;
+pub mod conn;
+mod event_loop;
+pub mod executor;
 pub mod http;
 pub mod metrics;
 pub mod pool;
@@ -61,6 +84,7 @@ use crate::api::artifact::json_string;
 use crate::api::json::{self, parse_batch};
 use crate::api::{render_all_json, Service, SimRequest};
 use cache::ArtifactCache;
+use conn::ConnConfig;
 use http::{HttpConn, Request, Response};
 use metrics::ServerMetrics;
 use pool::ThreadPool;
@@ -68,6 +92,13 @@ use router::Route;
 
 /// Address `serve` binds when `--addr` is not given.
 pub const DEFAULT_ADDR: &str = "127.0.0.1:8000";
+
+/// Connection cap of the event-loop frontend when `--max-conns` is not
+/// given; connections over the cap are answered `429` and closed.
+pub const DEFAULT_MAX_CONNS: usize = 1024;
+
+/// `Retry-After` seconds advertised on shed (`429`) responses.
+pub const RETRY_AFTER_SECS: u64 = 1;
 
 /// Per-connection socket read timeout: bounds how long an idle
 /// keep-alive connection can pin a worker (notably during shutdown
@@ -81,6 +112,54 @@ pub fn default_threads() -> usize {
     crate::coordinator::scheduler::default_workers()
 }
 
+/// Which serving core drives the listener.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Frontend {
+    /// The nonblocking readiness loop with overload shedding (default).
+    EventLoop,
+    /// The original thread-per-connection blocking loop, kept as the
+    /// A/B baseline: same routes, byte-identical responses.
+    BlockingPool,
+}
+
+/// Tunables of one server instance (`repro serve` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Worker threads running CPU-bound request work.
+    pub threads: usize,
+    /// Event loop only: connections admitted before new ones are shed.
+    pub max_conns: usize,
+    /// Event loop only: dispatches allowed beyond busy workers before
+    /// requests are shed (also the worker pool's queue bound).
+    pub shed_queue: usize,
+    /// Which serving core drives the listener.
+    pub frontend: Frontend,
+    /// Event loop only: per-connection deadlines.
+    pub conn: ConnConfig,
+}
+
+impl ServeOptions {
+    /// Defaults for `threads` workers: event-loop frontend, a shed
+    /// queue of `2 * threads` (matching [`ThreadPool::new`]'s bound),
+    /// and [`DEFAULT_MAX_CONNS`].
+    pub fn for_threads(threads: usize) -> Self {
+        let threads = threads.max(1);
+        ServeOptions {
+            threads,
+            max_conns: DEFAULT_MAX_CONNS,
+            shed_queue: 2 * threads,
+            frontend: Frontend::EventLoop,
+            conn: ConnConfig::default(),
+        }
+    }
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self::for_threads(default_threads())
+    }
+}
+
 /// Shared state of one running server.
 struct ServerState {
     service: Service,
@@ -90,18 +169,24 @@ struct ServerState {
     local_addr: SocketAddr,
 }
 
-/// The HTTP frontend: owns the listener, the worker pool, the
+/// The HTTP frontend: owns the listener, the serving core, the
 /// [`Service`] and both caches.
 pub struct Server {
     listener: TcpListener,
     state: Arc<ServerState>,
-    threads: usize,
+    opts: ServeOptions,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. `127.0.0.1:8000`, port `0` for ephemeral) and
-    /// prepare `threads` connection workers over a service for `cfg`.
+    /// Bind `addr` (e.g. `127.0.0.1:8000`, port `0` for ephemeral) with
+    /// default options for `threads` workers over a service for `cfg`.
     pub fn bind(cfg: AccelConfig, addr: &str, threads: usize) -> io::Result<Server> {
+        Self::bind_with(cfg, addr, ServeOptions::for_threads(threads))
+    }
+
+    /// Bind `addr` with explicit [`ServeOptions`] — the full-control
+    /// constructor behind `repro serve`'s flags and the A/B tests.
+    pub fn bind_with(cfg: AccelConfig, addr: &str, opts: ServeOptions) -> io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         let state = Arc::new(ServerState {
@@ -111,7 +196,8 @@ impl Server {
             shutdown: AtomicBool::new(false),
             local_addr,
         });
-        Ok(Server { listener, state, threads: threads.max(1) })
+        let opts = ServeOptions { threads: opts.threads.max(1), ..opts };
+        Ok(Server { listener, state, opts })
     }
 
     /// The bound address (the actual port when `:0` was requested).
@@ -119,13 +205,28 @@ impl Server {
         self.state.local_addr
     }
 
-    /// Accept and serve connections until a `POST /v1/shutdown` arrives,
-    /// then drain in-flight work and return. Signal-free by design: the
-    /// sentinel route sets the shutdown flag and pokes the accept loop
-    /// with a loopback connection, so no platform signal handling is
-    /// needed.
+    /// Serve connections until a `POST /v1/shutdown` arrives, then
+    /// drain in-flight work and return. Signal-free by design: the
+    /// sentinel route sets the shutdown flag; the event loop observes
+    /// it on its next tick, while the blocking frontend pokes its
+    /// accept loop with a loopback connection.
     pub fn serve(self) -> io::Result<()> {
-        let pool = ThreadPool::new(self.threads);
+        match self.opts.frontend {
+            Frontend::EventLoop => self.serve_event_loop(),
+            Frontend::BlockingPool => self.serve_blocking(),
+        }
+    }
+
+    /// The readiness-loop frontend: parse and frame on one thread,
+    /// dispatch CPU-bound work to the bounded pool, shed overload.
+    fn serve_event_loop(self) -> io::Result<()> {
+        let pool = ThreadPool::with_queue(self.opts.threads, self.opts.shed_queue);
+        event_loop::run(self.listener, self.state, Box::new(pool), self.opts)
+    }
+
+    /// The legacy thread-per-connection frontend.
+    fn serve_blocking(self) -> io::Result<()> {
+        let pool = ThreadPool::new(self.opts.threads);
         for stream in self.listener.incoming() {
             if self.state.shutdown.load(Ordering::Acquire) {
                 break;

@@ -2,16 +2,22 @@
 //!
 //! std-only: a [`std::sync::mpsc::sync_channel`] feeds `N` worker
 //! threads. The channel bound gives natural backpressure — when every
-//! worker is busy and the queue is full, the accept loop blocks instead
-//! of buffering unbounded connections. Jobs run under a panic guard so a
-//! handler bug degrades one connection, never the pool's capacity.
+//! worker is busy and the queue is full, [`ThreadPool::execute`] blocks
+//! (the legacy frontend's accept loop) while [`ThreadPool::try_execute`]
+//! hands the job back (the event loop sheds the request with a 429
+//! instead of stalling). Jobs run under a panic guard so a handler bug
+//! degrades one connection, never the pool's capacity.
+//!
+//! The pool is one [`Executor`] strategy; the event loop only sees the
+//! trait, which keeps the legacy blocking frontend and the readiness
+//! loop A/B-testable over identical dispatch semantics.
 
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+use crate::server::executor::{Executor, Job};
 
 /// Fixed-size worker pool with a bounded job queue.
 pub struct ThreadPool {
@@ -24,7 +30,15 @@ impl ThreadPool {
     /// `2 * threads` pending jobs.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
-        let (sender, receiver) = std::sync::mpsc::sync_channel::<Job>(2 * threads);
+        Self::with_queue(threads, 2 * threads)
+    }
+
+    /// Pool with `threads` workers and an explicit queue bound (at
+    /// least 1 of each). The event loop sizes the bound from
+    /// `--shed-queue`, so the channel itself enforces the shed policy.
+    pub fn with_queue(threads: usize, queue: usize) -> Self {
+        let threads = threads.max(1);
+        let (sender, receiver) = std::sync::mpsc::sync_channel::<Job>(queue.max(1));
         let receiver = Arc::new(Mutex::new(receiver));
         let workers = (0..threads)
             .map(|i| {
@@ -57,6 +71,20 @@ impl ThreadPool {
             .expect("pool workers alive");
     }
 
+    /// Queue one job only if a slot is free. A full (or closed) queue
+    /// hands the job back so the caller can shed instead of blocking —
+    /// the event loop turns that into `429 Too Many Requests`.
+    pub fn try_execute(&self, job: Job) -> Result<(), Job> {
+        let Some(sender) = self.sender.as_ref() else {
+            return Err(job);
+        };
+        match sender.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(job)) => Err(job),
+            Err(TrySendError::Disconnected(job)) => Err(job),
+        }
+    }
+
     /// Close the queue and wait for every queued job to finish.
     pub fn join(mut self) {
         self.shutdown();
@@ -69,6 +97,24 @@ impl ThreadPool {
         for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
+    }
+}
+
+impl Executor for ThreadPool {
+    fn try_spawn(&self, job: Job) -> Result<(), Job> {
+        self.try_execute(job)
+    }
+
+    fn spawn(&self, job: Job) {
+        self.execute(job);
+    }
+
+    fn workers(&self) -> usize {
+        self.threads()
+    }
+
+    fn join(self: Box<Self>) {
+        ThreadPool::join(*self);
     }
 }
 
@@ -135,5 +181,68 @@ mod tests {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.threads(), 1);
         pool.join();
+    }
+
+    #[test]
+    fn try_execute_sheds_when_the_queue_is_full_and_queued_jobs_still_run() {
+        // One worker parked on a gate, queue bound 1: the first job
+        // occupies the worker, the second fills the queue, the third
+        // must bounce back — and after the gate opens, both accepted
+        // jobs run to completion through join().
+        let pool = ThreadPool::with_queue(1, 1);
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        let started = Arc::new(std::sync::Barrier::new(2));
+        let done = Arc::new(AtomicUsize::new(0));
+
+        let g = Arc::clone(&gate);
+        let s = Arc::clone(&started);
+        pool.execute(move || {
+            s.wait(); // the worker picked the blocker up: queue is empty
+            g.wait(); // park until the test releases it
+        });
+        started.wait();
+        let d = Arc::clone(&done);
+        assert!(pool
+            .try_execute(Box::new(move || {
+                d.fetch_add(1, Ordering::Relaxed);
+            }))
+            .is_ok());
+        let d = Arc::clone(&done);
+        let bounced = pool.try_execute(Box::new(move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        }));
+        assert!(bounced.is_err(), "full queue must hand the job back");
+        gate.wait();
+        pool.join();
+        assert_eq!(done.load(Ordering::Relaxed), 1, "accepted job ran, bounced job did not");
+    }
+
+    #[test]
+    fn queued_jobs_drain_through_join_not_drop() {
+        // The shutdown audit: jobs accepted before join() must run even
+        // if no worker has picked them up yet. One worker is parked on
+        // a gate while two more jobs queue behind it; join() (entered
+        // from another thread, then the gate opens) must run them all.
+        let pool = ThreadPool::with_queue(1, 2);
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        let started = Arc::new(std::sync::Barrier::new(2));
+        let done = Arc::new(AtomicUsize::new(0));
+        let g = Arc::clone(&gate);
+        let s = Arc::clone(&started);
+        pool.execute(move || {
+            s.wait();
+            g.wait();
+        });
+        started.wait();
+        for _ in 0..2 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let joiner = std::thread::spawn(move || pool.join());
+        gate.wait();
+        joiner.join().expect("join thread");
+        assert_eq!(done.load(Ordering::Relaxed), 2, "queued jobs answered, not dropped");
     }
 }

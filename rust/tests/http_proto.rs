@@ -1,0 +1,289 @@
+//! Protocol property tests for the incremental HTTP parser (ISSUE 7).
+//!
+//! `http::try_parse` is pure over the buffered prefix of a connection's
+//! byte stream, so the event loop's correctness reduces to three
+//! properties, checked here over the full request catalog and a hostile
+//! corpus:
+//!
+//! 1. **Split-independence** — feeding a wire byte-at-a-time, in random
+//!    chunks, or as one whole buffer reaches the identical final result
+//!    (same parsed request and consumed length, or same error status).
+//! 2. **Monotonic progression** — growing the buffer only ever moves
+//!    `NeedHead → NeedBody → Complete` (or sticks at one error); a
+//!    `NeedBody` never loses body bytes and never changes its declared
+//!    length, and a result never flips once reached.
+//! 3. **Pipelining** — `Complete.consumed` spans exactly one request,
+//!    and the remainder parses as the next one.
+
+use bp_im2col::api::{DseRequest, FigureRequest, FleetRequest, SimRequest};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::report::Figure;
+use bp_im2col::server::http::{try_parse, Parse, Request, MAX_HEAD_BYTES};
+
+// ---------------------------------------------------------------------------
+// Corpus
+// ---------------------------------------------------------------------------
+
+/// The `tests/server.rs` request catalog: every request kind.
+fn catalog() -> Vec<SimRequest> {
+    vec![
+        SimRequest::Table2,
+        SimRequest::Table3,
+        SimRequest::Table4,
+        FigureRequest::new(Figure::Runtime).pass(Pass::Loss).devices(2).into(),
+        FigureRequest::new(Figure::OffChipTraffic).pass(Pass::Grad).into(),
+        FigureRequest::new(Figure::BufferReads).pass(Pass::Loss).extended(true).into(),
+        SimRequest::Sparsity { extended: false },
+        SimRequest::Storage { extended: true },
+        SimRequest::layer(ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)),
+        SimRequest::TrainCost { devices: Some(2) },
+        SimRequest::fleet(4),
+        SimRequest::Fleet(FleetRequest::new(2).extended(true)),
+        DseRequest::new().budget(4).seed(7).into(),
+    ]
+}
+
+fn wire(method: &str, path: &str, headers: &[(&str, &str)], body: &[u8]) -> Vec<u8> {
+    let mut out = format!("{method} {path} HTTP/1.1\r\n").into_bytes();
+    for (name, value) in headers {
+        out.extend_from_slice(format!("{name}: {value}\r\n").as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+    out
+}
+
+fn query_wire(body: &str) -> Vec<u8> {
+    wire(
+        "POST",
+        "/v1/query",
+        &[("Host", "t"), ("Content-Length", &body.len().to_string())],
+        body.as_bytes(),
+    )
+}
+
+/// Every well-formed wire the server's own clients produce: the full
+/// catalog as `/v1/query` posts, the control-plane GETs, framing
+/// variations (HTTP/1.0, `Connection: close`, header-name case), and a
+/// request at the body-size boundary.
+fn valid_corpus() -> Vec<Vec<u8>> {
+    let mut wires: Vec<Vec<u8>> =
+        catalog().iter().map(|req| query_wire(&req.to_json())).collect();
+    for path in ["/healthz", "/metrics", "/v1/requests", "/nope"] {
+        wires.push(wire("GET", path, &[("Host", "t")], b""));
+    }
+    wires.push(wire("GET", "/v1/query", &[], b"")); // 405 at routing, fine framing
+    wires.push(b"GET /healthz HTTP/1.0\r\n\r\n".to_vec());
+    wires.push(wire("GET", "/healthz", &[("Connection", "close")], b""));
+    wires.push(wire("POST", "/v1/query", &[("CONTENT-LENGTH", "2")], b"{}"));
+    wires.push(wire("POST", "/v1/query", &[("content-length", "0")], b""));
+    wires
+}
+
+/// Hostile wires and the error status each must map to — however the
+/// bytes are split.
+fn hostile_corpus() -> Vec<(Vec<u8>, u16)> {
+    let mut huge_head = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+    huge_head.resize(MAX_HEAD_BYTES + 64, b'a');
+    huge_head.extend_from_slice(b"\r\n\r\n");
+    vec![
+        (b"THIS IS NOT HTTP\r\n\r\n".to_vec(), 400),
+        (b"GET /healthz HTTP/9.9\r\n\r\n".to_vec(), 400),
+        (b"GET \r\n\r\n".to_vec(), 400),
+        (wire("POST", "/v1/query", &[("Transfer-Encoding", "chunked")], b""), 501),
+        (
+            wire("POST", "/v1/query", &[("Content-Length", "2"), ("Content-Length", "2")], b"{}"),
+            400,
+        ),
+        (wire("POST", "/v1/query", &[("Content-Length", "abc")], b""), 400),
+        (wire("POST", "/v1/query", &[("Content-Length", "99999999")], b""), 413),
+        (b"GET /\xff\xfe HTTP/1.1\r\n\r\n".to_vec(), 400),
+        (huge_head, 431),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------------
+
+/// Terminal parse outcome of one buffer.
+#[derive(Debug, PartialEq, Eq)]
+enum Outcome {
+    Incomplete,
+    Req(Box<Request>, usize),
+    Fail(u16),
+}
+
+fn outcome(buf: &[u8]) -> Outcome {
+    match try_parse(buf) {
+        Ok(Parse::Complete { req, consumed }) => Outcome::Req(Box::new(req), consumed),
+        Ok(_) => Outcome::Incomplete,
+        Err(e) => Outcome::Fail(e.response().map_or(0, |r| r.status)),
+    }
+}
+
+/// Scan every prefix of `wire` (strided for very long wires), asserting
+/// the monotonic-progression property, and return the terminal outcome.
+fn scan_prefixes(wire: &[u8]) -> Outcome {
+    // 0 = NeedHead, 1 = NeedBody, 2 = terminal (Complete or error).
+    let mut phase = 0u8;
+    let mut body_have = 0usize;
+    let mut body_want: Option<usize> = None;
+    let mut terminal: Option<Outcome> = None;
+    let stride = if wire.len() > 2048 { 211 } else { 1 };
+    let mut lengths: Vec<usize> = (0..=wire.len()).step_by(stride).collect();
+    if lengths.last() != Some(&wire.len()) {
+        lengths.push(wire.len());
+    }
+    for len in lengths {
+        let prefix = &wire[..len];
+        match try_parse(prefix) {
+            Ok(Parse::NeedHead) => {
+                assert_eq!(phase, 0, "NeedHead after NeedBody at prefix {len}");
+            }
+            Ok(Parse::NeedBody { have, want }) => {
+                assert!(phase <= 1, "NeedBody after a terminal outcome at prefix {len}");
+                phase = 1;
+                assert!(have >= body_have, "body bytes went backwards at prefix {len}");
+                if let Some(w) = body_want {
+                    assert_eq!(want, w, "declared body length changed at prefix {len}");
+                }
+                body_have = have;
+                body_want = Some(want);
+            }
+            done => {
+                phase = 2;
+                let out = match done {
+                    Ok(Parse::Complete { req, consumed }) => {
+                        Outcome::Req(Box::new(req), consumed)
+                    }
+                    Err(e) => Outcome::Fail(e.response().map_or(0, |r| r.status)),
+                    Ok(_) => unreachable!(),
+                };
+                if let Some(prev) = &terminal {
+                    assert_eq!(*prev, out, "terminal outcome flipped at prefix {len}");
+                } else {
+                    terminal = Some(out);
+                }
+            }
+        }
+    }
+    terminal.unwrap_or(Outcome::Incomplete)
+}
+
+/// Deterministic LCG for reproducible "random" chunk splits.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self, bound: usize) -> usize {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((self.0 >> 33) as usize) % bound
+    }
+}
+
+/// Feed `wire` in random chunks, re-parsing after every chunk (exactly
+/// the event loop's accumulation pattern), and return the terminal
+/// outcome.
+fn feed_random_chunks(wire: &[u8], seed: u64) -> Outcome {
+    let mut rng = Lcg(seed);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut fed = 0usize;
+    let mut terminal: Option<Outcome> = None;
+    while fed < wire.len() {
+        let chunk = (1 + rng.next(64)).min(wire.len() - fed);
+        buf.extend_from_slice(&wire[fed..fed + chunk]);
+        fed += chunk;
+        let out = outcome(&buf);
+        if out != Outcome::Incomplete {
+            if let Some(prev) = &terminal {
+                assert_eq!(*prev, out, "outcome flipped while feeding chunks");
+            } else {
+                terminal = Some(out);
+            }
+        }
+    }
+    terminal.unwrap_or(Outcome::Incomplete)
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn valid_wires_parse_identically_under_any_split() {
+    for wire in valid_corpus() {
+        let whole = outcome(&wire);
+        let Outcome::Req(req, consumed) = &whole else {
+            panic!("valid wire did not parse: {whole:?}");
+        };
+        assert_eq!(*consumed, wire.len(), "one request must span the whole wire");
+        assert_eq!(scan_prefixes(&wire), whole, "byte-at-a-time disagrees with whole-buffer");
+        for seed in [1u64, 7, 42] {
+            assert_eq!(feed_random_chunks(&wire, seed), whole, "random split disagrees");
+        }
+        // Spot-check the parse is semantically meaningful, not vacuous.
+        assert!(!req.method.is_empty());
+        assert!(req.path.starts_with('/') || req.path.starts_with("http"));
+    }
+}
+
+#[test]
+fn catalog_bodies_round_trip_through_the_parser() {
+    for sim in catalog() {
+        let body = sim.to_json();
+        let wire = query_wire(&body);
+        match outcome(&wire) {
+            Outcome::Req(req, _) => {
+                assert_eq!(req.path, "/v1/query");
+                assert_eq!(req.body, body.as_bytes(), "{}", sim.name());
+                // The decoded body reproduces the original request.
+                let decoded = SimRequest::from_json(&body).expect("catalog body decodes");
+                assert_eq!(decoded, sim, "{}", sim.name());
+            }
+            other => panic!("{}: {other:?}", sim.name()),
+        }
+    }
+}
+
+#[test]
+fn hostile_wires_fail_identically_under_any_split() {
+    for (wire, status) in hostile_corpus() {
+        let whole = outcome(&wire);
+        assert_eq!(whole, Outcome::Fail(status), "whole-buffer parse of {status} wire");
+        assert_eq!(scan_prefixes(&wire), whole, "byte-at-a-time disagrees for {status} wire");
+        for seed in [3u64, 9] {
+            assert_eq!(feed_random_chunks(&wire, seed), whole, "random split for {status}");
+        }
+    }
+}
+
+#[test]
+fn pipelined_wires_complete_one_request_at_a_time() {
+    let first = query_wire("{\"kind\":\"table3\"}");
+    let second = wire("GET", "/healthz", &[("Host", "t")], b"");
+    let mut both = first.clone();
+    both.extend_from_slice(&second);
+    // The first parse consumes exactly the first request, no matter how
+    // much of the second has arrived behind it.
+    for extra in [0, 1, second.len() / 2, second.len()] {
+        let buf = &both[..first.len() + extra];
+        match outcome(buf) {
+            Outcome::Req(req, consumed) => {
+                assert_eq!(consumed, first.len());
+                assert_eq!(req.path, "/v1/query");
+            }
+            other => panic!("pipelined prefix: {other:?}"),
+        }
+    }
+    // Draining the first request leaves a buffer that parses as the
+    // second — the state machine's keep-alive re-parse step.
+    match outcome(&both[first.len()..]) {
+        Outcome::Req(req, consumed) => {
+            assert_eq!(consumed, second.len());
+            assert_eq!(req.path, "/healthz");
+            assert_eq!(req.method, "GET");
+        }
+        other => panic!("second pipelined request: {other:?}"),
+    }
+}

@@ -252,6 +252,9 @@ fn first(b: &[u8]) -> u8 {
     let f = lint_source("src/server/http.rs", src);
     assert_eq!(rules(&f), vec!["panic-in-request-path"]);
     assert_eq!(f[0].line, 3, "only the variable index fires");
+    // The connection state machine parses wire bytes too.
+    let f = lint_source("src/server/conn.rs", src);
+    assert_eq!(rules(&f), vec!["panic-in-request-path"]);
     assert!(lint_source("src/server/h.rs", src).is_empty(), "non-parser server file");
 }
 

@@ -12,6 +12,18 @@
 //! 5. Concurrent clients share one plan cache (deterministic miss
 //!    split).
 //! 6. The shutdown sentinel drains and joins cleanly.
+//!
+//! ISSUE 7 extends the suite to the event-loop frontend (now the
+//! default, so tests 1–6 already exercise it) plus:
+//!
+//! 7. The legacy blocking-pool frontend answers byte-for-byte
+//!    identically to the event loop for the whole catalog.
+//! 8. Hostile connections (slowloris, half-close) cannot delay a
+//!    well-behaved client sharing the same loop.
+//! 9. Overload is shed with `429` + `Retry-After` — at the connection
+//!    cap and at the dispatch limit — and service recovers afterward.
+//! 10. Requests queued before the shutdown sentinel are answered, not
+//!     dropped, on both frontends.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpStream};
@@ -19,18 +31,25 @@ use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
 use bp_im2col::accel::AccelConfig;
-use bp_im2col::api::{render_all_json, FigureRequest, FleetRequest, Service, SimRequest};
+use bp_im2col::api::{
+    render_all_json, DseRequest, FigureRequest, FleetRequest, Service, SimRequest,
+};
 use bp_im2col::conv::ConvParams;
 use bp_im2col::im2col::pipeline::Pass;
 use bp_im2col::report::Figure;
-use bp_im2col::server::Server;
+use bp_im2col::server::conn::ConnConfig;
+use bp_im2col::server::{Frontend, ServeOptions, Server};
 
 // ---------------------------------------------------------------------------
 // Harness: an in-process server and a deliberately raw HTTP client.
 // ---------------------------------------------------------------------------
 
 fn start_server(threads: usize) -> (SocketAddr, JoinHandle<()>) {
-    let server = Server::bind(AccelConfig::default(), "127.0.0.1:0", threads).expect("bind");
+    start_server_with(ServeOptions::for_threads(threads))
+}
+
+fn start_server_with(opts: ServeOptions) -> (SocketAddr, JoinHandle<()>) {
+    let server = Server::bind_with(AccelConfig::default(), "127.0.0.1:0", opts).expect("bind");
     let addr = server.local_addr();
     let handle = thread::spawn(move || server.serve().expect("serve"));
     (addr, handle)
@@ -151,6 +170,7 @@ fn catalog() -> Vec<SimRequest> {
         SimRequest::TrainCost { devices: Some(2) },
         SimRequest::fleet(4),
         SimRequest::Fleet(FleetRequest::new(2).extended(true)),
+        DseRequest::new().budget(4).seed(7).into(),
     ]
 }
 
@@ -346,4 +366,215 @@ fn shutdown_sentinel_drains_and_joins() {
     // shutdown() asserts the 200 and joins the serve thread; returning
     // at all proves the accept loop observed the sentinel.
     shutdown(addr, handle);
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 7: event-loop frontend, fault injection, shedding, drain.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frontends_agree_byte_for_byte_on_every_catalog_request() {
+    let ev_opts = ServeOptions::for_threads(2);
+    assert_eq!(ev_opts.frontend, Frontend::EventLoop, "event loop is the default");
+    let mut pool_opts = ServeOptions::for_threads(2);
+    pool_opts.frontend = Frontend::BlockingPool;
+    let (ev_addr, ev_handle) = start_server_with(ev_opts);
+    let (bp_addr, bp_handle) = start_server_with(pool_opts);
+    let svc = Service::new(AccelConfig::default());
+    for req in catalog() {
+        let expected = render_all_json(&svc.run(&req));
+        let body = req.to_json();
+        let a = once(ev_addr, "POST", "/v1/query", Some(&body));
+        let b = once(bp_addr, "POST", "/v1/query", Some(&body));
+        assert_eq!(a.status, 200, "{}: {}", req.name(), a.body_str());
+        assert_eq!(a.status, b.status, "{}", req.name());
+        assert_eq!(a.header("content-type"), b.header("content-type"), "{}", req.name());
+        assert_eq!(a.body, expected.as_bytes(), "{}: event loop vs in-process", req.name());
+        assert_eq!(a.body, b.body, "{}: event loop vs blocking pool", req.name());
+    }
+    // Batch (including a per-item failure) and the catalog route agree
+    // too, down to the byte.
+    let batch = "{\"requests\":[{\"kind\":\"table3\"},{\"kind\":\"nope\"},{\"kind\":\"table4\"}]}";
+    let a = once(ev_addr, "POST", "/v1/batch", Some(batch));
+    let b = once(bp_addr, "POST", "/v1/batch", Some(batch));
+    assert_eq!((a.status, &a.body), (b.status, &b.body));
+    let a = once(ev_addr, "GET", "/v1/requests", None);
+    let b = once(bp_addr, "GET", "/v1/requests", None);
+    assert_eq!((a.status, &a.body), (b.status, &b.body));
+    shutdown(ev_addr, ev_handle);
+    shutdown(bp_addr, bp_handle);
+}
+
+#[test]
+fn slowloris_and_half_close_cannot_delay_well_behaved_clients() {
+    // One worker thread and short read deadlines: on the old blocking
+    // frontend these two hostile connections would pin the only worker
+    // and serialize everyone behind the socket timeout.
+    let mut opts = ServeOptions::for_threads(1);
+    opts.conn = ConnConfig {
+        read_deadline: Duration::from_millis(1000),
+        write_deadline: Duration::from_secs(5),
+        idle_deadline: Duration::from_secs(5),
+    };
+    let (addr, handle) = start_server_with(opts);
+
+    // A slowloris peer: opens a request and stops mid-head.
+    let mut slow = Client::connect(addr);
+    slow.stream.write_all(b"POST /v1/query HTTP/1.1\r\nConte").unwrap();
+
+    // A half-closing peer: sends half a body and shuts its write side.
+    let mut half = Client::connect(addr);
+    half.stream
+        .write_all(b"POST /v1/query HTTP/1.1\r\nContent-Length: 64\r\n\r\n{\"kind\"")
+        .unwrap();
+    half.stream.shutdown(Shutdown::Write).unwrap();
+
+    // Well-behaved traffic on the same server stays fast while both
+    // hostile connections are open.
+    let mut good = Client::connect(addr);
+    for _ in 0..10 {
+        // lint: allow(wall-clock-in-model) — the assertion IS about wall-clock latency
+        let t0 = std::time::Instant::now();
+        let resp = good.request("GET", "/healthz", None);
+        assert_eq!(resp.status, 200);
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "a hostile connection delayed a well-behaved client by {:?}",
+            t0.elapsed()
+        );
+    }
+
+    // The half-close is answered promptly (mid-request EOF is a 400)...
+    assert_eq!(half.read_response().status, 400);
+    // ...and the slowloris gets its 408 once the read deadline expires.
+    let resp = slow.read_response();
+    assert_eq!(resp.status, 408, "{}", resp.body_str());
+    assert_eq!(resp.header("connection"), Some("close"));
+
+    let metrics = once(addr, "GET", "/metrics", None);
+    let text = metrics.body_str();
+    assert!(metric_value(text, "bp_server_deadline_closes_total") >= 1, "{text}");
+    assert!(metric_value(text, "bp_server_connections_total") >= 4, "{text}");
+    shutdown(addr, handle);
+}
+
+#[test]
+fn connection_cap_sheds_with_retry_after_and_recovers() {
+    let mut opts = ServeOptions::for_threads(2);
+    opts.max_conns = 1;
+    let (addr, handle) = start_server_with(opts);
+
+    // The first connection occupies the only slot.
+    let mut holder = Client::connect(addr);
+    assert_eq!(holder.request("GET", "/healthz", None).status, 200);
+
+    // The next connection is shed at accept: 429 + Retry-After, closed,
+    // before it even sends a byte.
+    let mut shed_client = Client::connect(addr);
+    let resp = shed_client.read_response();
+    assert_eq!(resp.status, 429, "{}", resp.body_str());
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert_eq!(resp.header("connection"), Some("close"));
+
+    // Releasing the slot restores service once the loop reaps the
+    // closed connection; keep the admitted connection for the rest.
+    drop(holder);
+    drop(shed_client);
+    let mut admitted = None;
+    for _ in 0..500 {
+        // lint: allow(wall-clock-in-model) — bounded retry poll; exits on first success
+        thread::sleep(Duration::from_millis(10));
+        let mut c = Client::connect(addr);
+        c.send("GET", "/healthz", None);
+        if c.read_response().status == 200 {
+            admitted = Some(c);
+            break;
+        }
+    }
+    let mut c = admitted.expect("service did not recover after the cap cleared");
+    let m = c.request("GET", "/metrics", None);
+    assert!(metric_value(m.body_str(), "bp_server_shed_total") >= 1, "{}", m.body_str());
+    let resp = c.request("POST", "/v1/shutdown", Some("{}"));
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    handle.join().expect("server thread joined cleanly");
+}
+
+#[test]
+fn overloaded_dispatch_sheds_requests_with_retry_after_then_recovers() {
+    // One worker and a shed queue of one: with two slow requests in
+    // flight, the third data-plane request must be shed — while
+    // control-plane routes keep answering inline.
+    let mut opts = ServeOptions::for_threads(1);
+    opts.shed_queue = 1;
+    let (addr, handle) = start_server_with(opts);
+
+    // Two slow, uncached requests occupy the worker and the queue slot.
+    let mut a = Client::connect(addr);
+    a.send("POST", "/v1/query", Some("{\"kind\":\"dse\",\"budget\":128,\"seed\":11}"));
+    let mut b = Client::connect(addr);
+    b.send("POST", "/v1/query", Some("{\"kind\":\"dse\",\"budget\":128,\"seed\":12}"));
+    // The loop dispatches within a tick; give it ample slack before
+    // probing (the DSE sweeps run for far longer than this).
+    // lint: allow(wall-clock-in-model) — dispatch slack is orders below the in-flight work
+    thread::sleep(Duration::from_millis(100));
+
+    // Control plane is never shed.
+    let mut probe = Client::connect(addr);
+    assert_eq!(probe.request("GET", "/healthz", None).status, 200);
+    // Data plane is: 429 with Retry-After, on a still-usable connection.
+    let resp = probe.request("POST", "/v1/query", Some("{\"kind\":\"table2\"}"));
+    assert_eq!(resp.status, 429, "{}", resp.body_str());
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert_eq!(resp.header("connection"), Some("keep-alive"));
+
+    // The slow requests complete normally…
+    assert_eq!(a.read_response().status, 200);
+    assert_eq!(b.read_response().status, 200);
+    // …and a retry of the shed request now succeeds.
+    let retry = once(addr, "POST", "/v1/query", Some("{\"kind\":\"table2\"}"));
+    assert_eq!(retry.status, 200, "{}", retry.body_str());
+    let metrics = once(addr, "GET", "/metrics", None);
+    assert!(
+        metric_value(metrics.body_str(), "bp_server_shed_total") >= 1,
+        "{}",
+        metrics.body_str()
+    );
+    shutdown(addr, handle);
+}
+
+#[test]
+fn requests_sent_before_shutdown_are_answered_on_both_frontends() {
+    for frontend in [Frontend::EventLoop, Frontend::BlockingPool] {
+        let mut opts = ServeOptions::for_threads(1);
+        opts.frontend = frontend;
+        let (addr, handle) = start_server_with(opts);
+        // Three uncached queries, all accepted before the sentinel.
+        // Each client half-closes after sending so neither frontend
+        // waits out a keep-alive window during the drain.
+        let specs = [
+            "{\"kind\":\"layer\",\"spec\":\"56/128/128/3/2/1\"}",
+            "{\"kind\":\"layer\",\"spec\":\"28/64/64/3/2/1\"}",
+            "{\"kind\":\"layer\",\"spec\":\"14/32/32/3/1/1\"}",
+        ];
+        let mut clients: Vec<Client> = specs
+            .iter()
+            .map(|body| {
+                let mut c = Client::connect(addr);
+                c.send("POST", "/v1/query", Some(body));
+                c.stream.shutdown(Shutdown::Write).unwrap();
+                c
+            })
+            .collect();
+        // Let the server take ownership of all three, then shut down
+        // while they are (at most) part-way through.
+        // lint: allow(wall-clock-in-model) — slack only widens the drain window under test
+        thread::sleep(Duration::from_millis(100));
+        let resp = once(addr, "POST", "/v1/shutdown", Some("{}"));
+        assert_eq!(resp.status, 200, "{frontend:?}");
+        for (c, spec) in clients.iter_mut().zip(specs) {
+            let resp = c.read_response();
+            assert_eq!(resp.status, 200, "{frontend:?}: {spec} was dropped, not answered");
+        }
+        handle.join().expect("server thread joined cleanly");
+    }
 }
