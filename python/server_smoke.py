@@ -76,11 +76,21 @@ def main():
         status, body2 = request(base, "/v1/query", dse)
         assert body2 == body, "repeated DSE query must be byte-identical"
 
+        # Sparse lowerings: dense/cc/spots rows per pruned network with
+        # vs-dense ratios, byte-identical on repeat.
+        status, body = request(base, "/v1/query", {"kind": "sparse"})
+        doc = json.loads(body)
+        assert status == 200 and doc["artifacts"][0]["name"] == "sparse", (status, doc)
+        cols = [c["name"] for c in doc["artifacts"][0]["columns"]]
+        assert "reads_vs_dense" in cols, cols
+        status, body2 = request(base, "/v1/query", {"kind": "sparse"})
+        assert body2 == body, "repeated sparse query must be byte-identical"
+
         status, body = request(base, "/metrics")
         text = body.decode()
         for needle in (
-            'bp_server_requests_total{route="query"} 4',
-            "bp_artifact_cache_hits_total 2",
+            'bp_server_requests_total{route="query"} 6',
+            "bp_artifact_cache_hits_total 3",
             "bp_artifact_cache_evictions_total 0",
             "bp_plan_cache_entries",
             "bp_server_request_duration_us_bucket",
@@ -119,7 +129,7 @@ def main():
         assert status == 200, status
         code = proc.wait(timeout=60)
         assert code == 0, f"server exited with {code}"
-        print("server smoke OK: query/batch/dse/metrics round-trips + clean shutdown")
+        print("server smoke OK: query/batch/dse/sparse/metrics round-trips + clean shutdown")
     finally:
         # Kill quietly if still alive; the propagating exception (an
         # assertion or the wait() timeout) already names the real

@@ -1,6 +1,7 @@
 //! Accelerator configuration (the paper's TPU-like platform).
 
 use crate::sim::dram::DramModel;
+use crate::sparse::SparseLowering;
 
 /// Hardware parameters of the simulated accelerator. Defaults match the
 /// paper's evaluation platform where stated (16x16 array, FP32,
@@ -31,6 +32,18 @@ pub struct AccelConfig {
     /// paper's evaluated design, which "does not support sparse
     /// computation at this stage").
     pub sparse_skip: bool,
+    /// How GEMMs are lowered with respect to **data** sparsity
+    /// (pruned weights / sparse activations — DESIGN.md §14):
+    /// [`SparseLowering::Dense`] streams every value (the paper's
+    /// design); the other variants model column combining and a
+    /// SPOTS-style sparse pipeline. Orthogonal to `sparse_skip`, which
+    /// skips *structural* zero windows.
+    pub lowering: SparseLowering,
+    /// Config-level density scale in fixed-point thousandths
+    /// (`1..=1000`), composed multiplicatively with each layer's own
+    /// [`crate::sparse::Density`] — the DSE `density` axis. 1000
+    /// (dense, the default) is the exact identity.
+    pub density_millis: usize,
 }
 
 impl Default for AccelConfig {
@@ -44,6 +57,8 @@ impl Default for AccelConfig {
             buf_b_half: 32 * 1024,
             reorg_cycles_per_elem: 4.0,
             sparse_skip: false,
+            lowering: SparseLowering::Dense,
+            density_millis: 1000,
         }
     }
 }
@@ -68,6 +83,10 @@ mod tests {
         let c = AccelConfig::default();
         assert_eq!(c.array_dim, 16);
         assert!(c.buf_a_half >= 16 * 1024);
+        // The paper's design is dense: no data-sparsity lowering, no
+        // density scaling.
+        assert_eq!(c.lowering, SparseLowering::Dense);
+        assert_eq!(c.density_millis, 1000);
     }
 
     #[test]

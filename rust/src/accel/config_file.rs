@@ -74,6 +74,11 @@ pub fn parse(text: &str) -> Result<AccelConfig, ConfigError> {
             "buf_b_half" => cfg.buf_b_half = value.parse().map_err(|_| bad())?,
             "reorg_cycles_per_elem" => cfg.reorg_cycles_per_elem = value.parse().map_err(|_| bad())?,
             "sparse_skip" => cfg.sparse_skip = value.parse().map_err(|_| bad())?,
+            "lowering" => {
+                cfg.lowering = crate::sparse::SparseLowering::parse(value)
+                    .map_err(|e| ConfigError::new(format!("line {}: {e}", lineno + 1)))?
+            }
+            "density_millis" => cfg.density_millis = value.parse().map_err(|_| bad())?,
             other => {
                 return Err(ConfigError::new(format!("line {}: unknown key {other:?}", lineno + 1)))
             }
@@ -102,7 +107,9 @@ pub fn render(cfg: &AccelConfig) -> String {
          buf_a_half = {}\n\
          buf_b_half = {}\n\
          reorg_cycles_per_elem = {}\n\
-         sparse_skip = {}\n",
+         sparse_skip = {}\n\
+         lowering = {}\n\
+         density_millis = {}\n",
         cfg.array_dim,
         cfg.dram.elems_per_cycle,
         cfg.dram.burst_overhead,
@@ -111,6 +118,8 @@ pub fn render(cfg: &AccelConfig) -> String {
         cfg.buf_b_half,
         cfg.reorg_cycles_per_elem,
         cfg.sparse_skip,
+        cfg.lowering.name(),
+        cfg.density_millis,
     )
 }
 
@@ -189,12 +198,18 @@ fn field_range_error(key: &str, cfg: &AccelConfig) -> Option<String> {
                 )
             })
         }
+        "density_millis" => (cfg.density_millis == 0 || cfg.density_millis > 1000).then(|| {
+            format!(
+                "density_millis must be in 1..=1000 (fixed-point thousandths), got {}",
+                cfg.density_millis
+            )
+        }),
         _ => None,
     }
 }
 
 /// Every range-checked config key, in file order.
-const RANGE_KEYS: [&str; 7] = [
+const RANGE_KEYS: [&str; 8] = [
     "array_dim",
     "dram_elems_per_cycle",
     "dram_burst_overhead",
@@ -202,6 +217,7 @@ const RANGE_KEYS: [&str; 7] = [
     "buf_a_half",
     "buf_b_half",
     "reorg_cycles_per_elem",
+    "density_millis",
 ];
 
 /// Sanity constraints on a config, however it was built (file, preset,
@@ -237,7 +253,9 @@ mod tests {
              buf_a_half = 16384\n\
              buf_b_half = 16384\n\
              reorg_cycles_per_elem = 6\n\
-             sparse_skip = true\n",
+             sparse_skip = true\n\
+             lowering = cc\n\
+             density_millis = 500\n",
         )
         .unwrap();
         assert_eq!(cfg.array_dim, 8);
@@ -245,6 +263,8 @@ mod tests {
         assert_eq!(cfg.dram.burst_len, 32);
         assert_eq!(cfg.buf_a_half, 16384);
         assert!(cfg.sparse_skip);
+        assert_eq!(cfg.lowering, crate::sparse::SparseLowering::ColumnCombine);
+        assert_eq!(cfg.density_millis, 500);
     }
 
     #[test]
@@ -329,6 +349,8 @@ mod tests {
                 path.display()
             );
             assert_eq!(back.sparse_skip, cfg.sparse_skip, "{}", path.display());
+            assert_eq!(back.lowering, cfg.lowering, "{}", path.display());
+            assert_eq!(back.density_millis, cfg.density_millis, "{}", path.display());
             // Rendering is idempotent.
             assert_eq!(render(&back), text, "{}", path.display());
         }
@@ -354,6 +376,9 @@ mod tests {
             ("dram_burst_overhead = -0.5", "line 1", "non-negative"),
             ("buf_b_half = 0", "line 1", "1..="),
             ("reorg_cycles_per_elem = nan", "line 1", "finite"),
+            ("density_millis = 0", "line 1", "1..=1000"),
+            ("density_millis = 1001", "line 1", "1..=1000"),
+            ("lowering = nope", "line 1", "unknown sparse lowering"),
         ] {
             let err = parse(text).unwrap_err();
             let msg = format!("{err:#}");
@@ -378,6 +403,9 @@ mod tests {
         assert!(validate(&cfg).is_err());
         let mut cfg = AccelConfig::default();
         cfg.reorg_cycles_per_elem = f64::NAN;
+        assert!(validate(&cfg).is_err());
+        let mut cfg = AccelConfig::default();
+        cfg.density_millis = 0;
         assert!(validate(&cfg).is_err());
         validate(&AccelConfig::default()).unwrap();
     }

@@ -5,6 +5,13 @@
 //! array, the address-generation prologue latencies (Table III), the
 //! sparsity closed forms, the dilated-mode window classification and the
 //! resulting [`PassMetrics`] — is a pure function of those four inputs.
+//! Since the sparse subsystem (DESIGN.md §14) the builder is also
+//! **lowering-parametric**: the config's
+//! [`crate::sparse::SparseLowering`] selects how *data* sparsity is
+//! exploited (column combining packs the weight GEMM before tiling; a
+//! SPOTS-style pipeline scales compute, buffer reads and traffic), with
+//! the dense path — and the density-1.000 limit of both sparse paths —
+//! bit-identical to the pre-sparse model.
 //! The seed coordinator recomputed all of it from scratch for every
 //! `BackpropJob`, even though a training run replays the *same* layer
 //! geometries step after step and most CNNs repeat geometries across
@@ -39,6 +46,8 @@ use crate::im2col::sparsity::{self, SparsityStats};
 use crate::sim::addrgen::{prologue_cycles_for, Module};
 use crate::sim::dram::DramTraffic;
 use crate::sim::reorg_engine::reorg_cost;
+use crate::sparse::column_combine::{self, PackingPlan};
+use crate::sparse::{scale_u64, spots, SparseLowering};
 
 /// The complete lowering of one `(layer, pass, mode)` onto one
 /// accelerator configuration.
@@ -56,10 +65,17 @@ pub struct LayerPlan {
     pub mode: Mode,
     /// The layer geometry the plan was built for.
     pub params: ConvParams,
-    /// Per-group lowered GEMM dimensions (paper Eq. 1).
+    /// Per-group GEMM dimensions the array *executes*. Equal to the
+    /// virtual lowered shape (paper Eq. 1) except under column
+    /// combining on the loss pass, where `K` is packed
+    /// ([`PackingPlan`]).
     pub shape: GemmShape,
-    /// Tiling of the per-group GEMM onto the `T x T` array.
+    /// Tiling of the per-group (executed) GEMM onto the `T x T` array.
     pub tiling: Tiling,
+    /// Column-combining packing of the weight-carrying GEMM, when the
+    /// config's [`SparseLowering::ColumnCombine`] applies to this pass
+    /// (loss only — the grad pass *produces* the weights).
+    pub packing: Option<PackingPlan>,
     /// Stationary address-generation prologue per stripe (Table III),
     /// for this specific geometry.
     pub stationary_prologue: usize,
@@ -93,10 +109,39 @@ impl LayerPlan {
     pub fn build(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> Self {
         let t = cfg.array_dim;
         let groups = p.groups;
-        // Per-group GEMM; the layer runs `groups` of them.
-        let shape = GemmShape::from_pass(pass, p);
+        // Effective *data* density of this layer under this config: the
+        // layer's own knob composed with the config-level density axis
+        // (integer compose, exact identity when either side is 1000).
+        let density = p.density.scaled_millis(cfg.density_millis);
+        // Operand densities of this pass's GEMM (`A` dynamic, `B`
+        // stationary): the loss pass streams the rotated kernel against
+        // dY; in the grad pass both sides carry activation-class values
+        // (dY against the input im2col).
+        let (a_millis, b_millis) = match pass {
+            Pass::Loss => (density.weight_millis, density.act_millis),
+            Pass::Grad => (density.act_millis, density.act_millis),
+        };
+        // Per-group *virtual* (dense) GEMM; the layer runs `groups` of
+        // them. Column combining packs the weight-carrying `K` of the
+        // loss GEMM before tiling, so compute, blocks and reads shrink
+        // structurally; the grad pass computes dW — weights are the
+        // output there — and stays on the dense pipeline. All other
+        // lowerings execute the virtual shape.
+        let virtual_shape = GemmShape::from_pass(pass, p);
+        let packing = match (cfg.lowering, pass) {
+            (SparseLowering::ColumnCombine, Pass::Loss) => {
+                Some(column_combine::pack_weight_gemm(virtual_shape, density.weight_millis))
+            }
+            _ => None,
+        };
+        let shape = packing.map_or(virtual_shape, |cc| cc.packed);
         let til = Tiling::new(shape, t);
         let mut compute_cycles = til.compute_cycles() * groups as f64;
+        if let Some(cc) = &packing {
+            // Operand-select MUX settle: one cycle per extra combined
+            // slot per block pass (exactly 0.0 at pack == 1).
+            compute_cycles += cc.select_cycles(til.block_passes()) * groups as f64;
+        }
 
         // Dilated-mode window classification (BP grad only; both counts
         // are geometry-pure and group-independent).
@@ -111,6 +156,19 @@ impl LayerPlan {
         // window is entirely zero-insertions.
         if cfg.sparse_skip && mode == Mode::BpIm2col && pass == Pass::Grad {
             compute_cycles *= 1.0 - zero_windows as f64 / til.n_k as f64;
+        }
+
+        // SPOTS-style pair skipping scales array occupancy by the
+        // non-zero pair probability, floored by the streaming limit.
+        // Gated on the lowering (not just the factor) so the dense path
+        // stays structurally untouched; the factor itself is exactly
+        // 1.0 when both operands are dense.
+        let spots_factor = match cfg.lowering {
+            SparseLowering::Spots => spots::compute_factor(a_millis, b_millis, t),
+            SparseLowering::Dense | SparseLowering::ColumnCombine => 1.0,
+        };
+        if cfg.lowering == SparseLowering::Spots {
+            compute_cycles *= spots_factor;
         }
 
         // ---- sparsity of the zero-spaced operand of this pass ----
@@ -156,6 +214,18 @@ impl LayerPlan {
                 let a_nz = 1.0 - dyn_stats.expect("grad").sparsity();
                 let b_nz = 1.0 - stat_stats.sparsity();
                 ((a_dense as f64 * a_nz) as u64, (b_dense as f64 * b_nz) as u64)
+            }
+        };
+        // Under SPOTS the operands sit compressed on-chip, so only
+        // non-zeros are fetched toward the array (floor scaling, exact
+        // at density 1000). Column combining already shrank the reads
+        // through the packed tiling above; Dense reads every value.
+        let (buffer_a_reads, buffer_b_reads) = match cfg.lowering {
+            SparseLowering::Spots => {
+                (spots::scale_count(buffer_a_reads, a_millis), spots::scale_count(buffer_b_reads, b_millis))
+            }
+            SparseLowering::Dense | SparseLowering::ColumnCombine => {
+                (buffer_a_reads, buffer_b_reads)
             }
         };
 
@@ -211,6 +281,32 @@ impl LayerPlan {
                 meta_bytes: 0,
             },
         };
+        // Lowering-specific traffic shape: compressed values plus
+        // sideband metadata. Integer scaling keeps every term exactly
+        // its dense value at density 1000, and the Dense arm passes the
+        // struct through untouched.
+        let traffic = match cfg.lowering {
+            SparseLowering::Dense => traffic,
+            SparseLowering::ColumnCombine => match &packing {
+                // Packed weights ship pruned (values scaled by weight
+                // density) plus the per-slot select indices.
+                Some(cc) => DramTraffic {
+                    a_bytes: scale_u64(traffic.a_bytes, density.weight_millis),
+                    meta_bytes: traffic.meta_bytes + cc.index_bytes() * groups as u64,
+                    ..traffic
+                },
+                // Grad pass: weights are the output — dense pipeline.
+                None => traffic,
+            },
+            SparseLowering::Spots => DramTraffic {
+                a_bytes: spots::compressed_bytes(traffic.a_bytes, a_millis),
+                b_bytes: spots::compressed_bytes(traffic.b_bytes, b_millis),
+                meta_bytes: traffic.meta_bytes
+                    + spots::bitmap_bytes(traffic.a_bytes / 4, a_millis)
+                    + spots::bitmap_bytes(traffic.b_bytes / 4, b_millis),
+                ..traffic
+            },
+        };
 
         // ---- additional storage beyond the compact tensors ----
         // Baseline: the zero-spaced DRAM copy. BP: masks/base addresses
@@ -218,10 +314,15 @@ impl LayerPlan {
         // standing state is the double-buffered in-flight window queue of
         // each address-generation module (depth 64 windows here).
         const WINDOW_QUEUE_DEPTH: u64 = 64;
-        let storage_overhead_bytes = match mode {
+        let mut storage_overhead_bytes = match mode {
             Mode::Traditional => storage_overhead,
             Mode::BpIm2col => 2 * 2 * WINDOW_QUEUE_DEPTH * META_BYTES_PER_WINDOW,
         };
+        if let Some(cc) = &packing {
+            // Select indices stand in buffer A alongside the packed
+            // weights for the whole pass (0 when nothing is packed).
+            storage_overhead_bytes += cc.index_bytes() * groups as u64;
+        }
 
         // ---- extra fetch cycles from split compressed runs ----
         let extra_fetch_cycles = match (mode, pass) {
@@ -236,7 +337,12 @@ impl LayerPlan {
         let fill_elems_per_stripe =
             (traffic.a_bytes + traffic.b_bytes + traffic.meta_bytes) as f64 / 4.0 / stripes;
         let fill_cycles = cfg.dram.transfer_cycles(fill_elems_per_stripe.ceil() as usize);
-        let stripe_compute = til.stripe_compute_cycles();
+        // The skipping core drains a stripe faster, so fill stalls can
+        // grow under SPOTS — the factor is exactly 1.0 otherwise.
+        let stripe_compute = match cfg.lowering {
+            SparseLowering::Spots => til.stripe_compute_cycles() * spots_factor,
+            SparseLowering::Dense | SparseLowering::ColumnCombine => til.stripe_compute_cycles(),
+        };
         let stall_cycles = stripes * (fill_cycles - stripe_compute).max(0.0);
 
         let metrics = PassMetrics {
@@ -252,7 +358,9 @@ impl LayerPlan {
             buffer_b_reads,
             storage_overhead_bytes,
             sparsity: pass_sparsity,
-            macs: shape.macs() * groups as u64,
+            // Useful MACs of the *virtual* GEMM — invariant across
+            // lowerings (packing/skipping change cycles, not the math).
+            macs: virtual_shape.macs() * groups as u64,
         };
 
         Self {
@@ -261,6 +369,7 @@ impl LayerPlan {
             params: *p,
             shape,
             tiling: til,
+            packing,
             stationary_prologue,
             dynamic_prologue,
             stat_sparsity: stat_stats,
@@ -306,6 +415,8 @@ pub(crate) struct CfgKey {
     burst_len: usize,
     reorg_cycles_per_elem_bits: u64,
     sparse_skip: bool,
+    lowering: SparseLowering,
+    density_millis: usize,
 }
 
 impl CfgKey {
@@ -313,8 +424,16 @@ impl CfgKey {
         // Exhaustive destructuring (no `..`): adding a field to
         // AccelConfig or DramModel without extending this key is a
         // compile error, not a silent cache collision.
-        let AccelConfig { array_dim, dram, buf_a_half, buf_b_half, reorg_cycles_per_elem, sparse_skip } =
-            *cfg;
+        let AccelConfig {
+            array_dim,
+            dram,
+            buf_a_half,
+            buf_b_half,
+            reorg_cycles_per_elem,
+            sparse_skip,
+            lowering,
+            density_millis,
+        } = *cfg;
         let crate::sim::dram::DramModel { elems_per_cycle, burst_overhead, burst_len } = dram;
         Self {
             array_dim,
@@ -325,6 +444,8 @@ impl CfgKey {
             burst_len,
             reorg_cycles_per_elem_bits: reorg_cycles_per_elem.to_bits(),
             sparse_skip,
+            lowering,
+            density_millis,
         }
     }
 }
@@ -690,10 +811,105 @@ mod tests {
         let plan = LayerPlan::build(Pass::Grad, Mode::BpIm2col, &p, &cfg());
         assert_eq!(plan.shape, GemmShape::from_pass(Pass::Grad, &p));
         assert_eq!(plan.tiling, Tiling::new(plan.shape, 16));
+        assert!(plan.packing.is_none(), "dense lowering never packs");
         // Table III: BP grad = 68 dynamic + 51 stationary.
         assert_eq!((plan.dynamic_prologue, plan.stationary_prologue), (68, 51));
         assert!(plan.dyn_sparsity.is_some());
         assert!(plan.zero_windows > 0, "stride-2 grad has all-zero windows");
         assert_eq!(plan.stripes(), plan.tiling.n_j);
+    }
+
+    #[test]
+    fn dense_lowering_ignores_density() {
+        // The dense array streams zeros like any other value: a pruned
+        // layer under SparseLowering::Dense costs exactly what the
+        // unpruned layer costs (the comparison baseline of
+        // `repro sparse`).
+        let dense = ConvParams::square(56, 128, 128, 3, 2, 1);
+        let pruned = dense.with_density(250, 500);
+        for pass in Pass::ALL {
+            for mode in Mode::ALL {
+                assert_eq!(
+                    LayerPlan::build(pass, mode, &pruned, &cfg()).metrics,
+                    LayerPlan::build(pass, mode, &dense, &cfg()).metrics,
+                    "{pass:?} {mode:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_limit_is_bitwise_identical_under_every_lowering() {
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        for lowering in SparseLowering::ALL {
+            let c = AccelConfig { lowering, ..cfg() };
+            for pass in Pass::ALL {
+                for mode in Mode::ALL {
+                    assert_eq!(
+                        LayerPlan::build(pass, mode, &p, &c).metrics,
+                        LayerPlan::build(pass, mode, &p, &cfg()).metrics,
+                        "{lowering:?} {pass:?} {mode:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn column_combining_packs_the_loss_gemm_only() {
+        let p = ConvParams::square(56, 128, 128, 3, 2, 1).with_density(250, 1000);
+        let c = AccelConfig { lowering: SparseLowering::ColumnCombine, ..cfg() };
+        let plan = LayerPlan::build(Pass::Loss, Mode::BpIm2col, &p, &c);
+        let dense = LayerPlan::build(Pass::Loss, Mode::BpIm2col, &p, &cfg());
+        let packing = plan.packing.expect("loss pass under CC packs");
+        assert_eq!(packing.pack, 4);
+        assert_eq!(plan.shape.k, (dense.shape.k + 3) / 4, "K packed by the factor");
+        assert!(plan.metrics.compute_cycles < dense.metrics.compute_cycles);
+        assert!(plan.metrics.traffic.a_bytes < dense.metrics.traffic.a_bytes);
+        assert!(plan.metrics.traffic.meta_bytes > 0, "select indices ride the meta bus");
+        assert!(plan.metrics.storage_overhead_bytes > dense.metrics.storage_overhead_bytes);
+        assert_eq!(plan.metrics.macs, dense.metrics.macs, "useful MACs are lowering-invariant");
+        // Grad pass computes dW — weights are the output, nothing to
+        // combine: bit-identical to the dense pipeline.
+        let grad = LayerPlan::build(Pass::Grad, Mode::BpIm2col, &p, &c);
+        assert!(grad.packing.is_none());
+        assert_eq!(grad.metrics, LayerPlan::build(Pass::Grad, Mode::BpIm2col, &p, &cfg()).metrics);
+    }
+
+    #[test]
+    fn spots_scales_compute_reads_and_traffic() {
+        let p = ConvParams::square(56, 128, 128, 3, 2, 1).with_density(500, 500);
+        let c = AccelConfig { lowering: SparseLowering::Spots, ..cfg() };
+        for pass in Pass::ALL {
+            let sp = LayerPlan::build(pass, Mode::BpIm2col, &p, &c);
+            let dn = LayerPlan::build(pass, Mode::BpIm2col, &p, &cfg());
+            assert!(sp.metrics.compute_cycles < dn.metrics.compute_cycles, "{pass:?}");
+            assert!(sp.metrics.buffer_a_reads < dn.metrics.buffer_a_reads, "{pass:?}");
+            assert!(sp.metrics.buffer_b_reads < dn.metrics.buffer_b_reads, "{pass:?}");
+            assert!(sp.metrics.traffic.a_bytes < dn.metrics.traffic.a_bytes, "{pass:?}");
+            assert!(sp.metrics.traffic.meta_bytes > 0, "bitmaps ride the meta bus: {pass:?}");
+            assert_eq!(sp.metrics.macs, dn.metrics.macs, "{pass:?}");
+        }
+    }
+
+    #[test]
+    fn config_density_axis_composes_with_the_layer_knob() {
+        // Layer at 500/500 with a config scale of 500 behaves like a
+        // layer at 250/250 under a dense-scale config.
+        let p = ConvParams::square(56, 128, 128, 3, 2, 1).with_density(500, 500);
+        let q = ConvParams::square(56, 128, 128, 3, 2, 1).with_density(250, 250);
+        let scaled = AccelConfig {
+            lowering: SparseLowering::Spots,
+            density_millis: 500,
+            ..cfg()
+        };
+        let unscaled = AccelConfig { lowering: SparseLowering::Spots, ..cfg() };
+        for pass in Pass::ALL {
+            assert_eq!(
+                LayerPlan::build(pass, Mode::BpIm2col, &p, &scaled).metrics,
+                LayerPlan::build(pass, Mode::BpIm2col, &q, &unscaled).metrics,
+                "{pass:?}"
+            );
+        }
     }
 }

@@ -352,7 +352,9 @@ impl SimRequest {
                     write!(out, ",\"devices\":{n}").unwrap();
                 }
             }
-            SimRequest::Sparsity { extended } | SimRequest::Storage { extended } => {
+            SimRequest::Sparsity { extended }
+            | SimRequest::Storage { extended }
+            | SimRequest::Sparse { extended } => {
                 if *extended {
                     out.push_str(",\"extended\":true");
                 }
@@ -470,7 +472,7 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
     let allowed: &[&str] = match kind {
         "table2" | "table3" | "table4" => &[],
         "fig6" | "fig7" | "fig8" => &["pass", "extended", "devices"],
-        "sparsity" | "storage" => &["extended"],
+        "sparsity" | "storage" | "sparse" => &["extended"],
         "layer" => &["spec", "batch"],
         "traincost" => &["devices"],
         "fleet" => &["devices", "extended"],
@@ -478,7 +480,7 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
         other => {
             return Err(format!(
                 "unknown request kind {other:?} (supported: table2, table3, table4, fig6, \
-                 fig7, fig8, sparsity, storage, layer, traincost, fleet, dse)"
+                 fig7, fig8, sparsity, storage, sparse, layer, traincost, fleet, dse)"
             ))
         }
     };
@@ -518,6 +520,7 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
         }
         "sparsity" => SimRequest::Sparsity { extended },
         "storage" => SimRequest::Storage { extended },
+        "sparse" => SimRequest::Sparse { extended },
         "layer" => {
             let spec = v
                 .get("spec")
@@ -657,7 +660,7 @@ pub fn parse_batch(text: &str) -> Result<Vec<Result<SimRequest, String>>, String
 /// ready-to-send example body.
 pub fn request_catalog_json() -> String {
     // (kind, description, extra keys, example body)
-    const SHAPES: [(&str, &str, &str, &str); 12] = [
+    const SHAPES: [(&str, &str, &str, &str); 13] = [
         ("table2", "Table II: per-layer backpropagation runtime", "[]", "{\"kind\":\"table2\"}"),
         ("table3", "Table III: address-generation prologue latency", "[]", "{\"kind\":\"table3\"}"),
         ("table4", "Table IV: address-generation module area", "[]", "{\"kind\":\"table4\"}"),
@@ -690,6 +693,12 @@ pub fn request_catalog_json() -> String {
             "Additional-storage overhead per network",
             "[\"extended\"]",
             "{\"kind\":\"storage\"}",
+        ),
+        (
+            "sparse",
+            "Sparse lowerings (dense/cc/spots) over the pruned networks",
+            "[\"extended\"]",
+            "{\"kind\":\"sparse\"}",
         ),
         (
             "layer",
@@ -749,6 +758,8 @@ mod tests {
             SimRequest::Sparsity { extended: false },
             SimRequest::Sparsity { extended: true },
             SimRequest::Storage { extended: true },
+            SimRequest::Sparse { extended: false },
+            SimRequest::Sparse { extended: true },
             SimRequest::layer(ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)),
             SimRequest::layer(ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2)),
             SimRequest::TrainCost { devices: None },
@@ -913,7 +924,7 @@ mod tests {
     fn request_catalog_parses_and_examples_decode() {
         let doc = parse(&request_catalog_json()).unwrap();
         let Some(Json::Arr(shapes)) = doc.get("requests") else { panic!("no requests array") };
-        assert_eq!(shapes.len(), 12, "one entry per SimRequest kind");
+        assert_eq!(shapes.len(), 13, "one entry per SimRequest kind");
         for shape in shapes {
             let example = shape.get("example").unwrap().as_str().unwrap();
             let req = SimRequest::from_json(example)

@@ -167,6 +167,7 @@ impl Service {
             SimRequest::Figure(f) => self.figure(f),
             SimRequest::Sparsity { extended } => vec![sparsity_artifact(*extended)],
             SimRequest::Storage { extended } => vec![self.storage(*extended)],
+            SimRequest::Sparse { extended } => vec![self.sparse(*extended)],
             SimRequest::Layer(params) => vec![self.layer(params)],
             SimRequest::TrainCost { devices } => self.traincost(*devices),
             SimRequest::Fleet(f) => {
@@ -451,6 +452,97 @@ impl Service {
         a
     }
 
+    /// Serve the sparse-lowering comparison: every pruned workload
+    /// network under every [`SparseLowering`] (dense first, so the
+    /// vs-dense ratio columns have their baseline), BP-im2col mode,
+    /// through the shared plan cache. The per-layer [`Density`] knobs of
+    /// the pruned networks compose with the service config's
+    /// `density_millis` scale exactly like any other request.
+    ///
+    /// [`SparseLowering`]: crate::sparse::SparseLowering
+    /// [`Density`]: crate::sparse::Density
+    fn sparse(&self, extended: bool) -> Artifact {
+        use crate::sparse::{mask_stats, SparseLowering};
+        let nets = if extended {
+            workloads::extended_sparse_networks()
+        } else {
+            workloads::sparse_networks()
+        };
+        let mut a = Artifact::new(
+            "sparse",
+            "Sparse lowerings: dense vs column-combine vs SPOTS (BP-im2col mode)",
+        )
+        .meta("networks", if extended { "extended" } else { "paper" })
+        .meta(
+            "lowerings",
+            SparseLowering::ALL.map(SparseLowering::name).join(","),
+        )
+        .columns(vec![
+            Column::new("network"),
+            Column::new("lowering"),
+            Column::new("runtime_cycles").unit("cycles").precision(0),
+            Column::new("traffic_bytes").unit("bytes").precision(0),
+            Column::new("buffer_reads").unit("elems").precision(0),
+            Column::new("runtime_vs_dense").unit("x"),
+            Column::new("traffic_vs_dense").unit("x"),
+            Column::new("reads_vs_dense").unit("x"),
+        ]);
+        for net in &nets {
+            // ALL starts with Dense, so the baseline is always set
+            // before a ratio row needs it.
+            let mut dense = (0.0f64, 0u64, 0u64);
+            for lowering in SparseLowering::ALL {
+                let cfg = AccelConfig { lowering, ..self.cfg };
+                let mut runtime = 0.0f64;
+                let mut traffic = 0u64;
+                let mut reads = 0u64;
+                // lint: allow(float-accumulation) — layer order fixed by the workload table
+                for l in &net.layers {
+                    let count = l.count as u64;
+                    let loss = self.cache.metrics(Pass::Loss, Mode::BpIm2col, &l.params, &cfg);
+                    let grad = self.cache.metrics(Pass::Grad, Mode::BpIm2col, &l.params, &cfg);
+                    runtime += (loss.total_cycles() + grad.total_cycles()) * count as f64;
+                    traffic += (loss.traffic.total() + grad.traffic.total()) * count;
+                    reads += (loss.buffer_a_reads
+                        + loss.buffer_b_reads
+                        + grad.buffer_a_reads
+                        + grad.buffer_b_reads)
+                        * count;
+                }
+                if lowering == SparseLowering::Dense {
+                    dense = (runtime, traffic, reads);
+                }
+                a.push_row(vec![
+                    net.name.into(),
+                    lowering.name().into(),
+                    runtime.into(),
+                    traffic.into(),
+                    reads.into(),
+                    (runtime / dense.0).into(),
+                    (traffic as f64 / dense.1 as f64).into(),
+                    (reads as f64 / dense.2 as f64).into(),
+                ]);
+            }
+        }
+        // Empirical check that the seeded value masks track the nominal
+        // densities the closed forms use (same seed, same stats, on any
+        // thread or frontend).
+        if let Some(l) = nets.first().and_then(|n| n.layers.first()) {
+            let nominal = l.params.density.scaled_millis(self.cfg.density_millis);
+            let stats = mask_stats(0x5eed, 1 << 16, nominal.weight_millis);
+            a.push_note(format!(
+                "seeded weight-mask check ({}): nominal {}/1000, observed {}/1000 over {} \
+                 draws, longest zero run {}",
+                l.params.id(),
+                nominal.weight_millis,
+                stats.density_millis(),
+                stats.elems,
+                stats.longest_zero_run
+            ));
+        }
+        a
+    }
+
     fn fleet_artifact(&self, nets: &[Network], devices: usize) -> Artifact {
         let (bars, planning) =
             report::fleet_summary(nets, &self.cfg, Mode::BpIm2col, devices);
@@ -587,13 +679,15 @@ fn network_bar_row(b: report::NetworkBar) -> Vec<Value> {
 /// artifact's metadata.
 fn config_meta(cfg: &AccelConfig) -> String {
     format!(
-        "T={} bw={} bufA={} bufB={} reorg={} sparse_skip={}",
+        "T={} bw={} bufA={} bufB={} reorg={} sparse_skip={} lowering={} density={}",
         cfg.array_dim,
         cfg.dram.elems_per_cycle,
         cfg.buf_a_half,
         cfg.buf_b_half,
         cfg.reorg_cycles_per_elem,
-        cfg.sparse_skip
+        cfg.sparse_skip,
+        cfg.lowering.name(),
+        cfg.density_millis
     )
 }
 
@@ -677,6 +771,38 @@ mod tests {
         assert_eq!(svc.run(&req), arts);
         let two: SimRequest = DseRequest::new().budget(16).seed(7).devices(2).into();
         assert_eq!(svc.run(&two)[0].render_json(), a.render_json());
+    }
+
+    #[test]
+    fn sparse_artifact_compares_lowerings_against_the_dense_baseline() {
+        let svc = Service::new(AccelConfig::default());
+        let arts = svc.run(&SimRequest::Sparse { extended: false });
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.name, "sparse");
+        // Three pruned networks x three lowerings, in catalog order.
+        assert_eq!(a.rows.len(), 9);
+        let lowering = a.col("lowering").unwrap();
+        assert_eq!(a.rows[0][lowering], Value::from("dense"));
+        assert_eq!(a.rows[1][lowering], Value::from("cc"));
+        assert_eq!(a.rows[2][lowering], Value::from("spots"));
+        // Dense rows are their own baseline: ratio exactly 1.
+        for i in [0usize, 3, 6] {
+            assert_eq!(a.float_at(i, "runtime_vs_dense"), Some(1.0));
+            assert_eq!(a.float_at(i, "reads_vs_dense"), Some(1.0));
+        }
+        // The pruned networks are sub-dense, so at least one sparse
+        // lowering beats dense on runtime or buffer reads somewhere.
+        let beats = (0..a.rows.len()).any(|i| {
+            a.float_at(i, "runtime_vs_dense").unwrap() < 1.0
+                || a.float_at(i, "reads_vs_dense").unwrap() < 1.0
+        });
+        assert!(beats, "no sparse lowering ever beat dense: {}", a.render_text());
+        assert!(a.notes.iter().any(|n| n.contains("seeded weight-mask check")), "{:?}", a.notes);
+        // Replay is bit-identical, extended adds the pruned geometry nets.
+        assert_eq!(svc.run(&SimRequest::Sparse { extended: false }), arts);
+        let ext = svc.run(&SimRequest::Sparse { extended: true });
+        assert_eq!(ext[0].rows.len(), 15);
     }
 
     #[test]

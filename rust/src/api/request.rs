@@ -299,6 +299,15 @@ pub enum SimRequest {
         /// Include the dilated/grouped extension networks.
         extended: bool,
     },
+    /// Sparse-lowering comparison: every pruned workload network
+    /// ([`crate::workloads::sparse_networks`]) under every
+    /// [`crate::sparse::SparseLowering`], BP-im2col mode, with
+    /// vs-dense ratios per network.
+    Sparse {
+        /// Also include pruned variants of the dilated/grouped
+        /// extension networks.
+        extended: bool,
+    },
     /// Single-layer simulation in both modes (`sim --layer`).
     Layer(ConvParams),
     /// Whole-training-step cost per network, optionally with a fleet
@@ -399,6 +408,7 @@ impl SimRequest {
             },
             SimRequest::Sparsity { .. } => "sparsity",
             SimRequest::Storage { .. } => "storage",
+            SimRequest::Sparse { .. } => "sparse",
             SimRequest::Layer(_) => "layer",
             SimRequest::TrainCost { .. } => "traincost",
             SimRequest::Fleet(_) => "fleet",
@@ -433,6 +443,7 @@ mod tests {
     fn request_names_are_stable() {
         assert_eq!(SimRequest::Table2.name(), "table2");
         assert_eq!(SimRequest::Sparsity { extended: false }.name(), "sparsity");
+        assert_eq!(SimRequest::Sparse { extended: true }.name(), "sparse");
         assert_eq!(SimRequest::TrainCost { devices: None }.name(), "traincost");
         let fleet: SimRequest = FleetRequest::new(2).extended(true).into();
         assert_eq!(fleet.name(), "fleet");

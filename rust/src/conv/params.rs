@@ -2,6 +2,8 @@
 //! generalized to asymmetric strides, kernel dilation and grouped
 //! convolution (DESIGN.md §2).
 
+use crate::sparse::Density;
+
 /// Parameters of one convolutional layer, following the paper's Table I
 /// generalized beyond square/symmetric geometry.
 ///
@@ -40,6 +42,11 @@ pub struct ConvParams {
     /// Channel groups `G` (`C` and `N` must both divide; `G == C == N`
     /// is a depthwise convolution).
     pub groups: usize,
+    /// *Data* density of the layer's values (weight and activation
+    /// non-zero fractions, fixed-point thousandths — DESIGN.md §14).
+    /// [`Density::DENSE`] for every pre-existing geometry; orthogonal
+    /// to the *structural* zero-space the shape fields imply.
+    pub density: Density,
 }
 
 impl ConvParams {
@@ -83,7 +90,23 @@ impl ConvParams {
         ph: usize,
         pw: usize,
     ) -> Self {
-        Self { b, c, hi, wi, n, kh, kw, sh: s, sw: s, ph, pw, dh: 1, dw: 1, groups: 1 }
+        Self {
+            b,
+            c,
+            hi,
+            wi,
+            n,
+            kh,
+            kw,
+            sh: s,
+            sw: s,
+            ph,
+            pw,
+            dh: 1,
+            dw: 1,
+            groups: 1,
+            density: Density::DENSE,
+        }
     }
 
     /// With a different batch size.
@@ -109,6 +132,13 @@ impl ConvParams {
     /// With `g` channel groups.
     pub const fn with_groups(mut self, g: usize) -> Self {
         self.groups = g;
+        self
+    }
+
+    /// With a sub-dense *data* density (weight and activation non-zero
+    /// fractions in thousandths — see [`Density`]).
+    pub const fn with_density(mut self, weight_millis: u16, act_millis: u16) -> Self {
+        self.density = Density { weight_millis, act_millis };
         self
     }
 
@@ -222,9 +252,11 @@ impl ConvParams {
     }
 
     /// Paper-style layer id string `Hi/C/N/Kh/S/Ph`, with `ShxSw` in the
-    /// stride slot when asymmetric and `/dD` / `/gG` suffixes for
-    /// dilated / grouped layers (identical to the seed format for the
-    /// paper's dense symmetric geometry).
+    /// stride slot when asymmetric, `/dD` / `/gG` suffixes for
+    /// dilated / grouped layers, and `/wNNN` / `/aNNN` suffixes
+    /// (thousandths) for sub-dense weight / activation density
+    /// (identical to the seed format for the paper's dense symmetric
+    /// geometry).
     pub fn id(&self) -> String {
         let stride = if self.sh == self.sw {
             self.sh.to_string()
@@ -242,6 +274,12 @@ impl ConvParams {
         if self.groups != 1 {
             id.push_str(&format!("/g{}", self.groups));
         }
+        if self.density.weight_millis != 1000 {
+            id.push_str(&format!("/w{}", self.density.weight_millis));
+        }
+        if self.density.act_millis != 1000 {
+            id.push_str(&format!("/a{}", self.density.act_millis));
+        }
         id
     }
 
@@ -249,9 +287,10 @@ impl ConvParams {
     ///
     /// Accepts both the input form `H/C/N/K/S/P[/G[/D]]` (bare numerics,
     /// groups then dilation) and the exact strings [`ConvParams::id`]
-    /// prints (`S` may be `ShxSw`; suffixes `dD`/`dDhxDw` and `gG` in
-    /// any order) — so every layer id in the tool's own output
-    /// round-trips through `sim --layer`.
+    /// prints (`S` may be `ShxSw`; suffixes `dD`/`dDhxDw`, `gG`, and
+    /// the density thousandths `wNNN`/`aNNN` in any order) — so every
+    /// layer id in the tool's own output round-trips through
+    /// `sim --layer`.
     ///
     /// # Example
     ///
@@ -266,8 +305,10 @@ impl ConvParams {
     /// ```
     pub fn parse_spec(spec: &str) -> Result<Self, String> {
         let parts: Vec<&str> = spec.split('/').collect();
-        if !(6..=8).contains(&parts.len()) {
-            return Err(format!("layer spec must be H/C/N/K/S/P[/G[/D]], got {spec:?}"));
+        if !(6..=10).contains(&parts.len()) {
+            return Err(format!(
+                "layer spec must be H/C/N/K/S/P[/G[/D]][/wNNN][/aNNN], got {spec:?}"
+            ));
         }
         let num = |s: &str| -> Result<usize, String> {
             s.parse().map_err(|_| format!("bad layer component {s:?}"))
@@ -278,7 +319,16 @@ impl ConvParams {
         let mut p = ConvParams::square(hi, c, n, k, 1, ph).with_stride(sh, sw);
         let mut groups_set = false;
         let mut dilation_set = false;
+        let mut weight_set = false;
+        let mut act_set = false;
         let mut tagged = false;
+        let millis = |rest: &str, what: &str| -> Result<u16, String> {
+            let v = num(rest)?;
+            if v == 0 || v > 1000 {
+                return Err(format!("{what} density must be 1..=1000 thousandths in {spec:?}"));
+            }
+            Ok(v as u16)
+        };
         for extra in &parts[6..] {
             if let Some(rest) = extra.strip_prefix('d') {
                 if dilation_set {
@@ -294,6 +344,20 @@ impl ConvParams {
                 }
                 p = p.with_groups(num(rest)?);
                 groups_set = true;
+                tagged = true;
+            } else if let Some(rest) = extra.strip_prefix('w') {
+                if weight_set {
+                    return Err(format!("duplicate weight-density component {extra:?} in {spec:?}"));
+                }
+                p.density.weight_millis = millis(rest, "weight")?;
+                weight_set = true;
+                tagged = true;
+            } else if let Some(rest) = extra.strip_prefix('a') {
+                if act_set {
+                    return Err(format!("duplicate act-density component {extra:?} in {spec:?}"));
+                }
+                p.density.act_millis = millis(rest, "act")?;
+                act_set = true;
                 tagged = true;
             } else if tagged {
                 // A bare numeral after a gG/dD component is ambiguous
@@ -345,6 +409,7 @@ impl ConvParams {
         {
             return Err(format!("degenerate parameter in {self:?}"));
         }
+        self.density.validate().map_err(|e| format!("{e} in {self:?}"))?;
         // Magnitude bounds. The analytic model multiplies these
         // components freely in usize/u64/f64; without a cap, a hostile
         // spec (e.g. through the HTTP query route) wraps in release
@@ -619,6 +684,36 @@ mod tests {
             let err = ConvParams::parse_spec(bad).unwrap_err();
             assert!(err.contains("duplicate") && err.contains(what), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn density_suffixes_round_trip_and_validate() {
+        // Dense layers keep the seed id format exactly.
+        let dense = ConvParams::square(224, 3, 64, 3, 2, 0);
+        assert_eq!(dense.id(), "224/3/64/3/2/0");
+        assert_eq!(dense.density, crate::sparse::Density::DENSE);
+        // Sub-dense layers append /wNNN and/or /aNNN and round-trip.
+        let p = ConvParams::square(224, 3, 64, 3, 2, 0).with_density(250, 600);
+        assert_eq!(p.id(), "224/3/64/3/2/0/w250/a600");
+        assert_eq!(ConvParams::parse_spec(&p.id()).unwrap(), p);
+        let w_only = ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32).with_density(125, 1000);
+        assert_eq!(w_only.id(), "56/128/128/3/2/1/g32/w125");
+        assert_eq!(ConvParams::parse_spec(&w_only.id()).unwrap(), w_only);
+        // Tags compose in any order with g/d.
+        let p2 = ConvParams::parse_spec("28/64/64/3/1/2/a500/d2/g64/w250").unwrap();
+        assert_eq!(p2.density, crate::sparse::Density::new(250, 500).unwrap());
+        assert_eq!((p2.groups, p2.dh), (64, 2));
+        // Domain and duplicate rejection.
+        assert!(ConvParams::parse_spec("224/3/64/3/2/0/w0").is_err(), "zero density");
+        assert!(ConvParams::parse_spec("224/3/64/3/2/0/w1001").is_err(), "over-dense");
+        let err = ConvParams::parse_spec("224/3/64/3/2/0/w250/w500").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        let err = ConvParams::parse_spec("224/3/64/3/2/0/a250/a500").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        // validate() rejects an out-of-domain density set directly.
+        let mut bad = dense;
+        bad.density.weight_millis = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -9,7 +9,12 @@
 //! ([`crate::accel::plan::PlanCache::metrics`], BP-im2col mode), summed
 //! over the workload layers in fixed order — so a point's score is a
 //! pure function of `(config, workload set)` and bit-identical however
-//! many evaluation threads the search runs.
+//! many evaluation threads the search runs. The config's data-sparsity
+//! knobs (`lowering`, `density_millis` — the DSE `lowering`/`density`
+//! axes) flow through the same plan-cache path, so sparse design
+//! points are scored by exactly the machinery that scores dense ones,
+//! and the area objective charges the select/skip datapath only at
+//! sub-dense operating points ([`crate::area::accelerator_area_um2`]).
 //!
 //! The frontier is the exact non-dominated set; [`pareto_ranks`] also
 //! assigns every dominated point its dominance depth (rank 1 = frontier

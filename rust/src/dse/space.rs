@@ -1,28 +1,29 @@
 //! The searchable [`crate::accel::AccelConfig`] space: typed axes,
 //! compact range and point specs, and grid enumeration.
 //!
-//! A [`SpaceSpec`] is the *wire form* of a search space — eight
+//! A [`SpaceSpec`] is the *wire form* of a search space — ten
 //! [`AxisRange`]s (one per `AccelConfig` field), each a plain integer
 //! triple so the whole spec is `Copy + Eq + Hash` and rides inside
 //! [`crate::api::SimRequest`] unchanged. Fractional axes
-//! (`elems_per_cycle`, `burst_overhead`, `reorg_cycles_per_elem`) are
-//! stored in fixed-point **thousandths**, so `0.5` is the exact integer
-//! `500`, equality is bitwise, and the same spec string always names the
-//! same `f64`.
+//! (`elems_per_cycle`, `burst_overhead`, `reorg_cycles_per_elem`,
+//! `density`) are stored in fixed-point **thousandths**, so `0.5` is
+//! the exact integer `500`, equality is bitwise, and the same spec
+//! string always names the same `f64`.
 //!
 //! Two compact string forms, both strict and both round-tripping (the
 //! [`crate::conv::ConvParams::parse_spec`] convention):
 //!
 //! * an **axis range** is `V` or `LO:HI:STEP` (`--axis array_dim=8:16:8`),
-//! * a **design point** is `t16/e16/o8/l64/a32768/b32768/r4/s0`
+//! * a **design point** is `t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0`
 //!   ([`point_spec`] / [`parse_point_spec`]) — every frontier row prints
 //!   one, and feeding it back reproduces the exact configuration.
 
 use crate::accel::AccelConfig;
 use crate::sim::dram::DramModel;
+use crate::sparse::SparseLowering;
 
 /// Number of search axes (one per [`AccelConfig`] field).
-pub const NUM_AXES: usize = 8;
+pub const NUM_AXES: usize = 10;
 
 /// Fixed-point scale of the fractional axes (values in thousandths).
 pub const MILLI: u64 = 1000;
@@ -42,11 +43,14 @@ pub const AXIS_NAMES: [&str; NUM_AXES] = [
     "buf_b_half",
     "reorg_cycles_per_elem",
     "sparse_skip",
+    "density",
+    "lowering",
 ];
 
 /// Which axes hold fixed-point thousandths (the others are plain
 /// integers).
-const AXIS_IS_MILLI: [bool; NUM_AXES] = [false, true, true, false, false, false, true, false];
+const AXIS_IS_MILLI: [bool; NUM_AXES] =
+    [false, true, true, false, false, false, true, false, true, false];
 
 /// One inclusive arithmetic range `lo, lo+step, ..., <= hi` over an
 /// axis's raw integer domain (thousandths for fractional axes).
@@ -177,6 +181,14 @@ pub struct SpaceSpec {
     /// Sparse window skipping (0 = off, 1 = on; a range spanning both
     /// sweeps the feature).
     pub sparse_skip: AxisRange,
+    /// Config-level data-density scale, milli-fraction `1..=1000`
+    /// (composed multiplicatively with each layer's own
+    /// [`crate::sparse::Density`]; `1000` = dense, the exact identity).
+    pub density: AxisRange,
+    /// Data-sparsity lowering code
+    /// ([`SparseLowering::code`]: 0 = dense, 1 = column combining,
+    /// 2 = SPOTS; a `0:2:1` range sweeps all three).
+    pub lowering: AxisRange,
 }
 
 impl Default for SpaceSpec {
@@ -196,6 +208,8 @@ impl Default for SpaceSpec {
             buf_b_half: AxisRange::new(32 * 1024, 64 * 1024, 32 * 1024),
             reorg_cycles_per_elem: AxisRange::single(4 * MILLI),
             sparse_skip: AxisRange::single(0),
+            density: AxisRange::single(MILLI),
+            lowering: AxisRange::single(0),
         }
     }
 }
@@ -212,6 +226,8 @@ impl SpaceSpec {
             self.buf_b_half,
             self.reorg_cycles_per_elem,
             self.sparse_skip,
+            self.density,
+            self.lowering,
         ]
     }
 
@@ -225,7 +241,9 @@ impl SpaceSpec {
             4 => &mut self.buf_a_half,
             5 => &mut self.buf_b_half,
             6 => &mut self.reorg_cycles_per_elem,
-            _ => &mut self.sparse_skip,
+            7 => &mut self.sparse_skip,
+            8 => &mut self.density,
+            _ => &mut self.lowering,
         }
     }
 
@@ -342,6 +360,8 @@ impl SpaceSpec {
             MAX_COST_CYCLES as u64 * MILLI,
         )?;
         bounded("sparse_skip", self.sparse_skip, 0, 1)?;
+        bounded("density", self.density, 1, MILLI)?;
+        bounded("lowering", self.lowering, 0, SparseLowering::ALL.len() as u64 - 1)?;
         if self.grid_size() > 1 << 62 {
             return Err("search space exceeds 2^62 grid points".to_string());
         }
@@ -364,6 +384,9 @@ impl SpaceSpec {
             buf_b_half: v(5) as usize,
             reorg_cycles_per_elem: v(6) as f64 / MILLI as f64,
             sparse_skip: v(7) != 0,
+            density_millis: v(8) as usize,
+            lowering: SparseLowering::from_code(v(9))
+                .expect("lowering axis validated to 0..=2"),
         }
     }
 
@@ -415,6 +438,8 @@ fn raw_values(cfg: &AccelConfig) -> Option<[u64; NUM_AXES]> {
         cfg.buf_b_half as u64,
         milli(cfg.reorg_cycles_per_elem)?,
         cfg.sparse_skip as u64,
+        cfg.density_millis as u64,
+        cfg.lowering.code() as u64,
     ])
 }
 
@@ -424,7 +449,7 @@ fn fmt_f64(f: f64) -> String {
 }
 
 /// The compact, reproducible spec of one design point:
-/// `t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>`.
+/// `t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>/d<density>/p<0|1|2>`.
 /// [`parse_point_spec`] decodes it back to the identical
 /// [`AccelConfig`], so any frontier row can be re-simulated exactly.
 ///
@@ -435,13 +460,13 @@ fn fmt_f64(f: f64) -> String {
 /// use bp_im2col::dse::space::{parse_point_spec, point_spec};
 ///
 /// let spec = point_spec(&AccelConfig::default());
-/// assert_eq!(spec, "t16/e16/o8/l64/a32768/b32768/r4/s0");
+/// assert_eq!(spec, "t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0");
 /// let cfg = parse_point_spec(&spec).unwrap();
 /// assert_eq!(point_spec(&cfg), spec);
 /// ```
 pub fn point_spec(cfg: &AccelConfig) -> String {
     format!(
-        "t{}/e{}/o{}/l{}/a{}/b{}/r{}/s{}",
+        "t{}/e{}/o{}/l{}/a{}/b{}/r{}/s{}/d{}/p{}",
         cfg.array_dim,
         fmt_f64(cfg.dram.elems_per_cycle),
         fmt_f64(cfg.dram.burst_overhead),
@@ -450,17 +475,19 @@ pub fn point_spec(cfg: &AccelConfig) -> String {
         cfg.buf_b_half,
         fmt_f64(cfg.reorg_cycles_per_elem),
         cfg.sparse_skip as u8,
+        fmt_milli(cfg.density_millis as u64),
+        cfg.lowering.code(),
     )
 }
 
 /// Parse a [`point_spec`] string back into its configuration. Strict:
-/// all eight `prefix+value` components, in order.
+/// all ten `prefix+value` components, in order.
 pub fn parse_point_spec(spec: &str) -> Result<AccelConfig, String> {
     let parts: Vec<&str> = spec.split('/').collect();
-    const PREFIXES: [char; NUM_AXES] = ['t', 'e', 'o', 'l', 'a', 'b', 'r', 's'];
+    const PREFIXES: [char; NUM_AXES] = ['t', 'e', 'o', 'l', 'a', 'b', 'r', 's', 'd', 'p'];
     if parts.len() != NUM_AXES {
         return Err(format!(
-            "point spec must be t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>, got {spec:?}"
+            "point spec must be t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>/d<density>/p<0|1|2>, got {spec:?}"
         ));
     }
     let mut vals: [&str; NUM_AXES] = [""; NUM_AXES];
@@ -485,6 +512,17 @@ pub fn parse_point_spec(spec: &str) -> Result<AccelConfig, String> {
         "1" => true,
         other => return Err(format!("point spec sparse flag must be 0 or 1, got {other:?}")),
     };
+    let density_millis = parse_milli(vals[8]).map_err(|e| format!("point spec density: {e}"))?;
+    if density_millis == 0 || density_millis > MILLI {
+        return Err(format!(
+            "point spec density must be in (0, 1] (thousandths 1..=1000), got {:?}",
+            vals[8]
+        ));
+    }
+    let lowering = vals[9]
+        .parse::<u64>()
+        .map_err(|_| format!("bad point spec component {:?}", vals[9]))
+        .and_then(|code| SparseLowering::from_code(code).map_err(|e| format!("point spec: {e}")))?;
     Ok(AccelConfig {
         array_dim: int(vals[0])?,
         dram: DramModel {
@@ -496,6 +534,8 @@ pub fn parse_point_spec(spec: &str) -> Result<AccelConfig, String> {
         buf_b_half: int(vals[5])?,
         reorg_cycles_per_elem: float(vals[6])?,
         sparse_skip: sparse,
+        density_millis: density_millis as usize,
+        lowering,
     })
 }
 
@@ -582,6 +622,12 @@ mod tests {
         assert_eq!(s.sparse_skip.count(), 2);
         s.set_axis("burst_len", "32").unwrap();
         assert_eq!(s.burst_len, AxisRange::single(32));
+        // The sparse axes: density is fractional (thousandths), the
+        // lowering axis is the integer wire code.
+        s.set_axis("density", "0.125:1:0.125").unwrap();
+        assert_eq!(s.density, AxisRange::new(125, 1000, 125));
+        s.set_axis("lowering", "0:2:1").unwrap();
+        assert_eq!(s.lowering.count(), 3);
         // Single-value spans canonicalize to the bare form, so
         // `16:16:1`, `8:16:9` and their `V` spellings are one request
         // (and one response-cache key) each.
@@ -639,18 +685,27 @@ mod tests {
         let mut s = SpaceSpec::default();
         s.set_axis("burst_len", "100000000").unwrap();
         assert!(s.validate().is_err(), "oversized burst axis");
+        let mut s = SpaceSpec::default();
+        s.set_axis("density", "0").unwrap();
+        assert!(s.validate().is_err(), "degenerate zero density");
+        let mut s = SpaceSpec::default();
+        s.set_axis("lowering", "0:3:1").unwrap();
+        assert!(s.validate().is_err(), "lowering code beyond 0..=2");
     }
 
     #[test]
     fn rank_decoding_is_mixed_radix_last_axis_fastest() {
         let mut s = SpaceSpec::default();
         s.set_axis("sparse_skip", "0:1:1").unwrap();
-        // sparse_skip is the last axis: rank 0 and 1 differ only there.
+        // sparse_skip is the last *multi-valued* axis here (the
+        // single-valued density/lowering axes after it contribute radix
+        // 1): rank 0 and 1 differ only there.
         let a = s.indices_of_rank(0);
         let b = s.indices_of_rank(1);
         assert_eq!(a[7], 0);
         assert_eq!(b[7], 1);
         assert_eq!(a[..7], b[..7]);
+        assert_eq!(a[8..], b[8..]);
         // Every rank decodes to in-range indices and a unique config.
         let n = s.grid_size() as u64;
         let mut specs = std::collections::HashSet::new();
@@ -670,16 +725,29 @@ mod tests {
         cfg.dram.elems_per_cycle = 0.5;
         cfg.sparse_skip = true;
         let spec = point_spec(&cfg);
-        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1");
+        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1/d1/p0");
         let back = parse_point_spec(&spec).unwrap();
         assert_eq!(point_spec(&back), spec);
         assert_eq!(back.dram.elems_per_cycle, 0.5);
         assert!(back.sparse_skip);
+        // Sparse design point: fractional density, a sparse lowering.
+        cfg.density_millis = 250;
+        cfg.lowering = SparseLowering::Spots;
+        let spec = point_spec(&cfg);
+        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1/d0.25/p2");
+        let back = parse_point_spec(&spec).unwrap();
+        assert_eq!(point_spec(&back), spec);
+        assert_eq!(back.density_millis, 250);
+        assert_eq!(back.lowering, SparseLowering::Spots);
         // Strictness.
         assert!(parse_point_spec("t16/e16").is_err(), "too short");
-        assert!(parse_point_spec("x16/e16/o8/l64/a1/b1/r4/s0").is_err(), "bad prefix");
-        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s2").is_err(), "bad flag");
-        assert!(parse_point_spec("t16/e-1/o8/l64/a1/b1/r4/s0").is_err(), "negative");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0").is_err(), "pre-sparse length");
+        assert!(parse_point_spec("x16/e16/o8/l64/a1/b1/r4/s0/d1/p0").is_err(), "bad prefix");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s2/d1/p0").is_err(), "bad flag");
+        assert!(parse_point_spec("t16/e-1/o8/l64/a1/b1/r4/s0/d1/p0").is_err(), "negative");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d0/p0").is_err(), "zero density");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d2/p0").is_err(), "density > 1");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d1/p3").is_err(), "bad lowering");
     }
 
     #[test]

@@ -1,4 +1,25 @@
-//! Analytic zero counting of the lowered matrices.
+//! Analytic zero counting of the lowered matrices — **structural**
+//! sparsity.
+//!
+//! The crate models two entirely separate kinds of zeros, and this
+//! module owns the first:
+//!
+//! * **Structural** sparsity (here): zeros that backpropagation
+//!   *geometry* injects deterministically — dilation/insertion zeros of
+//!   the gradient pass, padding zeros, out-of-bounds positions of the
+//!   transposed mapping. They exist for every trained value of the
+//!   tensors, their positions are closed-form functions of
+//!   [`ConvParams`] alone, and BP-im2col's address generators skip them
+//!   *exactly* (that is the paper's contribution).
+//! * **Data** sparsity ([`crate::sparse`]): zeros in the tensor
+//!   *values* — pruned weights, ReLU-sparse activations — governed by
+//!   the statistical [`crate::sparse::Density`] knob and exploited (or
+//!   not) by the configured [`crate::sparse::SparseLowering`]. Those
+//!   zeros move with the data; only their *rate* is known analytically.
+//!
+//! The two compose: a sparse lowering operates on the matrices that
+//! remain *after* structural zero-space is eliminated. The
+//! [`crate::sparsity`] facade re-exports both sides.
 //!
 //! The paper's headline motivation (§I–II): for `stride >= 2` the lowered
 //! matrix B of loss calculation is 75–93.91 % zeros and the lowered
@@ -14,6 +35,11 @@ use crate::conv::ConvParams;
 use crate::im2col::{transposed, Zone};
 
 /// Zero statistics of a lowered matrix (whole layer: all `G` groups).
+///
+/// Counts *structural* zeros only: positions the layer geometry forces
+/// to zero regardless of the tensor values. Value zeros (pruning, ReLU)
+/// are a [`crate::sparse::Density`] property and never appear here —
+/// a fully dense layer can still be > 90 % structurally sparse.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SparsityStats {
     /// Total elements of the virtual matrix (summed over groups).

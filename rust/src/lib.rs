@@ -66,6 +66,14 @@
 //!   for this crate's own sources (`repro lint`): six deny-by-default
 //!   rules over a hand-rolled token-tree parse, suppressible only by
 //!   reasoned in-source allows, gating CI (DESIGN.md §12).
+//! * [`sparse`] — **data**-sparsity lowerings (DESIGN.md §14): the
+//!   per-layer [`sparse::Density`] knob on [`ConvParams`], Kung-style
+//!   column combining and a SPOTS-style sparse-GEMM pipeline as
+//!   [`sparse::SparseLowering`] variants the plan builder evaluates
+//!   next to the dense paths (`repro sparse`, `sim --density
+//!   --lowering`, DSE `density`/`lowering` axes). The [`sparsity`]
+//!   facade re-exports this alongside the paper's *structural*
+//!   zero-space closed forms so the two notions can't be confused.
 //!
 //! See the top-level `README.md` for a quickstart and the full CLI
 //! command table, `DESIGN.md` for modeling decisions, and
@@ -86,6 +94,8 @@ pub mod report;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod sparse;
+pub mod sparsity;
 pub mod tensor;
 pub mod workloads;
 

@@ -41,6 +41,9 @@ COMMANDS:
   fig8                  On-chip buffer bandwidth + sparsity per network
   sparsity              Lowered-matrix sparsity of every workload layer
   storage               Additional-storage overhead per network
+  sparse                Sparse lowerings compared (dense vs column
+                        combining vs SPOTS) over the pruned workload
+                        networks, with vs-dense ratio columns
   sim --layer <SPEC>    Simulate one layer in both modes (spec below)
   traincost             Full training-step cost (fwd+loss+grad) per network
   fleet                 Backward-pass sharding across N simulated
@@ -51,7 +54,8 @@ COMMANDS:
                         Pareto-optimal backprop platforms. Exhaustive
                         within --budget, seeded sampling + hill-climb
                         refinement beyond it; rows carry reproducible
-                        point specs (t16/e16/o8/l64/a32768/b32768/r4/s0)
+                        point specs
+                        (t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0)
   serve                 Long-running HTTP/1.1 JSON server over the query
                         facade: POST /v1/query, POST /v1/batch,
                         GET /v1/requests, GET /healthz, GET /metrics,
@@ -77,11 +81,17 @@ LAYER SPEC (sim --layer):
                         G channel groups, D kernel dilation. S and D also
                         accept asymmetric `HxW` forms (e.g. S=2x1), and
                         G/D may be tagged in any order as `gG` / `dD`.
+                        Value densities ride the same spec as `wM` /
+                        `aM` tags in thousandths non-zero (weight /
+                        activation; default 1000 = dense).
   examples:
     repro sim --layer 224/3/64/3/2/0          (Table II row 1)
     repro sim --layer 56/128/128/3/2/1/g32    (ResNeXt-style, 32 groups)
     repro sim --layer 28/256/256/3/1/2/d2     (DeepLab-style, dilation 2)
     repro sim --layer 56/64/64/3/2x1/1        (asymmetric stride)
+    repro sim --layer 224/3/64/3/2/0/w250/a600 --lowering spots
+                                              (75% pruned weights, 40%
+                                               ReLU zeros, SPOTS core)
 
 OPTIONS:
   --config <file.cfg>         Platform preset (see configs/)
@@ -105,14 +115,23 @@ OPTIONS:
                               KEY: array_dim, elems_per_cycle,
                               burst_overhead, burst_len, buf_a_half,
                               buf_b_half, reorg_cycles_per_elem,
-                              sparse_skip. RANGE: a single value V or
-                              LO:HI:STEP (elems_per_cycle,
-                              burst_overhead and reorg_cycles_per_elem
-                              accept fractional values), e.g.
+                              sparse_skip, density, lowering. RANGE: a
+                              single value V or LO:HI:STEP
+                              (elems_per_cycle, burst_overhead,
+                              reorg_cycles_per_elem and density accept
+                              fractional values; lowering is the code
+                              0=dense 1=cc 2=spots), e.g.
                               --axis elems_per_cycle=0.5:4:0.5
+                              --axis density=0.25:1:0.25 --axis lowering=0:2:1
   --layer SPEC                Layer geometry (sim: required; dse: score
                               candidates on one layer instead of the
                               paper networks)
+  --lowering dense|cc|spots   Sparse lowering the platform runs (sim;
+                              `column-combine` is accepted for cc;
+                              default dense)
+  --density F                 Config-level density scale in (0, 1],
+                              composed multiplicatively with the layer's
+                              own w/a density tags (sim; default 1)
   --addr HOST:PORT            Bind address (serve; default 127.0.0.1:8000,
                               port 0 picks an ephemeral port)
   --threads N                 Connection worker threads (serve; default:
@@ -136,12 +155,14 @@ not itself start with `--`.
 const UNIVERSAL_OPTS: [&str; 4] = ["--config", "--bandwidth", "--csv", "--json"];
 
 /// Options that consume a value (everything else is a bare flag).
-const VALUE_OPTS: [&str; 14] = [
+const VALUE_OPTS: [&str; 16] = [
     "--config",
     "--bandwidth",
     "--pass",
     "--devices",
     "--layer",
+    "--lowering",
+    "--density",
     "--steps",
     "--seed",
     "--addr",
@@ -183,7 +204,7 @@ const fn cmd(name: &'static str, extra_opts: &'static [&'static str]) -> Command
     CommandSpec { name, extra_opts, universal: true, positionals: false }
 }
 
-const COMMANDS: [CommandSpec; 16] = [
+const COMMANDS: [CommandSpec; 17] = [
     cmd("table2", &[]),
     cmd("table3", &[]),
     cmd("table4", &[]),
@@ -192,7 +213,8 @@ const COMMANDS: [CommandSpec; 16] = [
     cmd("fig8", FIG_OPTS),
     cmd("sparsity", &["--extended"]),
     cmd("storage", &["--extended"]),
-    cmd("sim", &["--layer"]),
+    cmd("sparse", &["--extended"]),
+    cmd("sim", &["--layer", "--lowering", "--density"]),
     cmd("traincost", &["--devices"]),
     cmd("fleet", &["--devices", "--extended"]),
     cmd("dse", &["--budget", "--seed", "--axis", "--extended", "--layer", "--devices"]),
@@ -345,6 +367,18 @@ fn accel_config(opts: &Opts) -> Result<AccelConfig, String> {
         let bw: f64 = v.parse().map_err(|_| format!("bad --bandwidth {v:?}"))?;
         cfg.dram.elems_per_cycle = bw;
     }
+    if let Some(v) = opts.value("--lowering") {
+        cfg.lowering = bp_im2col::sparse::SparseLowering::parse(v)?;
+    }
+    if let Some(v) = opts.value("--density") {
+        let f: f64 = v.parse().map_err(|_| format!("bad --density {v:?}"))?;
+        if !(f > 0.0 && f <= 1.0) {
+            return Err(format!("--density must be in (0, 1], got {v}"));
+        }
+        // Same fixed-point convention as the layer knob and the DSE
+        // axis: thousandths, floored to at least 1.
+        cfg.density_millis = ((f * 1000.0).round() as usize).max(1);
+    }
     Ok(cfg)
 }
 
@@ -390,6 +424,7 @@ fn build_requests(cmd: &str, opts: &Opts) -> Result<Vec<SimRequest>, String> {
         "fig8" => vec![figure_request(Figure::BufferReads, opts)?.into()],
         "sparsity" => vec![SimRequest::Sparsity { extended }],
         "storage" => vec![SimRequest::Storage { extended }],
+        "sparse" => vec![SimRequest::Sparse { extended }],
         "sim" => {
             let spec = opts.value("--layer").ok_or(
                 "sim requires --layer H/C/N/K/S/P[/G[/D]] \
@@ -691,6 +726,39 @@ mod tests {
         assert_eq!((d.budget, d.seed), (32, 7));
         assert_eq!(d.space.axis_string(0), "4:16:4");
         assert_eq!(d.space.axis_string(7), "0:1:1");
+    }
+
+    #[test]
+    fn sim_takes_sparse_platform_knobs_and_sparse_builds_its_request() {
+        let opts = parsed(
+            "sim",
+            &["--layer", "224/3/64/3/2/0/w250/a600", "--lowering", "spots", "--density", "0.5"],
+        );
+        let cfg = accel_config(&opts).unwrap();
+        assert_eq!(cfg.lowering, bp_im2col::sparse::SparseLowering::Spots);
+        assert_eq!(cfg.density_millis, 500);
+        let reqs = build_requests("sim", &opts).unwrap();
+        let [SimRequest::Layer(p)] = reqs.as_slice() else { panic!("{reqs:?}") };
+        assert_eq!((p.density.weight_millis, p.density.act_millis), (250, 600));
+        // The long alias parses too; bad spellings and domains are errors.
+        let opts = parsed("sim", &["--layer", "224/3/64/3/2/0", "--lowering", "column-combine"]);
+        assert_eq!(
+            accel_config(&opts).unwrap().lowering,
+            bp_im2col::sparse::SparseLowering::ColumnCombine
+        );
+        let opts = parsed("sim", &["--layer", "224/3/64/3/2/0", "--lowering", "csr"]);
+        assert!(accel_config(&opts).is_err());
+        let opts = parsed("sim", &["--layer", "224/3/64/3/2/0", "--density", "0"]);
+        assert!(accel_config(&opts).is_err());
+        let opts = parsed("sim", &["--layer", "224/3/64/3/2/0", "--density", "1.5"]);
+        assert!(accel_config(&opts).is_err());
+        // The sparse command is a plain extended-or-not query.
+        let reqs = build_requests("sparse", &parsed("sparse", &["--extended"])).unwrap();
+        assert_eq!(reqs, vec![SimRequest::Sparse { extended: true }]);
+        // And the sparse platform knobs stay sim-only at parse time.
+        let table2 = COMMANDS.iter().find(|c| c.name == "table2").unwrap();
+        let bad: Vec<String> = ["--lowering".into(), "spots".into()].to_vec();
+        assert!(Opts::parse(&bad, table2).is_err());
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Kung-style **column combining** (arXiv 1811.04770): pack sparse
+//! filter columns so a systolic array's PEs stay busy.
+//!
+//! The scheme: after column-combining-aware pruning at weight density
+//! `d_w`, groups of up to [`CONFLICT_BUDGET`] sparse weight columns are
+//! combined into one dense column — each array row keeps the single
+//! non-zero of its group (conflicts are pruned away under the budget),
+//! plus a small per-slot index that selects which original column's
+//! operand the PE multiplies. In this model the weights are matrix `A`
+//! of the **loss** GEMM (`M = C/G` rows, `K = (N/G)·Kh·Kw` columns —
+//! [`crate::conv::ConvParams::loss_gemm_dims`]), so combining shrinks
+//! `K` by the packing factor and the whole tiling — compute, stationary
+//! blocks, buffer reads, fill traffic — shrinks with it. The gradient
+//! pass computes `dW` (weights are the *output* there), so column
+//! combining leaves it on the dense pipeline.
+//!
+//! Costs modeled alongside the win: one select cycle per extra combined
+//! slot per block pass (the MUX settle), index sideband bytes (one per
+//! packed weight slot), and the same bytes staged in buffer A. All
+//! integer/f64 closed forms, and all **exactly zero** at density 1.000:
+//! the packing factor is 1, the packed shape is the dense shape, and
+//! every overhead term vanishes — the dense-limit identity is
+//! structural, not numerical.
+
+use crate::accel::tiling::GemmShape;
+use crate::sparse::density::MILLIS_DENSE;
+
+/// Maximum sparse columns combined into one packed column (Kung et
+/// al. evaluate budgets up to 8 with ~no accuracy loss).
+pub const CONFLICT_BUDGET: usize = 8;
+
+/// Index sideband per packed weight slot, in bytes (a 3-bit select for
+/// budget 8 plus a valid tag, byte-aligned).
+pub const INDEX_BYTES_PER_SLOT: u64 = 1;
+
+/// How many sparse columns one packed column absorbs at weight density
+/// `weight_millis`: `min(floor(1000 / d_w), CONFLICT_BUDGET)`, never
+/// below 1. Integer arithmetic, so density 1.000 gives exactly 1 (no
+/// packing) and e.g. 0.125 gives the full budget of 8.
+pub const fn packing_factor(weight_millis: u16) -> usize {
+    let ideal = (MILLIS_DENSE / weight_millis) as usize;
+    if ideal <= 1 {
+        1
+    } else if ideal >= CONFLICT_BUDGET {
+        CONFLICT_BUDGET
+    } else {
+        ideal
+    }
+}
+
+/// The packed execution of one weight-carrying GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PackingPlan {
+    /// Columns combined per packed column ([`packing_factor`]).
+    pub pack: usize,
+    /// The GEMM shape the array actually executes: `K` shrunk to
+    /// `ceil(K / pack)`, `M` and `J` untouched.
+    pub packed: GemmShape,
+}
+
+impl PackingPlan {
+    /// Index sideband bytes for one group's packed weights
+    /// ([`INDEX_BYTES_PER_SLOT`] per packed slot); exactly 0 when
+    /// nothing is packed.
+    pub fn index_bytes(&self) -> u64 {
+        if self.pack == 1 {
+            0
+        } else {
+            (self.packed.m * self.packed.k) as u64 * INDEX_BYTES_PER_SLOT
+        }
+    }
+
+    /// Extra array cycles for the operand-select MUX: one settle cycle
+    /// per extra combined slot per stationary block pass; exactly 0.0
+    /// when nothing is packed.
+    pub fn select_cycles(&self, block_passes: usize) -> f64 {
+        ((self.pack - 1) * block_passes) as f64
+    }
+}
+
+/// Plan the packed execution of a weight-carrying GEMM (`A` = weights)
+/// at weight density `weight_millis`.
+pub fn pack_weight_gemm(shape: GemmShape, weight_millis: u16) -> PackingPlan {
+    let pack = packing_factor(weight_millis);
+    let packed_k = (shape.k + pack - 1) / pack;
+    PackingPlan { pack, packed: GemmShape { m: shape.m, k: packed_k, j: shape.j } }
+}
+
+/// PE utilization the packing recovers: the fraction of array slots
+/// holding a non-zero weight, `min(1, d_w · pack)`. At density 1.000
+/// this is exactly 1.0; at 0.125 with budget 8 it recovers full
+/// utilization from 12.5 %.
+pub fn pe_utilization(weight_millis: u16) -> f64 {
+    let frac = weight_millis as f64 / MILLIS_DENSE as f64;
+    let packed = frac * packing_factor(weight_millis) as f64;
+    if packed >= 1.0 {
+        1.0
+    } else {
+        packed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_factor_bands() {
+        assert_eq!(packing_factor(1000), 1, "dense packs nothing");
+        assert_eq!(packing_factor(999), 1);
+        assert_eq!(packing_factor(501), 1);
+        assert_eq!(packing_factor(500), 2);
+        assert_eq!(packing_factor(250), 4);
+        assert_eq!(packing_factor(125), 8);
+        assert_eq!(packing_factor(1), 8, "budget caps the factor");
+    }
+
+    #[test]
+    fn dense_plan_is_the_identity() {
+        let shape = GemmShape { m: 3, k: 576, j: 100352 };
+        let plan = pack_weight_gemm(shape, 1000);
+        assert_eq!(plan.pack, 1);
+        assert_eq!(plan.packed, shape, "dense shape unchanged");
+        assert_eq!(plan.index_bytes(), 0);
+        assert_eq!(plan.select_cycles(1234), 0.0);
+        assert_eq!(pe_utilization(1000), 1.0);
+    }
+
+    #[test]
+    fn sub_dense_plan_shrinks_k_and_charges_overhead() {
+        let shape = GemmShape { m: 64, k: 577, j: 4096 };
+        let plan = pack_weight_gemm(shape, 250);
+        assert_eq!(plan.pack, 4);
+        assert_eq!(plan.packed.k, 145, "ceil(577/4)");
+        assert_eq!((plan.packed.m, plan.packed.j), (shape.m, shape.j));
+        assert_eq!(plan.index_bytes(), 64 * 145);
+        assert_eq!(plan.select_cycles(10), 30.0);
+    }
+
+    #[test]
+    fn utilization_recovery_is_monotone_and_capped() {
+        // Exact multiples recover full utilization; the budget caps the
+        // recovery below 1/8 density.
+        assert_eq!(pe_utilization(500), 1.0);
+        assert_eq!(pe_utilization(125), 1.0);
+        assert!(pe_utilization(100) < 1.0, "budget-capped: 0.1 * 8 = 0.8");
+        assert!((pe_utilization(100) - 0.8).abs() < 1e-12);
+        // Without combining, utilization would equal raw density: the
+        // recovery factor is pack.
+        for millis in [125u16, 250, 500, 750, 1000] {
+            let raw = millis as f64 / 1000.0;
+            assert!(pe_utilization(millis) >= raw);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The per-layer [`Density`] knob: what fraction of weight and
+//! activation values are non-zero.
+//!
+//! Densities are **fixed-point thousandths** (`250` = 25.0 % non-zero),
+//! never `f64`: [`crate::conv::ConvParams`] must stay
+//! `Copy + Eq + Hash` so layer identity, plan-cache keys and wire specs
+//! compare bitwise, and `0.1 + 0.2`-style float drift can never mint
+//! two "equal" layers with different keys. The same convention as the
+//! DSE milli axes ([`crate::dse::space::MILLI`]).
+
+use crate::tensor::Rng;
+
+/// Thousandths value of a fully dense operand.
+pub const MILLIS_DENSE: u16 = 1000;
+
+/// Non-zero fraction of a layer's weights and activations, in
+/// fixed-point thousandths (`1..=1000`; `1000` = fully dense).
+///
+/// `weight` covers the kernel `W` (pruning); `act` covers the
+/// input/loss maps `X`/`dY` (ReLU-style sparsity). Which operand of
+/// which backward GEMM each governs is the plan builder's call — see
+/// [`crate::accel::plan::LayerPlan::build`].
+///
+/// # Example
+///
+/// ```
+/// use bp_im2col::sparse::Density;
+///
+/// let d = Density::new(250, 600).unwrap();
+/// assert_eq!(d.weight_frac(), 0.25);
+/// assert!(!d.is_dense() && Density::DENSE.is_dense());
+/// // Composition with a config-level sweep scale is exact at either
+/// // end: scaling by 1000 (dense) is the identity.
+/// assert_eq!(d.scaled_millis(1000), d);
+/// assert_eq!(Density::DENSE.scaled_millis(250), Density::new(250, 250).unwrap());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Density {
+    /// Non-zero fraction of the kernel values, thousandths.
+    pub weight_millis: u16,
+    /// Non-zero fraction of the activation / loss-map values,
+    /// thousandths.
+    pub act_millis: u16,
+}
+
+impl Density {
+    /// Fully dense (the implicit density of every pre-existing layer).
+    pub const DENSE: Density =
+        Density { weight_millis: MILLIS_DENSE, act_millis: MILLIS_DENSE };
+
+    /// Construct from thousandths, validating the `1..=1000` domain
+    /// (a density of 0 would make every closed form degenerate).
+    pub fn new(weight_millis: u16, act_millis: u16) -> Result<Self, String> {
+        let d = Density { weight_millis, act_millis };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Domain check used by [`crate::conv::ConvParams::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        for (label, v) in [("weight", self.weight_millis), ("act", self.act_millis)] {
+            if v == 0 || v > MILLIS_DENSE {
+                return Err(format!("{label} density must be 1..=1000 thousandths, got {v}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Weight density as a fraction in `(0, 1]`.
+    pub fn weight_frac(&self) -> f64 {
+        self.weight_millis as f64 / MILLIS_DENSE as f64
+    }
+
+    /// Activation density as a fraction in `(0, 1]`.
+    pub fn act_frac(&self) -> f64 {
+        self.act_millis as f64 / MILLIS_DENSE as f64
+    }
+
+    /// Whether both operands are fully dense.
+    pub const fn is_dense(&self) -> bool {
+        self.weight_millis == MILLIS_DENSE && self.act_millis == MILLIS_DENSE
+    }
+
+    /// Compose with a config-level density scale (the DSE `density`
+    /// axis), in thousandths. Pure integer arithmetic, floored, with a
+    /// floor of 1 so the result stays in-domain; **exact** when either
+    /// side is 1000, which is what makes the dense-limit identity hold
+    /// bitwise (`w * 1000 / 1000 == w`).
+    pub fn scaled_millis(&self, scale_millis: usize) -> Density {
+        let scale = |v: u16| -> u16 {
+            let s = (v as usize * scale_millis / MILLIS_DENSE as usize).max(1);
+            s.min(MILLIS_DENSE as usize) as u16
+        };
+        Density { weight_millis: scale(self.weight_millis), act_millis: scale(self.act_millis) }
+    }
+}
+
+/// Scale an exact byte/event count by a density in thousandths (floor
+/// division — exact identity at [`MILLIS_DENSE`]). The single home of
+/// the fixed-point scaling rule every sparse lowering uses for counts
+/// and traffic; keeping it integer is what makes the dense limit
+/// bitwise (`x * 1000 / 1000 == x`).
+pub fn scale_u64(count: u64, millis: u16) -> u64 {
+    count * millis as u64 / MILLIS_DENSE as u64
+}
+
+/// Deterministic statistics of one seeded Bernoulli value mask —
+/// the empirical counterpart of a nominal [`Density`], used by the
+/// `repro sparse` artifact to show the seeded masks track the closed
+/// forms (and by tests to pin the sampler's determinism).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MaskStats {
+    /// Number of mask positions sampled.
+    pub elems: u64,
+    /// Positions that came out non-zero.
+    pub nonzeros: u64,
+    /// Longest run of consecutive zeros (what column combining's
+    /// conflict budget has to cover).
+    pub longest_zero_run: u64,
+}
+
+impl MaskStats {
+    /// Empirical density of the mask, in thousandths (rounded to
+    /// nearest; integer arithmetic only).
+    pub fn density_millis(&self) -> u64 {
+        if self.elems == 0 {
+            return MILLIS_DENSE as u64;
+        }
+        (self.nonzeros * MILLIS_DENSE as u64 + self.elems / 2) / self.elems
+    }
+}
+
+/// Sample a seeded Bernoulli mask of `elems` positions at
+/// `density_millis` thousandths non-zero and fold it to [`MaskStats`]
+/// in one pass. Same seed, same stats — on any thread, any frontend:
+/// the stream is the crate's own SplitMix64 ([`crate::tensor::Rng`])
+/// and the fold order is the sample order.
+pub fn mask_stats(seed: u64, elems: u64, density_millis: u16) -> MaskStats {
+    let mut rng = Rng::new(seed);
+    let mut nonzeros = 0u64;
+    let mut run = 0u64;
+    let mut longest = 0u64;
+    for _ in 0..elems {
+        if rng.next_u64() % MILLIS_DENSE as u64 < density_millis as u64 {
+            nonzeros += 1;
+            run = 0;
+        } else {
+            run += 1;
+            longest = longest.max(run);
+        }
+    }
+    MaskStats { elems, nonzeros, longest_zero_run: longest }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domain_validation() {
+        assert!(Density::new(0, 500).is_err());
+        assert!(Density::new(500, 0).is_err());
+        assert!(Density::new(1001, 1000).is_err());
+        assert!(Density::new(1, 1000).is_ok());
+        Density::DENSE.validate().unwrap();
+        assert!(Density::DENSE.is_dense());
+    }
+
+    #[test]
+    fn fractions_are_exact_for_representable_values() {
+        let d = Density::new(250, 500).unwrap();
+        assert_eq!(d.weight_frac(), 0.25);
+        assert_eq!(d.act_frac(), 0.5);
+        assert_eq!(Density::DENSE.weight_frac(), 1.0);
+    }
+
+    #[test]
+    fn scaling_is_exact_at_either_dense_end() {
+        for w in [1u16, 77, 250, 999, 1000] {
+            let d = Density::new(w, w).unwrap();
+            assert_eq!(d.scaled_millis(1000), d, "scale by dense is identity");
+        }
+        let dense = Density::DENSE;
+        for s in [1usize, 125, 500, 1000] {
+            let got = dense.scaled_millis(s);
+            assert_eq!(got.weight_millis as usize, s.max(1), "dense scaled by s is s");
+        }
+        // Floor of 1: nothing ever scales to the degenerate 0.
+        assert_eq!(Density::new(1, 1).unwrap().scaled_millis(1).weight_millis, 1);
+    }
+
+    #[test]
+    fn mask_stats_deterministic_and_tracking() {
+        let a = mask_stats(42, 100_000, 250);
+        let b = mask_stats(42, 100_000, 250);
+        assert_eq!(a, b, "same seed, same stats");
+        assert_ne!(a, mask_stats(43, 100_000, 250), "seed matters");
+        // Empirical density tracks nominal within ±1 %.
+        assert!((a.density_millis() as i64 - 250).abs() < 10, "{a:?}");
+        assert!(a.longest_zero_run >= 3, "sparse masks have zero runs: {a:?}");
+        // Dense mask: every position non-zero, no runs.
+        let dense = mask_stats(7, 1000, 1000);
+        assert_eq!(dense.nonzeros, 1000);
+        assert_eq!(dense.longest_zero_run, 0);
+        assert_eq!(dense.density_millis(), 1000);
+        // Degenerate empty mask reads as dense.
+        assert_eq!(mask_stats(7, 0, 500).density_millis(), 1000);
+    }
+}

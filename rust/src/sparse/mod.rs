@@ -1,0 +1,131 @@
+//! **Data**-sparsity lowerings: weight/activation sparsity as a
+//! first-class workload dimension (DESIGN.md §14).
+//!
+//! The paper's own contribution eliminates *structural* zero-space —
+//! zeros that backpropagation geometry injects deterministically
+//! (closed forms in [`crate::im2col::sparsity`]). This subsystem models
+//! the orthogonal dimension: zeros in the *values* (pruned weights,
+//! ReLU-sparse activations), and two published systolic-array answers
+//! to them, evaluated as alternative lowerings next to the dense
+//! implicit/explicit paths:
+//!
+//! * [`column_combine`] — Kung et al.'s *column combining* (arXiv
+//!   1811.04770): pack sparse filter columns under a conflict budget so
+//!   the array's PEs stay busy, at the price of per-element select
+//!   indices.
+//! * [`spots`] — a SPOTS-style pipeline (arXiv 2107.13386): an im2col
+//!   unit feeding a sparse GEMM core that skips zero operand pairs,
+//!   with compressed operand traffic and bitmap metadata.
+//!
+//! Density itself is the per-layer [`Density`] knob on
+//! [`crate::conv::ConvParams`] (fixed-point thousandths, so layer
+//! identity stays `Copy + Eq + Hash` and specs round-trip exactly),
+//! composed multiplicatively with the config-level
+//! [`crate::accel::AccelConfig::density_millis`] sweep axis.
+//!
+//! Everything here is closed-form integer/f64 arithmetic with a fixed
+//! evaluation order — bit-deterministic across threads and frontends —
+//! and every form degenerates *exactly* to the dense pipeline at
+//! density 1.000 (the dense-limit identity `tests/sparse.rs` sweeps).
+
+pub mod column_combine;
+pub mod density;
+pub mod spots;
+
+pub use density::{mask_stats, scale_u64, Density, MaskStats, MILLIS_DENSE};
+
+/// How a layer's GEMMs are lowered onto the array with respect to
+/// **data** sparsity. Orthogonal to [`crate::im2col::pipeline::Mode`]
+/// (explicit vs implicit *structural* lowering): every combination of
+/// mode and sparse lowering is a valid design point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum SparseLowering {
+    /// Stream every value, zero or not — the paper's evaluated design.
+    #[default]
+    Dense,
+    /// Kung-style column combining: pack sparse weight columns under a
+    /// conflict budget ([`column_combine`]).
+    ColumnCombine,
+    /// SPOTS-style im2col + sparse-GEMM pipeline skipping zero operand
+    /// pairs ([`spots`]).
+    Spots,
+}
+
+impl SparseLowering {
+    /// All lowerings, in wire-code order.
+    pub const ALL: [SparseLowering; 3] =
+        [SparseLowering::Dense, SparseLowering::ColumnCombine, SparseLowering::Spots];
+
+    /// Stable lowercase name (CLI/wire form).
+    pub const fn name(self) -> &'static str {
+        match self {
+            SparseLowering::Dense => "dense",
+            SparseLowering::ColumnCombine => "cc",
+            SparseLowering::Spots => "spots",
+        }
+    }
+
+    /// Human label for table rows.
+    pub const fn label(self) -> &'static str {
+        match self {
+            SparseLowering::Dense => "dense",
+            SparseLowering::ColumnCombine => "column-combine",
+            SparseLowering::Spots => "spots",
+        }
+    }
+
+    /// Integer wire/axis code (the DSE `lowering` axis value).
+    pub const fn code(self) -> u8 {
+        match self {
+            SparseLowering::Dense => 0,
+            SparseLowering::ColumnCombine => 1,
+            SparseLowering::Spots => 2,
+        }
+    }
+
+    /// Inverse of [`SparseLowering::code`].
+    pub fn from_code(code: u64) -> Result<Self, String> {
+        match code {
+            0 => Ok(SparseLowering::Dense),
+            1 => Ok(SparseLowering::ColumnCombine),
+            2 => Ok(SparseLowering::Spots),
+            other => Err(format!("sparse lowering code must be 0..=2, got {other}")),
+        }
+    }
+
+    /// Parse a CLI/config spelling. Accepts the short wire names plus
+    /// the long `column-combine` alias; strict otherwise.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "dense" => Ok(SparseLowering::Dense),
+            "cc" | "column-combine" => Ok(SparseLowering::ColumnCombine),
+            "spots" => Ok(SparseLowering::Spots),
+            other => Err(format!(
+                "unknown sparse lowering {other:?} (supported: dense, cc, column-combine, spots)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_and_names_round_trip() {
+        for l in SparseLowering::ALL {
+            assert_eq!(SparseLowering::from_code(l.code() as u64).unwrap(), l);
+            assert_eq!(SparseLowering::parse(l.name()).unwrap(), l);
+        }
+        assert_eq!(SparseLowering::parse("column-combine").unwrap(), SparseLowering::ColumnCombine);
+        assert!(SparseLowering::from_code(3).is_err());
+        assert!(SparseLowering::parse("CC").is_err(), "names are case-sensitive");
+        assert!(SparseLowering::parse("").is_err());
+    }
+
+    #[test]
+    fn default_is_dense() {
+        assert_eq!(SparseLowering::default(), SparseLowering::Dense);
+        assert_eq!(SparseLowering::ALL[0], SparseLowering::Dense);
+    }
+}

@@ -1,0 +1,110 @@
+//! SPOTS-style sparse systolic GEMM (arXiv 2107.13386): an im2col unit
+//! pipelined with a GEMM core that **skips zero operand pairs**.
+//!
+//! SPOTS keeps the lowering implicit (an on-chip im2col unit feeds the
+//! array — the same move BP-im2col makes for backpropagation geometry)
+//! and adds value-sparsity support: operands stream compressed with a
+//! per-tile bitmap, and a PE only fires when *both* its operands are
+//! non-zero. This model captures that as closed-form factors over the
+//! dense pipeline's tiling:
+//!
+//! * **compute** scales with the probability that an operand pair is
+//!   non-zero (`d_A · d_B`), floored by the array's streaming limit —
+//!   skipping cannot collapse a systolic wavefront below one column
+//!   per cycle ([`compute_factor`]);
+//! * **buffer reads** scale per operand with its density (only
+//!   non-zeros are fetched from the compressed store,
+//!   [`scale_count`]);
+//! * **off-chip traffic** per operand is the compressed values
+//!   ([`compressed_bytes`]) plus a one-bit-per-element occupancy
+//!   bitmap ([`bitmap_bytes`]).
+//!
+//! Every form is pure integer arithmetic or a multiplication by a
+//! factor that is **exactly 1.0** at density 1.000 — the encoder emits
+//! dense tiles when a tile has no zeros, so bitmap and skip hardware
+//! cost nothing — which is what makes the dense-limit identity bitwise
+//! (`x * 1000 / 1000 == x` in u64; the factor branch returns before
+//! any f64 rounding can intervene).
+
+use crate::sparse::density::{scale_u64, MILLIS_DENSE};
+
+/// Fraction of dense compute cycles the skipping core still spends:
+/// the non-zero pair probability `d_A · d_B`, floored at `1 / lanes`
+/// (the wavefront still advances one column per cycle even if every
+/// pair in it is skippable). Returns exactly `1.0` when both operands
+/// are dense.
+pub fn compute_factor(a_millis: u16, b_millis: u16, lanes: usize) -> f64 {
+    if a_millis >= MILLIS_DENSE && b_millis >= MILLIS_DENSE {
+        return 1.0;
+    }
+    let pair = (a_millis as f64 / MILLIS_DENSE as f64) * (b_millis as f64 / MILLIS_DENSE as f64);
+    let floor = 1.0 / lanes.max(1) as f64;
+    if pair < floor {
+        floor
+    } else {
+        pair
+    }
+}
+
+/// Scale an integer event count (buffer reads) by a density: only the
+/// non-zeros of a compressed operand are fetched. Floor division —
+/// exact at density 1000.
+pub fn scale_count(count: u64, millis: u16) -> u64 {
+    scale_u64(count, millis)
+}
+
+/// Compressed operand value bytes: the dense bytes scaled by density.
+/// Floor division — exact at density 1000.
+pub fn compressed_bytes(dense_bytes: u64, millis: u16) -> u64 {
+    scale_u64(dense_bytes, millis)
+}
+
+/// Occupancy-bitmap sideband for one operand: one bit per (dense)
+/// element, byte-rounded — and exactly 0 for a dense operand, whose
+/// tiles ship in plain dense form.
+pub fn bitmap_bytes(dense_elems: u64, millis: u16) -> u64 {
+    if millis >= MILLIS_DENSE {
+        0
+    } else {
+        (dense_elems + 7) / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_factors_are_exact_identities() {
+        assert_eq!(compute_factor(1000, 1000, 16), 1.0);
+        assert_eq!(scale_count(123_456_789, 1000), 123_456_789);
+        assert_eq!(compressed_bytes(u64::MAX / 1000, 1000), u64::MAX / 1000);
+        assert_eq!(bitmap_bytes(1 << 40, 1000), 0);
+    }
+
+    #[test]
+    fn pair_probability_and_floor() {
+        // 0.5 * 0.5 = 0.25 of dense compute.
+        assert!((compute_factor(500, 500, 16) - 0.25).abs() < 1e-12);
+        // One sparse side is enough to scale.
+        assert!((compute_factor(1000, 250, 16) - 0.25).abs() < 1e-12);
+        // The streaming floor: 0.01 * 0.01 = 1e-4 clamps to 1/16.
+        assert_eq!(compute_factor(10, 10, 16), 1.0 / 16.0);
+        // Degenerate lane count still well-defined.
+        assert_eq!(compute_factor(10, 10, 0), 1.0);
+    }
+
+    #[test]
+    fn scaling_is_monotone_and_floored() {
+        assert_eq!(scale_count(1000, 250), 250);
+        assert_eq!(scale_count(999, 500), 499, "floor division");
+        assert!(compressed_bytes(4096, 250) < compressed_bytes(4096, 500));
+    }
+
+    #[test]
+    fn bitmap_is_one_bit_per_element_when_sub_dense() {
+        assert_eq!(bitmap_bytes(8, 999), 1);
+        assert_eq!(bitmap_bytes(9, 500), 2);
+        assert_eq!(bitmap_bytes(0, 500), 0);
+    }
+}

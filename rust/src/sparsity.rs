@@ -1,0 +1,31 @@
+//! One facade over the crate's **two distinct notions of sparsity**,
+//! so callers pick explicitly and can't confuse them:
+//!
+//! * [`structural`] — zeros that backpropagation **geometry** injects
+//!   deterministically: the zero-insertions (forward stride) and
+//!   zero-paddings of the loss map that make the lowered backward
+//!   matrices 75–94 % zeros. Position is a pure function of the layer
+//!   shape — no data inspection, no metadata, no probability. These
+//!   are the paper's own closed forms
+//!   ([`crate::im2col::sparsity`]), and eliminating this zero-space
+//!   is what BP-im2col *is*.
+//! * [`data`] — zeros in the **values**: pruned weights, ReLU-sparse
+//!   activations ([`crate::sparse`]). Positions are data-dependent, so
+//!   exploiting them costs indices/bitmaps and select hardware; the
+//!   [`crate::sparse::SparseLowering`] variants model two published
+//!   designs that pay that cost.
+//!
+//! The two compose: a pruned network still backpropagates through
+//! strided layers, so a sub-dense layer under BP-im2col sees *both*
+//! the structural skip and the data-sparsity lowering. `PassMetrics`
+//! reports the structural fraction in its `sparsity` field; data
+//! density arrives through [`crate::conv::ConvParams::density`] and
+//! the config's lowering knobs.
+
+/// The paper's *structural* zero-space closed forms
+/// (re-export of [`crate::im2col::sparsity`]).
+pub use crate::im2col::sparsity as structural;
+
+/// The *data*-sparsity subsystem: density knob and sparse lowerings
+/// (re-export of [`crate::sparse`]).
+pub use crate::sparse as data;

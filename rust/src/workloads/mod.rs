@@ -159,6 +159,55 @@ pub fn extended_networks() -> Vec<Network> {
     nets
 }
 
+/// Pruned/sparse variants of three representative networks — the
+/// workload set of the sparse-lowering artifact (`repro sparse`).
+/// Geometries are identical to the dense tables above; each layer just
+/// carries a nominal value [`crate::sparse::Density`] (fixed-point
+/// thousandths: weight = kernel after magnitude pruning, act =
+/// ReLU-sparse loss/activation maps), at published-scale operating
+/// points. Kept separate from [`all_networks`]/[`extended_networks`]
+/// so every figure over the paper's dense workloads is untouched.
+pub fn sparse_networks() -> Vec<Network> {
+    fn prune(net: Network, name: &'static str, w: u16, a: u16) -> Network {
+        Network {
+            name,
+            layers: net
+                .layers
+                .into_iter()
+                .map(|l| WorkloadLayer { params: l.params.with_density(w, a), ..l })
+                .collect(),
+        }
+    }
+    vec![
+        // Deep-compression-scale (~4x) conv pruning on the AlexNet stem.
+        prune(alexnet(), "AlexNet-p", 250, 600),
+        // Moderate 2x pruning across ResNet's strided layers.
+        prune(resnet(), "ResNet-p", 500, 600),
+        // Depthwise stages resist weight pruning; ReLU sparsity carries.
+        prune(mobilenet(), "MobileNet-p", 750, 500),
+    ]
+}
+
+/// [`sparse_networks`] plus pruned variants of the two
+/// generalized-geometry networks (dilated DeepLab-style, grouped
+/// ResNeXt-style) — sparse lowering composed with dilation and groups.
+pub fn extended_sparse_networks() -> Vec<Network> {
+    fn prune(net: Network, name: &'static str, w: u16, a: u16) -> Network {
+        Network {
+            name,
+            layers: net
+                .layers
+                .into_iter()
+                .map(|l| WorkloadLayer { params: l.params.with_density(w, a), ..l })
+                .collect(),
+        }
+    }
+    let mut nets = sparse_networks();
+    nets.push(prune(deeplab(), "DeepLab-p", 500, 500));
+    nets.push(prune(resnext(), "ResNeXt-p", 500, 500));
+    nets
+}
+
 /// The five layers of Table II, in row order
 /// (`Hi(Wi)/C/N/Kh(Kw)/S/Ph(Pw)` notation).
 pub fn table2_layers() -> [ConvParams; 5] {
@@ -264,6 +313,29 @@ mod tests {
     fn six_networks_in_legend_order() {
         let names: Vec<_> = all_networks().iter().map(|n| n.name).collect();
         assert_eq!(names, ["AlexNet", "DenseNet", "MobileNet", "ResNet", "ShuffleNet", "SqueezeNet"]);
+    }
+
+    #[test]
+    fn sparse_networks_are_sub_dense_twins_of_the_dense_tables() {
+        let nets = sparse_networks();
+        assert_eq!(nets.len(), 3);
+        for net in &nets {
+            assert!(net.name.ends_with("-p"), "{}", net.name);
+            for l in &net.layers {
+                l.params.validate().unwrap_or_else(|e| panic!("{}/{}: {e}", net.name, l.name));
+                assert!(!l.params.density.is_dense(), "{}/{}", net.name, l.name);
+                // Density rides the layer id, so wire specs and plan
+                // keys distinguish the pruned twin from the dense layer.
+                assert!(l.params.id().contains("/w") || l.params.id().contains("/a"));
+                assert_eq!(l.params.b, 2, "paper batch size");
+            }
+        }
+        // Geometry (and only geometry) matches the dense tables.
+        let dense = alexnet();
+        assert_eq!(nets[0].layers.len(), dense.layers.len());
+        let mut undensed = nets[0].layers[0].params;
+        undensed.density = crate::sparse::Density::DENSE;
+        assert_eq!(undensed, dense.layers[0].params);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use bp_im2col::accel::AccelConfig;
 use bp_im2col::api::{render_all_json, DseRequest, Service, SimRequest};
 use bp_im2col::dse::objective::{dominates, pareto_ranks, NUM_OBJECTIVES};
 use bp_im2col::dse::search;
-use bp_im2col::dse::space::{parse_point_spec, point_spec};
+use bp_im2col::dse::space::{fmt_milli, parse_point_spec, point_spec, SpaceSpec, AXIS_NAMES, NUM_AXES};
 use bp_im2col::server::Server;
 use bp_im2col::tensor::Rng;
 use bp_im2col::ConvParams;
@@ -199,6 +199,77 @@ fn dse_codec_round_trips_axes_workloads_and_options() {
         let decoded = SimRequest::from_json(&encoded).unwrap_or_else(|e| panic!("{encoded}: {e}"));
         assert_eq!(decoded, req, "{encoded}");
         assert!(req.validate().is_ok(), "{encoded}");
+    }
+}
+
+#[test]
+fn axis_and_point_spec_strings_round_trip_over_seeded_random_spaces() {
+    // Raw integer domain of each axis, in AXIS_NAMES order, inside the
+    // bounds SpaceSpec::validate enforces. Milli-valued axes (rates,
+    // cycle costs, density) are quantized to 1/8 steps: 0.125 is exact
+    // in f64, so every generated value survives the AccelConfig f64
+    // round-trip bit-exactly and `indices_of_config` must recover the
+    // exact grid coordinate.
+    const DOMAINS: [(u64, u64); NUM_AXES] = [
+        (1, 16),       // array_dim
+        (125, 16_000), // elems_per_cycle (millis)
+        (0, 8_000),    // burst_overhead (millis)
+        (1, 512),      // burst_len
+        (1, 65_536),   // buf_a_half
+        (1, 65_536),   // buf_b_half
+        (0, 8_000),    // reorg_cycles_per_elem (millis)
+        (0, 1),        // sparse_skip
+        (125, 1_000),  // density (millis)
+        (0, 2),        // lowering
+    ];
+    const MILLI_QUANTUM: u64 = 125;
+    let is_milli = |i: usize| matches!(i, 1 | 2 | 6 | 8);
+    let mut rng = Rng::new(0xa51e_0008);
+    for round in 0..200 {
+        let mut spec = SpaceSpec::default();
+        for i in 0..NUM_AXES {
+            // Generate in quantum units, then scale back to raw values.
+            let q = if is_milli(i) { MILLI_QUANTUM } else { 1 };
+            let (dlo, dhi) = (DOMAINS[i].0.div_ceil(q), DOMAINS[i].1 / q);
+            let lo = dlo + rng.below((dhi - dlo + 1) as usize) as u64;
+            let count = 1 + rng.below(4) as u64;
+            let max_step = if count > 1 { (dhi - lo) / (count - 1) } else { 0 };
+            let s = if count == 1 || max_step == 0 {
+                // Degenerate span: the single-value form.
+                if is_milli(i) { fmt_milli(lo * q) } else { (lo * q).to_string() }
+            } else {
+                let step = 1 + rng.below(max_step as usize) as u64;
+                let (lo, hi, step) = (lo * q, (lo + step * (count - 1)) * q, step * q);
+                if is_milli(i) {
+                    format!("{}:{}:{}", fmt_milli(lo), fmt_milli(hi), fmt_milli(step))
+                } else {
+                    format!("{lo}:{hi}:{step}")
+                }
+            };
+            spec.set_axis(AXIS_NAMES[i], &s)
+                .unwrap_or_else(|e| panic!("round {round} axis {}: {s:?}: {e}", AXIS_NAMES[i]));
+        }
+        spec.validate().unwrap_or_else(|e| panic!("round {round}: {e}"));
+
+        // Every axis string round-trips into an identical space.
+        let mut again = SpaceSpec::default();
+        for i in 0..NUM_AXES {
+            let s = spec.axis_string(i);
+            again
+                .set_axis(AXIS_NAMES[i], &s)
+                .unwrap_or_else(|e| panic!("round {round} axis {}: {s:?}: {e}", AXIS_NAMES[i]));
+        }
+        assert_eq!(again.axes(), spec.axes(), "round {round}");
+
+        // A random grid point round-trips through its spec string and
+        // back to its exact grid coordinate.
+        let rank = rng.next_u64() % spec.grid_size() as u64;
+        let indices = spec.indices_of_rank(rank);
+        let cfg = spec.config_at(indices);
+        let ps = point_spec(&cfg);
+        let back = parse_point_spec(&ps).unwrap_or_else(|e| panic!("round {round} {ps:?}: {e}"));
+        assert_eq!(point_spec(&back), ps, "round {round}");
+        assert_eq!(spec.indices_of_config(&cfg), Some(indices), "round {round} rank {rank}");
     }
 }
 

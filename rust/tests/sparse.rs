@@ -1,0 +1,226 @@
+//! Sparse-lowering acceptance suite (ISSUE 8):
+//!
+//! 1. **Dense-limit identity**: a density-1.000 layer under column
+//!    combining or SPOTS reproduces the dense pipeline's `PassMetrics`
+//!    **bit-exactly**, over 50+ seeded random geometries, both passes,
+//!    both structural modes.
+//! 2. At least one sub-dense configuration beats the dense implicit
+//!    lowering on runtime or buffer reads (the reason the subsystem
+//!    exists).
+//! 3. Sparse design points served through the DSE are bit-deterministic
+//!    across 1/4/8 evaluation threads, and lowering-only sweeps at
+//!    density 1.0 coincide exactly with the dense baseline points.
+//! 4. The `repro sparse` CLI command and `POST /v1/query
+//!    {"kind":"sparse"}` serve byte-identical documents, and repeats
+//!    are byte-identical again.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::process::Command;
+use std::sync::Arc;
+use std::thread;
+
+use bp_im2col::accel::plan::PlanCache;
+use bp_im2col::accel::timing::simulate_pass;
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{render_all_json, DseRequest, Service, SimRequest};
+use bp_im2col::dse::objective::NUM_OBJECTIVES;
+use bp_im2col::dse::search;
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::server::Server;
+use bp_im2col::sparse::SparseLowering;
+use bp_im2col::tensor::Rng;
+use bp_im2col::ConvParams;
+
+/// Seeded random layer geometry inside the model's validated envelope
+/// (small enough that every pass's dynamic panel fits the default
+/// buffer A half).
+fn random_geometry(rng: &mut Rng) -> ConvParams {
+    let hi = 6 + rng.below(58);
+    let c = 1 + rng.below(64);
+    let n = 1 + rng.below(64);
+    let k = 1 + rng.below(3);
+    let s = 1 + rng.below(3);
+    let pad = rng.below(k);
+    let mut p = ConvParams::square(hi, c, n, k, s, pad);
+    // A third of the geometries exercise the generalized forms too.
+    match rng.below(6) {
+        0 => {
+            let g = [2, 4][rng.below(2)];
+            if c % g == 0 && n % g == 0 {
+                p = p.with_groups(g);
+            }
+        }
+        1 => p = p.with_dilation(1 + rng.below(2), 1 + rng.below(2)),
+        _ => {}
+    }
+    p
+}
+
+#[test]
+fn dense_density_reproduces_dense_metrics_bitwise_for_seeded_geometries() {
+    let dense_cfg = AccelConfig::default();
+    let mut rng = Rng::new(0x5ea5_0008);
+    let mut tested = 0usize;
+    while tested < 50 {
+        let p = random_geometry(&mut rng);
+        if p.validate().is_err() {
+            continue;
+        }
+        tested += 1;
+        for lowering in [SparseLowering::ColumnCombine, SparseLowering::Spots] {
+            let cfg = AccelConfig { lowering, ..dense_cfg };
+            for pass in Pass::ALL {
+                for mode in Mode::ALL {
+                    assert_eq!(
+                        simulate_pass(pass, mode, &p, &cfg),
+                        simulate_pass(pass, mode, &p, &dense_cfg),
+                        "geometry {} ({tested}): {} under {:?}/{mode:?} drifts at density 1.000",
+                        p.id(),
+                        lowering.name(),
+                        pass,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sub_dense_lowerings_beat_dense_on_runtime_or_reads() {
+    // 75 % pruned weights, 50 % ReLU zeros — a realistic pruned layer.
+    let p = ConvParams::square(56, 128, 128, 3, 2, 1).with_density(250, 500);
+    let dense = simulate_pass(Pass::Loss, Mode::BpIm2col, &p, &AccelConfig::default());
+
+    // Column combining packs the loss GEMM's weight columns 4:1: fewer
+    // compute cycles and less weight traffic, at an index-metadata cost.
+    let cc_cfg =
+        AccelConfig { lowering: SparseLowering::ColumnCombine, ..AccelConfig::default() };
+    let cc = simulate_pass(Pass::Loss, Mode::BpIm2col, &p, &cc_cfg);
+    assert!(
+        cc.compute_cycles < dense.compute_cycles,
+        "cc {} !< dense {}",
+        cc.compute_cycles,
+        dense.compute_cycles
+    );
+    assert!(cc.traffic.a_bytes < dense.traffic.a_bytes);
+    assert!(cc.traffic.meta_bytes > dense.traffic.meta_bytes, "indices are not free");
+
+    // SPOTS skips zero operand pairs: fewer buffer reads and compressed
+    // operand traffic, on both passes.
+    let spots_cfg = AccelConfig { lowering: SparseLowering::Spots, ..AccelConfig::default() };
+    for pass in Pass::ALL {
+        let base = simulate_pass(pass, Mode::BpIm2col, &p, &AccelConfig::default());
+        let sp = simulate_pass(pass, Mode::BpIm2col, &p, &spots_cfg);
+        assert!(
+            sp.buffer_a_reads + sp.buffer_b_reads < base.buffer_a_reads + base.buffer_b_reads,
+            "{pass:?}: spots reads not below dense"
+        );
+        assert!(sp.compute_cycles < base.compute_cycles, "{pass:?}");
+        assert!(sp.traffic.total() < base.traffic.total(), "{pass:?}");
+        assert_eq!(sp.macs, base.macs, "virtual work is lowering-invariant");
+    }
+}
+
+#[test]
+fn lowering_sweep_at_dense_density_coincides_with_the_dense_baseline() {
+    // Sweep only the lowering axis (density stays 1.0): for every
+    // platform combination, the three lowering variants must score
+    // identically on every objective — the select/skip datapath is
+    // idle and synthesized away at the dense operating point.
+    let mut req = DseRequest::new().budget(96).seed(3);
+    req.space.set_axis("lowering", "0:2:1").unwrap();
+    let result = search::run(&req, &AccelConfig::default(), &Arc::new(PlanCache::new()));
+    assert!(!result.points.is_empty());
+    let mut groups: std::collections::HashMap<String, Vec<[f64; NUM_OBJECTIVES]>> =
+        std::collections::HashMap::new();
+    for p in &result.points {
+        let (base, lowering) = p.spec.rsplit_once("/p").expect("spec has a lowering part");
+        assert!(["0", "1", "2"].contains(&lowering), "{}", p.spec);
+        groups.entry(base.to_string()).or_default().push(p.obj.as_array());
+    }
+    let mut full_groups = 0;
+    for (base, scores) in &groups {
+        for s in &scores[1..] {
+            assert_eq!(s, &scores[0], "{base}: lowerings disagree at density 1.0");
+        }
+        if scores.len() == 3 {
+            full_groups += 1;
+        }
+    }
+    assert!(full_groups > 0, "the sweep covered at least one platform under all lowerings");
+}
+
+#[test]
+fn sparse_dse_frontier_is_byte_identical_across_1_4_8_devices() {
+    let request = |devices: usize| -> SimRequest {
+        let mut req = DseRequest::new().budget(64).seed(7).devices(devices);
+        req.space.set_axis("density", "0.25:1:0.25").unwrap();
+        req.space.set_axis("lowering", "0:2:1").unwrap();
+        req.into()
+    };
+    let reference = {
+        let svc = Service::new(AccelConfig::default());
+        render_all_json(&svc.run(&request(1)))
+    };
+    assert!(reference.contains("\"rank\""), "frontier is non-empty: {reference}");
+    for devices in [4, 8] {
+        let svc = Service::new(AccelConfig::default());
+        let got = render_all_json(&svc.run(&request(devices)));
+        assert_eq!(got, reference, "devices {devices}");
+        // Warm replay through the same service: still identical bytes.
+        assert_eq!(render_all_json(&svc.run(&request(devices))), reference);
+    }
+}
+
+/// Minimal HTTP client: one POST, read to EOF (Connection: close).
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read");
+    let text = String::from_utf8(raw).expect("utf-8 response");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn cli_and_http_serve_identical_sparse_documents() {
+    // CLI: `repro sparse --json`, twice — byte-identical runs.
+    let run_cli = || {
+        let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(["sparse", "--json"])
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .expect("binary runs");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8(out.stdout).expect("utf-8 stdout")
+    };
+    let cli = run_cli();
+    assert_eq!(run_cli(), cli, "repeated CLI runs are byte-identical");
+    assert!(cli.contains("\"reads_vs_dense\""), "{cli}");
+
+    // HTTP: the same request through POST /v1/query.
+    let server = Server::bind(AccelConfig::default(), "127.0.0.1:0", 2).expect("bind");
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.serve().expect("serve"));
+    let (status, http) = http_post(addr, "/v1/query", "{\"kind\":\"sparse\"}");
+    assert_eq!(status, 200, "{http}");
+    // Repeat comes from the artifact cache: byte-identical again.
+    let (_, http2) = http_post(addr, "/v1/query", "{\"kind\":\"sparse\"}");
+    assert_eq!(http2, http);
+    let (_, _) = http_post(addr, "/v1/shutdown", "{}");
+    handle.join().expect("clean shutdown");
+
+    // The CLI prints the same JSON document plus a trailing newline.
+    assert_eq!(cli, format!("{http}\n"));
+}
