@@ -46,7 +46,7 @@ def main():
         status, body = request(base, "/v1/requests")
         catalog = json.loads(body)
         kinds = {shape["kind"] for shape in catalog["requests"]}
-        assert "table2" in kinds and "fleet" in kinds, kinds
+        assert "table2" in kinds and "fleet" in kinds and "autotune" in kinds, kinds
 
         status, body = request(base, "/v1/query", {"kind": "table3"})
         doc = json.loads(body)
@@ -86,11 +86,31 @@ def main():
         status, body2 = request(base, "/v1/query", {"kind": "sparse"})
         assert body2 == body, "repeated sparse query must be byte-identical"
 
+        # Autotune: the per-layer lowering-strategy decision record, with
+        # a mix note, byte-identical on repeat — and the devices knob is
+        # a fleet cross-check that must not change the artifact bytes.
+        status, body = request(base, "/v1/query", {"kind": "autotune"})
+        doc = json.loads(body)
+        assert status == 200 and doc["artifacts"][0]["name"] == "autotune", (status, doc)
+        notes = doc["artifacts"][0]["notes"]
+        assert any(n.startswith("mix: ") for n in notes), notes
+        assert any("win margin" in n for n in notes), notes
+        status, body2 = request(base, "/v1/query", {"kind": "autotune"})
+        assert body2 == body, "repeated autotune query must be byte-identical"
+        status, body2 = request(base, "/v1/query", {"kind": "autotune", "devices": 2})
+        doc2 = json.loads(body2)
+        assert doc2["artifacts"][0]["rows"] == doc["artifacts"][0]["rows"], (
+            "autotune devices cross-check must not change the rows"
+        )
+
         status, body = request(base, "/metrics")
         text = body.decode()
         for needle in (
-            'bp_server_requests_total{route="query"} 6',
-            "bp_artifact_cache_hits_total 3",
+            'bp_server_requests_total{route="query"} 9',
+            # One hit per repeat (table3/dse/sparse/autotune) plus the
+            # devices-variant autotune query, whose cache key normalizes
+            # the fleet cross-check knob away.
+            "bp_artifact_cache_hits_total 5",
             "bp_artifact_cache_evictions_total 0",
             "bp_plan_cache_entries",
             "bp_server_request_duration_us_bucket",
@@ -129,7 +149,10 @@ def main():
         assert status == 200, status
         code = proc.wait(timeout=60)
         assert code == 0, f"server exited with {code}"
-        print("server smoke OK: query/batch/dse/sparse/metrics round-trips + clean shutdown")
+        print(
+            "server smoke OK: query/batch/dse/sparse/autotune/metrics "
+            "round-trips + clean shutdown"
+        )
     finally:
         # Kill quietly if still alive; the propagating exception (an
         # assertion or the wait() timeout) already names the real

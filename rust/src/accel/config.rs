@@ -1,5 +1,6 @@
 //! Accelerator configuration (the paper's TPU-like platform).
 
+use crate::accel::strategy::{AutoObjective, LoweringSelect};
 use crate::sim::dram::DramModel;
 use crate::sparse::SparseLowering;
 
@@ -44,6 +45,19 @@ pub struct AccelConfig {
     /// [`crate::sparse::Density`] — the DSE `density` axis. 1000
     /// (dense, the default) is the exact identity.
     pub density_millis: usize,
+    /// How the planner picks the **structural** lowering strategy per
+    /// layer/pass (DESIGN.md §15): a fixed
+    /// [`crate::accel::strategy::LoweringStrategy`] for every layer
+    /// (default: the paper's BP-im2col), or `auto` — score every
+    /// strategy per `(layer, pass)` and take the minimum under
+    /// [`AccelConfig::objective`]. The CLI `--lowering-strategy` /
+    /// config-file `lowering_strategy` knob and the DSE
+    /// `lowering_strategy` axis.
+    pub strategy: LoweringSelect,
+    /// Cost function the `auto` strategy selection minimizes (config
+    /// file key `objective`; default runtime). Inert under a fixed
+    /// strategy.
+    pub objective: AutoObjective,
 }
 
 impl Default for AccelConfig {
@@ -59,6 +73,8 @@ impl Default for AccelConfig {
             sparse_skip: false,
             lowering: SparseLowering::Dense,
             density_millis: 1000,
+            strategy: LoweringSelect::default(),
+            objective: AutoObjective::default(),
         }
     }
 }
@@ -87,6 +103,11 @@ mod tests {
         // density scaling.
         assert_eq!(c.lowering, SparseLowering::Dense);
         assert_eq!(c.density_millis, 1000);
+        // And lowers everything with BP-im2col under the runtime
+        // objective (the autotuner is opt-in).
+        use crate::accel::strategy::LoweringStrategy;
+        assert_eq!(c.strategy, LoweringSelect::Fixed(LoweringStrategy::BpIm2col));
+        assert_eq!(c.objective, AutoObjective::Runtime);
     }
 
     #[test]

@@ -79,6 +79,14 @@ pub fn parse(text: &str) -> Result<AccelConfig, ConfigError> {
                     .map_err(|e| ConfigError::new(format!("line {}: {e}", lineno + 1)))?
             }
             "density_millis" => cfg.density_millis = value.parse().map_err(|_| bad())?,
+            "lowering_strategy" => {
+                cfg.strategy = crate::accel::strategy::LoweringSelect::parse(value)
+                    .map_err(|e| ConfigError::new(format!("line {}: {e}", lineno + 1)))?
+            }
+            "objective" => {
+                cfg.objective = crate::accel::strategy::AutoObjective::parse(value)
+                    .map_err(|e| ConfigError::new(format!("line {}: {e}", lineno + 1)))?
+            }
             other => {
                 return Err(ConfigError::new(format!("line {}: unknown key {other:?}", lineno + 1)))
             }
@@ -109,7 +117,9 @@ pub fn render(cfg: &AccelConfig) -> String {
          reorg_cycles_per_elem = {}\n\
          sparse_skip = {}\n\
          lowering = {}\n\
-         density_millis = {}\n",
+         density_millis = {}\n\
+         lowering_strategy = {}\n\
+         objective = {}\n",
         cfg.array_dim,
         cfg.dram.elems_per_cycle,
         cfg.dram.burst_overhead,
@@ -120,6 +130,8 @@ pub fn render(cfg: &AccelConfig) -> String {
         cfg.sparse_skip,
         cfg.lowering.name(),
         cfg.density_millis,
+        cfg.strategy.name(),
+        cfg.objective.name(),
     )
 }
 
@@ -268,6 +280,21 @@ mod tests {
     }
 
     #[test]
+    fn strategy_and_objective_keys_parse() {
+        use crate::accel::strategy::{AutoObjective, LoweringSelect, LoweringStrategy};
+        let cfg = parse("lowering_strategy = auto\nobjective = traffic\n").unwrap();
+        assert_eq!(cfg.strategy, LoweringSelect::Auto);
+        assert_eq!(cfg.objective, AutoObjective::Traffic);
+        let cfg = parse("lowering_strategy = eco-os\n").unwrap();
+        assert_eq!(cfg.strategy, LoweringSelect::Fixed(LoweringStrategy::EcoOutputStationary));
+        // Defaults when the keys are absent: the paper's fixed BP-im2col
+        // under the runtime objective.
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.strategy, LoweringSelect::default());
+        assert_eq!(cfg.objective, AutoObjective::Runtime);
+    }
+
+    #[test]
     fn comments_and_blank_lines_ignored() {
         let cfg = parse("\n# comment\narray_dim = 4 # trailing\n\n").unwrap();
         assert_eq!(cfg.array_dim, 4);
@@ -351,6 +378,8 @@ mod tests {
             assert_eq!(back.sparse_skip, cfg.sparse_skip, "{}", path.display());
             assert_eq!(back.lowering, cfg.lowering, "{}", path.display());
             assert_eq!(back.density_millis, cfg.density_millis, "{}", path.display());
+            assert_eq!(back.strategy, cfg.strategy, "{}", path.display());
+            assert_eq!(back.objective, cfg.objective, "{}", path.display());
             // Rendering is idempotent.
             assert_eq!(render(&back), text, "{}", path.display());
         }
@@ -379,6 +408,8 @@ mod tests {
             ("density_millis = 0", "line 1", "1..=1000"),
             ("density_millis = 1001", "line 1", "1..=1000"),
             ("lowering = nope", "line 1", "unknown sparse lowering"),
+            ("lowering_strategy = nope", "line 1", "unknown lowering strategy"),
+            ("objective = nope", "line 1", "unknown autotune objective"),
         ] {
             let err = parse(text).unwrap_err();
             let msg = format!("{err:#}");

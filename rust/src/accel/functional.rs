@@ -108,9 +108,12 @@ pub fn loss_calc_on_array(
     t: usize,
 ) -> (Tensor4, u64) {
     let shape = GemmShape::from_pass(Pass::Loss, p);
+    // Every implicit strategy (BP and the EcoFlow scatters) maps the
+    // same compact-tensor addresses — the dataflows differ in cycle
+    // cost only, never in the math.
     let dyz = match mode {
         Mode::Traditional => Some(reorg::dilate_pad_loss(dy, p)),
-        Mode::BpIm2col => None,
+        Mode::BpIm2col | Mode::EcoOutputStationary | Mode::EcoInputStationary => None,
     };
     let mut dx = Tensor4::zeros([p.b, p.c, p.hi, p.wi]);
     let mut cycles = 0u64;
@@ -140,7 +143,7 @@ pub fn grad_calc_on_array(
     let shape = GemmShape::from_pass(Pass::Grad, p);
     let dyd = match mode {
         Mode::Traditional => Some(reorg::dilate_loss(dy, p)),
-        Mode::BpIm2col => None,
+        Mode::BpIm2col | Mode::EcoOutputStationary | Mode::EcoInputStationary => None,
     };
     let xpad = reorg::pad_input(x, p);
     let mut dw = Tensor4::zeros([p.n, p.cg(), p.kh, p.kw]);

@@ -14,6 +14,10 @@
 //!   NZ detection → compression → buffer fetch → crossbar → cycle-stepped
 //!   systolic array) that produces *numerical* results, cross-checked
 //!   against the functional oracle on small layers.
+//! * [`strategy`] — the lowering-strategy family the plan builder is
+//!   parametric over (explicit, implicit BP-im2col, EcoFlow-style
+//!   scatter dataflows) plus the per-layer autotune selector
+//!   (DESIGN.md §15).
 
 pub mod config;
 pub mod config_file;
@@ -21,10 +25,12 @@ pub mod functional;
 pub mod inference;
 pub mod metrics;
 pub mod plan;
+pub mod strategy;
 pub mod tiling;
 pub mod timing;
 
 pub use config::AccelConfig;
 pub use metrics::{LayerMetrics, PassMetrics};
-pub use plan::{LayerPlan, PlanCache, PlanCacheStats};
+pub use plan::{AutotuneChoice, LayerPlan, PlanCache, PlanCacheStats};
+pub use strategy::{AutoObjective, LoweringSelect, LoweringStrategy};
 pub use timing::{simulate_layer, simulate_pass};

@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::accel::config::AccelConfig;
 use crate::accel::metrics::PassMetrics;
+use crate::accel::strategy::{LoweringSelect, LoweringStrategy};
 use crate::accel::tiling::{GemmShape, Tiling};
 use crate::accel::timing::{grad_window_crossings, grad_zero_windows, META_BYTES_PER_WINDOW};
 use crate::conv::ConvParams;
@@ -61,7 +62,12 @@ use crate::sparse::{scale_u64, spots, SparseLowering};
 pub struct LayerPlan {
     /// Which backpropagation pass the plan lowers.
     pub pass: Pass,
-    /// Which im2col algorithm the plan assumes.
+    /// The **effective** lowering strategy the plan executes — the
+    /// requested strategy normalized through
+    /// [`LoweringStrategy::effective`] (EcoFlow variants degenerate to
+    /// BP-im2col on layers without a zero-space, and on grouped
+    /// layers). The [`PlanCache`] keys plans by the *requested*
+    /// strategy.
     pub mode: Mode,
     /// The layer geometry the plan was built for.
     pub params: ConvParams,
@@ -107,6 +113,11 @@ impl LayerPlan {
     /// pass model lives; `timing::simulate_pass` is a thin wrapper that
     /// builds an uncached plan and returns [`LayerPlan::metrics`].
     pub fn build(pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> Self {
+        // Normalize first (DESIGN.md §15): the plan computes — and
+        // records — the strategy whose closed forms this layer actually
+        // executes, so "EcoFlow on a stride-1 undilated layer" is
+        // *bit-identical* to BP-im2col rather than merely close.
+        let mode = mode.effective(p);
         let t = cfg.array_dim;
         let groups = p.groups;
         // Effective *data* density of this layer under this config: the
@@ -181,19 +192,48 @@ impl LayerPlan {
             Pass::Grad => dyn_stats.expect("grad has dynamic stats").sparsity(),
         };
 
+        // ---- EcoFlow scatter compute (DESIGN.md §15) ----
+        // Reached only on ungrouped layers with a zero-space (the
+        // normalization above maps everything else to BP). The scatter
+        // never materializes the zero-spaced operand, so compute scales
+        // by its non-zero fraction on the pass the dataflow targets —
+        // times a scatter-serialization factor: each streamed element
+        // updates up to `Kh*Kw` accumulators, capped by the array edge.
+        let scatter_factor = 1.0 + ((p.kh * p.kw).min(t) - 1) as f64 / t as f64;
+        let eco_compute_factor = match (mode, pass) {
+            // Output-stationary targets the transposed loss pass: the
+            // stationary dYz zero-space vanishes.
+            (Mode::EcoOutputStationary, Pass::Loss) => {
+                (1.0 - stat_stats.sparsity()) * scatter_factor
+            }
+            // Input-stationary targets the dilated grad pass: the
+            // dynamic dYd zero-space vanishes.
+            (Mode::EcoInputStationary, Pass::Grad) => {
+                (1.0 - dyn_stats.expect("grad has dynamic stats").sparsity()) * scatter_factor
+            }
+            // Each variant's off-pass pays the scatter with no skip —
+            // dominated by construction, so the autotuner never picks
+            // it there.
+            (Mode::EcoOutputStationary, Pass::Grad)
+            | (Mode::EcoInputStationary, Pass::Loss) => scatter_factor,
+            // Exact identity for the paper's two modes.
+            _ => 1.0,
+        };
+        compute_cycles *= eco_compute_factor;
+
         // ---- prologue: each addr-gen pipeline restarts per stationary
         //      stripe of every group's GEMM ----
         let stationary_prologue = prologue_cycles_for(mode, pass, Module::Stationary, p);
         let dynamic_prologue = prologue_cycles_for(mode, pass, Module::Dynamic, p);
         let prologue = (til.n_j * groups) as f64 * (stationary_prologue + dynamic_prologue) as f64;
 
-        // ---- reorganization (baseline only; whole dY, once per layer) ----
-        let (reorg_cycles, reorg_bytes, storage_overhead) = match mode {
-            Mode::Traditional => {
-                let r = reorg_cost(pass, p, cfg.reorg_cycles_per_elem);
-                (r.cycles, r.dram_bytes(), r.storage_bytes())
-            }
-            Mode::BpIm2col => (0.0, 0, 0),
+        // ---- reorganization (explicit baseline only; whole dY, once
+        //      per layer — every implicit strategy skips it) ----
+        let (reorg_cycles, reorg_bytes, storage_overhead) = if mode.is_implicit() {
+            (0.0, 0, 0)
+        } else {
+            let r = reorg_cost(pass, p, cfg.reorg_cycles_per_elem);
+            (r.cycles, r.dram_bytes(), r.storage_bytes())
         };
 
         // ---- on-chip buffer reads toward the array (Fig. 8) ----
@@ -202,19 +242,27 @@ impl LayerPlan {
         let (buffer_a_reads, buffer_b_reads) = match (mode, pass) {
             // Baseline streams the zero-spaced operands densely.
             (Mode::Traditional, _) => (a_dense, b_dense),
-            // BP loss: stationary matrix B reads only stored pixels;
-            // dynamic matrix A (the kernel) is dense.
-            (Mode::BpIm2col, Pass::Loss) => {
+            // Implicit loss: stationary matrix B reads only stored
+            // pixels; dynamic matrix A (the kernel) is dense.
+            (_, Pass::Loss) => {
                 let nz_frac = 1.0 - stat_stats.sparsity();
                 (a_dense, (b_dense as f64 * nz_frac) as u64)
             }
-            // BP grad: dynamic matrix A reads only stored pixels;
+            // Implicit grad: dynamic matrix A reads only stored pixels;
             // stationary matrix B (input im2col) skips only padding zeros.
-            (Mode::BpIm2col, Pass::Grad) => {
+            (_, Pass::Grad) => {
                 let a_nz = 1.0 - dyn_stats.expect("grad").sparsity();
                 let b_nz = 1.0 - stat_stats.sparsity();
                 ((a_dense as f64 * a_nz) as u64, (b_dense as f64 * b_nz) as u64)
             }
+        };
+        // Output-stationary scatter hands the reuse the stationary
+        // dataflow had to the accumulators: the stationary operand is
+        // re-fetched toward the array once per output-row tile.
+        let buffer_b_reads = if mode == Mode::EcoOutputStationary {
+            buffer_b_reads * til.n_m as u64
+        } else {
+            buffer_b_reads
         };
         // Under SPOTS the operands sit compressed on-chip, so only
         // non-zeros are fetched toward the array (floor scaling, exact
@@ -262,15 +310,8 @@ impl LayerPlan {
         };
 
         let out_bytes = (groups * shape.m * shape.j * 4) as u64;
-        let traffic = match mode {
-            Mode::Traditional => DramTraffic {
-                a_bytes: (a_unique_trad * 4) as u64,
-                b_bytes: (b_unique_trad * 4) as u64,
-                out_bytes,
-                reorg_bytes,
-                meta_bytes: 0,
-            },
-            Mode::BpIm2col => DramTraffic {
+        let traffic = if mode.is_implicit() {
+            DramTraffic {
                 a_bytes: (a_unique_bp * 4) as u64,
                 b_bytes: (b_unique_bp * 4) as u64,
                 out_bytes,
@@ -279,7 +320,15 @@ impl LayerPlan {
                 // requests and the masks never leave the chip — they are
                 // not data traffic (Fig. 7 measures data transmission).
                 meta_bytes: 0,
-            },
+            }
+        } else {
+            DramTraffic {
+                a_bytes: (a_unique_trad * 4) as u64,
+                b_bytes: (b_unique_trad * 4) as u64,
+                out_bytes,
+                reorg_bytes,
+                meta_bytes: 0,
+            }
         };
         // Lowering-specific traffic shape: compressed values plus
         // sideband metadata. Integer scaling keeps every term exactly
@@ -307,6 +356,21 @@ impl LayerPlan {
                 ..traffic
             },
         };
+        // EcoFlow traffic shape, composed after the data-sparsity
+        // scaling. Output-stationary re-fetches the stationary operand
+        // per output-row tile; input-stationary round-trips partial
+        // sums through the accumulator per K tile (`n_k` writes plus
+        // `n_k - 1` read-backs, the last write is final).
+        let traffic = match mode {
+            Mode::EcoOutputStationary => {
+                DramTraffic { b_bytes: traffic.b_bytes * til.n_m as u64, ..traffic }
+            }
+            Mode::EcoInputStationary => DramTraffic {
+                out_bytes: traffic.out_bytes * (2 * til.n_k as u64 - 1),
+                ..traffic
+            },
+            Mode::Traditional | Mode::BpIm2col => traffic,
+        };
 
         // ---- additional storage beyond the compact tensors ----
         // Baseline: the zero-spaced DRAM copy. BP: masks/base addresses
@@ -317,6 +381,11 @@ impl LayerPlan {
         let mut storage_overhead_bytes = match mode {
             Mode::Traditional => storage_overhead,
             Mode::BpIm2col => 2 * 2 * WINDOW_QUEUE_DEPTH * META_BYTES_PER_WINDOW,
+            // The scatter dataflows keep no window queue (no masks) but
+            // own a double-buffered FP32 accumulator: an output stripe
+            // (OS) or one array tile of partial sums (IS).
+            Mode::EcoOutputStationary => (2 * 4 * shape.m * t) as u64,
+            Mode::EcoInputStationary => (2 * 4 * t * t) as u64,
         };
         if let Some(cc) = &packing {
             // Select indices stand in buffer A alongside the packed
@@ -343,6 +412,9 @@ impl LayerPlan {
             SparseLowering::Spots => til.stripe_compute_cycles() * spots_factor,
             SparseLowering::Dense | SparseLowering::ColumnCombine => til.stripe_compute_cycles(),
         };
+        // The scatter-scaled core drains a stripe at the same scaled
+        // rate (exact identity at factor 1.0 — the paper's two modes).
+        let stripe_compute = stripe_compute * eco_compute_factor;
         let stall_cycles = stripes * (fill_cycles - stripe_compute).max(0.0);
 
         let metrics = PassMetrics {
@@ -417,6 +489,8 @@ pub(crate) struct CfgKey {
     sparse_skip: bool,
     lowering: SparseLowering,
     density_millis: usize,
+    strategy: LoweringSelect,
+    objective: crate::accel::strategy::AutoObjective,
 }
 
 impl CfgKey {
@@ -433,6 +507,8 @@ impl CfgKey {
             sparse_skip,
             lowering,
             density_millis,
+            strategy,
+            objective,
         } = *cfg;
         let crate::sim::dram::DramModel { elems_per_cycle, burst_overhead, burst_len } = dram;
         Self {
@@ -446,6 +522,8 @@ impl CfgKey {
             sparse_skip,
             lowering,
             density_millis,
+            strategy,
+            objective,
         }
     }
 }
@@ -457,6 +535,29 @@ struct PlanKey {
     pass: Pass,
     mode: Mode,
     cfg: CfgKey,
+}
+
+/// The autotuner's verdict for one `(layer, pass, config)`: every
+/// candidate strategy's scalar cost plus the winner's metrics
+/// ([`PlanCache::autotune`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutotuneChoice {
+    /// The min-cost strategy; ties resolve to the earliest entry of
+    /// [`LoweringStrategy::STRATEGIES`].
+    pub chosen: LoweringStrategy,
+    /// Metrics of the chosen strategy's plan.
+    pub metrics: PassMetrics,
+    /// Cost of every candidate under the config's
+    /// [`crate::accel::strategy::AutoObjective`], indexed like
+    /// [`LoweringStrategy::STRATEGIES`].
+    pub costs: [f64; LoweringStrategy::STRATEGIES.len()],
+}
+
+impl AutotuneChoice {
+    /// Cost of the chosen strategy (equals `min(costs)`).
+    pub fn chosen_cost(&self) -> f64 {
+        self.costs[self.chosen.code() as usize]
+    }
 }
 
 /// Hit/miss counters of a [`PlanCache`] (the planning-amortization
@@ -638,6 +739,57 @@ impl PlanCache {
     /// [`crate::accel::timing::simulate_pass`].
     pub fn metrics(&self, pass: Pass, mode: Mode, p: &ConvParams, cfg: &AccelConfig) -> PassMetrics {
         self.plan(pass, mode, p, cfg).metrics
+    }
+
+    /// Score every [`LoweringStrategy`] for `(pass, p, cfg)` under the
+    /// config's objective and pick the minimum — the per-layer
+    /// autotuner of DESIGN.md §15.
+    ///
+    /// Every candidate plan goes through the cache (one lookup per
+    /// strategy, keyed by the *requested* strategy): a cold autotune
+    /// over `N` distinct `(layer, pass)` keys misses exactly `N x S`
+    /// times and a warm one misses zero times
+    /// (`tests/autotune.rs::autotune_cache_misses_are_exactly_n_by_s`).
+    /// Selection is deterministic: costs are pure functions of the
+    /// inputs and the strict `<` comparison resolves ties to the
+    /// earliest entry of [`LoweringStrategy::STRATEGIES`], independent
+    /// of thread count, device count and frontend.
+    pub fn autotune(&self, pass: Pass, p: &ConvParams, cfg: &AccelConfig) -> AutotuneChoice {
+        let mut costs = [0.0f64; LoweringStrategy::STRATEGIES.len()];
+        let mut chosen = LoweringStrategy::STRATEGIES[0];
+        let mut best = f64::INFINITY;
+        let mut metrics = None;
+        for (i, s) in LoweringStrategy::STRATEGIES.iter().enumerate() {
+            let m = self.metrics(pass, *s, p, cfg);
+            let cost = cfg.objective.cost(&m);
+            costs[i] = cost;
+            if cost < best {
+                best = cost;
+                chosen = *s;
+                metrics = Some(m);
+            }
+        }
+        AutotuneChoice { chosen, metrics: metrics.expect("STRATEGIES is non-empty"), costs }
+    }
+
+    /// The strategy the config's [`LoweringSelect`] resolves to for
+    /// `(pass, p)`: the fixed strategy, or the autotuner's pick. Pure
+    /// in its inputs — schedulers and fleets of any width resolve the
+    /// same choice bit-identically.
+    pub fn strategy_for(&self, pass: Pass, p: &ConvParams, cfg: &AccelConfig) -> LoweringStrategy {
+        match cfg.strategy {
+            LoweringSelect::Fixed(s) => s,
+            LoweringSelect::Auto => self.autotune(pass, p, cfg).chosen,
+        }
+    }
+
+    /// [`PlanCache::metrics`] under the config's own strategy selection
+    /// ([`AccelConfig::strategy`]) instead of a positional mode.
+    pub fn metrics_select(&self, pass: Pass, p: &ConvParams, cfg: &AccelConfig) -> PassMetrics {
+        match cfg.strategy {
+            LoweringSelect::Fixed(s) => self.metrics(pass, s, p, cfg),
+            LoweringSelect::Auto => self.autotune(pass, p, cfg).metrics,
+        }
     }
 
     /// Current hit/miss/entry counters, read as one consistent snapshot
@@ -890,6 +1042,125 @@ mod tests {
             assert!(sp.metrics.traffic.meta_bytes > 0, "bitmaps ride the meta bus: {pass:?}");
             assert_eq!(sp.metrics.macs, dn.metrics.macs, "{pass:?}");
         }
+    }
+
+    #[test]
+    fn eco_dataflows_win_their_target_pass_on_strided_layers() {
+        // The whole point of the EcoFlow variants: on zero-spaced
+        // layers, OS beats BP on the transposed loss pass and IS beats
+        // BP on the dilated grad pass — while each off-pass is
+        // dominated (never the autotune pick).
+        for p in [
+            ConvParams::square(112, 64, 64, 3, 2, 1),
+            ConvParams::square(56, 256, 512, 1, 2, 0),
+            ConvParams::square(28, 244, 244, 3, 2, 1),
+        ] {
+            let bp_loss = LayerPlan::build(Pass::Loss, Mode::BpIm2col, &p, &cfg()).metrics;
+            let os_loss = LayerPlan::build(Pass::Loss, Mode::EcoOutputStationary, &p, &cfg()).metrics;
+            assert!(
+                os_loss.total_cycles() < bp_loss.total_cycles(),
+                "{}: eco-os loss {} vs bp {}",
+                p.id(),
+                os_loss.total_cycles(),
+                bp_loss.total_cycles()
+            );
+            let bp_grad = LayerPlan::build(Pass::Grad, Mode::BpIm2col, &p, &cfg()).metrics;
+            let is_grad = LayerPlan::build(Pass::Grad, Mode::EcoInputStationary, &p, &cfg()).metrics;
+            assert!(
+                is_grad.total_cycles() < bp_grad.total_cycles(),
+                "{}: eco-is grad {} vs bp {}",
+                p.id(),
+                is_grad.total_cycles(),
+                bp_grad.total_cycles()
+            );
+            // Off-passes pay the scatter with no skip.
+            let os_grad = LayerPlan::build(Pass::Grad, Mode::EcoOutputStationary, &p, &cfg()).metrics;
+            let is_loss = LayerPlan::build(Pass::Loss, Mode::EcoInputStationary, &p, &cfg()).metrics;
+            assert!(os_grad.total_cycles() > bp_grad.total_cycles(), "{}", p.id());
+            assert!(is_loss.total_cycles() > bp_loss.total_cycles(), "{}", p.id());
+        }
+    }
+
+    #[test]
+    fn eco_requests_normalize_bit_identically_to_bp() {
+        // No zero-space (stride 1, no dilation) or grouped: the scatter
+        // closed forms coincide with BP and the build *normalizes*, so
+        // equality is bitwise — including the recorded mode.
+        for p in [
+            ConvParams::square(56, 64, 64, 3, 1, 1),
+            ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32),
+        ] {
+            for pass in Pass::ALL {
+                let bp = LayerPlan::build(pass, Mode::BpIm2col, &p, &cfg());
+                for eco in [Mode::EcoOutputStationary, Mode::EcoInputStationary] {
+                    let plan = LayerPlan::build(pass, eco, &p, &cfg());
+                    assert_eq!(plan.mode, Mode::BpIm2col, "{} {pass:?}", p.id());
+                    assert_eq!(plan.metrics, bp.metrics, "{} {pass:?} {eco:?}", p.id());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn autotune_picks_the_min_and_breaks_ties_stably() {
+        use crate::accel::strategy::LoweringStrategy;
+        let cache = PlanCache::new();
+        // Strided layer: the pick differs per pass (OS loss, IS grad).
+        let p = ConvParams::square(56, 256, 512, 1, 2, 0);
+        let loss = cache.autotune(Pass::Loss, &p, &cfg());
+        let grad = cache.autotune(Pass::Grad, &p, &cfg());
+        assert_eq!(loss.chosen, Mode::EcoOutputStationary);
+        assert_eq!(grad.chosen, Mode::EcoInputStationary);
+        for (pass, c) in [(Pass::Loss, &loss), (Pass::Grad, &grad)] {
+            let min = c.costs.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert_eq!(c.chosen_cost(), min);
+            assert_eq!(c.metrics, cache.metrics(pass, c.chosen, &p, &cfg()));
+        }
+        // Stride-1 layer: every implicit strategy ties exactly; the
+        // stable order resolves to BP (earlier than both ecos).
+        let q = ConvParams::square(56, 64, 64, 3, 1, 1);
+        for pass in Pass::ALL {
+            let c = cache.autotune(pass, &q, &cfg());
+            assert_eq!(c.chosen, Mode::BpIm2col, "{pass:?}");
+            assert_eq!(
+                c.costs[LoweringStrategy::BpIm2col.code() as usize],
+                c.costs[LoweringStrategy::EcoOutputStationary.code() as usize],
+                "{pass:?}: normalized ecos tie bitwise"
+            );
+        }
+        // And Auto is never costlier than any fixed strategy.
+        for p in [p, q] {
+            for pass in Pass::ALL {
+                let c = cache.autotune(pass, &p, &cfg());
+                for s in LoweringStrategy::STRATEGIES {
+                    let fixed = cfg().objective.cost(&cache.metrics(pass, s, &p, &cfg()));
+                    assert!(c.chosen_cost() <= fixed, "{} {pass:?} {s:?}", p.id());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_select_follows_the_config_strategy() {
+        use crate::accel::strategy::{LoweringSelect, LoweringStrategy};
+        let cache = PlanCache::new();
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        // Default select is Fixed(BpIm2col).
+        assert_eq!(
+            cache.metrics_select(Pass::Loss, &p, &cfg()),
+            cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &cfg())
+        );
+        let auto = AccelConfig { strategy: LoweringSelect::Auto, ..cfg() };
+        assert_eq!(
+            cache.metrics_select(Pass::Loss, &p, &auto),
+            cache.autotune(Pass::Loss, &p, &auto).metrics
+        );
+        assert_eq!(cache.strategy_for(Pass::Loss, &p, &auto), Mode::EcoOutputStationary);
+        let trad = AccelConfig {
+            strategy: LoweringSelect::Fixed(LoweringStrategy::Traditional),
+            ..cfg()
+        };
+        assert_eq!(cache.strategy_for(Pass::Grad, &p, &trad), Mode::Traditional);
     }
 
     #[test]

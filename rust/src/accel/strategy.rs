@@ -1,0 +1,351 @@
+//! Lowering strategies — the algorithm axis of the planner (DESIGN.md
+//! §15).
+//!
+//! The seed modeled exactly two lowerings behind
+//! `im2col::pipeline::Mode` (traditional explicit im2col vs the paper's
+//! implicit BP-im2col) and match-dispatched on it inside the plan
+//! builder. This module promotes the lowering to a first-class
+//! [`LoweringStrategy`] family the planner is *parametric* over:
+//!
+//! * [`LoweringStrategy::Traditional`] — explicit im2col: materialize
+//!   the zero-spaced tensors off-chip (reorganization), stream them
+//!   densely.
+//! * [`LoweringStrategy::BpIm2col`] — the paper's implicit gather:
+//!   address-map into the compact tensors, detect zeros arithmetically.
+//! * [`LoweringStrategy::EcoOutputStationary`] /
+//!   [`LoweringStrategy::EcoInputStationary`] — EcoFlow-style dataflows
+//!   (arXiv 2202.02310): instead of *gathering* dilated/transposed
+//!   windows (and streaming the re-inflated zeros through the array),
+//!   keep one operand stationary and **scatter partial sums** into an
+//!   output accumulator, so the zero-space never enters the datapath at
+//!   all. The win is compute that scales with the *non-zero* fraction;
+//!   the price is a scatter-serialization factor, an output-accumulator
+//!   buffer term, lost operand reuse (OS) or partial-sum round trips
+//!   (IS), and a deeper address-generation prologue.
+//!
+//! [`LoweringSelect`] adds the planner-facing `Auto` choice: build all
+//! candidate plans per `(layer, pass, config)`, score them under a
+//! configurable [`AutoObjective`], pick the minimum deterministically
+//! (strict `<`, so ties resolve to the earliest entry of
+//! [`LoweringStrategy::STRATEGIES`] — stable across threads, devices
+//! and frontends).
+
+use crate::accel::metrics::PassMetrics;
+use crate::conv::ConvParams;
+
+/// One lowering algorithm the planner can lower a backprop pass with.
+///
+/// Re-exported as `im2col::pipeline::Mode` for backward compatibility —
+/// the paper-era two-variant enum is the `Traditional`/`BpIm2col`
+/// prefix of this family ([`LoweringStrategy::ALL`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoweringStrategy {
+    /// Traditional explicit im2col: reorganize (materialize the
+    /// zero-spaces off-chip), then dense explicit lowering.
+    Traditional,
+    /// BP-im2col: implicit gather straight from the compact tensors
+    /// (the paper's design).
+    BpIm2col,
+    /// EcoFlow-style output-stationary scatter: outputs accumulate in
+    /// place, the zero-spaced *stationary* operand is never inflated.
+    /// Wins the transposed-convolution loss pass of strided layers;
+    /// pays a re-streamed stationary operand and an output-accumulator
+    /// stripe.
+    EcoOutputStationary,
+    /// EcoFlow-style input-stationary scatter: the compact loss map
+    /// stays resident, partial sums round-trip through the accumulator.
+    /// Wins the dilated-convolution gradient pass of strided layers.
+    EcoInputStationary,
+}
+
+impl LoweringStrategy {
+    /// The paper's two modes, baseline first (matches the paper's
+    /// legends and every Table II/III comparison). Kept at two entries
+    /// on purpose: `Mode::ALL` loops throughout the crate reproduce the
+    /// paper's two-column artifacts bit-identically.
+    pub const ALL: [LoweringStrategy; 2] =
+        [LoweringStrategy::Traditional, LoweringStrategy::BpIm2col];
+
+    /// Every strategy, in the stable autotune tie-break order. The
+    /// autotuner scores candidates in this order and keeps the first
+    /// strict minimum, so a tie between BP-im2col and an EcoFlow
+    /// variant (their closed forms coincide on layers without a
+    /// zero-space) deterministically resolves to BP-im2col.
+    pub const STRATEGIES: [LoweringStrategy; 4] = [
+        LoweringStrategy::Traditional,
+        LoweringStrategy::BpIm2col,
+        LoweringStrategy::EcoOutputStationary,
+        LoweringStrategy::EcoInputStationary,
+    ];
+
+    /// Stable lowercase name (CLI/wire form and the mix-summary key).
+    pub const fn name(self) -> &'static str {
+        match self {
+            LoweringStrategy::Traditional => "trad",
+            LoweringStrategy::BpIm2col => "bp",
+            LoweringStrategy::EcoOutputStationary => "eco-os",
+            LoweringStrategy::EcoInputStationary => "eco-is",
+        }
+    }
+
+    /// Legend / table label (the paper's names for its two modes).
+    pub const fn legend(self) -> &'static str {
+        match self {
+            LoweringStrategy::Traditional => "Original",
+            LoweringStrategy::BpIm2col => "Ours",
+            LoweringStrategy::EcoOutputStationary => "EcoFlow-OS",
+            LoweringStrategy::EcoInputStationary => "EcoFlow-IS",
+        }
+    }
+
+    /// Integer wire/axis code (the DSE `lowering_strategy` axis value).
+    pub const fn code(self) -> u8 {
+        match self {
+            LoweringStrategy::Traditional => 0,
+            LoweringStrategy::BpIm2col => 1,
+            LoweringStrategy::EcoOutputStationary => 2,
+            LoweringStrategy::EcoInputStationary => 3,
+        }
+    }
+
+    /// Inverse of [`LoweringStrategy::code`].
+    pub fn from_code(code: u64) -> Result<Self, String> {
+        match code {
+            0 => Ok(LoweringStrategy::Traditional),
+            1 => Ok(LoweringStrategy::BpIm2col),
+            2 => Ok(LoweringStrategy::EcoOutputStationary),
+            3 => Ok(LoweringStrategy::EcoInputStationary),
+            other => Err(format!("lowering strategy code must be 0..=3, got {other}")),
+        }
+    }
+
+    /// Parse a CLI/config spelling; strict.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "trad" => Ok(LoweringStrategy::Traditional),
+            "bp" => Ok(LoweringStrategy::BpIm2col),
+            "eco-os" => Ok(LoweringStrategy::EcoOutputStationary),
+            "eco-is" => Ok(LoweringStrategy::EcoInputStationary),
+            other => Err(format!(
+                "unknown lowering strategy {other:?} (supported: trad, bp, eco-os, eco-is)"
+            )),
+        }
+    }
+
+    /// True for the strategies that lower implicitly from the compact
+    /// tensors (everything except the explicit baseline) — no
+    /// reorganization pass, no zero-spaced DRAM copy.
+    pub const fn is_implicit(self) -> bool {
+        !matches!(self, LoweringStrategy::Traditional)
+    }
+
+    /// The strategy whose closed forms this layer actually executes —
+    /// the calibration normalization of DESIGN.md §15.
+    ///
+    /// The EcoFlow scatter pipeline only differs from BP-im2col where
+    /// backpropagation injects a zero-space (forward stride > 1) or
+    /// scattered kernel taps (dilation > 1): on stride-1 undilated
+    /// layers the scatter degenerates to the same compact stream and
+    /// the closed forms coincide, so we normalize to BP-im2col and the
+    /// coincidence is *bit-exact* rather than merely close. Grouped
+    /// layers also normalize: the scatter index datapath addresses one
+    /// accumulator stripe and cannot compose the per-group channel
+    /// base, so each group would need its own pass — modeled as the
+    /// BP gather pipeline instead.
+    pub fn effective(self, p: &ConvParams) -> Self {
+        match self {
+            LoweringStrategy::Traditional | LoweringStrategy::BpIm2col => self,
+            LoweringStrategy::EcoOutputStationary | LoweringStrategy::EcoInputStationary => {
+                let scattered = p.sh > 1 || p.sw > 1 || p.dh > 1 || p.dw > 1;
+                if scattered && p.groups == 1 {
+                    self
+                } else {
+                    LoweringStrategy::BpIm2col
+                }
+            }
+        }
+    }
+}
+
+/// How the planner chooses the [`LoweringStrategy`] of each pass: a
+/// fixed strategy for every layer, or the per-layer autotuner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoweringSelect {
+    /// Lower every layer/pass with the same strategy.
+    Fixed(LoweringStrategy),
+    /// Score every strategy per `(layer, pass, config)` under the
+    /// config's [`AutoObjective`] and pick the minimum (tie-break by
+    /// [`LoweringStrategy::STRATEGIES`] order).
+    Auto,
+}
+
+impl Default for LoweringSelect {
+    /// The paper's design: BP-im2col everywhere.
+    fn default() -> Self {
+        LoweringSelect::Fixed(LoweringStrategy::BpIm2col)
+    }
+}
+
+impl LoweringSelect {
+    /// Wire code past the fixed strategies.
+    const AUTO_CODE: u64 = LoweringStrategy::STRATEGIES.len() as u64;
+
+    /// Stable lowercase name (CLI/config/wire form).
+    pub const fn name(self) -> &'static str {
+        match self {
+            LoweringSelect::Fixed(s) => s.name(),
+            LoweringSelect::Auto => "auto",
+        }
+    }
+
+    /// Integer wire/axis code: the fixed strategy's code, or 4 for
+    /// `auto` (the DSE `lowering_strategy` axis value).
+    pub const fn code(self) -> u64 {
+        match self {
+            LoweringSelect::Fixed(s) => s.code() as u64,
+            LoweringSelect::Auto => Self::AUTO_CODE,
+        }
+    }
+
+    /// Inverse of [`LoweringSelect::code`].
+    pub fn from_code(code: u64) -> Result<Self, String> {
+        if code == Self::AUTO_CODE {
+            return Ok(LoweringSelect::Auto);
+        }
+        LoweringStrategy::from_code(code)
+            .map(LoweringSelect::Fixed)
+            .map_err(|_| format!("lowering select code must be 0..=4, got {code}"))
+    }
+
+    /// Parse a CLI/config spelling; strict.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "auto" {
+            return Ok(LoweringSelect::Auto);
+        }
+        LoweringStrategy::parse(s).map(LoweringSelect::Fixed).map_err(|_| {
+            format!("unknown lowering strategy {s:?} (supported: trad, bp, eco-os, eco-is, auto)")
+        })
+    }
+}
+
+/// The cost function the autotuner minimizes per `(layer, pass)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum AutoObjective {
+    /// End-to-end pass runtime in cycles (the default).
+    #[default]
+    Runtime,
+    /// Total off-chip traffic in bytes.
+    Traffic,
+    /// On-chip buffer reads toward the array (A + B).
+    Reads,
+}
+
+impl AutoObjective {
+    /// All objectives, in wire order.
+    pub const ALL: [AutoObjective; 3] =
+        [AutoObjective::Runtime, AutoObjective::Traffic, AutoObjective::Reads];
+
+    /// Stable lowercase name (config/wire form).
+    pub const fn name(self) -> &'static str {
+        match self {
+            AutoObjective::Runtime => "runtime",
+            AutoObjective::Traffic => "traffic",
+            AutoObjective::Reads => "reads",
+        }
+    }
+
+    /// Unit of [`AutoObjective::cost`], for artifact columns.
+    pub const fn unit(self) -> &'static str {
+        match self {
+            AutoObjective::Runtime => "cycles",
+            AutoObjective::Traffic => "bytes",
+            AutoObjective::Reads => "reads",
+        }
+    }
+
+    /// Parse a CLI/config spelling; strict.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "runtime" => Ok(AutoObjective::Runtime),
+            "traffic" => Ok(AutoObjective::Traffic),
+            "reads" => Ok(AutoObjective::Reads),
+            other => Err(format!(
+                "unknown autotune objective {other:?} (supported: runtime, traffic, reads)"
+            )),
+        }
+    }
+
+    /// Scalar cost of one pass under this objective. Counters convert
+    /// through `u64 -> f64` exactly (all honest values are far below
+    /// 2^53), so comparisons are bit-deterministic.
+    pub fn cost(self, m: &PassMetrics) -> f64 {
+        match self {
+            AutoObjective::Runtime => m.total_cycles(),
+            AutoObjective::Traffic => m.traffic.total() as f64,
+            AutoObjective::Reads => (m.buffer_a_reads + m.buffer_b_reads) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_names_round_trip() {
+        for s in LoweringStrategy::STRATEGIES {
+            assert_eq!(LoweringStrategy::from_code(s.code() as u64).unwrap(), s);
+            assert_eq!(LoweringStrategy::parse(s.name()).unwrap(), s);
+            let select = LoweringSelect::from_code(s.code() as u64).unwrap();
+            assert_eq!(select, LoweringSelect::Fixed(s));
+            assert_eq!(LoweringSelect::parse(s.name()).unwrap(), LoweringSelect::Fixed(s));
+        }
+        assert_eq!(LoweringSelect::from_code(4).unwrap(), LoweringSelect::Auto);
+        assert_eq!(LoweringSelect::parse("auto").unwrap(), LoweringSelect::Auto);
+        assert!(LoweringStrategy::from_code(4).is_err());
+        assert!(LoweringSelect::from_code(5).is_err());
+        assert!(LoweringStrategy::parse("BP").is_err(), "names are case-sensitive");
+        assert!(LoweringSelect::parse("").is_err());
+        for o in AutoObjective::ALL {
+            assert_eq!(AutoObjective::parse(o.name()).unwrap(), o);
+        }
+        assert!(AutoObjective::parse("latency").is_err());
+    }
+
+    #[test]
+    fn legacy_all_is_the_paper_prefix() {
+        // Mode::ALL loops all over the crate regenerate the paper's
+        // two-column artifacts; the prefix must never change.
+        assert_eq!(LoweringStrategy::ALL.len(), 2);
+        assert_eq!(LoweringStrategy::ALL[0], LoweringStrategy::Traditional);
+        assert_eq!(LoweringStrategy::ALL[1], LoweringStrategy::BpIm2col);
+        assert_eq!(LoweringStrategy::STRATEGIES[..2], LoweringStrategy::ALL);
+    }
+
+    #[test]
+    fn defaults_match_the_paper() {
+        assert_eq!(LoweringSelect::default(), LoweringSelect::Fixed(LoweringStrategy::BpIm2col));
+        assert_eq!(AutoObjective::default(), AutoObjective::Runtime);
+    }
+
+    #[test]
+    fn eco_normalizes_where_closed_forms_coincide() {
+        use LoweringStrategy::*;
+        let strided = ConvParams::square(56, 128, 128, 3, 2, 1);
+        let stride1 = ConvParams::square(56, 128, 128, 3, 1, 1);
+        let dilated = ConvParams::square(28, 256, 256, 3, 1, 2).with_dilation(2, 2);
+        let grouped = ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32);
+        for eco in [EcoOutputStationary, EcoInputStationary] {
+            assert_eq!(eco.effective(&strided), eco, "stride-2 keeps the scatter form");
+            assert_eq!(eco.effective(&dilated), eco, "dilation keeps the scatter form");
+            assert_eq!(eco.effective(&stride1), BpIm2col, "stride-1 undilated normalizes");
+            assert_eq!(eco.effective(&grouped), BpIm2col, "groups normalize");
+        }
+        // The paper's two modes are already normal forms.
+        for s in LoweringStrategy::ALL {
+            for p in [&strided, &stride1, &dilated, &grouped] {
+                assert_eq!(s.effective(p), s);
+            }
+        }
+    }
+}

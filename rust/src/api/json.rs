@@ -380,6 +380,14 @@ impl SimRequest {
                     out.push_str(",\"extended\":true");
                 }
             }
+            SimRequest::Autotune { extended, devices } => {
+                if *extended {
+                    out.push_str(",\"extended\":true");
+                }
+                if let Some(n) = devices {
+                    write!(out, ",\"devices\":{n}").unwrap();
+                }
+            }
             SimRequest::Dse(d) => {
                 let defaults = DseRequest::new();
                 if d.budget != defaults.budget {
@@ -477,10 +485,11 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
         "traincost" => &["devices"],
         "fleet" => &["devices", "extended"],
         "dse" => &["budget", "seed", "axes", "extended", "layer", "batch", "devices"],
+        "autotune" => &["extended", "devices"],
         other => {
             return Err(format!(
                 "unknown request kind {other:?} (supported: table2, table3, table4, fig6, \
-                 fig7, fig8, sparsity, storage, sparse, layer, traincost, fleet, dse)"
+                 fig7, fig8, sparsity, storage, sparse, layer, traincost, fleet, dse, autotune)"
             ))
         }
     };
@@ -589,6 +598,7 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
             }
             req.into()
         }
+        "autotune" => SimRequest::Autotune { extended, devices: opt_devices(v)? },
         _ => unreachable!("kind validated above"),
     })
 }
@@ -660,7 +670,7 @@ pub fn parse_batch(text: &str) -> Result<Vec<Result<SimRequest, String>>, String
 /// ready-to-send example body.
 pub fn request_catalog_json() -> String {
     // (kind, description, extra keys, example body)
-    const SHAPES: [(&str, &str, &str, &str); 13] = [
+    const SHAPES: [(&str, &str, &str, &str); 14] = [
         ("table2", "Table II: per-layer backpropagation runtime", "[]", "{\"kind\":\"table2\"}"),
         ("table3", "Table III: address-generation prologue latency", "[]", "{\"kind\":\"table3\"}"),
         ("table4", "Table IV: address-generation module area", "[]", "{\"kind\":\"table4\"}"),
@@ -724,6 +734,12 @@ pub fn request_catalog_json() -> String {
             "[\"budget\",\"seed\",\"axes\",\"extended\",\"layer\",\"batch\",\"devices\"]",
             "{\"kind\":\"dse\",\"budget\":64,\"seed\":7,\"axes\":{\"array_dim\":\"4:16:4\"}}",
         ),
+        (
+            "autotune",
+            "Per-layer lowering-strategy autotuner report",
+            "[\"extended\",\"devices\"]",
+            "{\"kind\":\"autotune\"}",
+        ),
     ];
     let mut out = String::from("{\"requests\":[");
     for (i, (kind, desc, keys, example)) in SHAPES.iter().enumerate() {
@@ -776,6 +792,13 @@ mod tests {
                 d.space.set_axis("sparse_skip", "0:1:1").unwrap();
                 d.into()
             },
+            {
+                let mut d = DseRequest::new();
+                d.space.set_axis("lowering_strategy", "0:4:1").unwrap();
+                d.into()
+            },
+            SimRequest::Autotune { extended: false, devices: None },
+            SimRequest::Autotune { extended: true, devices: Some(4) },
         ]
     }
 
@@ -837,6 +860,13 @@ mod tests {
         assert_eq!(req, FigureRequest::new(Figure::Runtime).into());
         // Fleet defaults to 4 devices like the CLI.
         assert_eq!(SimRequest::from_json("{\"kind\":\"fleet\"}").unwrap(), SimRequest::fleet(4));
+        // Autotune: bare body is the paper networks, no fleet cross-check.
+        assert_eq!(
+            SimRequest::from_json("{\"kind\":\"autotune\"}").unwrap(),
+            SimRequest::Autotune { extended: false, devices: None }
+        );
+        assert!(SimRequest::from_json("{\"kind\":\"autotune\",\"devices\":0}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"autotune\",\"pass\":\"loss\"}").is_err());
     }
 
     #[test]
@@ -924,7 +954,7 @@ mod tests {
     fn request_catalog_parses_and_examples_decode() {
         let doc = parse(&request_catalog_json()).unwrap();
         let Some(Json::Arr(shapes)) = doc.get("requests") else { panic!("no requests array") };
-        assert_eq!(shapes.len(), 13, "one entry per SimRequest kind");
+        assert_eq!(shapes.len(), 14, "one entry per SimRequest kind");
         for shape in shapes {
             let example = shape.get("example").unwrap().as_str().unwrap();
             let req = SimRequest::from_json(example)

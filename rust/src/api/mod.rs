@@ -174,6 +174,9 @@ impl Service {
                 vec![self.fleet_artifact(&Self::networks(f.extended), f.devices)]
             }
             SimRequest::Dse(d) => vec![self.dse(d)],
+            SimRequest::Autotune { extended, devices } => {
+                vec![self.autotune(*extended, *devices)]
+            }
         };
         let cfg_meta = config_meta(&self.cfg);
         for a in &mut artifacts {
@@ -327,7 +330,10 @@ impl Service {
             ]);
         for pass in Pass::ALL {
             let trad = self.cache.metrics(pass, Mode::Traditional, p, &self.cfg);
-            let bp = self.cache.metrics(pass, Mode::BpIm2col, p, &self.cfg);
+            // Honors the config's strategy selection (`--lowering-strategy`):
+            // under the default Fixed(BpIm2col) this is bit-identical to
+            // the positional BP metrics the seed reported.
+            let bp = self.cache.metrics_select(pass, p, &self.cfg);
             a.push_row(vec![
                 pass.name().into(),
                 bp.total_cycles().into(),
@@ -543,6 +549,125 @@ impl Service {
         a
     }
 
+    /// Serve the per-layer lowering autotuner's decision record (`repro
+    /// autotune`, DESIGN.md §15): every `(network, layer, pass)` scored
+    /// under every [`LoweringStrategy`], the winner named per row, plus
+    /// the strategy mix and the margin over the best *fixed* strategy.
+    ///
+    /// The request always scores under [`LoweringSelect::Auto`] —
+    /// whatever strategy the service config fixes, the artifact *is* the
+    /// autotuner's verdict, not the serving policy. `devices` is a pure
+    /// fleet cross-check: a `devices`-wide [`Fleet`] must inherit the
+    /// same per-job choices bit-identically ([`Fleet::run_network_select`]),
+    /// and it never touches the rendered bytes (the request cache key
+    /// normalizes it away).
+    ///
+    /// [`LoweringStrategy`]: crate::accel::strategy::LoweringStrategy
+    /// [`LoweringSelect::Auto`]: crate::accel::strategy::LoweringSelect
+    /// [`Fleet`]: crate::coordinator::Fleet
+    /// [`Fleet::run_network_select`]: crate::coordinator::Fleet::run_network_select
+    fn autotune(&self, extended: bool, devices: Option<usize>) -> Artifact {
+        use crate::accel::strategy::{LoweringSelect, LoweringStrategy};
+        let cfg = AccelConfig { strategy: LoweringSelect::Auto, ..self.cfg };
+        let nets = Self::networks(extended);
+        let rows = report::autotune_rows(&nets, &cfg, &self.cache);
+        let unit = cfg.objective.unit();
+
+        let mut columns = vec![
+            Column::new("network"),
+            Column::new("layer"),
+            Column::new("count"),
+            Column::new("pass"),
+            Column::new("chosen"),
+        ];
+        for s in LoweringStrategy::STRATEGIES {
+            columns.push(Column::new(s.name().replace('-', "_")).unit(unit).precision(0));
+        }
+        columns.push(Column::new("auto").unit(unit).precision(0));
+        let mut a = Artifact::new(
+            "autotune",
+            "Per-layer lowering-strategy autotuner (backward passes)",
+        )
+        .meta("networks", if extended { "extended" } else { "paper" })
+        .meta("objective", cfg.objective.name())
+        .columns(columns);
+
+        // Decision mix plus count-weighted totals: `auto` pays each
+        // layer's winning cost, a fixed strategy pays its own column
+        // everywhere.
+        let mut mix = [0usize; LoweringStrategy::STRATEGIES.len()];
+        let mut fixed = [0.0f64; LoweringStrategy::STRATEGIES.len()];
+        let mut auto_total = 0.0f64;
+        for r in &rows {
+            mix[r.choice.chosen.code() as usize] += 1;
+            let weight = r.count as f64;
+            // lint: allow(float-accumulation) — row order fixed by the workload catalog
+            for (i, cost) in r.choice.costs.iter().enumerate() {
+                fixed[i] += cost * weight;
+            }
+            auto_total += r.choice.chosen_cost() * weight;
+            let mut row: Vec<Value> = vec![
+                r.network.clone().into(),
+                r.layer.clone().into(),
+                r.count.into(),
+                r.pass.name().into(),
+                r.choice.chosen.name().into(),
+            ];
+            for cost in r.choice.costs {
+                row.push(cost.into());
+            }
+            row.push(r.choice.chosen_cost().into());
+            a.push_row(row);
+        }
+
+        let mix_parts: Vec<String> = LoweringStrategy::STRATEGIES
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mix[*i] > 0)
+            .map(|(i, s)| format!("{}:{}", s.name(), mix[i]))
+            .collect();
+        a.push_note(format!("mix: {}", mix_parts.join(" ")));
+
+        // Best single fixed strategy, ties to the earliest entry —
+        // the same stable order the per-layer selection uses.
+        let mut best = 0usize;
+        for (i, total) in fixed.iter().enumerate() {
+            if *total < fixed[best] {
+                best = i;
+            }
+        }
+        let margin_pct = (fixed[best] - auto_total) / fixed[best] * 100.0;
+        a.push_note(format!(
+            "auto total {auto_total:.0} {unit} vs best fixed {} {:.0} {unit} \
+             (win margin {margin_pct:.2}%)",
+            LoweringStrategy::STRATEGIES[best].name(),
+            fixed[best],
+        ));
+
+        if let Some(devices) = devices {
+            // Cross-check only: the fleet must inherit the scheduler's
+            // per-job choices bit-identically at this width. A mismatch
+            // panics (surfaced by `try_run` as a RequestError) instead
+            // of rendering anything — the artifact's bytes stay a pure
+            // function of the request and the config.
+            let sched = Scheduler::with_cache(cfg, self.plan_cache());
+            let fleet =
+                crate::coordinator::Fleet::with_cache(cfg, devices, self.plan_cache());
+            for net in &nets {
+                let s = sched.run_network_select(net);
+                let f = fleet.run_network_select(net);
+                assert!(
+                    s.loss_cycles == f.total.loss_cycles
+                        && s.grad_cycles == f.total.grad_cycles,
+                    "fleet of {devices} device(s) diverged from the scheduler's \
+                     autotune choices on {}",
+                    net.name
+                );
+            }
+        }
+        a
+    }
+
     fn fleet_artifact(&self, nets: &[Network], devices: usize) -> Artifact {
         let (bars, planning) =
             report::fleet_summary(nets, &self.cfg, Mode::BpIm2col, devices);
@@ -679,7 +804,8 @@ fn network_bar_row(b: report::NetworkBar) -> Vec<Value> {
 /// artifact's metadata.
 fn config_meta(cfg: &AccelConfig) -> String {
     format!(
-        "T={} bw={} bufA={} bufB={} reorg={} sparse_skip={} lowering={} density={}",
+        "T={} bw={} bufA={} bufB={} reorg={} sparse_skip={} lowering={} density={} \
+         strategy={} objective={}",
         cfg.array_dim,
         cfg.dram.elems_per_cycle,
         cfg.buf_a_half,
@@ -687,7 +813,9 @@ fn config_meta(cfg: &AccelConfig) -> String {
         cfg.reorg_cycles_per_elem,
         cfg.sparse_skip,
         cfg.lowering.name(),
-        cfg.density_millis
+        cfg.density_millis,
+        cfg.strategy.name(),
+        cfg.objective.name()
     )
 }
 
@@ -803,6 +931,53 @@ mod tests {
         assert_eq!(svc.run(&SimRequest::Sparse { extended: false }), arts);
         let ext = svc.run(&SimRequest::Sparse { extended: true });
         assert_eq!(ext[0].rows.len(), 15);
+    }
+
+    #[test]
+    fn autotune_artifact_records_a_mix_and_beats_every_fixed_strategy() {
+        use crate::accel::strategy::{LoweringSelect, LoweringStrategy};
+        let svc = Service::new(AccelConfig::default());
+        let req = SimRequest::Autotune { extended: false, devices: None };
+        let arts = svc.run(&req);
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.name, "autotune");
+        // 6 networks x layers x 2 passes, every strategy a column.
+        assert!(!a.rows.is_empty());
+        for s in LoweringStrategy::STRATEGIES {
+            assert!(a.col(&s.name().replace('-', "_")).is_some(), "{}", s.name());
+        }
+        // Per row: the auto column equals the chosen strategy's column
+        // and is <= every fixed column (the acceptance invariant).
+        let chosen_col = a.col("chosen").unwrap();
+        for (i, row) in a.rows.iter().enumerate() {
+            let auto = a.float_at(i, "auto").unwrap();
+            for s in LoweringStrategy::STRATEGIES {
+                let fixed = a.float_at(i, &s.name().replace('-', "_")).unwrap();
+                assert!(auto <= fixed, "row {i}: auto {auto} > {} {fixed}", s.name());
+                if Value::from(s.name()) == row[chosen_col] {
+                    assert_eq!(auto, fixed, "row {i}: auto != chosen column");
+                }
+            }
+        }
+        assert!(a.meta.iter().any(|(k, v)| k == "objective" && v == "runtime"), "{:?}", a.meta);
+        let mix = a.notes.iter().find(|n| n.starts_with("mix: ")).expect("mix note");
+        assert!(mix.split_whitespace().count() >= 3, "single-strategy mix: {mix}");
+        assert!(
+            a.notes.iter().any(|n| n.contains("win margin")),
+            "{:?}",
+            a.notes
+        );
+        // The devices knob cross-checks the fleet but never changes the
+        // rendered bytes; a service that FIXES a strategy still reports
+        // the autotuner's verdict.
+        let with_devices = SimRequest::Autotune { extended: false, devices: Some(3) };
+        assert_eq!(svc.run(&with_devices)[0].render_json(), a.render_json());
+        let fixed_svc = Service::new(AccelConfig {
+            strategy: LoweringSelect::Fixed(LoweringStrategy::Traditional),
+            ..AccelConfig::default()
+        });
+        assert_eq!(fixed_svc.run(&req)[0].rows, a.rows);
     }
 
     #[test]

@@ -320,6 +320,21 @@ pub enum SimRequest {
     Fleet(FleetRequest),
     /// Design-space exploration: Pareto frontier over `AccelConfig`.
     Dse(DseRequest),
+    /// Per-layer lowering autotuner report (DESIGN.md §15): for every
+    /// `(network, layer, pass)`, the cost of each
+    /// [`crate::accel::LoweringStrategy`] under the service config's
+    /// objective, the strategy the autotuner picks, and the network-level
+    /// mix / win-margin summary. Always scored under
+    /// `LoweringSelect::Auto`, whatever the service config fixes —
+    /// the artifact *is* the autotuner's decision record.
+    Autotune {
+        /// Include the dilated/grouped extension networks.
+        extended: bool,
+        /// Cross-check the choices on a fleet of this many devices
+        /// (pure verification — the rendered artifact is bit-identical
+        /// for every value, asserted in `tests/autotune.rs`).
+        devices: Option<usize>,
+    },
 }
 
 impl SimRequest {
@@ -350,6 +365,9 @@ impl SimRequest {
                 Err("traincost devices must be >= 1".into())
             }
             SimRequest::Fleet(f) if f.devices == 0 => Err("fleet devices must be >= 1".into()),
+            SimRequest::Autotune { devices: Some(0), .. } => {
+                Err("autotune devices must be >= 1".into())
+            }
             SimRequest::Dse(d) => {
                 if d.budget == 0 || d.budget > MAX_DSE_BUDGET {
                     return Err(format!(
@@ -390,6 +408,12 @@ impl SimRequest {
                 d.devices = None;
                 SimRequest::Dse(d)
             }
+            // An autotune request's `devices` is a pure fleet
+            // cross-check: the artifact is bit-identical for every
+            // value, so the cache keys the choice record itself.
+            SimRequest::Autotune { extended, devices: _ } => {
+                SimRequest::Autotune { extended: *extended, devices: None }
+            }
             other => *other,
         }
     }
@@ -413,6 +437,7 @@ impl SimRequest {
             SimRequest::TrainCost { .. } => "traincost",
             SimRequest::Fleet(_) => "fleet",
             SimRequest::Dse(_) => "dse",
+            SimRequest::Autotune { .. } => "autotune",
         }
     }
 }
@@ -447,6 +472,7 @@ mod tests {
         assert_eq!(SimRequest::TrainCost { devices: None }.name(), "traincost");
         let fleet: SimRequest = FleetRequest::new(2).extended(true).into();
         assert_eq!(fleet.name(), "fleet");
+        assert_eq!(SimRequest::Autotune { extended: false, devices: None }.name(), "autotune");
     }
 
     #[test]
@@ -499,6 +525,11 @@ mod tests {
         assert_eq!(fleet.cache_key(), fleet);
         let fig: SimRequest = FigureRequest::new(Figure::Runtime).devices(2).into();
         assert_eq!(fig.cache_key(), fig);
+        // Autotune's `devices` is a verification knob, not semantics.
+        let tuned = SimRequest::Autotune { extended: true, devices: Some(8) };
+        assert_eq!(tuned.cache_key(), SimRequest::Autotune { extended: true, devices: None });
+        assert!(tuned.validate().is_ok());
+        assert!(SimRequest::Autotune { extended: false, devices: Some(0) }.validate().is_err());
     }
 
     #[test]

@@ -91,9 +91,11 @@ pub fn addrgen_area_for(mode: Mode, module: Module, lanes: usize) -> ModuleArea 
     let adders_um2 = (3 * lanes) as f64 * unit::ADD32;
     // NZ detection (Eqs. 2–4): 4 comparators per lane in BP mode,
     // 2 per lane (padding bounds only) in traditional mode.
+    // (The EcoFlow scatter variants reuse BP's implicit frontend —
+    // same NZ/bounds comparators, same recovery crossbar class.)
     let cmps = match mode {
         Mode::Traditional => 2 * lanes,
-        Mode::BpIm2col => 4 * lanes,
+        Mode::BpIm2col | Mode::EcoOutputStationary | Mode::EcoInputStationary => 4 * lanes,
     };
     let comparators_um2 = cmps as f64 * unit::CMP32;
     // Pipeline registers: 64 bits of (address + tag) per stage per lane.
@@ -103,7 +105,7 @@ pub fn addrgen_area_for(mode: Mode, module: Module, lanes: usize) -> ModuleArea 
     // compacted-data staging registers (lanes x 32 bits x 2 ranks).
     let crossbar_um2 = match mode {
         Mode::Traditional => 0.0,
-        Mode::BpIm2col => {
+        Mode::BpIm2col | Mode::EcoOutputStationary | Mode::EcoInputStationary => {
             // Priority encode / mask distribute: masks carry one bit
             // per lane, so the fanout factor scales with the lane
             // count (16 at the paper's platform — Table IV unchanged).

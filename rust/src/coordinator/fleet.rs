@@ -205,8 +205,31 @@ impl Fleet {
     /// shared plan cache; devices are then scheduled deterministically
     /// in virtual time with work stealing.
     pub fn run_network(&self, net: &Network, mode: Mode) -> FleetReport {
+        self.run_jobs(net, self.shard_jobs(net, mode))
+    }
+
+    /// Execute every (sharded) job of `net` with per-job modes resolved
+    /// through the config's [`crate::accel::LoweringSelect`] — the
+    /// fleet-side counterpart of
+    /// [`crate::coordinator::Scheduler::run_network_select`].
+    ///
+    /// Resolution happens after sharding through the same pure
+    /// [`PlanCache::strategy_for`] function the scheduler uses, so the
+    /// per-layer choices are bit-identical at any device width: under
+    /// layer parallelism the job list *is* the scheduler's, and under
+    /// data parallelism each batch slice resolves against its own
+    /// (sliced) geometry.
+    pub fn run_network_select(&self, net: &Network) -> FleetReport {
+        let jobs = crate::coordinator::scheduler::resolve_job_modes(
+            self.shard_jobs(net, Mode::BpIm2col),
+            &self.cfg,
+            &self.cache,
+        );
+        self.run_jobs(net, jobs)
+    }
+
+    fn run_jobs(&self, net: &Network, jobs: Vec<BackpropJob>) -> FleetReport {
         // ---- host-parallel metric computation (plan once per geometry) ----
-        let jobs = self.shard_jobs(net, mode);
         let mut results = compute_results(jobs, self.cfg, &self.cache, default_workers());
         results.sort_by_key(|r| r.job.id);
 
@@ -392,6 +415,25 @@ mod tests {
             .with_sharding(Sharding::DataParallel)
             .run_network(&net, Mode::Traditional);
         assert_eq!(sliced.total.storage_bytes, whole.total.storage_bytes);
+    }
+
+    #[test]
+    fn select_totals_identical_at_any_device_width() {
+        // The autotuner's choices resolve through a pure function of
+        // (pass, params, config), before jobs reach any device — so the
+        // chosen mix and every aggregate are bit-identical whether one
+        // device runs the pass or eight do.
+        use crate::accel::LoweringSelect;
+        let cfg = AccelConfig { strategy: LoweringSelect::Auto, ..AccelConfig::default() };
+        let net = workloads::resnet();
+        let single = Scheduler::new(cfg).run_network_select(&net);
+        for devices in [1, 2, 4, 8] {
+            let rep = Fleet::new(cfg, devices).run_network_select(&net);
+            assert_reports_bit_equal(&rep.total, &single);
+            for (a, b) in rep.total.results.iter().zip(&single.results) {
+                assert_eq!(a.job.mode, b.job.mode, "device width changed a choice");
+            }
+        }
     }
 
     #[test]

@@ -248,6 +248,41 @@ impl Scheduler {
         let results = compute_results(self.jobs_for(net, mode), self.cfg, &self.cache, self.workers);
         NetworkReport::from_results(net.name, results)
     }
+
+    /// Run every job of `net` with each job's mode resolved through the
+    /// config's [`crate::accel::LoweringSelect`]: a fixed strategy
+    /// applies to every job, `auto` lets the per-layer autotuner pick
+    /// (DESIGN.md §15). Resolution happens *before* the jobs hit the
+    /// worker pool, through the pure per-`(pass, params, config)`
+    /// function [`PlanCache::strategy_for`] — so the chosen mix is
+    /// independent of worker count, and a [`crate::coordinator::Fleet`]
+    /// resolving the same jobs inherits the identical choices at any
+    /// device width.
+    pub fn run_network_select(&self, net: &Network) -> NetworkReport {
+        let results =
+            compute_results(self.jobs_select(net), self.cfg, &self.cache, self.workers);
+        NetworkReport::from_results(net.name, results)
+    }
+
+    /// Enumerate the backward-pass jobs of a network with per-job modes
+    /// resolved through the config's strategy selection.
+    pub fn jobs_select(&self, net: &Network) -> Vec<BackpropJob> {
+        resolve_job_modes(self.jobs_for(net, Mode::BpIm2col), &self.cfg, &self.cache)
+    }
+}
+
+/// Resolve each job's mode through `cfg.strategy` (shared by the
+/// scheduler and the fleet — one resolution function, bit-identical
+/// choices everywhere).
+pub(crate) fn resolve_job_modes(
+    mut jobs: Vec<BackpropJob>,
+    cfg: &AccelConfig,
+    cache: &Arc<PlanCache>,
+) -> Vec<BackpropJob> {
+    for j in &mut jobs {
+        j.mode = cache.strategy_for(j.pass, &j.params, cfg);
+    }
+    jobs
 }
 
 #[cfg(test)]
@@ -349,6 +384,43 @@ mod tests {
         let s = Scheduler::new(AccelConfig::default());
         let jobs = s.jobs_for(&net, Mode::Traditional);
         assert_eq!(jobs.len(), net.layers.len() * 2);
+    }
+
+    #[test]
+    fn select_under_fixed_strategy_matches_run_network() {
+        // The default config fixes BP-im2col, so the select path is the
+        // plain run_network path, bit for bit.
+        let net = workloads::resnet();
+        let s = Scheduler::new(AccelConfig::default());
+        let fixed = s.run_network(&net, Mode::BpIm2col);
+        let select = s.run_network_select(&net);
+        assert_eq!(select.loss_cycles, fixed.loss_cycles);
+        assert_eq!(select.grad_cycles, fixed.grad_cycles);
+        assert_eq!(select.loss_traffic, fixed.loss_traffic);
+        assert_eq!(select.storage_bytes, fixed.storage_bytes);
+    }
+
+    #[test]
+    fn auto_select_mixes_strategies_and_never_loses() {
+        use crate::accel::LoweringSelect;
+        let cfg = AccelConfig { strategy: LoweringSelect::Auto, ..AccelConfig::default() };
+        let s = Scheduler::new(cfg);
+        let net = workloads::resnet();
+        let auto = s.run_network_select(&net);
+        // The strided stem/downsample layers pick an EcoFlow scatter
+        // form while stride-1 layers keep BP-im2col: at least two
+        // distinct strategies across the backward pass.
+        let mut modes: Vec<&str> = auto.results.iter().map(|r| r.job.mode.name()).collect();
+        modes.sort_unstable();
+        modes.dedup();
+        assert!(modes.len() >= 2, "expected a strategy mix, got {modes:?}");
+        // Under the runtime objective, Auto's per-pass totals are never
+        // worse than lowering the whole network with any fixed strategy.
+        for strat in Mode::STRATEGIES {
+            let fixed = s.run_network(&net, strat);
+            assert!(auto.loss_cycles <= fixed.loss_cycles, "{}", strat.name());
+            assert!(auto.grad_cycles <= fixed.grad_cycles, "{}", strat.name());
+        }
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! storage, and a structural area proxy
 //! ([`crate::area::accelerator_area_um2`]). The first four come from
 //! the same plan-cache path every figure uses
-//! ([`crate::accel::plan::PlanCache::metrics`], BP-im2col mode), summed
+//! ([`crate::accel::plan::PlanCache::metrics_select`] — each pass
+//! lowered by the config's strategy selection, so the DSE
+//! `lowering_strategy` axis scores fixed strategies and the per-layer
+//! autotuner through one code path), summed
 //! over the workload layers in fixed order — so a point's score is a
 //! pure function of `(config, workload set)` and bit-identical however
 //! many evaluation threads the search runs. The config's data-sparsity
@@ -28,7 +31,7 @@ use crate::accel::tiling::GemmShape;
 use crate::accel::AccelConfig;
 use crate::area;
 use crate::conv::ConvParams;
-use crate::im2col::pipeline::{Mode, Pass};
+use crate::im2col::pipeline::Pass;
 
 /// Number of scored objectives.
 pub const NUM_OBJECTIVES: usize = 5;
@@ -46,8 +49,9 @@ pub const OBJECTIVE_COLUMNS: [(&str, &str); NUM_OBJECTIVES] = [
 /// (every objective minimized).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Objectives {
-    /// BP-im2col backward runtime (loss + grad), cycles, summed over
-    /// the workload layers.
+    /// Backward runtime (loss + grad) under the config's
+    /// lowering-strategy selection, cycles, summed over the workload
+    /// layers.
     pub runtime_cycles: f64,
     /// Off-chip traffic of the backward passes, bytes.
     pub traffic_bytes: u64,
@@ -102,9 +106,10 @@ pub fn feasibility(cfg: &AccelConfig, layers: &[(ConvParams, usize)]) -> Result<
 }
 
 /// Score `cfg` over the workload layers through the shared plan cache
-/// (BP-im2col mode, both backward passes). Deterministic: layers are
-/// visited in slice order, so the f64 sums are reproducible bit for
-/// bit; cache hits return the plans a cold build would.
+/// (both backward passes, each lowered per `cfg.strategy` — the fixed
+/// strategy, or the per-layer autotuner under `auto`). Deterministic:
+/// layers are visited in slice order, so the f64 sums are reproducible
+/// bit for bit; cache hits return the plans a cold build would.
 pub fn evaluate(
     cfg: &AccelConfig,
     layers: &[(ConvParams, usize)],
@@ -117,8 +122,8 @@ pub fn evaluate(
     // lint: allow(float-accumulation) — layers slice order is fixed by the caller
     for (p, count) in layers {
         let count = *count as u64;
-        let loss = cache.metrics(Pass::Loss, Mode::BpIm2col, p, cfg);
-        let grad = cache.metrics(Pass::Grad, Mode::BpIm2col, p, cfg);
+        let loss = cache.metrics_select(Pass::Loss, p, cfg);
+        let grad = cache.metrics_select(Pass::Grad, p, cfg);
         runtime += (loss.total_cycles() + grad.total_cycles()) * count as f64;
         traffic += (loss.traffic.total() + grad.traffic.total()) * count;
         reads += (loss.buffer_a_reads
@@ -205,6 +210,7 @@ mod tests {
     use super::*;
     use crate::accel::timing::simulate_pass;
     use crate::api::DseWorkloads;
+    use crate::im2col::pipeline::Mode;
 
     fn paper_layers() -> Vec<(ConvParams, usize)> {
         DseWorkloads::Paper.layers()
@@ -241,6 +247,39 @@ mod tests {
         assert!(fast.runtime_cycles < slow.runtime_cycles);
         // Traffic is geometry-only: bandwidth does not move bytes.
         assert_eq!(fast.traffic_bytes, slow.traffic_bytes);
+    }
+
+    #[test]
+    fn strategy_selection_flows_into_the_score() {
+        use crate::accel::strategy::{LoweringSelect, LoweringStrategy};
+        let layers = paper_layers();
+        let cache = Arc::new(PlanCache::new());
+        let fixed_bp = evaluate(&AccelConfig::default(), &layers, &cache);
+        // The autotuned point is never slower than any fixed strategy
+        // (it picks the per-pass runtime minimum among them).
+        let auto = evaluate(
+            &AccelConfig { strategy: LoweringSelect::Auto, ..AccelConfig::default() },
+            &layers,
+            &cache,
+        );
+        for s in LoweringStrategy::STRATEGIES {
+            let fixed = evaluate(
+                &AccelConfig { strategy: LoweringSelect::Fixed(s), ..AccelConfig::default() },
+                &layers,
+                &cache,
+            );
+            assert!(auto.runtime_cycles <= fixed.runtime_cycles, "{}", s.name());
+        }
+        // And Fixed(BpIm2col) is exactly the default path, bit for bit.
+        let explicit_bp = evaluate(
+            &AccelConfig {
+                strategy: LoweringSelect::Fixed(LoweringStrategy::BpIm2col),
+                ..AccelConfig::default()
+            },
+            &layers,
+            &cache,
+        );
+        assert_eq!(explicit_bp, fixed_bp);
     }
 
     #[test]

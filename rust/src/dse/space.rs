@@ -1,7 +1,7 @@
 //! The searchable [`crate::accel::AccelConfig`] space: typed axes,
 //! compact range and point specs, and grid enumeration.
 //!
-//! A [`SpaceSpec`] is the *wire form* of a search space — ten
+//! A [`SpaceSpec`] is the *wire form* of a search space — eleven
 //! [`AxisRange`]s (one per `AccelConfig` field), each a plain integer
 //! triple so the whole spec is `Copy + Eq + Hash` and rides inside
 //! [`crate::api::SimRequest`] unchanged. Fractional axes
@@ -14,16 +14,17 @@
 //! [`crate::conv::ConvParams::parse_spec`] convention):
 //!
 //! * an **axis range** is `V` or `LO:HI:STEP` (`--axis array_dim=8:16:8`),
-//! * a **design point** is `t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0`
+//! * a **design point** is `t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0/y1`
 //!   ([`point_spec`] / [`parse_point_spec`]) — every frontier row prints
 //!   one, and feeding it back reproduces the exact configuration.
 
+use crate::accel::strategy::LoweringSelect;
 use crate::accel::AccelConfig;
 use crate::sim::dram::DramModel;
 use crate::sparse::SparseLowering;
 
 /// Number of search axes (one per [`AccelConfig`] field).
-pub const NUM_AXES: usize = 10;
+pub const NUM_AXES: usize = 11;
 
 /// Fixed-point scale of the fractional axes (values in thousandths).
 pub const MILLI: u64 = 1000;
@@ -45,12 +46,13 @@ pub const AXIS_NAMES: [&str; NUM_AXES] = [
     "sparse_skip",
     "density",
     "lowering",
+    "lowering_strategy",
 ];
 
 /// Which axes hold fixed-point thousandths (the others are plain
 /// integers).
 const AXIS_IS_MILLI: [bool; NUM_AXES] =
-    [false, true, true, false, false, false, true, false, true, false];
+    [false, true, true, false, false, false, true, false, true, false, false];
 
 /// One inclusive arithmetic range `lo, lo+step, ..., <= hi` over an
 /// axis's raw integer domain (thousandths for fractional axes).
@@ -189,6 +191,11 @@ pub struct SpaceSpec {
     /// ([`SparseLowering::code`]: 0 = dense, 1 = column combining,
     /// 2 = SPOTS; a `0:2:1` range sweeps all three).
     pub lowering: AxisRange,
+    /// Structural lowering-strategy selection code
+    /// ([`LoweringSelect::code`]: 0 = trad, 1 = bp, 2 = eco-os,
+    /// 3 = eco-is, 4 = auto; a `0:4:1` range sweeps every fixed
+    /// strategy plus the per-layer autotuner).
+    pub lowering_strategy: AxisRange,
 }
 
 impl Default for SpaceSpec {
@@ -210,6 +217,10 @@ impl Default for SpaceSpec {
             sparse_skip: AxisRange::single(0),
             density: AxisRange::single(MILLI),
             lowering: AxisRange::single(0),
+            // Pinned to the paper's BP-im2col (code 1), so the default
+            // sweep's grid — and every previously published frontier —
+            // is unchanged by the strategy axis.
+            lowering_strategy: AxisRange::single(1),
         }
     }
 }
@@ -228,6 +239,7 @@ impl SpaceSpec {
             self.sparse_skip,
             self.density,
             self.lowering,
+            self.lowering_strategy,
         ]
     }
 
@@ -243,7 +255,8 @@ impl SpaceSpec {
             6 => &mut self.reorg_cycles_per_elem,
             7 => &mut self.sparse_skip,
             8 => &mut self.density,
-            _ => &mut self.lowering,
+            9 => &mut self.lowering,
+            _ => &mut self.lowering_strategy,
         }
     }
 
@@ -362,6 +375,13 @@ impl SpaceSpec {
         bounded("sparse_skip", self.sparse_skip, 0, 1)?;
         bounded("density", self.density, 1, MILLI)?;
         bounded("lowering", self.lowering, 0, SparseLowering::ALL.len() as u64 - 1)?;
+        // 0..=3 are the fixed strategies, 4 is the autotuner.
+        bounded(
+            "lowering_strategy",
+            self.lowering_strategy,
+            0,
+            crate::accel::strategy::LoweringStrategy::STRATEGIES.len() as u64,
+        )?;
         if self.grid_size() > 1 << 62 {
             return Err("search space exceeds 2^62 grid points".to_string());
         }
@@ -387,6 +407,12 @@ impl SpaceSpec {
             density_millis: v(8) as usize,
             lowering: SparseLowering::from_code(v(9))
                 .expect("lowering axis validated to 0..=2"),
+            strategy: LoweringSelect::from_code(v(10))
+                .expect("lowering_strategy axis validated to 0..=4"),
+            // The axis carries only the strategy selection; the `auto`
+            // objective stays the default (runtime), matching the
+            // objective DSE search itself optimizes.
+            objective: crate::accel::strategy::AutoObjective::Runtime,
         }
     }
 
@@ -429,6 +455,12 @@ fn raw_values(cfg: &AccelConfig) -> Option<[u64; NUM_AXES]> {
         let m = f * MILLI as f64;
         (m.fract() == 0.0 && m <= u64::MAX as f64).then_some(m as u64)
     };
+    // The grid always evaluates `auto` under the runtime objective
+    // (see `config_at`); a config autotuning toward a different
+    // objective lies off every axis.
+    if cfg.objective != crate::accel::strategy::AutoObjective::Runtime {
+        return None;
+    }
     Some([
         cfg.array_dim as u64,
         milli(cfg.dram.elems_per_cycle)?,
@@ -440,6 +472,7 @@ fn raw_values(cfg: &AccelConfig) -> Option<[u64; NUM_AXES]> {
         cfg.sparse_skip as u64,
         cfg.density_millis as u64,
         cfg.lowering.code() as u64,
+        cfg.strategy.code(),
     ])
 }
 
@@ -449,9 +482,11 @@ fn fmt_f64(f: f64) -> String {
 }
 
 /// The compact, reproducible spec of one design point:
-/// `t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>/d<density>/p<0|1|2>`.
+/// `t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>/d<density>/p<0|1|2>/y<0..=4>`.
 /// [`parse_point_spec`] decodes it back to the identical
-/// [`AccelConfig`], so any frontier row can be re-simulated exactly.
+/// [`AccelConfig`], so any frontier row can be re-simulated exactly
+/// (the `auto` objective is not part of the spec — the grid always
+/// autotunes under the runtime objective, see [`SpaceSpec::config_at`]).
 ///
 /// # Example
 ///
@@ -460,13 +495,13 @@ fn fmt_f64(f: f64) -> String {
 /// use bp_im2col::dse::space::{parse_point_spec, point_spec};
 ///
 /// let spec = point_spec(&AccelConfig::default());
-/// assert_eq!(spec, "t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0");
+/// assert_eq!(spec, "t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0/y1");
 /// let cfg = parse_point_spec(&spec).unwrap();
 /// assert_eq!(point_spec(&cfg), spec);
 /// ```
 pub fn point_spec(cfg: &AccelConfig) -> String {
     format!(
-        "t{}/e{}/o{}/l{}/a{}/b{}/r{}/s{}/d{}/p{}",
+        "t{}/e{}/o{}/l{}/a{}/b{}/r{}/s{}/d{}/p{}/y{}",
         cfg.array_dim,
         fmt_f64(cfg.dram.elems_per_cycle),
         fmt_f64(cfg.dram.burst_overhead),
@@ -477,17 +512,18 @@ pub fn point_spec(cfg: &AccelConfig) -> String {
         cfg.sparse_skip as u8,
         fmt_milli(cfg.density_millis as u64),
         cfg.lowering.code(),
+        cfg.strategy.code(),
     )
 }
 
 /// Parse a [`point_spec`] string back into its configuration. Strict:
-/// all ten `prefix+value` components, in order.
+/// all eleven `prefix+value` components, in order.
 pub fn parse_point_spec(spec: &str) -> Result<AccelConfig, String> {
     let parts: Vec<&str> = spec.split('/').collect();
-    const PREFIXES: [char; NUM_AXES] = ['t', 'e', 'o', 'l', 'a', 'b', 'r', 's', 'd', 'p'];
+    const PREFIXES: [char; NUM_AXES] = ['t', 'e', 'o', 'l', 'a', 'b', 'r', 's', 'd', 'p', 'y'];
     if parts.len() != NUM_AXES {
         return Err(format!(
-            "point spec must be t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>/d<density>/p<0|1|2>, got {spec:?}"
+            "point spec must be t<T>/e<elems>/o<overhead>/l<burst>/a<bufA>/b<bufB>/r<reorg>/s<0|1>/d<density>/p<0|1|2>/y<0..=4>, got {spec:?}"
         ));
     }
     let mut vals: [&str; NUM_AXES] = [""; NUM_AXES];
@@ -523,6 +559,10 @@ pub fn parse_point_spec(spec: &str) -> Result<AccelConfig, String> {
         .parse::<u64>()
         .map_err(|_| format!("bad point spec component {:?}", vals[9]))
         .and_then(|code| SparseLowering::from_code(code).map_err(|e| format!("point spec: {e}")))?;
+    let strategy = vals[10]
+        .parse::<u64>()
+        .map_err(|_| format!("bad point spec component {:?}", vals[10]))
+        .and_then(|code| LoweringSelect::from_code(code).map_err(|e| format!("point spec: {e}")))?;
     Ok(AccelConfig {
         array_dim: int(vals[0])?,
         dram: DramModel {
@@ -536,6 +576,8 @@ pub fn parse_point_spec(spec: &str) -> Result<AccelConfig, String> {
         sparse_skip: sparse,
         density_millis: density_millis as usize,
         lowering,
+        strategy,
+        objective: crate::accel::strategy::AutoObjective::Runtime,
     })
 }
 
@@ -628,6 +670,9 @@ mod tests {
         assert_eq!(s.density, AxisRange::new(125, 1000, 125));
         s.set_axis("lowering", "0:2:1").unwrap();
         assert_eq!(s.lowering.count(), 3);
+        // The structural strategy axis: every fixed strategy plus auto.
+        s.set_axis("lowering_strategy", "0:4:1").unwrap();
+        assert_eq!(s.lowering_strategy.count(), 5);
         // Single-value spans canonicalize to the bare form, so
         // `16:16:1`, `8:16:9` and their `V` spellings are one request
         // (and one response-cache key) each.
@@ -691,6 +736,12 @@ mod tests {
         let mut s = SpaceSpec::default();
         s.set_axis("lowering", "0:3:1").unwrap();
         assert!(s.validate().is_err(), "lowering code beyond 0..=2");
+        let mut s = SpaceSpec::default();
+        s.set_axis("lowering_strategy", "0:5:1").unwrap();
+        assert!(s.validate().is_err(), "strategy code beyond 0..=4 (auto)");
+        let mut s = SpaceSpec::default();
+        s.set_axis("lowering_strategy", "0:4:1").unwrap();
+        s.validate().unwrap();
     }
 
     #[test]
@@ -725,7 +776,7 @@ mod tests {
         cfg.dram.elems_per_cycle = 0.5;
         cfg.sparse_skip = true;
         let spec = point_spec(&cfg);
-        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1/d1/p0");
+        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1/d1/p0/y1");
         let back = parse_point_spec(&spec).unwrap();
         assert_eq!(point_spec(&back), spec);
         assert_eq!(back.dram.elems_per_cycle, 0.5);
@@ -734,20 +785,32 @@ mod tests {
         cfg.density_millis = 250;
         cfg.lowering = SparseLowering::Spots;
         let spec = point_spec(&cfg);
-        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1/d0.25/p2");
+        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1/d0.25/p2/y1");
         let back = parse_point_spec(&spec).unwrap();
         assert_eq!(point_spec(&back), spec);
         assert_eq!(back.density_millis, 250);
         assert_eq!(back.lowering, SparseLowering::Spots);
+        // Autotuned design point.
+        cfg.strategy = LoweringSelect::Auto;
+        let spec = point_spec(&cfg);
+        assert_eq!(spec, "t16/e0.5/o8/l64/a32768/b32768/r4/s1/d0.25/p2/y4");
+        let back = parse_point_spec(&spec).unwrap();
+        assert_eq!(back.strategy, LoweringSelect::Auto);
+        assert_eq!(point_spec(&back), spec);
         // Strictness.
         assert!(parse_point_spec("t16/e16").is_err(), "too short");
         assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0").is_err(), "pre-sparse length");
-        assert!(parse_point_spec("x16/e16/o8/l64/a1/b1/r4/s0/d1/p0").is_err(), "bad prefix");
-        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s2/d1/p0").is_err(), "bad flag");
-        assert!(parse_point_spec("t16/e-1/o8/l64/a1/b1/r4/s0/d1/p0").is_err(), "negative");
-        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d0/p0").is_err(), "zero density");
-        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d2/p0").is_err(), "density > 1");
-        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d1/p3").is_err(), "bad lowering");
+        assert!(
+            parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d1/p0").is_err(),
+            "pre-strategy length"
+        );
+        assert!(parse_point_spec("x16/e16/o8/l64/a1/b1/r4/s0/d1/p0/y1").is_err(), "bad prefix");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s2/d1/p0/y1").is_err(), "bad flag");
+        assert!(parse_point_spec("t16/e-1/o8/l64/a1/b1/r4/s0/d1/p0/y1").is_err(), "negative");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d0/p0/y1").is_err(), "zero density");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d2/p0/y1").is_err(), "density > 1");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d1/p3/y1").is_err(), "bad lowering");
+        assert!(parse_point_spec("t16/e16/o8/l64/a1/b1/r4/s0/d1/p0/y5").is_err(), "bad strategy");
     }
 
     #[test]

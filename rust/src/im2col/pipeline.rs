@@ -10,27 +10,15 @@ use crate::im2col::{dilated, reorg, traditional, transposed};
 use crate::tensor::Tensor4;
 
 /// Which im2col algorithm the accelerator runs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Mode {
-    /// Traditional im2col: reorganize (materialize zero-spaces), then
-    /// dense explicit lowering.
-    Traditional,
-    /// BP-im2col: implicit lowering straight from the compact tensors.
-    BpIm2col,
-}
-
-impl Mode {
-    /// All modes, in baseline-first order (matches the paper's legends).
-    pub const ALL: [Mode; 2] = [Mode::Traditional, Mode::BpIm2col];
-
-    /// The paper's legend name.
-    pub fn legend(&self) -> &'static str {
-        match self {
-            Mode::Traditional => "Original",
-            Mode::BpIm2col => "Ours",
-        }
-    }
-}
+///
+/// **Deprecated alias** of [`crate::accel::strategy::LoweringStrategy`]
+/// — the historical two-variant `Mode` grew into the strategy family of
+/// DESIGN.md §15, and this re-export keeps every `simulate_pass`
+/// caller, bench and example compiling unchanged. `Mode::ALL` is still
+/// the paper's two modes ([`LoweringStrategy::ALL`]); the full family
+/// is [`LoweringStrategy::STRATEGIES`]. There is exactly one dispatch
+/// over it: [`crate::accel::plan::LayerPlan::build`].
+pub use crate::accel::strategy::LoweringStrategy as Mode;
 
 /// Which backpropagation pass.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -58,9 +46,12 @@ impl Pass {
 pub fn loss_calc(dy: &Tensor4, w: &Tensor4, p: &ConvParams, mode: Mode) -> Tensor4 {
     // The baseline materializes the zero-spaced map once per layer; every
     // group's stationary matrix is lowered from the same copy.
+    // Every implicit strategy (BP and the EcoFlow scatters) computes
+    // the same GEMM from the compact tensors — dataflows differ only in
+    // cycle cost, never in the math.
     let dyz = match mode {
         Mode::Traditional => Some(reorg::dilate_pad_loss(dy, p)),
-        Mode::BpIm2col => None,
+        Mode::BpIm2col | Mode::EcoOutputStationary | Mode::EcoInputStationary => None,
     };
     let mut dx = Tensor4::zeros([p.b, p.c, p.hi, p.wi]);
     for g in 0..p.groups {
@@ -78,7 +69,7 @@ pub fn loss_calc(dy: &Tensor4, w: &Tensor4, p: &ConvParams, mode: Mode) -> Tenso
 pub fn grad_calc(x: &Tensor4, dy: &Tensor4, p: &ConvParams, mode: Mode) -> Tensor4 {
     let dyd = match mode {
         Mode::Traditional => Some(reorg::dilate_loss(dy, p)),
-        Mode::BpIm2col => None,
+        Mode::BpIm2col | Mode::EcoOutputStationary | Mode::EcoInputStationary => None,
     };
     let xpad = reorg::pad_input(x, p);
     let mut dw = Tensor4::zeros([p.n, p.cg(), p.kh, p.kw]);
@@ -117,15 +108,13 @@ mod tests {
             assert!(dx.max_abs_diff(&dx_oracle) < 1e-4, "{mode:?} dX mismatch for {p:?}");
             assert!(dw.max_abs_diff(&dw_oracle) < 1e-3, "{mode:?} dW mismatch for {p:?}");
         }
-        // And the two modes agree bit-for-bit (same GEMM, same operands).
-        assert_eq!(
-            loss_calc(&dy, &w, &p, Mode::Traditional),
-            loss_calc(&dy, &w, &p, Mode::BpIm2col)
-        );
-        assert_eq!(
-            grad_calc(&x, &dy, &p, Mode::Traditional),
-            grad_calc(&x, &dy, &p, Mode::BpIm2col)
-        );
+        // And every strategy agrees bit-for-bit (same GEMM, same
+        // operands — the explicit/implicit/scatter split is cycle-level
+        // only).
+        for s in Mode::STRATEGIES {
+            assert_eq!(loss_calc(&dy, &w, &p, s), loss_calc(&dy, &w, &p, Mode::BpIm2col), "{s:?}");
+            assert_eq!(grad_calc(&x, &dy, &p, s), grad_calc(&x, &dy, &p, Mode::BpIm2col), "{s:?}");
+        }
     }
 
     #[test]

@@ -74,6 +74,13 @@
 //!   --lowering`, DSE `density`/`lowering` axes). The [`sparsity`]
 //!   facade re-exports this alongside the paper's *structural*
 //!   zero-space closed forms so the two notions can't be confused.
+//! * `accel::strategy` + the plan-cache autotuner (DESIGN.md §15) —
+//!   the lowering dataflow as a first-class axis: the paper's two
+//!   strategies plus two EcoFlow-style scatter dataflows behind one
+//!   [`accel::strategy::LoweringStrategy`] family, a deterministic
+//!   per-layer autotuner (`--lowering-strategy auto`, `repro
+//!   autotune`) that prices every candidate through the shared plan
+//!   cache and records the mix it chose.
 //!
 //! See the top-level `README.md` for a quickstart and the full CLI
 //! command table, `DESIGN.md` for modeling decisions, and

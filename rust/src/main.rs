@@ -55,7 +55,14 @@ COMMANDS:
                         within --budget, seeded sampling + hill-climb
                         refinement beyond it; rows carry reproducible
                         point specs
-                        (t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0)
+                        (t16/e16/o8/l64/a32768/b32768/r4/s0/d1/p0/y1)
+  autotune              Per-layer lowering-strategy autotuner: score
+                        every workload layer x pass under every strategy
+                        (trad, bp, eco-os, eco-is), record the winner
+                        per row plus the strategy mix and the win margin
+                        over the best single fixed strategy. --devices N
+                        cross-checks that an N-device fleet inherits the
+                        same choices bit-identically
   serve                 Long-running HTTP/1.1 JSON server over the query
                         facade: POST /v1/query, POST /v1/batch,
                         GET /v1/requests, GET /healthz, GET /metrics,
@@ -105,7 +112,19 @@ OPTIONS:
                               passes across N simulated accelerators
                               (fleet default 4; totals are bit-identical
                               for any N, the fleet summary artifact shows
-                              the scaling in every output format)
+                              the scaling in every output format). On
+                              autotune: fleet cross-check only, the
+                              artifact bytes never change
+  --lowering-strategy S       Lowering strategy the platform runs:
+                              trad|bp|eco-os|eco-is|auto (default bp;
+                              auto picks per layer+pass under the
+                              config's objective). The eco-* EcoFlow
+                              dataflows normalize to bp where their
+                              closed forms coincide (stride 1, no
+                              dilation)
+  --objective O               Autotune scoring objective:
+                              runtime|traffic|reads (autotune; default
+                              runtime)
   --steps N                   Training steps (train; default 300)
   --seed N                    Sampling seed (dse; default 0) / training
                               seed (train; default 0)
@@ -115,12 +134,15 @@ OPTIONS:
                               KEY: array_dim, elems_per_cycle,
                               burst_overhead, burst_len, buf_a_half,
                               buf_b_half, reorg_cycles_per_elem,
-                              sparse_skip, density, lowering. RANGE: a
+                              sparse_skip, density, lowering,
+                              lowering_strategy. RANGE: a
                               single value V or LO:HI:STEP
                               (elems_per_cycle, burst_overhead,
                               reorg_cycles_per_elem and density accept
                               fractional values; lowering is the code
-                              0=dense 1=cc 2=spots), e.g.
+                              0=dense 1=cc 2=spots; lowering_strategy
+                              is 0=trad 1=bp 2=eco-os 3=eco-is
+                              4=auto), e.g.
                               --axis elems_per_cycle=0.5:4:0.5
                               --axis density=0.25:1:0.25 --axis lowering=0:2:1
   --layer SPEC                Layer geometry (sim: required; dse: score
@@ -152,12 +174,15 @@ not itself start with `--`.
 ";
 
 /// Options every command accepts.
-const UNIVERSAL_OPTS: [&str; 4] = ["--config", "--bandwidth", "--csv", "--json"];
+const UNIVERSAL_OPTS: [&str; 5] =
+    ["--config", "--bandwidth", "--lowering-strategy", "--csv", "--json"];
 
 /// Options that consume a value (everything else is a bare flag).
-const VALUE_OPTS: [&str; 16] = [
+const VALUE_OPTS: [&str; 18] = [
     "--config",
     "--bandwidth",
+    "--lowering-strategy",
+    "--objective",
     "--pass",
     "--devices",
     "--layer",
@@ -204,7 +229,7 @@ const fn cmd(name: &'static str, extra_opts: &'static [&'static str]) -> Command
     CommandSpec { name, extra_opts, universal: true, positionals: false }
 }
 
-const COMMANDS: [CommandSpec; 17] = [
+const COMMANDS: [CommandSpec; 18] = [
     cmd("table2", &[]),
     cmd("table3", &[]),
     cmd("table4", &[]),
@@ -218,6 +243,7 @@ const COMMANDS: [CommandSpec; 17] = [
     cmd("traincost", &["--devices"]),
     cmd("fleet", &["--devices", "--extended"]),
     cmd("dse", &["--budget", "--seed", "--axis", "--extended", "--layer", "--devices"]),
+    cmd("autotune", &["--extended", "--devices", "--objective"]),
     // `serve` is an action, not a one-shot query: it renders nothing, so
     // `--csv`/`--json` are rejected like `train`'s — but it *does*
     // simulate under a platform config, so `--config`/`--bandwidth`
@@ -232,6 +258,7 @@ const COMMANDS: [CommandSpec; 17] = [
             "--shed-queue",
             "--config",
             "--bandwidth",
+            "--lowering-strategy",
         ],
         universal: false,
         positionals: false,
@@ -370,6 +397,12 @@ fn accel_config(opts: &Opts) -> Result<AccelConfig, String> {
     if let Some(v) = opts.value("--lowering") {
         cfg.lowering = bp_im2col::sparse::SparseLowering::parse(v)?;
     }
+    if let Some(v) = opts.value("--lowering-strategy") {
+        cfg.strategy = bp_im2col::accel::strategy::LoweringSelect::parse(v)?;
+    }
+    if let Some(v) = opts.value("--objective") {
+        cfg.objective = bp_im2col::accel::strategy::AutoObjective::parse(v)?;
+    }
     if let Some(v) = opts.value("--density") {
         let f: f64 = v.parse().map_err(|_| format!("bad --density {v:?}"))?;
         if !(f > 0.0 && f <= 1.0) {
@@ -433,6 +466,7 @@ fn build_requests(cmd: &str, opts: &Opts) -> Result<Vec<SimRequest>, String> {
             vec![SimRequest::layer(ConvParams::parse_spec(spec)?)]
         }
         "traincost" => vec![SimRequest::TrainCost { devices: devices(opts)? }],
+        "autotune" => vec![SimRequest::Autotune { extended, devices: devices(opts)? }],
         "fleet" => {
             let n = devices(opts)?.unwrap_or(4);
             vec![FleetRequest::new(n).extended(extended).into()]
@@ -758,6 +792,30 @@ mod tests {
         // And the sparse platform knobs stay sim-only at parse time.
         let table2 = COMMANDS.iter().find(|c| c.name == "table2").unwrap();
         let bad: Vec<String> = ["--lowering".into(), "spots".into()].to_vec();
+        assert!(Opts::parse(&bad, table2).is_err());
+    }
+
+    #[test]
+    fn autotune_and_strategy_options_parse() {
+        use bp_im2col::accel::strategy::{AutoObjective, LoweringSelect, LoweringStrategy};
+        let opts = parsed("autotune", &["--extended", "--devices", "4", "--objective", "traffic"]);
+        let reqs = build_requests("autotune", &opts).unwrap();
+        assert_eq!(reqs, vec![SimRequest::Autotune { extended: true, devices: Some(4) }]);
+        assert_eq!(accel_config(&opts).unwrap().objective, AutoObjective::Traffic);
+        // --lowering-strategy is universal: it reconfigures any query
+        // command's platform, with auto as the per-layer selector.
+        let opts = parsed("fig6", &["--lowering-strategy", "eco-os"]);
+        assert_eq!(
+            accel_config(&opts).unwrap().strategy,
+            LoweringSelect::Fixed(LoweringStrategy::EcoOutputStationary)
+        );
+        let opts = parsed("table2", &["--lowering-strategy", "auto"]);
+        assert_eq!(accel_config(&opts).unwrap().strategy, LoweringSelect::Auto);
+        let opts = parsed("table2", &["--lowering-strategy", "nope"]);
+        assert!(accel_config(&opts).is_err());
+        // --objective stays autotune-only at parse time.
+        let table2 = COMMANDS.iter().find(|c| c.name == "table2").unwrap();
+        let bad: Vec<String> = ["--objective".into(), "reads".into()].to_vec();
         assert!(Opts::parse(&bad, table2).is_err());
     }
 

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use crate::accel::metrics::{reduction_pct, speedup};
-use crate::accel::plan::{PlanCache, PlanCacheStats};
+use crate::accel::plan::{AutotuneChoice, PlanCache, PlanCacheStats};
 use crate::accel::{simulate_pass, AccelConfig};
 use crate::coordinator::{Fleet, NetworkReport, Scheduler};
 use crate::im2col::pipeline::{Mode, Pass};
@@ -357,6 +357,56 @@ pub struct FleetBar {
     pub stolen_jobs: usize,
 }
 
+/// One decision record of the per-layer lowering autotuner (`repro
+/// autotune`): which strategy wins one `(layer, pass)` under the
+/// config's [`crate::accel::strategy::AutoObjective`], and what every
+/// candidate would have cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutotuneRow {
+    /// Network the layer belongs to.
+    pub network: String,
+    /// Layer id in the paper's notation.
+    pub layer: String,
+    /// How many times the network instantiates this geometry.
+    pub count: usize,
+    /// Which backpropagation pass the decision covers.
+    pub pass: Pass,
+    /// The autotuner's verdict: the winner plus every candidate's cost
+    /// (indexed like [`crate::accel::strategy::LoweringStrategy::STRATEGIES`]).
+    pub choice: AutotuneChoice,
+}
+
+/// Score every `(layer, pass)` of `nets` through the shared plan cache
+/// and record the autotuner's verdicts (DESIGN.md §15).
+///
+/// Row order is the deterministic catalog order — networks as given,
+/// layers in network order, passes in [`Pass::ALL`] order — and every
+/// cell is a pure function of `(nets, cfg)`: thread count, cache
+/// temperature and frontend leave no trace, so the wrapping artifact
+/// renders byte-identically from the CLI, the HTTP route and the
+/// in-process facade alike (`tests/autotune.rs`).
+pub fn autotune_rows(
+    nets: &[workloads::Network],
+    cfg: &AccelConfig,
+    cache: &PlanCache,
+) -> Vec<AutotuneRow> {
+    let mut rows = Vec::new();
+    for net in nets {
+        for l in &net.layers {
+            for pass in Pass::ALL {
+                rows.push(AutotuneRow {
+                    network: net.name.to_string(),
+                    layer: l.params.id(),
+                    count: l.count,
+                    pass,
+                    choice: cache.autotune(pass, &l.params, cfg),
+                });
+            }
+        }
+    }
+    rows
+}
+
 /// Run every network's backward pass on a `devices`-wide fleet (one
 /// shared plan cache across the whole sweep) and summarize scaling.
 /// Returns the per-network rows plus the final plan-cache counters.
@@ -499,6 +549,35 @@ mod tests {
             assert!(r.trad_step_cycles > r.bp_step_cycles, "{r:?}");
             assert!((0.0..=100.0).contains(&r.backward_share_pct), "{r:?}");
         }
+    }
+
+    #[test]
+    fn autotune_rows_are_deterministic_and_never_beaten_by_the_winner() {
+        use crate::accel::strategy::{LoweringSelect, LoweringStrategy};
+        let cfg = AccelConfig { strategy: LoweringSelect::Auto, ..AccelConfig::default() };
+        let nets = workloads::all_networks();
+        let cache = PlanCache::new();
+        let rows = autotune_rows(&nets, &cfg, &cache);
+        // 2 passes per layer, catalog order.
+        assert_eq!(rows.len(), nets.iter().map(|n| n.layers.len() * 2).sum::<usize>());
+        for r in &rows {
+            let min = r.choice.costs.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert_eq!(r.choice.chosen_cost(), min, "{r:?}");
+        }
+        // At least one network mixes strategies across its backward pass
+        // (the ISSUE's acceptance bar), and a replay through a fresh
+        // cache reproduces every verdict bit-exactly.
+        let distinct: std::collections::BTreeSet<&str> = rows
+            .iter()
+            .filter(|r| r.network == "ResNet")
+            .map(|r| r.choice.chosen.name())
+            .collect();
+        assert!(distinct.len() >= 2, "ResNet never mixes: {distinct:?}");
+        assert!(
+            rows.iter().any(|r| r.choice.chosen != LoweringStrategy::BpIm2col),
+            "autotuner never left the default strategy"
+        );
+        assert_eq!(rows, autotune_rows(&nets, &cfg, &PlanCache::new()));
     }
 
     #[test]

@@ -77,6 +77,18 @@ impl AddrGenPipeline {
     ///   `/Ho''`, `/S` — 4 divider stages.
     /// * BP stationary (grad): the input's im2col has only padding
     ///   (inference-like) — same 3 stages as traditional.
+    ///
+    /// The EcoFlow scatter dataflows (DESIGN.md §15) compute scatter
+    /// *targets* instead of gather sources; both passes share one
+    /// pipeline shape per variant:
+    ///
+    /// * EcoFlow-OS: dynamic **and** stationary modules decompose the
+    ///   compact stream and map accumulator rows — 4 divider stages
+    ///   each (the "different PE-utilization prologue": 136 cycles per
+    ///   stripe vs BP's 68).
+    /// * EcoFlow-IS: the resident operand walks with a 3-stage
+    ///   inference-style pipeline; the streaming side maps scatter
+    ///   targets with 4.
     pub fn build(mode: Mode, pass: Pass, module: Module) -> Self {
         let stages: Vec<Stage> = match (mode, pass, module) {
             // Continuous addresses: incrementer only.
@@ -99,6 +111,23 @@ impl AddrGenPipeline {
                 Stage::div("temp,w = col / Wo''"),
                 Stage::div("b,h = temp / Ho''"),
                 Stage::div("h',w' = (h,w)/S + NZ detect"),
+            ],
+            (Mode::EcoOutputStationary, _, _) => vec![
+                Stage::div("row,col = addr / cols"),
+                Stage::div("b = col/(Ho*Wo) ; k = row%(Kh*Kw)"),
+                Stage::div("h,w = rem / Wo"),
+                Stage::div("acc row = (h*S + k*D - P) + bounds detect"),
+            ],
+            (Mode::EcoInputStationary, _, Module::Stationary) => vec![
+                Stage::div("row,col = addr / cols"),
+                Stage::div("b = col/(Ho*Wo) ; k = row%(Kh*Kw)"),
+                Stage::div("h,w = rem / Wo"),
+                Stage::div("psum row = (h*S + k*D - P) + bounds detect"),
+            ],
+            (Mode::EcoInputStationary, _, Module::Dynamic) => vec![
+                Stage::div("row,col = addr / cols"),
+                Stage::div("b = col/(Ho*Wo) ; kw = row%Kw"),
+                Stage::div("h,w = rem / Wo"),
             ],
         };
         Self { module, stages }
@@ -237,6 +266,19 @@ mod tests {
         assert_eq!(prologue_cycles(Mode::BpIm2col, Pass::Loss, Module::Stationary), 68);
         assert_eq!(prologue_cycles(Mode::BpIm2col, Pass::Grad, Module::Dynamic), 68);
         assert_eq!(prologue_cycles(Mode::BpIm2col, Pass::Grad, Module::Stationary), 51);
+    }
+
+    #[test]
+    fn eco_scatter_prologues() {
+        // DESIGN.md §15: OS pays the deepest prologue (4 + 4 dividers
+        // per stripe = 136 cycles), IS keeps its resident side at the
+        // inference-style 3 stages. Pass-independent by construction.
+        for pass in Pass::ALL {
+            assert_eq!(prologue_cycles(Mode::EcoOutputStationary, pass, Module::Dynamic), 68);
+            assert_eq!(prologue_cycles(Mode::EcoOutputStationary, pass, Module::Stationary), 68);
+            assert_eq!(prologue_cycles(Mode::EcoInputStationary, pass, Module::Dynamic), 51);
+            assert_eq!(prologue_cycles(Mode::EcoInputStationary, pass, Module::Stationary), 68);
+        }
     }
 
     #[test]

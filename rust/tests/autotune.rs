@@ -1,0 +1,262 @@
+//! Autotuner acceptance suite (ISSUE 9):
+//!
+//! 1. Over a seeded 60-geometry property sweep, `Auto` is never
+//!    costlier than any fixed strategy for any `(layer, pass,
+//!    objective)`, ties resolve to the earliest entry of
+//!    [`LoweringStrategy::STRATEGIES`], and the winner's metrics are
+//!    the fixed strategy's metrics bit-for-bit.
+//! 2. The EcoFlow scatter variants are **bit-identical** to BP-im2col
+//!    on stride-1 undilated layers (no zero-space to eliminate, so the
+//!    closed forms must coincide — [`LoweringStrategy::effective`]).
+//! 3. A cold autotune over N distinct `(layer, pass)` keys misses the
+//!    plan cache exactly `N x S` times; a warm one misses zero times.
+//! 4. The `autotune` artifact is byte-identical across device widths
+//!    1/2/4/8 (the `devices` knob is a fleet cross-check, not content)
+//!    and across the CLI (`repro autotune --json`) and HTTP
+//!    (`POST /v1/query`) frontends.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::process::Command;
+use std::thread;
+
+use bp_im2col::accel::plan::PlanCache;
+use bp_im2col::accel::strategy::{AutoObjective, LoweringSelect, LoweringStrategy};
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{render_all_json, Service, SimRequest};
+use bp_im2col::conv::ConvParams;
+use bp_im2col::im2col::pipeline::{Mode, Pass};
+use bp_im2col::server::Server;
+use bp_im2col::tensor::Rng;
+
+/// Draw a random valid generalized geometry (strides and dilation up to
+/// 3, groups in {1, 2, 4}) at workload-ish spatial sizes — planning is
+/// closed-form, so larger layers cost nothing here.
+fn arb_layer(rng: &mut Rng) -> ConvParams {
+    loop {
+        let (kh, kw) = (rng.range(1, 6), rng.range(1, 6));
+        let (dh, dw) = (rng.range(1, 3), rng.range(1, 3));
+        let groups = [1, 1, 1, 2, 4][rng.below(5)];
+        let p = ConvParams::basic(
+            rng.range(1, 5),
+            groups * rng.range(1, 33),
+            rng.range(7, 57),
+            rng.range(7, 57),
+            groups * rng.range(1, 33),
+            kh,
+            kw,
+            1,
+            rng.below(dh * (kh - 1) + 1),
+            rng.below(dw * (kw - 1) + 1),
+        )
+        .with_stride(rng.range(1, 4), rng.range(1, 4))
+        .with_dilation(dh, dw)
+        .with_groups(groups);
+        if p.validate().is_ok() {
+            return p;
+        }
+    }
+}
+
+const TRIALS: usize = 60;
+
+#[test]
+fn auto_is_never_costlier_than_any_fixed_strategy() {
+    let mut rng = Rng::new(0xA070);
+    let cache = PlanCache::new();
+    let mut saw_non_bp_winner = false;
+    for trial in 0..TRIALS {
+        let p = arb_layer(&mut rng);
+        for objective in AutoObjective::ALL {
+            let cfg = AccelConfig {
+                strategy: LoweringSelect::Auto,
+                objective,
+                ..AccelConfig::default()
+            };
+            for pass in Pass::ALL {
+                let choice = cache.autotune(pass, &p, &cfg);
+                for (i, s) in LoweringStrategy::STRATEGIES.iter().enumerate() {
+                    let fixed = objective.cost(&cache.metrics(pass, *s, &p, &cfg));
+                    assert_eq!(
+                        choice.costs[i], fixed,
+                        "trial {trial} {pass:?} {} {}: recorded cost drifted for {p:?}",
+                        objective.name(),
+                        s.name()
+                    );
+                    assert!(
+                        choice.chosen_cost() <= fixed,
+                        "trial {trial} {pass:?} {}: auto {} beaten by fixed {} ({} > {fixed})",
+                        objective.name(),
+                        choice.chosen.name(),
+                        s.name(),
+                        choice.chosen_cost()
+                    );
+                }
+                // Deterministic tie-break: the winner is the FIRST
+                // strategy achieving the minimum, in STRATEGIES order.
+                let min = choice.costs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let first = choice.costs.iter().position(|c| *c == min).unwrap();
+                assert_eq!(
+                    choice.chosen,
+                    LoweringStrategy::STRATEGIES[first],
+                    "trial {trial} {pass:?}: tie-break order violated for {p:?}"
+                );
+                // The winner's metrics ARE the fixed strategy's metrics.
+                assert_eq!(
+                    choice.metrics,
+                    cache.metrics(pass, choice.chosen, &p, &cfg),
+                    "trial {trial} {pass:?}: winner metrics drifted for {p:?}"
+                );
+                // metrics_select under Auto serves exactly the winner.
+                assert_eq!(choice.metrics, cache.metrics_select(pass, &p, &cfg));
+                saw_non_bp_winner |= choice.chosen != LoweringStrategy::BpIm2col;
+            }
+        }
+    }
+    assert!(saw_non_bp_winner, "sweep never left the default strategy — autotuner is inert");
+}
+
+#[test]
+fn eco_strategies_match_bp_bit_for_bit_on_stride1_undilated_layers() {
+    // No stride, no dilation: the backward zero-spaces are empty, the
+    // scatter dataflows have nothing to eliminate, and the closed forms
+    // must normalize to BP-im2col exactly.
+    let mut rng = Rng::new(0xEC0F);
+    let cache = PlanCache::new();
+    let cfg = AccelConfig::default();
+    for trial in 0..30 {
+        let (kh, kw) = (rng.range(1, 6), rng.range(1, 6));
+        let groups = [1, 1, 2][rng.below(3)];
+        let p = ConvParams::basic(
+            rng.range(1, 5),
+            groups * rng.range(1, 17),
+            rng.range(7, 41),
+            rng.range(7, 41),
+            groups * rng.range(1, 17),
+            kh,
+            kw,
+            1,
+            rng.below(kh),
+            rng.below(kw),
+        )
+        .with_groups(groups);
+        if p.validate().is_err() {
+            continue;
+        }
+        assert_eq!((p.sh, p.sw, p.dh, p.dw), (1, 1, 1, 1));
+        for pass in Pass::ALL {
+            let bp = cache.metrics(pass, Mode::BpIm2col, &p, &cfg);
+            for eco in [Mode::EcoOutputStationary, Mode::EcoInputStationary] {
+                assert_eq!(eco.effective(&p), Mode::BpIm2col, "trial {trial} {p:?}");
+                assert_eq!(
+                    cache.metrics(pass, eco, &p, &cfg),
+                    bp,
+                    "trial {trial} {pass:?} {}: diverged from bp on {p:?}",
+                    eco.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn autotune_cache_misses_are_exactly_n_by_s() {
+    let mut rng = Rng::new(0xCA5E);
+    let mut layers: Vec<ConvParams> = Vec::new();
+    while layers.len() < 10 {
+        let p = arb_layer(&mut rng);
+        if !layers.contains(&p) {
+            layers.push(p);
+        }
+    }
+    let cfg = AccelConfig { strategy: LoweringSelect::Auto, ..AccelConfig::default() };
+    let cache = PlanCache::new();
+    for p in &layers {
+        for pass in Pass::ALL {
+            cache.autotune(pass, p, &cfg);
+        }
+    }
+    let n = (layers.len() * Pass::ALL.len()) as u64;
+    let s = LoweringStrategy::STRATEGIES.len() as u64;
+    let cold = cache.stats();
+    assert_eq!(cold.misses, n * s, "cold autotune must plan every (key, strategy) once");
+    assert_eq!(cold.hits, 0);
+    assert_eq!(cold.entries as u64, n * s);
+    // Warm replay: every candidate plan is already memoized.
+    for p in &layers {
+        for pass in Pass::ALL {
+            cache.autotune(pass, p, &cfg);
+        }
+    }
+    let warm = cache.stats();
+    assert_eq!(warm.misses, cold.misses, "a warm autotune must miss zero times");
+    assert_eq!(warm.entries, cold.entries);
+    assert_eq!(warm.hits, n * s);
+}
+
+#[test]
+fn artifact_is_byte_identical_across_device_widths() {
+    let reference = {
+        let svc = Service::new(AccelConfig::default());
+        render_all_json(&svc.run(&SimRequest::Autotune { extended: false, devices: None }))
+    };
+    for devices in [1usize, 2, 4, 8] {
+        let svc = Service::new(AccelConfig::default());
+        let req = SimRequest::Autotune { extended: false, devices: Some(devices) };
+        assert_eq!(render_all_json(&svc.run(&req)), reference, "devices {devices}");
+        // Warm replay through the same service: still identical bytes.
+        assert_eq!(render_all_json(&svc.run(&req)), reference, "warm devices {devices}");
+    }
+    // The record itself carries the decision mix and the win margin.
+    assert!(reference.contains("mix: "), "{reference}");
+    assert!(reference.contains("win margin"), "{reference}");
+}
+
+/// Minimal HTTP client: one POST, read to EOF (Connection: close).
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read");
+    let text = String::from_utf8(raw).expect("utf-8 response");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn cli_and_http_serve_identical_autotune_bytes() {
+    // CLI: the `repro autotune --json` document.
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["autotune", "--json"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let cli = String::from_utf8(out.stdout).expect("utf-8 stdout");
+
+    // HTTP: the same request through POST /v1/query.
+    let server = Server::bind(AccelConfig::default(), "127.0.0.1:0", 2).expect("bind");
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.serve().expect("serve"));
+    let (status, http) = http_post(addr, "/v1/query", "{\"kind\":\"autotune\"}");
+    assert_eq!(status, 200, "{http}");
+    // The devices knob is a cross-check, not content: same bytes.
+    let (status_d, http_d) =
+        http_post(addr, "/v1/query", "{\"kind\":\"autotune\",\"devices\":4}");
+    assert_eq!(status_d, 200, "{http_d}");
+    assert_eq!(http_d, http, "devices must leave no trace in the artifact");
+    let (_, _) = http_post(addr, "/v1/shutdown", "{}");
+    handle.join().expect("clean shutdown");
+
+    // The CLI prints the same JSON document plus a trailing newline.
+    assert_eq!(cli, format!("{http}\n"));
+}

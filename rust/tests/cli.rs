@@ -56,6 +56,46 @@ fn fig8_csv_mode_is_machine_readable() {
 }
 
 #[test]
+fn autotune_records_a_strategy_mix_and_repeats_identically() {
+    let (stdout, _, ok) = repro(&["autotune"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("mix: "), "{stdout}");
+    assert!(stdout.contains("win margin"), "{stdout}");
+    assert!(stdout.contains("chosen"), "{stdout}");
+    // Deterministic: a second run prints the same bytes, and the fleet
+    // cross-check leaves no trace.
+    let (again, _, ok2) = repro(&["autotune"]);
+    assert!(ok2);
+    assert_eq!(again, stdout);
+    let (sharded, _, ok3) = repro(&["autotune", "--devices", "4"]);
+    assert!(ok3);
+    assert_eq!(sharded, stdout);
+    // The scoring objective reconfigures the cost columns.
+    let (reads, _, ok4) = repro(&["autotune", "--objective", "reads"]);
+    assert!(ok4);
+    assert!(reads.contains("reads"), "{reads}");
+    let (_, stderr, bad) = repro(&["autotune", "--objective", "nope"]);
+    assert!(!bad);
+    assert!(stderr.contains("objective"), "{stderr}");
+}
+
+#[test]
+fn lowering_strategy_flag_reconfigures_any_query_command() {
+    // A fixed EcoFlow platform changes the numbers on strided layers...
+    let (bp, _, ok) = repro(&["sim", "--layer", "56/256/512/1/2/0"]);
+    assert!(ok);
+    let (eco, _, ok2) = repro(&["sim", "--layer", "56/256/512/1/2/0", "--lowering-strategy", "eco-os"]);
+    assert!(ok2, "{eco}");
+    assert_ne!(eco, bp, "eco-os must differ from bp on a strided layer");
+    // ...and `auto` never loses to the default on any command.
+    let (auto_out, _, ok3) = repro(&["table2", "--lowering-strategy", "auto"]);
+    assert!(ok3, "{auto_out}");
+    let (_, stderr, bad) = repro(&["table2", "--lowering-strategy", "csr"]);
+    assert!(!bad);
+    assert!(stderr.contains("lowering strategy"), "{stderr}");
+}
+
+#[test]
 fn sim_single_layer() {
     let (stdout, _, ok) = repro(&["sim", "--layer", "56/256/512/1/2/0"]);
     assert!(ok);

@@ -221,6 +221,7 @@ fn axis_and_point_spec_strings_round_trip_over_seeded_random_spaces() {
         (0, 1),        // sparse_skip
         (125, 1_000),  // density (millis)
         (0, 2),        // lowering
+        (0, 4),        // lowering_strategy (3 = eco-is, 4 = auto)
     ];
     const MILLI_QUANTUM: u64 = 125;
     let is_milli = |i: usize| matches!(i, 1 | 2 | 6 | 8);

@@ -171,6 +171,7 @@ fn catalog() -> Vec<SimRequest> {
         SimRequest::fleet(4),
         SimRequest::Fleet(FleetRequest::new(2).extended(true)),
         DseRequest::new().budget(4).seed(7).into(),
+        SimRequest::Autotune { extended: false, devices: Some(2) },
     ]
 }
 
