@@ -364,6 +364,9 @@ class Scope:
             or (self.is_server and path.endswith("conn.rs"))
             or (self.is_api and path.endswith("json.rs"))
         )
+        # Exactly src/trace/profile.rs — the sanctioned wall-clock host
+        # profiler (DESIGN.md section 16). The file, not the directory.
+        self.is_trace_profile = path.endswith("src/trace/profile.rs")
 
 
 def attr_marks_test(attr):
@@ -978,7 +981,11 @@ def run_rules(ctx, out, edges):
     rule_unordered(ctx, out)
     if not ctx.scope.is_bench:
         rule_float(ctx, out)
-    if not ctx.scope.is_bench and not ctx.scope.is_server:
+    if (
+        not ctx.scope.is_bench
+        and not ctx.scope.is_server
+        and not ctx.scope.is_trace_profile
+    ):
         rule_wall_clock(ctx, out)
     rule_lock_order(ctx, out, edges)
     if ctx.scope.is_server or ctx.scope.is_api:

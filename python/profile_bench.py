@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Hot-path profile bench for `repro profile` (stdlib only).
+
+Runs the binary's wall-clock host profiler — the telemetry half of the
+two-clock rule (DESIGN.md §16) — and extracts the two throughput
+headlines from the artifact's notes:
+
+    {"plan_builds_per_sec": ..., "dse_points_per_sec": ...,
+     "plan_build_calls": ..., "dse_calls": ...}
+
+Regression gate: `--gate BENCH_DSE.json` compares both throughputs
+against the tracked baseline and fails (exit 1) when either drops by
+more than `--tolerance` (default 0.30). `--update` rewrites the gate
+file with this run as the new baseline and appends it to the
+trajectory. Only the throughputs are gated — the profile's raw numbers
+are wall-clock telemetry and vary run to run by construction.
+
+Usage:
+    python3 python/profile_bench.py ./target/release/repro \
+        --gate BENCH_DSE.json --tolerance 0.30
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+
+# The artifact notes carry the headline throughputs in a fixed format
+# (see Service::profile in rust/src/api/mod.rs).
+NOTE_PATTERNS = {
+    "plan_builds_per_sec": re.compile(r"plan_builds_per_sec: ([0-9.]+)"),
+    "dse_points_per_sec": re.compile(r"dse_points_per_sec: ([0-9.]+)"),
+}
+
+# The gated metrics, in report order.
+METRICS = ("plan_builds_per_sec", "dse_points_per_sec")
+
+
+def run_profile(binary):
+    proc = subprocess.run(
+        [binary, "profile", "--json"], capture_output=True, text=True, timeout=600
+    )
+    assert proc.returncode == 0, f"`{binary} profile --json` exited {proc.returncode}: {proc.stderr}"
+    doc = json.loads(proc.stdout)
+    profiles = [a for a in doc["artifacts"] if a["name"] == "profile"]
+    assert len(profiles) == 1, f"expected one profile artifact, got {len(profiles)}"
+    artifact = profiles[0]
+    notes = "\n".join(artifact.get("notes", []))
+
+    result = {}
+    for key, pattern in NOTE_PATTERNS.items():
+        match = pattern.search(notes)
+        assert match, f"missing {key!r} note in the profile artifact"
+        result[key] = float(match.group(1))
+
+    # Per-phase call counts from the table rows (phase name first,
+    # calls second — see the artifact's column order).
+    calls = {row[0]: row[1] for row in artifact.get("rows", [])}
+    result["plan_build_calls"] = calls.get("plan_build")
+    result["dse_calls"] = calls.get("dse_evaluate")
+    print("profile:", json.dumps(result))
+    assert result["plan_builds_per_sec"] > 0, "profiler recorded no plan builds"
+    assert result["dse_points_per_sec"] > 0, "profiler recorded no DSE evaluations"
+    return result
+
+
+def apply_gate(result, gate_path, tolerance, update):
+    with open(gate_path) as fh:
+        gate = json.load(fh)
+    baseline = gate["baseline"]
+    ok = True
+    for metric in METRICS:
+        floor = baseline[metric] * (1.0 - tolerance)
+        print(
+            f"gate: measured {result[metric]} {metric} vs baseline "
+            f"{baseline[metric]} ({baseline['label']}), floor {floor:.2f}"
+        )
+        if result[metric] < floor:
+            print(
+                f"gate: FAIL — {metric} regressed more than {tolerance:.0%} "
+                f"below the tracked baseline",
+                file=sys.stderr,
+            )
+            ok = False
+    if ok and update:
+        entry = {
+            "label": "measured",
+            "plan_builds_per_sec": result["plan_builds_per_sec"],
+            "dse_points_per_sec": result["dse_points_per_sec"],
+            "provenance": "recorded by python/profile_bench.py --update",
+        }
+        gate["baseline"] = entry
+        gate.setdefault("trajectory", []).append(entry)
+        with open(gate_path, "w") as fh:
+            json.dump(gate, fh, indent=2)
+            fh.write("\n")
+        print(f"gate: baseline updated in {gate_path}")
+    return ok
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("binary", nargs="?", default="./target/release/repro")
+    parser.add_argument("--gate", help="BENCH_DSE.json to gate against")
+    parser.add_argument("--tolerance", type=float, default=0.30)
+    parser.add_argument("--out", help="write the measured result as JSON")
+    parser.add_argument(
+        "--update", action="store_true", help="rewrite the gate baseline from this run"
+    )
+    args = parser.parse_args()
+
+    result = run_profile(args.binary)
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(result, fh, indent=2)
+            fh.write("\n")
+    if args.gate and not apply_gate(result, args.gate, args.tolerance, args.update):
+        sys.exit(1)
+    print("profile bench OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -103,14 +103,37 @@ def main():
             "autotune devices cross-check must not change the rows"
         )
 
+        # Virtual-time trace: deterministic bytes, so the repeat AND the
+        # devices cross-check variant (normalized out of the cache key)
+        # must return the identical body (two-clock rule, DESIGN.md §16).
+        status, body = request(base, "/v1/query", {"kind": "trace"})
+        doc = json.loads(body)
+        assert status == 200 and doc["artifacts"][0]["name"] == "trace", (status, doc)
+        assert any("timeline:" in n for n in doc["artifacts"][0]["notes"]), doc
+        status, body2 = request(base, "/v1/query", {"kind": "trace"})
+        assert body2 == body, "repeated trace query must be byte-identical"
+        status, body2 = request(base, "/v1/query", {"kind": "trace", "devices": 2})
+        assert body2 == body, "trace devices cross-check must not change the bytes"
+
+        # Wall-clock host profile: the other clock — a 200 with the
+        # throughput notes, but NO byte-identity assert (telemetry varies
+        # run to run and is never cached).
+        status, body = request(base, "/v1/query", {"kind": "profile"})
+        doc = json.loads(body)
+        assert status == 200 and doc["artifacts"][0]["name"] == "profile", (status, doc)
+        notes = doc["artifacts"][0]["notes"]
+        assert any(n.startswith("plan_builds_per_sec: ") for n in notes), notes
+        assert any(n.startswith("dse_points_per_sec: ") for n in notes), notes
+
         status, body = request(base, "/metrics")
         text = body.decode()
         for needle in (
-            'bp_server_requests_total{route="query"} 9',
-            # One hit per repeat (table3/dse/sparse/autotune) plus the
-            # devices-variant autotune query, whose cache key normalizes
-            # the fleet cross-check knob away.
-            "bp_artifact_cache_hits_total 5",
+            'bp_server_requests_total{route="query"} 13',
+            # One hit per repeat (table3/dse/sparse/autotune/trace) plus
+            # the devices-variant autotune and trace queries, whose cache
+            # keys normalize the fleet cross-check knob away. The profile
+            # query adds none: wall-clock telemetry is never cached.
+            "bp_artifact_cache_hits_total 7",
             "bp_artifact_cache_evictions_total 0",
             "bp_plan_cache_entries",
             "bp_server_request_duration_us_bucket",
@@ -123,6 +146,15 @@ def main():
             "bp_server_read_stalls_total",
             "bp_server_write_stalls_total",
             "bp_server_deadline_closes_total",
+            # Request-scoped span histograms (parse/dispatch/write) and
+            # the host-profiler families (DESIGN.md §16): the profile
+            # query above guarantees nonzero plan-build/DSE samples.
+            'bp_server_phase_duration_us_bucket{phase="parse"',
+            'bp_server_phase_duration_us_bucket{phase="dispatch"',
+            'bp_server_phase_duration_us_bucket{phase="write"',
+            'bp_plan_builds_total{strategy="bp"}',
+            "bp_plan_build_seconds_bucket",
+            "bp_dse_points_per_second_bucket",
         ):
             assert needle in text, f"missing {needle!r} in /metrics:\n{text}"
 
@@ -150,8 +182,8 @@ def main():
         code = proc.wait(timeout=60)
         assert code == 0, f"server exited with {code}"
         print(
-            "server smoke OK: query/batch/dse/sparse/autotune/metrics "
-            "round-trips + clean shutdown"
+            "server smoke OK: query/batch/dse/sparse/autotune/trace/profile/"
+            "metrics round-trips + clean shutdown"
         )
     finally:
         # Kill quietly if still alive; the propagating exception (an

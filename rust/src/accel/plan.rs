@@ -49,6 +49,7 @@ use crate::sim::dram::DramTraffic;
 use crate::sim::reorg_engine::reorg_cost;
 use crate::sparse::column_combine::{self, PackingPlan};
 use crate::sparse::{scale_u64, spots, SparseLowering};
+use crate::trace::profile::{self, Phase};
 
 /// The complete lowering of one `(layer, pass, mode)` onto one
 /// accelerator configuration.
@@ -118,6 +119,11 @@ impl LayerPlan {
         // executes, so "EcoFlow on a stride-1 undilated layer" is
         // *bit-identical* to BP-im2col rather than merely close.
         let mode = mode.effective(p);
+        // Host-profiling sub-phases (DESIGN.md §16): the scoped timers
+        // partition the build into shape/sparsity/tiling sections for
+        // `repro profile`. They are opaque telemetry hooks — no wall
+        // clock is named here, and nothing below reads them.
+        let build_phase = profile::scope(Phase::PlanShape);
         let t = cfg.array_dim;
         let groups = p.groups;
         // Effective *data* density of this layer under this config: the
@@ -183,6 +189,7 @@ impl LayerPlan {
         }
 
         // ---- sparsity of the zero-spaced operand of this pass ----
+        let build_phase = build_phase.next(Phase::PlanSparsity);
         let (stat_stats, dyn_stats) = match pass {
             Pass::Loss => (sparsity::loss_matrix_b(p), None),
             Pass::Grad => (sparsity::grad_matrix_b(p), Some(sparsity::grad_matrix_a(p))),
@@ -223,6 +230,7 @@ impl LayerPlan {
 
         // ---- prologue: each addr-gen pipeline restarts per stationary
         //      stripe of every group's GEMM ----
+        let build_phase = build_phase.next(Phase::PlanTiling);
         let stationary_prologue = prologue_cycles_for(mode, pass, Module::Stationary, p);
         let dynamic_prologue = prologue_cycles_for(mode, pass, Module::Dynamic, p);
         let prologue = (til.n_j * groups) as f64 * (stationary_prologue + dynamic_prologue) as f64;
@@ -416,6 +424,7 @@ impl LayerPlan {
         // rate (exact identity at factor 1.0 — the paper's two modes).
         let stripe_compute = stripe_compute * eco_compute_factor;
         let stall_cycles = stripes * (fill_cycles - stripe_compute).max(0.0);
+        drop(build_phase);
 
         let metrics = PassMetrics {
             pass,
@@ -570,6 +579,12 @@ pub struct PlanCacheStats {
     pub misses: u64,
     /// Distinct plans currently stored.
     pub entries: usize,
+    /// Plan builds per *requested* lowering strategy, indexed by
+    /// [`LoweringStrategy::code`] (trad/bp/eco-os/eco-is). Counted at
+    /// miss-classification time under the table lock, so the split is
+    /// as deterministic as the hit/miss split itself; summed over
+    /// strategies it equals `misses`.
+    pub builds: [u64; LoweringStrategy::STRATEGIES.len()],
 }
 
 impl PlanCacheStats {
@@ -585,6 +600,11 @@ impl PlanCacheStats {
             return 0.0;
         }
         self.hits as f64 / total as f64
+    }
+
+    /// Builds summed over every strategy (equals `misses`).
+    pub fn builds_total(&self) -> u64 {
+        self.builds.iter().sum()
     }
 
     /// One-line human summary:
@@ -603,6 +623,21 @@ impl PlanCacheStats {
             self.misses,
             self.lookups()
         )
+    }
+
+    /// One-line per-strategy build split, label order =
+    /// [`LoweringStrategy::STRATEGIES`]:
+    /// `plan builds by strategy: trad=3 bp=8 eco-os=2 eco-is=1`.
+    pub fn builds_summary(&self) -> String {
+        let mut out = String::from("plan builds by strategy:");
+        for i in 0..LoweringStrategy::STRATEGIES.len() {
+            out.push_str(&format!(
+                " {}={}",
+                LoweringStrategy::STRATEGIES[i].name(),
+                self.builds[i]
+            ));
+        }
+        out
     }
 }
 
@@ -653,6 +688,9 @@ struct PlanCacheInner {
     plans: HashMap<PlanKey, Arc<OnceLock<Arc<LayerPlan>>>>,
     hits: u64,
     misses: u64,
+    /// Builds per requested strategy ([`LoweringStrategy::code`] index),
+    /// bumped with the miss classification under the same lock.
+    builds: [u64; LoweringStrategy::STRATEGIES.len()],
 }
 
 impl PlanCache {
@@ -694,11 +732,14 @@ impl PlanCache {
                 Arc::clone(existing)
             } else {
                 inner.misses += 1;
+                inner.builds[usize::from(mode.code())] += 1;
                 if inner.plans.len() >= Self::MAX_ENTRIES {
                     // Table full: plan without memoizing (outside the
                     // lock).
                     drop(guard);
-                    return Arc::new(LayerPlan::build(pass, mode, p, cfg));
+                    return Arc::new(profile::time(Phase::PlanBuild, || {
+                        LayerPlan::build(pass, mode, p, cfg)
+                    }));
                 }
                 match inner.plans.entry(key) {
                     Entry::Occupied(e) => Arc::clone(e.get()),
@@ -710,7 +751,9 @@ impl PlanCache {
         // still-empty slot so the table never carries a phantom entry
         // (and the next lookup of the key honestly re-misses).
         match panic::catch_unwind(AssertUnwindSafe(|| {
-            Arc::clone(slot.get_or_init(|| Arc::new(LayerPlan::build(pass, mode, p, cfg))))
+            Arc::clone(slot.get_or_init(|| {
+                Arc::new(profile::time(Phase::PlanBuild, || LayerPlan::build(pass, mode, p, cfg)))
+            }))
         })) {
             Ok(plan) => plan,
             Err(payload) => {
@@ -755,6 +798,9 @@ impl PlanCache {
     /// earliest entry of [`LoweringStrategy::STRATEGIES`], independent
     /// of thread count, device count and frontend.
     pub fn autotune(&self, pass: Pass, p: &ConvParams, cfg: &AccelConfig) -> AutotuneChoice {
+        // Host-profiling: one pricing pass over the candidate loop
+        // (cached candidate plans make a warm pricing cost ~0).
+        let _pricing = profile::scope(Phase::PlanPricing);
         let mut costs = [0.0f64; LoweringStrategy::STRATEGIES.len()];
         let mut chosen = LoweringStrategy::STRATEGIES[0];
         let mut best = f64::INFINITY;
@@ -796,7 +842,12 @@ impl PlanCache {
     /// (all three under the same lock that classifies lookups).
     pub fn stats(&self) -> PlanCacheStats {
         let inner = self.inner.lock().expect("plan cache poisoned");
-        PlanCacheStats { hits: inner.hits, misses: inner.misses, entries: inner.plans.len() }
+        PlanCacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            entries: inner.plans.len(),
+            builds: inner.builds,
+        }
     }
 
     /// Drop every memoized plan and zero the counters.
@@ -805,6 +856,7 @@ impl PlanCache {
         inner.plans.clear();
         inner.hits = 0;
         inner.misses = 0;
+        inner.builds = [0; LoweringStrategy::STRATEGIES.len()];
     }
 }
 
@@ -857,6 +909,24 @@ mod tests {
         cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &AccelConfig::bandwidth_limited(1.0));
         let st = cache.stats();
         assert_eq!((st.hits, st.misses, st.entries), (0, 4, 4));
+    }
+
+    #[test]
+    fn builds_split_by_requested_strategy() {
+        let cache = PlanCache::new();
+        let p = ConvParams::square(112, 64, 64, 3, 2, 1);
+        cache.metrics(Pass::Loss, Mode::Traditional, &p, &cfg());
+        cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &cfg());
+        cache.metrics(Pass::Grad, Mode::BpIm2col, &p, &cfg());
+        cache.metrics(Pass::Loss, Mode::BpIm2col, &p, &cfg()); // hit: no build
+        cache.metrics(Pass::Loss, Mode::EcoOutputStationary, &p, &cfg());
+        let st = cache.stats();
+        // STRATEGIES order: trad / bp / eco-os / eco-is.
+        assert_eq!(st.builds, [1, 2, 1, 0]);
+        assert_eq!(st.builds_total(), st.misses);
+        assert_eq!(st.builds_summary(), "plan builds by strategy: trad=1 bp=2 eco-os=1 eco-is=0");
+        cache.clear();
+        assert_eq!(cache.stats().builds, [0; 4]);
     }
 
     #[test]

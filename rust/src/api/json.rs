@@ -380,7 +380,8 @@ impl SimRequest {
                     out.push_str(",\"extended\":true");
                 }
             }
-            SimRequest::Autotune { extended, devices } => {
+            SimRequest::Autotune { extended, devices }
+            | SimRequest::Trace { extended, devices } => {
                 if *extended {
                     out.push_str(",\"extended\":true");
                 }
@@ -388,6 +389,7 @@ impl SimRequest {
                     write!(out, ",\"devices\":{n}").unwrap();
                 }
             }
+            SimRequest::Profile => {}
             SimRequest::Dse(d) => {
                 let defaults = DseRequest::new();
                 if d.budget != defaults.budget {
@@ -485,11 +487,13 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
         "traincost" => &["devices"],
         "fleet" => &["devices", "extended"],
         "dse" => &["budget", "seed", "axes", "extended", "layer", "batch", "devices"],
-        "autotune" => &["extended", "devices"],
+        "autotune" | "trace" => &["extended", "devices"],
+        "profile" => &[],
         other => {
             return Err(format!(
                 "unknown request kind {other:?} (supported: table2, table3, table4, fig6, \
-                 fig7, fig8, sparsity, storage, sparse, layer, traincost, fleet, dse, autotune)"
+                 fig7, fig8, sparsity, storage, sparse, layer, traincost, fleet, dse, autotune, \
+                 trace, profile)"
             ))
         }
     };
@@ -599,6 +603,8 @@ pub fn decode_request(v: &Json) -> Result<SimRequest, String> {
             req.into()
         }
         "autotune" => SimRequest::Autotune { extended, devices: opt_devices(v)? },
+        "trace" => SimRequest::Trace { extended, devices: opt_devices(v)? },
+        "profile" => SimRequest::Profile,
         _ => unreachable!("kind validated above"),
     })
 }
@@ -670,7 +676,7 @@ pub fn parse_batch(text: &str) -> Result<Vec<Result<SimRequest, String>>, String
 /// ready-to-send example body.
 pub fn request_catalog_json() -> String {
     // (kind, description, extra keys, example body)
-    const SHAPES: [(&str, &str, &str, &str); 14] = [
+    const SHAPES: [(&str, &str, &str, &str); 16] = [
         ("table2", "Table II: per-layer backpropagation runtime", "[]", "{\"kind\":\"table2\"}"),
         ("table3", "Table III: address-generation prologue latency", "[]", "{\"kind\":\"table3\"}"),
         ("table4", "Table IV: address-generation module area", "[]", "{\"kind\":\"table4\"}"),
@@ -740,6 +746,18 @@ pub fn request_catalog_json() -> String {
             "[\"extended\",\"devices\"]",
             "{\"kind\":\"autotune\"}",
         ),
+        (
+            "trace",
+            "Deterministic virtual-time fleet execution timeline",
+            "[\"extended\",\"devices\"]",
+            "{\"kind\":\"trace\"}",
+        ),
+        (
+            "profile",
+            "Wall-clock host profile of the plan/DSE hot paths",
+            "[]",
+            "{\"kind\":\"profile\"}",
+        ),
     ];
     let mut out = String::from("{\"requests\":[");
     for (i, (kind, desc, keys, example)) in SHAPES.iter().enumerate() {
@@ -799,6 +817,9 @@ mod tests {
             },
             SimRequest::Autotune { extended: false, devices: None },
             SimRequest::Autotune { extended: true, devices: Some(4) },
+            SimRequest::Trace { extended: false, devices: None },
+            SimRequest::Trace { extended: true, devices: Some(8) },
+            SimRequest::Profile,
         ]
     }
 
@@ -867,6 +888,15 @@ mod tests {
         );
         assert!(SimRequest::from_json("{\"kind\":\"autotune\",\"devices\":0}").is_err());
         assert!(SimRequest::from_json("{\"kind\":\"autotune\",\"pass\":\"loss\"}").is_err());
+        // Trace mirrors autotune; profile takes no options at all.
+        assert_eq!(
+            SimRequest::from_json("{\"kind\":\"trace\"}").unwrap(),
+            SimRequest::Trace { extended: false, devices: None }
+        );
+        assert!(SimRequest::from_json("{\"kind\":\"trace\",\"devices\":0}").is_err());
+        assert!(SimRequest::from_json("{\"kind\":\"trace\",\"pass\":\"loss\"}").is_err());
+        assert_eq!(SimRequest::from_json("{\"kind\":\"profile\"}").unwrap(), SimRequest::Profile);
+        assert!(SimRequest::from_json("{\"kind\":\"profile\",\"devices\":2}").is_err());
     }
 
     #[test]
@@ -954,7 +984,7 @@ mod tests {
     fn request_catalog_parses_and_examples_decode() {
         let doc = parse(&request_catalog_json()).unwrap();
         let Some(Json::Arr(shapes)) = doc.get("requests") else { panic!("no requests array") };
-        assert_eq!(shapes.len(), 14, "one entry per SimRequest kind");
+        assert_eq!(shapes.len(), 16, "one entry per SimRequest kind");
         for shape in shapes {
             let example = shape.get("example").unwrap().as_str().unwrap();
             let req = SimRequest::from_json(example)

@@ -48,6 +48,12 @@ use crate::im2col::sparsity;
 use crate::report;
 use crate::workloads::{self, Network};
 
+/// Canonical fleet width the `trace` request replays at. The rendered
+/// timeline is always this wide — the request's `devices` knob only
+/// cross-checks aggregate totals at another width — so trace bytes are
+/// comparable across every invocation (DESIGN.md §16).
+pub const TRACE_DEVICES: usize = 4;
+
 /// Why one request of a batch (or one [`Service::try_run`] call) failed.
 ///
 /// Failures are *per request*: a bad geometry or a panicking model pass
@@ -177,6 +183,10 @@ impl Service {
             SimRequest::Autotune { extended, devices } => {
                 vec![self.autotune(*extended, *devices)]
             }
+            SimRequest::Trace { extended, devices } => {
+                vec![self.trace(*extended, *devices)]
+            }
+            SimRequest::Profile => vec![self.profile()],
         };
         let cfg_meta = config_meta(&self.cfg);
         for a in &mut artifacts {
@@ -598,10 +608,10 @@ impl Service {
         let mut mix = [0usize; LoweringStrategy::STRATEGIES.len()];
         let mut fixed = [0.0f64; LoweringStrategy::STRATEGIES.len()];
         let mut auto_total = 0.0f64;
+        // lint: allow(float-accumulation) — row order fixed by the workload catalog
         for r in &rows {
             mix[r.choice.chosen.code() as usize] += 1;
             let weight = r.count as f64;
-            // lint: allow(float-accumulation) — row order fixed by the workload catalog
             for (i, cost) in r.choice.costs.iter().enumerate() {
                 fixed[i] += cost * weight;
             }
@@ -668,6 +678,348 @@ impl Service {
         a
     }
 
+    /// Replay every workload network through a canonical
+    /// [`TRACE_DEVICES`]-wide fleet and collect the deterministic
+    /// virtual-time timeline (DESIGN.md §16): one `"job"` span per
+    /// `(layer, pass)` job annotated with the chosen strategy and its
+    /// cost components, `"phase"` child spans partitioning the job into
+    /// its [`crate::accel::PassMetrics`] components, `"addrgen-dyn"` /
+    /// `"addrgen-stat"` grandchild spans for the two address-generation
+    /// prologue pipelines, and steal/idle instant markers. Returns the
+    /// per-network fleet reports alongside so callers can reconcile
+    /// span durations against the aggregate totals.
+    fn trace_replay(
+        &self,
+        extended: bool,
+    ) -> (crate::trace::timeline::Timeline, Vec<crate::coordinator::fleet::FleetReport>) {
+        use crate::sim::addrgen::{AddrGenPipeline, Module};
+        use crate::trace::timeline::{ArgValue, Timeline, TrackBuffer};
+        let mut tl = Timeline::new();
+        let mut reports = Vec::new();
+        let fleet =
+            crate::coordinator::Fleet::with_cache(self.cfg, TRACE_DEVICES, self.plan_cache());
+        for net in Self::networks(extended) {
+            let pid = tl.add_process(net.name);
+            let (report, replay) = fleet.run_network_replay(&net);
+            let mut bufs: Vec<TrackBuffer> =
+                (0..TRACE_DEVICES).map(|d| TrackBuffer::new(pid, d)).collect();
+            for s in &replay {
+                let job = s.result.job;
+                let m = s.result.metrics;
+                let buf = &mut bufs[s.device];
+                buf.span(
+                    s.start,
+                    s.result.scaled_cycles,
+                    format!("{} {}", job.layer, job.pass.name()),
+                    "job",
+                    job.id,
+                    0,
+                    vec![
+                        ("strategy", ArgValue::Text(job.mode.name().into())),
+                        ("pass", ArgValue::Text(job.pass.name().into())),
+                        ("count", ArgValue::Int(job.count as i64)),
+                        ("compute_cycles", ArgValue::Float(m.compute_cycles)),
+                        ("reorg_cycles", ArgValue::Float(m.reorg_cycles)),
+                        ("prologue_cycles", ArgValue::Float(m.prologue_cycles)),
+                        ("stall_cycles", ArgValue::Float(m.stall_cycles)),
+                        ("extra_fetch_cycles", ArgValue::Float(m.extra_fetch_cycles)),
+                        ("traffic_bytes", ArgValue::Int(s.result.scaled_traffic as i64)),
+                        (
+                            "stolen_from",
+                            ArgValue::Int(s.stolen_from.map_or(-1, |d| d as i64)),
+                        ),
+                    ],
+                );
+                if let Some(from) = s.stolen_from {
+                    buf.marker(
+                        s.start,
+                        "steal",
+                        job.id,
+                        vec![("from_device", ArgValue::Int(from as i64))],
+                    );
+                }
+                // Phase children partition the job span: single-instance
+                // components scaled to the count-scaled duration, laid
+                // out back to back. The last nonzero component absorbs
+                // the floating-point remainder so children never overrun
+                // their parent.
+                let total = m.total_cycles();
+                if total > 0.0 {
+                    let scale = s.result.scaled_cycles / total;
+                    let comps = [
+                        ("reorg", m.reorg_cycles),
+                        ("prologue", m.prologue_cycles),
+                        ("compute", m.compute_cycles),
+                        ("stall", m.stall_cycles),
+                        ("extra_fetch", m.extra_fetch_cycles),
+                    ];
+                    let last = comps.iter().rposition(|(_, c)| *c > 0.0);
+                    let end = s.start + s.result.scaled_cycles;
+                    let mut cursor = s.start;
+                    for i in 0..comps.len() {
+                        let (phase, cycles) = comps[i];
+                        if cycles <= 0.0 {
+                            continue;
+                        }
+                        let dur =
+                            if Some(i) == last { (end - cursor).max(0.0) } else { cycles * scale };
+                        buf.span(cursor, dur, phase.to_string(), "phase", job.id, 1, vec![]);
+                        cursor += dur;
+                    }
+                }
+                // The two address-generation prologue pipelines run in
+                // parallel from the job's start; each gets its own
+                // category so stages of one pipeline stay sequential
+                // within it. Stage latencies are single-prologue cycles,
+                // always within the job's first stripe.
+                for (module, cat) in
+                    [(Module::Dynamic, "addrgen-dyn"), (Module::Stationary, "addrgen-stat")]
+                {
+                    let pipeline =
+                        AddrGenPipeline::build_for(job.mode, job.pass, module, &job.params);
+                    let mut cursor = s.start;
+                    // lint: allow(float-accumulation) — stage latencies chain in pipeline order
+                    for stage in &pipeline.stages {
+                        buf.span(
+                            cursor,
+                            stage.latency as f64,
+                            stage.name.to_string(),
+                            cat,
+                            job.id,
+                            2,
+                            vec![],
+                        );
+                        cursor += stage.latency as f64;
+                    }
+                }
+            }
+            for d in &report.devices {
+                if d.busy_cycles < report.makespan_cycles {
+                    bufs[d.device].marker(
+                        d.busy_cycles,
+                        "idle",
+                        usize::MAX,
+                        vec![(
+                            "idle_cycles",
+                            ArgValue::Float(report.makespan_cycles - d.busy_cycles),
+                        )],
+                    );
+                }
+            }
+            tl.merge(bufs);
+            reports.push(report);
+        }
+        (tl, reports)
+    }
+
+    /// Export the deterministic virtual-time timeline as Chrome
+    /// trace-event JSON (loadable in `chrome://tracing` and Perfetto) —
+    /// the `repro trace --out` payload. Every timestamp comes from the
+    /// fleet's virtual clock, so the bytes are identical run to run and
+    /// across frontends.
+    pub fn trace_chrome_json(&self, extended: bool) -> String {
+        self.trace_replay(extended).0.to_chrome_json()
+    }
+
+    /// Serve the virtual-time execution timeline (`repro trace`,
+    /// DESIGN.md §16): one row per job span of the canonical
+    /// [`TRACE_DEVICES`]-wide replay, in the timeline's stable merged
+    /// order.
+    ///
+    /// `devices` is a pure cross-check, exactly like autotune's: a
+    /// fleet of that width must reproduce the canonical replay's
+    /// aggregate totals bit-identically (a divergence panics into a
+    /// [`RequestError`] instead of rendering), and the knob never
+    /// touches the rendered bytes — the request cache key normalizes it
+    /// away.
+    fn trace(&self, extended: bool, devices: Option<usize>) -> Artifact {
+        use crate::trace::timeline::ArgValue;
+        let (tl, reports) = self.trace_replay(extended);
+        let mut a = Artifact::new(
+            "trace",
+            format!("Virtual-time fleet execution timeline ({TRACE_DEVICES} devices)"),
+        )
+        .meta("networks", if extended { "extended" } else { "paper" })
+        .meta("trace_devices", TRACE_DEVICES.to_string())
+        .columns(vec![
+            Column::new("network"),
+            Column::new("device"),
+            Column::new("job"),
+            Column::new("span"),
+            Column::new("strategy"),
+            Column::new("start_cycles").unit("cycles").precision(0),
+            Column::new("dur_cycles").unit("cycles").precision(0),
+            Column::new("compute_cycles").unit("cycles").precision(0),
+            Column::new("reorg_cycles").unit("cycles").precision(0),
+            Column::new("prologue_cycles").unit("cycles").precision(0),
+            Column::new("stall_cycles").unit("cycles").precision(0),
+            Column::new("stolen_from"),
+        ]);
+        let float_arg = |args: &[(&'static str, ArgValue)], key: &str| -> f64 {
+            match args.iter().find(|(k, _)| *k == key) {
+                Some((_, ArgValue::Float(v))) => *v,
+                _ => 0.0,
+            }
+        };
+        for s in tl.spans().iter().filter(|s| s.cat == "job") {
+            let strategy = match s.args.iter().find(|(k, _)| *k == "strategy") {
+                Some((_, ArgValue::Text(t))) => t.clone(),
+                _ => String::new(),
+            };
+            let stolen = match s.args.iter().find(|(k, _)| *k == "stolen_from") {
+                Some((_, ArgValue::Int(d))) if *d >= 0 => d.to_string(),
+                _ => "-".to_string(),
+            };
+            a.push_row(vec![
+                tl.processes()[s.pid].clone().into(),
+                s.tid.into(),
+                s.job_id.into(),
+                s.name.clone().into(),
+                strategy.into(),
+                s.ts.into(),
+                s.dur.into(),
+                float_arg(&s.args, "compute_cycles").into(),
+                float_arg(&s.args, "reorg_cycles").into(),
+                float_arg(&s.args, "prologue_cycles").into(),
+                float_arg(&s.args, "stall_cycles").into(),
+                stolen.into(),
+            ]);
+        }
+        for (name, r) in tl.processes().iter().zip(&reports) {
+            a.push_note(format!(
+                "{name}: makespan {} cycles, busy {} cycles, loss {} + grad {} cycles, \
+                 {} stolen job(s)",
+                r.makespan_cycles,
+                r.busy_cycles(),
+                r.total.loss_cycles,
+                r.total.grad_cycles,
+                r.stolen_jobs()
+            ));
+        }
+        a.push_note(format!(
+            "timeline: {} span(s), {} marker(s) over {} process(es); virtual time only \
+             (1 cycle = 1 us in the Chrome export)",
+            tl.spans().len(),
+            tl.markers().len(),
+            tl.processes().len()
+        ));
+        if let Some(devices) = devices {
+            // Cross-check only, mirroring autotune: a fleet of the
+            // requested width must reproduce the canonical replay's
+            // totals bit-identically. A mismatch panics (surfaced by
+            // `try_run` as a RequestError) instead of rendering.
+            let fleet =
+                crate::coordinator::Fleet::with_cache(self.cfg, devices, self.plan_cache());
+            for (net, canonical) in Self::networks(extended).iter().zip(&reports) {
+                let f = fleet.run_network_select(net);
+                assert!(
+                    f.total.loss_cycles == canonical.total.loss_cycles
+                        && f.total.grad_cycles == canonical.total.grad_cycles,
+                    "fleet of {devices} device(s) diverged from the canonical \
+                     {TRACE_DEVICES}-device trace totals on {}",
+                    net.name
+                );
+            }
+        }
+        a
+    }
+
+    /// Serve the wall-clock host profile (`repro profile`, DESIGN.md
+    /// §16): run a fixed cold-cache measurement workload — every
+    /// extended-set layer geometry built under every
+    /// [`LoweringStrategy`], an autotuner pricing pass per `(layer,
+    /// pass)`, and a budget-16 DSE search — and report the profiler's
+    /// per-phase deltas.
+    ///
+    /// This is *telemetry*, the other half of the two-clock rule: the
+    /// numbers come from the host clock, differ run to run, and are
+    /// never cached ([`SimRequest::cacheable`]) nor asserted
+    /// byte-stable anywhere.
+    ///
+    /// [`LoweringStrategy`]: crate::accel::strategy::LoweringStrategy
+    fn profile(&self) -> Artifact {
+        use crate::accel::strategy::LoweringStrategy;
+        use crate::trace::profile::{snapshot, Phase, PhaseStats, BUCKETS};
+
+        // Deltas against a pre-workload snapshot instead of a global
+        // reset: concurrent requests keep their own readings, and the
+        // global registry is never zeroed under a live server.
+        let before = snapshot();
+        let cache = Arc::new(PlanCache::new());
+        let nets = Self::networks(true);
+        let mut geometries = 0usize;
+        for net in &nets {
+            for l in &net.layers {
+                geometries += 1;
+                for pass in Pass::ALL {
+                    for strategy in LoweringStrategy::STRATEGIES {
+                        let _ = cache.metrics(pass, strategy, &l.params, &self.cfg);
+                    }
+                    let _ = cache.autotune(pass, &l.params, &self.cfg);
+                }
+            }
+        }
+        let dse_req = DseRequest::new().budget(16);
+        let dse = crate::dse::search::run(&dse_req, &self.cfg, &cache);
+        let after = snapshot();
+
+        let mut delta = [PhaseStats::default(); 6];
+        for i in 0..delta.len() {
+            delta[i].calls = after.phases[i].calls.saturating_sub(before.phases[i].calls);
+            delta[i].total_ns =
+                after.phases[i].total_ns.saturating_sub(before.phases[i].total_ns);
+            for b in 0..BUCKETS {
+                delta[i].buckets[b] =
+                    after.phases[i].buckets[b].saturating_sub(before.phases[i].buckets[b]);
+            }
+        }
+        let sum_ns: u64 = delta.iter().map(|d| d.total_ns).sum();
+
+        let mut a = Artifact::new(
+            "profile",
+            "Wall-clock host profile: plan-build and DSE hot paths",
+        )
+        .meta("clock", "wall")
+        .columns(vec![
+            Column::new("phase"),
+            Column::new("calls"),
+            Column::new("total_ms").unit("ms").precision(3),
+            Column::new("avg_us").unit("us").precision(1),
+            Column::new("per_sec").unit("1/s").precision(1),
+            Column::new("share_pct").unit("%").precision(1),
+        ]);
+        for (i, phase) in Phase::ALL.iter().enumerate() {
+            let d = &delta[i];
+            let share = if sum_ns == 0 { 0.0 } else { d.total_ns as f64 / sum_ns as f64 * 100.0 };
+            a.push_row(vec![
+                phase.name().into(),
+                d.calls.into(),
+                (d.total_ns as f64 / 1e6).into(),
+                d.avg_us().into(),
+                d.per_sec().into(),
+                share.into(),
+            ]);
+        }
+        let builds = delta[3]; // Phase::PlanBuild in ALL order
+        let points = delta[5]; // Phase::DseEvaluate in ALL order
+        a.push_note(format!("plan_builds_per_sec: {:.1}", builds.per_sec()));
+        a.push_note(format!("dse_points_per_sec: {:.1}", points.per_sec()));
+        a.push_note(format!(
+            "workload: {geometries} layer geometries x 2 passes x {} strategies cold-built, \
+             autotuner pricing per (layer, pass), DSE budget {} ({} points evaluated)",
+            LoweringStrategy::STRATEGIES.len(),
+            dse_req.budget,
+            dse.points.len()
+        ));
+        a.push_note(
+            "wall-clock telemetry: values vary run to run by construction; responses are \
+             never cached and never byte-compared (two-clock rule, DESIGN.md \u{a7}16)"
+                .to_string(),
+        );
+        a.push_note(cache.stats().builds_summary());
+        a
+    }
+
     fn fleet_artifact(&self, nets: &[Network], devices: usize) -> Artifact {
         let (bars, planning) =
             report::fleet_summary(nets, &self.cfg, Mode::BpIm2col, devices);
@@ -701,6 +1053,9 @@ impl Service {
         // table lock the split is deterministic, so the facade's
         // bit-identical-artifacts guarantee holds for the note too.
         a.push_note(planning.summary());
+        // Same determinism argument: builds are counted at
+        // miss-classification time under the same lock.
+        a.push_note(planning.builds_summary());
         a
     }
 }
@@ -978,6 +1333,59 @@ mod tests {
             ..AccelConfig::default()
         });
         assert_eq!(fixed_svc.run(&req)[0].rows, a.rows);
+    }
+
+    #[test]
+    fn trace_artifact_is_deterministic_and_devices_is_pure_verification() {
+        let svc = Service::new(AccelConfig::default());
+        let req = SimRequest::Trace { extended: false, devices: None };
+        let arts = svc.run(&req);
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.name, "trace");
+        // One row per (layer, pass) job of the paper's six networks.
+        assert!(a.rows.len() > 50, "{} rows", a.rows.len());
+        assert!(a.col("strategy").is_some() && a.col("stolen_from").is_some());
+        assert!(a.notes.iter().any(|n| n.starts_with("timeline: ")), "{:?}", a.notes);
+        // Replay through the warmed cache renders identical bytes, and
+        // the devices cross-check leaves no trace in them.
+        assert_eq!(svc.run(&req), arts);
+        let with_devices = SimRequest::Trace { extended: false, devices: Some(2) };
+        assert_eq!(svc.run(&with_devices)[0].render_json(), a.render_json());
+        // The Chrome export is deterministic too and well-formed at the
+        // envelope level (tests/trace.rs parses it fully).
+        let json = svc.trace_chrome_json(false);
+        assert_eq!(svc.trace_chrome_json(false), json);
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"X\"") && json.contains("\"cat\":\"job\""));
+    }
+
+    #[test]
+    fn profile_artifact_reports_phase_rates() {
+        let svc = Service::new(AccelConfig::default());
+        let arts = svc.run(&SimRequest::Profile);
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.name, "profile");
+        assert_eq!(a.rows.len(), 6, "one row per profiler phase");
+        let calls = a.col("calls").unwrap();
+        let phase = a.col("phase").unwrap();
+        for (i, row) in a.rows.iter().enumerate() {
+            // Every phase fired at least once during the measurement
+            // workload (cold builds, pricing, DSE evaluations).
+            assert!(
+                a.float_at(i, "calls").unwrap() >= 1.0,
+                "phase {:?} never fired ({:?})",
+                row[phase],
+                row[calls]
+            );
+        }
+        // Machine-parseable throughput notes for python/profile_bench.py.
+        assert!(a.notes.iter().any(|n| n.starts_with("plan_builds_per_sec: ")), "{:?}", a.notes);
+        assert!(a.notes.iter().any(|n| n.starts_with("dse_points_per_sec: ")), "{:?}", a.notes);
+        assert!(a.notes.iter().any(|n| n.contains("plan builds by strategy")), "{:?}", a.notes);
+        // NOTE: no byte-identity assertion anywhere — wall-clock
+        // telemetry differs run to run by construction.
     }
 
     #[test]

@@ -335,6 +335,26 @@ pub enum SimRequest {
         /// for every value, asserted in `tests/autotune.rs`).
         devices: Option<usize>,
     },
+    /// Deterministic virtual-time execution timeline (DESIGN.md §16):
+    /// replay every workload network through the fleet scheduler and
+    /// record one span per `(layer, pass)` job — strategy chosen, cost
+    /// components, steal/idle events — merged in stable order. Rendered
+    /// as an artifact here; `repro trace --out` additionally exports
+    /// Chrome trace-event JSON for Perfetto.
+    Trace {
+        /// Include the dilated/grouped extension networks.
+        extended: bool,
+        /// Cross-check the timeline totals on a fleet of this many
+        /// devices (pure verification — the rendered artifact is
+        /// bit-identical for every value, asserted in `tests/trace.rs`;
+        /// the replayed timeline always uses the canonical width 4).
+        devices: Option<usize>,
+    },
+    /// Wall-clock host profile (DESIGN.md §16): cold plan builds across
+    /// every strategy, autotuner pricing and a DSE search, timed with
+    /// the host clock and summarized per phase. Telemetry — two runs
+    /// never render byte-identically, and responses are never cached.
+    Profile,
 }
 
 impl SimRequest {
@@ -367,6 +387,9 @@ impl SimRequest {
             SimRequest::Fleet(f) if f.devices == 0 => Err("fleet devices must be >= 1".into()),
             SimRequest::Autotune { devices: Some(0), .. } => {
                 Err("autotune devices must be >= 1".into())
+            }
+            SimRequest::Trace { devices: Some(0), .. } => {
+                Err("trace devices must be >= 1".into())
             }
             SimRequest::Dse(d) => {
                 if d.budget == 0 || d.budget > MAX_DSE_BUDGET {
@@ -414,8 +437,22 @@ impl SimRequest {
             SimRequest::Autotune { extended, devices: _ } => {
                 SimRequest::Autotune { extended: *extended, devices: None }
             }
+            // A trace request's `devices` is likewise a pure totals
+            // cross-check against the canonical width-4 replay.
+            SimRequest::Trace { extended, devices: _ } => {
+                SimRequest::Trace { extended: *extended, devices: None }
+            }
             other => *other,
         }
+    }
+
+    /// Whether a rendered response for this request may be stored in
+    /// (and served from) a response cache. Everything deterministic is;
+    /// [`SimRequest::Profile`] is wall-clock telemetry — two runs never
+    /// render byte-identically, and serving a stale measurement would
+    /// defeat its purpose — so it is recomputed on every request.
+    pub fn cacheable(&self) -> bool {
+        !matches!(self, SimRequest::Profile)
     }
 
     /// Stable request kind name (used for logging and artifact
@@ -438,6 +475,8 @@ impl SimRequest {
             SimRequest::Fleet(_) => "fleet",
             SimRequest::Dse(_) => "dse",
             SimRequest::Autotune { .. } => "autotune",
+            SimRequest::Trace { .. } => "trace",
+            SimRequest::Profile => "profile",
         }
     }
 }
@@ -473,6 +512,16 @@ mod tests {
         let fleet: SimRequest = FleetRequest::new(2).extended(true).into();
         assert_eq!(fleet.name(), "fleet");
         assert_eq!(SimRequest::Autotune { extended: false, devices: None }.name(), "autotune");
+        assert_eq!(SimRequest::Trace { extended: false, devices: None }.name(), "trace");
+        assert_eq!(SimRequest::Profile.name(), "profile");
+    }
+
+    #[test]
+    fn only_profile_is_uncacheable() {
+        assert!(!SimRequest::Profile.cacheable());
+        assert!(SimRequest::Table2.cacheable());
+        assert!(SimRequest::Trace { extended: true, devices: Some(8) }.cacheable());
+        assert!(SimRequest::fleet(4).cacheable());
     }
 
     #[test]
@@ -530,6 +579,12 @@ mod tests {
         assert_eq!(tuned.cache_key(), SimRequest::Autotune { extended: true, devices: None });
         assert!(tuned.validate().is_ok());
         assert!(SimRequest::Autotune { extended: false, devices: Some(0) }.validate().is_err());
+        // Trace follows the autotune pattern: `devices` is verification.
+        let traced = SimRequest::Trace { extended: true, devices: Some(8) };
+        assert_eq!(traced.cache_key(), SimRequest::Trace { extended: true, devices: None });
+        assert!(traced.validate().is_ok());
+        assert!(SimRequest::Trace { extended: false, devices: Some(0) }.validate().is_err());
+        assert_eq!(SimRequest::Profile.cache_key(), SimRequest::Profile);
     }
 
     #[test]

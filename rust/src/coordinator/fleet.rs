@@ -106,6 +106,24 @@ impl FleetReport {
     }
 }
 
+/// One job placement from the fleet's deterministic virtual-time
+/// replay: which device ran the job, when its clock started, and where
+/// the job came from. The trace layer (`crate::trace`, DESIGN.md §16)
+/// turns these into per-device timeline spans; recording them is pure
+/// observation — the replay arithmetic is byte-for-byte the one
+/// [`Fleet::run_network`] performs.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplaySpan {
+    /// Device that executed the job.
+    pub device: usize,
+    /// Device-clock start of the job, in virtual cycles.
+    pub start: f64,
+    /// The finished job with its metrics (duration = `scaled_cycles`).
+    pub result: JobResult,
+    /// Device whose queue the job was stolen from, if any.
+    pub stolen_from: Option<usize>,
+}
+
 /// A fleet of `N` identical simulated accelerators sharing one plan
 /// cache.
 ///
@@ -228,7 +246,24 @@ impl Fleet {
         self.run_jobs(net, jobs)
     }
 
+    /// Like [`Fleet::run_network_select`], but also return the replay
+    /// placements the trace layer turns into timeline spans. The report
+    /// is bit-identical to the untraced run: recording is observation
+    /// only.
+    pub fn run_network_replay(&self, net: &Network) -> (FleetReport, Vec<ReplaySpan>) {
+        let jobs = crate::coordinator::scheduler::resolve_job_modes(
+            self.shard_jobs(net, Mode::BpIm2col),
+            &self.cfg,
+            &self.cache,
+        );
+        self.run_jobs_traced(net, jobs)
+    }
+
     fn run_jobs(&self, net: &Network, jobs: Vec<BackpropJob>) -> FleetReport {
+        self.run_jobs_traced(net, jobs).0
+    }
+
+    fn run_jobs_traced(&self, net: &Network, jobs: Vec<BackpropJob>) -> (FleetReport, Vec<ReplaySpan>) {
         // ---- host-parallel metric computation (plan once per geometry) ----
         let mut results = compute_results(jobs, self.cfg, &self.cache, default_workers());
         results.sort_by_key(|r| r.job.id);
@@ -242,6 +277,7 @@ impl Fleet {
         let mut devices: Vec<DeviceReport> = (0..self.devices)
             .map(|d| DeviceReport { device: d, ..Default::default() })
             .collect();
+        let mut replay = Vec::with_capacity(results.len());
         while !deques.is_empty() {
             // The device whose virtual clock is furthest behind asks for
             // work next (lowest index on ties).
@@ -251,6 +287,7 @@ impl Fleet {
             let Some((r, stolen_from)) = deques.pop_or_steal(d) else {
                 break;
             };
+            replay.push(ReplaySpan { device: d, start: clock[d], result: r, stolen_from });
             clock[d] += r.scaled_cycles;
             devices[d].jobs += 1;
             devices[d].busy_cycles += r.scaled_cycles;
@@ -260,12 +297,13 @@ impl Fleet {
         }
         let makespan_cycles = clock.iter().cloned().fold(0.0, f64::max);
 
-        FleetReport {
+        let report = FleetReport {
             total: NetworkReport::from_results(net.name, results),
             devices,
             makespan_cycles,
             planning: self.cache.stats(),
-        }
+        };
+        (report, replay)
     }
 }
 
@@ -433,6 +471,34 @@ mod tests {
             for (a, b) in rep.total.results.iter().zip(&single.results) {
                 assert_eq!(a.job.mode, b.job.mode, "device width changed a choice");
             }
+        }
+    }
+
+    #[test]
+    fn traced_replay_is_pure_observation() {
+        use crate::accel::LoweringSelect;
+        let cfg = AccelConfig { strategy: LoweringSelect::Auto, ..AccelConfig::default() };
+        let net = workloads::resnet();
+        let fleet = Fleet::new(cfg, 4);
+        let plain = fleet.run_network_select(&net);
+        let (traced, replay) = fleet.run_network_replay(&net);
+        assert_reports_bit_equal(&traced.total, &plain.total);
+        assert_eq!(traced.makespan_cycles, plain.makespan_cycles);
+        // One placement per job; per-device placements are contiguous
+        // from cycle 0 (a device never idles mid-queue), and stolen
+        // placements match the device report's steal count.
+        assert_eq!(replay.len(), plain.total.results.len());
+        for d in 0..4 {
+            let mut cursor = 0.0f64;
+            let mut stolen = 0usize;
+            for s in replay.iter().filter(|s| s.device == d) {
+                assert_eq!(s.start, cursor);
+                cursor += s.result.scaled_cycles;
+                stolen += usize::from(s.stolen_from.is_some());
+            }
+            assert_eq!(cursor, traced.devices[d].busy_cycles);
+            assert_eq!(stolen, traced.devices[d].stolen_jobs);
+            assert!(cursor <= traced.makespan_cycles);
         }
     }
 

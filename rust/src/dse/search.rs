@@ -238,7 +238,13 @@ fn evaluate_wave(
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 let Some(cand) = wave.get(i) else { break };
                 let outcome = match objective::feasibility(&cand.cfg, layers) {
-                    Ok(()) => Ok(objective::evaluate(&cand.cfg, layers, cache)),
+                    // Host-profiling hook (DESIGN.md §16): one
+                    // `dse_evaluate` observation per scored candidate,
+                    // including any cold plan builds it triggers.
+                    Ok(()) => Ok(crate::trace::profile::time(
+                        crate::trace::profile::Phase::DseEvaluate,
+                        || objective::evaluate(&cand.cfg, layers, cache),
+                    )),
                     Err(reason) => Err(reason),
                 };
                 *slots[i].lock().expect("dse slot poisoned") = Some(outcome);

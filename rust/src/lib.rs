@@ -74,6 +74,13 @@
 //!   --lowering`, DSE `density`/`lowering` axes). The [`sparsity`]
 //!   facade re-exports this alongside the paper's *structural*
 //!   zero-space closed forms so the two notions can't be confused.
+//! * [`trace`] — observability under the two-clock rule (DESIGN.md
+//!   §16): deterministic *virtual-time* timelines over the fleet
+//!   replay (Chrome trace-event JSON, `repro trace`, byte-identical
+//!   across device widths and frontends) strictly separated from the
+//!   *wall-clock* host profiler over the plan-build and DSE hot paths
+//!   (`repro profile`, `/metrics` histograms — telemetry, never
+//!   cached, lint-enforced to stay out of model code).
 //! * `accel::strategy` + the plan-cache autotuner (DESIGN.md §15) —
 //!   the lowering dataflow as a first-class axis: the paper's two
 //!   strategies plus two EcoFlow-style scatter dataflows behind one
@@ -104,6 +111,7 @@ pub mod sim;
 pub mod sparse;
 pub mod sparsity;
 pub mod tensor;
+pub mod trace;
 pub mod workloads;
 
 pub use api::{Artifact, Service, SimRequest};

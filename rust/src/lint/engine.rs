@@ -36,6 +36,12 @@ pub struct Scope {
     /// `api/json.rs`) where the slice-indexing check of panic-path
     /// applies.
     pub is_parser: bool,
+    /// Exactly `src/trace/profile.rs` — the one module outside the
+    /// server allowed to read the host clock (the wall-clock side of
+    /// DESIGN.md §16's two-clock rule). A carve-out for the file, not
+    /// the directory: `src/trace/timeline.rs` stays virtual-time-only
+    /// and fully linted.
+    pub is_trace_profile: bool,
 }
 
 impl Scope {
@@ -53,6 +59,7 @@ impl Scope {
             is_parser: (is_server && path.ends_with("http.rs"))
                 || (is_server && path.ends_with("conn.rs"))
                 || (is_api && path.ends_with("json.rs")),
+            is_trace_profile: path.ends_with("src/trace/profile.rs"),
         }
     }
 }

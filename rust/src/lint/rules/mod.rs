@@ -5,7 +5,9 @@
 //! and float-accumulation skip `benches/`, where real time is the
 //! point and the floats being folded are timing samples, not modeled
 //! results; wall-clock also skips `src/server/` (timeouts need real
-//! clocks); panic-path runs only on the request-handling trees
+//! clocks) and the single file `src/trace/profile.rs` (the host
+//! profiler — the sanctioned wall-clock side of DESIGN.md §16's
+//! two-clock rule); panic-path runs only on the request-handling trees
 //! (`src/server/`, `src/api/`); env-leak runs on library code but not
 //! the CLI shell or the server (whose thread count is operational, not
 //! modeled).
@@ -28,7 +30,7 @@ pub fn run(ctx: &FileCtx, out: &mut Vec<Finding>, edges: &mut Vec<LockEdge>) {
     if !ctx.scope.is_bench {
         float_accumulation::check(ctx, out);
     }
-    if !ctx.scope.is_bench && !ctx.scope.is_server {
+    if !ctx.scope.is_bench && !ctx.scope.is_server && !ctx.scope.is_trace_profile {
         wall_clock::check(ctx, out);
     }
     lock_order::collect(ctx, out, edges);

@@ -4,9 +4,11 @@
 //! `Instant::now()`, `SystemTime` reads, and `thread::sleep` smuggle
 //! host timing into results and make tests flaky (the PR 4 queue tests
 //! deadlocked on exactly such a sleep). The dispatcher already exempts
-//! `benches/` and `src/server/`, where wall time is the point; test
-//! code is deliberately NOT exempt — sleeping tests are a flake source,
-//! so a test that truly needs time must carry an allow with a reason.
+//! `benches/`, `src/server/`, and the single file `src/trace/profile.rs`
+//! (the host profiler, whose whole job is reading the wall clock —
+//! DESIGN.md §16), where wall time is the point; test code is
+//! deliberately NOT exempt — sleeping tests are a flake source, so a
+//! test that truly needs time must carry an allow with a reason.
 
 use crate::lint::engine::FileCtx;
 use crate::lint::tree::for_each_seq;

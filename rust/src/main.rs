@@ -63,6 +63,23 @@ COMMANDS:
                         over the best single fixed strategy. --devices N
                         cross-checks that an N-device fleet inherits the
                         same choices bit-identically
+  trace                 Deterministic virtual-time execution timeline:
+                        replay every workload network on the canonical
+                        4-device fleet and list one span per (layer,
+                        pass) job — strategy, start, duration, cost
+                        components, steals. Bytes are identical across
+                        runs and frontends; --out FILE additionally
+                        writes Chrome trace-event JSON for Perfetto /
+                        chrome://tracing. --devices N cross-checks the
+                        totals at another fleet width without touching
+                        the output
+  profile               Wall-clock host profile of the plan-build and
+                        DSE hot paths: cold-build every layer geometry
+                        under every strategy, price the autotuner, run
+                        a small DSE search, and report per-phase calls,
+                        time shares and throughput (plan builds/sec,
+                        DSE points/sec). Telemetry — values vary run to
+                        run and are never cached
   serve                 Long-running HTTP/1.1 JSON server over the query
                         facade: POST /v1/query, POST /v1/batch,
                         GET /v1/requests, GET /healthz, GET /metrics,
@@ -113,8 +130,8 @@ OPTIONS:
                               (fleet default 4; totals are bit-identical
                               for any N, the fleet summary artifact shows
                               the scaling in every output format). On
-                              autotune: fleet cross-check only, the
-                              artifact bytes never change
+                              autotune/trace: fleet cross-check only,
+                              the artifact bytes never change
   --lowering-strategy S       Lowering strategy the platform runs:
                               trad|bp|eco-os|eco-is|auto (default bp;
                               auto picks per layer+pass under the
@@ -168,6 +185,10 @@ OPTIONS:
                               busy workers before requests are shed
                               with 429 + Retry-After (serve; default
                               2 x threads)
+  --out <FILE>                Also write the timeline as Chrome
+                              trace-event JSON — load it in Perfetto or
+                              chrome://tracing (trace only; the regular
+                              artifact still renders to stdout)
 
 Unknown options are errors; `--key` options require a value that does
 not itself start with `--`.
@@ -178,7 +199,7 @@ const UNIVERSAL_OPTS: [&str; 5] =
     ["--config", "--bandwidth", "--lowering-strategy", "--csv", "--json"];
 
 /// Options that consume a value (everything else is a bare flag).
-const VALUE_OPTS: [&str; 18] = [
+const VALUE_OPTS: [&str; 19] = [
     "--config",
     "--bandwidth",
     "--lowering-strategy",
@@ -197,6 +218,7 @@ const VALUE_OPTS: [&str; 18] = [
     "--frontend",
     "--max-conns",
     "--shed-queue",
+    "--out",
 ];
 
 /// Options that may appear more than once (`--axis` stacks one override
@@ -229,7 +251,7 @@ const fn cmd(name: &'static str, extra_opts: &'static [&'static str]) -> Command
     CommandSpec { name, extra_opts, universal: true, positionals: false }
 }
 
-const COMMANDS: [CommandSpec; 18] = [
+const COMMANDS: [CommandSpec; 20] = [
     cmd("table2", &[]),
     cmd("table3", &[]),
     cmd("table4", &[]),
@@ -244,6 +266,8 @@ const COMMANDS: [CommandSpec; 18] = [
     cmd("fleet", &["--devices", "--extended"]),
     cmd("dse", &["--budget", "--seed", "--axis", "--extended", "--layer", "--devices"]),
     cmd("autotune", &["--extended", "--devices", "--objective"]),
+    cmd("trace", &["--extended", "--devices", "--out"]),
+    cmd("profile", &[]),
     // `serve` is an action, not a one-shot query: it renders nothing, so
     // `--csv`/`--json` are rejected like `train`'s — but it *does*
     // simulate under a platform config, so `--config`/`--bandwidth`
@@ -467,6 +491,8 @@ fn build_requests(cmd: &str, opts: &Opts) -> Result<Vec<SimRequest>, String> {
         }
         "traincost" => vec![SimRequest::TrainCost { devices: devices(opts)? }],
         "autotune" => vec![SimRequest::Autotune { extended, devices: devices(opts)? }],
+        "trace" => vec![SimRequest::Trace { extended, devices: devices(opts)? }],
+        "profile" => vec![SimRequest::Profile],
         "fleet" => {
             let n = devices(opts)?.unwrap_or(4);
             vec![FleetRequest::new(n).extended(extended).into()]
@@ -695,6 +721,15 @@ fn run() -> Result<ExitCode, String> {
     } else {
         service.run(&requests[0])
     };
+    if cmd == "trace" {
+        if let Some(path) = opts.value("--out") {
+            // The Chrome export shares the deterministic virtual-time
+            // replay with the artifact above — same bytes every run.
+            let json = service.trace_chrome_json(opts.flag("--extended"));
+            std::fs::write(path, json).map_err(|e| format!("cannot write {path:?}: {e}"))?;
+            eprintln!("wrote Chrome trace-event JSON to {path}");
+        }
+    }
     print!("{}", format.render(&artifacts));
     Ok(ExitCode::SUCCESS)
 }
@@ -817,6 +852,27 @@ mod tests {
         let table2 = COMMANDS.iter().find(|c| c.name == "table2").unwrap();
         let bad: Vec<String> = ["--objective".into(), "reads".into()].to_vec();
         assert!(Opts::parse(&bad, table2).is_err());
+    }
+
+    #[test]
+    fn trace_and_profile_options_parse() {
+        let opts = parsed("trace", &["--extended", "--devices", "8", "--out", "/tmp/t.json"]);
+        let reqs = build_requests("trace", &opts).unwrap();
+        assert_eq!(reqs, vec![SimRequest::Trace { extended: true, devices: Some(8) }]);
+        assert_eq!(opts.value("--out"), Some("/tmp/t.json"));
+        let reqs = build_requests("trace", &parsed("trace", &[])).unwrap();
+        assert_eq!(reqs, vec![SimRequest::Trace { extended: false, devices: None }]);
+        let reqs = build_requests("profile", &parsed("profile", &[])).unwrap();
+        assert_eq!(reqs, vec![SimRequest::Profile]);
+        // --out is trace-only; profile takes no extras beyond the
+        // universal set — both stay parse-time errors elsewhere.
+        let autotune = COMMANDS.iter().find(|c| c.name == "autotune").unwrap();
+        let bad = ["--out".to_string(), "x.json".to_string()];
+        assert!(Opts::parse(&bad, autotune).is_err());
+        let profile = COMMANDS.iter().find(|c| c.name == "profile").unwrap();
+        assert!(Opts::parse(&bad, profile).is_err());
+        let dev = ["--devices".to_string(), "2".to_string()];
+        assert!(Opts::parse(&dev, profile).is_err());
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::time::{Duration, Instant};
 
 use crate::server::http::{self, serialize_response, Parse, Request, Response};
+use crate::server::metrics::ServerPhase;
 
 /// Deadlines governing one connection's phases.
 #[derive(Clone, Copy, Debug)]
@@ -104,6 +105,16 @@ pub struct Conn<S> {
     deadline: Instant,
     close_after_write: bool,
     cfg: ConnConfig,
+    /// Deterministic per-connection span id (the event loop's admission
+    /// counter); purely observational, never on the wire.
+    trace_id: u64,
+    /// Request-scoped span starts: first byte → parse, parse →
+    /// response queued, response queued → flushed.
+    read_start: Option<Instant>,
+    dispatch_start: Option<Instant>,
+    write_start: Option<Instant>,
+    /// Completed phase spans awaiting [`Conn::drain_spans`].
+    spans: Vec<(ServerPhase, Duration)>,
 }
 
 impl<S: Read + Write> Conn<S> {
@@ -119,7 +130,31 @@ impl<S: Read + Write> Conn<S> {
             deadline: now + cfg.idle_deadline,
             close_after_write: false,
             cfg,
+            trace_id: 0,
+            read_start: None,
+            dispatch_start: None,
+            write_start: None,
+            spans: Vec::new(),
         }
+    }
+
+    /// Tag the connection with a deterministic span id (the event
+    /// loop's admission counter — stable for a fixed accept order).
+    pub fn with_trace_id(mut self, id: u64) -> Self {
+        self.trace_id = id;
+        self
+    }
+
+    /// The span id set by [`Conn::with_trace_id`] (0 when untagged).
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    /// Take the phase spans completed since the last drain, in
+    /// completion order. Pipelined requests whose bytes were already
+    /// buffered report a zero-length parse span (no wire wait).
+    pub fn drain_spans(&mut self) -> Vec<(ServerPhase, Duration)> {
+        std::mem::take(&mut self.spans)
     }
 
     /// Current lifecycle phase.
@@ -152,6 +187,12 @@ impl<S: Read + Write> Conn<S> {
                 Ok(Parse::Complete { req, consumed }) => {
                     self.read_buf.drain(..consumed);
                     self.state = ConnState::Dispatching;
+                    let took = self
+                        .read_start
+                        .take()
+                        .map_or(Duration::ZERO, |t| now.saturating_duration_since(t));
+                    self.spans.push((ServerPhase::Parse, took));
+                    self.dispatch_start = Some(now);
                     return Step::Request(Box::new(req));
                 }
                 Ok(_) => {}
@@ -181,8 +222,10 @@ impl<S: Read + Write> Conn<S> {
                 }
                 Ok(n) => {
                     if self.read_buf.is_empty() {
-                        // First byte of a new request starts its clock.
+                        // First byte of a new request starts its clock
+                        // (both the deadline and the parse span).
                         self.deadline = now + self.cfg.read_deadline;
+                        self.read_start = Some(now);
                     }
                     self.read_buf.extend_from_slice(&chunk[..n]);
                     progressed = true;
@@ -212,6 +255,12 @@ impl<S: Read + Write> Conn<S> {
     /// a shed) and switch to `Writing`. `keep` controls whether the
     /// connection returns to `Reading` after the flush.
     pub fn start_response(&mut self, resp: &Response, keep: bool, now: Instant) {
+        // Dispatch span: parsed request → response queued. Inline
+        // rejections never opened one, so only the take records.
+        if let Some(t) = self.dispatch_start.take() {
+            self.spans.push((ServerPhase::Dispatch, now.saturating_duration_since(t)));
+        }
+        self.write_start = Some(now);
         self.write_buf = serialize_response(resp, keep);
         self.written = 0;
         self.close_after_write = !keep;
@@ -243,6 +292,9 @@ impl<S: Read + Write> Conn<S> {
         // may buffer; a flush failure is not worth killing the
         // already-answered connection over.
         let _ = self.stream.flush();
+        if let Some(t) = self.write_start.take() {
+            self.spans.push((ServerPhase::Write, now.saturating_duration_since(t)));
+        }
         if self.close_after_write {
             return self.close();
         }
@@ -475,6 +527,38 @@ mod tests {
         // The second request was already buffered: no stream I/O needed.
         let second = expect_request(conn.poll_read(base));
         assert_eq!(second.path, "/healthz");
+    }
+
+    #[test]
+    fn request_scoped_spans_cover_parse_dispatch_write() {
+        let base = now();
+        let wire = request_wire("/v1/query", "{\"kind\":\"table3\"}");
+        let stream = MemStream::new(&wire);
+        let mut conn = Conn::new(stream, base, ConnConfig::default()).with_trace_id(7);
+        assert_eq!(conn.trace_id(), 7);
+        // Parse completes in the same tick the bytes arrive; the span
+        // is zero-length under a virtual "now" but present.
+        let _ = expect_request(conn.poll_read(base));
+        let spans = conn.drain_spans();
+        assert_eq!(spans.len(), 1, "{spans:?}");
+        assert_eq!(spans[0].0, ServerPhase::Parse);
+        // Dispatch runs for 3ms of explicit clock, the flush for 2ms.
+        let t1 = base + Duration::from_millis(3);
+        conn.start_response(&Response::json(200, "{}"), true, t1);
+        let t2 = t1 + Duration::from_millis(2);
+        assert!(matches!(conn.poll_write(t2), Step::Progress(true)));
+        let spans = conn.drain_spans();
+        assert_eq!(spans.len(), 2, "{spans:?}");
+        assert_eq!((spans[0].0, spans[0].1), (ServerPhase::Dispatch, Duration::from_millis(3)));
+        assert_eq!((spans[1].0, spans[1].1), (ServerPhase::Write, Duration::from_millis(2)));
+        assert!(conn.drain_spans().is_empty(), "drain takes them");
+        // Inline rejections have no dispatch span, only a write span.
+        let mut conn =
+            Conn::new(MemStream::new(b"THIS IS NOT HTTP\r\n\r\n"), base, ConnConfig::default());
+        assert!(matches!(conn.poll_read(base), Step::Rejected(400)));
+        let _ = conn.poll_write(base);
+        let phases: Vec<ServerPhase> = conn.drain_spans().iter().map(|s| s.0).collect();
+        assert_eq!(phases, vec![ServerPhase::Write]);
     }
 
     #[test]

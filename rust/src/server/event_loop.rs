@@ -93,7 +93,13 @@ pub(crate) fn run(
                         }
                         let _ = stream.set_nodelay(true);
                         state.metrics.conn_opened();
-                        conns.insert(next_id, Conn::new(stream, now, opts.conn));
+                        // The admission counter doubles as the
+                        // connection's span trace id — deterministic
+                        // for a fixed accept order.
+                        conns.insert(
+                            next_id,
+                            Conn::new(stream, now, opts.conn).with_trace_id(next_id),
+                        );
                         next_id += 1;
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -186,6 +192,14 @@ pub(crate) fn run(
                     }
                     Step::Close => progressed = true,
                 }
+            }
+            // Fold the request-scoped spans the state machine finished
+            // this tick into the phase histograms. Dispatch covers the
+            // loop's own queueing (completion arrival), not just the
+            // handler — exactly the latency a client experiences.
+            for (phase, took) in conn.drain_spans() {
+                let us = took.as_micros().min(u64::MAX as u128) as u64;
+                state.metrics.record_phase(phase, us);
             }
             if shutting_down && conn.state() == ConnState::Reading {
                 // Drain policy: connections with no request in flight

@@ -12,13 +12,62 @@ use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::accel::plan::PlanCacheStats;
+use crate::accel::strategy::LoweringStrategy;
 use crate::server::cache::ArtifactCacheStats;
 use crate::server::router::Route;
+use crate::trace::profile::{Phase, ProfileSnapshot, BUCKETS, NS_BUCKETS};
 
 /// Upper bounds of the latency histogram buckets, in microseconds
 /// (a final implicit `+Inf` bucket follows).
 pub const LATENCY_BUCKETS_US: [u64; 8] =
     [100, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 1_000_000];
+
+/// One phase of serving a request, bracketed by the request-scoped
+/// spans in `server/conn.rs` (`parse` → `dispatch` → `write`; the
+/// render step is inside `dispatch`, which is where the model runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerPhase {
+    /// First request byte read → request fully parsed.
+    Parse,
+    /// Parsed request → response bytes rendered and queued.
+    Dispatch,
+    /// First response byte queued → last byte flushed to the socket.
+    Write,
+}
+
+impl ServerPhase {
+    /// Every phase, in series-rendering order.
+    pub const ALL: [ServerPhase; 3] =
+        [ServerPhase::Parse, ServerPhase::Dispatch, ServerPhase::Write];
+
+    /// Stable `phase` label value.
+    pub fn label(self) -> &'static str {
+        match self {
+            ServerPhase::Parse => "parse",
+            ServerPhase::Dispatch => "dispatch",
+            ServerPhase::Write => "write",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            ServerPhase::Parse => 0,
+            ServerPhase::Dispatch => 1,
+            ServerPhase::Write => 2,
+        }
+    }
+}
+
+/// Histogram counters of one request-serving phase.
+#[derive(Default)]
+struct PhaseMetrics {
+    /// Observations (also the histogram count).
+    count: AtomicU64,
+    /// Cumulative-style histogram counts, one per bucket plus `+Inf`.
+    buckets: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
+    /// Total phase time, microseconds.
+    sum_us: AtomicU64,
+}
 
 /// Counters of one route.
 #[derive(Default)]
@@ -56,6 +105,8 @@ pub struct ServerMetrics {
     write_stalls: AtomicU64,
     /// Connections closed by a read/write deadline, not by the peer.
     deadline_closes: AtomicU64,
+    /// Per-phase request-span histograms (parse / dispatch / write).
+    phases: [PhaseMetrics; 3],
 }
 
 /// Series label of the unrouted-response slot.
@@ -79,7 +130,20 @@ impl ServerMetrics {
             read_stalls: AtomicU64::new(0),
             write_stalls: AtomicU64::new(0),
             deadline_closes: AtomicU64::new(0),
+            phases: [PhaseMetrics::default(), PhaseMetrics::default(), PhaseMetrics::default()],
         }
+    }
+
+    /// Record one request-scoped phase span (parse / dispatch / write).
+    pub fn record_phase(&self, phase: ServerPhase, elapsed_us: u64) {
+        let m = &self.phases[phase.index()];
+        m.count.fetch_add(1, Ordering::Relaxed);
+        let bucket = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&le| elapsed_us <= le)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        m.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        m.sum_us.fetch_add(elapsed_us, Ordering::Relaxed);
     }
 
     /// Count one accepted TCP connection (admitted or shed).
@@ -153,8 +217,14 @@ impl ServerMetrics {
     }
 
     /// Render the Prometheus text exposition, folding in the model-side
-    /// cache counters.
-    pub fn render(&self, plan: &PlanCacheStats, artifacts: &ArtifactCacheStats) -> String {
+    /// cache counters and the host profiler snapshot (wall-clock
+    /// telemetry — the virtual-time trace artifact never feeds this).
+    pub fn render(
+        &self,
+        plan: &PlanCacheStats,
+        artifacts: &ArtifactCacheStats,
+        profile: &ProfileSnapshot,
+    ) -> String {
         let mut out = String::with_capacity(4096);
         out.push_str("# HELP bp_server_requests_total Requests served per route.\n");
         out.push_str("# TYPE bp_server_requests_total counter\n");
@@ -211,6 +281,45 @@ impl ServerMetrics {
                 out,
                 "bp_server_request_duration_us_count{{route=\"{label}\"}} {}",
                 m.requests.load(Ordering::Relaxed)
+            )
+            .unwrap();
+        }
+        // Request-scoped phase spans, one histogram per phase in fixed
+        // label order — every series renders unconditionally, so two
+        // scrapes always agree on series order.
+        out.push_str(
+            "# HELP bp_server_phase_duration_us Request phase span durations \
+             (parse/dispatch/write), microseconds.\n",
+        );
+        out.push_str("# TYPE bp_server_phase_duration_us histogram\n");
+        for phase in ServerPhase::ALL {
+            let m = &self.phases[phase.index()];
+            let label = phase.label();
+            let mut cumulative = 0u64;
+            for (i, le) in LATENCY_BUCKETS_US.iter().enumerate() {
+                cumulative += m.buckets[i].load(Ordering::Relaxed);
+                writeln!(
+                    out,
+                    "bp_server_phase_duration_us_bucket{{phase=\"{label}\",le=\"{le}\"}} {cumulative}",
+                )
+                .unwrap();
+            }
+            cumulative += m.buckets[LATENCY_BUCKETS_US.len()].load(Ordering::Relaxed);
+            writeln!(
+                out,
+                "bp_server_phase_duration_us_bucket{{phase=\"{label}\",le=\"+Inf\"}} {cumulative}",
+            )
+            .unwrap();
+            writeln!(
+                out,
+                "bp_server_phase_duration_us_sum{{phase=\"{label}\"}} {}",
+                m.sum_us.load(Ordering::Relaxed)
+            )
+            .unwrap();
+            writeln!(
+                out,
+                "bp_server_phase_duration_us_count{{phase=\"{label}\"}} {}",
+                m.count.load(Ordering::Relaxed)
             )
             .unwrap();
         }
@@ -291,6 +400,62 @@ impl ServerMetrics {
             writeln!(out, "# TYPE {name} gauge").unwrap();
             writeln!(out, "{name} {value}").unwrap();
         }
+        // Deterministic per-strategy cold-build counters (virtual-time
+        // side: same request sequence → same counts on any fleet width).
+        out.push_str("# HELP bp_plan_builds_total Cold plan builds per lowering strategy.\n");
+        out.push_str("# TYPE bp_plan_builds_total counter\n");
+        for (i, strat) in LoweringStrategy::STRATEGIES.iter().enumerate() {
+            writeln!(out, "bp_plan_builds_total{{strategy=\"{}\"}} {}", strat.name(), plan.builds[i])
+                .unwrap();
+        }
+        // Host-profiler histograms (wall-clock side). Bucket labels are
+        // the profiler's log-scale nanosecond bounds expressed in
+        // seconds; every series renders even when empty.
+        const SECOND_LABELS: [&str; 7] =
+            ["0.000001", "0.00001", "0.0001", "0.001", "0.01", "0.1", "1"];
+        let build = profile.phase(Phase::PlanBuild);
+        out.push_str("# HELP bp_plan_build_seconds Cold plan-build wall time, seconds.\n");
+        out.push_str("# TYPE bp_plan_build_seconds histogram\n");
+        let mut cumulative = 0u64;
+        for (i, le) in SECOND_LABELS.iter().enumerate() {
+            cumulative += build.buckets[i];
+            writeln!(out, "bp_plan_build_seconds_bucket{{le=\"{le}\"}} {cumulative}").unwrap();
+        }
+        cumulative += build.buckets[BUCKETS - 1];
+        writeln!(out, "bp_plan_build_seconds_bucket{{le=\"+Inf\"}} {cumulative}").unwrap();
+        writeln!(out, "bp_plan_build_seconds_sum {:.9}", build.total_ns as f64 / 1e9).unwrap();
+        writeln!(out, "bp_plan_build_seconds_count {}", build.calls).unwrap();
+        // DSE evaluation throughput as a rate histogram, derived from
+        // the duration buckets by inversion: an evaluation that took d
+        // ns ran at 1e9/d points/sec, so rate <= R means d >= 1e9/R and
+        // rate_bucket(le=R) = count - cum_duration(le = 1e9/R). The
+        // bounds are exact powers of ten, the inverses of NS_BUCKETS;
+        // an evaluation landing exactly on a bound counts in the next
+        // faster bucket, which is immaterial for telemetry.
+        let dse = profile.phase(Phase::DseEvaluate);
+        let mut cum_dur = [0u64; NS_BUCKETS.len()];
+        let mut acc = 0u64;
+        for i in 0..NS_BUCKETS.len() {
+            acc += dse.buckets[i];
+            cum_dur[i] = acc;
+        }
+        out.push_str(
+            "# HELP bp_dse_points_per_second DSE candidate evaluation throughput, points/sec.\n",
+        );
+        out.push_str("# TYPE bp_dse_points_per_second histogram\n");
+        const RATE_BOUNDS: [&str; 7] = ["1", "10", "100", "1000", "10000", "100000", "1000000"];
+        for (j, le) in RATE_BOUNDS.iter().enumerate() {
+            let count = dse.calls.saturating_sub(cum_dur[NS_BUCKETS.len() - 1 - j]);
+            writeln!(out, "bp_dse_points_per_second_bucket{{le=\"{le}\"}} {count}").unwrap();
+        }
+        writeln!(out, "bp_dse_points_per_second_bucket{{le=\"+Inf\"}} {}", dse.calls).unwrap();
+        // sum/count are chosen so avg = sum/count equals the aggregate
+        // throughput calls/(total wall time) — the rate the bench gate
+        // tracks — rather than an untracked per-observation sum.
+        let rate_sum =
+            if dse.total_ns == 0 { 0.0 } else { dse.calls as f64 * dse.per_sec() };
+        writeln!(out, "bp_dse_points_per_second_sum {rate_sum:.3}").unwrap();
+        writeln!(out, "bp_dse_points_per_second_count {}", dse.calls).unwrap();
         out
     }
 }
@@ -308,7 +473,7 @@ mod tests {
         m.record(Some(Route::Healthz), 200, 10);
         m.record(None, 404, 5);
         assert_eq!(m.requests_total(), 5);
-        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default());
+        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default(), &ProfileSnapshot::default());
         assert!(text.contains("bp_server_requests_total{route=\"query\"} 3"), "{text}");
         assert!(text.contains("bp_server_requests_total{route=\"healthz\"} 1"));
         // Unrouted traffic (404s, framing errors) is visible too.
@@ -343,7 +508,7 @@ mod tests {
         m.record_write_stall();
         m.record_deadline_close();
         assert_eq!(m.shed_total(), 1);
-        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default());
+        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default(), &ProfileSnapshot::default());
         assert!(text.contains("bp_server_open_connections 1"), "{text}");
         assert!(text.contains("bp_server_connections_total 3"), "{text}");
         assert!(text.contains("bp_server_shed_total 1"), "{text}");
@@ -353,16 +518,17 @@ mod tests {
         // The gauge never goes negative even if closes race ahead.
         m.conn_closed();
         m.conn_closed();
-        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default());
+        let text = m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default(), &ProfileSnapshot::default());
         assert!(text.contains("bp_server_open_connections 0"), "{text}");
     }
 
     #[test]
     fn renders_cache_counters() {
         let m = ServerMetrics::new();
-        let plan = PlanCacheStats { hits: 7, misses: 3, entries: 3 };
+        let plan =
+            PlanCacheStats { hits: 7, misses: 3, entries: 3, builds: [4, 9, 1, 0] };
         let art = ArtifactCacheStats { hits: 2, misses: 1, entries: 1, evictions: 5 };
-        let text = m.render(&plan, &art);
+        let text = m.render(&plan, &art, &ProfileSnapshot::default());
         assert!(text.contains("bp_plan_cache_hits_total 7"));
         assert!(text.contains("bp_plan_cache_misses_total 3"));
         assert!(text.contains("bp_plan_cache_entries 3"));
@@ -370,5 +536,85 @@ mod tests {
         assert!(text.contains("bp_artifact_cache_misses_total 1"));
         assert!(text.contains("bp_artifact_cache_evictions_total 5"));
         assert!(text.contains("bp_artifact_cache_entries 1"));
+        // Per-strategy cold-build counters, fixed label order.
+        assert!(text.contains("bp_plan_builds_total{strategy=\"trad\"} 4"), "{text}");
+        assert!(text.contains("bp_plan_builds_total{strategy=\"bp\"} 9"));
+        assert!(text.contains("bp_plan_builds_total{strategy=\"eco-os\"} 1"));
+        assert!(text.contains("bp_plan_builds_total{strategy=\"eco-is\"} 0"));
+    }
+
+    #[test]
+    fn renders_phase_span_histograms() {
+        let m = ServerMetrics::new();
+        m.record_phase(ServerPhase::Parse, 80);
+        m.record_phase(ServerPhase::Dispatch, 700);
+        m.record_phase(ServerPhase::Dispatch, 2_000_000);
+        m.record_phase(ServerPhase::Write, 40);
+        let text = m.render(
+            &PlanCacheStats::default(),
+            &ArtifactCacheStats::default(),
+            &ProfileSnapshot::default(),
+        );
+        assert!(
+            text.contains("bp_server_phase_duration_us_bucket{phase=\"parse\",le=\"100\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("bp_server_phase_duration_us_bucket{phase=\"dispatch\",le=\"1000\"} 1")
+        );
+        assert!(
+            text.contains("bp_server_phase_duration_us_bucket{phase=\"dispatch\",le=\"+Inf\"} 2")
+        );
+        assert!(text.contains("bp_server_phase_duration_us_count{phase=\"dispatch\"} 2"));
+        assert!(text.contains("bp_server_phase_duration_us_sum{phase=\"write\"} 40"));
+        // Empty phases still render every series — scrape-stable order.
+        assert!(text.contains("bp_server_phase_duration_us_count{phase=\"write\"} 1"));
+    }
+
+    #[test]
+    fn renders_profiler_histograms() {
+        use crate::trace::profile::PhaseStats;
+        let m = ServerMetrics::new();
+        let mut profile = ProfileSnapshot::default();
+        // Three builds: 5us, 50us, 2s (overflow).
+        let mut build = PhaseStats { calls: 3, total_ns: 2_000_055_000, buckets: [0; BUCKETS] };
+        build.buckets[1] = 1; // le=10us
+        build.buckets[2] = 1; // le=100us
+        build.buckets[BUCKETS - 1] = 1; // +Inf
+        profile.phases[3] = build; // Phase::PlanBuild slot
+        // Four DSE evaluations: two in the le=10us duration bucket
+        // (rate class >1e5 pts/s), one in le=1ms (rate class >1e3),
+        // one at ~2s (sub-1 pts/s, overflow bucket).
+        let mut dse = PhaseStats { calls: 4, total_ns: 2_001_020_000, buckets: [0; BUCKETS] };
+        dse.buckets[1] = 2;
+        dse.buckets[3] = 1;
+        dse.buckets[BUCKETS - 1] = 1;
+        profile.phases[5] = dse; // Phase::DseEvaluate slot
+        let text =
+            m.render(&PlanCacheStats::default(), &ArtifactCacheStats::default(), &profile);
+        assert!(text.contains("bp_plan_build_seconds_bucket{le=\"0.00001\"} 1"), "{text}");
+        assert!(text.contains("bp_plan_build_seconds_bucket{le=\"0.0001\"} 2"));
+        assert!(text.contains("bp_plan_build_seconds_bucket{le=\"1\"} 2"));
+        assert!(text.contains("bp_plan_build_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("bp_plan_build_seconds_count 3"));
+        assert!(text.contains("bp_plan_build_seconds_sum 2.000055000"));
+        // Rate inversion: the 2s evaluation runs below 1 pt/s (le="1");
+        // the le=1ms duration bucket inverts to faster-than-1e3, so it
+        // first appears at le="10000"; the le=10us pair inverts to
+        // faster-than-1e5 and first appears at le="1000000".
+        assert!(text.contains("bp_dse_points_per_second_bucket{le=\"1\"} 1"), "{text}");
+        assert!(text.contains("bp_dse_points_per_second_bucket{le=\"1000\"} 1"));
+        assert!(text.contains("bp_dse_points_per_second_bucket{le=\"10000\"} 2"));
+        assert!(text.contains("bp_dse_points_per_second_bucket{le=\"100000\"} 2"));
+        assert!(text.contains("bp_dse_points_per_second_bucket{le=\"1000000\"} 4"));
+        assert!(text.contains("bp_dse_points_per_second_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("bp_dse_points_per_second_count 4"));
+        // Buckets are cumulative (monotone) across the whole family.
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("bp_dse_points_per_second_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
     }
 }

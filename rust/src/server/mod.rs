@@ -329,9 +329,11 @@ fn handle_request(req: &Request, state: &Arc<ServerState>) -> (Option<Route>, Re
         ),
         Route::Metrics => Response::text(
             200,
-            state
-                .metrics
-                .render(&state.service.plan_cache().stats(), &state.artifacts.stats()),
+            state.metrics.render(
+                &state.service.plan_cache().stats(),
+                &state.artifacts.stats(),
+                &crate::trace::profile::snapshot(),
+            ),
         ),
         Route::Requests => Response::json(200, json::request_catalog_json()),
         Route::Query => handle_query(&req.body, state),
@@ -378,6 +380,12 @@ fn serve_cached(
     req: SimRequest,
     state: &Arc<ServerState>,
 ) -> Result<Arc<String>, crate::api::RequestError> {
+    // Wall-clock telemetry (`profile`) is never cached: its bytes are
+    // fresh measurements by definition (DESIGN.md §16's two-clock rule).
+    if !req.cacheable() {
+        let artifacts = state.service.try_run(&req)?;
+        return Ok(Arc::new(render_all_json(&artifacts)));
+    }
     let key = req.cache_key();
     if let Some(rendered) = state.artifacts.get(&key) {
         return Ok(rendered);
@@ -422,6 +430,13 @@ fn handle_batch(body: &[u8], state: &Arc<ServerState>) -> Response {
     let mut pending: Vec<(usize, usize)> = Vec::new(); // (slot, miss index)
     for (i, item) in decoded.iter().enumerate() {
         if let Ok(req) = item {
+            // Uncacheable telemetry (`profile`) neither reads nor joins
+            // the cache — every copy in the batch measures afresh.
+            if !req.cacheable() {
+                miss_reqs.push(*req);
+                pending.push((i, miss_reqs.len() - 1));
+                continue;
+            }
             let key = req.cache_key();
             if let Some(rendered) = state.artifacts.get(&key) {
                 slots[i] = Ok(rendered);
@@ -443,6 +458,7 @@ fn handle_batch(body: &[u8], state: &Arc<ServerState>) -> Response {
         .iter()
         .zip(results)
         .map(|(req, result)| match result {
+            Ok(artifacts) if !req.cacheable() => Ok(Arc::new(render_all_json(&artifacts))),
             Ok(artifacts) => {
                 Ok(state.artifacts.insert(req.cache_key(), render_all_json(&artifacts)))
             }
@@ -570,6 +586,30 @@ mod tests {
         assert_eq!(body_str(&b), body_str(&a));
         let cache = st.artifacts.stats();
         assert_eq!((cache.hits, cache.misses, cache.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn trace_caches_but_profile_never_does() {
+        let st = state();
+        // Trace is deterministic virtual time: repeats are cache hits
+        // and a different `devices` value is the *same* cache entry.
+        let a = handle_query(b"{\"kind\":\"trace\"}", &st);
+        assert_eq!(a.status, 200);
+        let b = handle_query(b"{\"kind\":\"trace\",\"devices\":2}", &st);
+        assert_eq!(body_str(&b), body_str(&a));
+        let cache = st.artifacts.stats();
+        assert_eq!((cache.hits, cache.misses, cache.entries), (1, 1, 1));
+        // Profile is wall-clock telemetry: 200, but never cached.
+        let p = handle_query(b"{\"kind\":\"profile\"}", &st);
+        assert_eq!(p.status, 200);
+        assert!(body_str(&p).contains("plan_builds_per_sec"), "{}", body_str(&p));
+        let cache = st.artifacts.stats();
+        assert_eq!(cache.entries, 1, "profile joined the cache: {cache:?}");
+        // Same through the batch path: no new cache entries, and the
+        // batch still answers per item.
+        let resp = handle_batch(b"{\"requests\":[{\"kind\":\"profile\"}]}", &st);
+        assert_eq!(resp.status, 200);
+        assert_eq!(st.artifacts.stats().entries, 1);
     }
 
     #[test]

@@ -1,0 +1,33 @@
+//! Observability layer: deterministic virtual-time timelines and
+//! wall-clock host profiling, two clocks kept strictly apart
+//! (DESIGN.md §16).
+//!
+//! The repo models *virtual* time (simulated accelerator cycles) and
+//! runs on *host* time (the wall clock of the machine executing the
+//! simulator). Mixing the two destroys reproducibility, so this module
+//! splits observability along that exact line:
+//!
+//! * [`timeline`] — **virtual time only.** Hierarchical spans over the
+//!   deterministic fleet replay (one span per (layer, pass) job on its
+//!   device track, phase and address-generation child spans, steal/idle
+//!   instant events), merged in stable (device, start, job-id) order
+//!   and exported as Chrome trace-event JSON that Perfetto loads
+//!   directly. Timelines are *artifacts*: pure functions of (workloads,
+//!   config), bit-identical run to run, across device widths, and
+//!   across the CLI and HTTP frontends — so they are cacheable and
+//!   `cmp`-able in CI.
+//! * [`profile`] — **wall-clock only.** A global, lock-free registry of
+//!   scoped timers around the host hot paths (plan-cache build phases,
+//!   DSE candidate evaluation). Profiles are *telemetry*: they differ
+//!   run to run by construction, are never cached, and never feed any
+//!   byte-stable artifact. `profile` is the single module outside
+//!   `server/` permitted to read the host clock — the
+//!   `wall-clock-in-model` lint rule carves out exactly this file and
+//!   nothing else.
+//!
+//! The split is structural, not conventional: `timeline` has no access
+//! to `std::time`, and any other model/artifact file that touches the
+//! host clock fails `repro lint` (and CI) immediately.
+
+pub mod profile;
+pub mod timeline;

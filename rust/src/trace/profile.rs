@@ -1,0 +1,329 @@
+//! Wall-clock host profiler (the telemetry side of the two-clock rule,
+//! DESIGN.md §16).
+//!
+//! Scoped timers + counters over the host hot paths: the plan-cache
+//! build phases (shape / sparsity / tiling / strategy pricing) and DSE
+//! candidate evaluation. Readings land in a global lock-free registry
+//! of atomics — one slot per [`Phase`] with a call count, a running
+//! nanosecond total, and a fixed log-scale duration histogram — that
+//! [`snapshot`] copies out for the `repro profile` artifact and the
+//! server's `/metrics` histograms.
+//!
+//! **This is the only module outside `src/server/` that may read the
+//! host clock.** The `wall-clock-in-model` lint rule carves out exactly
+//! this file (`src/trace/profile.rs`); instrumented call sites in
+//! model code (`accel/plan.rs`, `dse/search.rs`) go through the opaque
+//! [`scope`]/[`time`] helpers and never name `std::time` themselves.
+//! Profiler readings are *telemetry*: they differ run to run by
+//! construction and must never feed a byte-stable artifact — the lint
+//! scoping makes that structural, not conventional.
+//!
+//! Overhead: one `Instant::now()` pair and three relaxed atomic adds
+//! per scope (~100 ns), negligible next to a plan build (tens of
+//! microseconds) and amortized to nothing under cache hits, which are
+//! deliberately not instrumented.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// An instrumented host hot-path phase.
+///
+/// The three `Plan*` build sub-phases nest inside [`Phase::PlanBuild`]
+/// (they partition one `LayerPlan::build`); [`Phase::PlanPricing`]
+/// wraps the autotuner's whole candidate loop (so cached builds inside
+/// it cost ~0); [`Phase::DseEvaluate`] wraps one DSE candidate
+/// evaluation and therefore contains any cold builds it triggers.
+/// Totals across phases overlap by design — compare within a level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// GEMM shape + packing derivation inside a plan build.
+    PlanShape,
+    /// Structural/data sparsity statistics inside a plan build.
+    PlanSparsity,
+    /// Tiling + prologue/stall modeling inside a plan build.
+    PlanTiling,
+    /// One whole cold `LayerPlan::build` (cache misses only).
+    PlanBuild,
+    /// One autotuner pricing pass over every lowering strategy.
+    PlanPricing,
+    /// One DSE candidate evaluation (objective over all layers).
+    DseEvaluate,
+}
+
+impl Phase {
+    /// Every phase, in rendering order.
+    pub const ALL: [Phase; 6] = [
+        Phase::PlanShape,
+        Phase::PlanSparsity,
+        Phase::PlanTiling,
+        Phase::PlanBuild,
+        Phase::PlanPricing,
+        Phase::DseEvaluate,
+    ];
+
+    /// Stable snake-case name (artifact rows, `/metrics` labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::PlanShape => "plan_shape",
+            Phase::PlanSparsity => "plan_sparsity",
+            Phase::PlanTiling => "plan_tiling",
+            Phase::PlanBuild => "plan_build",
+            Phase::PlanPricing => "plan_pricing",
+            Phase::DseEvaluate => "dse_evaluate",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::PlanShape => 0,
+            Phase::PlanSparsity => 1,
+            Phase::PlanTiling => 2,
+            Phase::PlanBuild => 3,
+            Phase::PlanPricing => 4,
+            Phase::DseEvaluate => 5,
+        }
+    }
+}
+
+/// Upper bounds (inclusive, nanoseconds) of the log-scale duration
+/// histogram; the ninth bucket is the +Inf overflow. 1 us .. 1 s.
+pub const NS_BUCKETS: [u64; 7] =
+    [1_000, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000];
+
+/// Bucket count including the overflow bucket.
+pub const BUCKETS: usize = NS_BUCKETS.len() + 1;
+
+struct PhaseSlot {
+    calls: AtomicU64,
+    total_ns: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl PhaseSlot {
+    const fn new() -> Self {
+        Self {
+            calls: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            buckets: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+
+    fn record(&self, ns: u64) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        let mut b = NS_BUCKETS.len();
+        for i in 0..NS_BUCKETS.len() {
+            if ns <= NS_BUCKETS[i] {
+                b = i;
+                break;
+            }
+        }
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+static SLOTS: [PhaseSlot; 6] = [
+    PhaseSlot::new(),
+    PhaseSlot::new(),
+    PhaseSlot::new(),
+    PhaseSlot::new(),
+    PhaseSlot::new(),
+    PhaseSlot::new(),
+];
+
+/// An open scoped timer: started by [`scope`], recorded into the
+/// registry when dropped (or handed to the next phase via
+/// [`PhaseScope::next`], which records this phase and opens the next
+/// back-to-back, sharing one clock read at the boundary).
+pub struct PhaseScope {
+    phase: Phase,
+    start: Instant,
+}
+
+impl PhaseScope {
+    /// Close this phase and immediately open `phase` at the same
+    /// instant — for consecutive sub-phases of one computation.
+    pub fn next(self, phase: Phase) -> PhaseScope {
+        let now = Instant::now();
+        record_ns(self.phase, now.duration_since(self.start).as_nanos() as u64);
+        std::mem::forget(self);
+        PhaseScope { phase, start: now }
+    }
+}
+
+impl Drop for PhaseScope {
+    fn drop(&mut self) {
+        record_ns(self.phase, self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Open a scoped timer for `phase`; it records when dropped.
+pub fn scope(phase: Phase) -> PhaseScope {
+    PhaseScope { phase, start: Instant::now() }
+}
+
+/// Time `f` under `phase` and return its result.
+pub fn time<T>(phase: Phase, f: impl FnOnce() -> T) -> T {
+    let _scope = scope(phase);
+    f()
+}
+
+/// Record one observation directly (used by the scoped timers; public
+/// so tests can seed deterministic readings).
+pub fn record_ns(phase: Phase, ns: u64) {
+    SLOTS[phase.idx()].record(ns);
+}
+
+/// Zero every counter (start of a `repro profile` measurement window).
+pub fn reset() {
+    for slot in &SLOTS {
+        slot.calls.store(0, Ordering::Relaxed);
+        slot.total_ns.store(0, Ordering::Relaxed);
+        for bucket in &slot.buckets {
+            bucket.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Point-in-time copy of one phase's counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseStats {
+    /// Observations recorded.
+    pub calls: u64,
+    /// Summed duration, nanoseconds.
+    pub total_ns: u64,
+    /// Per-bucket observation counts ([`NS_BUCKETS`] + overflow).
+    pub buckets: [u64; BUCKETS],
+}
+
+impl PhaseStats {
+    /// Mean duration in microseconds (0 when nothing was recorded).
+    pub fn avg_us(&self) -> f64 {
+        if self.calls == 0 {
+            return 0.0;
+        }
+        self.total_ns as f64 / self.calls as f64 / 1_000.0
+    }
+
+    /// Observations per wall-clock second of summed phase time
+    /// (0 when no time was recorded).
+    pub fn per_sec(&self) -> f64 {
+        if self.total_ns == 0 {
+            return 0.0;
+        }
+        self.calls as f64 * 1e9 / self.total_ns as f64
+    }
+}
+
+/// Point-in-time copy of the whole registry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProfileSnapshot {
+    /// Per-phase counters, indexed in [`Phase::ALL`] order.
+    pub phases: [PhaseStats; 6],
+}
+
+impl ProfileSnapshot {
+    /// Counters of `phase`.
+    pub fn phase(&self, phase: Phase) -> &PhaseStats {
+        &self.phases[phase.idx()]
+    }
+
+    /// Summed nanoseconds across every phase (phases overlap, so this
+    /// is a weighting denominator for shares, not elapsed host time).
+    pub fn total_ns(&self) -> u64 {
+        self.phases.iter().map(|p| p.total_ns).sum()
+    }
+}
+
+/// Copy the registry out (relaxed reads; counters move concurrently,
+/// which is fine for telemetry).
+pub fn snapshot() -> ProfileSnapshot {
+    let mut snap = ProfileSnapshot::default();
+    for i in 0..SLOTS.len() {
+        snap.phases[i].calls = SLOTS[i].calls.load(Ordering::Relaxed);
+        snap.phases[i].total_ns = SLOTS[i].total_ns.load(Ordering::Relaxed);
+        for b in 0..BUCKETS {
+            snap.phases[i].buckets[b] = SLOTS[i].buckets[b].load(Ordering::Relaxed);
+        }
+    }
+    snap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is global and the test binary is multi-threaded, so
+    // every assertion here is on *deltas* of this test's own recordings
+    // (other tests' instrumented plan builds may land concurrently) and
+    // `reset` is never called outside a dedicated integration test.
+    #[test]
+    fn scoped_timers_accumulate_deltas() {
+        let before = snapshot();
+        let v = time(Phase::PlanPricing, || 21 * 2);
+        assert_eq!(v, 42);
+        record_ns(Phase::PlanPricing, 5_000); // bucket le=10us
+        record_ns(Phase::PlanPricing, 2_000_000_000); // overflow bucket
+        let after = snapshot();
+        let d = |f: fn(&PhaseStats) -> u64| {
+            f(after.phase(Phase::PlanPricing)) - f(before.phase(Phase::PlanPricing))
+        };
+        assert!(d(|p| p.calls) >= 3);
+        assert!(d(|p| p.total_ns) >= 2_000_005_000);
+        assert!(
+            after.phase(Phase::PlanPricing).buckets[1] > before.phase(Phase::PlanPricing).buckets[1]
+        );
+        assert!(
+            after.phase(Phase::PlanPricing).buckets[BUCKETS - 1]
+                > before.phase(Phase::PlanPricing).buckets[BUCKETS - 1]
+        );
+    }
+
+    #[test]
+    fn next_closes_one_phase_and_opens_the_other() {
+        let before = snapshot();
+        let s = scope(Phase::PlanShape);
+        let s = s.next(Phase::PlanTiling);
+        drop(s);
+        let after = snapshot();
+        assert!(after.phase(Phase::PlanShape).calls > before.phase(Phase::PlanShape).calls);
+        assert!(after.phase(Phase::PlanTiling).calls > before.phase(Phase::PlanTiling).calls);
+    }
+
+    #[test]
+    fn derived_rates() {
+        let s = PhaseStats { calls: 4, total_ns: 2_000_000, buckets: [0; BUCKETS] };
+        assert!((s.avg_us() - 500.0).abs() < 1e-9);
+        assert!((s.per_sec() - 2000.0).abs() < 1e-9);
+        assert_eq!(PhaseStats::default().avg_us(), 0.0);
+        assert_eq!(PhaseStats::default().per_sec(), 0.0);
+    }
+
+    #[test]
+    fn phase_names_are_stable() {
+        let names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "plan_shape",
+                "plan_sparsity",
+                "plan_tiling",
+                "plan_build",
+                "plan_pricing",
+                "dse_evaluate"
+            ]
+        );
+        for i in 0..Phase::ALL.len() {
+            assert_eq!(Phase::ALL[i].idx(), i);
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! Deterministic virtual-time timelines (the artifact side of the
+//! two-clock rule, DESIGN.md §16).
+//!
+//! A [`Timeline`] is a set of hierarchical spans over *simulated*
+//! cycles: every `ts`/`dur` in it comes from the fleet's deterministic
+//! virtual-time replay, never from the host clock (this module cannot
+//! even name `std::time` without failing `repro lint`). Spans are
+//! collected into per-device [`TrackBuffer`]s during replay and merged
+//! in stable `(process, device, start, depth, job-id)` order, so the
+//! exported bytes are identical run to run, across device widths, and
+//! across the CLI and HTTP frontends.
+//!
+//! The export format is Chrome trace-event JSON — an object with a
+//! `traceEvents` array of `ph:"M"` metadata records (process/thread
+//! names), `ph:"X"` complete spans (`ts` + `dur`), and `ph:"i"` instant
+//! events — which `chrome://tracing` and [Perfetto](https://ui.perfetto.dev)
+//! load directly. One virtual cycle is mapped to one microsecond of
+//! trace time, the unit Chrome's `ts` field natively speaks.
+
+use std::fmt::Write as _;
+
+/// A typed argument attached to a span or marker, rendered into the
+/// Chrome event's `args` object.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    /// Integer payload (counts, byte totals, device indices).
+    Int(i64),
+    /// Float payload (virtual cycles).
+    Float(f64),
+    /// String payload (strategy names, layer labels).
+    Text(String),
+}
+
+impl ArgValue {
+    fn render(&self, out: &mut String) {
+        match self {
+            ArgValue::Int(v) => {
+                let _ = write!(out, "{v}");
+            }
+            ArgValue::Float(v) => {
+                let _ = write!(out, "{v}");
+            }
+            ArgValue::Text(s) => json_string(s, out),
+        }
+    }
+}
+
+/// One complete span (`ph:"X"`) on a `(process, device)` track.
+///
+/// `depth` encodes the hierarchy level (0 = job, 1 = phase child,
+/// 2 = address-generation stage grandchild) and only serves as a merge
+/// tiebreak: children share their parent's start cycle and must sort
+/// after it.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Process (network) index within the timeline.
+    pub pid: usize,
+    /// Device track within the process.
+    pub tid: usize,
+    /// Start, in virtual cycles.
+    pub ts: f64,
+    /// Duration, in virtual cycles.
+    pub dur: f64,
+    /// Display name (layer + pass, phase name, or pipeline stage).
+    pub name: String,
+    /// Category: `"job"`, `"phase"`, `"addrgen-dyn"`, `"addrgen-stat"`.
+    pub cat: &'static str,
+    /// Id of the job the span belongs to (merge tiebreak + grouping).
+    pub job_id: usize,
+    /// Hierarchy level (0 = job span, deeper = finer).
+    pub depth: usize,
+    /// Typed annotations (strategy, metric components, ...).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// One instant event (`ph:"i"`, thread-scoped): steal and idle markers.
+#[derive(Clone, Debug)]
+pub struct Marker {
+    /// Process (network) index within the timeline.
+    pub pid: usize,
+    /// Device track within the process.
+    pub tid: usize,
+    /// Instant, in virtual cycles.
+    pub ts: f64,
+    /// Display name (`"steal"`, `"idle"`).
+    pub name: &'static str,
+    /// Id of the related job (`usize::MAX` for device-level markers).
+    pub job_id: usize,
+    /// Typed annotations (source device, idle cycles, ...).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Per-device collection buffer. The replay appends each device's spans
+/// and markers here in execution order; [`Timeline::merge`] then folds
+/// every buffer into the stable global order. Keeping collection
+/// per-track means a future parallel replay can record without
+/// synchronization and still merge deterministically.
+#[derive(Clone, Debug)]
+pub struct TrackBuffer {
+    /// Process (network) index the buffer belongs to.
+    pub pid: usize,
+    /// Device track the buffer records.
+    pub tid: usize,
+    /// Spans recorded on this track, in execution order.
+    pub spans: Vec<Span>,
+    /// Instant events recorded on this track, in execution order.
+    pub markers: Vec<Marker>,
+}
+
+impl TrackBuffer {
+    /// Empty buffer for device `tid` of process `pid`.
+    pub fn new(pid: usize, tid: usize) -> Self {
+        Self { pid, tid, spans: Vec::new(), markers: Vec::new() }
+    }
+
+    /// Record a span on this track (pid/tid are filled in).
+    pub fn span(
+        &mut self,
+        ts: f64,
+        dur: f64,
+        name: String,
+        cat: &'static str,
+        job_id: usize,
+        depth: usize,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        let (pid, tid) = (self.pid, self.tid);
+        self.spans.push(Span { pid, tid, ts, dur, name, cat, job_id, depth, args });
+    }
+
+    /// Record an instant event on this track.
+    pub fn marker(
+        &mut self,
+        ts: f64,
+        name: &'static str,
+        job_id: usize,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        let (pid, tid) = (self.pid, self.tid);
+        self.markers.push(Marker { pid, tid, ts, name, job_id, args });
+    }
+}
+
+/// A merged multi-process timeline: one process per network, one thread
+/// track per simulated device.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    processes: Vec<String>,
+    spans: Vec<Span>,
+    markers: Vec<Marker>,
+}
+
+impl Timeline {
+    /// Empty timeline.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a process (network) and return its pid.
+    pub fn add_process(&mut self, name: &str) -> usize {
+        self.processes.push(name.to_string());
+        self.processes.len() - 1
+    }
+
+    /// Fold per-device buffers into the timeline, then restore the
+    /// stable global order: spans by `(pid, tid, ts, depth, job_id)`,
+    /// markers by `(pid, tid, ts, name)`. Stable-sorting after every
+    /// merge makes the final byte stream independent of buffer arrival
+    /// order.
+    pub fn merge(&mut self, buffers: Vec<TrackBuffer>) {
+        for buf in buffers {
+            self.spans.extend(buf.spans);
+            self.markers.extend(buf.markers);
+        }
+        self.spans.sort_by(|a, b| {
+            (a.pid, a.tid)
+                .cmp(&(b.pid, b.tid))
+                .then(a.ts.total_cmp(&b.ts))
+                .then((a.depth, a.job_id).cmp(&(b.depth, b.job_id)))
+        });
+        self.markers.sort_by(|a, b| {
+            (a.pid, a.tid)
+                .cmp(&(b.pid, b.tid))
+                .then(a.ts.total_cmp(&b.ts))
+                .then(a.name.cmp(b.name))
+        });
+    }
+
+    /// Registered process names, pid-ordered.
+    pub fn processes(&self) -> &[String] {
+        &self.processes
+    }
+
+    /// Merged spans in stable global order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Merged instant events in stable global order.
+    pub fn markers(&self) -> &[Marker] {
+        &self.markers
+    }
+
+    /// Distinct `(pid, tid)` tracks, in order.
+    fn tracks(&self) -> Vec<(usize, usize)> {
+        let mut tracks: Vec<(usize, usize)> = Vec::new();
+        for s in &self.spans {
+            if !tracks.contains(&(s.pid, s.tid)) {
+                tracks.push((s.pid, s.tid));
+            }
+        }
+        for m in &self.markers {
+            if !tracks.contains(&(m.pid, m.tid)) {
+                tracks.push((m.pid, m.tid));
+            }
+        }
+        tracks.sort_unstable();
+        tracks
+    }
+
+    /// Export as Chrome trace-event JSON: metadata records first
+    /// (process and thread names), then complete spans, then instant
+    /// events — each group in the timeline's stable order, so the bytes
+    /// are a pure function of the merged content.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::with_capacity(256 + 160 * (self.spans.len() + self.markers.len()));
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        for (pid, name) in self.processes.iter().enumerate() {
+            sep(&mut out, &mut first);
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\"args\":{{\"name\":"
+            );
+            json_string(name, &mut out);
+            out.push_str("}}");
+        }
+        for (pid, tid) in self.tracks() {
+            sep(&mut out, &mut first);
+            let _ = write!(
+                out,
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"device {tid}\"}}}}"
+            );
+        }
+        for s in &self.spans {
+            sep(&mut out, &mut first);
+            let _ = write!(
+                out,
+                "{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\"cat\":\"{}\",\
+                 \"name\":",
+                s.pid, s.tid, s.ts, s.dur, s.cat
+            );
+            json_string(&s.name, &mut out);
+            render_args(&s.args, &mut out);
+            out.push('}');
+        }
+        for m in &self.markers {
+            sep(&mut out, &mut first);
+            let _ = write!(
+                out,
+                "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{},\"tid\":{},\"ts\":{},\"name\":",
+                m.pid, m.tid, m.ts
+            );
+            json_string(m.name, &mut out);
+            render_args(&m.args, &mut out);
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn sep(out: &mut String, first: &mut bool) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+}
+
+fn render_args(args: &[(&'static str, ArgValue)], out: &mut String) {
+    if args.is_empty() {
+        return;
+    }
+    out.push_str(",\"args\":{");
+    for i in 0..args.len() {
+        if i > 0 {
+            out.push(',');
+        }
+        json_string(args[i].0, out);
+        out.push(':');
+        args[i].1.render(out);
+    }
+    out.push('}');
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control bytes) —
+/// span names carry layer labels and pipeline-stage formulas, which may
+/// contain quotes one day but never need full Unicode escaping.
+fn json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Timeline {
+        let mut tl = Timeline::new();
+        let pid = tl.add_process("net-a");
+        let mut d1 = TrackBuffer::new(pid, 1);
+        let strategy = vec![("strategy", ArgValue::Text("bp".into()))];
+        d1.span(0.0, 5.0, "l1 loss".into(), "job", 1, 0, strategy);
+        let mut d0 = TrackBuffer::new(pid, 0);
+        d0.span(0.0, 10.0, "l0 loss".into(), "job", 0, 0, vec![]);
+        d0.span(0.0, 4.0, "compute".into(), "phase", 0, 1, vec![("cycles", ArgValue::Float(4.0))]);
+        d1.marker(5.0, "idle", usize::MAX, vec![("idle_cycles", ArgValue::Float(5.0))]);
+        tl.merge(vec![d1, d0]);
+        tl
+    }
+
+    #[test]
+    fn merge_restores_stable_global_order() {
+        let tl = demo();
+        let order: Vec<(usize, usize, usize)> =
+            tl.spans().iter().map(|s| (s.tid, s.depth, s.job_id)).collect();
+        // Device 0 before device 1; parent (depth 0) before its child.
+        assert_eq!(order, vec![(0, 0, 0), (0, 1, 0), (1, 0, 1)]);
+    }
+
+    #[test]
+    fn merge_is_buffer_order_invariant() {
+        let a = demo().to_chrome_json();
+        // Same content, buffers delivered in the opposite order.
+        let mut tl = Timeline::new();
+        let pid = tl.add_process("net-a");
+        let mut d0 = TrackBuffer::new(pid, 0);
+        d0.span(0.0, 10.0, "l0 loss".into(), "job", 0, 0, vec![]);
+        d0.span(0.0, 4.0, "compute".into(), "phase", 0, 1, vec![("cycles", ArgValue::Float(4.0))]);
+        let mut d1 = TrackBuffer::new(pid, 1);
+        let strategy = vec![("strategy", ArgValue::Text("bp".into()))];
+        d1.span(0.0, 5.0, "l1 loss".into(), "job", 1, 0, strategy);
+        d1.marker(5.0, "idle", usize::MAX, vec![("idle_cycles", ArgValue::Float(5.0))]);
+        tl.merge(vec![d0, d1]);
+        assert_eq!(tl.to_chrome_json(), a);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let json = demo().to_chrome_json();
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        // Metadata first: process name, then one thread record per track.
+        let meta = json.find("\"process_name\"").expect("process metadata");
+        let t0 = json.find("\"device 0\"").expect("track 0 metadata");
+        let first_span = json.find("\"ph\":\"X\"").expect("span");
+        assert!(meta < t0 && t0 < first_span);
+        // Instants render thread-scoped with their args.
+        assert!(json.contains("\"ph\":\"i\",\"s\":\"t\""));
+        assert!(json.contains("\"idle_cycles\":5"));
+        // Virtual cycles render as bare numbers (1 cycle == 1 us).
+        assert!(json.contains("\"ts\":0,\"dur\":10,\"cat\":\"job\""));
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let mut tl = Timeline::new();
+        let pid = tl.add_process("net\"x\\y");
+        let mut buf = TrackBuffer::new(pid, 0);
+        buf.span(0.0, 1.0, "h0 = rem/Wi \"q\"".into(), "job", 0, 0, vec![]);
+        tl.merge(vec![buf]);
+        let json = tl.to_chrome_json();
+        assert!(json.contains("net\\\"x\\\\y"));
+        assert!(json.contains("h0 = rem/Wi \\\"q\\\""));
+    }
+}

@@ -292,6 +292,8 @@ fn every_request_kind_round_trips_through_json() {
         SimRequest::layer(ConvParams::square(56, 128, 128, 3, 2, 1).with_groups(32)),
         SimRequest::TrainCost { devices: Some(2) },
         SimRequest::fleet(4),
+        SimRequest::Trace { extended: false, devices: None },
+        SimRequest::Profile,
     ];
     for req in &requests {
         let arts = svc.run(req);

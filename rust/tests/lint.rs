@@ -134,6 +134,24 @@ fn elapsed() {
     assert!(lint_source("benches/demo.rs", src).is_empty(), "benches time things");
 }
 
+#[test]
+fn wall_clock_carves_out_exactly_the_host_profiler_file() {
+    let src = r##"
+fn sample() {
+    let _t = std::time::Instant::now();
+}
+"##;
+    // The two-clock rule (DESIGN.md §16): src/trace/profile.rs is the
+    // sanctioned wall-clock module...
+    assert!(lint_source("src/trace/profile.rs", src).is_empty(), "profiler reads the clock");
+    // ...and the exemption is the file, not the directory — its
+    // virtual-time sibling stays fully linted, as does any near-miss
+    // path that merely resembles the profiler.
+    assert_eq!(rules(&lint_source("src/trace/timeline.rs", src)), vec!["wall-clock-in-model"]);
+    assert_eq!(rules(&lint_source("src/trace/profiler.rs", src)), vec!["wall-clock-in-model"]);
+    assert_eq!(rules(&lint_source("src/profile.rs", src)), vec!["wall-clock-in-model"]);
+}
+
 // ---- lock-order --------------------------------------------------------
 
 #[test]

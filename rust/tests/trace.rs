@@ -1,0 +1,482 @@
+//! Integration tests for the deterministic tracing layer (DESIGN.md
+//! §16 — the virtual-time half of the two-clock rule).
+//!
+//! What is pinned here:
+//!
+//! 1. The `trace` artifact renders to **byte-identical** JSON whatever
+//!    `--devices` cross-check width is requested (1/2/4/8) — the knob
+//!    verifies, it never touches the bytes.
+//! 2. Warm and cold plan caches produce the same bytes, and so do
+//!    repeated runs on one service (virtual time has no run-to-run
+//!    jitter by construction).
+//! 3. `POST /v1/query {"kind":"trace"}` returns exactly the CLI's
+//!    `render_all_json` bytes, and a repeated HTTP query returns the
+//!    same body again (served from the artifact cache).
+//! 4. The Chrome trace-event export is well-formed: metadata records
+//!    first, every span a finite non-negative `ts`/`dur`, and spans on
+//!    one `(pid, tid, cat)` track monotone and non-overlapping — all of
+//!    it checked through a minimal in-test JSON parser, not string
+//!    grepping.
+//! 5. Per-`(layer, pass)` job span durations from the fleet replay sum
+//!    *exactly* (f64 bit equality) to the `NetworkReport` loss/grad
+//!    cycle totals — tracing is observation, not a second cost model.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use bp_im2col::accel::AccelConfig;
+use bp_im2col::api::{render_all_json, Service, SimRequest, TRACE_DEVICES};
+use bp_im2col::coordinator::Fleet;
+use bp_im2col::im2col::pipeline::Pass;
+use bp_im2col::server::{ServeOptions, Server};
+use bp_im2col::workloads;
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn trace_req(devices: Option<usize>) -> SimRequest {
+    SimRequest::Trace { extended: false, devices }
+}
+
+fn trace_bytes(svc: &Service, devices: Option<usize>) -> String {
+    render_all_json(&svc.run(&trace_req(devices)))
+}
+
+fn start_server() -> (SocketAddr, JoinHandle<()>) {
+    let opts = ServeOptions::for_threads(2);
+    let server = Server::bind_with(AccelConfig::default(), "127.0.0.1:0", opts).expect("bind");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.serve().expect("serve"));
+    (addr, handle)
+}
+
+/// One-shot raw HTTP request; returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).expect("read");
+    let text = String::from_utf8(buf).expect("utf-8 response");
+    let (head, payload) = text.split_once("\r\n\r\n").expect("header terminator");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    (status, payload.to_string())
+}
+
+fn shutdown(addr: SocketAddr, handle: JoinHandle<()>) {
+    let (status, _) = http(addr, "POST", "/v1/shutdown", "{}");
+    assert_eq!(status, 200);
+    handle.join().expect("server thread joined cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// 1+2: byte identity across device widths, cache states, and runs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_bytes_identical_across_device_widths() {
+    let svc = Service::new(AccelConfig::default());
+    let canonical = trace_bytes(&svc, None);
+    assert!(canonical.contains("\"name\":\"trace\""), "artifact kind present");
+    for devices in [1usize, 2, 4, 8] {
+        let widened = trace_bytes(&svc, Some(devices));
+        assert_eq!(
+            widened, canonical,
+            "--devices {devices} changed the trace bytes; it must only cross-check"
+        );
+    }
+}
+
+#[test]
+fn trace_bytes_identical_warm_and_cold_cache() {
+    // Cold: a fresh service whose plan cache has never seen a geometry.
+    let cold = trace_bytes(&Service::new(AccelConfig::default()), None);
+    // Warm: a service whose plan cache has been populated by an earlier
+    // request, then by the first trace run itself.
+    let svc = Service::new(AccelConfig::default());
+    let _ = svc.run(&SimRequest::Table3);
+    let first = trace_bytes(&svc, None);
+    let second = trace_bytes(&svc, None);
+    assert_eq!(first, cold, "warm plan cache changed the trace bytes");
+    assert_eq!(second, cold, "repeated run changed the trace bytes");
+}
+
+#[test]
+fn chrome_export_is_deterministic_run_to_run() {
+    let svc = Service::new(AccelConfig::default());
+    let a = svc.trace_chrome_json(false);
+    let b = svc.trace_chrome_json(false);
+    assert_eq!(a, b, "Chrome export must be a pure function of the workload set");
+}
+
+// ---------------------------------------------------------------------------
+// 3: CLI-vs-HTTP equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn http_trace_matches_cli_bytes_and_repeats_identically() {
+    let svc = Service::new(AccelConfig::default());
+    let cli = trace_bytes(&svc, None);
+    let (addr, handle) = start_server();
+    let (status, first) = http(addr, "POST", "/v1/query", &trace_req(None).to_json());
+    assert_eq!(status, 200, "{first}");
+    assert_eq!(first, cli, "HTTP trace body diverged from the CLI rendering");
+    // The devices cross-check variant hits the same cache entry: the
+    // key normalizes the knob away, so the bytes cannot differ.
+    let (status, widened) = http(addr, "POST", "/v1/query", &trace_req(Some(8)).to_json());
+    assert_eq!(status, 200, "{widened}");
+    assert_eq!(widened, first, "devices variant served different bytes over HTTP");
+    let (status, again) = http(addr, "POST", "/v1/query", &trace_req(None).to_json());
+    assert_eq!(status, 200, "{again}");
+    assert_eq!(again, first, "repeated HTTP trace query was not byte-identical");
+    shutdown(addr, handle);
+}
+
+// ---------------------------------------------------------------------------
+// 4: minimal JSON parser + Chrome trace-event well-formedness
+// ---------------------------------------------------------------------------
+
+/// Just enough JSON to validate a Chrome trace: objects keep insertion
+/// order in a `Vec` (no map iteration, no external crates).
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn num(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    fn str_field(&self, key: &str) -> Option<&str> {
+        match self.get(key)? {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn parse(text: &'a str) -> Json {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value();
+        p.skip_ws();
+        assert_eq!(p.pos, p.bytes.len(), "trailing bytes after JSON document");
+        v
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> u8 {
+        self.skip_ws();
+        assert!(self.pos < self.bytes.len(), "unexpected end of JSON");
+        self.bytes[self.pos]
+    }
+
+    fn eat(&mut self, b: u8) {
+        assert_eq!(self.peek(), b, "expected {:?} at byte {}", b as char, self.pos);
+        self.pos += 1;
+    }
+
+    fn value(&mut self) -> Json {
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Json::Str(self.string()),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Json {
+        assert!(
+            self.bytes[self.pos..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.pos
+        );
+        self.pos += word.len();
+        v
+    }
+
+    fn object(&mut self) -> Json {
+        self.eat(b'{');
+        let mut fields = Vec::new();
+        if self.peek() == b'}' {
+            self.pos += 1;
+            return Json::Obj(fields);
+        }
+        loop {
+            let key = self.string_at_ws();
+            self.eat(b':');
+            fields.push((key, self.value()));
+            match self.peek() {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Json::Obj(fields);
+                }
+                c => panic!("expected ',' or '}}' in object, got {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Json {
+        self.eat(b'[');
+        let mut items = Vec::new();
+        if self.peek() == b']' {
+            self.pos += 1;
+            return Json::Arr(items);
+        }
+        loop {
+            items.push(self.value());
+            match self.peek() {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Json::Arr(items);
+                }
+                c => panic!("expected ',' or ']' in array, got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string_at_ws(&mut self) -> String {
+        assert_eq!(self.peek(), b'"', "expected string key");
+        self.string()
+    }
+
+    fn string(&mut self) -> String {
+        self.eat(b'"');
+        let mut s = String::new();
+        loop {
+            assert!(self.pos < self.bytes.len(), "unterminated string");
+            match self.bytes[self.pos] {
+                b'"' => {
+                    self.pos += 1;
+                    return s;
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let esc = self.bytes[self.pos];
+                    self.pos += 1;
+                    match esc {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos..self.pos + 4]).unwrap();
+                            let code = u32::from_str_radix(hex, 16).expect("hex escape");
+                            s.push(char::from_u32(code).expect("scalar escape"));
+                            self.pos += 4;
+                        }
+                        other => panic!("unknown escape {:?}", other as char),
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8 passes through untouched.
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.bytes.len() && (self.bytes[self.pos] & 0xc0) == 0x80 {
+                        self.pos += 1;
+                    }
+                    s.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Json {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        Json::Num(text.parse().unwrap_or_else(|_| panic!("bad number {text:?}")))
+    }
+}
+
+#[test]
+fn chrome_export_is_wellformed_trace_event_json() {
+    let svc = Service::new(AccelConfig::default());
+    let doc = Parser::parse(&svc.trace_chrome_json(false));
+    assert_eq!(doc.str_field("displayTimeUnit"), Some("ms"));
+    let Some(Json::Arr(events)) = doc.get("traceEvents") else {
+        panic!("traceEvents array missing");
+    };
+    assert!(!events.is_empty(), "empty trace");
+
+    // Metadata records come first, then spans and instants; no other
+    // phase kinds appear.
+    let mut seen_non_meta = false;
+    let mut spans: Vec<(usize, usize, String, f64, f64)> = Vec::new();
+    let mut meta = 0usize;
+    let mut instants = 0usize;
+    for ev in events {
+        let ph = ev.str_field("ph").expect("every event has a phase");
+        match ph {
+            "M" => {
+                assert!(!seen_non_meta, "metadata record after a span/instant");
+                assert!(ev.get("pid").is_some(), "metadata without pid");
+                meta += 1;
+            }
+            "X" => {
+                seen_non_meta = true;
+                let pid = ev.num("pid").expect("span pid") as usize;
+                let tid = ev.num("tid").expect("span tid") as usize;
+                let ts = ev.num("ts").expect("span ts");
+                let dur = ev.num("dur").expect("span dur");
+                let cat = ev.str_field("cat").expect("span cat").to_string();
+                assert!(ev.str_field("name").is_some(), "span without a name");
+                // Virtual time only: finite, non-negative, and device
+                // tracks bounded by the canonical fleet width.
+                assert!(ts.is_finite() && ts >= 0.0, "bad ts {ts}");
+                assert!(dur.is_finite() && dur >= 0.0, "bad dur {dur}");
+                assert!(tid < TRACE_DEVICES, "track {tid} outside the canonical fleet");
+                spans.push((pid, tid, cat, ts, dur));
+            }
+            "i" => {
+                seen_non_meta = true;
+                assert_eq!(ev.str_field("s"), Some("t"), "instants must be thread-scoped");
+                let ts = ev.num("ts").expect("instant ts");
+                assert!(ts.is_finite() && ts >= 0.0, "bad instant ts {ts}");
+                instants += 1;
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(meta > 0, "no metadata records");
+    assert!(instants > 0, "replay produced no steal/idle instants");
+    assert!(
+        spans.iter().any(|(_, _, cat, _, _)| cat == "job"),
+        "no job spans in the export"
+    );
+
+    // Per-(pid, tid, cat) track: monotone starts and no overlap. The
+    // tolerance covers one ulp of float drift from the cursor walks that
+    // lay out phase children (`a + (b - a)` need not equal `b` exactly).
+    let mut tracks: Vec<((usize, usize, String), Vec<(f64, f64)>)> = Vec::new();
+    for (pid, tid, cat, ts, dur) in spans {
+        let key = (pid, tid, cat);
+        match tracks.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, list)) => list.push((ts, dur)),
+            None => tracks.push((key, vec![(ts, dur)])),
+        }
+    }
+    for ((pid, tid, cat), list) in &tracks {
+        let mut prev_end = 0.0f64;
+        let mut prev_ts = -1.0f64;
+        for &(ts, dur) in list {
+            assert!(
+                ts >= prev_ts,
+                "track ({pid},{tid},{cat}): span starts went backwards ({ts} < {prev_ts})"
+            );
+            assert!(
+                ts + 1e-3 >= prev_end,
+                "track ({pid},{tid},{cat}): span at {ts} overlaps previous end {prev_end}"
+            );
+            prev_ts = ts;
+            prev_end = prev_end.max(ts + dur);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5: replay spans reconcile exactly with the aggregate report
+// ---------------------------------------------------------------------------
+
+#[test]
+fn job_span_durations_sum_exactly_to_network_report_runtimes() {
+    let fleet = Fleet::new(AccelConfig::default(), TRACE_DEVICES);
+    for net in workloads::all_networks() {
+        let (report, replay) = fleet.run_network_replay(&net);
+        assert_eq!(
+            replay.len(),
+            report.total.results.len(),
+            "{}: every job must appear exactly once in the replay",
+            net.name
+        );
+        // `NetworkReport::from_results` folds scaled cycles in job-id
+        // order; replaying that order reproduces the totals to the bit.
+        let mut results: Vec<_> = replay.iter().map(|s| s.result).collect();
+        results.sort_by_key(|r| r.job.id);
+        let mut loss = 0.0f64;
+        let mut grad = 0.0f64;
+        for r in &results {
+            match r.job.pass {
+                Pass::Loss => loss += r.scaled_cycles,
+                Pass::Grad => grad += r.scaled_cycles,
+            }
+        }
+        assert_eq!(
+            loss.to_bits(),
+            report.total.loss_cycles.to_bits(),
+            "{}: loss span cycles diverged from the report",
+            net.name
+        );
+        assert_eq!(
+            grad.to_bits(),
+            report.total.grad_cycles.to_bits(),
+            "{}: grad span cycles diverged from the report",
+            net.name
+        );
+        // The device busy totals are the same spans grouped by device.
+        for d in &report.devices {
+            let mut busy = 0.0f64;
+            for s in replay.iter().filter(|s| s.device == d.device) {
+                busy += s.result.scaled_cycles;
+            }
+            assert_eq!(
+                busy.to_bits(),
+                d.busy_cycles.to_bits(),
+                "{}: device {} busy cycles diverged from its spans",
+                net.name,
+                d.device
+            );
+        }
+    }
+}
